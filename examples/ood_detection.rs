@@ -1,0 +1,157 @@
+//! Table 1 / Figs. 3-4 reproduction: SVI vs PFP uncertainty quality on
+//! synthetic Dirty-MNIST, from the Rust stack.
+//!
+//! ```bash
+//! cargo run --release --example ood_detection [-- --arch lenet] [--n 500]
+//! ```
+//!
+//! For both methods it reports accuracy, MI-based OOD AUROC (Table 1),
+//! per-split uncertainty means with ASCII histograms (Fig. 3), and an
+//! SME-vs-MI scatter summary (Fig. 4).
+
+use pfp::data::DirtyMnist;
+use pfp::model::{Arch, PfpExecutor, PosteriorWeights, Schedules, SviExecutor};
+use pfp::runtime::Manifest;
+use pfp::tensor::Tensor;
+use pfp::uncertainty::{self, Uncertainty};
+
+fn main() -> pfp::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let arch_name = arg(&args, "--arch").unwrap_or_else(|| "mlp".into());
+    let n: usize = arg(&args, "--n").and_then(|v| v.parse().ok()).unwrap_or(400);
+    let samples = 30;
+
+    let dir = pfp::artifacts_dir();
+    let arch = Arch::by_name(&arch_name)?;
+    let manifest = Manifest::load(&dir.join("manifest.json"))?;
+    let calib = manifest.calibration_factor(&arch_name);
+    let weights = PosteriorWeights::load(&dir, &arch, calib)?;
+    let data = DirtyMnist::load(&dir)?;
+
+    let splits: Vec<(&str, Tensor, Vec<i32>)> = vec![
+        ("mnist", data.test_mnist.x.first_rows(n), data.test_mnist.y[..n].to_vec()),
+        (
+            "ambiguous",
+            data.test_ambiguous.x.first_rows(n),
+            data.test_ambiguous.y[..n].to_vec(),
+        ),
+        ("ood", data.test_ood.x.first_rows(n), data.test_ood.y[..n].to_vec()),
+    ];
+
+    // ---- PFP: single probabilistic pass + Eq. 11 logit sampling --------
+    let mut pfp_exec = PfpExecutor::new(arch.clone(), weights.clone(), Schedules::tuned(1));
+    let mut pfp_u: Vec<(&str, Uncertainty)> = Vec::new();
+    let t = std::time::Instant::now();
+    for (name, x, _) in &splits {
+        let (mu, var) = pfp_exec.forward(x);
+        pfp_u.push((name, uncertainty::pfp_uncertainty(&mu, &var, samples, 11)));
+    }
+    let pfp_time = t.elapsed();
+
+    // ---- SVI baseline: 30 sampled passes --------------------------------
+    let mut svi_exec = SviExecutor::new(arch.clone(), weights.clone(), Schedules::tuned(1), 3);
+    let mut svi_u: Vec<(&str, Uncertainty)> = Vec::new();
+    let t = std::time::Instant::now();
+    for (name, x, _) in &splits {
+        let logits = svi_exec.forward_n(x, samples);
+        let k = logits[0].cols();
+        let rows = logits[0].rows();
+        let mut probs = vec![0.0f32; samples * rows * k];
+        for (si, l) in logits.iter().enumerate() {
+            let p = uncertainty::softmax(l.data(), k);
+            probs[si * rows * k..(si + 1) * rows * k].copy_from_slice(&p);
+        }
+        svi_u.push((name, uncertainty::uncertainty_from_probs(&probs, samples, rows, k)));
+    }
+    let svi_time = t.elapsed();
+
+    // ---- Table 1 ---------------------------------------------------------
+    println!("== Table 1 — {arch_name} (n={n}/split, {samples} samples, calib={calib}) ==");
+    println!(
+        "{:<8} {:>12} {:>12} {:>14}",
+        "method", "accuracy", "AUROC(MI)", "eval wall"
+    );
+    for (method, us, wall) in [("SVI", &svi_u, svi_time), ("PFP", &pfp_u, pfp_time)] {
+        let acc = uncertainty::accuracy(&us[0].1.mean_p, arch.num_classes(), &splits[0].2);
+        let in_mi: Vec<f64> = us[0].1.mi.iter().chain(&us[1].1.mi).cloned().collect();
+        let roc = uncertainty::auroc(&us[2].1.mi, &in_mi);
+        println!(
+            "{:<8} {:>11.1}% {:>12.3} {:>12.1}ms",
+            method,
+            acc * 100.0,
+            roc,
+            wall.as_secs_f64() * 1e3
+        );
+    }
+    println!(
+        "(paper Table 1: MLP SVI 96.3%/0.812, PFP 96.3%/0.858; LeNet SVI 98.7%/0.986, PFP 98.9%/0.966)"
+    );
+
+    // ---- Fig. 3: per-split uncertainty histograms ------------------------
+    for (metric, get) in [
+        ("Total predictive uncertainty", 0usize),
+        ("Softmax entropy (aleatoric)", 1),
+        ("Mutual information (epistemic)", 2),
+    ] {
+        println!("\n== Fig. 3 — {metric} ==");
+        for (method, us) in [("SVI", &svi_u), ("PFP", &pfp_u)] {
+            for (split, u) in us.iter() {
+                let vals = match get {
+                    0 => &u.total,
+                    1 => &u.sme,
+                    _ => &u.mi,
+                };
+                println!(
+                    "  {method:<4} {split:<10} mean={:.3}  {}",
+                    mean(vals),
+                    histogram(vals, 2.4, 30)
+                );
+            }
+        }
+    }
+
+    // ---- Fig. 4: disentanglement summary ---------------------------------
+    println!("\n== Fig. 4 — SME vs MI disentanglement (split means) ==");
+    println!("{:<6} {:<10} {:>8} {:>8}", "method", "split", "SME", "MI");
+    for (method, us) in [("SVI", &svi_u), ("PFP", &pfp_u)] {
+        for (split, u) in us.iter() {
+            println!(
+                "{:<6} {:<10} {:>8.3} {:>8.3}",
+                method,
+                split,
+                mean(&u.sme),
+                mean(&u.mi)
+            );
+        }
+    }
+    println!(
+        "\nExpected shape: ambiguous -> high SME; ood -> high MI; mnist -> low both.\n\
+         SVI separates slightly better than PFP (paper Fig. 4)."
+    );
+    Ok(())
+}
+
+fn arg(args: &[String], key: &str) -> Option<String> {
+    args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn mean(v: &[f64]) -> f64 {
+    v.iter().sum::<f64>() / v.len().max(1) as f64
+}
+
+/// ASCII histogram of values in [0, hi) with `bins` buckets.
+fn histogram(vals: &[f64], hi: f64, bins: usize) -> String {
+    let mut counts = vec![0usize; bins];
+    for &v in vals {
+        let b = ((v / hi) * bins as f64) as usize;
+        counts[b.min(bins - 1)] += 1;
+    }
+    let max = counts.iter().cloned().max().unwrap_or(1).max(1);
+    counts
+        .iter()
+        .map(|&c| {
+            let level = (c * 8 + max - 1) / max;
+            [' ', '.', ':', '-', '=', '+', '*', '#', '@'][level.min(8)]
+        })
+        .collect()
+}

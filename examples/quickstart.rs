@@ -1,0 +1,78 @@
+//! Quickstart: one uncertainty-aware prediction through every layer of
+//! the stack.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Loads the SVI-trained posterior, runs the *single probabilistic forward
+//! pass* on an in-domain image and an out-of-domain texture — through both
+//! the native Rust operator library and the AOT-compiled XLA artifact —
+//! and prints the decomposed uncertainties (Eqs. 1-3).
+
+use pfp::data::DirtyMnist;
+use pfp::model::{Arch, PfpExecutor, PosteriorWeights, Schedules};
+use pfp::runtime::Engine;
+use pfp::uncertainty;
+
+fn main() -> pfp::Result<()> {
+    let dir = pfp::artifacts_dir();
+    println!("artifacts: {}", dir.display());
+
+    // 1. trained posterior + paper-calibrated variances
+    let arch = Arch::mlp();
+    let engine = Engine::new(&dir)?;
+    let calib = engine.manifest.calibration_factor("mlp");
+    let weights = PosteriorWeights::load(&dir, &arch, calib)?;
+    println!(
+        "loaded {} ({} posterior parameters, calibration factor {})",
+        arch.name,
+        weights.n_params() * 2, // mu + sigma
+        calib
+    );
+
+    // 2. evaluation data: one in-domain digit, one OOD texture
+    let data = DirtyMnist::load(&dir)?;
+    let x_in = data.test_mnist.x.first_rows(1);
+    let x_ood = data.test_ood.x.first_rows(1);
+    let label = data.test_mnist.y[0];
+
+    // 3a. native operator path (the Table 2-5 code)
+    let mut exec = PfpExecutor::new(arch.clone(), weights.clone(), Schedules::tuned(1));
+    for (name, x, want) in [("in-domain", &x_in, Some(label)), ("OOD", &x_ood, None)] {
+        let t = std::time::Instant::now();
+        let (mu, var) = exec.forward(x);
+        let dt = t.elapsed();
+        let u = uncertainty::pfp_uncertainty(&mu, &var, 30, 7);
+        let pred = u.mean_p[..10]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        println!("\n[{name}] native PFP forward in {:.3} ms", dt.as_secs_f64() * 1e3);
+        println!("  predicted class: {pred}{}",
+                 want.map_or(String::new(), |w| format!(" (label {w})")));
+        println!(
+            "  total={:.3}  aleatoric(SME)={:.3}  epistemic(MI)={:.3}",
+            u.total[0], u.sme[0], u.mi[0]
+        );
+    }
+
+    // 3b. same prediction through the AOT XLA artifact (PJRT runtime)
+    let model = engine.load("model_mlp_pfp_b1", &weights)?;
+    let t = std::time::Instant::now();
+    let outs = model.execute(&x_in)?;
+    println!(
+        "\n[in-domain] XLA artifact {} in {:.3} ms (platform: {})",
+        model.entry.name,
+        t.elapsed().as_secs_f64() * 1e3,
+        engine.platform()
+    );
+    let (mu_n, _) = exec.forward(&x_in);
+    let max_diff = outs[0].max_abs_diff(&mu_n);
+    println!("  native vs XLA logit-mean max |diff|: {max_diff:.2e}");
+
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,170 @@
+//! End-to-end serving driver (the EXPERIMENTS.md validation run).
+//!
+//! ```bash
+//! cargo run --release --example serve_uncertainty [-- --backend xla] [--requests 300]
+//! ```
+//!
+//! Boots the full coordinator (TCP server + dynamic batcher + PFP backend
+//! on the trained posterior), fires a mixed in-domain/OOD request stream
+//! from concurrent TCP clients, and reports the paper's headline system
+//! metrics: per-request latency (p50/p95), throughput, accuracy, OOD
+//! flagging quality, and batch occupancy.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Instant;
+
+use pfp::coordinator::{
+    protocol, NativePfpBackend, Server, ServerConfig, Service, XlaPfpBackend,
+};
+use pfp::data::DirtyMnist;
+use pfp::model::{Arch, PfpExecutor, PosteriorWeights, Schedules};
+use pfp::runtime::{Engine, Manifest};
+use pfp::uncertainty;
+
+fn main() -> pfp::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let backend_kind = arg(&args, "--backend").unwrap_or_else(|| "native".into());
+    let arch_name = arg(&args, "--arch").unwrap_or_else(|| "mlp".into());
+    let n_requests: usize =
+        arg(&args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(300);
+    let clients: usize = arg(&args, "--clients").and_then(|v| v.parse().ok()).unwrap_or(4);
+
+    let dir = pfp::artifacts_dir();
+    let arch = Arch::by_name(&arch_name)?;
+    let manifest = Manifest::load(&dir.join("manifest.json"))?;
+    let calib = manifest.calibration_factor(&arch_name);
+    let weights = PosteriorWeights::load(&dir, &arch, calib)?;
+    let data = Arc::new(DirtyMnist::load(&dir)?);
+
+    // ---- calibrate the serving OOD threshold on a held-out slice --------
+    let mut exec = PfpExecutor::new(arch.clone(), weights.clone(), Schedules::tuned(1));
+    let (mu_i, var_i) = exec.forward(&data.test_mnist.x.first_rows(128));
+    let (mu_o, var_o) = exec.forward(&data.test_ood.x.first_rows(128));
+    let mi_in_all = uncertainty::pfp_uncertainty(&mu_i, &var_i, 30, 1).mi;
+    let mi_ood_all = uncertainty::pfp_uncertainty(&mu_o, &var_o, 30, 1).mi;
+    let (mi_in, mi_ood) = (mean(&mi_in_all), mean(&mi_ood_all));
+    // threshold at the in-domain p95: caps the false-positive rate at ~5%
+    // while keeping recall high (MI distributions barely overlap)
+    let threshold = pfp::util::stats::percentile(&mi_in_all, 95.0).max(1e-4);
+    println!(
+        "OOD threshold calibrated: MI_in={mi_in:.4} MI_ood={mi_ood:.4} -> p95_in={threshold:.4}"
+    );
+
+    // ---- boot the server -------------------------------------------------
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        ood_threshold: threshold,
+        ..Default::default()
+    };
+    let mut svc = Service::new(cfg);
+    let backend: Box<dyn pfp::coordinator::Backend> = match backend_kind.as_str() {
+        "xla" => {
+            let engine: &'static Engine = Box::leak(Box::new(Engine::new(&dir)?));
+            Box::new(XlaPfpBackend::new(engine, &arch_name, &weights)?)
+        }
+        _ => Box::new(NativePfpBackend::new(arch.clone(), weights, Schedules::tuned(1))),
+    };
+    let bname = backend.name();
+    svc.register(&arch_name, arch.input_len(), backend);
+    let svc = Arc::new(svc);
+    let server = Server::bind(svc.clone())?;
+    let addr = server.addr;
+    std::thread::spawn(move || server.run());
+    println!("server up at {addr} (backend: {bname})");
+
+    // ---- mixed request stream from concurrent clients --------------------
+    let per_client = n_requests / clients;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let data = data.clone();
+        let arch_name = arch_name.clone();
+        handles.push(std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            stream.set_nodelay(true).unwrap();
+            let mut writer = stream.try_clone().unwrap();
+            let mut reader = BufReader::new(stream);
+            let mut results = Vec::new();
+            for i in 0..per_client {
+                let global = c * per_client + i;
+                // every 3rd request is OOD
+                let is_ood = global % 3 == 2;
+                let (x, label) = if is_ood {
+                    (data.test_ood.x.row(global % 900), -1)
+                } else {
+                    (
+                        data.test_mnist.x.row(global % 900),
+                        data.test_mnist.y[global % 900],
+                    )
+                };
+                let t = Instant::now();
+                writeln!(writer, "{}", protocol::request_json(global as u64, &arch_name, x))
+                    .unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                let lat_us = t.elapsed().as_secs_f64() * 1e6;
+                let resp = protocol::Response::parse(line.trim()).unwrap();
+                results.push((is_ood, label, resp, lat_us));
+            }
+            results
+        }));
+    }
+    let mut all = Vec::new();
+    for h in handles {
+        all.extend(h.join().unwrap());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // ---- report -----------------------------------------------------------
+    let mut lats: Vec<f64> = all.iter().map(|r| r.3).collect();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (mut correct, mut n_in, mut tp, mut fp, mut n_ood) = (0, 0, 0, 0, 0);
+    for (is_ood, label, resp, _) in &all {
+        let p = resp.result.as_ref().expect("inference ok");
+        if *is_ood {
+            n_ood += 1;
+            tp += p.ood as usize;
+        } else {
+            n_in += 1;
+            fp += p.ood as usize;
+            if p.pred == *label {
+                correct += 1;
+            }
+        }
+    }
+    println!("\n== end-to-end serving results ({}) ==", bname);
+    println!("requests: {} over {clients} clients in {wall:.2}s", all.len());
+    println!("throughput: {:.0} req/s", all.len() as f64 / wall);
+    println!(
+        "latency: p50={:.2}ms p95={:.2}ms p99={:.2}ms",
+        pct(&lats, 50.0) / 1e3,
+        pct(&lats, 95.0) / 1e3,
+        pct(&lats, 99.0) / 1e3
+    );
+    println!(
+        "accuracy (in-domain): {:.1}% ({correct}/{n_in})",
+        100.0 * correct as f64 / n_in as f64
+    );
+    println!(
+        "OOD flagging: recall {:.1}% ({tp}/{n_ood}), false-positive rate {:.1}% ({fp}/{n_in})",
+        100.0 * tp as f64 / n_ood as f64,
+        100.0 * fp as f64 / n_in as f64
+    );
+    println!("server metrics: {}", svc.metrics.snapshot().dump());
+    Ok(())
+}
+
+fn arg(args: &[String], key: &str) -> Option<String> {
+    args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn mean(v: &[f64]) -> f64 {
+    v.iter().sum::<f64>() / v.len().max(1) as f64
+}
+
+fn pct(sorted: &[f64], p: f64) -> f64 {
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx]
+}

@@ -1,0 +1,111 @@
+//! Auto-tuning walkthrough (the paper's Section 6.2/6.3 workflow).
+//!
+//! ```bash
+//! cargo run --release --example tune_operators [-- --trials 24]
+//! ```
+//!
+//! Runs the Meta-Scheduler-analog search over the PFP dense and conv
+//! schedules for the MLP and LeNet-5 hot layers, prints the incumbent
+//! trajectory, and persists tuning records that `pfp serve` / the benches
+//! pick up.
+
+use pfp::model::{Arch, PosteriorWeights};
+use pfp::ops::conv::{pfp_conv2d_joint, ConvArgs};
+use pfp::ops::dense::{pfp_dense_joint, DenseArgs};
+use pfp::runtime::Manifest;
+use pfp::tensor::{ProbTensor, Rep, Tensor};
+use pfp::tuner::{self, SearchSpace, TuneOpts, TuningRecords};
+
+fn main() -> pfp::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let trials: usize = args
+        .iter()
+        .position(|a| a == "--trials")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(24);
+
+    let dir = pfp::artifacts_dir();
+    let manifest = Manifest::load(&dir.join("manifest.json"))?;
+    let batch = 10;
+    let space = SearchSpace::dense_default(pfp::util::threadpool::default_threads());
+    let opts = TuneOpts { random_trials: trials, ..Default::default() };
+    let mut records = TuningRecords::load_or_default(&dir.join("tuning/records.json"));
+
+    // ---- MLP Dense 1 (the paper's Table 2 operator) ----------------------
+    {
+        let arch = Arch::mlp();
+        let w = PosteriorWeights::load(&dir, &arch, manifest.calibration_factor("mlp"))?;
+        let lw = &w.layers[0];
+        let x = Tensor::full(vec![batch, 784], 0.5);
+        let x_e2 = x.squared();
+        println!("tuning mlp/dense1 [{}x784x100], {trials} random trials + evolution ...", batch);
+        let res = tuner::tune(&space, opts, |s| {
+            let _ = pfp_dense_joint(
+                &DenseArgs {
+                    x_mu: &x, x_aux: &x_e2,
+                    w_mu: &lw.w_mu, w_aux: &lw.w_e2,
+                    b_mu: Some(lw.b_mu.data()), b_var: Some(lw.b_var.data()),
+                },
+                s,
+            );
+        });
+        report("mlp dense1", &res);
+        records.insert(TuningRecords::key("dense", "mlp", batch), res.best, res.best_ms);
+    }
+
+    // ---- LeNet Conv2d 2 (the dominant LeNet layer, Table 4) --------------
+    {
+        let arch = Arch::lenet();
+        let w = PosteriorWeights::load(&dir, &arch, manifest.calibration_factor("lenet"))?;
+        let lw = &w.layers[1]; // conv2: 16@5x5 over 6x12x12
+        let x_mu = Tensor::full(vec![batch, 6, 12, 12], 0.4);
+        let x = ProbTensor::new(x_mu.clone(), x_mu.squared(), Rep::E2);
+        println!("\ntuning lenet/conv2 [{}x6x12x12 -> 16@5x5] ...", batch);
+        let res = tuner::tune(&space, opts, |s| {
+            let _ = pfp_conv2d_joint(
+                &x,
+                &ConvArgs {
+                    w_mu: &lw.w_mu, w_aux: &lw.w_e2,
+                    b_mu: Some(lw.b_mu.data()), b_var: Some(lw.b_var.data()),
+                },
+                s,
+            );
+        });
+        report("lenet conv2", &res);
+        records.insert(TuningRecords::key("conv", "lenet", batch), res.best, res.best_ms);
+    }
+
+    let path = dir.join("tuning/records.json");
+    records.save(&path)?;
+    println!("\ntuning records saved to {}", path.display());
+    Ok(())
+}
+
+fn report(name: &str, res: &tuner::TuneResult) {
+    println!("== {name} ==");
+    println!(
+        "  baseline {:.3}ms -> best {:.3}ms  ({:.2}x speedup)  schedule: {}",
+        res.baseline_ms,
+        res.best_ms,
+        res.speedup(),
+        res.best.tag()
+    );
+    // incumbent trajectory
+    let mut best_so_far = f64::INFINITY;
+    let mut shown = 0;
+    for (i, t) in res.trials.iter().enumerate() {
+        if t.median_ms < best_so_far {
+            best_so_far = t.median_ms;
+            println!(
+                "  trial {i:>3}: {:>8.3}ms  {}",
+                t.median_ms,
+                t.schedule.tag()
+            );
+            shown += 1;
+            if shown > 12 {
+                break;
+            }
+        }
+    }
+}

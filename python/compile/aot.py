@@ -1,0 +1,185 @@
+"""AOT lowering: JAX models -> HLO *text* artifacts for the Rust runtime.
+
+Emits HLO text, NOT ``.serialize()``: jax >= 0.5 writes HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the version the published
+``xla`` 0.1.6 crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts:
+  model_{arch}_{variant}_b{batch}.hlo.txt
+  manifest.json   — entry list: parameter order/shapes the executable
+                    expects (input tensor first, then weight tensors)
+  goldens.npz     — example input + expected outputs per entry, computed
+                    with the trained weights; the Rust integration tests
+                    execute the artifact via PJRT and compare.
+
+Variants:
+  pfp         single probabilistic forward pass (jnp ops — the serving
+              artifact; mathematically identical to the Pallas path)
+  pfp_pallas  same graph built from the L1 Pallas kernels (interpret=True
+              lowers to plain HLO): proves the L1->L2->L3 path composes
+              end-to-end through PJRT.  Kept to small batches — interpret
+              mode emits control-flow-heavy HLO that executes slowly.
+  det         deterministic forward (posterior means); doubles as the SVI
+              executable: the Rust side samples posterior weights and
+              feeds them as the weight parameters, one call per sample.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+
+BATCHES = (1, 10, 100)
+PALLAS_ENTRIES = (("mlp", 1), ("mlp", 10), ("lenet", 1))
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def batched_input_shape(arch: str, batch: int) -> tuple[int, ...]:
+    return (batch,) + model_mod.INPUT_SHAPES[arch]
+
+
+def param_specs(arch: str, variant: str):
+    """(name, shape) for every weight tensor, in executable order."""
+    kind = "pfp" if variant.startswith("pfp") else "det"
+    specs = []
+    for i, layer in enumerate(model_mod.compute_layers(arch)):
+        w = model_mod.weight_shape(layer)
+        b = model_mod.bias_shape(layer)
+        if kind == "pfp":
+            specs += [
+                (f"l{i}_w_mu", w), (f"l{i}_w_var", w),
+                (f"l{i}_b_mu", b), (f"l{i}_b_var", b),
+            ]
+        else:
+            specs += [(f"l{i}_w", w), (f"l{i}_b", b)]
+    return specs
+
+
+def entry_fn(arch: str, variant: str):
+    if variant == "pfp":
+        return lambda x, *flat: model_mod.pfp_forward_flat(arch, x, *flat)
+    if variant == "pfp_pallas":
+        return lambda x, *flat: model_mod.pfp_forward_flat(
+            arch, x, *flat, use_pallas=True
+        )
+    return lambda x, *flat: model_mod.det_forward_flat(arch, x, *flat)
+
+
+def load_weights(out_dir: str, arch: str):
+    z = np.load(os.path.join(out_dir, f"weights_{arch}.npz"))
+    return {k: z[k] for k in z.files}
+
+
+def flat_weights(weights, arch: str, variant: str, calib: float):
+    flat = []
+    for i, _ in enumerate(model_mod.compute_layers(arch)):
+        if variant.startswith("pfp"):
+            ws = weights[f"l{i}_w_sigma"]
+            bs = weights[f"l{i}_b_sigma"]
+            flat += [
+                weights[f"l{i}_w_mu"],
+                (calib * ws * ws).astype(np.float32),
+                weights[f"l{i}_b_mu"],
+                (calib * bs * bs).astype(np.float32),
+            ]
+        else:
+            flat += [weights[f"l{i}_w_mu"], weights[f"l{i}_b_mu"]]
+    return flat
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    with open(os.path.join(out, "metrics.json")) as f:
+        metrics = json.load(f)
+    data = np.load(os.path.join(out, "data.npz"))
+
+    entries = []
+    goldens = {}
+    jobs = []
+    for arch in ("mlp", "lenet"):
+        for batch in BATCHES:
+            jobs.append((arch, "pfp", batch))
+            jobs.append((arch, "det", batch))
+    jobs += [(a, "pfp_pallas", b) for a, b in PALLAS_ENTRIES]
+
+    for arch, variant, batch in jobs:
+        name = f"model_{arch}_{variant}_b{batch}"
+        in_shape = batched_input_shape(arch, batch)
+        specs = param_specs(arch, variant)
+        fn = entry_fn(arch, variant)
+        arg_specs = [jax.ShapeDtypeStruct(in_shape, jnp.float32)] + [
+            jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs
+        ]
+        print(f"lowering {name} ...")
+        lowered = jax.jit(fn).lower(*arg_specs)
+        hlo = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out, fname), "w") as f:
+            f.write(hlo)
+
+        # golden: real trained weights + a slice of the test set
+        calib = metrics[arch]["pfp_calibration_factor"]
+        weights = load_weights(out, arch)
+        flat = flat_weights(weights, arch, variant, calib)
+        x = data["test_mnist_x"][:batch].reshape(in_shape).astype(np.float32)
+        outs = jax.jit(fn)(jnp.asarray(x), *[jnp.asarray(a) for a in flat])
+        goldens[f"{name}_x"] = x
+        out_names = ["mu", "var"] if variant.startswith("pfp") else ["logits"]
+        for o_name, o in zip(out_names, outs):
+            goldens[f"{name}_{o_name}"] = np.asarray(o, np.float32)
+
+        entries.append(
+            {
+                "name": name,
+                "file": fname,
+                "arch": arch,
+                "variant": variant,
+                "batch": batch,
+                "input_shape": list(in_shape),
+                "params": [{"name": n, "shape": list(s)} for n, s in specs],
+                "outputs": out_names,
+                "calibration_factor": calib if variant.startswith("pfp") else None,
+            }
+        )
+
+    np.savez(os.path.join(out, "goldens.npz"), **goldens)
+    manifest = {
+        "version": 1,
+        "entries": entries,
+        "archs": {
+            a: {
+                "input_shape": list(model_mod.INPUT_SHAPES[a]),
+                "layers": model_mod.ARCHS[a],
+            }
+            for a in ("mlp", "lenet")
+        },
+        "metrics": metrics,
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} HLO artifacts + manifest + goldens to {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,270 @@
+"""Synthetic Dirty-MNIST substitute ("synthdigits").
+
+The paper evaluates on Dirty-MNIST = MNIST (in-domain) + Ambiguous-MNIST
+(aleatoric, between-class) + Fashion-MNIST (OOD, epistemic).  Those datasets
+are not available in this offline environment, so we generate a synthetic
+equivalent that preserves exactly the structure the experiments exercise:
+
+* ``indomain``  — 10 well-separated classes: class-seeded sinusoid/Gabor
+  prototypes on a 28x28 grid with a centered radial envelope (digit-like,
+  smooth), plus per-sample integer shifts and Gaussian pixel noise.
+* ``ambiguous`` — convex blends of two class prototypes with blend factor
+  lambda in [0.35, 0.65], labelled with the first class: genuinely
+  between-class probability mass -> high aleatoric uncertainty.
+* ``ood``       — structurally different textures (checkerboards, random
+  rectangles, stripes) sharing the input value range but not the class
+  manifold -> high epistemic uncertainty.
+
+The generator is driven by a SplitMix64 PRNG and is mirrored draw-for-draw
+in Rust (``rust/src/data/synth.rs``); cross-language agreement is asserted
+(to float tolerance — libm transcendentals may differ in the last ulp) by
+``rust/tests/integration_data.rs`` against goldens exported here.
+
+SplitMix64 lets us vectorise without changing the draw sequence: the k-th
+output from state ``s`` is ``mix(s + k*GOLDEN)``, so a numpy batch of n
+draws equals n sequential ``next_u64`` calls (the Rust side is the scalar
+loop).
+
+All images are float32 in [0, 1], flattened to 784 for the MLP and reshaped
+to [N, 1, 28, 28] for LeNet-5.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+H = W = 28
+NUM_CLASSES = 10
+IMG = H * W
+
+GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+_MIX1 = np.uint64(0xBF58476D1CE4E5B9)
+_MIX2 = np.uint64(0x94D049BB133111EB)
+
+
+def _mix(z: np.ndarray) -> np.ndarray:
+    z = (z ^ (z >> np.uint64(30))) * _MIX1
+    z = (z ^ (z >> np.uint64(27))) * _MIX2
+    return z ^ (z >> np.uint64(31))
+
+
+class SplitMix64:
+    """SplitMix64 PRNG; mirrored bit-for-bit in rust/src/util/rng.rs."""
+
+    def __init__(self, seed: int):
+        self.state = np.uint64(seed & 0xFFFFFFFFFFFFFFFF)
+
+    def next_u64(self) -> int:
+        with np.errstate(over="ignore"):
+            self.state = self.state + GOLDEN
+            return int(_mix(self.state))
+
+    def next_array(self, n: int) -> np.ndarray:
+        """n sequential next_u64() draws, vectorised (same sequence)."""
+        with np.errstate(over="ignore"):
+            ks = np.arange(1, n + 1, dtype=np.uint64) * GOLDEN + self.state
+            self.state = self.state + np.uint64(n) * GOLDEN
+            return _mix(ks)
+
+    def uniform(self) -> float:
+        """float in [0, 1) with 24 bits of mantissa (f32-exact)."""
+        return float(np.uint64(self.next_u64()) >> np.uint64(40)) / float(1 << 24)
+
+    def uniform_array(self, n: int) -> np.ndarray:
+        return (self.next_array(n) >> np.uint64(40)).astype(np.float64) / float(1 << 24)
+
+    def randint(self, n: int) -> int:
+        return int(np.uint64(self.next_u64()) % np.uint64(n))
+
+    def normal(self) -> float:
+        u = self.uniform_array(2)
+        u1 = max(u[0], 1e-12)
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u[1])
+
+    def normal_array(self, n: int) -> np.ndarray:
+        """n Box-Muller (cosine branch) normals; 2n uniform draws,
+        interleaved (u1, u2) per normal — identical to n scalar calls."""
+        u = self.uniform_array(2 * n)
+        u1 = np.maximum(u[0::2], 1e-12)
+        u2 = u[1::2]
+        return np.sqrt(-2.0 * np.log(u1)) * np.cos(2.0 * np.pi * u2)
+
+
+def derive_seed(base: int, stream: int, index: int) -> int:
+    """Per-sample seed so each sample is independent of generation order."""
+    mix = SplitMix64((base ^ (stream * 0x9E3779B1) ^ (index * 0x85EBCA77)) & 0xFFFFFFFFFFFFFFFF)
+    return mix.next_u64()
+
+
+# --------------------------------------------------------------------------
+# class prototypes
+# --------------------------------------------------------------------------
+
+def class_prototype(c: int) -> np.ndarray:
+    """Deterministic 28x28 prototype for class ``c`` (no randomness).
+
+    Distinct spatial frequency pair per class, radial envelope so the
+    pattern is centered like a digit.
+    """
+    fx = 1.0 + float(c % 3)
+    fy = 1.0 + float(c // 3)
+    phase = 0.7 * float(c)
+    i = np.arange(H, dtype=np.float64)[:, None] / (H - 1)
+    j = np.arange(W, dtype=np.float64)[None, :] / (W - 1)
+    env = np.exp(-((i - 0.5) ** 2 + (j - 0.5) ** 2) * 4.0)
+    s = np.sin(2.0 * np.pi * (fx * i + fy * j) + phase)
+    t = np.cos(2.0 * np.pi * (fy * i - fx * j) - phase)
+    return (env * (0.5 + 0.25 * s + 0.25 * t)).astype(np.float32)
+
+
+_PROTOS = None
+
+
+def prototypes() -> np.ndarray:
+    global _PROTOS
+    if _PROTOS is None:
+        _PROTOS = np.stack([class_prototype(c) for c in range(NUM_CLASSES)])
+    return _PROTOS
+
+
+# --------------------------------------------------------------------------
+# samplers (fixed, seed-deterministic draw counts per sample)
+# --------------------------------------------------------------------------
+
+NOISE_STD = 0.08
+MAX_SHIFT = 2
+
+
+def _shift(img: np.ndarray, dy: int, dx: int) -> np.ndarray:
+    """Shift with zero fill (mirrors the Rust implementation)."""
+    out = np.zeros_like(img)
+    ys = slice(max(0, dy), min(H, H + dy))
+    xs = slice(max(0, dx), min(W, W + dx))
+    ys_src = slice(max(0, -dy), min(H, H - dy))
+    xs_src = slice(max(0, -dx), min(W, W - dx))
+    out[ys, xs] = img[ys_src, xs_src]
+    return out
+
+
+def _add_noise(img: np.ndarray, rng: SplitMix64, std: float) -> np.ndarray:
+    noise = rng.normal_array(IMG).reshape(H, W)
+    out = (img.astype(np.float64) + std * noise).astype(np.float32)
+    return np.clip(out, 0.0, 1.0)
+
+
+def sample_indomain(seed: int) -> tuple[np.ndarray, int]:
+    rng = SplitMix64(seed)
+    c = rng.randint(NUM_CLASSES)
+    dy = rng.randint(2 * MAX_SHIFT + 1) - MAX_SHIFT
+    dx = rng.randint(2 * MAX_SHIFT + 1) - MAX_SHIFT
+    img = _shift(prototypes()[c], dy, dx)
+    return _add_noise(img, rng, NOISE_STD), c
+
+
+def sample_ambiguous(seed: int) -> tuple[np.ndarray, int]:
+    rng = SplitMix64(seed)
+    a = rng.randint(NUM_CLASSES)
+    b = (a + 1 + rng.randint(NUM_CLASSES - 1)) % NUM_CLASSES
+    lam = np.float32(0.35 + 0.30 * rng.uniform())
+    dy = rng.randint(2 * MAX_SHIFT + 1) - MAX_SHIFT
+    dx = rng.randint(2 * MAX_SHIFT + 1) - MAX_SHIFT
+    proto = (lam * prototypes()[a] + (np.float32(1.0) - lam) * prototypes()[b]).astype(np.float32)
+    img = _shift(proto, dy, dx)
+    return _add_noise(img, rng, NOISE_STD), int(a)
+
+
+def sample_ood(seed: int) -> np.ndarray:
+    """Texture images: 0=checkerboard, 1=random rectangles, 2=stripes."""
+    rng = SplitMix64(seed)
+    kind = rng.randint(3)
+    img = np.zeros((H, W), dtype=np.float32)
+    if kind == 0:
+        p = 2 + rng.randint(3)
+        hi = np.float32(0.5 + 0.5 * rng.uniform())
+        lo = np.float32(0.2 * rng.uniform())
+        ii = np.arange(H)[:, None] // p
+        jj = np.arange(W)[None, :] // p
+        img = np.where((ii + jj) % 2 == 0, hi, lo).astype(np.float32)
+    elif kind == 1:
+        n_rect = 3 + rng.randint(4)
+        for _ in range(n_rect):
+            y0 = rng.randint(H - 4)
+            x0 = rng.randint(W - 4)
+            h = 3 + rng.randint(10)
+            w = 3 + rng.randint(10)
+            val = np.float32(rng.uniform())
+            img[y0 : min(H, y0 + h), x0 : min(W, x0 + w)] = val
+    else:
+        p = 2 + rng.randint(4)
+        horiz = rng.randint(2) == 0
+        hi = np.float32(0.4 + 0.6 * rng.uniform())
+        k = np.arange(H)[:, None] if horiz else np.arange(W)[None, :]
+        img = np.where((k // p) % 2 == 0, hi, np.float32(0.1)).astype(np.float32)
+        img = np.broadcast_to(img, (H, W)).copy()
+    return _add_noise(img, rng, NOISE_STD)
+
+
+# --------------------------------------------------------------------------
+# dataset assembly
+# --------------------------------------------------------------------------
+
+STREAM_INDOMAIN_TRAIN = 1
+STREAM_AMBIGUOUS_TRAIN = 2
+STREAM_INDOMAIN_TEST = 3
+STREAM_AMBIGUOUS_TEST = 4
+STREAM_OOD_TEST = 5
+
+
+def make_split(base_seed: int, stream: int, n: int, kind: str) -> tuple[np.ndarray, np.ndarray]:
+    xs = np.empty((n, IMG), dtype=np.float32)
+    ys = np.zeros((n,), dtype=np.int32)
+    for idx in range(n):
+        seed = derive_seed(base_seed, stream, idx)
+        if kind == "indomain":
+            img, y = sample_indomain(seed)
+            ys[idx] = y
+        elif kind == "ambiguous":
+            img, y = sample_ambiguous(seed)
+            ys[idx] = y
+        else:
+            img = sample_ood(seed)
+            ys[idx] = -1
+        xs[idx] = img.reshape(-1)
+    return xs, ys
+
+
+def make_dirty_mnist(
+    base_seed: int = 2025,
+    n_train_clean: int = 6000,
+    n_train_amb: int = 2000,
+    n_test: int = 1000,
+) -> dict[str, np.ndarray]:
+    """Full synthetic Dirty-MNIST: train = in-domain + ambiguous (the paper
+    trains on MNIST + Ambiguous-MNIST); OOD is test-only."""
+    tx1, ty1 = make_split(base_seed, STREAM_INDOMAIN_TRAIN, n_train_clean, "indomain")
+    tx2, ty2 = make_split(base_seed, STREAM_AMBIGUOUS_TRAIN, n_train_amb, "ambiguous")
+    train_x = np.concatenate([tx1, tx2], axis=0)
+    train_y = np.concatenate([ty1, ty2], axis=0)
+    # deterministic Fisher-Yates shuffle
+    order = np.arange(train_x.shape[0])
+    rng = SplitMix64(derive_seed(base_seed, 99, 0))
+    for i in range(len(order) - 1, 0, -1):
+        j = rng.randint(i + 1)
+        order[i], order[j] = order[j], order[i]
+    train_x, train_y = train_x[order], train_y[order]
+
+    mx, my = make_split(base_seed, STREAM_INDOMAIN_TEST, n_test, "indomain")
+    ax, ay = make_split(base_seed, STREAM_AMBIGUOUS_TEST, n_test, "ambiguous")
+    ox, oy = make_split(base_seed, STREAM_OOD_TEST, n_test, "ood")
+    return {
+        "train_x": train_x,
+        "train_y": train_y,
+        "test_mnist_x": mx,
+        "test_mnist_y": my,
+        "test_ambiguous_x": ax,
+        "test_ambiguous_y": ay,
+        "test_ood_x": ox,
+        "test_ood_y": oy,
+    }

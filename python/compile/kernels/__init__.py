@@ -1,0 +1,16 @@
+"""L1 Pallas kernels for the Probabilistic Forward Pass + pure-jnp oracle.
+
+Every kernel is checked against :mod:`compile.kernels.ref` by
+``python/tests/test_kernels.py`` (hypothesis sweeps shapes and values).
+"""
+
+from . import ref  # noqa: F401
+from .dense import (  # noqa: F401
+    pfp_dense_first,
+    pfp_dense_joint,
+    pfp_dense_separate,
+    pfp_dense_varform,
+)
+from .relu import pfp_relu  # noqa: F401
+from .maxpool import pfp_maxpool2  # noqa: F401
+from .conv import pfp_conv2d_first, pfp_conv2d_joint  # noqa: F401

@@ -1,0 +1,58 @@
+"""Pallas PFP conv2d: the moment algebra of Eq. 12 over image patches.
+
+The conv is lowered to the *same* joint matmul kernel as the dense layer
+(im2col): patches of (mu_x, E[x^2]) are extracted with
+``conv_general_dilated_patches`` and fed to the blocked Pallas joint-dense
+kernel, so the conv inherits the joint-operator tile reuse.  This mirrors
+how the paper's TVM conv operators share the dense schedule machinery.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .dense import pfp_dense_joint
+
+
+def _patches(x, kh: int, kw: int, padding: str):
+    """[N, C, H, W] -> [N*OH*OW, C*kh*kw] patch matrix."""
+    p = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (1, 1), padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # [N, C*kh*kw, OH, OW]
+    n, ckk, oh, ow = p.shape
+    return p.transpose(0, 2, 3, 1).reshape(n * oh * ow, ckk), (n, oh, ow)
+
+
+@functools.partial(jax.jit, static_argnames=("padding", "block_m", "block_n"))
+def pfp_conv2d_joint(x_mu, x_e2, w_mu, w_e2, b_mu=None, b_var=None,
+                     padding: str = "VALID",
+                     block_m: int = 64, block_n: int = 16):
+    """PFP conv2d in second-raw-moment form.  w: [O, I, kh, kw]."""
+    o, i, kh, kw = w_mu.shape
+    pm, (n, oh, ow) = _patches(x_mu, kh, kw, padding)
+    pe, _ = _patches(x_e2, kh, kw, padding)
+    wm = w_mu.reshape(o, i * kh * kw)
+    we = w_e2.reshape(o, i * kh * kw)
+    mu, var = pfp_dense_joint(pm, pe, wm, we, block_m=block_m, block_n=block_n)
+    mu = mu.reshape(n, oh, ow, o).transpose(0, 3, 1, 2)
+    var = var.reshape(n, oh, ow, o).transpose(0, 3, 1, 2)
+    if b_mu is not None:
+        mu = mu + b_mu[None, :, None, None]
+    if b_var is not None:
+        var = var + b_var[None, :, None, None]
+    return mu, var
+
+
+def pfp_conv2d_first(x, w_mu, w_var, b_mu=None, b_var=None,
+                     padding: str = "VALID",
+                     block_m: int = 64, block_n: int = 16):
+    """First-layer conv with deterministic input (Eq. 13) via the generic
+    joint kernel (see dense.pfp_dense_first for the algebra)."""
+    return pfp_conv2d_joint(
+        x, x * x, w_mu, w_mu * w_mu + w_var, b_mu, b_var,
+        padding=padding, block_m=block_m, block_n=block_n,
+    )

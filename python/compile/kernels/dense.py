@@ -1,0 +1,222 @@
+"""Pallas PFP dense kernels (L1).
+
+The paper's hottest operator: the joint mean+variance probabilistic dense
+layer in second-raw-moment form (Eq. 12).  TPU adaptation of the paper's
+ARM/TVM schedule (DESIGN.md §Hardware-Adaptation):
+
+* the TVM loop tiling over (batch, out-features) becomes the Pallas grid
+  with (block_m, block_n) output tiles — the BlockSpec index maps express
+  the HBM->VMEM schedule TVM expressed with loop transforms;
+* the "joint operator" data reuse (paper Fig. 5) is realised by computing
+  both the mean matmul and the two variance-path matmuls inside one grid
+  program while the x-tiles are resident in VMEM;
+* both accumulations are plain f32 matmuls, i.e. MXU-shaped work.
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; correctness is asserted against ``ref.py`` and real-TPU
+performance is estimated in DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pad2(a, m_to: int, k_to: int):
+    m, k = a.shape
+    if m == m_to and k == k_to:
+        return a
+    return jnp.pad(a, ((0, m_to - m), (0, k_to - k)))
+
+
+# --------------------------------------------------------------------------
+# joint kernel: one grid program computes the mean tile and the variance
+# tile, sharing the x_mu tile between the mean matmul and the subtraction
+# term of Eq. 12.
+# --------------------------------------------------------------------------
+
+def _joint_kernel(x_mu_ref, x_e2_ref, w_mu_ref, w_e2_ref, mu_ref, var_ref):
+    xm = x_mu_ref[...]
+    xe = x_e2_ref[...]
+    wm = w_mu_ref[...]
+    we = w_e2_ref[...]
+    mu = jnp.dot(xm, wm.T, preferred_element_type=jnp.float32)
+    # Eq. 12: var = E[x^2] E[w^2] - (mu_x mu_w)^2, summed over k.
+    cross = jnp.dot(xm * xm, (wm * wm).T, preferred_element_type=jnp.float32)
+    var = jnp.dot(xe, we.T, preferred_element_type=jnp.float32) - cross
+    mu_ref[...] = mu
+    var_ref[...] = jnp.maximum(var, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def pfp_dense_joint(x_mu, x_e2, w_mu, w_e2, b_mu=None, b_var=None,
+                    block_m: int = 32, block_n: int = 32):
+    """Joint PFP dense (Eq. 12). x: [M,K]; w: [N,K] -> ([M,N], [M,N])."""
+    m, k = x_mu.shape
+    n, _ = w_mu.shape
+    bm = min(block_m, _round_up(m, 8))
+    bn = min(block_n, _round_up(n, 8))
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), k
+    xm = _pad2(x_mu, mp, kp)
+    xe = _pad2(x_e2, mp, kp)
+    wm = _pad2(w_mu, np_, kp)
+    we = _pad2(w_e2, np_, kp)
+    grid = (mp // bm, np_ // bn)
+    mu, var = pl.pallas_call(
+        _joint_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, kp), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, kp), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        ],
+        interpret=True,
+    )(xm, xe, wm, we)
+    mu, var = mu[:m, :n], var[:m, :n]
+    if b_mu is not None:
+        mu = mu + b_mu
+    if b_var is not None:
+        var = var + b_var
+    return mu, var
+
+
+# --------------------------------------------------------------------------
+# separate kernels (Fig. 5 baseline): two pallas_calls, no tile sharing.
+# --------------------------------------------------------------------------
+
+def _mean_kernel(x_mu_ref, w_mu_ref, mu_ref):
+    mu_ref[...] = jnp.dot(x_mu_ref[...], w_mu_ref[...].T,
+                          preferred_element_type=jnp.float32)
+
+
+def _var_kernel(x_mu_ref, x_e2_ref, w_mu_ref, w_e2_ref, var_ref):
+    xm = x_mu_ref[...]
+    cross = jnp.dot(xm * xm, (w_mu_ref[...] * w_mu_ref[...]).T,
+                    preferred_element_type=jnp.float32)
+    var = jnp.dot(x_e2_ref[...], w_e2_ref[...].T,
+                  preferred_element_type=jnp.float32) - cross
+    var_ref[...] = jnp.maximum(var, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def pfp_dense_separate(x_mu, x_e2, w_mu, w_e2, b_mu=None, b_var=None,
+                       block_m: int = 32, block_n: int = 32):
+    """Separate mean / variance PFP dense: same math as the joint kernel but
+    issued as two pallas_calls (the paper's "one operator = one compute
+    rule" TVM split).  Exists to reproduce Fig. 5."""
+    m, k = x_mu.shape
+    n, _ = w_mu.shape
+    bm = min(block_m, _round_up(m, 8))
+    bn = min(block_n, _round_up(n, 8))
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), k
+    xm = _pad2(x_mu, mp, kp)
+    xe = _pad2(x_e2, mp, kp)
+    wm = _pad2(w_mu, np_, kp)
+    we = _pad2(w_e2, np_, kp)
+    grid = (mp // bm, np_ // bn)
+    x_spec = pl.BlockSpec((bm, kp), lambda i, j: (i, 0))
+    w_spec = pl.BlockSpec((bn, kp), lambda i, j: (j, 0))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    o_shape = jax.ShapeDtypeStruct((mp, np_), jnp.float32)
+    mu = pl.pallas_call(
+        _mean_kernel, grid=grid, in_specs=[x_spec, w_spec],
+        out_specs=o_spec, out_shape=o_shape, interpret=True,
+    )(xm, wm)
+    var = pl.pallas_call(
+        _var_kernel, grid=grid, in_specs=[x_spec, x_spec, w_spec, w_spec],
+        out_specs=o_spec, out_shape=o_shape, interpret=True,
+    )(xm, xe, wm, we)
+    mu, var = mu[:m, :n], var[:m, :n]
+    if b_mu is not None:
+        mu = mu + b_mu
+    if b_var is not None:
+        var = var + b_var
+    return mu, var
+
+
+# --------------------------------------------------------------------------
+# variance-form kernel (Eq. 7): used when the producer hands us variances.
+# --------------------------------------------------------------------------
+
+def _varform_kernel(x_mu_ref, x_var_ref, w_mu_ref, w_var_ref, mu_ref, var_ref):
+    xm = x_mu_ref[...]
+    xv = x_var_ref[...]
+    wm = w_mu_ref[...]
+    wv = w_var_ref[...]
+    mu = jnp.dot(xm, wm.T, preferred_element_type=jnp.float32)
+    xe = xm * xm + xv
+    var = (
+        jnp.dot(xe, wv.T, preferred_element_type=jnp.float32)
+        + jnp.dot(xv, (wm * wm).T, preferred_element_type=jnp.float32)
+    )
+    mu_ref[...] = mu
+    var_ref[...] = jnp.maximum(var, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def pfp_dense_varform(x_mu, x_var, w_mu, w_var, b_mu=None, b_var=None,
+                      block_m: int = 32, block_n: int = 32):
+    """Variance-form PFP dense (Eq. 7), joint kernel."""
+    m, k = x_mu.shape
+    n, _ = w_mu.shape
+    bm = min(block_m, _round_up(m, 8))
+    bn = min(block_n, _round_up(n, 8))
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), k
+    xm = _pad2(x_mu, mp, kp)
+    xv = _pad2(x_var, mp, kp)
+    wm = _pad2(w_mu, np_, kp)
+    wv = _pad2(w_var, np_, kp)
+    grid = (mp // bm, np_ // bn)
+    mu, var = pl.pallas_call(
+        _varform_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, kp), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, kp), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        ],
+        interpret=True,
+    )(xm, xv, wm, wv)
+    mu, var = mu[:m, :n], var[:m, :n]
+    if b_mu is not None:
+        mu = mu + b_mu
+    if b_var is not None:
+        var = var + b_var
+    return mu, var
+
+
+def pfp_dense_first(x, w_mu, w_var, b_mu=None, b_var=None,
+                    block_m: int = 32, block_n: int = 32):
+    """First-layer dense with deterministic input (Eq. 13): the generic
+    joint kernel with ``x_e2 = x^2`` and ``w_e2 = mu_w^2 + sigma_w^2``
+    reduces exactly to Eq. 13 (the mu_w^2 x^2 terms cancel)."""
+    return pfp_dense_joint(
+        x, x * x, w_mu, w_mu * w_mu + w_var, b_mu, b_var,
+        block_m=block_m, block_n=block_n,
+    )

@@ -1,0 +1,68 @@
+"""Pallas PFP max-pool kernel: 2x2/stride-2 moment-matched Gaussian max.
+
+The paper (Table 3) contrasts a generic-reduction max-pool with a
+vectorized fixed-k implementation.  This kernel is the vectorized k=2
+variant: the three pairwise Gaussian-max moment matches for a 2x2 window
+are fused into a single grid program over the four strided views, sharing
+the erf/exp sub-terms of each pair.  Consumes and produces variances.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import erf
+
+INV_SQRT_2PI = 0.3989422804014327
+
+
+def _gmax(mu1, var1, mu2, var2):
+    theta = jnp.sqrt(jnp.maximum(var1 + var2, 1e-12))
+    alpha = (mu1 - mu2) / theta
+    cdf = 0.5 * (1.0 + erf(alpha / jnp.sqrt(2.0)))
+    pdf = INV_SQRT_2PI * jnp.exp(-0.5 * alpha * alpha)
+    m = mu1 * cdf + mu2 * (1.0 - cdf) + theta * pdf
+    e2 = (
+        (mu1 * mu1 + var1) * cdf
+        + (mu2 * mu2 + var2) * (1.0 - cdf)
+        + (mu1 + mu2) * theta * pdf
+    )
+    return m, jnp.maximum(e2 - m * m, 0.0)
+
+
+def _pool_kernel(m00, v00, m01, v01, m10, v10, m11, v11, out_mu, out_var):
+    ma, va = _gmax(m00[...], v00[...], m01[...], v01[...])
+    mb, vb = _gmax(m10[...], v10[...], m11[...], v11[...])
+    mo, vo = _gmax(ma, va, mb, vb)
+    out_mu[...] = mo
+    out_var[...] = vo
+
+
+@jax.jit
+def pfp_maxpool2(mu, var):
+    """2x2 stride-2 PFP max-pool over NCHW (mean, variance) tensors."""
+    n, c, h, w = mu.shape
+    oh, ow = h // 2, w // 2
+    views = []
+    for di in (0, 1):
+        for dj in (0, 1):
+            views.append(mu[..., di::2, dj::2].reshape(n, c * oh * ow))
+            views.append(var[..., di::2, dj::2].reshape(n, c * oh * ow))
+    flat = c * oh * ow
+    spec = pl.BlockSpec((1, flat), lambda i: (i, 0))
+    out_mu, out_var = pl.pallas_call(
+        _pool_kernel,
+        grid=(n,),
+        in_specs=[spec] * 8,
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, flat), jnp.float32),
+            jax.ShapeDtypeStruct((n, flat), jnp.float32),
+        ],
+        interpret=True,
+    )(*views)
+    return out_mu.reshape(n, c, oh, ow), out_var.reshape(n, c, oh, ow)

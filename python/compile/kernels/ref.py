@@ -1,0 +1,259 @@
+"""Pure-jnp reference implementations of every PFP operator.
+
+This module is the correctness oracle: each Pallas kernel in this package
+is checked against the function of the same name here (pytest + hypothesis,
+``python/tests/test_kernels.py``), and the Rust native operator library
+checks against goldens computed from these functions.
+
+Conventions (paper Section 5, "Variance and Second Raw Moment"):
+
+* compute layers (dense / conv) consume activation **second raw moments**
+  ``E[x^2]`` (plus means) and weight second raw moments ``E[w^2]``, and
+  produce pre-activation **variances** (Eq. 12);
+* activation functions (ReLU) consume variances and produce second raw
+  moments (Eqs. 8, 9);
+* max-pool consumes and produces variances;
+* the first layer sees a deterministic input: feeding ``x_e2 = x^2`` and
+  ``w_e2 = mu_w^2 + sigma_w^2`` into the generic dense reduces Eq. 12 to
+  Eq. 13 exactly, which is how both the JAX and Rust stacks realise it.
+
+Shapes: dense weights are ``[out, in]`` (so the matmul is ``x @ w.T``),
+conv weights ``[O, I, kh, kw]``, activations NCHW.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INV_SQRT_2PI = 0.3989422804014327  # 1/sqrt(2*pi)
+
+def erf(x):
+    """Abramowitz & Stegun 7.1.26 rational erf approximation (|err|<=1.5e-7).
+
+    Used instead of ``jax.scipy.special.erf`` so the AOT-lowered HLO
+    contains only classic opcodes (XLA 0.5.1's HLO text parser predates the
+    ``erf`` instruction) — and so the JAX stack shares the *exact* erf
+    formula with the Rust operator library (``rust/src/ops/erf.rs``).
+    """
+    p = 0.3275911
+    a1, a2, a3, a4, a5 = (0.254829592, -0.284496736, 1.421413741,
+                          -1.453152027, 1.061405429)
+    s = jnp.sign(x)
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + p * ax)
+    poly = ((((a5 * t + a4) * t + a3) * t + a2) * t + a1) * t
+    return s * (1.0 - poly * jnp.exp(-ax * ax))
+
+
+
+# --------------------------------------------------------------------------
+# dense
+# --------------------------------------------------------------------------
+
+def pfp_dense_joint(x_mu, x_e2, w_mu, w_e2, b_mu=None, b_var=None):
+    """Joint mean+variance PFP dense, second-raw-moment form (Eq. 12).
+
+    a_mu[m,n]  = sum_k x_mu[m,k] * w_mu[n,k]            (Eq. 4)
+    a_var[m,n] = sum_k E[w^2][n,k]*E[x^2][m,k] - (w_mu[n,k]*x_mu[m,k])^2
+    """
+    a_mu = x_mu @ w_mu.T
+    a_var = x_e2 @ w_e2.T - (x_mu * x_mu) @ (w_mu * w_mu).T
+    if b_mu is not None:
+        a_mu = a_mu + b_mu
+    if b_var is not None:
+        a_var = a_var + b_var
+    return a_mu, jnp.maximum(a_var, 0.0)
+
+
+def pfp_dense_varform(x_mu, x_var, w_mu, w_var, b_mu=None, b_var=None):
+    """Variance-form PFP dense (Eq. 7):
+    a_var = sum_k  sigma_w^2 * E[x^2] + mu_w^2 * sigma_x^2 .
+    Mathematically identical to :func:`pfp_dense_joint` with
+    ``x_e2 = x_mu^2 + x_var`` and ``w_e2 = w_mu^2 + w_var``."""
+    x_e2 = x_mu * x_mu + x_var
+    a_mu = x_mu @ w_mu.T
+    a_var = x_e2 @ w_var.T + x_var @ (w_mu * w_mu).T
+    if b_mu is not None:
+        a_mu = a_mu + b_mu
+    if b_var is not None:
+        a_var = a_var + b_var
+    return a_mu, jnp.maximum(a_var, 0.0)
+
+
+def pfp_dense_first(x, w_mu, w_var, b_mu=None, b_var=None):
+    """First-layer dense with deterministic input (Eq. 13)."""
+    a_mu = x @ w_mu.T
+    a_var = (x * x) @ w_var.T
+    if b_mu is not None:
+        a_mu = a_mu + b_mu
+    if b_var is not None:
+        a_var = a_var + b_var
+    return a_mu, jnp.maximum(a_var, 0.0)
+
+
+def pfp_dense_separate(x_mu, x_e2, w_mu, w_e2, b_mu=None, b_var=None):
+    """Separate mean / variance paths (the paper's Fig. 5 baseline): the
+    same math as :func:`pfp_dense_joint` but without sharing the x tiles
+    between the two paths (models the two-operator TVM split)."""
+    a_mu = x_mu @ w_mu.T
+    mean_sq = (x_mu * x_mu) @ (w_mu * w_mu).T  # recomputed, no reuse
+    a_var = x_e2 @ w_e2.T - mean_sq
+    if b_mu is not None:
+        a_mu = a_mu + b_mu
+    if b_var is not None:
+        a_var = a_var + b_var
+    return a_mu, jnp.maximum(a_var, 0.0)
+
+
+# --------------------------------------------------------------------------
+# ReLU moment matching (Eqs. 8, 9)
+# --------------------------------------------------------------------------
+
+def pfp_relu(a_mu, a_var, eps: float = 1e-12):
+    """Moment-matched ReLU over a Gaussian pre-activation.
+
+    Input (mu, var); output (mu', E[x'^2]) — second raw moment by design.
+    """
+    var = jnp.maximum(a_var, eps)
+    std = jnp.sqrt(var)
+    z = a_mu / (std * jnp.sqrt(2.0))
+    cdf_term = 0.5 * (1.0 + erf(z))                 # Phi(mu/sigma)
+    pdf_term = std * INV_SQRT_2PI * jnp.exp(-(a_mu * a_mu) / (2.0 * var))
+    mu_out = a_mu * cdf_term + pdf_term
+    e2_out = (var + a_mu * a_mu) * cdf_term + a_mu * pdf_term
+    return mu_out, jnp.maximum(e2_out, 0.0)
+
+
+def relu_mc(a_mu, a_var, key, n: int = 200000):
+    """Monte-Carlo ground truth for the ReLU moment matching (test-only)."""
+    s = a_mu + jnp.sqrt(jnp.maximum(a_var, 0.0)) * jax.random.normal(
+        key, (n,) + a_mu.shape
+    )
+    r = jnp.maximum(s, 0.0)
+    return r.mean(axis=0), (r * r).mean(axis=0)
+
+
+# --------------------------------------------------------------------------
+# Gaussian max (max-pool building block)
+# --------------------------------------------------------------------------
+
+def gaussian_max(mu1, var1, mu2, var2, eps: float = 1e-12):
+    """Moment-matched max of two independent Gaussians (Roth 2021).
+
+    theta = sqrt(var1 + var2); alpha = (mu1 - mu2)/theta
+    E[max]   = mu1*Phi(alpha) + mu2*Phi(-alpha) + theta*phi(alpha)
+    E[max^2] = (mu1^2+var1)*Phi(alpha) + (mu2^2+var2)*Phi(-alpha)
+               + (mu1+mu2)*theta*phi(alpha)
+    Returns (mean, variance).
+    """
+    theta = jnp.sqrt(jnp.maximum(var1 + var2, eps))
+    alpha = (mu1 - mu2) / theta
+    cdf = 0.5 * (1.0 + erf(alpha / jnp.sqrt(2.0)))
+    pdf = INV_SQRT_2PI * jnp.exp(-0.5 * alpha * alpha)
+    m = mu1 * cdf + mu2 * (1.0 - cdf) + theta * pdf
+    e2 = (
+        (mu1 * mu1 + var1) * cdf
+        + (mu2 * mu2 + var2) * (1.0 - cdf)
+        + (mu1 + mu2) * theta * pdf
+    )
+    return m, jnp.maximum(e2 - m * m, 0.0)
+
+
+def pfp_maxpool2(mu, var):
+    """2x2/stride-2 PFP max-pool over NCHW Gaussian activations.
+
+    Consumes and produces (mean, variance) — paper Section 5.  Pairwise
+    moment-matched Gaussian max: rows first, then columns.
+    """
+    m00, m01 = mu[..., 0::2, 0::2], mu[..., 0::2, 1::2]
+    m10, m11 = mu[..., 1::2, 0::2], mu[..., 1::2, 1::2]
+    v00, v01 = var[..., 0::2, 0::2], var[..., 0::2, 1::2]
+    v10, v11 = var[..., 1::2, 0::2], var[..., 1::2, 1::2]
+    ma, va = gaussian_max(m00, v00, m01, v01)
+    mb, vb = gaussian_max(m10, v10, m11, v11)
+    return gaussian_max(ma, va, mb, vb)
+
+
+def pfp_maxpool_generic(mu, var, k: int = 2, stride: int = 2):
+    """Generic reduction formulation (the paper's slow baseline): iterated
+    pairwise Gaussian max over an arbitrary k x k window."""
+    n, c, h, w = mu.shape
+    oh, ow = (h - k) // stride + 1, (w - k) // stride + 1
+    out_m = None
+    out_v = None
+    for di in range(k):
+        for dj in range(k):
+            sm = mu[..., di : di + stride * (oh - 1) + 1 : stride,
+                    dj : dj + stride * (ow - 1) + 1 : stride]
+            sv = var[..., di : di + stride * (oh - 1) + 1 : stride,
+                     dj : dj + stride * (ow - 1) + 1 : stride]
+            if out_m is None:
+                out_m, out_v = sm, sv
+            else:
+                out_m, out_v = gaussian_max(out_m, out_v, sm, sv)
+    return out_m, out_v
+
+
+# --------------------------------------------------------------------------
+# conv2d (moment algebra identical to dense, over image patches)
+# --------------------------------------------------------------------------
+
+def _conv(x, w, padding):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding=padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def pfp_conv2d_joint(x_mu, x_e2, w_mu, w_e2, b_mu=None, b_var=None, padding="VALID"):
+    """PFP conv2d, second-raw-moment form (Eq. 12 over receptive fields)."""
+    a_mu = _conv(x_mu, w_mu, padding)
+    a_var = _conv(x_e2, w_e2, padding) - _conv(x_mu * x_mu, w_mu * w_mu, padding)
+    if b_mu is not None:
+        a_mu = a_mu + b_mu[None, :, None, None]
+    if b_var is not None:
+        a_var = a_var + b_var[None, :, None, None]
+    return a_mu, jnp.maximum(a_var, 0.0)
+
+
+def pfp_conv2d_first(x, w_mu, w_var, b_mu=None, b_var=None, padding="VALID"):
+    """First-layer conv with deterministic input (Eq. 13)."""
+    a_mu = _conv(x, w_mu, padding)
+    a_var = _conv(x * x, w_var, padding)
+    if b_mu is not None:
+        a_mu = a_mu + b_mu[None, :, None, None]
+    if b_var is not None:
+        a_var = a_var + b_var[None, :, None, None]
+    return a_mu, jnp.maximum(a_var, 0.0)
+
+
+# --------------------------------------------------------------------------
+# deterministic & conversion helpers
+# --------------------------------------------------------------------------
+
+def det_dense(x, w, b=None):
+    y = x @ w.T
+    return y + b if b is not None else y
+
+
+def det_conv2d(x, w, b=None, padding="VALID"):
+    y = _conv(x, w, padding)
+    return y + b[None, :, None, None] if b is not None else y
+
+
+def det_relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def det_maxpool2(x):
+    n, c, h, w = x.shape
+    return jnp.max(x.reshape(n, c, h // 2, 2, w // 2, 2), axis=(3, 5))
+
+
+def var_to_e2(mu, var):
+    return mu * mu + var
+
+
+def e2_to_var(mu, e2):
+    return jnp.maximum(e2 - mu * mu, 0.0)

@@ -1,0 +1,63 @@
+"""Pallas PFP ReLU kernel (Eqs. 8, 9): moment-matched Gaussian ReLU.
+
+Elementwise but, as the paper's Fig. 6 shows, far from trivial at runtime:
+erf + exp per element.  Consumes (mean, variance), produces
+(mean, second raw moment).  One grid program per row-block keeps the VPU
+busy on contiguous lanes; the whole tuple is produced jointly so the
+cdf/pdf sub-terms are shared between the two outputs (joint-operator rule).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import erf
+
+INV_SQRT_2PI = 0.3989422804014327
+
+
+def _relu_kernel(mu_ref, var_ref, out_mu_ref, out_e2_ref):
+    mu = mu_ref[...]
+    var = jnp.maximum(var_ref[...], 1e-12)
+    std = jnp.sqrt(var)
+    cdf = 0.5 * (1.0 + erf(mu / (std * jnp.sqrt(2.0))))
+    pdf = std * INV_SQRT_2PI * jnp.exp(-(mu * mu) / (2.0 * var))
+    out_mu_ref[...] = mu * cdf + pdf
+    out_e2_ref[...] = jnp.maximum((var + mu * mu) * cdf + mu * pdf, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def pfp_relu(a_mu, a_var, block_rows: int = 8):
+    """Moment-matched ReLU. Accepts any shape; flattens to 2D internally."""
+    shape = a_mu.shape
+    flat_mu = a_mu.reshape(shape[0], -1)
+    flat_var = a_var.reshape(shape[0], -1)
+    m, n = flat_mu.shape
+    bm = min(block_rows, m)
+    # pad rows to a multiple of the block
+    mp = (m + bm - 1) // bm * bm
+    if mp != m:
+        flat_mu = jnp.pad(flat_mu, ((0, mp - m), (0, 0)))
+        flat_var = jnp.pad(flat_var, ((0, mp - m), (0, 0)))
+    mu, e2 = pl.pallas_call(
+        _relu_kernel,
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, n), jnp.float32),
+            jax.ShapeDtypeStruct((mp, n), jnp.float32),
+        ],
+        interpret=True,
+    )(flat_mu, flat_var)
+    return mu[:m].reshape(shape), e2[:m].reshape(shape)

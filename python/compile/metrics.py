@@ -1,0 +1,75 @@
+"""Uncertainty metrics (paper Section 2.2, Eqs. 1-3) and OOD evaluation.
+
+Mirrored in ``rust/src/uncertainty/``; cross-checked by goldens.
+
+Sample-based pipeline (SVI, and PFP after Eq. 11 logit sampling):
+  probs [S, N, K] ->
+    total  = Shannon entropy of the mean predictive  (Eq. 1)
+    sme    = mean of the per-sample softmax entropies (Eq. 2, aleatoric)
+    mi     = total - sme                              (Eq. 3, epistemic)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+EPS = 1e-12
+
+
+def softmax(logits: np.ndarray, axis: int = -1) -> np.ndarray:
+    z = logits - logits.max(axis=axis, keepdims=True)
+    e = np.exp(z)
+    return e / e.sum(axis=axis, keepdims=True)
+
+
+def entropy(p: np.ndarray, axis: int = -1) -> np.ndarray:
+    return -(p * np.log(p + EPS)).sum(axis=axis)
+
+
+def uncertainty_from_probs(probs: np.ndarray) -> dict[str, np.ndarray]:
+    """probs: [S, N, K] per-sample class probabilities."""
+    mean_p = probs.mean(axis=0)                     # [N, K]
+    total = entropy(mean_p)                         # Eq. 1
+    sme = entropy(probs).mean(axis=0)               # Eq. 2
+    mi = np.maximum(total - sme, 0.0)               # Eq. 3
+    return {"total": total, "sme": sme, "mi": mi, "mean_p": mean_p}
+
+
+def sample_logits_gaussian(mu: np.ndarray, var: np.ndarray, n_samples: int,
+                           seed: int = 0) -> np.ndarray:
+    """Eq. 11: draw logit samples from N(mu_PFP, sigma^2_PFP).
+
+    mu, var: [N, K] -> [S, N, K].
+    """
+    rng = np.random.default_rng(seed)
+    std = np.sqrt(np.maximum(var, 0.0))
+    return mu[None] + std[None] * rng.standard_normal(
+        (n_samples,) + mu.shape
+    ).astype(np.float32)
+
+
+def accuracy(mean_p: np.ndarray, labels: np.ndarray) -> float:
+    return float((mean_p.argmax(axis=-1) == labels).mean())
+
+
+def auroc(scores_pos: np.ndarray, scores_neg: np.ndarray) -> float:
+    """AUROC for separating positives (OOD, should score high) from
+    negatives (in-domain).  Rank-based (Mann-Whitney U), ties counted 0.5.
+    """
+    pos = np.asarray(scores_pos, dtype=np.float64)
+    neg = np.asarray(scores_neg, dtype=np.float64)
+    all_scores = np.concatenate([pos, neg])
+    order = np.argsort(all_scores, kind="mergesort")
+    ranks = np.empty_like(order, dtype=np.float64)
+    sorted_scores = all_scores[order]
+    i = 0
+    n = len(all_scores)
+    while i < n:
+        j = i
+        while j + 1 < n and sorted_scores[j + 1] == sorted_scores[i]:
+            j += 1
+        ranks[order[i : j + 1]] = 0.5 * (i + j) + 1.0
+        i = j + 1
+    r_pos = ranks[: len(pos)].sum()
+    u = r_pos - len(pos) * (len(pos) + 1) / 2.0
+    return float(u / (len(pos) * len(neg)))

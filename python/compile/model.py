@@ -1,0 +1,264 @@
+"""L2: JAX model definitions — PFP / deterministic / SVI-sampled forward.
+
+Architectures (paper Section 4):
+
+* ``mlp``   — 784-100-100-10 with ReLU (the paper's "3-layer MLP";
+  Tables 2/4 show Dense 1..3).
+* ``lenet`` — LeNet-5 on 28x28: conv 6@5x5 -> ReLU -> maxpool2 ->
+  conv 16@5x5 -> ReLU -> maxpool2 -> flatten -> dense 120 -> ReLU ->
+  dense 84 -> ReLU -> dense 10.
+
+The PFP forward pass follows the paper's representation discipline
+(Section 5): compute layers consume second raw moments and produce
+variances; ReLU consumes variances and produces second raw moments;
+max-pool consumes and produces variances.  Conversions are inserted by the
+executor exactly where representations disagree — the same logic is
+mirrored in ``rust/src/model/executor.rs``.
+
+Weights are mean-field Gaussian ``(mu, sigma)`` per tensor; the paper's
+*calibration factor* is a global multiplier on the variances applied at
+conversion time (Section 4).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+
+# --------------------------------------------------------------------------
+# architecture specs (mirrored by rust/src/model/{mlp,lenet}.rs)
+# --------------------------------------------------------------------------
+
+ARCHS: dict[str, list[dict[str, Any]]] = {
+    "mlp": [
+        {"kind": "dense", "in": 784, "out": 100},
+        {"kind": "relu"},
+        {"kind": "dense", "in": 100, "out": 100},
+        {"kind": "relu"},
+        {"kind": "dense", "in": 100, "out": 10},
+    ],
+    "lenet": [
+        {"kind": "conv", "in_ch": 1, "out_ch": 6, "k": 5},
+        {"kind": "relu"},
+        {"kind": "maxpool2"},
+        {"kind": "conv", "in_ch": 6, "out_ch": 16, "k": 5},
+        {"kind": "relu"},
+        {"kind": "maxpool2"},
+        {"kind": "flatten"},
+        {"kind": "dense", "in": 256, "out": 120},
+        {"kind": "relu"},
+        {"kind": "dense", "in": 120, "out": 84},
+        {"kind": "relu"},
+        {"kind": "dense", "in": 84, "out": 10},
+    ],
+}
+
+INPUT_SHAPES = {"mlp": (784,), "lenet": (1, 28, 28)}
+
+
+def compute_layers(arch: str) -> list[dict[str, Any]]:
+    """The parameterised (dense/conv) layers of an architecture, in order."""
+    return [l for l in ARCHS[arch] if l["kind"] in ("dense", "conv")]
+
+
+def weight_shape(layer: dict[str, Any]) -> tuple[int, ...]:
+    if layer["kind"] == "dense":
+        return (layer["out"], layer["in"])
+    return (layer["out_ch"], layer["in_ch"], layer["k"], layer["k"])
+
+
+def bias_shape(layer: dict[str, Any]) -> tuple[int, ...]:
+    return (layer["out"],) if layer["kind"] == "dense" else (layer["out_ch"],)
+
+
+# --------------------------------------------------------------------------
+# parameter init (variational posterior, paper Section 4)
+# --------------------------------------------------------------------------
+
+def softplus(x):
+    return jnp.logaddexp(x, 0.0)
+
+
+def inv_softplus(y: float) -> float:
+    return float(math.log(math.expm1(y)))
+
+
+def init_params(arch: str, key, mu_std: float = 0.08, sigma_init: float = 1e-3):
+    """Mean-field Gaussian posterior init: mu ~ N(0, mu_std^2) (fan-in
+    scaled for conv), rho such that sigma = softplus(rho) = sigma_init."""
+    params = []
+    rho0 = inv_softplus(sigma_init)
+    for layer in compute_layers(arch):
+        key, k1 = jax.random.split(key)
+        wshape = weight_shape(layer)
+        fan_in = int(jnp.prod(jnp.array(wshape[1:])))
+        std = min(mu_std, 1.6 / math.sqrt(fan_in))
+        params.append(
+            {
+                "w_mu": std * jax.random.normal(k1, wshape, jnp.float32),
+                "w_rho": jnp.full(wshape, rho0, jnp.float32),
+                "b_mu": jnp.zeros(bias_shape(layer), jnp.float32),
+                "b_rho": jnp.full(bias_shape(layer), rho0, jnp.float32),
+            }
+        )
+    return params
+
+
+def params_sigma(params):
+    """(mu, sigma) view of a (mu, rho) parameter pytree."""
+    return [
+        {
+            "w_mu": p["w_mu"],
+            "w_sigma": softplus(p["w_rho"]),
+            "b_mu": p["b_mu"],
+            "b_sigma": softplus(p["b_rho"]),
+        }
+        for p in params
+    ]
+
+
+# --------------------------------------------------------------------------
+# forward passes
+# --------------------------------------------------------------------------
+
+def det_forward(arch: str, weights, x):
+    """Deterministic forward pass. ``weights`` = [(w, b), ...]."""
+    i = 0
+    h = x
+    for layer in ARCHS[arch]:
+        kind = layer["kind"]
+        if kind == "dense":
+            w, b = weights[i]
+            h = ref.det_dense(h, w, b)
+            i += 1
+        elif kind == "conv":
+            w, b = weights[i]
+            h = ref.det_conv2d(h, w, b)
+            i += 1
+        elif kind == "relu":
+            h = ref.det_relu(h)
+        elif kind == "maxpool2":
+            h = ref.det_maxpool2(h)
+        elif kind == "flatten":
+            h = h.reshape(h.shape[0], -1)
+    return h
+
+
+def svi_sample_weights(params_sig, key):
+    """One posterior weight sample (reparameterisation trick)."""
+    out = []
+    for p in params_sig:
+        key, k1, k2 = jax.random.split(key, 3)
+        w = p["w_mu"] + p["w_sigma"] * jax.random.normal(k1, p["w_mu"].shape)
+        b = p["b_mu"] + p["b_sigma"] * jax.random.normal(k2, p["b_mu"].shape)
+        out.append((w, b))
+    return out
+
+
+def svi_forward(arch: str, params_sig, x, key):
+    """One SVI predictive sample: sample weights, one deterministic pass."""
+    return det_forward(arch, svi_sample_weights(params_sig, key), x)
+
+
+def pfp_forward(arch: str, params_sig, x, calib: float = 1.0,
+                use_pallas: bool = False):
+    """Single probabilistic forward pass -> (mu_logits, var_logits).
+
+    ``calib`` is the paper's calibration factor: a global reweighting of
+    the posterior weight variances when converting SVI -> PFP.
+    ``use_pallas=True`` routes dense/conv/relu/maxpool through the L1
+    Pallas kernels; ``False`` uses the pure-jnp reference ops (identical
+    math — asserted by tests — and the form AOT-lowered for serving).
+    """
+    K = kernels if use_pallas else ref
+    i = 0
+    mu, aux = x, None  # aux is var or e2 depending on rep
+    rep = "det"
+    for layer in ARCHS[arch]:
+        kind = layer["kind"]
+        if kind in ("dense", "conv"):
+            p = params_sig[i]
+            i += 1
+            w_mu = p["w_mu"]
+            w_var = calib * p["w_sigma"] * p["w_sigma"]
+            b_mu = p["b_mu"]
+            b_var = calib * p["b_sigma"] * p["b_sigma"]
+            if kind == "dense":
+                first = kernels.pfp_dense_first if use_pallas else ref.pfp_dense_first
+                joint = kernels.pfp_dense_joint if use_pallas else ref.pfp_dense_joint
+            else:
+                first = kernels.pfp_conv2d_first if use_pallas else ref.pfp_conv2d_first
+                joint = kernels.pfp_conv2d_joint if use_pallas else ref.pfp_conv2d_joint
+            if rep == "det":
+                mu, aux = first(mu, w_mu, w_var, b_mu, b_var)
+            else:
+                if rep == "var":
+                    aux = ref.var_to_e2(mu, aux)  # conversion layer
+                w_e2 = w_mu * w_mu + w_var
+                mu, aux = joint(mu, aux, w_mu, w_e2, b_mu, b_var)
+            rep = "var"
+        elif kind == "relu":
+            assert rep == "var"
+            relu = kernels.pfp_relu if use_pallas else ref.pfp_relu
+            mu, aux = relu(mu, aux)
+            rep = "e2"
+        elif kind == "maxpool2":
+            if rep == "e2":
+                aux = ref.e2_to_var(mu, aux)
+            pool = kernels.pfp_maxpool2 if use_pallas else ref.pfp_maxpool2
+            mu, aux = pool(mu, aux)
+            rep = "var"
+        elif kind == "flatten":
+            mu = mu.reshape(mu.shape[0], -1)
+            aux = aux.reshape(aux.shape[0], -1)
+    if rep == "e2":
+        aux = ref.e2_to_var(mu, aux)
+    return mu, aux
+
+
+# --------------------------------------------------------------------------
+# flat parameter packing for AOT (manifest order must match the Rust side)
+# --------------------------------------------------------------------------
+
+def flat_param_names(arch: str, variant: str) -> list[str]:
+    """Parameter-tensor names in the order the AOT executable expects them
+    after the input tensor.  pfp: (w_mu, w_var, b_mu, b_var) per compute
+    layer; det (also used for SVI samples): (w, b) per compute layer."""
+    names = []
+    for i, _ in enumerate(compute_layers(arch)):
+        if variant == "pfp":
+            names += [f"l{i}_w_mu", f"l{i}_w_var", f"l{i}_b_mu", f"l{i}_b_var"]
+        else:
+            names += [f"l{i}_w", f"l{i}_b"]
+    return names
+
+
+def pfp_forward_flat(arch: str, x, *flat, use_pallas: bool = False):
+    """PFP forward over a flat (w_mu, w_var, b_mu, b_var)* argument list —
+    the AOT entry point (calibration is pre-applied to w_var by the
+    caller/loader)."""
+    params = []
+    for i in range(0, len(flat), 4):
+        w_mu, w_var, b_mu, b_var = flat[i : i + 4]
+        params.append(
+            {
+                "w_mu": w_mu,
+                "w_sigma": jnp.sqrt(w_var),
+                "b_mu": b_mu,
+                "b_sigma": jnp.sqrt(b_var),
+            }
+        )
+    return pfp_forward(arch, params, x, calib=1.0, use_pallas=use_pallas)
+
+
+def det_forward_flat(arch: str, x, *flat):
+    """Deterministic forward over a flat (w, b)* argument list — the AOT
+    entry point for both the deterministic baseline and SVI samples."""
+    weights = [(flat[i], flat[i + 1]) for i in range(0, len(flat), 2)]
+    return (det_forward(arch, weights, x),)

@@ -1,0 +1,76 @@
+"""AOT lowering: HLO text round-trips and manifest consistency.
+
+Self-contained (does not require `make artifacts` to have run): lowers a
+small entry and checks the HLO text parses structurally; the full artifact
+set is validated end-to-end by the Rust integration tests.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as model_mod
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("arch,variant,batch", [
+    ("mlp", "pfp", 1),
+    ("mlp", "det", 10),
+    ("lenet", "pfp", 1),
+])
+def test_lowering_produces_hlo_text(arch, variant, batch):
+    in_shape = aot.batched_input_shape(arch, batch)
+    specs = aot.param_specs(arch, variant)
+    fn = aot.entry_fn(arch, variant)
+    args = [jax.ShapeDtypeStruct(in_shape, jnp.float32)] + [
+        jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs
+    ]
+    hlo = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    assert hlo.startswith("HloModule")
+    assert "ENTRY" in hlo
+    # one HLO parameter per tensor (input + weights)
+    assert hlo.count("parameter(") == 1 + len(specs)
+
+
+def test_pallas_lowering_is_plain_hlo():
+    """interpret=True must not leave custom-calls the CPU client can't run."""
+    in_shape = aot.batched_input_shape("mlp", 1)
+    specs = aot.param_specs("mlp", "pfp_pallas")
+    fn = aot.entry_fn("mlp", "pfp_pallas")
+    args = [jax.ShapeDtypeStruct(in_shape, jnp.float32)] + [
+        jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs
+    ]
+    hlo = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    assert "mosaic" not in hlo.lower()
+
+
+def test_param_specs_match_model():
+    specs = aot.param_specs("lenet", "pfp")
+    names = model_mod.flat_param_names("lenet", "pfp")
+    assert [n for n, _ in specs] == names
+    # first conv weights
+    assert specs[0][1] == (6, 1, 5, 5)
+    # final dense
+    assert specs[-4][1] == (10, 84)
+
+
+def test_det_and_pfp_entry_consistency():
+    """det entry over posterior means == PFP means in the zero-variance
+    limit (cross-checks the two AOT graphs)."""
+    arch = "mlp"
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(size=(2, 784)).astype(np.float32))
+    p = model_mod.params_sigma(
+        model_mod.init_params(arch, jax.random.PRNGKey(0), sigma_init=1e-7)
+    )
+    det_flat, pfp_flat = [], []
+    for layer in p:
+        det_flat += [layer["w_mu"], layer["b_mu"]]
+        pfp_flat += [layer["w_mu"], layer["w_sigma"] ** 2,
+                     layer["b_mu"], layer["b_sigma"] ** 2]
+    (det_out,) = model_mod.det_forward_flat(arch, x, *det_flat)
+    pfp_mu, _ = model_mod.pfp_forward_flat(arch, x, *pfp_flat)
+    np.testing.assert_allclose(np.asarray(det_out), np.asarray(pfp_mu),
+                               atol=1e-3, rtol=1e-3)

@@ -1,0 +1,102 @@
+"""Synthetic Dirty-MNIST generator: determinism, structure, separability."""
+
+import numpy as np
+import pytest
+
+from compile import data as D
+
+
+def test_splitmix_vectorised_equals_scalar():
+    rng_a = D.SplitMix64(12345)
+    seq_scalar = [rng_a.next_u64() for _ in range(64)]
+    rng_b = D.SplitMix64(12345)
+    seq_vec = rng_b.next_array(64).tolist()
+    assert seq_scalar == seq_vec
+    assert rng_a.state == rng_b.state
+
+
+def test_splitmix_known_values():
+    """Pinned outputs — the Rust SplitMix64 asserts the same constants."""
+    rng = D.SplitMix64(0)
+    vals = [rng.next_u64() for _ in range(3)]
+    assert vals[0] == 0xE220A8397B1DCDAF
+    assert vals[1] == 0x6E789E6AA1B965F4
+    assert vals[2] == 0x06C45D188009454F
+
+
+def test_uniform_range_and_determinism():
+    rng = D.SplitMix64(7)
+    us = rng.uniform_array(10000)
+    assert us.min() >= 0.0 and us.max() < 1.0
+    assert abs(us.mean() - 0.5) < 0.02
+    rng2 = D.SplitMix64(7)
+    assert np.array_equal(us, rng2.uniform_array(10000))
+
+
+def test_normal_moments():
+    rng = D.SplitMix64(99)
+    ns = rng.normal_array(20000)
+    assert abs(ns.mean()) < 0.03
+    assert abs(ns.std() - 1.0) < 0.03
+
+
+def test_prototypes_distinct():
+    protos = D.prototypes()
+    assert protos.shape == (10, 28, 28)
+    for a in range(10):
+        for b in range(a + 1, 10):
+            assert np.abs(protos[a] - protos[b]).mean() > 0.05
+
+
+def test_samples_deterministic_per_seed():
+    img1, y1 = D.sample_indomain(42)
+    img2, y2 = D.sample_indomain(42)
+    assert np.array_equal(img1, img2) and y1 == y2
+    img3, _ = D.sample_indomain(43)
+    assert not np.array_equal(img1, img3)
+
+
+def test_sample_ranges():
+    for seed in range(20):
+        img, y = D.sample_indomain(seed)
+        assert img.shape == (28, 28)
+        assert 0 <= y < 10
+        assert img.min() >= 0.0 and img.max() <= 1.0
+        ood = D.sample_ood(seed)
+        assert ood.min() >= 0.0 and ood.max() <= 1.0
+
+
+def test_ambiguous_is_between_classes():
+    """An ambiguous sample should be closer to the blend of its two source
+    prototypes than a clean sample is to a wrong prototype."""
+    img, y = D.sample_ambiguous(1234)
+    protos = D.prototypes()
+    dists = [np.abs(img - protos[c]).mean() for c in range(10)]
+    # the labelled class should not be a uniquely crisp match
+    assert sorted(dists)[1] - sorted(dists)[0] < 0.15
+
+
+def test_ood_far_from_class_manifold():
+    protos = D.prototypes()
+    d_in, d_ood = [], []
+    for seed in range(30):
+        img, y = D.sample_indomain(seed)
+        d_in.append(min(np.abs(img - protos[c]).mean() for c in range(10)))
+        ood = D.sample_ood(seed)
+        d_ood.append(min(np.abs(ood - protos[c]).mean() for c in range(10)))
+    assert np.mean(d_ood) > 1.5 * np.mean(d_in)
+
+
+def test_make_dirty_mnist_shapes():
+    d = D.make_dirty_mnist(n_train_clean=50, n_train_amb=20, n_test=10)
+    assert d["train_x"].shape == (70, 784)
+    assert d["train_y"].shape == (70,)
+    assert d["test_ood_y"].tolist() == [-1] * 10
+    assert d["train_x"].dtype == np.float32
+    # labels cover several classes
+    assert len(set(d["train_y"].tolist())) >= 5
+
+
+def test_derive_seed_streams_differ():
+    s = {D.derive_seed(2025, st, 0) for st in range(1, 6)}
+    assert len(s) == 5

@@ -1,0 +1,284 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and value ranges; fixed-seed cases pin the exact
+architectural shapes used by the MLP and LeNet-5.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+ATOL = 2e-4
+RTOL = 2e-4
+
+
+def _close(a, b, atol=ATOL, rtol=RTOL):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol)
+
+
+def _gauss_pair(rng, shape, scale=1.0, var_scale=1.0):
+    mu = rng.normal(size=shape).astype(np.float32) * scale
+    var = np.abs(rng.normal(size=shape)).astype(np.float32) * var_scale + 1e-6
+    return jnp.asarray(mu), jnp.asarray(var)
+
+
+# --------------------------------------------------------------------------
+# dense
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 96),
+    n=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+    bm=st.sampled_from([8, 16, 32]),
+    bn=st.sampled_from([8, 16, 32]),
+)
+def test_dense_joint_matches_ref(m, k, n, seed, bm, bn):
+    rng = np.random.default_rng(seed)
+    x_mu, x_var = _gauss_pair(rng, (m, k))
+    x_e2 = x_mu * x_mu + x_var
+    w_mu, w_var = _gauss_pair(rng, (n, k), scale=0.2, var_scale=0.02)
+    w_e2 = w_mu * w_mu + w_var
+    got = kernels.pfp_dense_joint(x_mu, x_e2, w_mu, w_e2, block_m=bm, block_n=bn)
+    want = ref.pfp_dense_joint(x_mu, x_e2, w_mu, w_e2)
+    _close(got[0], want[0])
+    _close(got[1], want[1])
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 24), k=st.integers(1, 64), n=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_separate_equals_joint(m, k, n, seed):
+    """Fig. 5's two formulations are mathematically identical."""
+    rng = np.random.default_rng(seed)
+    x_mu, x_var = _gauss_pair(rng, (m, k))
+    x_e2 = x_mu * x_mu + x_var
+    w_mu, w_var = _gauss_pair(rng, (n, k), scale=0.2, var_scale=0.02)
+    w_e2 = w_mu * w_mu + w_var
+    a = kernels.pfp_dense_separate(x_mu, x_e2, w_mu, w_e2)
+    b = kernels.pfp_dense_joint(x_mu, x_e2, w_mu, w_e2)
+    _close(a[0], b[0])
+    _close(a[1], b[1])
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 24), k=st.integers(1, 64), n=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_varform_equals_rawmoment(m, k, n, seed):
+    """Eq. 7 and Eq. 12 are algebraically the same quantity."""
+    rng = np.random.default_rng(seed)
+    x_mu, x_var = _gauss_pair(rng, (m, k))
+    x_e2 = x_mu * x_mu + x_var
+    w_mu, w_var = _gauss_pair(rng, (n, k), scale=0.2, var_scale=0.02)
+    w_e2 = w_mu * w_mu + w_var
+    a = kernels.pfp_dense_varform(x_mu, x_var, w_mu, w_var)
+    b = kernels.pfp_dense_joint(x_mu, x_e2, w_mu, w_e2)
+    _close(a[0], b[0])
+    _close(a[1], b[1], atol=5e-4, rtol=5e-4)
+
+
+def test_dense_first_layer_eq13():
+    """Generic joint kernel with x_e2=x^2, w_e2=mu^2+var reduces to Eq. 13."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(size=(10, 784)).astype(np.float32))
+    w_mu, w_var = _gauss_pair(rng, (100, 784), scale=0.1, var_scale=0.01)
+    got = kernels.pfp_dense_first(x, w_mu, w_var)
+    want = ref.pfp_dense_first(x, w_mu, w_var)
+    _close(got[0], want[0])
+    _close(got[1], want[1], atol=5e-4)
+
+
+def test_dense_bias_paths():
+    rng = np.random.default_rng(1)
+    x_mu, x_var = _gauss_pair(rng, (4, 16))
+    x_e2 = x_mu * x_mu + x_var
+    w_mu, w_var = _gauss_pair(rng, (8, 16), scale=0.3, var_scale=0.05)
+    w_e2 = w_mu * w_mu + w_var
+    b_mu = jnp.asarray(rng.normal(size=8).astype(np.float32))
+    b_var = jnp.asarray(np.abs(rng.normal(size=8)).astype(np.float32))
+    got = kernels.pfp_dense_joint(x_mu, x_e2, w_mu, w_e2, b_mu, b_var)
+    want = ref.pfp_dense_joint(x_mu, x_e2, w_mu, w_e2, b_mu, b_var)
+    _close(got[0], want[0])
+    _close(got[1], want[1])
+
+
+def test_dense_variance_nonnegative():
+    rng = np.random.default_rng(2)
+    x_mu, x_var = _gauss_pair(rng, (16, 32))
+    x_e2 = x_mu * x_mu + x_var
+    w_mu, w_var = _gauss_pair(rng, (16, 32))
+    w_e2 = w_mu * w_mu + w_var
+    _, var = kernels.pfp_dense_joint(x_mu, x_e2, w_mu, w_e2)
+    assert np.all(np.asarray(var) >= 0.0)
+
+
+def test_dense_zero_variance_is_deterministic():
+    """With zero weight + activation variance, PFP == plain matmul."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(5, 20)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(7, 20)).astype(np.float32))
+    mu, var = kernels.pfp_dense_joint(x, x * x, w, w * w)
+    _close(mu, x @ w.T)
+    assert np.all(np.asarray(var) <= 1e-3)
+
+
+# --------------------------------------------------------------------------
+# ReLU moment matching
+# --------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 16), n=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(0.1, 5.0),
+)
+def test_relu_matches_ref(m, n, seed, scale):
+    rng = np.random.default_rng(seed)
+    mu, var = _gauss_pair(rng, (m, n), scale=scale, var_scale=scale)
+    got = kernels.pfp_relu(mu, var)
+    want = ref.pfp_relu(mu, var)
+    _close(got[0], want[0])
+    _close(got[1], want[1])
+
+
+def test_relu_against_monte_carlo():
+    """Eqs. 8/9 against simulated Gaussian ReLU moments."""
+    mu = jnp.asarray(np.array([-2.0, -0.5, 0.0, 0.7, 3.0], np.float32))
+    var = jnp.asarray(np.array([0.5, 1.0, 2.0, 0.3, 1.5], np.float32))
+    m_ref, e2_ref = ref.relu_mc(mu, var, jax.random.PRNGKey(0), n=400000)
+    m, e2 = kernels.pfp_relu(mu, var)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(m_ref), atol=2e-2)
+    np.testing.assert_allclose(np.asarray(e2), np.asarray(e2_ref), atol=6e-2)
+
+
+def test_relu_raw_moment_dominates_mean_sq():
+    """E[x^2] >= E[x]^2 (Jensen) must hold elementwise."""
+    rng = np.random.default_rng(7)
+    mu, var = _gauss_pair(rng, (8, 32), scale=3.0, var_scale=2.0)
+    m, e2 = kernels.pfp_relu(mu, var)
+    assert np.all(np.asarray(e2) - np.asarray(m) ** 2 >= -1e-4)
+
+
+def test_relu_deterministic_limit():
+    """var -> 0: moment-matched ReLU -> max(0, mu)."""
+    mu = jnp.asarray(np.linspace(-3, 3, 25, dtype=np.float32).reshape(5, 5))
+    var = jnp.full((5, 5), 1e-10, jnp.float32)
+    m, e2 = kernels.pfp_relu(mu, var)
+    want = np.maximum(np.asarray(mu), 0.0)
+    np.testing.assert_allclose(np.asarray(m), want, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(e2), want * want, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# max-pool
+# --------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 4), c=st.integers(1, 8),
+    h2=st.integers(1, 7), w2=st.integers(1, 7),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_maxpool_matches_ref(n, c, h2, w2, seed):
+    rng = np.random.default_rng(seed)
+    mu, var = _gauss_pair(rng, (n, c, 2 * h2, 2 * w2))
+    got = kernels.pfp_maxpool2(mu, var)
+    want = ref.pfp_maxpool2(mu, var)
+    _close(got[0], want[0])
+    _close(got[1], want[1])
+
+
+def test_maxpool_generic_close_to_vectorized():
+    """Table 3's two implementations approximate the same max. They are NOT
+    bitwise equal: Gaussian moment matching is not associative, and the
+    generic reduction folds sequentially while the vectorized k=2 pool uses
+    a balanced tree. Both must stay close to each other (and both are
+    validated against Monte-Carlo elsewhere)."""
+    rng = np.random.default_rng(11)
+    mu, var = _gauss_pair(rng, (2, 6, 12, 12))
+    a = ref.pfp_maxpool_generic(mu, var, k=2, stride=2)
+    b = ref.pfp_maxpool2(mu, var)
+    assert float(jnp.mean(jnp.abs(a[0] - b[0]))) < 0.05
+    assert float(jnp.mean(jnp.abs(a[1] - b[1]))) < 0.10
+
+
+def test_gaussian_max_monte_carlo():
+    rng = np.random.default_rng(5)
+    mu1, mu2 = 0.3, -0.2
+    v1, v2 = 0.8, 1.4
+    m, v = ref.gaussian_max(jnp.float32(mu1), jnp.float32(v1),
+                            jnp.float32(mu2), jnp.float32(v2))
+    s = np.maximum(rng.normal(mu1, np.sqrt(v1), 500000),
+                   rng.normal(mu2, np.sqrt(v2), 500000))
+    assert abs(float(m) - s.mean()) < 5e-3
+    assert abs(float(v) - s.var()) < 2e-2
+
+
+def test_maxpool_deterministic_limit():
+    """var -> 0: Gaussian max-pool -> ordinary max-pool."""
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(2, 3, 8, 8)).astype(np.float32))
+    var = jnp.full(x.shape, 1e-10, jnp.float32)
+    m, v = kernels.pfp_maxpool2(x, var)
+    _close(m, ref.det_maxpool2(x), atol=1e-3)
+
+
+# --------------------------------------------------------------------------
+# conv2d
+# --------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 3), ci=st.integers(1, 4), co=st.integers(1, 8),
+    hw=st.integers(6, 16), k=st.sampled_from([3, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_matches_ref(n, ci, co, hw, k, seed):
+    rng = np.random.default_rng(seed)
+    x_mu, x_var = _gauss_pair(rng, (n, ci, hw, hw))
+    x_e2 = x_mu * x_mu + x_var
+    w_mu, w_var = _gauss_pair(rng, (co, ci, k, k), scale=0.2, var_scale=0.02)
+    w_e2 = w_mu * w_mu + w_var
+    got = kernels.pfp_conv2d_joint(x_mu, x_e2, w_mu, w_e2)
+    want = ref.pfp_conv2d_joint(x_mu, x_e2, w_mu, w_e2)
+    _close(got[0], want[0], atol=5e-4, rtol=5e-4)
+    _close(got[1], want[1], atol=1e-3, rtol=1e-3)
+
+
+def test_conv_first_layer():
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.uniform(size=(2, 1, 28, 28)).astype(np.float32))
+    w_mu, w_var = _gauss_pair(rng, (6, 1, 5, 5), scale=0.2, var_scale=0.02)
+    got = kernels.pfp_conv2d_first(x, w_mu, w_var)
+    want = ref.pfp_conv2d_first(x, w_mu, w_var)
+    _close(got[0], want[0], atol=5e-4, rtol=5e-4)
+    _close(got[1], want[1], atol=1e-3, rtol=1e-3)
+
+
+def test_conv_vs_dense_equivalence():
+    """1x1 image, kxk VALID conv == dense over the flattened patch."""
+    rng = np.random.default_rng(9)
+    x_mu, x_var = _gauss_pair(rng, (3, 2, 5, 5))
+    x_e2 = x_mu * x_mu + x_var
+    w_mu, w_var = _gauss_pair(rng, (4, 2, 5, 5), scale=0.3, var_scale=0.03)
+    w_e2 = w_mu * w_mu + w_var
+    c_mu, c_var = ref.pfp_conv2d_joint(x_mu, x_e2, w_mu, w_e2)
+    d_mu, d_var = ref.pfp_dense_joint(
+        x_mu.reshape(3, -1), x_e2.reshape(3, -1),
+        w_mu.reshape(4, -1), w_e2.reshape(4, -1),
+    )
+    _close(c_mu[:, :, 0, 0], d_mu)
+    _close(c_var[:, :, 0, 0], d_var)

@@ -1,0 +1,82 @@
+"""Training pipeline smoke tests: ELBO pieces, Adam, and a tiny end-to-end
+SVI run that must learn the synthetic task."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import metrics as M
+from compile import model as model_mod
+from compile import train as T
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_gaussian_kl_zero_at_prior():
+    mu = jnp.zeros(10)
+    sigma = jnp.full(10, T.PRIOR_SIGMA)
+    assert abs(float(T.gaussian_kl(mu, sigma, T.PRIOR_SIGMA))) < 1e-6
+
+
+def test_gaussian_kl_positive():
+    rng = np.random.default_rng(0)
+    mu = jnp.asarray(rng.normal(size=20).astype(np.float32))
+    sigma = jnp.asarray(np.abs(rng.normal(size=20)).astype(np.float32) + 0.01)
+    assert float(T.gaussian_kl(mu, sigma, T.PRIOR_SIGMA)) > 0.0
+
+
+def test_cross_entropy_matches_manual():
+    logits = jnp.asarray([[2.0, 0.0, -1.0]])
+    labels = jnp.asarray([0])
+    p = np.exp(2.0) / (np.exp(2.0) + 1.0 + np.exp(-1.0))
+    assert abs(float(T.cross_entropy(logits, labels)) + np.log(p)) < 1e-5
+
+
+def test_adam_reduces_quadratic():
+    params = {"x": jnp.asarray(5.0)}
+    state = T.adam_init(params)
+    for _ in range(300):
+        grads = {"x": 2.0 * params["x"]}
+        params, state = T.adam_update(grads, state, params, lr=0.05)
+    assert abs(float(params["x"])) < 0.1
+
+
+@pytest.fixture(scope="module")
+def tiny_run():
+    data = D.make_dirty_mnist(n_train_clean=600, n_train_amb=200, n_test=120)
+    params, log = T.train_arch("mlp", data, epochs=6, seed=1)
+    return data, params, log
+
+
+def test_loss_decreases(tiny_run):
+    _, _, log = tiny_run
+    assert log[-1]["nll"] < log[0]["nll"] * 0.6
+
+
+def test_learns_task(tiny_run):
+    data, params, _ = tiny_run
+    params_sig = model_mod.params_sigma(params)
+    probs = T.svi_predict_probs("mlp", params_sig, data["test_mnist_x"], 8)
+    acc = M.accuracy(probs.mean(axis=0), data["test_mnist_y"])
+    assert acc > 0.8, f"accuracy {acc}"
+
+
+def test_ood_detectable(tiny_run):
+    data, params, _ = tiny_run
+    res = T.evaluate_arch("mlp", params, data)
+    assert res["pfp"]["auroc_mi"] > 0.6
+    assert res["svi"]["auroc_mi"] > 0.6
+    # PFP approximates SVI (paper Table 1: the two stay close)
+    assert abs(res["pfp"]["accuracy_mnist"] - res["svi"]["accuracy_mnist"]) < 0.05
+
+
+def test_kl_annealing_schedule():
+    """A(e) rises linearly to ALPHA_MAX across epochs (Eq. 10)."""
+    n = 1000
+    epochs = 10
+    scales = [T.ALPHA_MAX * (e / (epochs - 1)) for e in range(epochs)]
+    assert scales[0] == 0.0
+    assert abs(scales[-1] - T.ALPHA_MAX) < 1e-9
+    assert all(b >= a for a, b in zip(scales, scales[1:]))

@@ -1,0 +1,108 @@
+//! Ablation bench for the design choices DESIGN.md calls out (not a paper
+//! exhibit — supporting evidence for this repo's implementation choices):
+//!
+//! 1. conv lowering: im2col -> scheduled joint dense vs direct 7-loop conv;
+//! 2. first-layer specialisation: Eq. 13 kernel vs generic Eq. 12 kernel
+//!    fed `x_e2 = x^2, w_e2 = mu^2 + var` (mathematically identical);
+//! 3. representation precompute: storing `E[w^2]` once vs converting
+//!    per-forward (the paper's "weights stored as second raw moments");
+//! 4. pool tree vs sequential fold association (accuracy-neutral cost).
+
+use pfp::ops::conv::{pfp_conv2d_direct, pfp_conv2d_joint, ConvArgs};
+use pfp::ops::dense::{pfp_dense_first, pfp_dense_joint, DenseArgs};
+use pfp::ops::maxpool::{pfp_maxpool2_vectorized, pfp_maxpool_generic};
+use pfp::ops::Schedule;
+use pfp::tensor::{ProbTensor, Rep, Tensor};
+use pfp::util::bench::{bench, black_box, report, BenchOpts};
+use pfp::util::prop::Gen;
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let sched = Schedule::tuned(1);
+    let mut g = Gen::new(21);
+    let mut results = Vec::new();
+
+    // ---- 1. conv lowering (LeNet conv2 shape, batch 10) ------------------
+    let (n, ci, co, hw, k) = (10usize, 6usize, 16usize, 12usize, 5usize);
+    let x_mu = Tensor::new(vec![n, ci, hw, hw], g.normal_vec(n * ci * hw * hw, 1.0)).unwrap();
+    let x_var = Tensor::new(vec![n, ci, hw, hw], g.var_vec(n * ci * hw * hw, 0.5)).unwrap();
+    let x_e2 = x_mu.zip(&x_var, |m, v| m * m + v).unwrap();
+    let x = ProbTensor::new(x_mu.clone(), x_e2, Rep::E2);
+    let w_mu = Tensor::new(vec![co, ci, k, k], g.normal_vec(co * ci * k * k, 0.2)).unwrap();
+    let w_var = Tensor::new(vec![co, ci, k, k], g.var_vec(co * ci * k * k, 0.02)).unwrap();
+    let w_e2 = w_mu.zip(&w_var, |m, v| m * m + v).unwrap();
+    let cargs = ConvArgs { w_mu: &w_mu, w_aux: &w_e2, b_mu: None, b_var: None };
+    results.push(bench("conv2: im2col + scheduled dense", opts, || {
+        black_box(pfp_conv2d_joint(&x, &cargs, &sched));
+    }));
+    results.push(bench("conv2: direct 7-loop", opts, || {
+        black_box(pfp_conv2d_direct(&x, &cargs));
+    }));
+
+    // ---- 2. first-layer specialisation (MLP dense1, batch 10) ------------
+    let (m, kk, nn) = (10usize, 784usize, 100usize);
+    let xd = Tensor::new(vec![m, kk], g.normal_vec(m * kk, 1.0)).unwrap();
+    let xd_sq = xd.squared();
+    let wm = Tensor::new(vec![nn, kk], g.normal_vec(nn * kk, 0.2)).unwrap();
+    let wv = Tensor::new(vec![nn, kk], g.var_vec(nn * kk, 0.02)).unwrap();
+    let we = wm.zip(&wv, |a, b| a * a + b).unwrap();
+    results.push(bench("first layer: Eq.13 specialised", opts, || {
+        black_box(pfp_dense_first(
+            &DenseArgs {
+                x_mu: &xd, x_aux: &xd_sq, w_mu: &wm, w_aux: &wv,
+                b_mu: None, b_var: None,
+            },
+            &sched,
+        ));
+    }));
+    results.push(bench("first layer: generic Eq.12", opts, || {
+        black_box(pfp_dense_joint(
+            &DenseArgs {
+                x_mu: &xd, x_aux: &xd_sq, w_mu: &wm, w_aux: &we,
+                b_mu: None, b_var: None,
+            },
+            &sched,
+        ));
+    }));
+
+    // ---- 3. E[w^2] precompute vs per-forward conversion -------------------
+    results.push(bench("weights: E[w^2] precomputed", opts, || {
+        black_box(pfp_dense_joint(
+            &DenseArgs {
+                x_mu: &xd, x_aux: &xd_sq, w_mu: &wm, w_aux: &we,
+                b_mu: None, b_var: None,
+            },
+            &sched,
+        ));
+    }));
+    results.push(bench("weights: E[w^2] converted per call", opts, || {
+        let we_fresh = wm.zip(&wv, |a, b| a * a + b).unwrap();
+        black_box(pfp_dense_joint(
+            &DenseArgs {
+                x_mu: &xd, x_aux: &xd_sq, w_mu: &wm, w_aux: &we_fresh,
+                b_mu: None, b_var: None,
+            },
+            &sched,
+        ));
+    }));
+
+    // ---- 4. pool association order ---------------------------------------
+    let pm = Tensor::new(vec![10, 6, 24, 24], g.normal_vec(10 * 6 * 24 * 24, 1.0)).unwrap();
+    let pv = Tensor::new(vec![10, 6, 24, 24], g.var_vec(10 * 6 * 24 * 24, 0.5)).unwrap();
+    let pool_in = ProbTensor::new(pm, pv, Rep::Var);
+    results.push(bench("pool: balanced tree (vectorized)", opts, || {
+        black_box(pfp_maxpool2_vectorized(&pool_in));
+    }));
+    results.push(bench("pool: sequential fold (generic)", opts, || {
+        black_box(pfp_maxpool_generic(&pool_in, 2, 2));
+    }));
+
+    report("Ablations — implementation design choices", &results);
+    for pair in results.chunks(2) {
+        println!(
+            "  {:<38} vs alternative: {:.2}x",
+            pair[0].name,
+            pair[1].median_s / pair[0].median_s
+        );
+    }
+}

@@ -1,0 +1,75 @@
+//! Fig. 5 — operator implementation comparison for the PFP dense layer:
+//! the Eq. 5 -> Eq. 12 reformulation and separate vs joint mean/variance
+//! operators, on the paper's layer shapes (MLP Dense 1/2/3 at batch 10).
+//!
+//! Expected shape (paper): joint beats separate everywhere; the Eq. 12
+//! raw-moment form beats the Eq. 5 original form; joint+Eq.12 is best.
+
+use pfp::ops::dense::{
+    pfp_dense_joint, pfp_dense_joint_eq5, pfp_dense_separate, DenseArgs,
+};
+use pfp::ops::Schedule;
+use pfp::tensor::Tensor;
+use pfp::util::bench::{bench, black_box, report, BenchOpts};
+use pfp::util::prop::Gen;
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let sched = Schedule::tuned(1);
+    let mut results = Vec::new();
+    let mut g = Gen::new(42);
+
+    // (label, M, K, N) — MLP layers at batch 10 + a LeNet conv-as-matmul
+    let shapes = [
+        ("dense1 10x784x100", 10usize, 784usize, 100usize),
+        ("dense2 10x100x100", 10, 100, 100),
+        ("dense3 10x100x10", 10, 100, 10),
+        ("conv2-im2col 640x150x16", 640, 150, 16),
+    ];
+
+    for (label, m, k, n) in shapes {
+        let x_mu = Tensor::new(vec![m, k], g.normal_vec(m * k, 1.0)).unwrap();
+        let x_var = Tensor::new(vec![m, k], g.var_vec(m * k, 0.5)).unwrap();
+        let x_e2 = x_mu.zip(&x_var, |a, b| a * a + b).unwrap();
+        let w_mu = Tensor::new(vec![n, k], g.normal_vec(n * k, 0.2)).unwrap();
+        let w_var = Tensor::new(vec![n, k], g.var_vec(n * k, 0.02)).unwrap();
+        let w_e2 = w_mu.zip(&w_var, |a, b| a * a + b).unwrap();
+
+        let raw = DenseArgs {
+            x_mu: &x_mu, x_aux: &x_e2, w_mu: &w_mu, w_aux: &w_e2,
+            b_mu: None, b_var: None,
+        };
+        let eq5 = DenseArgs {
+            x_mu: &x_mu, x_aux: &x_e2, w_mu: &w_mu, w_aux: &w_var,
+            b_mu: None, b_var: None,
+        };
+
+        results.push(bench(&format!("{label} / joint eq12"), opts, || {
+            black_box(pfp_dense_joint(&raw, &sched));
+        }));
+        results.push(bench(&format!("{label} / joint eq5"), opts, || {
+            black_box(pfp_dense_joint_eq5(&eq5, &sched));
+        }));
+        results.push(bench(&format!("{label} / separate eq12"), opts, || {
+            black_box(pfp_dense_separate(&raw, &sched, false));
+        }));
+        results.push(bench(&format!("{label} / separate eq5"), opts, || {
+            black_box(pfp_dense_separate(&eq5, &sched, true));
+        }));
+    }
+
+    report("Fig. 5 — PFP dense: joint vs separate x Eq.12 vs Eq.5", &results);
+
+    // summary speedups per shape
+    println!("\nspeedup of joint+eq12 over each variant:");
+    for chunk in results.chunks(4) {
+        let base = chunk[0].median_s;
+        println!(
+            "{:<28} eq5 {:.2}x | sep-eq12 {:.2}x | sep-eq5 {:.2}x",
+            chunk[0].name.split('/').next().unwrap(),
+            chunk[1].median_s / base,
+            chunk[2].median_s / base,
+            chunk[3].median_s / base
+        );
+    }
+}

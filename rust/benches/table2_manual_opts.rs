@@ -1,0 +1,69 @@
+//! Table 2 — manual optimization techniques for the PFP dense operator,
+//! on the paper's workload: 3-layer MLP Dense 1 (10x784x100).
+//!
+//! Rows mirror the paper: each knob alone on the untuned baseline, each
+//! knob *removed* from the otherwise-fully-tuned schedule, tiling alone,
+//! and all-opts. Expected shape: loop reordering / unrolling / parallel
+//! help alone; vectorization alone *hurts* (strided lanes in the naive
+//! order); the all-on-except-tiling schedule is best.
+//! (Single hardware core here: the parallel rows measure scheduling
+//! overhead, not speedup — EXPERIMENTS.md reports this explicitly.)
+
+use pfp::ops::dense::{pfp_dense_joint, DenseArgs};
+use pfp::ops::{LoopOrder, Schedule};
+use pfp::tensor::Tensor;
+use pfp::util::bench::{bench, black_box, report, BenchOpts};
+use pfp::util::prop::Gen;
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let threads = pfp::util::threadpool::default_threads().max(2);
+    let (m, k, n) = (10usize, 784usize, 100usize);
+    let mut g = Gen::new(7);
+    let x_mu = Tensor::new(vec![m, k], g.normal_vec(m * k, 1.0)).unwrap();
+    let x_e2 = x_mu.squared();
+    let w_mu = Tensor::new(vec![n, k], g.normal_vec(n * k, 0.2)).unwrap();
+    let w_e2 = w_mu.squared();
+    let args = DenseArgs {
+        x_mu: &x_mu, x_aux: &x_e2, w_mu: &w_mu, w_aux: &w_e2,
+        b_mu: None, b_var: None,
+    };
+
+    let baseline = Schedule::baseline();
+    let tuned = Schedule::tuned(1); // all opts except tiling, single knob off below
+
+    let cases: Vec<(&str, Schedule)> = vec![
+        ("baseline (no tuning)", baseline),
+        // --- single knob ON over the baseline (paper "Other Opt. OFF")
+        ("tiling alone (16x64)", Schedule::tiled(16, 64)),
+        ("reorder alone (Mnk)", baseline.with_order(LoopOrder::Mnk)),
+        ("vectorize alone", baseline.with_vectorize(true)),
+        (
+            "parallel alone",
+            baseline.with_threads(threads),
+        ),
+        ("unroll alone (x8)", baseline.with_unroll(8)),
+        // --- single knob OFF from tuned (paper "Other Opt. ON")
+        ("tuned minus reorder", tuned.with_order(LoopOrder::Mkn)),
+        ("tuned minus vectorize", tuned.with_vectorize(false)),
+        ("tuned minus unroll", tuned.with_unroll(1)),
+        ("tuned + tiling (no stoch.)", tuned.with_tiles(16, 64)),
+        // --- all optimizations
+        ("all opts (tuned, 1 thread)", tuned),
+        ("all opts + parallel", Schedule::tuned(threads)),
+    ];
+
+    let mut results = Vec::new();
+    for (label, sched) in &cases {
+        results.push(bench(label, opts, || {
+            black_box(pfp_dense_joint(&args, sched));
+        }));
+    }
+    report("Table 2 — manual optimizations, PFP dense (MLP Dense 1, batch 10)", &results);
+
+    let base_ms = results[0].median_s;
+    println!("\nspeedup vs untuned baseline:");
+    for r in &results {
+        println!("  {:<28} {:>6.2}x", r.name, base_ms / r.median_s);
+    }
+}

@@ -1,0 +1,220 @@
+//! Dynamic batcher: coalesce single-image requests into mini-batches.
+//!
+//! The paper tunes PFP per mini-batch size and shows (Fig. 7) that PFP
+//! latency is nearly batch-size independent while SVI scales terribly at
+//! small batches — dynamic batching is how a server exploits that: wait at
+//! most `max_wait` for up to `max_batch` requests, then run one forward
+//! pass for the whole group.
+//!
+//! Backpressure: the queue is bounded (`capacity`); when full, requests
+//! are rejected immediately (the caller sees an error response rather than
+//! unbounded latency).
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::protocol::Response;
+
+/// A queued unit of work: one request row + its response channel.
+pub struct WorkItem {
+    pub id: u64,
+    pub input: Vec<f32>,
+    pub enqueued: Instant,
+    pub reply: Sender<Response>,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub capacity: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 10,
+            max_wait: Duration::from_millis(2),
+            capacity: 1024,
+        }
+    }
+}
+
+struct Inner {
+    queue: VecDeque<WorkItem>,
+    closed: bool,
+}
+
+/// Bounded, condvar-signalled batching queue.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    inner: Mutex<Inner>,
+    signal: Condvar,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Self {
+            cfg,
+            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+            signal: Condvar::new(),
+        }
+    }
+
+    pub fn config(&self) -> BatcherConfig {
+        self.cfg
+    }
+
+    /// Enqueue; `Err(item)` = queue full (backpressure) or closed.
+    pub fn push(&self, item: WorkItem) -> Result<(), WorkItem> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed || inner.queue.len() >= self.cfg.capacity {
+            return Err(item);
+        }
+        inner.queue.push_back(item);
+        drop(inner);
+        self.signal.notify_one();
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Blocking collect of the next batch: waits for the first item, then
+    /// up to `max_wait` (since the first arrival) for more, capped at
+    /// `max_batch`. Returns `None` when closed and drained.
+    pub fn next_batch(&self) -> Option<Vec<WorkItem>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if !inner.queue.is_empty() {
+                break;
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.signal.wait(inner).unwrap();
+        }
+        // first arrival defines the deadline
+        let deadline = inner.queue.front().unwrap().enqueued + self.cfg.max_wait;
+        while inner.queue.len() < self.cfg.max_batch && !inner.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (next, timeout) = self
+                .signal
+                .wait_timeout(inner, deadline - now)
+                .unwrap();
+            inner = next;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let take = inner.queue.len().min(self.cfg.max_batch);
+        Some(inner.queue.drain(..take).collect())
+    }
+
+    /// Close the queue; wakes all waiters. Remaining items are still
+    /// drained by `next_batch` until empty.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.signal.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+
+    fn item(id: u64) -> (WorkItem, std::sync::mpsc::Receiver<Response>) {
+        let (tx, rx) = channel();
+        (
+            WorkItem { id, input: vec![0.0; 4], enqueued: Instant::now(), reply: tx },
+            rx,
+        )
+    }
+
+    #[test]
+    fn batches_up_to_max() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 3,
+            max_wait: Duration::from_millis(20),
+            capacity: 16,
+        });
+        let mut rxs = Vec::new();
+        for i in 0..5 {
+            let (it, rx) = item(i);
+            b.push(it).map_err(|_| ()).unwrap();
+            rxs.push(rx);
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch[0].id, 0);
+        let batch2 = b.next_batch().unwrap();
+        assert_eq!(batch2.len(), 2);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let b = Arc::new(Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(10),
+            capacity: 16,
+        }));
+        let (it, _rx) = item(1);
+        b.push(it).map_err(|_| ()).unwrap();
+        let t = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+            capacity: 2,
+        });
+        let (i1, _r1) = item(1);
+        let (i2, _r2) = item(2);
+        let (i3, _r3) = item(3);
+        assert!(b.push(i1).is_ok());
+        assert!(b.push(i2).is_ok());
+        assert!(b.push(i3).is_err());
+    }
+
+    #[test]
+    fn close_unblocks_consumer() {
+        let b = Arc::new(Batcher::new(BatcherConfig::default()));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(20));
+        b.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn drains_after_close() {
+        let b = Batcher::new(BatcherConfig::default());
+        let (it, _rx) = item(7);
+        b.push(it).map_err(|_| ()).unwrap();
+        b.close();
+        // queued item still delivered
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(b.next_batch().is_none());
+        // no new pushes accepted
+        let (it2, _rx2) = item(8);
+        assert!(b.push(it2).is_err());
+    }
+}

@@ -1,0 +1,99 @@
+//! Serving metrics: counters + latency histogram, queryable in-band via
+//! `{"cmd":"metrics"}`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub rejected: AtomicU64,
+    pub ood_flagged: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_items: AtomicU64,
+    latencies_us: Mutex<Vec<f64>>, // end-to-end per request
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_latency_us(&self, us: f64) {
+        let mut l = self.latencies_us.lock().unwrap();
+        // bounded reservoir: keep the most recent 100k
+        if l.len() >= 100_000 {
+            l.drain(..50_000);
+        }
+        l.push(us);
+    }
+
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Mean batch occupancy (items per executed batch).
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_items.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let l = self.latencies_us.lock().unwrap();
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
+            ("responses", Json::Num(self.responses.load(Ordering::Relaxed) as f64)),
+            ("rejected", Json::Num(self.rejected.load(Ordering::Relaxed) as f64)),
+            ("ood_flagged", Json::Num(self.ood_flagged.load(Ordering::Relaxed) as f64)),
+            ("batches", Json::Num(self.batches.load(Ordering::Relaxed) as f64)),
+            ("mean_batch_size", Json::Num(self.mean_batch_size())),
+            ("latency_p50_us", Json::Num(stats::percentile(&l, 50.0))),
+            ("latency_p95_us", Json::Num(stats::percentile(&l, 95.0))),
+            ("latency_p99_us", Json::Num(stats::percentile(&l, 99.0))),
+            ("latency_mean_us", Json::Num(stats::mean(&l))),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_histogram() {
+        let m = Metrics::new();
+        Metrics::inc(&m.requests);
+        Metrics::inc(&m.requests);
+        Metrics::add(&m.batched_items, 8);
+        Metrics::inc(&m.batches);
+        for us in [100.0, 200.0, 300.0] {
+            m.record_latency_us(us);
+        }
+        let snap = m.snapshot();
+        assert_eq!(snap.num_field("requests").unwrap(), 2.0);
+        assert_eq!(snap.num_field("mean_batch_size").unwrap(), 8.0);
+        assert_eq!(snap.num_field("latency_p50_us").unwrap(), 200.0);
+    }
+
+    #[test]
+    fn reservoir_bounded() {
+        let m = Metrics::new();
+        for i in 0..120_000 {
+            m.record_latency_us(i as f64);
+        }
+        // must not grow unboundedly
+        assert!(m.latencies_us.lock().unwrap().len() <= 100_000);
+    }
+}

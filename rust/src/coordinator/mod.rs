@@ -1,0 +1,263 @@
+//! L3 coordinator: uncertainty-aware inference serving.
+//!
+//! The paper's deployment target is a low-latency embedded predictor; the
+//! serving shape this repo gives it is a small inference server in the
+//! vLLM-router mold:
+//!
+//! * [`protocol`] — line-delimited JSON wire format;
+//! * [`batcher`] — per-model dynamic batching with a deadline (requests
+//!   are coalesced up to `max_batch` or `max_wait`, mirroring the paper's
+//!   per-mini-batch-size tuning: each bucket size maps to an executable
+//!   tuned/compiled for that batch);
+//! * [`metrics`] — latency histograms + counters, queryable in-band;
+//! * [`server`] — std::net TCP front end, one thread per connection,
+//!   worker thread per model;
+//! * backends — native PFP operators or PJRT-compiled AOT artifacts, plus
+//!   an SVI backend (N sampled passes) for baseline comparisons.
+//!
+//! Uncertainty post-processing happens here, after the single
+//! probabilistic forward pass: Eq. 11 logit sampling, entropy / SME / MI,
+//! and OOD flagging against a calibrated MI threshold.
+
+pub mod batcher;
+pub mod metrics;
+pub mod protocol;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::Metrics;
+pub use protocol::{Request, Response};
+pub use server::{Server, ServerConfig, Service};
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::model::{Arch, PfpExecutor, PosteriorWeights, Schedules, SviExecutor};
+use crate::runtime::{Engine, LoadedModel};
+use crate::tensor::Tensor;
+use crate::uncertainty;
+
+/// An inference backend: batch of flattened inputs -> logit moments.
+pub trait Backend: Send {
+    /// `x: [B, features]` -> (mu `[B, K]`, var `[B, K]`).
+    fn infer(&mut self, x: &Tensor) -> Result<(Tensor, Tensor)>;
+    fn name(&self) -> String;
+}
+
+/// Native-operator PFP backend.
+pub struct NativePfpBackend {
+    exec: PfpExecutor,
+}
+
+impl NativePfpBackend {
+    pub fn new(arch: Arch, weights: PosteriorWeights, schedules: Schedules) -> Self {
+        Self { exec: PfpExecutor::new(arch, weights, schedules) }
+    }
+}
+
+impl Backend for NativePfpBackend {
+    fn infer(&mut self, x: &Tensor) -> Result<(Tensor, Tensor)> {
+        Ok(self.exec.forward(x))
+    }
+
+    fn name(&self) -> String {
+        format!("native-pfp/{}", self.exec.arch.name)
+    }
+}
+
+/// SVI baseline backend: N sampled deterministic passes, moments from the
+/// empirical logit distribution.
+pub struct SviBackend {
+    exec: SviExecutor,
+    pub n_samples: usize,
+}
+
+impl SviBackend {
+    pub fn new(
+        arch: Arch,
+        weights: PosteriorWeights,
+        schedules: Schedules,
+        n_samples: usize,
+        seed: u64,
+    ) -> Self {
+        Self { exec: SviExecutor::new(arch, weights, schedules, seed), n_samples }
+    }
+}
+
+impl Backend for SviBackend {
+    fn infer(&mut self, x: &Tensor) -> Result<(Tensor, Tensor)> {
+        let samples = self.exec.forward_n(x, self.n_samples);
+        let n = samples[0].len();
+        let shape = samples[0].shape().to_vec();
+        let mut mu = vec![0.0f32; n];
+        let mut e2 = vec![0.0f32; n];
+        for s in &samples {
+            for i in 0..n {
+                let v = s.data()[i];
+                mu[i] += v / self.n_samples as f32;
+                e2[i] += v * v / self.n_samples as f32;
+            }
+        }
+        let var: Vec<f32> = mu
+            .iter()
+            .zip(&e2)
+            .map(|(m, e)| (e - m * m).max(0.0))
+            .collect();
+        Ok((
+            Tensor::new(shape.clone(), mu)?,
+            Tensor::new(shape, var)?,
+        ))
+    }
+
+    fn name(&self) -> String {
+        format!("svi-{}/{}", self.n_samples, self.exec.arch.name)
+    }
+}
+
+/// PJRT backend over AOT artifacts: picks the smallest compiled batch
+/// bucket that fits, padding the batch dimension (the paper compiles one
+/// tuned executable per mini-batch size).
+pub struct XlaPfpBackend {
+    models: Vec<Arc<LoadedModel>>, // sorted by batch asc
+    arch: String,
+}
+
+impl XlaPfpBackend {
+    pub fn new(engine: &Engine, arch: &str, weights: &PosteriorWeights) -> Result<Self> {
+        let entries = engine.manifest.entries_for(arch, "pfp");
+        if entries.is_empty() {
+            return Err(Error::Manifest(format!("no pfp artifacts for {arch}")));
+        }
+        let names: Vec<String> = entries.iter().map(|e| e.name.clone()).collect();
+        let mut models = Vec::new();
+        for name in names {
+            models.push(engine.load(&name, weights)?);
+        }
+        Ok(Self { models, arch: arch.to_string() })
+    }
+
+    fn pick(&self, batch: usize) -> &Arc<LoadedModel> {
+        self.models
+            .iter()
+            .find(|m| m.batch() >= batch)
+            .unwrap_or_else(|| self.models.last().unwrap())
+    }
+}
+
+impl Backend for XlaPfpBackend {
+    fn infer(&mut self, x: &Tensor) -> Result<(Tensor, Tensor)> {
+        let batch = x.dim(0);
+        let model = self.pick(batch).clone();
+        let bucket = model.batch();
+        if batch > bucket {
+            // split oversized batches across bucket-sized calls
+            let feat = x.len() / batch;
+            let mut mu_all = Vec::with_capacity(batch * 10);
+            let mut var_all = Vec::with_capacity(batch * 10);
+            let mut done = 0;
+            while done < batch {
+                let take = bucket.min(batch - done);
+                let mut chunk = x.data()[done * feat..(done + take) * feat].to_vec();
+                chunk.resize(bucket * feat, 0.0);
+                let outs = model.execute(&Tensor::new(vec![bucket, feat], chunk)?)?;
+                let k = outs[0].cols();
+                mu_all.extend_from_slice(&outs[0].data()[..take * k]);
+                var_all.extend_from_slice(&outs[1].data()[..take * k]);
+                done += take;
+            }
+            let k = mu_all.len() / batch;
+            return Ok((
+                Tensor::new(vec![batch, k], mu_all)?,
+                Tensor::new(vec![batch, k], var_all)?,
+            ));
+        }
+        // pad up to the bucket
+        let feat = x.len() / batch;
+        let mut padded = x.data().to_vec();
+        padded.resize(bucket * feat, 0.0);
+        let outs = model.execute(&Tensor::new(vec![bucket, feat], padded)?)?;
+        let k = outs[0].cols();
+        Ok((
+            Tensor::new(vec![batch, k], outs[0].data()[..batch * k].to_vec())?,
+            Tensor::new(vec![batch, k], outs[1].data()[..batch * k].to_vec())?,
+        ))
+    }
+
+    fn name(&self) -> String {
+        format!("xla-pfp/{}", self.arch)
+    }
+}
+
+/// Post-process logit moments into a wire response payload.
+pub fn postprocess(
+    mu: &Tensor,
+    var: &Tensor,
+    samples: usize,
+    ood_threshold: f64,
+    seed: u64,
+) -> Vec<protocol::Prediction> {
+    let u = uncertainty::pfp_uncertainty(mu, var, samples, seed);
+    let k = mu.cols();
+    (0..mu.rows())
+        .map(|i| {
+            let row = &u.mean_p[i * k..(i + 1) * k];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            protocol::Prediction {
+                pred: pred as i32,
+                mu: mu.row(i).to_vec(),
+                var: var.row(i).to_vec(),
+                total: u.total[i],
+                sme: u.sme[i],
+                mi: u.mi[i],
+                ood: u.mi[i] > ood_threshold,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Arch;
+
+    #[test]
+    fn native_backend_shapes() {
+        let arch = Arch::mlp();
+        let w = PosteriorWeights::synthetic(&arch, 1);
+        let mut b = NativePfpBackend::new(arch, w, Schedules::default());
+        let x = Tensor::new(vec![3, 784], vec![0.5; 3 * 784]).unwrap();
+        let (mu, var) = b.infer(&x).unwrap();
+        assert_eq!(mu.shape(), &[3, 10]);
+        assert!(var.data().iter().all(|&v| v >= 0.0));
+        assert!(b.name().contains("mlp"));
+    }
+
+    #[test]
+    fn svi_backend_moments() {
+        let arch = Arch::mlp();
+        let w = PosteriorWeights::synthetic(&arch, 2);
+        let mut b = SviBackend::new(arch, w, Schedules::default(), 16, 3);
+        let x = Tensor::new(vec![2, 784], vec![0.3; 2 * 784]).unwrap();
+        let (mu, var) = b.infer(&x).unwrap();
+        assert_eq!(mu.shape(), &[2, 10]);
+        // sampled weights must produce non-degenerate logit variance
+        assert!(var.data().iter().sum::<f32>() > 0.0);
+    }
+
+    #[test]
+    fn postprocess_flags_fields() {
+        let mu = Tensor::new(vec![2, 4], vec![3.0, 0.0, 0.0, 0.0, 0.1, 0.0, 0.0, 0.05])
+            .unwrap();
+        let var = Tensor::new(vec![2, 4], vec![0.01; 8]).unwrap();
+        let preds = postprocess(&mu, &var, 30, 10.0, 1);
+        assert_eq!(preds.len(), 2);
+        assert_eq!(preds[0].pred, 0);
+        assert!(!preds[0].ood); // tiny MI, huge threshold
+        assert!(preds[0].total < preds[1].total); // confident row less uncertain
+    }
+}

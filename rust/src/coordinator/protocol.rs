@@ -1,0 +1,204 @@
+//! Wire protocol: line-delimited JSON over TCP.
+//!
+//! Requests:
+//!   {"id": 7, "model": "mlp", "input": [784 floats]}
+//!   {"cmd": "metrics"} | {"cmd": "ping"} | {"cmd": "shutdown"}
+//!
+//! Responses:
+//!   {"id": 7, "pred": 3, "mu": [...], "var": [...],
+//!    "total": 0.41, "sme": 0.33, "mi": 0.08, "ood": false,
+//!    "queue_us": 120, "infer_us": 850}
+//!   {"id": 7, "error": "queue full"}
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// A client inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub model: String,
+    pub input: Vec<f32>,
+}
+
+/// Control commands.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Command {
+    Metrics,
+    Ping,
+    Shutdown,
+}
+
+/// A parsed inbound message.
+#[derive(Clone, Debug)]
+pub enum Inbound {
+    Infer(Request),
+    Control(Command),
+}
+
+pub fn parse_inbound(line: &str) -> Result<Inbound> {
+    let v = Json::parse(line)?;
+    if let Some(cmd) = v.get("cmd").and_then(Json::as_str) {
+        return Ok(Inbound::Control(match cmd {
+            "metrics" => Command::Metrics,
+            "ping" => Command::Ping,
+            "shutdown" => Command::Shutdown,
+            c => return Err(Error::Coordinator(format!("unknown command '{c}'"))),
+        }));
+    }
+    let id = v.num_field("id")? as u64;
+    let model = v.str_field("model")?.to_string();
+    let input = v
+        .get("input")
+        .ok_or_else(|| Error::Coordinator("missing input".into()))?
+        .to_f32_vec()?;
+    Ok(Inbound::Infer(Request { id, model, input }))
+}
+
+/// One prediction with uncertainty decomposition.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    pub pred: i32,
+    pub mu: Vec<f32>,
+    pub var: Vec<f32>,
+    pub total: f64,
+    pub sme: f64,
+    pub mi: f64,
+    pub ood: bool,
+}
+
+/// A server response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub result: std::result::Result<Prediction, String>,
+    pub queue_us: u64,
+    pub infer_us: u64,
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        match &self.result {
+            Ok(p) => Json::obj(vec![
+                ("id", Json::Num(self.id as f64)),
+                ("pred", Json::Num(p.pred as f64)),
+                ("mu", Json::arr_f32(&p.mu)),
+                ("var", Json::arr_f32(&p.var)),
+                ("total", Json::Num(p.total)),
+                ("sme", Json::Num(p.sme)),
+                ("mi", Json::Num(p.mi)),
+                ("ood", Json::Bool(p.ood)),
+                ("queue_us", Json::Num(self.queue_us as f64)),
+                ("infer_us", Json::Num(self.infer_us as f64)),
+            ]),
+            Err(e) => Json::obj(vec![
+                ("id", Json::Num(self.id as f64)),
+                ("error", Json::Str(e.clone())),
+            ]),
+        }
+    }
+
+    pub fn parse(line: &str) -> Result<Self> {
+        let v = Json::parse(line)?;
+        let id = v.num_field("id")? as u64;
+        if let Some(err) = v.get("error").and_then(Json::as_str) {
+            return Ok(Response {
+                id,
+                result: Err(err.to_string()),
+                queue_us: 0,
+                infer_us: 0,
+            });
+        }
+        Ok(Response {
+            id,
+            result: Ok(Prediction {
+                pred: v.num_field("pred")? as i32,
+                mu: v.get("mu").map(|m| m.to_f32_vec()).transpose()?.unwrap_or_default(),
+                var: v.get("var").map(|m| m.to_f32_vec()).transpose()?.unwrap_or_default(),
+                total: v.num_field("total")?,
+                sme: v.num_field("sme")?,
+                mi: v.num_field("mi")?,
+                ood: v.get("ood").and_then(Json::as_bool).unwrap_or(false),
+            }),
+            queue_us: v.get("queue_us").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            infer_us: v.get("infer_us").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        })
+    }
+}
+
+/// Serialize an inference request.
+pub fn request_json(id: u64, model: &str, input: &[f32]) -> String {
+    Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("model", Json::Str(model.to_string())),
+        ("input", Json::arr_f32(input)),
+    ])
+    .dump()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let line = request_json(7, "mlp", &[0.1, 0.2]);
+        match parse_inbound(&line).unwrap() {
+            Inbound::Infer(r) => {
+                assert_eq!(r.id, 7);
+                assert_eq!(r.model, "mlp");
+                assert_eq!(r.input.len(), 2);
+            }
+            _ => panic!("expected infer"),
+        }
+    }
+
+    #[test]
+    fn control_commands() {
+        assert!(matches!(
+            parse_inbound(r#"{"cmd":"metrics"}"#).unwrap(),
+            Inbound::Control(Command::Metrics)
+        ));
+        assert!(matches!(
+            parse_inbound(r#"{"cmd":"shutdown"}"#).unwrap(),
+            Inbound::Control(Command::Shutdown)
+        ));
+        assert!(parse_inbound(r#"{"cmd":"reboot"}"#).is_err());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resp = Response {
+            id: 3,
+            result: Ok(Prediction {
+                pred: 5,
+                mu: vec![1.0, 2.0],
+                var: vec![0.1, 0.2],
+                total: 0.5,
+                sme: 0.4,
+                mi: 0.1,
+                ood: true,
+            }),
+            queue_us: 10,
+            infer_us: 20,
+        };
+        let parsed = Response::parse(&resp.to_json().dump()).unwrap();
+        assert_eq!(parsed.id, 3);
+        let p = parsed.result.unwrap();
+        assert_eq!(p.pred, 5);
+        assert!(p.ood);
+        assert!((p.mi - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn error_response() {
+        let resp = Response {
+            id: 9,
+            result: Err("queue full".into()),
+            queue_us: 0,
+            infer_us: 0,
+        };
+        let parsed = Response::parse(&resp.to_json().dump()).unwrap();
+        assert_eq!(parsed.result.unwrap_err(), "queue full");
+    }
+}

@@ -1,0 +1,386 @@
+//! TCP server + model workers.
+//!
+//! Topology: one listener thread accepts connections; each connection gets
+//! a reader thread that parses line-JSON requests, routes them to the
+//! model's [`Batcher`] and forwards responses back over the socket. One
+//! worker thread per registered model drains its batcher, runs the
+//! backend on the coalesced mini-batch, post-processes uncertainty and
+//! fans responses back out.
+//!
+//! Also usable in-process (no TCP) through [`Service::infer_blocking`] —
+//! the integration tests and benches drive it both ways.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::batcher::{Batcher, BatcherConfig, WorkItem};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::protocol::{self, Command, Inbound, Response};
+use crate::coordinator::{postprocess, Backend};
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub addr: String,
+    pub batcher: BatcherConfig,
+    /// Eq. 11 logit samples for the uncertainty decomposition.
+    pub logit_samples: usize,
+    /// MI threshold above which a prediction is flagged OOD.
+    pub ood_threshold: f64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7878".into(),
+            batcher: BatcherConfig::default(),
+            logit_samples: 30,
+            ood_threshold: 0.25,
+        }
+    }
+}
+
+struct ModelLane {
+    batcher: Arc<Batcher>,
+    features: usize,
+}
+
+/// The routing + batching service (transport-agnostic core).
+pub struct Service {
+    lanes: HashMap<String, ModelLane>,
+    pub metrics: Arc<Metrics>,
+    cfg: ServerConfig,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    stopping: Arc<AtomicBool>,
+}
+
+impl Service {
+    pub fn new(cfg: ServerConfig) -> Self {
+        Self {
+            lanes: HashMap::new(),
+            metrics: Arc::new(Metrics::new()),
+            cfg,
+            workers: Vec::new(),
+            stopping: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    pub fn config(&self) -> &ServerConfig {
+        &self.cfg
+    }
+
+    /// Register a model lane: spawns the worker thread that owns `backend`.
+    pub fn register(&mut self, name: &str, features: usize, mut backend: Box<dyn Backend>) {
+        let batcher = Arc::new(Batcher::new(self.cfg.batcher));
+        let lane_batcher = batcher.clone();
+        let metrics = self.metrics.clone();
+        let samples = self.cfg.logit_samples;
+        let threshold = self.cfg.ood_threshold;
+        let model = name.to_string();
+        let handle = std::thread::Builder::new()
+            .name(format!("worker-{model}"))
+            .spawn(move || {
+                let mut seed = 0x5EED_u64;
+                while let Some(batch) = lane_batcher.next_batch() {
+                    let b = batch.len();
+                    Metrics::inc(&metrics.batches);
+                    Metrics::add(&metrics.batched_items, b as u64);
+                    let infer_t = Instant::now();
+                    let mut data = Vec::with_capacity(b * features);
+                    for it in &batch {
+                        data.extend_from_slice(&it.input);
+                    }
+                    let x = match Tensor::new(vec![b, features], data) {
+                        Ok(x) => x,
+                        Err(e) => {
+                            for it in batch {
+                                let _ = it.reply.send(Response {
+                                    id: it.id,
+                                    result: Err(format!("bad input: {e}")),
+                                    queue_us: 0,
+                                    infer_us: 0,
+                                });
+                            }
+                            continue;
+                        }
+                    };
+                    seed = seed.wrapping_add(1);
+                    match backend.infer(&x) {
+                        Ok((mu, var)) => {
+                            let infer_us = infer_t.elapsed().as_micros() as u64;
+                            let preds = postprocess(&mu, &var, samples, threshold, seed);
+                            for (it, p) in batch.into_iter().zip(preds) {
+                                if p.ood {
+                                    Metrics::inc(&metrics.ood_flagged);
+                                }
+                                let queue_us =
+                                    it.enqueued.elapsed().as_micros() as u64 - infer_us.min(
+                                        it.enqueued.elapsed().as_micros() as u64,
+                                    );
+                                metrics.record_latency_us(
+                                    it.enqueued.elapsed().as_micros() as f64
+                                );
+                                Metrics::inc(&metrics.responses);
+                                let _ = it.reply.send(Response {
+                                    id: it.id,
+                                    result: Ok(p),
+                                    queue_us,
+                                    infer_us,
+                                });
+                            }
+                        }
+                        Err(e) => {
+                            for it in batch {
+                                let _ = it.reply.send(Response {
+                                    id: it.id,
+                                    result: Err(format!("inference failed: {e}")),
+                                    queue_us: 0,
+                                    infer_us: 0,
+                                });
+                            }
+                        }
+                    }
+                }
+            })
+            .expect("spawn worker");
+        self.workers.push(handle);
+        self.lanes.insert(name.to_string(), ModelLane { batcher, features });
+    }
+
+    /// Route one request into its lane (non-blocking).
+    pub fn submit(&self, req: protocol::Request) -> Result<std::sync::mpsc::Receiver<Response>> {
+        let lane = self
+            .lanes
+            .get(&req.model)
+            .ok_or_else(|| Error::Coordinator(format!("unknown model '{}'", req.model)))?;
+        if req.input.len() != lane.features {
+            return Err(Error::Coordinator(format!(
+                "model '{}' expects {} features, got {}",
+                req.model,
+                lane.features,
+                req.input.len()
+            )));
+        }
+        Metrics::inc(&self.metrics.requests);
+        let (tx, rx) = channel();
+        let item = WorkItem {
+            id: req.id,
+            input: req.input,
+            enqueued: Instant::now(),
+            reply: tx,
+        };
+        if lane.batcher.push(item).is_err() {
+            Metrics::inc(&self.metrics.rejected);
+            return Err(Error::Coordinator("queue full".into()));
+        }
+        Ok(rx)
+    }
+
+    /// Submit and block for the response (in-process convenience).
+    pub fn infer_blocking(&self, req: protocol::Request) -> Response {
+        let id = req.id;
+        match self.submit(req) {
+            Ok(rx) => rx.recv().unwrap_or(Response {
+                id,
+                result: Err("worker dropped".into()),
+                queue_us: 0,
+                infer_us: 0,
+            }),
+            Err(e) => Response {
+                id,
+                result: Err(e.to_string()),
+                queue_us: 0,
+                infer_us: 0,
+            },
+        }
+    }
+
+    /// Close all lanes and join workers.
+    pub fn shutdown(&mut self) {
+        self.stopping.store(true, Ordering::SeqCst);
+        for lane in self.lanes.values() {
+            lane.batcher.close();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    pub fn is_stopping(&self) -> bool {
+        self.stopping.load(Ordering::SeqCst)
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// TCP front end over a [`Service`].
+pub struct Server {
+    service: Arc<Service>,
+    listener: TcpListener,
+    pub addr: std::net::SocketAddr,
+}
+
+impl Server {
+    /// Bind (use port 0 in `cfg.addr` for an ephemeral port).
+    pub fn bind(service: Arc<Service>) -> Result<Self> {
+        let listener = TcpListener::bind(&service.cfg.addr)
+            .map_err(|e| Error::Coordinator(format!("bind {}: {e}", service.cfg.addr)))?;
+        let addr = listener.local_addr()?;
+        Ok(Self { service, listener, addr })
+    }
+
+    /// Serve until a shutdown command arrives.
+    pub fn run(&self) -> Result<()> {
+        self.listener.set_nonblocking(false)?;
+        for stream in self.listener.incoming() {
+            if self.service.is_stopping() {
+                break;
+            }
+            match stream {
+                Ok(s) => {
+                    let svc = self.service.clone();
+                    std::thread::spawn(move || {
+                        let _ = handle_connection(svc, s);
+                    });
+                }
+                Err(e) => {
+                    eprintln!("accept error: {e}");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn handle_connection(svc: Arc<Service>, stream: TcpStream) -> Result<()> {
+    // line-sized request/response pairs: Nagle + delayed-ACK would add
+    // ~40ms per round trip, swamping sub-ms inference.
+    stream.set_nodelay(true).ok();
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match protocol::parse_inbound(&line) {
+            Ok(Inbound::Control(Command::Ping)) => {
+                writeln!(writer, r#"{{"pong":true}}"#)?;
+            }
+            Ok(Inbound::Control(Command::Metrics)) => {
+                writeln!(writer, "{}", svc.metrics.snapshot().dump())?;
+            }
+            Ok(Inbound::Control(Command::Shutdown)) => {
+                writeln!(writer, r#"{{"shutting_down":true}}"#)?;
+                svc.stopping.store(true, Ordering::SeqCst);
+                // poke the accept loop with a dummy connection
+                let _ = TcpStream::connect(writer.local_addr()?);
+                break;
+            }
+            Ok(Inbound::Infer(req)) => {
+                let resp = svc.infer_blocking(req);
+                writeln!(writer, "{}", resp.to_json().dump())?;
+            }
+            Err(e) => {
+                writeln!(writer, r#"{{"error":"bad request: {e}"}}"#).ok();
+            }
+        }
+    }
+    let _ = peer;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NativePfpBackend;
+    use crate::model::{Arch, PosteriorWeights, Schedules};
+
+    fn test_service() -> Service {
+        let mut svc = Service::new(ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        });
+        let arch = Arch::mlp();
+        let w = PosteriorWeights::synthetic(&arch, 1);
+        svc.register(
+            "mlp",
+            784,
+            Box::new(NativePfpBackend::new(arch, w, Schedules::default())),
+        );
+        svc
+    }
+
+    #[test]
+    fn in_process_roundtrip() {
+        let svc = test_service();
+        let resp = svc.infer_blocking(protocol::Request {
+            id: 1,
+            model: "mlp".into(),
+            input: vec![0.5; 784],
+        });
+        let p = resp.result.expect("inference should succeed");
+        assert!((0..10).contains(&p.pred));
+        assert_eq!(p.mu.len(), 10);
+        assert!(p.total >= p.mi - 1e-9);
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let svc = test_service();
+        let resp = svc.infer_blocking(protocol::Request {
+            id: 2,
+            model: "nope".into(),
+            input: vec![0.0; 784],
+        });
+        assert!(resp.result.is_err());
+    }
+
+    #[test]
+    fn wrong_feature_count_rejected() {
+        let svc = test_service();
+        let resp = svc.infer_blocking(protocol::Request {
+            id: 3,
+            model: "mlp".into(),
+            input: vec![0.0; 10],
+        });
+        assert!(resp.result.unwrap_err().contains("features"));
+    }
+
+    #[test]
+    fn concurrent_submissions_batched() {
+        let svc = Arc::new(test_service());
+        let mut handles = Vec::new();
+        for i in 0..20 {
+            let svc = svc.clone();
+            handles.push(std::thread::spawn(move || {
+                svc.infer_blocking(protocol::Request {
+                    id: i,
+                    model: "mlp".into(),
+                    input: vec![0.1 * (i as f32 % 10.0); 784],
+                })
+            }));
+        }
+        for h in handles {
+            let resp = h.join().unwrap();
+            assert!(resp.result.is_ok());
+        }
+        // dynamic batching must have coalesced at least some requests
+        assert!(svc.metrics.mean_batch_size() >= 1.0);
+        assert_eq!(
+            svc.metrics.responses.load(std::sync::atomic::Ordering::Relaxed),
+            20
+        );
+    }
+}

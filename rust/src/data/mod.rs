@@ -1,0 +1,82 @@
+//! Dataset substrate: the synthetic Dirty-MNIST substitute and loaders for
+//! the python-exported splits.
+
+pub mod synth;
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::model::npz::Npz;
+use crate::tensor::Tensor;
+
+/// One evaluation split: images `[N, 784]` + labels (`-1` for OOD).
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub x: Tensor,
+    pub y: Vec<i32>,
+}
+
+/// The synthetic Dirty-MNIST evaluation sets (as exported by
+/// `python/compile/train.py` into `artifacts/data.npz`).
+pub struct DirtyMnist {
+    pub train: Split,
+    pub test_mnist: Split,
+    pub test_ambiguous: Split,
+    pub test_ood: Split,
+}
+
+impl DirtyMnist {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let npz = Npz::open(&dir.join("data.npz"))?;
+        let split = |x: &str, y: &str| -> Result<Split> {
+            Ok(Split { x: npz.tensor(x)?, y: npz.labels(y)? })
+        };
+        Ok(Self {
+            train: split("train_x", "train_y")?,
+            test_mnist: split("test_mnist_x", "test_mnist_y")?,
+            test_ambiguous: split("test_ambiguous_x", "test_ambiguous_y")?,
+            test_ood: split("test_ood_x", "test_ood_y")?,
+        })
+    }
+
+    /// Generate in-process (no artifacts needed) with the Rust mirror of
+    /// the python generator.
+    pub fn generate(base_seed: u64, n_test: usize) -> Self {
+        let g = synth::Generator::new(base_seed);
+        DirtyMnist {
+            train: g.split(synth::Stream::IndomainTrain, n_test, synth::Kind::Indomain),
+            test_mnist: g.split(synth::Stream::IndomainTest, n_test, synth::Kind::Indomain),
+            test_ambiguous: g.split(
+                synth::Stream::AmbiguousTest,
+                n_test,
+                synth::Kind::Ambiguous,
+            ),
+            test_ood: g.split(synth::Stream::OodTest, n_test, synth::Kind::Ood),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_shapes() {
+        let d = DirtyMnist::generate(2025, 16);
+        assert_eq!(d.test_mnist.x.shape(), &[16, 784]);
+        assert_eq!(d.test_ood.y, vec![-1; 16]);
+        assert!(d.test_mnist.y.iter().all(|&y| (0..10).contains(&y)));
+    }
+
+    #[test]
+    fn loads_artifact_data_when_present() {
+        let dir = crate::artifacts_dir();
+        if !dir.join("data.npz").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let d = DirtyMnist::load(&dir).unwrap();
+        assert_eq!(d.test_mnist.x.cols(), 784);
+        assert_eq!(d.test_mnist.x.rows(), d.test_mnist.y.len());
+    }
+}

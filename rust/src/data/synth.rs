@@ -1,0 +1,258 @@
+//! Rust mirror of `python/compile/data.py` — the synthetic Dirty-MNIST
+//! generator, draw-for-draw identical (same SplitMix64 streams, same
+//! formulas; floating-point transcendentals may differ in the last ulp,
+//! so cross-language tests compare with 1e-5 tolerance).
+
+use crate::tensor::Tensor;
+use crate::util::rng::{derive_seed, SplitMix64};
+
+use super::Split;
+
+pub const H: usize = 28;
+pub const W: usize = 28;
+pub const IMG: usize = H * W;
+pub const NUM_CLASSES: usize = 10;
+pub const NOISE_STD: f64 = 0.08;
+pub const MAX_SHIFT: i64 = 2;
+
+/// Stream ids — must match data.py's STREAM_* constants.
+#[derive(Clone, Copy, Debug)]
+pub enum Stream {
+    IndomainTrain = 1,
+    AmbiguousTrain = 2,
+    IndomainTest = 3,
+    AmbiguousTest = 4,
+    OodTest = 5,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Indomain,
+    Ambiguous,
+    Ood,
+}
+
+/// Deterministic class prototype (mirror of `data.class_prototype`).
+pub fn class_prototype(c: usize) -> Vec<f32> {
+    let fx = 1.0 + (c % 3) as f64;
+    let fy = 1.0 + (c / 3) as f64;
+    let phase = 0.7 * c as f64;
+    let mut img = vec![0.0f32; IMG];
+    for i in 0..H {
+        for j in 0..W {
+            let u = i as f64 / (H - 1) as f64;
+            let v = j as f64 / (W - 1) as f64;
+            let env = (-((u - 0.5).powi(2) + (v - 0.5).powi(2)) * 4.0).exp();
+            let s = (2.0 * std::f64::consts::PI * (fx * u + fy * v) + phase).sin();
+            let t = (2.0 * std::f64::consts::PI * (fy * u - fx * v) - phase).cos();
+            img[i * W + j] = (env * (0.5 + 0.25 * s + 0.25 * t)) as f32;
+        }
+    }
+    img
+}
+
+/// The synthetic Dirty-MNIST generator.
+pub struct Generator {
+    base_seed: u64,
+    protos: Vec<Vec<f32>>,
+}
+
+impl Generator {
+    pub fn new(base_seed: u64) -> Self {
+        Self {
+            base_seed,
+            protos: (0..NUM_CLASSES).map(class_prototype).collect(),
+        }
+    }
+
+    fn shift(img: &[f32], dy: i64, dx: i64) -> Vec<f32> {
+        let mut out = vec![0.0f32; IMG];
+        for i in 0..H as i64 {
+            for j in 0..W as i64 {
+                let si = i - dy;
+                let sj = j - dx;
+                if (0..H as i64).contains(&si) && (0..W as i64).contains(&sj) {
+                    out[(i * W as i64 + j) as usize] = img[(si * W as i64 + sj) as usize];
+                }
+            }
+        }
+        out
+    }
+
+    fn add_noise(img: &mut [f32], rng: &mut SplitMix64, std: f64) {
+        for v in img.iter_mut() {
+            let noisy = *v as f64 + std * rng.normal();
+            *v = (noisy as f32).clamp(0.0, 1.0);
+        }
+    }
+
+    /// In-domain sample (mirror of `data.sample_indomain`).
+    pub fn sample_indomain(&self, seed: u64) -> (Vec<f32>, i32) {
+        let mut rng = SplitMix64::new(seed);
+        let c = rng.randint(NUM_CLASSES as u64) as usize;
+        let dy = rng.randint(2 * MAX_SHIFT as u64 + 1) as i64 - MAX_SHIFT;
+        let dx = rng.randint(2 * MAX_SHIFT as u64 + 1) as i64 - MAX_SHIFT;
+        let mut img = Self::shift(&self.protos[c], dy, dx);
+        Self::add_noise(&mut img, &mut rng, NOISE_STD);
+        (img, c as i32)
+    }
+
+    /// Ambiguous between-class blend (mirror of `data.sample_ambiguous`).
+    pub fn sample_ambiguous(&self, seed: u64) -> (Vec<f32>, i32) {
+        let mut rng = SplitMix64::new(seed);
+        let a = rng.randint(NUM_CLASSES as u64) as usize;
+        let b = (a + 1 + rng.randint(NUM_CLASSES as u64 - 1) as usize) % NUM_CLASSES;
+        let lam = (0.35 + 0.30 * rng.uniform()) as f32;
+        let dy = rng.randint(2 * MAX_SHIFT as u64 + 1) as i64 - MAX_SHIFT;
+        let dx = rng.randint(2 * MAX_SHIFT as u64 + 1) as i64 - MAX_SHIFT;
+        let blend: Vec<f32> = self.protos[a]
+            .iter()
+            .zip(&self.protos[b])
+            .map(|(&pa, &pb)| lam * pa + (1.0 - lam) * pb)
+            .collect();
+        let mut img = Self::shift(&blend, dy, dx);
+        Self::add_noise(&mut img, &mut rng, NOISE_STD);
+        (img, a as i32)
+    }
+
+    /// OOD texture sample (mirror of `data.sample_ood`).
+    pub fn sample_ood(&self, seed: u64) -> Vec<f32> {
+        let mut rng = SplitMix64::new(seed);
+        let kind = rng.randint(3);
+        let mut img = vec![0.0f32; IMG];
+        match kind {
+            0 => {
+                let p = 2 + rng.randint(3) as usize;
+                let hi = (0.5 + 0.5 * rng.uniform()) as f32;
+                let lo = (0.2 * rng.uniform()) as f32;
+                for i in 0..H {
+                    for j in 0..W {
+                        img[i * W + j] = if ((i / p) + (j / p)) % 2 == 0 { hi } else { lo };
+                    }
+                }
+            }
+            1 => {
+                let n_rect = 3 + rng.randint(4);
+                for _ in 0..n_rect {
+                    let y0 = rng.randint((H - 4) as u64) as usize;
+                    let x0 = rng.randint((W - 4) as u64) as usize;
+                    let h = 3 + rng.randint(10) as usize;
+                    let w = 3 + rng.randint(10) as usize;
+                    let val = rng.uniform() as f32;
+                    for i in y0..(y0 + h).min(H) {
+                        for j in x0..(x0 + w).min(W) {
+                            img[i * W + j] = val;
+                        }
+                    }
+                }
+            }
+            _ => {
+                let p = 2 + rng.randint(4) as usize;
+                let horiz = rng.randint(2) == 0;
+                let hi = (0.4 + 0.6 * rng.uniform()) as f32;
+                for i in 0..H {
+                    for j in 0..W {
+                        let k = if horiz { i } else { j };
+                        img[i * W + j] = if (k / p) % 2 == 0 { hi } else { 0.1 };
+                    }
+                }
+            }
+        }
+        Self::add_noise(&mut img, &mut rng, NOISE_STD);
+        img
+    }
+
+    /// A full split of `n` samples (mirror of `data.make_split`).
+    pub fn split(&self, stream: Stream, n: usize, kind: Kind) -> Split {
+        let mut xs = Vec::with_capacity(n * IMG);
+        let mut ys = Vec::with_capacity(n);
+        for idx in 0..n {
+            let seed = derive_seed(self.base_seed, stream as u64, idx as u64);
+            match kind {
+                Kind::Indomain => {
+                    let (img, y) = self.sample_indomain(seed);
+                    xs.extend_from_slice(&img);
+                    ys.push(y);
+                }
+                Kind::Ambiguous => {
+                    let (img, y) = self.sample_ambiguous(seed);
+                    xs.extend_from_slice(&img);
+                    ys.push(y);
+                }
+                Kind::Ood => {
+                    let img = self.sample_ood(seed);
+                    xs.extend_from_slice(&img);
+                    ys.push(-1);
+                }
+            }
+        }
+        Split { x: Tensor::new(vec![n, IMG], xs).unwrap(), y: ys }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prototypes_distinct_and_bounded() {
+        let protos: Vec<Vec<f32>> = (0..NUM_CLASSES).map(class_prototype).collect();
+        for a in 0..NUM_CLASSES {
+            assert!(protos[a].iter().all(|v| v.is_finite()));
+            for b in a + 1..NUM_CLASSES {
+                let d: f32 = protos[a]
+                    .iter()
+                    .zip(&protos[b])
+                    .map(|(x, y)| (x - y).abs())
+                    .sum::<f32>()
+                    / IMG as f32;
+                assert!(d > 0.05, "prototypes {a}/{b} too similar: {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn samples_deterministic_and_in_range() {
+        let g = Generator::new(2025);
+        let (a, ya) = g.sample_indomain(42);
+        let (b, yb) = g.sample_indomain(42);
+        assert_eq!(a, b);
+        assert_eq!(ya, yb);
+        for seed in 0..20 {
+            let (img, y) = g.sample_indomain(seed);
+            assert!((0..10).contains(&y));
+            assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            let ood = g.sample_ood(seed);
+            assert!(ood.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn ood_off_manifold() {
+        let g = Generator::new(2025);
+        let protos: Vec<Vec<f32>> = (0..NUM_CLASSES).map(class_prototype).collect();
+        let dist = |img: &[f32]| -> f32 {
+            protos
+                .iter()
+                .map(|p| {
+                    img.iter().zip(p).map(|(a, b)| (a - b).abs()).sum::<f32>() / IMG as f32
+                })
+                .fold(f32::INFINITY, f32::min)
+        };
+        let mut d_in = 0.0;
+        let mut d_ood = 0.0;
+        for seed in 0..30 {
+            d_in += dist(&g.sample_indomain(seed).0);
+            d_ood += dist(&g.sample_ood(seed));
+        }
+        assert!(d_ood > 1.5 * d_in, "ood {d_ood} vs in {d_in}");
+    }
+
+    #[test]
+    fn split_layout() {
+        let g = Generator::new(7);
+        let s = g.split(Stream::AmbiguousTest, 5, Kind::Ambiguous);
+        assert_eq!(s.x.shape(), &[5, IMG]);
+        assert_eq!(s.y.len(), 5);
+    }
+}

@@ -1,0 +1,47 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("npz error: {0}")]
+    Npz(String),
+
+    #[error("json error: {0}")]
+    Json(String),
+
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl From<zip::result::ZipError> for Error {
+    fn from(e: zip::result::ZipError) -> Self {
+        Error::Npz(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,64 @@
+//! # pfp — Accelerated Bayesian Neural Networks via a Single Probabilistic Forward Pass
+//!
+//! Reproduction of *"Accelerated Execution of Bayesian Neural Networks using
+//! a Single Probabilistic Forward Pass and Code Generation"* (Klein et al.,
+//! 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) implement the PFP
+//!   operator algebra: Gaussian-propagating dense/conv (Eq. 12),
+//!   moment-matched ReLU (Eqs. 8/9) and Gaussian max-pool.
+//! * **L2** — JAX models (`python/compile/model.py`) compose the kernels
+//!   into MLP / LeNet-5 graphs and are AOT-lowered to HLO text.
+//! * **L3** — this crate: the serving coordinator (router, dynamic
+//!   batcher, uncertainty post-processing), the PJRT runtime that executes
+//!   the AOT artifacts, and a **native PFP operator library** with an
+//!   explicit schedule system + auto-tuner (the paper's TVM-operator
+//!   analog, used by the Table 2-5 / Fig. 5-7 benchmarks).
+//!
+//! Python runs only at build time (`make artifacts`); the serving binary is
+//! self-contained.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`tensor`] | dense f32 tensors + Gaussian (mu, var)/(mu, E\[x²\]) pairs |
+//! | [`ops`] | PFP / deterministic / SVI operators with schedules |
+//! | [`tuner`] | random + evolutionary schedule search (Meta-Scheduler analog) |
+//! | [`model`] | architecture specs, weight store (NPZ), native executor |
+//! | [`runtime`] | PJRT engine: HLO-text artifacts → compiled executables |
+//! | [`coordinator`] | TCP server, router, dynamic batcher, metrics |
+//! | [`uncertainty`] | logit sampling (Eq. 11), entropy/SME/MI (Eqs. 1-3), AUROC |
+//! | [`data`] | synthetic Dirty-MNIST (mirrors `python/compile/data.py`) |
+//! | [`profiling`] | per-operator timing (Table 4 / Fig. 6) |
+//! | [`util`] | offline substrate: RNG, JSON, stats, thread pool, prop tests |
+
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod model;
+pub mod ops;
+pub mod profiling;
+pub mod runtime;
+pub mod tensor;
+pub mod tuner;
+pub mod uncertainty;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Default location of the AOT artifacts relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts directory: `$PFP_ARTIFACTS`, else `artifacts/`
+/// relative to the current directory, else relative to the crate root.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("PFP_ARTIFACTS") {
+        return p.into();
+    }
+    let cwd = std::path::PathBuf::from(ARTIFACTS_DIR);
+    if cwd.exists() {
+        return cwd;
+    }
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(ARTIFACTS_DIR)
+}

@@ -1,0 +1,288 @@
+//! `pfp` — CLI entrypoint for the PFP-BNN serving stack.
+//!
+//! Commands:
+//!   info                     inspect artifacts / manifest / metrics
+//!   serve                    start the uncertainty-aware inference server
+//!   eval                     Table-1 evaluation (accuracy / AUROC) on the
+//!                            synthetic Dirty-MNIST test sets
+//!   profile                  per-layer latency profile (Table 4 / Fig. 6)
+//!   tune                     auto-tune operator schedules, persist records
+//!
+//! Argument parsing is hand-rolled (clap is not in the offline crate set).
+
+use std::collections::HashMap;
+
+use pfp::coordinator::{
+    NativePfpBackend, Server, ServerConfig, Service, SviBackend, XlaPfpBackend,
+};
+use pfp::data::DirtyMnist;
+use pfp::model::{Arch, PfpExecutor, PosteriorWeights, Schedules};
+use pfp::ops::dense::{pfp_dense_joint, DenseArgs};
+use pfp::runtime::Engine;
+use pfp::tensor::Tensor;
+use pfp::tuner::{self, SearchSpace, TuningRecords};
+use pfp::uncertainty;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, opts) = parse_args(&args);
+    let result = match cmd.as_str() {
+        "info" => cmd_info(&opts),
+        "serve" => cmd_serve(&opts),
+        "eval" => cmd_eval(&opts),
+        "profile" => cmd_profile(&opts),
+        "tune" => cmd_tune(&opts),
+        "help" | "" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "pfp — Probabilistic Forward Pass BNN serving\n\
+         \n\
+         USAGE: pfp <command> [--key value ...]\n\
+         \n\
+         COMMANDS:\n\
+           info                       show artifacts and Table-1 metrics\n\
+           serve   [--arch mlp] [--backend native|xla|svi] [--addr 127.0.0.1:7878]\n\
+           eval    [--arch mlp] [--samples 30]\n\
+           profile [--arch mlp] [--batch 10] [--passes 20] [--schedules tuned|baseline]\n\
+           tune    [--arch mlp] [--batch 10] [--trials 24]\n"
+    );
+}
+
+fn parse_args(args: &[String]) -> (String, HashMap<String, String>) {
+    let mut opts = HashMap::new();
+    let cmd = args.first().cloned().unwrap_or_default();
+    let mut i = 1;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_else(|| "true".into());
+            opts.insert(key.to_string(), val);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    (cmd, opts)
+}
+
+fn opt<'a>(opts: &'a HashMap<String, String>, key: &str, default: &'a str) -> &'a str {
+    opts.get(key).map(|s| s.as_str()).unwrap_or(default)
+}
+
+fn opt_usize(opts: &HashMap<String, String>, key: &str, default: usize) -> usize {
+    opts.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn load_arch_weights(arch_name: &str) -> pfp::Result<(Arch, PosteriorWeights, f32)> {
+    let dir = pfp::artifacts_dir();
+    let arch = Arch::by_name(arch_name)?;
+    let manifest = pfp::runtime::Manifest::load(&dir.join("manifest.json"))?;
+    let calib = manifest.calibration_factor(arch_name);
+    let weights = PosteriorWeights::load(&dir, &arch, calib)?;
+    Ok((arch, weights, calib))
+}
+
+fn cmd_info(_opts: &HashMap<String, String>) -> pfp::Result<()> {
+    let dir = pfp::artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    let manifest = pfp::runtime::Manifest::load(&dir.join("manifest.json"))?;
+    println!("{} AOT artifacts:", manifest.entries.len());
+    for e in &manifest.entries {
+        println!(
+            "  {:<32} arch={:<6} variant={:<11} batch={:<4} outputs={:?}",
+            e.name, e.arch, e.variant, e.batch, e.outputs
+        );
+    }
+    println!("\nTable-1 metrics (python training pipeline):");
+    println!("{}", manifest.metrics.dump());
+    Ok(())
+}
+
+fn cmd_serve(opts: &HashMap<String, String>) -> pfp::Result<()> {
+    let arch_name = opt(opts, "arch", "mlp");
+    let backend_kind = opt(opts, "backend", "native");
+    let addr = opt(opts, "addr", "127.0.0.1:7878");
+    let (arch, weights, calib) = load_arch_weights(arch_name)?;
+    let features = arch.input_len();
+
+    let mut cfg = ServerConfig::default();
+    cfg.addr = addr.to_string();
+    cfg.batcher.max_batch = opt_usize(opts, "max-batch", 10);
+    let mut svc = Service::new(cfg);
+
+    let backend: Box<dyn pfp::coordinator::Backend> = match backend_kind {
+        "native" => Box::new(NativePfpBackend::new(
+            arch.clone(),
+            weights,
+            Schedules::tuned(1),
+        )),
+        "xla" => {
+            let engine = Engine::new(&pfp::artifacts_dir())?;
+            // leak: engine must outlive the backend worker thread
+            let engine: &'static Engine = Box::leak(Box::new(engine));
+            Box::new(XlaPfpBackend::new(engine, arch_name, &weights)?)
+        }
+        "svi" => Box::new(SviBackend::new(
+            arch.clone(),
+            weights,
+            Schedules::tuned(1),
+            opt_usize(opts, "samples", 30),
+            0xC0DE,
+        )),
+        other => {
+            return Err(pfp::Error::Config(format!("unknown backend '{other}'")));
+        }
+    };
+    println!(
+        "serving {arch_name} (backend={backend_kind}, calib={calib}) on {addr}"
+    );
+    svc.register(arch_name, features, backend);
+    let server = Server::bind(std::sync::Arc::new(svc))?;
+    println!("listening on {}", server.addr);
+    server.run()
+}
+
+fn cmd_eval(opts: &HashMap<String, String>) -> pfp::Result<()> {
+    let arch_name = opt(opts, "arch", "mlp");
+    let samples = opt_usize(opts, "samples", 30);
+    let dir = pfp::artifacts_dir();
+    let (arch, weights, calib) = load_arch_weights(arch_name)?;
+    let data = DirtyMnist::load(&dir)?;
+    let mut exec = PfpExecutor::new(arch.clone(), weights, Schedules::tuned(1));
+
+    let mut eval_split = |x: &Tensor| -> uncertainty::Uncertainty {
+        let (mu, var) = exec.forward(x);
+        uncertainty::pfp_uncertainty(&mu, &var, samples, 42)
+    };
+    let u_mnist = eval_split(&data.test_mnist.x);
+    let u_amb = eval_split(&data.test_ambiguous.x);
+    let u_ood = eval_split(&data.test_ood.x);
+
+    let acc = uncertainty::accuracy(&u_mnist.mean_p, arch.num_classes(), &data.test_mnist.y);
+    let in_mi: Vec<f64> = u_mnist.mi.iter().chain(&u_amb.mi).cloned().collect();
+    let roc = uncertainty::auroc(&u_ood.mi, &in_mi);
+    println!("== native PFP evaluation ({arch_name}, calib={calib}) ==");
+    println!("accuracy (in-domain): {:.3}", acc);
+    println!("AUROC (MI, dirty vs OOD): {:.3}", roc);
+    println!(
+        "mean MI: mnist={:.3} ambiguous={:.3} ood={:.3}",
+        mean(&u_mnist.mi),
+        mean(&u_amb.mi),
+        mean(&u_ood.mi)
+    );
+    println!(
+        "mean SME: mnist={:.3} ambiguous={:.3} ood={:.3}",
+        mean(&u_mnist.sme),
+        mean(&u_amb.sme),
+        mean(&u_ood.sme)
+    );
+    Ok(())
+}
+
+fn mean(v: &[f64]) -> f64 {
+    v.iter().sum::<f64>() / v.len().max(1) as f64
+}
+
+fn cmd_profile(opts: &HashMap<String, String>) -> pfp::Result<()> {
+    let arch_name = opt(opts, "arch", "mlp");
+    let batch = opt_usize(opts, "batch", 10);
+    let passes = opt_usize(opts, "passes", 20);
+    let schedules = match opt(opts, "schedules", "tuned") {
+        "baseline" => Schedules::baseline(),
+        _ => Schedules::tuned(1),
+    };
+    let (arch, weights, _) = load_arch_weights(arch_name)?;
+    let dir = pfp::artifacts_dir();
+    let data = DirtyMnist::load(&dir)?;
+    let x = data.test_mnist.x.first_rows(batch);
+    let mut exec = PfpExecutor::new(arch, weights, schedules).with_profiling();
+    for _ in 0..passes {
+        let _ = exec.forward(&x);
+    }
+    let profile = exec.profiler.take();
+    print!("{}", profile.render(&format!("{arch_name} b{batch}")));
+    println!("\nper-operator-type shares (Fig. 6):");
+    for r in profile.by_op_type() {
+        println!(
+            "  {:<10} {:>6.1}%  {:>8.3}ms",
+            r.label,
+            r.fraction * 100.0,
+            r.per_pass_ms
+        );
+    }
+    Ok(())
+}
+
+fn cmd_tune(opts: &HashMap<String, String>) -> pfp::Result<()> {
+    let arch_name = opt(opts, "arch", "mlp");
+    let batch = opt_usize(opts, "batch", 10);
+    let trials = opt_usize(opts, "trials", 24);
+    let (arch, weights, _) = load_arch_weights(arch_name)?;
+    let dir = pfp::artifacts_dir();
+    let data = DirtyMnist::load(&dir)?;
+    let x = data.test_mnist.x.first_rows(batch);
+
+    // Tune the dominant dense layer (the paper's Table 2 target):
+    // layer 0 for the MLP; the first dense after flatten for LeNet.
+    let dense_idx = arch
+        .compute_layers()
+        .iter()
+        .position(|l| matches!(l, pfp::model::LayerSpec::Dense { .. }))
+        .unwrap();
+    let lw = &weights.layers[dense_idx];
+    let k = lw.w_mu.cols();
+    let x_mu = if arch.name == "mlp" {
+        x.clone()
+    } else {
+        Tensor::new(vec![batch, k], vec![0.5; batch * k]).unwrap()
+    };
+    let x_e2 = x_mu.squared();
+
+    let space = SearchSpace::dense_default(pfp::util::threadpool::default_threads());
+    let topts = tuner::TuneOpts { random_trials: trials, ..Default::default() };
+    println!("tuning PFP dense [{}x{}x{}] ...", batch, k, lw.w_mu.rows());
+    let res = tuner::tune(&space, topts, |s| {
+        let _ = pfp_dense_joint(
+            &DenseArgs {
+                x_mu: &x_mu,
+                x_aux: &x_e2,
+                w_mu: &lw.w_mu,
+                w_aux: &lw.w_e2,
+                b_mu: Some(lw.b_mu.data()),
+                b_var: Some(lw.b_var.data()),
+            },
+            s,
+        );
+    });
+    println!(
+        "baseline {:.3}ms -> best {:.3}ms ({:.2}x) with {}",
+        res.baseline_ms,
+        res.best_ms,
+        res.speedup(),
+        res.best.tag()
+    );
+    let records_path = dir.join("tuning").join("records.json");
+    let mut records = TuningRecords::load_or_default(&records_path);
+    records.insert(
+        TuningRecords::key("dense", arch_name, batch),
+        res.best,
+        res.best_ms,
+    );
+    records.save(&records_path)?;
+    println!("saved tuning records to {}", records_path.display());
+    Ok(())
+}

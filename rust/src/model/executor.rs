@@ -1,0 +1,453 @@
+//! Native graph executors: PFP (single probabilistic pass), deterministic,
+//! and SVI (N sampled passes).
+//!
+//! The PFP executor implements the paper's representation discipline
+//! exactly like `python/compile/model.py::pfp_forward` (the goldens
+//! cross-check this): compute layers consume E[x^2] / produce variances,
+//! ReLU consumes variances / produces E[x^2], max-pool is variance to
+//! variance, and conversions are inserted (and *profiled*, as the paper's
+//! "tooling" overhead) where representations disagree. The first compute
+//! layer uses the Eq. 13 deterministic-input kernels.
+
+use crate::ops::conv::{pfp_conv2d_first, pfp_conv2d_joint, ConvArgs};
+use crate::ops::dense::{pfp_dense_first, pfp_dense_joint, DenseArgs};
+use crate::ops::det::{det_conv2d, det_dense, det_relu};
+use crate::ops::maxpool::{det_maxpool2, pfp_maxpool2_vectorized, pfp_maxpool_generic};
+use crate::ops::relu::pfp_relu;
+use crate::ops::svi::sample_tensor;
+use crate::ops::Schedule;
+use crate::profiling::Profiler;
+use crate::tensor::{ProbTensor, Rep, Tensor};
+use crate::util::rng::SplitMix64;
+
+use super::{Arch, LayerSpec, PosteriorWeights};
+
+/// Per-operator-class schedule selection for a network.
+#[derive(Clone, Copy, Debug)]
+pub struct Schedules {
+    pub dense: Schedule,
+    pub conv: Schedule,
+    /// vectorized k=2 pool (true) vs generic reduction (false) — Table 3.
+    pub vectorized_pool: bool,
+    pub relu_threads: usize,
+}
+
+impl Schedules {
+    /// Untuned baseline (Table 2 row 1 / Table 3 "Generic, no tuning").
+    pub fn baseline() -> Self {
+        Self {
+            dense: Schedule::baseline(),
+            conv: Schedule::baseline(),
+            vectorized_pool: false,
+            relu_threads: 1,
+        }
+    }
+
+    /// Tuned configuration (what the tuner converges to on this host).
+    pub fn tuned(threads: usize) -> Self {
+        Self {
+            dense: Schedule::tuned(threads),
+            conv: Schedule::tuned(threads),
+            vectorized_pool: true,
+            relu_threads: 1,
+        }
+    }
+}
+
+impl Default for Schedules {
+    fn default() -> Self {
+        Self::tuned(1)
+    }
+}
+
+/// Single-probabilistic-forward-pass executor.
+pub struct PfpExecutor {
+    pub arch: Arch,
+    pub weights: PosteriorWeights,
+    pub schedules: Schedules,
+    pub profiler: Profiler,
+}
+
+impl PfpExecutor {
+    pub fn new(arch: Arch, weights: PosteriorWeights, schedules: Schedules) -> Self {
+        assert_eq!(arch.compute_layers().len(), weights.layers.len());
+        Self { arch, weights, schedules, profiler: Profiler::new(false) }
+    }
+
+    pub fn with_profiling(mut self) -> Self {
+        self.profiler = Profiler::new(true);
+        self
+    }
+
+    /// Run one probabilistic forward pass:
+    /// input `[B, ...input_shape]` -> (mu `[B, classes]`, var `[B, classes]`).
+    pub fn forward(&mut self, x: &Tensor) -> (Tensor, Tensor) {
+        self.profiler.begin_pass();
+        let labels = self.arch.layer_labels();
+        let mut compute_idx = 0usize;
+        let mut state: Option<ProbTensor> = None; // None until first compute layer
+        let mut det_input: Option<Tensor> = Some(reshape_input(&self.arch, x));
+
+        // The executor walks the layer list; the first compute layer takes
+        // the raw deterministic input (Eq. 13 kernels).
+        for (li, layer) in self.arch.layers.iter().enumerate() {
+            let label = &labels[li];
+            match layer {
+                LayerSpec::Dense { .. } => {
+                    let w = &self.weights.layers[compute_idx];
+                    compute_idx += 1;
+                    let sched = self.schedules.dense;
+                    let next = if let Some(prob) = state.take() {
+                        let prob = convert_rep(&mut self.profiler, prob, Rep::E2);
+                        let prob = prob.flatten_2d();
+                        let (mu, var) = self.profiler.record(label, "dense", || {
+                            pfp_dense_joint(
+                                &DenseArgs {
+                                    x_mu: &prob.mu,
+                                    x_aux: &prob.aux,
+                                    w_mu: &w.w_mu,
+                                    w_aux: &w.w_e2,
+                                    b_mu: Some(w.b_mu.data()),
+                                    b_var: Some(w.b_var.data()),
+                                },
+                                &sched,
+                            )
+                        });
+                        ProbTensor::new(mu, var, Rep::Var)
+                    } else {
+                        let x = det_input.take().expect("input consumed twice");
+                        let x = x.flatten_2d();
+                        let x_sq = x.squared();
+                        let (mu, var) = self.profiler.record(label, "dense", || {
+                            pfp_dense_first(
+                                &DenseArgs {
+                                    x_mu: &x,
+                                    x_aux: &x_sq,
+                                    w_mu: &w.w_mu,
+                                    w_aux: &w.w_var,
+                                    b_mu: Some(w.b_mu.data()),
+                                    b_var: Some(w.b_var.data()),
+                                },
+                                &sched,
+                            )
+                        });
+                        ProbTensor::new(mu, var, Rep::Var)
+                    };
+                    state = Some(next);
+                }
+                LayerSpec::Conv { .. } => {
+                    let w = &self.weights.layers[compute_idx];
+                    compute_idx += 1;
+                    let sched = self.schedules.conv;
+                    let next = if let Some(prob) = state.take() {
+                        let prob = convert_rep(&mut self.profiler, prob, Rep::E2);
+                        self.profiler.record(label, "conv2d", || {
+                            pfp_conv2d_joint(
+                                &prob,
+                                &ConvArgs {
+                                    w_mu: &w.w_mu,
+                                    w_aux: &w.w_e2,
+                                    b_mu: Some(w.b_mu.data()),
+                                    b_var: Some(w.b_var.data()),
+                                },
+                                &sched,
+                            )
+                        })
+                    } else {
+                        let x = det_input.take().expect("input consumed twice");
+                        self.profiler.record(label, "conv2d", || {
+                            pfp_conv2d_first(
+                                &x,
+                                &ConvArgs {
+                                    w_mu: &w.w_mu,
+                                    w_aux: &w.w_var,
+                                    b_mu: Some(w.b_mu.data()),
+                                    b_var: Some(w.b_var.data()),
+                                },
+                                &sched,
+                            )
+                        })
+                    };
+                    state = Some(next);
+                }
+                LayerSpec::Relu => {
+                    let prob = state.take().expect("ReLU before first compute layer");
+                    let prob = convert_rep(&mut self.profiler, prob, Rep::Var);
+                    let threads = self.schedules.relu_threads;
+                    state = Some(
+                        self.profiler
+                            .record(label, "relu", || pfp_relu(prob, threads)),
+                    );
+                }
+                LayerSpec::MaxPool2 => {
+                    let prob = state.take().expect("pool before first compute layer");
+                    let prob = convert_rep(&mut self.profiler, prob, Rep::Var);
+                    let vectorized = self.schedules.vectorized_pool;
+                    state = Some(self.profiler.record(label, "maxpool", || {
+                        if vectorized {
+                            pfp_maxpool2_vectorized(&prob)
+                        } else {
+                            pfp_maxpool_generic(&prob, 2, 2)
+                        }
+                    }));
+                }
+                LayerSpec::Flatten => {
+                    if let Some(prob) = state.take() {
+                        state = Some(prob.flatten_2d());
+                    } else if let Some(x) = det_input.take() {
+                        det_input = Some(x.flatten_2d());
+                    }
+                }
+            }
+        }
+        let out = state.expect("network produced no output").into_var();
+        (out.mu, out.aux)
+    }
+
+}
+
+/// Representation conversion, profiled as the paper's "tooling" overhead.
+fn convert_rep(profiler: &mut Profiler, prob: ProbTensor, rep: Rep) -> ProbTensor {
+    if prob.rep == rep {
+        return prob;
+    }
+    profiler.record("Convert", "convert", || prob.to_rep(rep).0)
+}
+
+fn reshape_input(arch: &Arch, x: &Tensor) -> Tensor {
+    let batch = x.dim(0);
+    let mut shape = vec![batch];
+    shape.extend_from_slice(&arch.input_shape);
+    x.clone().reshape(shape).expect("input shape mismatch")
+}
+
+/// Deterministic executor (posterior means).
+pub struct DetExecutor {
+    pub arch: Arch,
+    pub weights: PosteriorWeights,
+    pub schedules: Schedules,
+}
+
+impl DetExecutor {
+    pub fn new(arch: Arch, weights: PosteriorWeights, schedules: Schedules) -> Self {
+        Self { arch, weights, schedules }
+    }
+
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let weights: Vec<(&Tensor, &Tensor)> = self
+            .weights
+            .layers
+            .iter()
+            .map(|l| (&l.w_mu, &l.b_mu))
+            .collect();
+        forward_det(&self.arch, &weights, x, &self.schedules)
+    }
+}
+
+/// Shared deterministic forward used by both `DetExecutor` and the SVI
+/// sampled passes.
+fn forward_det(
+    arch: &Arch,
+    weights: &[(&Tensor, &Tensor)],
+    x: &Tensor,
+    schedules: &Schedules,
+) -> Tensor {
+    let mut h = reshape_input(arch, x);
+    let mut ci = 0;
+    for layer in &arch.layers {
+        h = match layer {
+            LayerSpec::Dense { .. } => {
+                let (w, b) = weights[ci];
+                ci += 1;
+                det_dense(&h.flatten_2d(), w, Some(b.data()), &schedules.dense)
+            }
+            LayerSpec::Conv { .. } => {
+                let (w, b) = weights[ci];
+                ci += 1;
+                det_conv2d(&h, w, Some(b.data()), &schedules.conv)
+            }
+            LayerSpec::Relu => det_relu(&h),
+            LayerSpec::MaxPool2 => det_maxpool2(&h),
+            LayerSpec::Flatten => h.flatten_2d(),
+        };
+    }
+    h
+}
+
+/// SVI executor: N posterior samples, N deterministic passes.
+pub struct SviExecutor {
+    pub arch: Arch,
+    pub weights: PosteriorWeights,
+    pub schedules: Schedules,
+    rng: SplitMix64,
+}
+
+impl SviExecutor {
+    pub fn new(arch: Arch, weights: PosteriorWeights, schedules: Schedules, seed: u64) -> Self {
+        Self { arch, weights, schedules, rng: SplitMix64::new(seed) }
+    }
+
+    /// One predictive sample: draw a full weight set (part of the measured
+    /// cost, as in the paper's Pyro baseline) and run a standard pass.
+    pub fn forward_sample(&mut self, x: &Tensor) -> Tensor {
+        let sampled: Vec<(Tensor, Tensor)> = self
+            .weights
+            .layers
+            .iter()
+            .map(|l| {
+                (
+                    sample_tensor(&l.w_mu, &l.w_sigma, &mut self.rng),
+                    sample_tensor(&l.b_mu, &l.b_sigma, &mut self.rng),
+                )
+            })
+            .collect();
+        let refs: Vec<(&Tensor, &Tensor)> = sampled.iter().map(|(w, b)| (w, b)).collect();
+        forward_det(&self.arch, &refs, x, &self.schedules)
+    }
+
+    /// N predictive samples -> logits `[n][B, classes]`.
+    pub fn forward_n(&mut self, x: &Tensor, n: usize) -> Vec<Tensor> {
+        (0..n).map(|_| self.forward_sample(x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Arch;
+    use crate::util::prop::Gen;
+
+    fn input(arch: &Arch, batch: usize, seed: u64) -> Tensor {
+        let mut g = Gen::new(seed);
+        let n = batch * arch.input_len();
+        let data: Vec<f32> = (0..n).map(|_| g.f32_in(0.0, 1.0)).collect();
+        let mut shape = vec![batch];
+        shape.extend_from_slice(&arch.input_shape);
+        Tensor::new(shape, data).unwrap()
+    }
+
+    #[test]
+    fn mlp_pfp_forward_shapes() {
+        let arch = Arch::mlp();
+        let w = PosteriorWeights::synthetic(&arch, 1);
+        let mut ex = PfpExecutor::new(arch.clone(), w, Schedules::default());
+        let x = input(&arch, 4, 0);
+        let (mu, var) = ex.forward(&x);
+        assert_eq!(mu.shape(), &[4, 10]);
+        assert_eq!(var.shape(), &[4, 10]);
+        assert!(var.data().iter().all(|&v| v >= 0.0));
+        assert!(mu.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn lenet_pfp_forward_shapes() {
+        let arch = Arch::lenet();
+        let w = PosteriorWeights::synthetic(&arch, 2);
+        let mut ex = PfpExecutor::new(arch.clone(), w, Schedules::default());
+        let x = input(&arch, 2, 1);
+        let (mu, var) = ex.forward(&x);
+        assert_eq!(mu.shape(), &[2, 10]);
+        assert!(var.data().iter().all(|&v| v >= 0.0 && v.is_finite()));
+    }
+
+    #[test]
+    fn baseline_and_tuned_schedules_agree() {
+        // The schedule knobs must not change the math. Pool implementation
+        // is held fixed (vectorized) because generic-vs-vectorized pooling
+        // is a (slightly) different approximation, not a schedule knob.
+        for arch in [Arch::mlp(), Arch::lenet()] {
+            let w = PosteriorWeights::synthetic(&arch, 3);
+            let x = input(&arch, 2, 2);
+            let mut base = Schedules::baseline();
+            base.vectorized_pool = true;
+            let (mu_a, var_a) =
+                PfpExecutor::new(arch.clone(), w.clone(), base).forward(&x);
+            let (mu_b, var_b) =
+                PfpExecutor::new(arch.clone(), w, Schedules::tuned(2)).forward(&x);
+            assert!(mu_a.allclose(&mu_b, 1e-4, 1e-4), "{} mu", arch.name);
+            assert!(var_a.allclose(&var_b, 2e-3, 2e-3), "{} var", arch.name);
+        }
+    }
+
+    #[test]
+    fn pool_implementations_stay_close_through_network() {
+        // generic vs vectorized pool: different association order, same
+        // approximated quantity — logits must stay close, not identical.
+        let arch = Arch::lenet();
+        let w = PosteriorWeights::synthetic(&arch, 3);
+        let x = input(&arch, 2, 2);
+        let (mu_a, _) =
+            PfpExecutor::new(arch.clone(), w.clone(), Schedules::baseline()).forward(&x);
+        let (mu_b, _) =
+            PfpExecutor::new(arch.clone(), w, Schedules::tuned(1)).forward(&x);
+        assert!(mu_a.max_abs_diff(&mu_b) < 0.1, "pool divergence too large");
+    }
+
+    #[test]
+    fn zero_sigma_pfp_mean_matches_det() {
+        let arch = Arch::mlp();
+        let mut w = PosteriorWeights::synthetic(&arch, 4);
+        for l in w.layers.iter_mut() {
+            *l = LayerWeightsZero::zeroed(l);
+        }
+        let x = input(&arch, 3, 3);
+        let (mu, var) = PfpExecutor::new(arch.clone(), w.clone(), Schedules::default())
+            .forward(&x);
+        let det = DetExecutor::new(arch, w, Schedules::default()).forward(&x);
+        assert!(mu.allclose(&det, 2e-3, 2e-3));
+        assert!(var.data().iter().all(|&v| v < 1e-3));
+    }
+
+    struct LayerWeightsZero;
+    impl LayerWeightsZero {
+        fn zeroed(l: &crate::model::LayerWeights) -> crate::model::LayerWeights {
+            crate::model::LayerWeights::from_posterior(
+                l.w_mu.clone(),
+                l.w_sigma.map(|_| 1e-8),
+                l.b_mu.clone(),
+                l.b_sigma.map(|_| 1e-8),
+                1.0,
+            )
+        }
+    }
+
+    #[test]
+    fn svi_samples_scatter_around_pfp_mean() {
+        let arch = Arch::mlp();
+        let w = PosteriorWeights::synthetic(&arch, 5);
+        let x = input(&arch, 2, 4);
+        let (mu, _) =
+            PfpExecutor::new(arch.clone(), w.clone(), Schedules::default()).forward(&x);
+        let mut svi = SviExecutor::new(arch, w, Schedules::default(), 7);
+        let samples = svi.forward_n(&x, 64);
+        // empirical mean of SVI logits approximates the PFP mean
+        let mut emp = vec![0.0f32; mu.len()];
+        for s in &samples {
+            for (e, v) in emp.iter_mut().zip(s.data()) {
+                *e += v / samples.len() as f32;
+            }
+        }
+        let emp_t = Tensor::new(mu.shape().to_vec(), emp).unwrap();
+        let diff = emp_t.max_abs_diff(&mu);
+        assert!(diff < 0.5, "SVI empirical mean too far from PFP mean: {diff}");
+    }
+
+    #[test]
+    fn profiler_covers_all_layers() {
+        let arch = Arch::lenet();
+        let w = PosteriorWeights::synthetic(&arch, 6);
+        let mut ex =
+            PfpExecutor::new(arch.clone(), w, Schedules::default()).with_profiling();
+        let x = input(&arch, 1, 5);
+        let _ = ex.forward(&x);
+        let prof = ex.profiler.take();
+        let layers = prof.by_layer();
+        // 5 compute + 4 relu + 2 pool (+ conversions)
+        assert!(layers.len() >= 11, "got {} rows", layers.len());
+        let types = prof.by_op_type();
+        let names: Vec<&str> = types.iter().map(|r| r.label.as_str()).collect();
+        for want in ["dense", "conv2d", "relu", "maxpool"] {
+            assert!(names.contains(&want), "missing op type {want}");
+        }
+    }
+}

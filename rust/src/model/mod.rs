@@ -1,0 +1,182 @@
+//! Model layer: architecture specs, posterior weight store, and the
+//! native graph executor (PFP / deterministic / SVI).
+//!
+//! Architecture specs mirror `python/compile/model.py::ARCHS` exactly; the
+//! integration tests cross-check the native executor against the JAX
+//! goldens in `artifacts/goldens.npz`.
+
+pub mod executor;
+pub mod npz;
+pub mod weights;
+
+pub use executor::{DetExecutor, PfpExecutor, Schedules, SviExecutor};
+pub use weights::{LayerWeights, PosteriorWeights};
+
+use crate::error::{Error, Result};
+
+/// One layer of an architecture.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LayerSpec {
+    Dense { d_in: usize, d_out: usize },
+    Conv { in_ch: usize, out_ch: usize, k: usize },
+    Relu,
+    MaxPool2,
+    Flatten,
+}
+
+impl LayerSpec {
+    pub fn is_compute(&self) -> bool {
+        matches!(self, LayerSpec::Dense { .. } | LayerSpec::Conv { .. })
+    }
+
+    /// Operator-type label for Fig. 6 / Table 4 grouping.
+    pub fn op_type(&self) -> &'static str {
+        match self {
+            LayerSpec::Dense { .. } => "dense",
+            LayerSpec::Conv { .. } => "conv2d",
+            LayerSpec::Relu => "relu",
+            LayerSpec::MaxPool2 => "maxpool",
+            LayerSpec::Flatten => "flatten",
+        }
+    }
+}
+
+/// A full architecture: layer list + input shape (without batch dim).
+#[derive(Clone, Debug)]
+pub struct Arch {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl Arch {
+    /// The paper's 3-layer MLP: 784-100-100-10.
+    pub fn mlp() -> Self {
+        Self {
+            name: "mlp".into(),
+            input_shape: vec![784],
+            layers: vec![
+                LayerSpec::Dense { d_in: 784, d_out: 100 },
+                LayerSpec::Relu,
+                LayerSpec::Dense { d_in: 100, d_out: 100 },
+                LayerSpec::Relu,
+                LayerSpec::Dense { d_in: 100, d_out: 10 },
+            ],
+        }
+    }
+
+    /// LeNet-5 on 28x28 (VALID convs): 6@5x5 / pool / 16@5x5 / pool /
+    /// 256-120-84-10.
+    pub fn lenet() -> Self {
+        Self {
+            name: "lenet".into(),
+            input_shape: vec![1, 28, 28],
+            layers: vec![
+                LayerSpec::Conv { in_ch: 1, out_ch: 6, k: 5 },
+                LayerSpec::Relu,
+                LayerSpec::MaxPool2,
+                LayerSpec::Conv { in_ch: 6, out_ch: 16, k: 5 },
+                LayerSpec::Relu,
+                LayerSpec::MaxPool2,
+                LayerSpec::Flatten,
+                LayerSpec::Dense { d_in: 256, d_out: 120 },
+                LayerSpec::Relu,
+                LayerSpec::Dense { d_in: 120, d_out: 84 },
+                LayerSpec::Relu,
+                LayerSpec::Dense { d_in: 84, d_out: 10 },
+            ],
+        }
+    }
+
+    pub fn by_name(name: &str) -> Result<Self> {
+        match name {
+            "mlp" => Ok(Self::mlp()),
+            "lenet" => Ok(Self::lenet()),
+            other => Err(Error::Config(format!("unknown architecture '{other}'"))),
+        }
+    }
+
+    /// Compute layers (dense/conv) in order.
+    pub fn compute_layers(&self) -> Vec<&LayerSpec> {
+        self.layers.iter().filter(|l| l.is_compute()).collect()
+    }
+
+    /// Per-layer human labels matching Table 4 ("Dense 1", "Conv2d 2", ...).
+    pub fn layer_labels(&self) -> Vec<String> {
+        let mut counts: std::collections::HashMap<&str, usize> = Default::default();
+        self.layers
+            .iter()
+            .map(|l| {
+                let t = l.op_type();
+                let c = counts.entry(t).or_insert(0);
+                *c += 1;
+                format!("{} {}", pretty(t), c)
+            })
+            .collect()
+    }
+
+    /// Number of classes (output width of the last dense layer).
+    pub fn num_classes(&self) -> usize {
+        for l in self.layers.iter().rev() {
+            if let LayerSpec::Dense { d_out, .. } = l {
+                return *d_out;
+            }
+        }
+        0
+    }
+
+    /// Flat input feature count.
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+}
+
+fn pretty(t: &str) -> &'static str {
+    match t {
+        "dense" => "Dense",
+        "conv2d" => "Conv2d",
+        "relu" => "ReLU",
+        "maxpool" => "Max Pool",
+        _ => "Flatten",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_spec_matches_python() {
+        let a = Arch::mlp();
+        assert_eq!(a.layers.len(), 5);
+        assert_eq!(a.compute_layers().len(), 3);
+        assert_eq!(a.num_classes(), 10);
+        assert_eq!(a.input_len(), 784);
+    }
+
+    #[test]
+    fn lenet_spec_matches_python() {
+        let a = Arch::lenet();
+        assert_eq!(a.compute_layers().len(), 5);
+        assert_eq!(a.num_classes(), 10);
+        // 4 ReLUs, 2 pools — the Table 4 inventory
+        assert_eq!(a.layers.iter().filter(|l| matches!(l, LayerSpec::Relu)).count(), 4);
+        assert_eq!(
+            a.layers.iter().filter(|l| matches!(l, LayerSpec::MaxPool2)).count(),
+            2
+        );
+    }
+
+    #[test]
+    fn labels_enumerate_per_type() {
+        let labels = Arch::lenet().layer_labels();
+        assert_eq!(labels[0], "Conv2d 1");
+        assert_eq!(labels[3], "Conv2d 2");
+        assert!(labels.contains(&"Dense 3".to_string()));
+    }
+
+    #[test]
+    fn unknown_arch_errors() {
+        assert!(Arch::by_name("resnet").is_err());
+    }
+}

@@ -1,0 +1,233 @@
+//! Minimal NPY/NPZ reader (ndarray-npy is not in the offline crate set).
+//!
+//! Supports what `numpy.savez{,_compressed}` emits for this repo's
+//! artifacts: little-endian `f32` / `i32` / `i64` C-contiguous arrays,
+//! NPY format 1.0/2.0, stored or deflated zip members.
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// A loaded array: f32 data (integer types are converted) + shape.
+#[derive(Clone, Debug)]
+pub struct NpyArray {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+    /// original dtype descriptor, e.g. "<f4"
+    pub dtype: String,
+}
+
+impl NpyArray {
+    pub fn into_tensor(self) -> Result<Tensor> {
+        Tensor::new(self.shape, self.data)
+    }
+}
+
+/// Parse one `.npy` payload.
+pub fn parse_npy(bytes: &[u8]) -> Result<NpyArray> {
+    if bytes.len() < 10 || &bytes[..6] != b"\x93NUMPY" {
+        return Err(Error::Npz("not an NPY payload".into()));
+    }
+    let major = bytes[6];
+    let (header_len, header_start) = match major {
+        1 => (
+            u16::from_le_bytes([bytes[8], bytes[9]]) as usize,
+            10usize,
+        ),
+        2 | 3 => (
+            u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize,
+            12usize,
+        ),
+        v => return Err(Error::Npz(format!("unsupported NPY version {v}"))),
+    };
+    let header = std::str::from_utf8(&bytes[header_start..header_start + header_len])
+        .map_err(|_| Error::Npz("bad NPY header encoding".into()))?;
+
+    let dtype = extract_quoted(header, "descr")
+        .ok_or_else(|| Error::Npz(format!("missing descr in header: {header}")))?;
+    let fortran = header.contains("'fortran_order': True");
+    if fortran {
+        return Err(Error::Npz("fortran-order arrays not supported".into()));
+    }
+    let shape = extract_shape(header)
+        .ok_or_else(|| Error::Npz(format!("missing shape in header: {header}")))?;
+    let n: usize = shape.iter().product();
+    let payload = &bytes[header_start + header_len..];
+
+    let data = match dtype.as_str() {
+        "<f4" => {
+            if payload.len() < n * 4 {
+                return Err(Error::Npz("truncated f4 payload".into()));
+            }
+            payload[..n * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        }
+        "<i4" => payload[..n * 4]
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f32)
+            .collect(),
+        "<i8" => payload[..n * 8]
+            .chunks_exact(8)
+            .map(|c| {
+                i64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]) as f32
+            })
+            .collect(),
+        "<f8" => payload[..n * 8]
+            .chunks_exact(8)
+            .map(|c| {
+                f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]) as f32
+            })
+            .collect(),
+        d => return Err(Error::Npz(format!("unsupported dtype {d}"))),
+    };
+    Ok(NpyArray { shape, data, dtype })
+}
+
+fn extract_quoted(header: &str, key: &str) -> Option<String> {
+    let pat = format!("'{key}':");
+    let at = header.find(&pat)? + pat.len();
+    let rest = &header[at..];
+    let q0 = rest.find('\'')? + 1;
+    let q1 = rest[q0..].find('\'')? + q0;
+    Some(rest[q0..q1].to_string())
+}
+
+fn extract_shape(header: &str) -> Option<Vec<usize>> {
+    let at = header.find("'shape':")? + "'shape':".len();
+    let rest = &header[at..];
+    let p0 = rest.find('(')? + 1;
+    let p1 = rest[p0..].find(')')? + p0;
+    let inner = &rest[p0..p1];
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let t = part.trim();
+        if t.is_empty() {
+            continue;
+        }
+        out.push(t.parse().ok()?);
+    }
+    Some(out)
+}
+
+/// An NPZ archive loaded fully into memory.
+pub struct Npz {
+    arrays: BTreeMap<String, NpyArray>,
+}
+
+impl Npz {
+    pub fn open(path: &Path) -> Result<Self> {
+        let file = std::fs::File::open(path)
+            .map_err(|e| Error::Npz(format!("open {}: {e}", path.display())))?;
+        let mut zip = zip::ZipArchive::new(file)?;
+        let mut arrays = BTreeMap::new();
+        for i in 0..zip.len() {
+            let mut entry = zip.by_index(i)?;
+            let name = entry
+                .name()
+                .strip_suffix(".npy")
+                .unwrap_or(entry.name())
+                .to_string();
+            let mut buf = Vec::with_capacity(entry.size() as usize);
+            entry.read_to_end(&mut buf)?;
+            arrays.insert(name, parse_npy(&buf)?);
+        }
+        Ok(Self { arrays })
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.arrays.keys().map(|s| s.as_str())
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.arrays.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&NpyArray> {
+        self.arrays
+            .get(name)
+            .ok_or_else(|| Error::Npz(format!("missing array '{name}'")))
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<Tensor> {
+        self.get(name).cloned()?.into_tensor()
+    }
+
+    /// 1-D integer labels as i32.
+    pub fn labels(&self, name: &str) -> Result<Vec<i32>> {
+        Ok(self.get(name)?.data.iter().map(|&v| v as i32).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make_npy_f32(shape: &[usize], data: &[f32]) -> Vec<u8> {
+        let shape_str = match shape.len() {
+            1 => format!("({},)", shape[0]),
+            _ => format!(
+                "({})",
+                shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+            ),
+        };
+        let mut header = format!(
+            "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}"
+        );
+        let total = 10 + header.len();
+        let pad = (64 - total % 64) % 64;
+        header.push_str(&" ".repeat(pad));
+        header.push('\n');
+        // fix padding so total is aligned; rewrite length
+        let mut out = Vec::new();
+        out.extend_from_slice(b"\x93NUMPY\x01\x00");
+        out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        for v in data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    #[test]
+    fn parse_f32_npy() {
+        let bytes = make_npy_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]);
+        let arr = parse_npy(&bytes).unwrap();
+        assert_eq!(arr.shape, vec![2, 3]);
+        assert_eq!(arr.data, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(arr.dtype, "<f4");
+    }
+
+    #[test]
+    fn parse_scalar_shape() {
+        let bytes = make_npy_f32(&[], &[7.0]);
+        let arr = parse_npy(&bytes).unwrap();
+        assert_eq!(arr.shape, Vec::<usize>::new());
+        assert_eq!(arr.data, vec![7.0]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_npy(b"not numpy").is_err());
+    }
+
+    #[test]
+    fn reads_real_npz_when_artifacts_exist() {
+        // Integration-grade check against the python-written archive.
+        let dir = crate::artifacts_dir();
+        let path = dir.join("weights_mlp.npz");
+        if !path.exists() {
+            eprintln!("skipping: {} not built", path.display());
+            return;
+        }
+        let npz = Npz::open(&path).unwrap();
+        let w = npz.tensor("l0_w_mu").unwrap();
+        assert_eq!(w.shape(), &[100, 784]);
+        let sig = npz.tensor("l0_w_sigma").unwrap();
+        assert!(sig.data().iter().all(|&s| s > 0.0));
+    }
+}

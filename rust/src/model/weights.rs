@@ -1,0 +1,204 @@
+//! Posterior weight store: the SVI-trained mean-field Gaussians exported
+//! by `python/compile/train.py` (`weights_{arch}.npz`), plus the derived
+//! views the operators need:
+//!
+//! * the paper's **calibration factor** `c` is applied here once:
+//!   `w_var = c * sigma^2`;
+//! * `w_e2 = mu^2 + w_var` is **precomputed** for all non-first compute
+//!   layers (the paper's "weight variance information can be stored
+//!   directly as second raw moments" optimization — Section 5);
+//! * the first layer keeps its variances (Eq. 13 needs them).
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::tensor::Tensor;
+
+use super::npz::Npz;
+use super::Arch;
+
+/// Per-compute-layer posterior + derived tensors.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub w_mu: Tensor,
+    pub w_sigma: Tensor,
+    /// calibrated variance: c * sigma^2
+    pub w_var: Tensor,
+    /// precomputed second raw moment: mu^2 + w_var
+    pub w_e2: Tensor,
+    pub b_mu: Tensor,
+    pub b_sigma: Tensor,
+    pub b_var: Tensor,
+}
+
+impl LayerWeights {
+    pub fn from_posterior(
+        w_mu: Tensor,
+        w_sigma: Tensor,
+        b_mu: Tensor,
+        b_sigma: Tensor,
+        calib: f32,
+    ) -> Self {
+        let w_var = w_sigma.map(|s| calib * s * s);
+        let w_e2 = w_mu.zip(&w_var, |m, v| m * m + v).unwrap();
+        let b_var = b_sigma.map(|s| calib * s * s);
+        Self { w_mu, w_sigma, w_var, w_e2, b_mu, b_sigma, b_var }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.w_mu.len() + self.b_mu.len()
+    }
+}
+
+/// All compute-layer weights of one architecture.
+#[derive(Clone, Debug)]
+pub struct PosteriorWeights {
+    pub arch_name: String,
+    pub calibration_factor: f32,
+    pub layers: Vec<LayerWeights>,
+}
+
+impl PosteriorWeights {
+    /// Load `weights_{arch}.npz` and apply the calibration factor.
+    pub fn load(dir: &Path, arch: &Arch, calib: f32) -> Result<Self> {
+        let npz = Npz::open(&dir.join(format!("weights_{}.npz", arch.name)))?;
+        let mut layers = Vec::new();
+        for (i, _) in arch.compute_layers().iter().enumerate() {
+            layers.push(LayerWeights::from_posterior(
+                npz.tensor(&format!("l{i}_w_mu"))?,
+                npz.tensor(&format!("l{i}_w_sigma"))?,
+                npz.tensor(&format!("l{i}_b_mu"))?,
+                npz.tensor(&format!("l{i}_b_sigma"))?,
+                calib,
+            ));
+        }
+        Ok(Self {
+            arch_name: arch.name.clone(),
+            calibration_factor: calib,
+            layers,
+        })
+    }
+
+    /// Re-apply a different calibration factor (for the sweep).
+    pub fn recalibrate(&self, calib: f32) -> Self {
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                LayerWeights::from_posterior(
+                    l.w_mu.clone(),
+                    l.w_sigma.clone(),
+                    l.b_mu.clone(),
+                    l.b_sigma.clone(),
+                    calib,
+                )
+            })
+            .collect();
+        Self {
+            arch_name: self.arch_name.clone(),
+            calibration_factor: calib,
+            layers,
+        }
+    }
+
+    /// Synthetic random posterior (tests / benches without artifacts).
+    pub fn synthetic(arch: &Arch, seed: u64) -> Self {
+        use crate::util::rng::SplitMix64;
+        let mut rng = SplitMix64::new(seed);
+        let mut layers = Vec::new();
+        for spec in arch.compute_layers() {
+            let (wshape, bshape, fan_in) = match spec {
+                super::LayerSpec::Dense { d_in, d_out } => {
+                    (vec![*d_out, *d_in], vec![*d_out], *d_in)
+                }
+                super::LayerSpec::Conv { in_ch, out_ch, k } => (
+                    vec![*out_ch, *in_ch, *k, *k],
+                    vec![*out_ch],
+                    in_ch * k * k,
+                ),
+                _ => unreachable!(),
+            };
+            let std = (1.0 / fan_in as f32).sqrt();
+            let wn: usize = wshape.iter().product();
+            let bn = bshape[0];
+            let mut w = vec![0.0f32; wn];
+            rng.fill_normal(&mut w, 0.0, std);
+            let mut ws = vec![0.0f32; wn];
+            for v in ws.iter_mut() {
+                *v = (0.3 * std * rng.uniform() as f32).max(1e-4);
+            }
+            let mut b = vec![0.0f32; bn];
+            rng.fill_normal(&mut b, 0.0, 0.01);
+            let bs = vec![0.01f32; bn];
+            layers.push(LayerWeights::from_posterior(
+                Tensor::new(wshape.clone(), w).unwrap(),
+                Tensor::new(wshape, ws).unwrap(),
+                Tensor::new(bshape.clone(), b).unwrap(),
+                Tensor::new(bshape, bs).unwrap(),
+                1.0,
+            ));
+        }
+        Self {
+            arch_name: arch.name.clone(),
+            calibration_factor: 1.0,
+            layers,
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(|l| l.n_params()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Arch;
+
+    #[test]
+    fn synthetic_shapes_match_arch() {
+        let arch = Arch::lenet();
+        let w = PosteriorWeights::synthetic(&arch, 1);
+        assert_eq!(w.layers.len(), 5);
+        assert_eq!(w.layers[0].w_mu.shape(), &[6, 1, 5, 5]);
+        assert_eq!(w.layers[4].w_mu.shape(), &[10, 84]);
+        assert!(w.n_params() > 60_000 / 2);
+    }
+
+    #[test]
+    fn calibration_scales_variance() {
+        let arch = Arch::mlp();
+        let w = PosteriorWeights::synthetic(&arch, 2);
+        let w2 = w.recalibrate(0.25);
+        for (a, b) in w.layers.iter().zip(&w2.layers) {
+            for (va, vb) in a.w_var.data().iter().zip(b.w_var.data()) {
+                assert!((vb - 0.25 * va).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn e2_consistent_with_var() {
+        let arch = Arch::mlp();
+        let w = PosteriorWeights::synthetic(&arch, 3);
+        let l = &w.layers[0];
+        for i in 0..16 {
+            let want = l.w_mu.data()[i].powi(2) + l.w_var.data()[i];
+            assert!((l.w_e2.data()[i] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn loads_trained_weights_when_present() {
+        let dir = crate::artifacts_dir();
+        if !dir.join("weights_mlp.npz").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let arch = Arch::mlp();
+        let w = PosteriorWeights::load(&dir, &arch, 0.3).unwrap();
+        assert_eq!(w.layers.len(), 3);
+        assert_eq!(w.layers[0].w_mu.shape(), &[100, 784]);
+        assert!((w.calibration_factor - 0.3).abs() < 1e-9);
+    }
+}

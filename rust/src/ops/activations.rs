@@ -1,0 +1,237 @@
+//! Extension activation operators: moment-matched sigmoid / tanh and the
+//! probabilistic average pool.
+//!
+//! The paper's operator library covers MLPs and CNNs with ReLU + max-pool;
+//! these are the natural next operators a PFP user needs (the paper's
+//! "enabling new network architectures" direction), implemented with the
+//! standard probit approximation (Roth 2021 lineage):
+//!
+//! * `sigmoid(x) ~ Phi(zeta * x)`, `zeta = sqrt(pi/8)`, so for
+//!   `X ~ N(mu, s^2)`:
+//!   `E[sigmoid(X)] ~ Phi(zeta mu / sqrt(1 + zeta^2 s^2))`;
+//!   the output variance uses the Barber-Bishop-style shrinkage
+//!   `Var ~ m(1-m)(1 - 1/sqrt(1 + zeta^2 s^2))`, validated against
+//!   Monte-Carlo below (these are *approximations*; tolerances are
+//!   documented in the tests).
+//! * `tanh(x) = 2 sigmoid(2x) - 1` transfers both moments linearly.
+//! * average pooling is linear, so it is *exact* under the mean-field
+//!   assumption: means average; variances average with a 1/k^2 factor.
+
+use crate::tensor::{ProbTensor, Rep, Tensor};
+
+use super::erf::norm_cdf;
+
+/// zeta = sqrt(pi / 8), the probit-sigmoid matching constant.
+pub const ZETA: f32 = 0.626_657_07;
+
+/// Moment-matched sigmoid: (mu, var) -> (mean, variance).
+#[inline(always)]
+pub fn sigmoid_moments(mu: f32, var: f32) -> (f32, f32) {
+    let denom = (1.0 + ZETA * ZETA * var).sqrt();
+    let m = norm_cdf(ZETA * mu / denom);
+    let shrink = 1.0 - 1.0 / denom;
+    let v = (m * (1.0 - m) * shrink).max(0.0);
+    (m, v)
+}
+
+/// Moment-matched tanh via `tanh(x) = 2 sigmoid(2x) - 1`.
+#[inline(always)]
+pub fn tanh_moments(mu: f32, var: f32) -> (f32, f32) {
+    let (m, v) = sigmoid_moments(2.0 * mu, 4.0 * var);
+    (2.0 * m - 1.0, 4.0 * v)
+}
+
+/// PFP sigmoid over a tensor. Input rep Var; output rep E2 (activation
+/// contract, like ReLU).
+pub fn pfp_sigmoid(input: ProbTensor) -> ProbTensor {
+    debug_assert_eq!(input.rep, Rep::Var);
+    let shape = input.mu.shape().to_vec();
+    let mu_in = input.mu.into_data();
+    let var_in = input.aux.into_data();
+    let mut mu = vec![0.0f32; mu_in.len()];
+    let mut e2 = vec![0.0f32; mu_in.len()];
+    for i in 0..mu_in.len() {
+        let (m, v) = sigmoid_moments(mu_in[i], var_in[i]);
+        mu[i] = m;
+        e2[i] = v + m * m;
+    }
+    ProbTensor::new(
+        Tensor::new(shape.clone(), mu).unwrap(),
+        Tensor::new(shape, e2).unwrap(),
+        Rep::E2,
+    )
+}
+
+/// PFP tanh over a tensor (rep contract as above).
+pub fn pfp_tanh(input: ProbTensor) -> ProbTensor {
+    debug_assert_eq!(input.rep, Rep::Var);
+    let shape = input.mu.shape().to_vec();
+    let mu_in = input.mu.into_data();
+    let var_in = input.aux.into_data();
+    let mut mu = vec![0.0f32; mu_in.len()];
+    let mut e2 = vec![0.0f32; mu_in.len()];
+    for i in 0..mu_in.len() {
+        let (m, v) = tanh_moments(mu_in[i], var_in[i]);
+        mu[i] = m;
+        e2[i] = v + m * m;
+    }
+    ProbTensor::new(
+        Tensor::new(shape.clone(), mu).unwrap(),
+        Tensor::new(shape, e2).unwrap(),
+        Rep::E2,
+    )
+}
+
+/// Probabilistic 2x2/stride-2 average pool over NCHW (mean, variance):
+/// exact for independent Gaussians — means average, variances get 1/k^2.
+pub fn pfp_avgpool2(input: &ProbTensor) -> ProbTensor {
+    debug_assert_eq!(input.rep, Rep::Var);
+    let s = input.mu.shape();
+    let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mu = input.mu.data();
+    let var = input.aux.data();
+    let mut out_mu = vec![0.0f32; n * c * oh * ow];
+    let mut out_var = vec![0.0f32; n * c * oh * ow];
+    for plane in 0..n * c {
+        let base = plane * h * w;
+        let obase = plane * oh * ow;
+        for oy in 0..oh {
+            let r0 = base + 2 * oy * w;
+            let r1 = r0 + w;
+            for ox in 0..ow {
+                let i = 2 * ox;
+                out_mu[obase + oy * ow + ox] =
+                    0.25 * (mu[r0 + i] + mu[r0 + i + 1] + mu[r1 + i] + mu[r1 + i + 1]);
+                out_var[obase + oy * ow + ox] = 0.0625
+                    * (var[r0 + i] + var[r0 + i + 1] + var[r1 + i] + var[r1 + i + 1]);
+            }
+        }
+    }
+    ProbTensor::new(
+        Tensor::new(vec![n, c, oh, ow], out_mu).unwrap(),
+        Tensor::new(vec![n, c, oh, ow], out_var).unwrap(),
+        Rep::Var,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::SplitMix64;
+
+    fn mc_moments(f: impl Fn(f64) -> f64, mu: f32, var: f32, n: usize) -> (f64, f64) {
+        let mut rng = SplitMix64::new(99);
+        let std = (var as f64).sqrt();
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let y = f(mu as f64 + std * rng.normal());
+            s += y;
+            s2 += y * y;
+        }
+        let m = s / n as f64;
+        (m, s2 / n as f64 - m * m)
+    }
+
+    #[test]
+    fn sigmoid_mean_against_monte_carlo() {
+        for (mu, var) in [(-2.0f32, 0.5f32), (0.0, 1.0), (1.5, 2.0), (3.0, 0.2)] {
+            let (m, _) = sigmoid_moments(mu, var);
+            let (mc_m, _) = mc_moments(|x| 1.0 / (1.0 + (-x).exp()), mu, var, 200_000);
+            assert!(
+                (m as f64 - mc_m).abs() < 0.02,
+                "sigmoid mean mu={mu} var={var}: {m} vs {mc_m}"
+            );
+        }
+    }
+
+    #[test]
+    fn sigmoid_variance_against_monte_carlo() {
+        // the variance shrinkage is a rougher approximation: 30% rel. tol.
+        for (mu, var) in [(0.0f32, 1.0f32), (1.0, 2.0), (-1.0, 0.5)] {
+            let (_, v) = sigmoid_moments(mu, var);
+            let (_, mc_v) = mc_moments(|x| 1.0 / (1.0 + (-x).exp()), mu, var, 200_000);
+            assert!(
+                (v as f64 - mc_v).abs() < 0.3 * mc_v.max(0.01),
+                "sigmoid var mu={mu} var={var}: {v} vs {mc_v}"
+            );
+        }
+    }
+
+    #[test]
+    fn tanh_mean_against_monte_carlo() {
+        for (mu, var) in [(-1.0f32, 0.5f32), (0.0, 1.0), (0.8, 0.3)] {
+            let (m, _) = tanh_moments(mu, var);
+            let (mc_m, _) = mc_moments(|x| x.tanh(), mu, var, 200_000);
+            assert!(
+                (m as f64 - mc_m).abs() < 0.03,
+                "tanh mean mu={mu} var={var}: {m} vs {mc_m}"
+            );
+        }
+    }
+
+    #[test]
+    fn sigmoid_bounds_and_monotonicity() {
+        check(40, |g| {
+            let mu = g.normal(3.0);
+            let var = g.normal(2.0).abs() + 1e-6;
+            let (m, v) = sigmoid_moments(mu, var);
+            assert!((0.0..=1.0).contains(&m));
+            assert!(v >= 0.0 && v <= 0.25 + 1e-6); // Var[sigmoid] <= 1/4
+            // mean monotone in mu
+            let (m2, _) = sigmoid_moments(mu + 0.5, var);
+            assert!(m2 >= m - 1e-6);
+        });
+    }
+
+    #[test]
+    fn deterministic_limits() {
+        // var -> 0 reduces to the probit approximation of sigmoid itself,
+        // whose intrinsic error is ~1e-2 at moderate |x| — that is the
+        // tolerance here, not a numerical bug.
+        let (m, v) = sigmoid_moments(1.2, 1e-12);
+        assert!((m - 1.0 / (1.0 + (-1.2f32).exp())).abs() < 1e-2);
+        assert!(v < 1e-6);
+        let (mt, vt) = tanh_moments(-0.7, 1e-12);
+        assert!((mt - (-0.7f32).tanh()).abs() < 2e-2);
+        assert!(vt < 1e-5);
+    }
+
+    #[test]
+    fn avgpool_exact_linearity() {
+        // constant plane: mean preserved, variance shrinks by 4
+        let mu = Tensor::full(vec![1, 1, 4, 4], 2.0);
+        let var = Tensor::full(vec![1, 1, 4, 4], 1.0);
+        let out = pfp_avgpool2(&ProbTensor::new(mu, var, Rep::Var));
+        assert_eq!(out.shape(), &[1, 1, 2, 2]);
+        assert!(out.mu.data().iter().all(|&m| (m - 2.0).abs() < 1e-6));
+        assert!(out.aux.data().iter().all(|&v| (v - 0.25).abs() < 1e-6));
+    }
+
+    #[test]
+    fn avgpool_mc_agreement() {
+        // E and Var of the average of 4 independent Gaussians is exact
+        let mut g = crate::util::prop::Gen::new(5);
+        let mu = Tensor::new(vec![1, 1, 2, 2], g.normal_vec(4, 1.0)).unwrap();
+        let var = Tensor::new(vec![1, 1, 2, 2], g.var_vec(4, 0.5)).unwrap();
+        let out = pfp_avgpool2(&ProbTensor::new(mu.clone(), var.clone(), Rep::Var));
+        let want_m: f32 = mu.data().iter().sum::<f32>() / 4.0;
+        let want_v: f32 = var.data().iter().sum::<f32>() / 16.0;
+        assert!((out.mu.data()[0] - want_m).abs() < 1e-6);
+        assert!((out.aux.data()[0] - want_v).abs() < 1e-6);
+    }
+
+    #[test]
+    fn activation_tensor_contract() {
+        let mut g = crate::util::prop::Gen::new(6);
+        let mu = Tensor::from_vec(g.normal_vec(32, 1.0));
+        let var = Tensor::from_vec(g.var_vec(32, 0.5));
+        let out = pfp_sigmoid(ProbTensor::new(mu, var, Rep::Var));
+        assert_eq!(out.rep, Rep::E2);
+        // Jensen: E[y^2] >= E[y]^2
+        for (m, e2) in out.mu.data().iter().zip(out.aux.data()) {
+            assert!(e2 - m * m >= -1e-6);
+        }
+    }
+}

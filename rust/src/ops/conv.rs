@@ -1,0 +1,285 @@
+//! PFP conv2d — Eq. 12's moment algebra over image patches.
+//!
+//! Lowered to the *same* scheduled joint dense kernel as the fully
+//! connected layer via im2col (exactly like the Pallas kernel in
+//! `python/compile/kernels/conv.py`), so conv inherits every schedule knob
+//! and the tuner tunes both operators with one search space. A direct
+//! (no-im2col) implementation is kept for the ablation bench.
+//!
+//! Layout: activations NCHW, weights OIHW, padding VALID, stride 1 (all
+//! the paper's LeNet-5 needs).
+
+use crate::tensor::{ProbTensor, Rep, Tensor};
+
+use super::dense::{
+    dense_kernel, DenseArgs, FirstLayer, JointEq12,
+};
+use super::schedule::Schedule;
+
+/// im2col: `[N, C, H, W]` -> (`[N*OH*OW, C*kh*kw]`, (n, oh, ow)).
+pub fn im2col(x: &Tensor, kh: usize, kw: usize) -> (Tensor, (usize, usize, usize)) {
+    let s = x.shape();
+    let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+    let (oh, ow) = (h - kh + 1, w - kw + 1);
+    let kk = c * kh * kw;
+    let d = x.data();
+    let mut out = vec![0.0f32; n * oh * ow * kk];
+    for img in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((img * oh + oy) * ow + ox) * kk;
+                let mut col = 0;
+                for ch in 0..c {
+                    let plane = (img * c + ch) * h * w;
+                    for dy in 0..kh {
+                        let src = plane + (oy + dy) * w + ox;
+                        out[row + col..row + col + kw].copy_from_slice(&d[src..src + kw]);
+                        col += kw;
+                    }
+                }
+            }
+        }
+    }
+    (Tensor::new(vec![n * oh * ow, kk], out).unwrap(), (n, oh, ow))
+}
+
+/// Scatter `[N*OH*OW, O]` back to NCHW `[N, O, OH, OW]`.
+fn col2im(cols: Tensor, n: usize, oh: usize, ow: usize) -> Tensor {
+    let o = cols.cols();
+    let d = cols.data();
+    let mut out = vec![0.0f32; n * o * oh * ow];
+    for img in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((img * oh + oy) * ow + ox) * o;
+                for ch in 0..o {
+                    out[((img * o + ch) * oh + oy) * ow + ox] = d[row + ch];
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n, o, oh, ow], out).unwrap()
+}
+
+/// Conv arguments: weights OIHW; aux follows the kernel's formulation
+/// (E[w^2] for Eq. 12, weight variance for Eq. 13).
+pub struct ConvArgs<'a> {
+    pub w_mu: &'a Tensor,
+    pub w_aux: &'a Tensor,
+    pub b_mu: Option<&'a [f32]>,
+    pub b_var: Option<&'a [f32]>,
+}
+
+fn conv_via_dense<A: super::dense::Accum>(
+    x_mu: &Tensor,
+    x_aux: &Tensor,
+    args: &ConvArgs<'_>,
+    sched: &Schedule,
+) -> (Tensor, Tensor) {
+    let ws = args.w_mu.shape();
+    let (o, i, kh, kw) = (ws[0], ws[1], ws[2], ws[3]);
+    debug_assert_eq!(x_mu.shape()[1], i);
+    let (pm, (n, oh, ow)) = im2col(x_mu, kh, kw);
+    let (pa, _) = im2col(x_aux, kh, kw);
+    let wm = args.w_mu.clone().reshape(vec![o, i * kh * kw]).unwrap();
+    let wa = args.w_aux.clone().reshape(vec![o, i * kh * kw]).unwrap();
+    let (mu, var) = dense_kernel::<A>(
+        &DenseArgs {
+            x_mu: &pm,
+            x_aux: &pa,
+            w_mu: &wm,
+            w_aux: &wa,
+            b_mu: args.b_mu,
+            b_var: args.b_var,
+        },
+        sched,
+    );
+    (col2im(mu, n, oh, ow), col2im(var, n, oh, ow))
+}
+
+/// Joint PFP conv2d (Eq. 12): activation aux = E[x^2], weight aux = E[w^2].
+/// Input rep `E2` -> output rep `Var`.
+pub fn pfp_conv2d_joint(
+    x: &ProbTensor,
+    args: &ConvArgs<'_>,
+    sched: &Schedule,
+) -> ProbTensor {
+    debug_assert_eq!(x.rep, Rep::E2);
+    let (mu, var) = conv_via_dense::<JointEq12>(&x.mu, &x.aux, args, sched);
+    ProbTensor::new(mu, var, Rep::Var)
+}
+
+/// First-layer PFP conv2d (Eq. 13): deterministic input, weight aux =
+/// weight variance.
+pub fn pfp_conv2d_first(x: &Tensor, args: &ConvArgs<'_>, sched: &Schedule) -> ProbTensor {
+    let x_sq = x.squared();
+    let (mu, var) = conv_via_dense::<FirstLayer>(x, &x_sq, args, sched);
+    ProbTensor::new(mu, var, Rep::Var)
+}
+
+/// Direct (no-im2col) joint conv — ablation reference for the im2col
+/// lowering decision (DESIGN.md §ablations).
+pub fn pfp_conv2d_direct(x: &ProbTensor, args: &ConvArgs<'_>) -> ProbTensor {
+    debug_assert_eq!(x.rep, Rep::E2);
+    let xs = x.shape();
+    let (n, c, h, w) = (xs[0], xs[1], xs[2], xs[3]);
+    let ws = args.w_mu.shape();
+    let (o, _, kh, kw) = (ws[0], ws[1], ws[2], ws[3]);
+    let (oh, ow) = (h - kh + 1, w - kw + 1);
+    let xm = x.mu.data();
+    let xe = x.aux.data();
+    let wm = args.w_mu.data();
+    let we = args.w_aux.data();
+    let mut out_mu = vec![0.0f32; n * o * oh * ow];
+    let mut out_var = vec![0.0f32; n * o * oh * ow];
+    for img in 0..n {
+        for oc in 0..o {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let (mut mu, mut e2, mut cross) = (0.0f32, 0.0f32, 0.0f32);
+                    for ic in 0..c {
+                        let plane = (img * c + ic) * h * w;
+                        let wplane = (oc * c + ic) * kh * kw;
+                        for dy in 0..kh {
+                            for dx in 0..kw {
+                                let xi = plane + (oy + dy) * w + (ox + dx);
+                                let wi = wplane + dy * kw + dx;
+                                let t = xm[xi] * wm[wi];
+                                mu += t;
+                                cross += t * t;
+                                e2 += xe[xi] * we[wi];
+                            }
+                        }
+                    }
+                    let oi = ((img * o + oc) * oh + oy) * ow + ox;
+                    let b_mu = args.b_mu.map_or(0.0, |b| b[oc]);
+                    let b_var = args.b_var.map_or(0.0, |b| b[oc]);
+                    out_mu[oi] = mu + b_mu;
+                    out_var[oi] = (e2 - cross + b_var).max(0.0);
+                }
+            }
+        }
+    }
+    ProbTensor::new(
+        Tensor::new(vec![n, o, oh, ow], out_mu).unwrap(),
+        Tensor::new(vec![n, o, oh, ow], out_var).unwrap(),
+        Rep::Var,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    fn rand_conv_case(
+        g: &mut Gen,
+    ) -> (ProbTensor, Tensor, Tensor, usize, usize, usize, usize, usize) {
+        let n = g.usize_in(1, 3);
+        let c = g.usize_in(1, 4);
+        let o = g.usize_in(1, 6);
+        let k = *g.pick(&[3usize, 5]);
+        let hw = g.usize_in(k + 1, 14);
+        let x_mu = Tensor::new(vec![n, c, hw, hw], g.normal_vec(n * c * hw * hw, 1.0)).unwrap();
+        let x_var = Tensor::new(vec![n, c, hw, hw], g.var_vec(n * c * hw * hw, 0.5)).unwrap();
+        let x_e2 = x_mu.zip(&x_var, |m, v| m * m + v).unwrap();
+        let x = ProbTensor::new(x_mu, x_e2, Rep::E2);
+        let w_mu = Tensor::new(vec![o, c, k, k], g.normal_vec(o * c * k * k, 0.2)).unwrap();
+        let w_var = Tensor::new(vec![o, c, k, k], g.var_vec(o * c * k * k, 0.02)).unwrap();
+        (x, w_mu, w_var, n, c, o, k, hw)
+    }
+
+    #[test]
+    fn im2col_shapes_and_values() {
+        // 1 image, 1 channel, 3x3, k=2 -> 4 patches of 4
+        let x = Tensor::new(
+            vec![1, 1, 3, 3],
+            vec![1., 2., 3., 4., 5., 6., 7., 8., 9.],
+        )
+        .unwrap();
+        let (p, (n, oh, ow)) = im2col(&x, 2, 2);
+        assert_eq!((n, oh, ow), (1, 2, 2));
+        assert_eq!(p.shape(), &[4, 4]);
+        assert_eq!(p.row(0), &[1., 2., 4., 5.]);
+        assert_eq!(p.row(3), &[5., 6., 8., 9.]);
+    }
+
+    #[test]
+    fn im2col_dense_matches_direct() {
+        check(8, |g| {
+            let (x, w_mu, w_var, ..) = rand_conv_case(g);
+            let w_e2 = w_mu.zip(&w_var, |m, v| m * m + v).unwrap();
+            let args = ConvArgs {
+                w_mu: &w_mu,
+                w_aux: &w_e2,
+                b_mu: None,
+                b_var: None,
+            };
+            let a = pfp_conv2d_joint(&x, &args, &Schedule::tuned(1));
+            let b = pfp_conv2d_direct(&x, &args);
+            assert!(a.mu.allclose(&b.mu, 1e-4, 1e-4), "conv mu mismatch");
+            assert!(a.aux.allclose(&b.aux, 1e-3, 1e-3), "conv var mismatch");
+        });
+    }
+
+    #[test]
+    fn conv_first_layer_behaves_like_eq13() {
+        let mut g = Gen::new(4);
+        let x = Tensor::new(vec![1, 1, 8, 8], g.normal_vec(64, 1.0)).unwrap();
+        let w_mu = Tensor::new(vec![2, 1, 3, 3], g.normal_vec(18, 0.3)).unwrap();
+        let w_var = Tensor::new(vec![2, 1, 3, 3], g.var_vec(18, 0.05)).unwrap();
+        let w_e2 = w_mu.zip(&w_var, |m, v| m * m + v).unwrap();
+        let first = pfp_conv2d_first(
+            &x,
+            &ConvArgs { w_mu: &w_mu, w_aux: &w_var, b_mu: None, b_var: None },
+            &Schedule::tuned(1),
+        );
+        // generic kernel with x_e2 = x^2 and w_e2 must agree (cancellation)
+        let x_prob = ProbTensor::new(x.clone(), x.squared(), Rep::E2);
+        let generic = pfp_conv2d_joint(
+            &x_prob,
+            &ConvArgs { w_mu: &w_mu, w_aux: &w_e2, b_mu: None, b_var: None },
+            &Schedule::tuned(1),
+        );
+        assert!(first.mu.allclose(&generic.mu, 1e-4, 1e-4));
+        assert!(first.aux.allclose(&generic.aux, 2e-3, 2e-3));
+    }
+
+    #[test]
+    fn bias_broadcast_per_channel() {
+        let mut g = Gen::new(6);
+        let x_mu = Tensor::new(vec![1, 1, 4, 4], g.normal_vec(16, 1.0)).unwrap();
+        let x = ProbTensor::new(x_mu.clone(), x_mu.squared(), Rep::E2);
+        let w_mu = Tensor::new(vec![2, 1, 3, 3], vec![0.0; 18]).unwrap();
+        let w_e2 = Tensor::new(vec![2, 1, 3, 3], vec![0.0; 18]).unwrap();
+        let b_mu = [1.0f32, 2.0];
+        let b_var = [0.1f32, 0.2];
+        let out = pfp_conv2d_joint(
+            &x,
+            &ConvArgs {
+                w_mu: &w_mu, w_aux: &w_e2,
+                b_mu: Some(&b_mu), b_var: Some(&b_var),
+            },
+            &Schedule::tuned(1),
+        );
+        // zero weights: output = bias per channel
+        assert!(out.mu.data()[..4].iter().all(|&v| (v - 1.0).abs() < 1e-6));
+        assert!(out.mu.data()[4..].iter().all(|&v| (v - 2.0).abs() < 1e-6));
+        assert!(out.aux.data()[..4].iter().all(|&v| (v - 0.1).abs() < 1e-6));
+    }
+
+    #[test]
+    fn output_shape_valid_padding() {
+        let mut g = Gen::new(8);
+        let x_mu = Tensor::new(vec![2, 1, 28, 28], g.normal_vec(2 * 784, 1.0)).unwrap();
+        let x = ProbTensor::new(x_mu.clone(), x_mu.squared(), Rep::E2);
+        let w_mu = Tensor::new(vec![6, 1, 5, 5], g.normal_vec(150, 0.2)).unwrap();
+        let w_e2 = w_mu.squared();
+        let out = pfp_conv2d_joint(
+            &x,
+            &ConvArgs { w_mu: &w_mu, w_aux: &w_e2, b_mu: None, b_var: None },
+            &Schedule::tuned(1),
+        );
+        assert_eq!(out.shape(), &[2, 6, 24, 24]);
+    }
+}

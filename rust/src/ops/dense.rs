@@ -1,0 +1,734 @@
+//! Scheduled PFP dense operators — the paper's hottest kernel (Table 2).
+//!
+//! All formulations share one generic, monomorphized loop nest
+//! parameterized by an [`Accum`] (the per-k update), so every variant
+//! benefits from the same schedule knobs and Fig. 5's comparison is
+//! apples-to-apples:
+//!
+//! * [`JointEq12`] — joint mean+variance, second-raw-moment form (Eq. 12):
+//!   `t = mu_x*mu_w; mu += t; var += E[x^2]*E[w^2] - t*t` — the mean-path
+//!   product is *reused* by the variance path (the paper's joint-operator
+//!   data reuse), two accumulators per lane.
+//! * [`JointEq5`] — joint, original form (Eq. 5): recomputes
+//!   `mu_w^2 (E[x^2] - mu_x^2)` with no reuse; more arithmetic per k.
+//! * [`VarForm`] — Eq. 7, for producers that hand variances directly.
+//! * [`FirstLayer`] — Eq. 13 (deterministic input).
+//! * [`MeanOnly`] / [`VarOnlyEq12`] / [`VarOnlyEq5`] — the "separate
+//!   operators" split (one operator = one compute rule) for Fig. 5.
+//!
+//! Layout: activations `[M, K]`, weights `[N, K]` row-major, so the `Mnk`
+//! order walks two contiguous rows (dot-product form) while `Mkn` (the
+//! untuned baseline) strides the weight matrix by K in its inner loop.
+
+use crate::tensor::Tensor;
+use crate::util::threadpool::split_ranges;
+use crossbeam_utils::thread as cb;
+
+use super::schedule::{LoopOrder, Schedule};
+
+/// Per-k accumulator contract. `step` must be `#[inline(always)]`-cheap;
+/// the schedule machinery instantiates 1..=16 independent copies for
+/// unroll/vectorize lanes and merges them at the end.
+pub trait Accum: Copy + Default {
+    /// Consume one reduction element. `xa`/`wa` are the auxiliary operands
+    /// (E[x^2] / variance, depending on the formulation).
+    fn step(&mut self, xm: f32, xa: f32, wm: f32, wa: f32);
+    /// Merge a lane into self.
+    fn merge(&mut self, other: Self);
+    /// (mean contribution, raw variance contribution).
+    fn finish(self) -> (f32, f32);
+}
+
+/// Eq. 12 joint kernel (raw-moment form, shared mean product).
+///
+/// Maximal-reuse formulation: the mean-path product `t = mu_x*mu_w` feeds
+/// both the mean accumulator and the variance accumulator
+/// (`var += E[x^2]E[w^2] - t^2`), and the subtraction is folded into the
+/// k-loop so the kernel carries only **two** accumulators per lane — the
+/// measured-fastest variant on this host (see EXPERIMENTS.md §Perf; the
+/// three-accumulator version pays ~75% more at wide lane counts from
+/// register pressure).
+#[derive(Clone, Copy, Default)]
+pub struct JointEq12 {
+    mu: f32,
+    var: f32,
+}
+
+impl Accum for JointEq12 {
+    #[inline(always)]
+    fn step(&mut self, xm: f32, xa: f32, wm: f32, wa: f32) {
+        let t = xm * wm;
+        self.mu += t;
+        self.var += xa * wa - t * t;
+    }
+
+    #[inline(always)]
+    fn merge(&mut self, o: Self) {
+        self.mu += o.mu;
+        self.var += o.var;
+    }
+
+    #[inline(always)]
+    fn finish(self) -> (f32, f32) {
+        (self.mu, self.var)
+    }
+}
+
+/// Eq. 5 joint kernel (original form): aux operands are E[x^2] and the
+/// weight *variance*; the mean product is not reused.
+#[derive(Clone, Copy, Default)]
+pub struct JointEq5 {
+    mu: f32,
+    var: f32,
+}
+
+impl Accum for JointEq5 {
+    #[inline(always)]
+    fn step(&mut self, xm: f32, xa: f32, wm: f32, wa: f32) {
+        self.mu += xm * wm;
+        // sigma_w^2 * E[x^2] + mu_w^2 * (E[x^2] - mu_x^2)
+        self.var += wa * xa + wm * wm * (xa - xm * xm);
+    }
+
+    #[inline(always)]
+    fn merge(&mut self, o: Self) {
+        self.mu += o.mu;
+        self.var += o.var;
+    }
+
+    #[inline(always)]
+    fn finish(self) -> (f32, f32) {
+        (self.mu, self.var)
+    }
+}
+
+/// Eq. 7 joint kernel (variance form): aux operands are activation and
+/// weight variances.
+#[derive(Clone, Copy, Default)]
+pub struct VarForm {
+    mu: f32,
+    var: f32,
+}
+
+impl Accum for VarForm {
+    #[inline(always)]
+    fn step(&mut self, xm: f32, xa: f32, wm: f32, wa: f32) {
+        self.mu += xm * wm;
+        // sigma_w^2 * E[x^2] + mu_w^2 * sigma_x^2
+        self.var += (xm * xm + xa) * wa + xa * wm * wm;
+    }
+
+    #[inline(always)]
+    fn merge(&mut self, o: Self) {
+        self.mu += o.mu;
+        self.var += o.var;
+    }
+
+    #[inline(always)]
+    fn finish(self) -> (f32, f32) {
+        (self.mu, self.var)
+    }
+}
+
+/// Eq. 13 first-layer kernel (deterministic input): aux weight operand is
+/// the weight variance; activation aux is ignored.
+#[derive(Clone, Copy, Default)]
+pub struct FirstLayer {
+    mu: f32,
+    var: f32,
+}
+
+impl Accum for FirstLayer {
+    #[inline(always)]
+    fn step(&mut self, xm: f32, _xa: f32, wm: f32, wa: f32) {
+        self.mu += xm * wm;
+        self.var += xm * xm * wa;
+    }
+
+    #[inline(always)]
+    fn merge(&mut self, o: Self) {
+        self.mu += o.mu;
+        self.var += o.var;
+    }
+
+    #[inline(always)]
+    fn finish(self) -> (f32, f32) {
+        (self.mu, self.var)
+    }
+}
+
+/// Mean-only pass (the "separate operators" split, Fig. 5).
+#[derive(Clone, Copy, Default)]
+pub struct MeanOnly {
+    mu: f32,
+}
+
+impl Accum for MeanOnly {
+    #[inline(always)]
+    fn step(&mut self, xm: f32, _xa: f32, wm: f32, _wa: f32) {
+        self.mu += xm * wm;
+    }
+
+    #[inline(always)]
+    fn merge(&mut self, o: Self) {
+        self.mu += o.mu;
+    }
+
+    #[inline(always)]
+    fn finish(self) -> (f32, f32) {
+        (self.mu, 0.0)
+    }
+}
+
+/// Variance-only pass, Eq. 12 form (recomputes the mean product — that is
+/// the point of the separate-operator baseline).
+#[derive(Clone, Copy, Default)]
+pub struct VarOnlyEq12 {
+    e2: f32,
+    cross: f32,
+}
+
+impl Accum for VarOnlyEq12 {
+    #[inline(always)]
+    fn step(&mut self, xm: f32, xa: f32, wm: f32, wa: f32) {
+        let t = xm * wm;
+        self.cross += t * t;
+        self.e2 += xa * wa;
+    }
+
+    #[inline(always)]
+    fn merge(&mut self, o: Self) {
+        self.e2 += o.e2;
+        self.cross += o.cross;
+    }
+
+    #[inline(always)]
+    fn finish(self) -> (f32, f32) {
+        (0.0, self.e2 - self.cross)
+    }
+}
+
+/// Variance-only pass, Eq. 5 form.
+#[derive(Clone, Copy, Default)]
+pub struct VarOnlyEq5 {
+    var: f32,
+}
+
+impl Accum for VarOnlyEq5 {
+    #[inline(always)]
+    fn step(&mut self, xm: f32, xa: f32, wm: f32, wa: f32) {
+        self.var += wa * xa + wm * wm * (xa - xm * xm);
+    }
+
+    #[inline(always)]
+    fn merge(&mut self, o: Self) {
+        self.var += o.var;
+    }
+
+    #[inline(always)]
+    fn finish(self) -> (f32, f32) {
+        (0.0, self.var)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// inner reduction with schedule knobs
+// ---------------------------------------------------------------------------
+
+/// Reduce one (m, n) pair over k with `LANES` independent accumulators
+/// (the unroll/vectorize machinery; LANES is a compile-time constant so
+/// LLVM sees a fixed-width pattern it can vectorize).
+#[inline(always)]
+fn reduce_lanes<A: Accum, const LANES: usize>(
+    xm: &[f32],
+    xa: &[f32],
+    wm: &[f32],
+    wa: &[f32],
+) -> A {
+    let k = xm.len();
+    let mut lanes = [A::default(); LANES];
+    let chunks = k / LANES;
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            let i = base + l;
+            lanes[l].step(xm[i], xa[i], wm[i], wa[i]);
+        }
+    }
+    let mut acc = lanes[0];
+    for lane in lanes.iter().skip(1) {
+        acc.merge(*lane);
+    }
+    for i in chunks * LANES..k {
+        acc.step(xm[i], xa[i], wm[i], wa[i]);
+    }
+    acc
+}
+
+#[inline(always)]
+fn reduce<A: Accum>(sched: &Schedule, xm: &[f32], xa: &[f32], wm: &[f32], wa: &[f32]) -> A {
+    let mut lanes = if sched.vectorize { 8 } else { 1 } * sched.unroll.max(1);
+    // Never use more lanes than reduction elements: a short K (e.g. a 5x5
+    // single-channel conv's K=25) would otherwise pay full lane-array
+    // init + merge while every element lands in the scalar remainder.
+    while lanes > 1 && lanes > xm.len() {
+        lanes /= 2;
+    }
+    match lanes {
+        1 => reduce_lanes::<A, 1>(xm, xa, wm, wa),
+        2 => reduce_lanes::<A, 2>(xm, xa, wm, wa),
+        4 => reduce_lanes::<A, 4>(xm, xa, wm, wa),
+        8 => reduce_lanes::<A, 8>(xm, xa, wm, wa),
+        16 => reduce_lanes::<A, 16>(xm, xa, wm, wa),
+        32 => reduce_lanes::<A, 32>(xm, xa, wm, wa),
+        _ => reduce_lanes::<A, 64>(xm, xa, wm, wa),
+    }
+}
+
+/// Inputs to a dense kernel: mean + aux matrices for activations `[M, K]`
+/// and weights `[N, K]`, with optional (mu, var) bias vectors `[N]`.
+pub struct DenseArgs<'a> {
+    pub x_mu: &'a Tensor,
+    pub x_aux: &'a Tensor,
+    pub w_mu: &'a Tensor,
+    pub w_aux: &'a Tensor,
+    pub b_mu: Option<&'a [f32]>,
+    pub b_var: Option<&'a [f32]>,
+}
+
+impl<'a> DenseArgs<'a> {
+    fn dims(&self) -> (usize, usize, usize) {
+        let m = self.x_mu.rows();
+        let k = self.x_mu.cols();
+        let n = self.w_mu.rows();
+        debug_assert_eq!(self.w_mu.cols(), k);
+        debug_assert_eq!(self.x_aux.shape(), self.x_mu.shape());
+        debug_assert_eq!(self.w_aux.shape(), self.w_mu.shape());
+        (m, k, n)
+    }
+}
+
+/// Run kernel `A` over rows `rows`, writing `[len(rows), N]` chunks.
+fn run_rows<A: Accum>(
+    args: &DenseArgs<'_>,
+    sched: &Schedule,
+    rows: std::ops::Range<usize>,
+    out_mu: &mut [f32],
+    out_var: &mut [f32],
+) {
+    let (_, k, n) = args.dims();
+    let xm_all = args.x_mu.data();
+    let xa_all = args.x_aux.data();
+    let wm_all = args.w_mu.data();
+    let wa_all = args.w_aux.data();
+
+    match sched.loop_order {
+        LoopOrder::Mnk if sched.tile_n == 0 && sched.tile_k == 0 => {
+            for (local, m) in rows.enumerate() {
+                let xm = &xm_all[m * k..(m + 1) * k];
+                let xa = &xa_all[m * k..(m + 1) * k];
+                for nn in 0..n {
+                    let wm = &wm_all[nn * k..(nn + 1) * k];
+                    let wa = &wa_all[nn * k..(nn + 1) * k];
+                    let acc: A = reduce(sched, xm, xa, wm, wa);
+                    let (mu, var) = acc.finish();
+                    out_mu[local * n + nn] = mu;
+                    out_var[local * n + nn] = var;
+                }
+            }
+        }
+        LoopOrder::Mnk => {
+            // tiled: block the n and k loops
+            let tn = if sched.tile_n == 0 { n } else { sched.tile_n };
+            let tk = if sched.tile_k == 0 { k } else { sched.tile_k };
+            for (local, m) in rows.enumerate() {
+                let xm = &xm_all[m * k..(m + 1) * k];
+                let xa = &xa_all[m * k..(m + 1) * k];
+                let mut n0 = 0;
+                while n0 < n {
+                    let n1 = (n0 + tn).min(n);
+                    let mut accs: Vec<A> = vec![A::default(); n1 - n0];
+                    let mut k0 = 0;
+                    while k0 < k {
+                        let k1 = (k0 + tk).min(k);
+                        for (ai, nn) in (n0..n1).enumerate() {
+                            let wm = &wm_all[nn * k + k0..nn * k + k1];
+                            let wa = &wa_all[nn * k + k0..nn * k + k1];
+                            let mut part: A = reduce(sched, &xm[k0..k1], &xa[k0..k1], wm, wa);
+                            part.merge(accs[ai]);
+                            accs[ai] = part;
+                        }
+                        k0 = k1;
+                    }
+                    for (ai, nn) in (n0..n1).enumerate() {
+                        let (mu, var) = accs[ai].finish();
+                        out_mu[local * n + nn] = mu;
+                        out_var[local * n + nn] = var;
+                    }
+                    n0 = n1;
+                }
+            }
+        }
+        LoopOrder::Mkn => {
+            // naive baseline: inner loop strides the weight matrix by k.
+            for (local, m) in rows.enumerate() {
+                let mut accs: Vec<A> = vec![A::default(); n];
+                for kk in 0..k {
+                    let xm = xm_all[m * k + kk];
+                    let xa = xa_all[m * k + kk];
+                    if sched.vectorize {
+                        // "vectorization without reordering": gather strided
+                        // lanes into fixed-width temporaries — extra traffic,
+                        // no contiguous loads; reproduces Table 2's slowdown.
+                        let mut nn = 0;
+                        while nn + 8 <= n {
+                            let mut wm_l = [0.0f32; 8];
+                            let mut wa_l = [0.0f32; 8];
+                            for l in 0..8 {
+                                wm_l[l] = wm_all[(nn + l) * k + kk];
+                                wa_l[l] = wa_all[(nn + l) * k + kk];
+                            }
+                            for l in 0..8 {
+                                accs[nn + l].step(xm, xa, wm_l[l], wa_l[l]);
+                            }
+                            nn += 8;
+                        }
+                        for nn2 in nn..n {
+                            accs[nn2].step(xm, xa, wm_all[nn2 * k + kk], wa_all[nn2 * k + kk]);
+                        }
+                    } else {
+                        for (nn, acc) in accs.iter_mut().enumerate() {
+                            acc.step(xm, xa, wm_all[nn * k + kk], wa_all[nn * k + kk]);
+                        }
+                    }
+                }
+                for (nn, acc) in accs.into_iter().enumerate() {
+                    let (mu, var) = acc.finish();
+                    out_mu[local * n + nn] = mu;
+                    out_var[local * n + nn] = var;
+                }
+            }
+        }
+    }
+}
+
+/// Execute kernel `A` with schedule `sched` -> (mu `[M,N]`, var `[M,N]`).
+pub fn dense_kernel<A: Accum>(args: &DenseArgs<'_>, sched: &Schedule) -> (Tensor, Tensor) {
+    let (m, _, n) = args.dims();
+    let mut out_mu = vec![0.0f32; m * n];
+    let mut out_var = vec![0.0f32; m * n];
+
+    let threads = sched.threads.max(1).min(m.max(1));
+    if threads <= 1 {
+        run_rows::<A>(args, sched, 0..m, &mut out_mu, &mut out_var);
+    } else {
+        let ranges = split_ranges(m, threads);
+        // split both output buffers into matching disjoint row chunks
+        let mut mu_rest: &mut [f32] = &mut out_mu;
+        let mut var_rest: &mut [f32] = &mut out_var;
+        let mut chunks = Vec::new();
+        for r in ranges {
+            let take = (r.end - r.start) * n;
+            let (mu_head, mu_tail) = mu_rest.split_at_mut(take);
+            let (var_head, var_tail) = var_rest.split_at_mut(take);
+            chunks.push((r, mu_head, var_head));
+            mu_rest = mu_tail;
+            var_rest = var_tail;
+        }
+        cb::scope(|s| {
+            for (r, mu_chunk, var_chunk) in chunks {
+                s.spawn(move |_| run_rows::<A>(args, sched, r, mu_chunk, var_chunk));
+            }
+        })
+        .expect("dense worker panicked");
+    }
+
+    // bias + clamp epilogue
+    if let Some(b) = args.b_mu {
+        for row in out_mu.chunks_mut(n) {
+            for (o, bv) in row.iter_mut().zip(b) {
+                *o += bv;
+            }
+        }
+    }
+    match args.b_var {
+        Some(b) => {
+            for row in out_var.chunks_mut(n) {
+                for (o, bv) in row.iter_mut().zip(b) {
+                    *o = (*o + bv).max(0.0);
+                }
+            }
+        }
+        None => {
+            for o in out_var.iter_mut() {
+                *o = o.max(0.0);
+            }
+        }
+    }
+
+    (
+        Tensor::new(vec![m, n], out_mu).unwrap(),
+        Tensor::new(vec![m, n], out_var).unwrap(),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// public operator entry points
+// ---------------------------------------------------------------------------
+
+/// Joint PFP dense, Eq. 12 (the production operator).
+/// aux inputs: activation E[x^2], weight E[w^2].
+pub fn pfp_dense_joint(args: &DenseArgs<'_>, sched: &Schedule) -> (Tensor, Tensor) {
+    dense_kernel::<JointEq12>(args, sched)
+}
+
+/// Joint PFP dense, original Eq. 5 form.
+/// aux inputs: activation E[x^2], weight *variance*.
+pub fn pfp_dense_joint_eq5(args: &DenseArgs<'_>, sched: &Schedule) -> (Tensor, Tensor) {
+    dense_kernel::<JointEq5>(args, sched)
+}
+
+/// Variance-form PFP dense, Eq. 7.
+/// aux inputs: activation variance, weight variance.
+pub fn pfp_dense_varform(args: &DenseArgs<'_>, sched: &Schedule) -> (Tensor, Tensor) {
+    dense_kernel::<VarForm>(args, sched)
+}
+
+/// First-layer PFP dense, Eq. 13 (deterministic input).
+/// aux inputs: ignored activation aux, weight *variance*.
+pub fn pfp_dense_first(args: &DenseArgs<'_>, sched: &Schedule) -> (Tensor, Tensor) {
+    dense_kernel::<FirstLayer>(args, sched)
+}
+
+/// Separate-operator PFP dense (Fig. 5 baseline): two full passes over the
+/// data — a mean pass and a variance pass with no term sharing.
+/// `eq5 = true` uses the Eq. 5 variance form (weight variance aux),
+/// otherwise Eq. 12 (weight E[w^2] aux).
+pub fn pfp_dense_separate(
+    args: &DenseArgs<'_>,
+    sched: &Schedule,
+    eq5: bool,
+) -> (Tensor, Tensor) {
+    let (mu, _) = dense_kernel::<MeanOnly>(
+        &DenseArgs { b_var: None, ..*args },
+        sched,
+    );
+    let (_, var) = if eq5 {
+        dense_kernel::<VarOnlyEq5>(&DenseArgs { b_mu: None, ..*args }, sched)
+    } else {
+        dense_kernel::<VarOnlyEq12>(&DenseArgs { b_mu: None, ..*args }, sched)
+    };
+    (mu, var)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    fn rand_dense(g: &mut Gen, m: usize, k: usize, n: usize) -> (Tensor, Tensor, Tensor, Tensor) {
+        let x_mu = Tensor::new(vec![m, k], g.normal_vec(m * k, 1.0)).unwrap();
+        let x_var = Tensor::new(vec![m, k], g.var_vec(m * k, 1.0)).unwrap();
+        let w_mu = Tensor::new(vec![n, k], g.normal_vec(n * k, 0.2)).unwrap();
+        let w_var = Tensor::new(vec![n, k], g.var_vec(n * k, 0.02)).unwrap();
+        (x_mu, x_var, w_mu, w_var)
+    }
+
+    fn e2_of(mu: &Tensor, var: &Tensor) -> Tensor {
+        mu.zip(var, |m, v| m * m + v).unwrap()
+    }
+
+    /// Straightforward O(mnk) Eq. 12 reference, no schedule machinery.
+    fn naive_eq12(
+        x_mu: &Tensor,
+        x_e2: &Tensor,
+        w_mu: &Tensor,
+        w_e2: &Tensor,
+    ) -> (Tensor, Tensor) {
+        let (m, k, n) = (x_mu.rows(), x_mu.cols(), w_mu.rows());
+        let mut mu = vec![0.0f32; m * n];
+        let mut var = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let (mut a, mut e, mut c) = (0.0f32, 0.0f32, 0.0f32);
+                for kk in 0..k {
+                    let xm = x_mu.data()[i * k + kk];
+                    let wm = w_mu.data()[j * k + kk];
+                    a += xm * wm;
+                    c += xm * wm * xm * wm;
+                    e += x_e2.data()[i * k + kk] * w_e2.data()[j * k + kk];
+                }
+                mu[i * n + j] = a;
+                var[i * n + j] = (e - c).max(0.0);
+            }
+        }
+        (
+            Tensor::new(vec![m, n], mu).unwrap(),
+            Tensor::new(vec![m, n], var).unwrap(),
+        )
+    }
+
+    #[test]
+    fn all_schedules_agree_with_naive() {
+        let schedules = [
+            Schedule::baseline(),
+            Schedule::baseline().with_vectorize(true),
+            Schedule::tuned(1),
+            Schedule::tuned(2),
+            Schedule::tiled(8, 32),
+            Schedule::tuned(1).with_unroll(4),
+            Schedule::tuned(1).with_tiles(16, 64),
+        ];
+        check(12, |g| {
+            let m = g.usize_in(1, 12);
+            let k = g.usize_in(1, 96);
+            let n = g.usize_in(1, 40);
+            let (x_mu, x_var, w_mu, w_var) = rand_dense(g, m, k, n);
+            let x_e2 = e2_of(&x_mu, &x_var);
+            let w_e2 = e2_of(&w_mu, &w_var);
+            let args = DenseArgs {
+                x_mu: &x_mu,
+                x_aux: &x_e2,
+                w_mu: &w_mu,
+                w_aux: &w_e2,
+                b_mu: None,
+                b_var: None,
+            };
+            let (want_mu, want_var) = naive_eq12(&x_mu, &x_e2, &w_mu, &w_e2);
+            for s in &schedules {
+                let (mu, var) = pfp_dense_joint(&args, s);
+                assert!(
+                    mu.allclose(&want_mu, 1e-4, 1e-4),
+                    "mu mismatch {} [{m},{k},{n}]",
+                    s.tag()
+                );
+                assert!(
+                    var.allclose(&want_var, 1e-3, 1e-3),
+                    "var mismatch {} [{m},{k},{n}]",
+                    s.tag()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn formulations_are_equivalent() {
+        // Eq. 5 == Eq. 12 == Eq. 7 == separate, on matching inputs.
+        check(12, |g| {
+            let m = g.usize_in(1, 8);
+            let k = g.usize_in(1, 64);
+            let n = g.usize_in(1, 24);
+            let (x_mu, x_var, w_mu, w_var) = rand_dense(g, m, k, n);
+            let x_e2 = e2_of(&x_mu, &x_var);
+            let w_e2 = e2_of(&w_mu, &w_var);
+            let s = Schedule::tuned(1);
+
+            let eq12 = pfp_dense_joint(
+                &DenseArgs {
+                    x_mu: &x_mu, x_aux: &x_e2, w_mu: &w_mu, w_aux: &w_e2,
+                    b_mu: None, b_var: None,
+                },
+                &s,
+            );
+            let eq5 = pfp_dense_joint_eq5(
+                &DenseArgs {
+                    x_mu: &x_mu, x_aux: &x_e2, w_mu: &w_mu, w_aux: &w_var,
+                    b_mu: None, b_var: None,
+                },
+                &s,
+            );
+            let eq7 = pfp_dense_varform(
+                &DenseArgs {
+                    x_mu: &x_mu, x_aux: &x_var, w_mu: &w_mu, w_aux: &w_var,
+                    b_mu: None, b_var: None,
+                },
+                &s,
+            );
+            let sep = pfp_dense_separate(
+                &DenseArgs {
+                    x_mu: &x_mu, x_aux: &x_e2, w_mu: &w_mu, w_aux: &w_e2,
+                    b_mu: None, b_var: None,
+                },
+                &s,
+                false,
+            );
+            assert!(eq5.0.allclose(&eq12.0, 1e-4, 1e-4));
+            assert!(eq5.1.allclose(&eq12.1, 2e-3, 2e-3), "eq5 vs eq12 var");
+            assert!(eq7.0.allclose(&eq12.0, 1e-4, 1e-4));
+            assert!(eq7.1.allclose(&eq12.1, 2e-3, 2e-3), "eq7 vs eq12 var");
+            assert!(sep.0.allclose(&eq12.0, 1e-5, 1e-5));
+            assert!(sep.1.allclose(&eq12.1, 1e-5, 1e-5));
+        });
+    }
+
+    #[test]
+    fn first_layer_matches_generic_with_det_input() {
+        // Eq. 13 == generic Eq. 12 with x_e2 = x^2, w_e2 = mu^2 + var.
+        check(10, |g| {
+            let m = g.usize_in(1, 6);
+            let k = g.usize_in(1, 48);
+            let n = g.usize_in(1, 16);
+            let x = Tensor::new(vec![m, k], g.normal_vec(m * k, 1.0)).unwrap();
+            let w_mu = Tensor::new(vec![n, k], g.normal_vec(n * k, 0.2)).unwrap();
+            let w_var = Tensor::new(vec![n, k], g.var_vec(n * k, 0.02)).unwrap();
+            let w_e2 = e2_of(&w_mu, &w_var);
+            let x_sq = x.squared();
+            let s = Schedule::tuned(1);
+            let first = pfp_dense_first(
+                &DenseArgs {
+                    x_mu: &x, x_aux: &x_sq, w_mu: &w_mu, w_aux: &w_var,
+                    b_mu: None, b_var: None,
+                },
+                &s,
+            );
+            let generic = pfp_dense_joint(
+                &DenseArgs {
+                    x_mu: &x, x_aux: &x_sq, w_mu: &w_mu, w_aux: &w_e2,
+                    b_mu: None, b_var: None,
+                },
+                &s,
+            );
+            assert!(first.0.allclose(&generic.0, 1e-4, 1e-4));
+            assert!(first.1.allclose(&generic.1, 2e-3, 2e-3));
+        });
+    }
+
+    #[test]
+    fn bias_applied() {
+        let x_mu = Tensor::new(vec![1, 2], vec![1.0, 2.0]).unwrap();
+        let x_e2 = x_mu.squared();
+        let w_mu = Tensor::new(vec![1, 2], vec![1.0, 1.0]).unwrap();
+        let w_e2 = w_mu.squared();
+        let b_mu = [10.0f32];
+        let b_var = [0.5f32];
+        let (mu, var) = pfp_dense_joint(
+            &DenseArgs {
+                x_mu: &x_mu, x_aux: &x_e2, w_mu: &w_mu, w_aux: &w_e2,
+                b_mu: Some(&b_mu), b_var: Some(&b_var),
+            },
+            &Schedule::tuned(1),
+        );
+        assert!((mu.data()[0] - 13.0).abs() < 1e-6);
+        assert!((var.data()[0] - 0.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn variance_never_negative() {
+        check(20, |g| {
+            let m = g.usize_in(1, 6);
+            let k = g.usize_in(1, 64);
+            let n = g.usize_in(1, 20);
+            let (x_mu, x_var, w_mu, w_var) = rand_dense(g, m, k, n);
+            let x_e2 = e2_of(&x_mu, &x_var);
+            let w_e2 = e2_of(&w_mu, &w_var);
+            let (_, var) = pfp_dense_joint(
+                &DenseArgs {
+                    x_mu: &x_mu, x_aux: &x_e2, w_mu: &w_mu, w_aux: &w_e2,
+                    b_mu: None, b_var: None,
+                },
+                &Schedule::tuned(1),
+            );
+            assert!(var.data().iter().all(|&v| v >= 0.0));
+        });
+    }
+}

@@ -1,0 +1,119 @@
+//! Deterministic operators — the non-probabilistic baseline of Table 5
+//! and the per-sample forward pass of the SVI baseline.
+//!
+//! The dense core reuses the scheduled reduction machinery via the
+//! [`super::dense::MeanOnly`] accumulator so the deterministic network is
+//! benchmarked with the same tuning treatment the paper gives its
+//! deterministic NN ("not tuned" = baseline schedule, "tuned" = tuned
+//! schedule).
+
+use crate::tensor::Tensor;
+
+use super::conv::im2col;
+use super::dense::{dense_kernel, DenseArgs, MeanOnly};
+use super::schedule::Schedule;
+
+/// Deterministic dense: `x [M,K] @ w.T [N,K] + b`.
+pub fn det_dense(x: &Tensor, w: &Tensor, b: Option<&[f32]>, sched: &Schedule) -> Tensor {
+    let (mu, _) = dense_kernel::<MeanOnly>(
+        &DenseArgs {
+            x_mu: x,
+            x_aux: x, // unused by MeanOnly
+            w_mu: w,
+            w_aux: w, // unused by MeanOnly
+            b_mu: b,
+            b_var: None,
+        },
+        sched,
+    );
+    mu
+}
+
+/// Deterministic conv2d (NCHW / OIHW / VALID / stride 1) via im2col.
+pub fn det_conv2d(x: &Tensor, w: &Tensor, b: Option<&[f32]>, sched: &Schedule) -> Tensor {
+    let ws = w.shape();
+    let (o, i, kh, kw) = (ws[0], ws[1], ws[2], ws[3]);
+    debug_assert_eq!(x.shape()[1], i);
+    let (patches, (n, oh, ow)) = im2col(x, kh, kw);
+    let wm = w.clone().reshape(vec![o, i * kh * kw]).unwrap();
+    let flat = det_dense(&patches, &wm, b, sched);
+    // scatter [N*OH*OW, O] -> [N, O, OH, OW]
+    let d = flat.data();
+    let mut out = vec![0.0f32; n * o * oh * ow];
+    for img in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((img * oh + oy) * ow + ox) * o;
+                for ch in 0..o {
+                    out[((img * o + ch) * oh + oy) * ow + ox] = d[row + ch];
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n, o, oh, ow], out).unwrap()
+}
+
+/// Deterministic ReLU.
+pub fn det_relu(x: &Tensor) -> Tensor {
+    x.map(|v| v.max(0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn dense_matches_naive() {
+        check(10, |g| {
+            let m = g.usize_in(1, 8);
+            let k = g.usize_in(1, 64);
+            let n = g.usize_in(1, 24);
+            let x = Tensor::new(vec![m, k], g.normal_vec(m * k, 1.0)).unwrap();
+            let w = Tensor::new(vec![n, k], g.normal_vec(n * k, 1.0)).unwrap();
+            let got = det_dense(&x, &w, None, &Schedule::tuned(1));
+            for i in 0..m {
+                for j in 0..n {
+                    let want: f32 = (0..k)
+                        .map(|kk| x.data()[i * k + kk] * w.data()[j * k + kk])
+                        .sum();
+                    let v = got.data()[i * n + j];
+                    assert!((v - want).abs() <= 1e-4 + 1e-4 * want.abs());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn dense_bias() {
+        let x = Tensor::new(vec![1, 2], vec![1.0, 1.0]).unwrap();
+        let w = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = [10.0f32, 20.0];
+        let y = det_dense(&x, &w, Some(&b), &Schedule::baseline());
+        assert_eq!(y.data(), &[13.0, 27.0]);
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 kernel with weight 1.0 reproduces the input
+        let mut g = Gen::new(2);
+        let x = Tensor::new(vec![1, 1, 4, 4], g.normal_vec(16, 1.0)).unwrap();
+        let w = Tensor::new(vec![1, 1, 1, 1], vec![1.0]).unwrap();
+        let y = det_conv2d(&x, &w, None, &Schedule::tuned(1));
+        assert!(y.allclose(&x, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn conv_shape() {
+        let x = Tensor::zeros(vec![2, 3, 10, 10]);
+        let w = Tensor::zeros(vec![5, 3, 3, 3]);
+        let y = det_conv2d(&x, &w, None, &Schedule::baseline());
+        assert_eq!(y.shape(), &[2, 5, 8, 8]);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let x = Tensor::from_vec(vec![-1.0, 0.0, 2.0]);
+        assert_eq!(det_relu(&x).data(), &[0.0, 0.0, 2.0]);
+    }
+}

@@ -1,0 +1,257 @@
+//! PFP max-pool — moment-matched Gaussian max (Roth 2021), the Table 3
+//! operator.
+//!
+//! Consumes and produces (mean, variance) — the paper's pooling
+//! representation contract. Two implementations, mirroring Table 3:
+//!
+//! * [`pfp_maxpool_generic`] — generic reduction over an arbitrary `k`/
+//!   `stride` window: sequential pairwise folds (the slow formulation the
+//!   paper inherited from Roth's operator).
+//! * [`pfp_maxpool2_vectorized`] — fixed k=2/stride-2: the three pairwise
+//!   matches arranged as a balanced tree over four strided views with
+//!   contiguous inner loops (the paper's hand-vectorized operator).
+//!
+//! NOTE: Gaussian moment matching is **not associative**, so the two
+//! implementations are *slightly* different approximations (tree vs
+//! sequential fold). The vectorized tree matches the Pallas/JAX kernel
+//! (`kernels/maxpool.py`) exactly — that is the cross-language contract —
+//! and both are validated against Monte-Carlo.
+
+use crate::tensor::{ProbTensor, Rep, Tensor};
+
+use super::erf::{erf, norm_pdf, FRAC_1_SQRT_2};
+
+const EPS: f32 = 1e-12;
+
+/// Moment-matched max of two independent Gaussians -> (mean, variance).
+#[inline(always)]
+pub fn gaussian_max(mu1: f32, var1: f32, mu2: f32, var2: f32) -> (f32, f32) {
+    let theta = (var1 + var2).max(EPS).sqrt();
+    let alpha = (mu1 - mu2) / theta;
+    let cdf = 0.5 * (1.0 + erf(alpha * FRAC_1_SQRT_2));
+    let pdf = norm_pdf(alpha);
+    let m = mu1 * cdf + mu2 * (1.0 - cdf) + theta * pdf;
+    let e2 = (mu1 * mu1 + var1) * cdf
+        + (mu2 * mu2 + var2) * (1.0 - cdf)
+        + (mu1 + mu2) * theta * pdf;
+    (m, (e2 - m * m).max(0.0))
+}
+
+fn out_hw(h: usize, w: usize, k: usize, stride: usize) -> (usize, usize) {
+    ((h - k) / stride + 1, (w - k) / stride + 1)
+}
+
+/// Generic-reduction PFP max-pool over NCHW (mean, variance) tensors:
+/// iterated *sequential* pairwise Gaussian max over a k x k window.
+pub fn pfp_maxpool_generic(input: &ProbTensor, k: usize, stride: usize) -> ProbTensor {
+    debug_assert_eq!(input.rep, Rep::Var);
+    let s = input.mu.shape();
+    let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+    let (oh, ow) = out_hw(h, w, k, stride);
+    let mu = input.mu.data();
+    let var = input.aux.data();
+    let mut out_mu = vec![0.0f32; n * c * oh * ow];
+    let mut out_var = vec![0.0f32; n * c * oh * ow];
+    for img in 0..n {
+        for ch in 0..c {
+            let base = (img * c + ch) * h * w;
+            let obase = (img * c + ch) * oh * ow;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc_m = f32::NAN;
+                    let mut acc_v = 0.0f32;
+                    let mut first = true;
+                    for dy in 0..k {
+                        for dx in 0..k {
+                            let idx = base + (oy * stride + dy) * w + (ox * stride + dx);
+                            if first {
+                                acc_m = mu[idx];
+                                acc_v = var[idx];
+                                first = false;
+                            } else {
+                                let (m, v) = gaussian_max(acc_m, acc_v, mu[idx], var[idx]);
+                                acc_m = m;
+                                acc_v = v;
+                            }
+                        }
+                    }
+                    out_mu[obase + oy * ow + ox] = acc_m;
+                    out_var[obase + oy * ow + ox] = acc_v;
+                }
+            }
+        }
+    }
+    ProbTensor::new(
+        Tensor::new(vec![n, c, oh, ow], out_mu).unwrap(),
+        Tensor::new(vec![n, c, oh, ow], out_var).unwrap(),
+        Rep::Var,
+    )
+}
+
+/// Vectorized fixed-k=2/stride-2 PFP max-pool: balanced tree
+/// `gmax(gmax(a,b), gmax(c,d))` with row-contiguous inner loops.
+/// Matches the Pallas kernel bit-for-bit in structure.
+pub fn pfp_maxpool2_vectorized(input: &ProbTensor) -> ProbTensor {
+    debug_assert_eq!(input.rep, Rep::Var);
+    let s = input.mu.shape();
+    let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mu = input.mu.data();
+    let var = input.aux.data();
+    let mut out_mu = vec![0.0f32; n * c * oh * ow];
+    let mut out_var = vec![0.0f32; n * c * oh * ow];
+    for plane in 0..n * c {
+        let base = plane * h * w;
+        let obase = plane * oh * ow;
+        for oy in 0..oh {
+            let r0 = base + (2 * oy) * w;
+            let r1 = base + (2 * oy + 1) * w;
+            let orow = obase + oy * ow;
+            // walk both source rows two elements at a time — contiguous,
+            // fixed-pattern loads the compiler can keep in registers.
+            for ox in 0..ow {
+                let i0 = r0 + 2 * ox;
+                let i1 = r1 + 2 * ox;
+                let (ma, va) = gaussian_max(mu[i0], var[i0], mu[i0 + 1], var[i0 + 1]);
+                let (mb, vb) = gaussian_max(mu[i1], var[i1], mu[i1 + 1], var[i1 + 1]);
+                let (m, v) = gaussian_max(ma, va, mb, vb);
+                out_mu[orow + ox] = m;
+                out_var[orow + ox] = v;
+            }
+        }
+    }
+    ProbTensor::new(
+        Tensor::new(vec![n, c, oh, ow], out_mu).unwrap(),
+        Tensor::new(vec![n, c, oh, ow], out_var).unwrap(),
+        Rep::Var,
+    )
+}
+
+/// Deterministic max-pool (k=2, stride 2) for the baselines.
+pub fn det_maxpool2(x: &Tensor) -> Tensor {
+    let s = x.shape();
+    let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+    let (oh, ow) = (h / 2, w / 2);
+    let d = x.data();
+    let mut out = vec![0.0f32; n * c * oh * ow];
+    for plane in 0..n * c {
+        let base = plane * h * w;
+        let obase = plane * oh * ow;
+        for oy in 0..oh {
+            let r0 = base + (2 * oy) * w;
+            let r1 = base + (2 * oy + 1) * w;
+            for ox in 0..ow {
+                let a = d[r0 + 2 * ox].max(d[r0 + 2 * ox + 1]);
+                let b = d[r1 + 2 * ox].max(d[r1 + 2 * ox + 1]);
+                out[obase + oy * ow + ox] = a.max(b);
+            }
+        }
+    }
+    Tensor::new(vec![n, c, oh, ow], out).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+    use crate::util::rng::SplitMix64;
+
+    fn rand_prob(g: &mut Gen, n: usize, c: usize, h: usize, w: usize) -> ProbTensor {
+        ProbTensor::new(
+            Tensor::new(vec![n, c, h, w], g.normal_vec(n * c * h * w, 1.0)).unwrap(),
+            Tensor::new(vec![n, c, h, w], g.var_vec(n * c * h * w, 0.5)).unwrap(),
+            Rep::Var,
+        )
+    }
+
+    #[test]
+    fn gaussian_max_monte_carlo() {
+        let mut rng = SplitMix64::new(5);
+        let (mu1, v1, mu2, v2) = (0.3f32, 0.8f32, -0.2f32, 1.4f32);
+        let n = 400_000;
+        let (mut s, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let a = mu1 as f64 + (v1 as f64).sqrt() * rng.normal();
+            let b = mu2 as f64 + (v2 as f64).sqrt() * rng.normal();
+            let z = a.max(b);
+            s += z;
+            s2 += z * z;
+        }
+        let (m, v) = gaussian_max(mu1, v1, mu2, v2);
+        let emp_m = s / n as f64;
+        let emp_v = s2 / n as f64 - emp_m * emp_m;
+        assert!((m as f64 - emp_m).abs() < 5e-3, "{m} vs {emp_m}");
+        assert!((v as f64 - emp_v).abs() < 2e-2, "{v} vs {emp_v}");
+    }
+
+    #[test]
+    fn gaussian_max_degenerate_cases() {
+        // far-apart means: max == the larger input
+        let (m, v) = gaussian_max(10.0, 0.5, -10.0, 0.5);
+        assert!((m - 10.0).abs() < 1e-4);
+        assert!((v - 0.5).abs() < 1e-3);
+        // symmetric inputs: mean = theta*phi(0)
+        let (m, _) = gaussian_max(0.0, 1.0, 0.0, 1.0);
+        let want = (2.0f32).sqrt() * 0.3989423;
+        assert!((m - want).abs() < 1e-4);
+    }
+
+    #[test]
+    fn vectorized_equals_tree_generic_shape() {
+        // the vectorized pool halves H and W
+        let mut g = Gen::new(1);
+        let p = rand_prob(&mut g, 2, 3, 8, 10);
+        let out = pfp_maxpool2_vectorized(&p);
+        assert_eq!(out.shape(), &[2, 3, 4, 5]);
+        assert!(out.aux.data().iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn generic_close_to_vectorized_k2() {
+        // different association order -> slightly different approximations
+        check(10, |g| {
+            let p = rand_prob(g, 1, 2, 6, 6);
+            let a = pfp_maxpool_generic(&p, 2, 2);
+            let b = pfp_maxpool2_vectorized(&p);
+            let dm: f32 = a
+                .mu
+                .data()
+                .iter()
+                .zip(b.mu.data())
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0, f32::max);
+            assert!(dm < 0.1, "max |mu| diff {dm}");
+        });
+    }
+
+    #[test]
+    fn deterministic_limit_equals_det_maxpool() {
+        let mut g = Gen::new(3);
+        let x = Tensor::new(vec![1, 2, 6, 6], g.normal_vec(72, 1.0)).unwrap();
+        let p = ProbTensor::new(x.clone(), Tensor::full(vec![1, 2, 6, 6], 1e-10), Rep::Var);
+        let pooled = pfp_maxpool2_vectorized(&p);
+        let want = det_maxpool2(&x);
+        assert!(pooled.mu.allclose(&want, 1e-3, 1e-3));
+    }
+
+    #[test]
+    fn pooled_mean_dominates_inputs_mean() {
+        // E[max(X,Y)] >= max(E[X], E[Y])
+        check(20, |g| {
+            let mu1 = g.normal(2.0);
+            let mu2 = g.normal(2.0);
+            let v1 = g.normal(1.0).abs() + 1e-4;
+            let v2 = g.normal(1.0).abs() + 1e-4;
+            let (m, _) = gaussian_max(mu1, v1, mu2, v2);
+            assert!(m >= mu1.max(mu2) - 1e-4);
+        });
+    }
+
+    #[test]
+    fn generic_supports_k3_stride1() {
+        let mut g = Gen::new(9);
+        let p = rand_prob(&mut g, 1, 1, 5, 5);
+        let out = pfp_maxpool_generic(&p, 3, 1);
+        assert_eq!(out.shape(), &[1, 1, 3, 3]);
+    }
+}

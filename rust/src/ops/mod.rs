@@ -1,0 +1,28 @@
+//! Native PFP operator library — the paper's TVM operator library analog.
+//!
+//! Every operator of the Probabilistic Forward Pass is implemented here
+//! with explicit, tunable *schedules* (tiling / loop order / unrolling /
+//! vectorization / parallelization — the paper's Table 2 knobs), plus the
+//! deterministic and SVI-sampled counterparts used as baselines in
+//! Table 5 / Fig. 7.
+//!
+//! Numerical contracts (checked against `python/compile/kernels/ref.py`
+//! goldens by the integration tests):
+//!
+//! * dense/conv: Eq. 4 mean, Eq. 12 variance (raw-moment form), Eq. 7
+//!   (variance form), Eq. 5 (original form) and Eq. 13 (first layer);
+//! * ReLU: Eqs. 8/9 moment matching (erf-based);
+//! * max-pool: pairwise moment-matched Gaussian max (generic reduction
+//!   and vectorized k=2 tree — Table 3's two implementations).
+
+pub mod activations;
+pub mod conv;
+pub mod dense;
+pub mod det;
+pub mod erf;
+pub mod maxpool;
+pub mod relu;
+pub mod schedule;
+pub mod svi;
+
+pub use schedule::{LoopOrder, Schedule};

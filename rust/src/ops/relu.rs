@@ -1,0 +1,161 @@
+//! PFP ReLU — Gaussian moment matching (Eqs. 8, 9).
+//!
+//! Consumes (mean, variance); produces (mean, **second raw moment**) — the
+//! paper's activation-function representation contract. Elementwise, but
+//! erf + exp per element make it a real cost center at runtime (Fig. 6
+//! shows LeNet's first ReLU costing more than its first conv).
+//!
+//! The cdf/pdf sub-terms are computed once and shared between the two
+//! outputs (the joint-operator rule applied to an elementwise op).
+
+use crate::tensor::{ProbTensor, Rep, Tensor};
+
+use super::erf::{erf, FRAC_1_SQRT_2, INV_SQRT_2PI};
+
+const EPS: f32 = 1e-12;
+
+/// Scalar moment-matched ReLU: (mu, var) -> (mu', E[x'^2]).
+#[inline(always)]
+pub fn relu_moments(mu: f32, var: f32) -> (f32, f32) {
+    let var = var.max(EPS);
+    let std = var.sqrt();
+    let cdf = 0.5 * (1.0 + erf(mu / std * FRAC_1_SQRT_2));
+    let pdf = std * INV_SQRT_2PI * (-(mu * mu) / (2.0 * var)).exp();
+    let m = mu * cdf + pdf;
+    let e2 = ((var + mu * mu) * cdf + mu * pdf).max(0.0);
+    (m, e2)
+}
+
+/// Moment-matched ReLU over a probabilistic activation tensor.
+/// Input rep must be `Var` (converted by the caller/executor); output rep
+/// is `E2` by construction.
+pub fn pfp_relu(input: ProbTensor, threads: usize) -> ProbTensor {
+    debug_assert_eq!(input.rep, Rep::Var);
+    let shape = input.mu.shape().to_vec();
+    let mu_in = input.mu.into_data();
+    let var_in = input.aux.into_data();
+    let n = mu_in.len();
+    let mut mu_out = vec![0.0f32; n];
+    let mut e2_out = vec![0.0f32; n];
+
+    if threads <= 1 {
+        for i in 0..n {
+            let (m, e2) = relu_moments(mu_in[i], var_in[i]);
+            mu_out[i] = m;
+            e2_out[i] = e2;
+        }
+    } else {
+        // split both output buffers into matching disjoint chunks
+        let ranges = crate::util::threadpool::split_ranges(n, threads);
+        let mut mu_rest: &mut [f32] = &mut mu_out;
+        let mut e2_rest: &mut [f32] = &mut e2_out;
+        let mut chunks = Vec::new();
+        for r in ranges {
+            let take = r.end - r.start;
+            let (mh, mt) = mu_rest.split_at_mut(take);
+            let (eh, et) = e2_rest.split_at_mut(take);
+            chunks.push((r, mh, eh));
+            mu_rest = mt;
+            e2_rest = et;
+        }
+        crossbeam_utils::thread::scope(|s| {
+            for (r, mc, ec) in chunks {
+                let mu_in = &mu_in;
+                let var_in = &var_in;
+                s.spawn(move |_| {
+                    for (j, i) in r.enumerate() {
+                        let (m, e2) = relu_moments(mu_in[i], var_in[i]);
+                        mc[j] = m;
+                        ec[j] = e2;
+                    }
+                });
+            }
+        })
+        .expect("relu worker panicked");
+    }
+
+    ProbTensor::new(
+        Tensor::new(shape.clone(), mu_out).unwrap(),
+        Tensor::new(shape, e2_out).unwrap(),
+        Rep::E2,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn deterministic_limit() {
+        // var -> 0: (mu, e2) -> (max(mu,0), max(mu,0)^2)
+        for mu in [-3.0f32, -0.5, 0.0, 0.5, 3.0] {
+            let (m, e2) = relu_moments(mu, 1e-10);
+            let want = mu.max(0.0);
+            assert!((m - want).abs() < 1e-4, "mu={mu}: {m} vs {want}");
+            assert!((e2 - want * want).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn against_monte_carlo() {
+        let cases = [(-2.0f32, 0.5f32), (-0.5, 1.0), (0.0, 2.0), (0.7, 0.3), (3.0, 1.5)];
+        let mut rng = SplitMix64::new(42);
+        for (mu, var) in cases {
+            let n = 200_000;
+            let std = var.sqrt();
+            let (mut s, mut s2) = (0.0f64, 0.0f64);
+            for _ in 0..n {
+                let z = (mu as f64 + std as f64 * rng.normal()).max(0.0);
+                s += z;
+                s2 += z * z;
+            }
+            let (m, e2) = relu_moments(mu, var);
+            assert!(
+                (m as f64 - s / n as f64).abs() < 2e-2,
+                "mean mismatch mu={mu} var={var}: {m} vs {}",
+                s / n as f64
+            );
+            assert!(
+                (e2 as f64 - s2 / n as f64).abs() < 6e-2,
+                "e2 mismatch mu={mu} var={var}"
+            );
+        }
+    }
+
+    #[test]
+    fn jensen_inequality_holds() {
+        check(30, |g| {
+            let mu = g.normal(3.0);
+            let var = g.normal(2.0).abs() + 1e-6;
+            let (m, e2) = relu_moments(mu, var);
+            assert!(e2 - m * m >= -1e-4, "E[x^2] < E[x]^2 at mu={mu} var={var}");
+            assert!(m >= 0.0, "ReLU mean must be non-negative");
+        });
+    }
+
+    #[test]
+    fn mean_bounded_below_by_relu_of_mean() {
+        // E[max(0,X)] >= max(0, E[X]) by Jensen (max is convex).
+        check(30, |g| {
+            let mu = g.normal(2.0);
+            let var = g.normal(1.0).abs() + 1e-6;
+            let (m, _) = relu_moments(mu, var);
+            assert!(m >= mu.max(0.0) - 1e-5);
+        });
+    }
+
+    #[test]
+    fn tensor_op_parallel_matches_serial() {
+        let mut g = crate::util::prop::Gen::new(7);
+        let n = 1000;
+        let mu = Tensor::from_vec(g.normal_vec(n, 2.0));
+        let var = Tensor::from_vec(g.var_vec(n, 1.0));
+        let a = pfp_relu(ProbTensor::new(mu.clone(), var.clone(), Rep::Var), 1);
+        let b = pfp_relu(ProbTensor::new(mu, var, Rep::Var), 4);
+        assert!(a.mu.allclose(&b.mu, 1e-7, 1e-7));
+        assert!(a.aux.allclose(&b.aux, 1e-7, 1e-7));
+        assert_eq!(a.rep, Rep::E2);
+    }
+}

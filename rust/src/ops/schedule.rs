@@ -1,0 +1,180 @@
+//! Operator schedules — the paper's Table 2 optimization knobs, made
+//! explicit so the tuner (Meta-Scheduler analog) can search over them.
+//!
+//! | paper knob       | here |
+//! |------------------|------|
+//! | Loop Reordering  | [`LoopOrder`]: `Mkn` (naive baseline) vs `Mnk` (dot-product order) |
+//! | Tiling           | `tile_n`/`tile_k` output/reduction blocking (0 = off) |
+//! | Loop Unrolling   | `unroll` ∈ {1,2,4,8}: independent accumulators in the k-loop |
+//! | Vectorization    | `vectorize`: SIMD-friendly fixed-width lanes in the inner loop |
+//! | Parallelization  | `threads`: row-parallel execution via the scoped pool |
+//!
+//! The paper's footnote "tiling does not support stochastic tuning" is
+//! mirrored in `tuner::space`: enabling tiles freezes the stochastic
+//! mutation of the other knobs.
+
+/// Loop nest order for the dense/conv matmul core.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoopOrder {
+    /// m → k → n: the naive TE-lowering order. The inner n-loop walks the
+    /// weight matrix with stride K — the slow baseline, and the order in
+    /// which "vectorization alone" *hurts* (Table 2's 0.42x row).
+    Mkn,
+    /// m → n → k: dot-product order; both operand rows are contiguous.
+    Mnk,
+}
+
+/// A concrete schedule for a PFP compute operator.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Schedule {
+    pub loop_order: LoopOrder,
+    /// Output-feature tile (0 = no tiling).
+    pub tile_n: usize,
+    /// Reduction tile (0 = no tiling).
+    pub tile_k: usize,
+    /// k-loop unroll factor (1 = off; 2/4/8 use that many accumulators).
+    pub unroll: usize,
+    /// SIMD-friendly fixed-width inner lanes.
+    pub vectorize: bool,
+    /// Worker threads for row-parallel execution (1 = off).
+    pub threads: usize,
+}
+
+impl Default for Schedule {
+    fn default() -> Self {
+        Self::baseline()
+    }
+}
+
+impl Schedule {
+    /// Untuned baseline: naive loop order, nothing enabled (Table 2 row 1).
+    pub fn baseline() -> Self {
+        Self {
+            loop_order: LoopOrder::Mkn,
+            tile_n: 0,
+            tile_k: 0,
+            unroll: 1,
+            vectorize: false,
+            threads: 1,
+        }
+    }
+
+    /// The hand-tuned schedule that Table 2's "All Optimizations (no
+    /// tiling) + stochastic tuning" row converges to.
+    pub fn tuned(threads: usize) -> Self {
+        Self {
+            loop_order: LoopOrder::Mnk,
+            tile_n: 0,
+            tile_k: 0,
+            unroll: 8,
+            vectorize: true,
+            threads,
+        }
+    }
+
+    /// Tiling-only schedule (Table 2's "Tiling, other opts OFF" row).
+    pub fn tiled(tile_n: usize, tile_k: usize) -> Self {
+        Self {
+            loop_order: LoopOrder::Mnk,
+            tile_n,
+            tile_k,
+            unroll: 1,
+            vectorize: false,
+            threads: 1,
+        }
+    }
+
+    pub fn with_order(mut self, o: LoopOrder) -> Self {
+        self.loop_order = o;
+        self
+    }
+
+    pub fn with_unroll(mut self, u: usize) -> Self {
+        self.unroll = u;
+        self
+    }
+
+    pub fn with_vectorize(mut self, v: bool) -> Self {
+        self.vectorize = v;
+        self
+    }
+
+    pub fn with_threads(mut self, t: usize) -> Self {
+        self.threads = t;
+        self
+    }
+
+    pub fn with_tiles(mut self, n: usize, k: usize) -> Self {
+        self.tile_n = n;
+        self.tile_k = k;
+        self
+    }
+
+    /// Short human tag, used in bench output and tuning records.
+    pub fn tag(&self) -> String {
+        format!(
+            "{:?}{}{}{}{}",
+            self.loop_order,
+            if self.tile_n > 0 || self.tile_k > 0 {
+                format!("+tile{}x{}", self.tile_n, self.tile_k)
+            } else {
+                String::new()
+            },
+            if self.unroll > 1 { format!("+u{}", self.unroll) } else { String::new() },
+            if self.vectorize { "+vec" } else { "" },
+            if self.threads > 1 { format!("+t{}", self.threads) } else { String::new() },
+        )
+    }
+
+    /// Serialize for tuning records.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            (
+                "loop_order",
+                Json::Str(format!("{:?}", self.loop_order)),
+            ),
+            ("tile_n", Json::Num(self.tile_n as f64)),
+            ("tile_k", Json::Num(self.tile_k as f64)),
+            ("unroll", Json::Num(self.unroll as f64)),
+            ("vectorize", Json::Bool(self.vectorize)),
+            ("threads", Json::Num(self.threads as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &crate::util::json::Json) -> crate::error::Result<Self> {
+        use crate::error::Error;
+        let order = match v.str_field("loop_order")? {
+            "Mkn" => LoopOrder::Mkn,
+            "Mnk" => LoopOrder::Mnk,
+            o => return Err(Error::Json(format!("unknown loop order {o}"))),
+        };
+        Ok(Self {
+            loop_order: order,
+            tile_n: v.num_field("tile_n")? as usize,
+            tile_k: v.num_field("tile_k")? as usize,
+            unroll: (v.num_field("unroll")? as usize).max(1),
+            vectorize: v.get("vectorize").and_then(|b| b.as_bool()).unwrap_or(false),
+            threads: (v.num_field("threads")? as usize).max(1),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let s = Schedule::tuned(4).with_tiles(16, 64);
+        let j = s.to_json();
+        let back = Schedule::from_json(&j).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn tags_are_distinct() {
+        assert_ne!(Schedule::baseline().tag(), Schedule::tuned(1).tag());
+        assert_ne!(Schedule::tuned(1).tag(), Schedule::tuned(4).tag());
+    }
+}

@@ -1,0 +1,66 @@
+//! SVI baseline support: posterior weight sampling.
+//!
+//! The paper's SVI baseline draws a full weight set from the mean-field
+//! posterior and runs a standard forward pass, N times per prediction
+//! (N = 30 in the evaluation). The sampling itself is part of the
+//! measured cost — `sample_into` is the reparameterisation
+//! `w = mu + sigma * z`, `z ~ N(0,1)` via Box-Muller on SplitMix64.
+
+use crate::tensor::Tensor;
+use crate::util::rng::SplitMix64;
+
+/// Sample `w = mu + sigma * z` elementwise into a reusable buffer.
+pub fn sample_into(out: &mut Vec<f32>, mu: &Tensor, sigma: &Tensor, rng: &mut SplitMix64) {
+    let n = mu.len();
+    out.clear();
+    out.reserve(n);
+    let mu_d = mu.data();
+    let sg_d = sigma.data();
+    for i in 0..n {
+        out.push(mu_d[i] + sg_d[i] * rng.normal() as f32);
+    }
+}
+
+/// Sample a full weight tensor (allocating).
+pub fn sample_tensor(mu: &Tensor, sigma: &Tensor, rng: &mut SplitMix64) -> Tensor {
+    let mut buf = Vec::new();
+    sample_into(&mut buf, mu, sigma, rng);
+    Tensor::new(mu.shape().to_vec(), buf).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_moments_match_posterior() {
+        let n = 20_000;
+        let mu = Tensor::full(vec![n], 0.5);
+        let sigma = Tensor::full(vec![n], 0.2);
+        let mut rng = SplitMix64::new(11);
+        let s = sample_tensor(&mu, &sigma, &mut rng);
+        let mean: f32 = s.data().iter().sum::<f32>() / n as f32;
+        let var: f32 =
+            s.data().iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+        assert!((var - 0.04).abs() < 0.005, "var {var}");
+    }
+
+    #[test]
+    fn zero_sigma_is_deterministic() {
+        let mu = Tensor::from_vec(vec![1.0, -2.0, 3.0]);
+        let sigma = Tensor::from_vec(vec![0.0, 0.0, 0.0]);
+        let mut rng = SplitMix64::new(1);
+        let s = sample_tensor(&mu, &sigma, &mut rng);
+        assert_eq!(s.data(), mu.data());
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mu = Tensor::zeros(vec![16]);
+        let sigma = Tensor::full(vec![16], 1.0);
+        let a = sample_tensor(&mu, &sigma, &mut SplitMix64::new(1));
+        let b = sample_tensor(&mu, &sigma, &mut SplitMix64::new(2));
+        assert!(a.max_abs_diff(&b) > 1e-3);
+    }
+}

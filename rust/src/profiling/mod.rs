@@ -1,0 +1,192 @@
+//! Per-operator profiling (Table 4 / Fig. 6).
+//!
+//! The native executor reports each layer's wall-clock into a [`Profiler`];
+//! [`Profile::by_layer`] reproduces Table 4's per-layer rows and
+//! [`Profile::by_op_type`] Fig. 6's per-operator-type shares (including
+//! the representation-conversion overhead the paper files under
+//! "tooling").
+
+use std::time::{Duration, Instant};
+
+/// One timed region.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub label: String,
+    pub op_type: String,
+    pub dur: Duration,
+}
+
+/// Collects per-layer samples across one or more forward passes.
+#[derive(Default, Debug)]
+pub struct Profiler {
+    samples: Vec<Sample>,
+    enabled: bool,
+    pass_count: usize,
+}
+
+impl Profiler {
+    pub fn new(enabled: bool) -> Self {
+        Self { samples: Vec::new(), enabled, pass_count: 0 }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn begin_pass(&mut self) {
+        if self.enabled {
+            self.pass_count += 1;
+        }
+    }
+
+    /// Time `f`, filing the duration under (label, op_type).
+    pub fn record<T>(&mut self, label: &str, op_type: &str, f: impl FnOnce() -> T) -> T {
+        if !self.enabled {
+            return f();
+        }
+        let t = Instant::now();
+        let out = f();
+        self.samples.push(Sample {
+            label: label.to_string(),
+            op_type: op_type.to_string(),
+            dur: t.elapsed(),
+        });
+        out
+    }
+
+    pub fn take(&mut self) -> Profile {
+        Profile {
+            samples: std::mem::take(&mut self.samples),
+            passes: std::mem::replace(&mut self.pass_count, 0).max(1),
+        }
+    }
+}
+
+/// Aggregated profile over `passes` forward passes.
+#[derive(Clone, Debug)]
+pub struct Profile {
+    pub samples: Vec<Sample>,
+    pub passes: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    pub total_ms: f64,
+    /// mean per forward pass
+    pub per_pass_ms: f64,
+    pub fraction: f64,
+}
+
+impl Profile {
+    fn aggregate(&self, key: impl Fn(&Sample) -> String) -> Vec<Row> {
+        let mut order: Vec<String> = Vec::new();
+        let mut totals: std::collections::HashMap<String, f64> = Default::default();
+        for s in &self.samples {
+            let k = key(s);
+            if !totals.contains_key(&k) {
+                order.push(k.clone());
+            }
+            *totals.entry(k).or_insert(0.0) += s.dur.as_secs_f64() * 1e3;
+        }
+        let grand: f64 = totals.values().sum();
+        let mut rows: Vec<Row> = order
+            .into_iter()
+            .map(|k| {
+                let t = totals[&k];
+                Row {
+                    label: k,
+                    total_ms: t,
+                    per_pass_ms: t / self.passes as f64,
+                    fraction: if grand > 0.0 { t / grand } else { 0.0 },
+                }
+            })
+            .collect();
+        rows.sort_by(|a, b| b.total_ms.partial_cmp(&a.total_ms).unwrap());
+        rows
+    }
+
+    /// Table 4: per-layer rows ("Dense 1", "ReLU 2", ...), sorted by cost.
+    pub fn by_layer(&self) -> Vec<Row> {
+        self.aggregate(|s| s.label.clone())
+    }
+
+    /// Fig. 6: per-operator-type shares ("dense", "relu", ...).
+    pub fn by_op_type(&self) -> Vec<Row> {
+        self.aggregate(|s| s.op_type.clone())
+    }
+
+    /// Total wall-clock per forward pass (ms).
+    pub fn total_per_pass_ms(&self) -> f64 {
+        self.samples.iter().map(|s| s.dur.as_secs_f64() * 1e3).sum::<f64>()
+            / self.passes as f64
+    }
+
+    /// Render a Table-4 style report.
+    pub fn render(&self, title: &str) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let _ = writeln!(out, "== {title} (avg over {} passes) ==", self.passes);
+        let _ = writeln!(out, "{:<16} {:>12} {:>9}", "layer", "latency", "fraction");
+        for r in self.by_layer() {
+            let _ = writeln!(
+                out,
+                "{:<16} {:>10.3}ms {:>8.1}%",
+                r.label,
+                r.per_pass_ms,
+                r.fraction * 100.0
+            );
+        }
+        let _ = writeln!(out, "{:<16} {:>10.3}ms {:>8}", "Entire Network",
+                         self.total_per_pass_ms(), "100.0%");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_profiler_is_passthrough() {
+        let mut p = Profiler::new(false);
+        let v = p.record("Dense 1", "dense", || 42);
+        assert_eq!(v, 42);
+        assert!(p.take().samples.is_empty());
+    }
+
+    #[test]
+    fn aggregates_by_layer_and_type() {
+        let mut p = Profiler::new(true);
+        p.begin_pass();
+        p.record("Dense 1", "dense", || std::thread::sleep(Duration::from_millis(2)));
+        p.record("Dense 2", "dense", || std::thread::sleep(Duration::from_millis(1)));
+        p.record("ReLU 1", "relu", || std::thread::sleep(Duration::from_millis(1)));
+        let prof = p.take();
+        let layers = prof.by_layer();
+        assert_eq!(layers.len(), 3);
+        // rows are sorted by cost descending (exact order depends on
+        // scheduler noise; assert the invariant, not the specific labels)
+        for w in layers.windows(2) {
+            assert!(w[0].total_ms >= w[1].total_ms);
+        }
+        let types = prof.by_op_type();
+        assert_eq!(types.len(), 2);
+        assert_eq!(types[0].label, "dense");
+        let frac_sum: f64 = types.iter().map(|r| r.fraction).sum();
+        assert!((frac_sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_pass_normalisation() {
+        let mut p = Profiler::new(true);
+        for _ in 0..4 {
+            p.begin_pass();
+            p.record("Dense 1", "dense", || std::thread::sleep(Duration::from_millis(1)));
+        }
+        let prof = p.take();
+        assert_eq!(prof.passes, 4);
+        let row = &prof.by_layer()[0];
+        assert!(row.per_pass_ms < row.total_ms);
+    }
+}

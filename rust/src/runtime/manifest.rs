@@ -1,0 +1,222 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime — which HLO file implements which (arch, variant, batch),
+//! and the exact parameter order/shapes its entry computation expects.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::model::PosteriorWeights;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub arch: String,
+    /// "pfp" | "pfp_pallas" | "det"
+    pub variant: String,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub params: Vec<ParamSpec>,
+    pub outputs: Vec<String>,
+    pub calibration_factor: Option<f32>,
+}
+
+impl ManifestEntry {
+    pub fn is_pfp(&self) -> bool {
+        self.variant.starts_with("pfp")
+    }
+
+    /// Materialise the weight tensors in parameter order from the
+    /// posterior store. PFP entries take (w_mu, w_var, b_mu, b_var) per
+    /// compute layer (variance already calibrated by the store); det
+    /// entries take (w_mu, b_mu).
+    pub fn weight_tensors(&self, weights: &PosteriorWeights) -> Result<Vec<Tensor>> {
+        let mut out = Vec::with_capacity(self.params.len());
+        for layer in &weights.layers {
+            if self.is_pfp() {
+                out.push(layer.w_mu.clone());
+                out.push(layer.w_var.clone());
+                out.push(layer.b_mu.clone());
+                out.push(layer.b_var.clone());
+            } else {
+                out.push(layer.w_mu.clone());
+                out.push(layer.b_mu.clone());
+            }
+        }
+        if out.len() != self.params.len() {
+            return Err(Error::Manifest(format!(
+                "{}: weight store provides {} tensors, manifest wants {}",
+                self.name,
+                out.len(),
+                self.params.len()
+            )));
+        }
+        Ok(out)
+    }
+
+    /// Materialise *sampled* weights for the SVI path (det-variant entry):
+    /// (w, b) per layer from a caller-provided sampler.
+    pub fn sampled_tensors(
+        &self,
+        weights: &PosteriorWeights,
+        rng: &mut crate::util::rng::SplitMix64,
+    ) -> Vec<Tensor> {
+        use crate::ops::svi::sample_tensor;
+        let mut out = Vec::new();
+        for layer in &weights.layers {
+            out.push(sample_tensor(&layer.w_mu, &layer.w_sigma, rng));
+            out.push(sample_tensor(&layer.b_mu, &layer.b_sigma, rng));
+        }
+        out
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+    /// Table-1 metrics as recorded by the python pipeline.
+    pub metrics: Json,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Manifest(format!("read {}: {e}", path.display())))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let mut entries = Vec::new();
+        for e in v.arr_field("entries")? {
+            let params = e
+                .arr_field("params")?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p.str_field("name")?.to_string(),
+                        shape: p
+                            .get("shape")
+                            .ok_or_else(|| Error::Manifest("param missing shape".into()))?
+                            .to_usize_vec()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            entries.push(ManifestEntry {
+                name: e.str_field("name")?.to_string(),
+                file: e.str_field("file")?.to_string(),
+                arch: e.str_field("arch")?.to_string(),
+                variant: e.str_field("variant")?.to_string(),
+                batch: e.num_field("batch")? as usize,
+                input_shape: e
+                    .get("input_shape")
+                    .ok_or_else(|| Error::Manifest("missing input_shape".into()))?
+                    .to_usize_vec()?,
+                params,
+                outputs: e
+                    .arr_field("outputs")?
+                    .iter()
+                    .map(|o| o.as_str().unwrap_or("").to_string())
+                    .collect(),
+                calibration_factor: e
+                    .get("calibration_factor")
+                    .and_then(Json::as_f64)
+                    .map(|c| c as f32),
+            });
+        }
+        let metrics = v.get("metrics").cloned().unwrap_or(Json::Null);
+        Ok(Self { entries, metrics })
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// All entries for (arch, variant), sorted by batch.
+    pub fn entries_for(&self, arch: &str, variant: &str) -> Vec<&ManifestEntry> {
+        let mut v: Vec<&ManifestEntry> = self
+            .entries
+            .iter()
+            .filter(|e| e.arch == arch && e.variant == variant)
+            .collect();
+        v.sort_by_key(|e| e.batch);
+        v
+    }
+
+    /// Calibration factor recorded for an arch (from the training sweep).
+    pub fn calibration_factor(&self, arch: &str) -> f32 {
+        self.metrics
+            .get(arch)
+            .and_then(|m| m.get("pfp_calibration_factor"))
+            .and_then(Json::as_f64)
+            .map(|c| c as f32)
+            .unwrap_or(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "entries": [
+        {"name": "model_mlp_pfp_b1", "file": "model_mlp_pfp_b1.hlo.txt",
+         "arch": "mlp", "variant": "pfp", "batch": 1,
+         "input_shape": [1, 784],
+         "params": [{"name": "l0_w_mu", "shape": [100, 784]}],
+         "outputs": ["mu", "var"], "calibration_factor": 0.3},
+        {"name": "model_mlp_det_b10", "file": "model_mlp_det_b10.hlo.txt",
+         "arch": "mlp", "variant": "det", "batch": 10,
+         "input_shape": [10, 784],
+         "params": [{"name": "l0_w", "shape": [100, 784]}],
+         "outputs": ["logits"], "calibration_factor": null}
+      ],
+      "metrics": {"mlp": {"pfp_calibration_factor": 0.3}}
+    }"#;
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.entry("model_mlp_pfp_b1").unwrap();
+        assert!(e.is_pfp());
+        assert_eq!(e.params[0].shape, vec![100, 784]);
+        assert_eq!(e.outputs, vec!["mu", "var"]);
+        assert_eq!(e.calibration_factor, Some(0.3));
+        let d = m.entry("model_mlp_det_b10").unwrap();
+        assert!(!d.is_pfp());
+        assert_eq!(d.calibration_factor, None);
+    }
+
+    #[test]
+    fn entries_for_sorted() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries_for("mlp", "pfp").len(), 1);
+        assert_eq!(m.entries_for("mlp", "svi").len(), 0);
+        assert!((m.calibration_factor("mlp") - 0.3).abs() < 1e-6);
+        assert!((m.calibration_factor("unknown") - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let dir = crate::artifacts_dir();
+        let p = dir.join("manifest.json");
+        if !p.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&p).unwrap();
+        assert!(m.entries.len() >= 12);
+        assert!(m.entry("model_mlp_pfp_b10").is_some());
+        assert!(m.entry("model_lenet_det_b100").is_some());
+    }
+}

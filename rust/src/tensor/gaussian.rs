@@ -1,0 +1,143 @@
+//! Gaussian activation tensors and the paper's representation discipline.
+//!
+//! A probabilistic activation is a mean tensor plus an *auxiliary* tensor
+//! holding either its **variance** or its **second raw moment** `E[x^2]`
+//! (paper Section 5). Compute layers consume E[x^2] and produce variances;
+//! activation functions consume variances and produce E[x^2]; max-pool
+//! consumes and produces variances. [`ProbTensor::to_rep`] performs the
+//! `E[x^2] = mu^2 + var` conversions exactly where the layers disagree —
+//! conversions cost real time (Fig. 6's "tooling"), so the executor counts
+//! them.
+
+use super::Tensor;
+
+/// Which moment the auxiliary tensor holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rep {
+    /// aux = Var[x]
+    Var,
+    /// aux = E[x^2]
+    E2,
+}
+
+/// Mean + (variance | second-raw-moment) activation pair.
+#[derive(Clone, Debug)]
+pub struct ProbTensor {
+    pub mu: Tensor,
+    pub aux: Tensor,
+    pub rep: Rep,
+}
+
+impl ProbTensor {
+    pub fn new(mu: Tensor, aux: Tensor, rep: Rep) -> Self {
+        debug_assert_eq!(mu.shape(), aux.shape());
+        Self { mu, aux, rep }
+    }
+
+    /// A deterministic tensor viewed as zero-variance Gaussian.
+    pub fn deterministic(mu: Tensor) -> Self {
+        let aux = Tensor::zeros(mu.shape().to_vec());
+        Self { mu, aux, rep: Rep::Var }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        self.mu.shape()
+    }
+
+    /// Convert (in place, consuming) to the requested representation.
+    /// Returns `(tensor, converted)` where `converted` reports whether a
+    /// conversion pass actually ran (for conversion-cost accounting).
+    pub fn to_rep(mut self, rep: Rep) -> (Self, bool) {
+        if self.rep == rep {
+            return (self, false);
+        }
+        match (self.rep, rep) {
+            (Rep::Var, Rep::E2) => {
+                // E[x^2] = mu^2 + var
+                for (a, &m) in self.aux.data_mut().iter_mut().zip(self.mu.data()) {
+                    *a += m * m;
+                }
+            }
+            (Rep::E2, Rep::Var) => {
+                // var = max(E[x^2] - mu^2, 0)
+                for (a, &m) in self.aux.data_mut().iter_mut().zip(self.mu.data()) {
+                    *a = (*a - m * m).max(0.0);
+                }
+            }
+            _ => unreachable!(),
+        }
+        self.rep = rep;
+        (self, true)
+    }
+
+    /// Variance view (converting if needed).
+    pub fn into_var(self) -> Self {
+        self.to_rep(Rep::Var).0
+    }
+
+    /// Reshape both moment tensors.
+    pub fn reshape(self, shape: Vec<usize>) -> crate::error::Result<Self> {
+        Ok(Self {
+            mu: self.mu.reshape(shape.clone())?,
+            aux: self.aux.reshape(shape)?,
+            rep: self.rep,
+        })
+    }
+
+    /// Flatten to `[batch, features]`.
+    pub fn flatten_2d(self) -> Self {
+        Self {
+            mu: self.mu.flatten_2d(),
+            aux: self.aux.flatten_2d(),
+            rep: self.rep,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ProbTensor {
+        let mu = Tensor::from_vec(vec![1.0, -2.0, 0.5]);
+        let var = Tensor::from_vec(vec![0.25, 1.0, 4.0]);
+        ProbTensor::new(mu, var, Rep::Var)
+    }
+
+    #[test]
+    fn var_to_e2_roundtrip() {
+        let p = sample();
+        let (e2, conv1) = p.clone().to_rep(Rep::E2);
+        assert!(conv1);
+        assert_eq!(e2.aux.data(), &[1.25, 5.0, 4.25]);
+        let (back, conv2) = e2.to_rep(Rep::Var);
+        assert!(conv2);
+        let orig = sample();
+        assert!(back.aux.allclose(&orig.aux, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn same_rep_is_noop() {
+        let p = sample();
+        let (q, converted) = p.to_rep(Rep::Var);
+        assert!(!converted);
+        assert_eq!(q.aux.data(), &[0.25, 1.0, 4.0]);
+    }
+
+    #[test]
+    fn e2_to_var_clamps_negative() {
+        let mu = Tensor::from_vec(vec![2.0]);
+        let e2 = Tensor::from_vec(vec![3.0]); // < mu^2 -> clamp to 0
+        let (v, _) = ProbTensor::new(mu, e2, Rep::E2).to_rep(Rep::Var);
+        assert_eq!(v.aux.data(), &[0.0]);
+    }
+
+    #[test]
+    fn deterministic_has_zero_variance() {
+        let p = ProbTensor::deterministic(Tensor::from_vec(vec![3.0, 4.0]));
+        assert_eq!(p.rep, Rep::Var);
+        assert_eq!(p.aux.data(), &[0.0, 0.0]);
+        let (e2, _) = p.to_rep(Rep::E2);
+        assert_eq!(e2.aux.data(), &[9.0, 16.0]);
+    }
+}

@@ -1,0 +1,233 @@
+//! Dense row-major f32 tensors and Gaussian activation tensors.
+//!
+//! Deliberately minimal (ndarray is not in the offline crate set): shape +
+//! contiguous data, with the handful of views/reshapes the operator
+//! library needs. The probabilistic activation type [`ProbTensor`] carries
+//! the paper's representation discipline — a mean tensor plus either a
+//! variance or a second-raw-moment tensor — so the executor can track and
+//! convert representations exactly as Section 5 prescribes.
+
+pub mod gaussian;
+
+pub use gaussian::{ProbTensor, Rep};
+
+use crate::error::{Error, Result};
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(Self { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape, data: vec![v; n] }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        Self { shape: vec![data.len()], data }
+    }
+
+    // ---- accessors -------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Size of dimension `d`.
+    pub fn dim(&self, d: usize) -> usize {
+        self.shape[d]
+    }
+
+    /// Rows of a 2-D tensor.
+    pub fn rows(&self) -> usize {
+        debug_assert_eq!(self.ndim(), 2);
+        self.shape[0]
+    }
+
+    /// Cols of a 2-D tensor.
+    pub fn cols(&self) -> usize {
+        debug_assert_eq!(self.ndim(), 2);
+        self.shape[1]
+    }
+
+    /// Row `i` of a 2-D tensor as a slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    // ---- transforms ------------------------------------------------------
+
+    /// Reshape in place (must preserve element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(Error::Shape(format!(
+                "cannot reshape {:?} -> {:?}",
+                self.shape, shape
+            )));
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Flatten to 2-D `[rows, everything-else]`.
+    pub fn flatten_2d(self) -> Self {
+        let rows = self.shape[0];
+        let cols = self.data.len() / rows.max(1);
+        Self { shape: vec![rows, cols], data: self.data }
+    }
+
+    /// Elementwise map into a new tensor.
+    pub fn map<F: Fn(f32) -> f32>(&self, f: F) -> Self {
+        Self {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Elementwise binary zip into a new tensor; shapes must match.
+    pub fn zip<F: Fn(f32, f32) -> f32>(&self, other: &Tensor, f: F) -> Result<Self> {
+        if self.shape != other.shape {
+            return Err(Error::Shape(format!(
+                "zip shape mismatch: {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        }
+        Ok(Self {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        })
+    }
+
+    /// Squared elements (E[x^2] of a deterministic tensor).
+    pub fn squared(&self) -> Self {
+        self.map(|x| x * x)
+    }
+
+    /// Maximum absolute difference to another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Approximate equality with absolute + relative tolerance.
+    pub fn allclose(&self, other: &Tensor, atol: f32, rtol: f32) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+
+    /// Slice of leading `n` rows of a 2-D+ tensor (copy).
+    pub fn first_rows(&self, n: usize) -> Tensor {
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = n;
+        Tensor { shape, data: self.data[..n * row].to_vec() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(vec![2, 6], (0..12).map(|i| i as f32).collect()).unwrap();
+        let r = t.clone().reshape(vec![3, 4]).unwrap();
+        assert_eq!(r.shape(), &[3, 4]);
+        assert_eq!(r.data(), t.data());
+        assert!(t.reshape(vec![5, 5]).is_err());
+    }
+
+    #[test]
+    fn row_access() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn zip_and_map() {
+        let a = Tensor::from_vec(vec![1., 2., 3.]);
+        let b = Tensor::from_vec(vec![10., 20., 30.]);
+        let c = a.zip(&b, |x, y| x + y).unwrap();
+        assert_eq!(c.data(), &[11., 22., 33.]);
+        assert_eq!(a.squared().data(), &[1., 4., 9.]);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor::from_vec(vec![1.0, 100.0]);
+        let b = Tensor::from_vec(vec![1.0005, 100.05]);
+        assert!(a.allclose(&b, 1e-3, 1e-3));
+        assert!(!a.allclose(&b, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn flatten_2d_works() {
+        let t = Tensor::zeros(vec![2, 3, 4]);
+        assert_eq!(t.flatten_2d().shape(), &[2, 12]);
+    }
+}

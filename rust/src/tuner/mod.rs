@@ -1,0 +1,165 @@
+//! Auto-tuner — the paper's Meta-Scheduler analog (Section 6.3).
+//!
+//! Searches the [`Schedule`](crate::ops::Schedule) space with on-device
+//! measurement: random sampling plus a small evolutionary refinement
+//! (mutation of the incumbent population — the "stochastic tuning" the
+//! paper leans on). The paper's footnote that *tiling does not support
+//! stochastic tuning* is mirrored here: schedules with tiles enabled are
+//! only reachable through random sampling, never through mutation.
+//!
+//! Tuning records are persisted to `artifacts/tuning/*.json` so serving
+//! picks up tuned schedules without re-searching.
+
+pub mod records;
+pub mod space;
+
+pub use records::TuningRecords;
+pub use space::SearchSpace;
+
+use crate::ops::Schedule;
+use crate::util::rng::SplitMix64;
+
+/// One measured trial.
+#[derive(Clone, Debug)]
+pub struct Trial {
+    pub schedule: Schedule,
+    pub median_ms: f64,
+}
+
+/// Search outcome.
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    pub best: Schedule,
+    pub best_ms: f64,
+    pub baseline_ms: f64,
+    pub trials: Vec<Trial>,
+}
+
+impl TuneResult {
+    pub fn speedup(&self) -> f64 {
+        if self.best_ms > 0.0 {
+            self.baseline_ms / self.best_ms
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Measure a schedule: median latency in ms over a few repetitions.
+pub fn measure<F: FnMut(&Schedule)>(sched: &Schedule, reps: usize, mut work: F) -> f64 {
+    // one warmup
+    work(sched);
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = std::time::Instant::now();
+        work(sched);
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    crate::util::stats::median(&samples)
+}
+
+/// Configuration for the search loops.
+#[derive(Clone, Copy, Debug)]
+pub struct TuneOpts {
+    pub random_trials: usize,
+    pub generations: usize,
+    pub population: usize,
+    pub reps: usize,
+    pub seed: u64,
+}
+
+impl Default for TuneOpts {
+    fn default() -> Self {
+        Self {
+            random_trials: 24,
+            generations: 4,
+            population: 6,
+            reps: 5,
+            seed: 0xBEEF,
+        }
+    }
+}
+
+/// Random + evolutionary schedule search over `space`, measuring with
+/// `work` (one full operator execution per call).
+pub fn tune<F: FnMut(&Schedule)>(
+    space: &SearchSpace,
+    opts: TuneOpts,
+    mut work: F,
+) -> TuneResult {
+    let mut rng = SplitMix64::new(opts.seed);
+    let baseline = Schedule::baseline();
+    let baseline_ms = measure(&baseline, opts.reps, &mut work);
+    let mut trials = vec![Trial { schedule: baseline, median_ms: baseline_ms }];
+
+    // phase 1: random sampling (covers the tiled region too)
+    for _ in 0..opts.random_trials {
+        let s = space.sample(&mut rng);
+        let ms = measure(&s, opts.reps, &mut work);
+        trials.push(Trial { schedule: s, median_ms: ms });
+    }
+
+    // phase 2: evolutionary refinement — mutate the incumbent population.
+    // Tiled schedules are excluded from mutation (the paper's "tiling
+    // disables stochastic tuning" rule).
+    for _ in 0..opts.generations {
+        let mut pop: Vec<Trial> = trials.clone();
+        pop.sort_by(|a, b| a.median_ms.partial_cmp(&b.median_ms).unwrap());
+        pop.truncate(opts.population);
+        for parent in pop {
+            if parent.schedule.tile_n > 0 || parent.schedule.tile_k > 0 {
+                continue;
+            }
+            let child = space.mutate(&parent.schedule, &mut rng);
+            if trials.iter().any(|t| t.schedule == child) {
+                continue;
+            }
+            let ms = measure(&child, opts.reps, &mut work);
+            trials.push(Trial { schedule: child, median_ms: ms });
+        }
+    }
+
+    let best = trials
+        .iter()
+        .min_by(|a, b| a.median_ms.partial_cmp(&b.median_ms).unwrap())
+        .unwrap()
+        .clone();
+    TuneResult {
+        best: best.schedule,
+        best_ms: best.median_ms,
+        baseline_ms,
+        trials,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::dense::{pfp_dense_joint, DenseArgs};
+    use crate::tensor::Tensor;
+    use crate::util::prop::Gen;
+
+    #[test]
+    fn tune_finds_no_worse_than_baseline() {
+        let mut g = Gen::new(1);
+        let (m, k, n) = (4, 128, 32);
+        let x_mu = Tensor::new(vec![m, k], g.normal_vec(m * k, 1.0)).unwrap();
+        let x_e2 = x_mu.squared();
+        let w_mu = Tensor::new(vec![n, k], g.normal_vec(n * k, 0.2)).unwrap();
+        let w_e2 = w_mu.squared();
+        let space = SearchSpace::dense_default(1);
+        let opts = TuneOpts { random_trials: 6, generations: 1, population: 3, reps: 2, seed: 1 };
+        let res = tune(&space, opts, |s| {
+            let _ = pfp_dense_joint(
+                &DenseArgs {
+                    x_mu: &x_mu, x_aux: &x_e2, w_mu: &w_mu, w_aux: &w_e2,
+                    b_mu: None, b_var: None,
+                },
+                s,
+            );
+        });
+        assert!(res.best_ms <= res.baseline_ms * 1.2);
+        assert!(res.trials.len() >= 7);
+        assert!(res.speedup() > 0.0);
+    }
+}

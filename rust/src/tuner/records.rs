@@ -1,0 +1,150 @@
+//! Tuning records: persisted best schedules per (operator, arch, batch)
+//! so serving and benches reuse tuning results without re-searching —
+//! the analog of TVM's tuning logs.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::ops::Schedule;
+use crate::util::json::Json;
+
+/// Key -> (schedule, measured median ms).
+#[derive(Clone, Debug, Default)]
+pub struct TuningRecords {
+    pub records: BTreeMap<String, (Schedule, f64)>,
+}
+
+impl TuningRecords {
+    pub fn key(op: &str, arch: &str, batch: usize) -> String {
+        format!("{op}/{arch}/b{batch}")
+    }
+
+    pub fn insert(&mut self, key: String, sched: Schedule, ms: f64) {
+        self.records.insert(key, (sched, ms));
+    }
+
+    pub fn get(&self, key: &str) -> Option<&(Schedule, f64)> {
+        self.records.get(key)
+    }
+
+    /// Best schedule for (op, arch, batch), falling back to the nearest
+    /// recorded batch for that op/arch, then to `default`.
+    pub fn lookup(&self, op: &str, arch: &str, batch: usize, default: Schedule) -> Schedule {
+        if let Some((s, _)) = self.get(&Self::key(op, arch, batch)) {
+            return *s;
+        }
+        let prefix = format!("{op}/{arch}/b");
+        let mut best: Option<(usize, Schedule)> = None;
+        for (k, (s, _)) in &self.records {
+            if let Some(b) = k.strip_prefix(&prefix).and_then(|v| v.parse::<usize>().ok()) {
+                let dist = b.abs_diff(batch);
+                if best.map_or(true, |(d, _)| dist < d) {
+                    best = Some((dist, *s));
+                }
+            }
+        }
+        best.map(|(_, s)| s).unwrap_or(default)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        for (k, (s, ms)) in &self.records {
+            obj.insert(
+                k.clone(),
+                Json::obj(vec![
+                    ("schedule", s.to_json()),
+                    ("median_ms", Json::Num(*ms)),
+                ]),
+            );
+        }
+        Json::Obj(obj)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| Error::Json("tuning records must be an object".into()))?;
+        let mut records = BTreeMap::new();
+        for (k, entry) in obj {
+            let sched = Schedule::from_json(
+                entry
+                    .get("schedule")
+                    .ok_or_else(|| Error::Json("record missing schedule".into()))?,
+            )?;
+            let ms = entry.num_field("median_ms")?;
+            records.insert(k.clone(), (sched, ms));
+        }
+        Ok(Self { records })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().dump())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Load if present, else empty.
+    pub fn load_or_default(path: &Path) -> Self {
+        Self::load(path).unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_via_json() {
+        let mut r = TuningRecords::default();
+        r.insert(
+            TuningRecords::key("dense", "mlp", 10),
+            Schedule::tuned(2),
+            0.5,
+        );
+        r.insert(
+            TuningRecords::key("conv", "lenet", 1),
+            Schedule::tiled(16, 64),
+            1.25,
+        );
+        let j = r.to_json();
+        let back = TuningRecords::from_json(&j).unwrap();
+        assert_eq!(back.records.len(), 2);
+        assert_eq!(
+            back.get("dense/mlp/b10").unwrap().0,
+            Schedule::tuned(2)
+        );
+    }
+
+    #[test]
+    fn lookup_falls_back_to_nearest_batch() {
+        let mut r = TuningRecords::default();
+        r.insert(TuningRecords::key("dense", "mlp", 10), Schedule::tuned(2), 0.5);
+        r.insert(TuningRecords::key("dense", "mlp", 100), Schedule::tuned(4), 3.0);
+        let s = r.lookup("dense", "mlp", 16, Schedule::baseline());
+        assert_eq!(s, Schedule::tuned(2));
+        let s = r.lookup("dense", "mlp", 90, Schedule::baseline());
+        assert_eq!(s, Schedule::tuned(4));
+        let s = r.lookup("dense", "lenet", 10, Schedule::baseline());
+        assert_eq!(s, Schedule::baseline());
+    }
+
+    #[test]
+    fn save_load_file() {
+        let dir = std::env::temp_dir().join("pfp_tuning_test");
+        let path = dir.join("records.json");
+        let mut r = TuningRecords::default();
+        r.insert(TuningRecords::key("dense", "mlp", 1), Schedule::tuned(1), 0.1);
+        r.save(&path).unwrap();
+        let back = TuningRecords::load(&path).unwrap();
+        assert_eq!(back.records.len(), 1);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,111 @@
+//! Schedule search space (what the paper's TE schedule templates expose).
+
+use crate::ops::{LoopOrder, Schedule};
+use crate::util::rng::SplitMix64;
+
+/// Bounds of the schedule search.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    pub orders: Vec<LoopOrder>,
+    pub unrolls: Vec<usize>,
+    pub tile_ns: Vec<usize>,
+    pub tile_ks: Vec<usize>,
+    pub max_threads: usize,
+    /// probability of sampling a tiled candidate at all
+    pub tile_prob: f64,
+}
+
+impl SearchSpace {
+    /// Default dense/conv space on this host.
+    pub fn dense_default(max_threads: usize) -> Self {
+        Self {
+            orders: vec![LoopOrder::Mkn, LoopOrder::Mnk],
+            unrolls: vec![1, 2, 4, 8],
+            tile_ns: vec![0, 8, 16, 32],
+            tile_ks: vec![0, 32, 64, 128],
+            max_threads: max_threads.max(1),
+            tile_prob: 0.25,
+        }
+    }
+
+    fn pick<'a, T>(&self, xs: &'a [T], rng: &mut SplitMix64) -> &'a T {
+        &xs[rng.randint(xs.len() as u64) as usize]
+    }
+
+    /// Uniform random candidate.
+    pub fn sample(&self, rng: &mut SplitMix64) -> Schedule {
+        let tiled = rng.uniform() < self.tile_prob;
+        let (tile_n, tile_k) = if tiled {
+            (
+                *self.pick(&self.tile_ns[1..], rng),
+                *self.pick(&self.tile_ks[1..], rng),
+            )
+        } else {
+            (0, 0)
+        };
+        Schedule {
+            loop_order: *self.pick(&self.orders, rng),
+            tile_n,
+            tile_k,
+            unroll: *self.pick(&self.unrolls, rng),
+            vectorize: rng.randint(2) == 0,
+            threads: 1 + rng.randint(self.max_threads as u64) as usize,
+        }
+    }
+
+    /// Mutate one knob of a (non-tiled) parent — the stochastic-tuning
+    /// step. Never *introduces* tiles (the paper's rule: tiling is outside
+    /// the stochastic search).
+    pub fn mutate(&self, parent: &Schedule, rng: &mut SplitMix64) -> Schedule {
+        let mut s = *parent;
+        match rng.randint(4) {
+            0 => s.loop_order = *self.pick(&self.orders, rng),
+            1 => s.unroll = *self.pick(&self.unrolls, rng),
+            2 => s.vectorize = !s.vectorize,
+            _ => s.threads = 1 + rng.randint(self.max_threads as u64) as usize,
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_stay_in_bounds() {
+        let space = SearchSpace::dense_default(4);
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..200 {
+            let s = space.sample(&mut rng);
+            assert!(space.unrolls.contains(&s.unroll));
+            assert!((1..=4).contains(&s.threads));
+            if s.tile_n > 0 {
+                assert!(space.tile_ns.contains(&s.tile_n));
+                assert!(s.tile_k > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn mutation_changes_one_knob_and_never_adds_tiles() {
+        let space = SearchSpace::dense_default(4);
+        let mut rng = SplitMix64::new(2);
+        let parent = Schedule::tuned(2);
+        for _ in 0..100 {
+            let child = space.mutate(&parent, &mut rng);
+            assert_eq!(child.tile_n, 0);
+            assert_eq!(child.tile_k, 0);
+            let diffs = [
+                child.loop_order != parent.loop_order,
+                child.unroll != parent.unroll,
+                child.vectorize != parent.vectorize,
+                child.threads != parent.threads,
+            ]
+            .iter()
+            .filter(|&&d| d)
+            .count();
+            assert!(diffs <= 1);
+        }
+    }
+}

@@ -1,0 +1,270 @@
+//! Uncertainty toolkit (paper Section 2.2): logit sampling (Eq. 11),
+//! Shannon/softmax entropy and mutual information (Eqs. 1-3), AUROC, and
+//! the calibration-factor sweep.
+//!
+//! Mirrors `python/compile/metrics.py`; cross-checked against the
+//! `uncertainty_{arch}.npz` goldens by the integration tests.
+
+use crate::tensor::Tensor;
+use crate::util::rng::SplitMix64;
+
+pub const EPS: f64 = 1e-12;
+
+/// Row-wise softmax of logits `[N, K]` (in place on a copy).
+pub fn softmax(logits: &[f32], k: usize) -> Vec<f32> {
+    let n = logits.len() / k;
+    let mut out = vec![0.0f32; logits.len()];
+    for i in 0..n {
+        let row = &logits[i * k..(i + 1) * k];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for (o, &v) in out[i * k..(i + 1) * k].iter_mut().zip(row) {
+            let e = (v - max).exp();
+            *o = e;
+            sum += e;
+        }
+        for o in out[i * k..(i + 1) * k].iter_mut() {
+            *o /= sum;
+        }
+    }
+    out
+}
+
+/// Shannon entropy of each probability row `[N, K]`.
+pub fn entropy_rows(probs: &[f32], k: usize) -> Vec<f64> {
+    probs
+        .chunks(k)
+        .map(|row| -row.iter().map(|&p| p as f64 * (p as f64 + EPS).ln()).sum::<f64>())
+        .collect()
+}
+
+/// Per-input uncertainty decomposition from sampled predictive
+/// probabilities `[S, N, K]` (flattened sample-major).
+#[derive(Clone, Debug)]
+pub struct Uncertainty {
+    /// Eq. 1 — total predictive uncertainty.
+    pub total: Vec<f64>,
+    /// Eq. 2 — softmax entropy (aleatoric).
+    pub sme: Vec<f64>,
+    /// Eq. 3 — mutual information (epistemic).
+    pub mi: Vec<f64>,
+    /// mean predictive distribution `[N, K]`.
+    pub mean_p: Vec<f32>,
+}
+
+pub fn uncertainty_from_probs(probs: &[f32], s: usize, n: usize, k: usize) -> Uncertainty {
+    assert_eq!(probs.len(), s * n * k);
+    // mean over samples
+    let mut mean_p = vec![0.0f32; n * k];
+    for si in 0..s {
+        for i in 0..n * k {
+            mean_p[i] += probs[si * n * k + i] / s as f32;
+        }
+    }
+    let total = entropy_rows(&mean_p, k);
+    // mean of per-sample entropies
+    let mut sme = vec![0.0f64; n];
+    for si in 0..s {
+        let ent = entropy_rows(&probs[si * n * k..(si + 1) * n * k], k);
+        for i in 0..n {
+            sme[i] += ent[i] / s as f64;
+        }
+    }
+    let mi = total
+        .iter()
+        .zip(&sme)
+        .map(|(t, a)| (t - a).max(0.0))
+        .collect();
+    Uncertainty { total, sme, mi, mean_p }
+}
+
+/// Eq. 11: sample `s` logit sets from `N(mu, var)` -> `[S, N, K]`.
+pub fn sample_logits_gaussian(
+    mu: &Tensor,
+    var: &Tensor,
+    s: usize,
+    seed: u64,
+) -> Vec<f32> {
+    let n = mu.len();
+    let mut out = vec![0.0f32; s * n];
+    let mut rng = SplitMix64::new(seed);
+    let mu_d = mu.data();
+    let var_d = var.data();
+    for si in 0..s {
+        for i in 0..n {
+            out[si * n + i] =
+                mu_d[i] + var_d[i].max(0.0).sqrt() * rng.normal() as f32;
+        }
+    }
+    out
+}
+
+/// Full PFP post-processing: logit moments -> sampled probs -> metrics.
+pub fn pfp_uncertainty(
+    mu: &Tensor,
+    var: &Tensor,
+    samples: usize,
+    seed: u64,
+) -> Uncertainty {
+    let k = mu.cols();
+    let n = mu.rows();
+    let logits = sample_logits_gaussian(mu, var, samples, seed);
+    let mut probs = vec![0.0f32; logits.len()];
+    for si in 0..samples {
+        let p = softmax(&logits[si * n * k..(si + 1) * n * k], k);
+        probs[si * n * k..(si + 1) * n * k].copy_from_slice(&p);
+    }
+    uncertainty_from_probs(&probs, samples, n, k)
+}
+
+/// Classification accuracy of a mean predictive `[N, K]` vs labels.
+pub fn accuracy(mean_p: &[f32], k: usize, labels: &[i32]) -> f64 {
+    let n = labels.len();
+    let mut correct = 0usize;
+    for i in 0..n {
+        let row = &mean_p[i * k..(i + 1) * k];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred as i32 == labels[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+/// Rank-based AUROC (Mann-Whitney U, ties at 0.5) for separating
+/// positives (OOD, high scores) from negatives (in-domain).
+pub fn auroc(pos: &[f64], neg: &[f64]) -> f64 {
+    let mut all: Vec<(f64, bool)> = pos
+        .iter()
+        .map(|&s| (s, true))
+        .chain(neg.iter().map(|&s| (s, false)))
+        .collect();
+    all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let n = all.len();
+    let mut rank_sum_pos = 0.0f64;
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && all[j + 1].0 == all[i].0 {
+            j += 1;
+        }
+        let avg_rank = 0.5 * (i + j) as f64 + 1.0;
+        for item in all.iter().take(j + 1).skip(i) {
+            if item.1 {
+                rank_sum_pos += avg_rank;
+            }
+        }
+        i = j + 1;
+    }
+    let np = pos.len() as f64;
+    let nn = neg.len() as f64;
+    (rank_sum_pos - np * (np + 1.0) / 2.0) / (np * nn)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_normalises() {
+        let p = softmax(&[1.0, 2.0, 3.0, 0.0, 0.0, 0.0], 3);
+        for row in p.chunks(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!((p[3] - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn entropy_bounds() {
+        let uniform = vec![0.1f32; 10];
+        let e = entropy_rows(&uniform, 10);
+        assert!((e[0] - (10.0f64).ln()).abs() < 1e-6);
+        let mut onehot = vec![0.0f32; 10];
+        onehot[3] = 1.0;
+        assert!(entropy_rows(&onehot, 10)[0] < 1e-9);
+    }
+
+    #[test]
+    fn decomposition_identity() {
+        // total = sme + mi must hold exactly
+        let mut rng = SplitMix64::new(3);
+        let (s, n, k) = (20, 8, 10);
+        let mut probs = vec![0.0f32; s * n * k];
+        for c in probs.chunks_mut(k) {
+            let logits: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+            c.copy_from_slice(&softmax(&logits, k));
+        }
+        let u = uncertainty_from_probs(&probs, s, n, k);
+        for i in 0..n {
+            assert!((u.total[i] - u.sme[i] - u.mi[i]).abs() < 1e-9 || u.mi[i] == 0.0);
+        }
+    }
+
+    #[test]
+    fn disagreeing_onehots_high_mi() {
+        let (s, n, k) = (30, 4, 10);
+        let mut rng = SplitMix64::new(4);
+        let mut probs = vec![1e-9f32; s * n * k];
+        for si in 0..s {
+            for i in 0..n {
+                let c = rng.randint(k as u64) as usize;
+                probs[(si * n + i) * k + c] = 1.0;
+            }
+        }
+        let u = uncertainty_from_probs(&probs, s, n, k);
+        for i in 0..n {
+            assert!(u.sme[i] < 1e-6, "sme {}", u.sme[i]);
+            assert!(u.mi[i] > 1.0, "mi {}", u.mi[i]);
+        }
+    }
+
+    #[test]
+    fn logit_sampling_moments() {
+        let mu = Tensor::new(vec![1, 2], vec![1.0, -2.0]).unwrap();
+        let var = Tensor::new(vec![1, 2], vec![0.25, 4.0]).unwrap();
+        let s = 20_000;
+        let samples = sample_logits_gaussian(&mu, &var, s, 5);
+        for j in 0..2 {
+            let vals: Vec<f64> = (0..s).map(|si| samples[si * 2 + j] as f64).collect();
+            let mean = vals.iter().sum::<f64>() / s as f64;
+            let v = vals.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / s as f64;
+            assert!((mean - mu.data()[j] as f64).abs() < 0.05);
+            assert!((v - var.data()[j] as f64).abs() < 0.15);
+        }
+    }
+
+    #[test]
+    fn auroc_perfect_random_ties() {
+        assert_eq!(auroc(&[2.0, 3.0], &[0.0, 1.0]), 1.0);
+        assert_eq!(auroc(&[0.0, 1.0], &[2.0, 3.0]), 0.0);
+        // ties case from the python test: 8/9
+        let a = auroc(&[1.0, 1.0, 2.0], &[1.0, 0.0, 0.0]);
+        assert!((a - 8.0 / 9.0).abs() < 1e-9);
+        let mut rng = SplitMix64::new(6);
+        let pos: Vec<f64> = (0..2000).map(|_| rng.normal()).collect();
+        let neg: Vec<f64> = (0..2000).map(|_| rng.normal()).collect();
+        assert!((auroc(&pos, &neg) - 0.5).abs() < 0.03);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let p = vec![0.9, 0.1, 0.2, 0.8];
+        assert_eq!(accuracy(&p, 2, &[0, 1]), 1.0);
+        assert_eq!(accuracy(&p, 2, &[1, 1]), 0.5);
+    }
+
+    #[test]
+    fn pfp_pipeline_runs() {
+        let mu = Tensor::new(vec![3, 10], vec![0.1; 30]).unwrap();
+        let var = Tensor::new(vec![3, 10], vec![0.5; 30]).unwrap();
+        let u = pfp_uncertainty(&mu, &var, 30, 1);
+        assert_eq!(u.total.len(), 3);
+        assert!(u.total[0] > 0.0);
+    }
+}

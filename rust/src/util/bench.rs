@@ -1,0 +1,144 @@
+//! Hand-rolled bench harness (criterion is not in the offline crate set).
+//!
+//! Used by every `rust/benches/*.rs` target: warms up, runs timed
+//! iterations until a wall-clock budget or iteration cap is reached, and
+//! reports median/mean/p95 latency. Emits both a human table and JSON
+//! lines (for EXPERIMENTS.md extraction).
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn median_ms(&self) -> f64 {
+        self.median_s * 1e3
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("median_ms", Json::Num(self.median_s * 1e3)),
+            ("mean_ms", Json::Num(self.mean_s * 1e3)),
+            ("p95_ms", Json::Num(self.p95_s * 1e3)),
+            ("min_ms", Json::Num(self.min_s * 1e3)),
+        ])
+    }
+}
+
+/// Bench configuration: bounded by both iterations and wall clock.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub max_iters: usize,
+    pub min_iters: usize,
+    pub budget: Duration,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            max_iters: 200,
+            min_iters: 5,
+            budget: Duration::from_millis(1500),
+        }
+    }
+}
+
+impl BenchOpts {
+    /// Scale budgets down when `PFP_BENCH_FAST=1` (CI smoke runs).
+    pub fn from_env() -> Self {
+        let mut o = Self::default();
+        if std::env::var("PFP_BENCH_FAST").as_deref() == Ok("1") {
+            o.warmup_iters = 1;
+            o.max_iters = 20;
+            o.min_iters = 2;
+            o.budget = Duration::from_millis(300);
+        }
+        o
+    }
+}
+
+/// Time `f` repeatedly; returns robust latency statistics.
+pub fn bench<F: FnMut()>(name: &str, opts: BenchOpts, mut f: F) -> BenchResult {
+    for _ in 0..opts.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < opts.max_iters
+        && (samples.len() < opts.min_iters || start.elapsed() < opts.budget)
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        median_s: stats::median(&samples),
+        mean_s: stats::mean(&samples),
+        p95_s: stats::percentile(&samples, 95.0),
+        min_s: stats::min(&samples),
+    }
+}
+
+/// Pretty-print a results table with a title, plus JSON lines.
+pub fn report(title: &str, results: &[BenchResult]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<52} {:>10} {:>10} {:>10} {:>7}",
+        "case", "median", "mean", "p95", "iters"
+    );
+    for r in results {
+        println!(
+            "{:<52} {:>8.3}ms {:>8.3}ms {:>8.3}ms {:>7}",
+            r.name,
+            r.median_s * 1e3,
+            r.mean_s * 1e3,
+            r.p95_s * 1e3,
+            r.iters
+        );
+    }
+    for r in results {
+        println!("JSON {}", r.to_json().dump());
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let opts = BenchOpts {
+            warmup_iters: 1,
+            max_iters: 10,
+            min_iters: 3,
+            budget: Duration::from_millis(50),
+        };
+        let mut n = 0usize;
+        let r = bench("noop", opts, || n += 1);
+        assert!(r.iters >= 3 && r.iters <= 10);
+        assert_eq!(n, r.iters + 1); // + warmup
+        assert!(r.median_s >= 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Offline substrate: the crates this repo would normally pull from
+//! crates.io (rand, serde_json, rayon, proptest, criterion) are not in the
+//! offline crate set, so the minimal pieces we need are implemented here
+//! and unit-tested in place.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,103 @@
+//! Hand-rolled property-test harness (proptest is not in the offline crate
+//! set). Seeded random case generation with failure reporting that names
+//! the case seed, so failures reproduce exactly.
+//!
+//! Used by the operator and coordinator invariant tests:
+//! `check(cases, |g| { ... })` draws sizes/values from `g` and asserts
+//! inside the closure.
+
+use super::rng::SplitMix64;
+
+/// Random case generator handed to property bodies.
+pub struct Gen {
+    rng: SplitMix64,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: SplitMix64::new(seed), case_seed: seed }
+    }
+
+    /// usize in `[lo, hi]` inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.randint((hi - lo + 1) as u64) as usize
+    }
+
+    /// f32 uniform in `[lo, hi)`.
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.uniform() as f32
+    }
+
+    /// standard normal f32 scaled.
+    pub fn normal(&mut self, scale: f32) -> f32 {
+        scale * self.rng.normal() as f32
+    }
+
+    /// vec of normals.
+    pub fn normal_vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.normal(scale)).collect()
+    }
+
+    /// vec of non-negative values (abs of normals), for variances.
+    pub fn var_vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.normal(scale).abs() + 1e-6).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.randint(2) == 0
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+}
+
+/// Run `body` for `cases` seeded cases. Panics (with the case seed) on the
+/// first failing case. Base seed can be overridden with `PFP_PROP_SEED`
+/// to reproduce a failure.
+pub fn check<F: FnMut(&mut Gen)>(cases: usize, mut body: F) {
+    let base = std::env::var("PFP_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FF_EE00u64);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed on case {i} (PFP_PROP_SEED={base}, case seed {seed}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_ranges_hold() {
+        check(50, |g| {
+            let n = g.usize_in(1, 10);
+            assert!((1..=10).contains(&n));
+            let x = g.f32_in(-2.0, 3.0);
+            assert!((-2.0..3.0).contains(&x));
+            let v = g.var_vec(n, 1.0);
+            assert!(v.iter().all(|&x| x > 0.0));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        check(10, |g| {
+            let n = g.usize_in(0, 100);
+            assert!(n < 90, "drew {n}");
+        });
+    }
+}

@@ -1,0 +1,134 @@
+//! SplitMix64 PRNG — mirrored draw-for-draw with
+//! `python/compile/data.py::SplitMix64` so the synthetic dataset generator
+//! produces the same streams in both languages.
+//!
+//! Also provides Box-Muller Gaussian sampling (cosine branch only, keeping
+//! the draw count deterministic — two uniforms per normal) used by the SVI
+//! weight sampler and the Eq. 11 logit sampler.
+
+const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+const MIX1: u64 = 0xBF58_476D_1CE4_E5B9;
+const MIX2: u64 = 0x94D0_49BB_1331_11EB;
+
+#[inline(always)]
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(MIX1);
+    z = (z ^ (z >> 27)).wrapping_mul(MIX2);
+    z ^ (z >> 31)
+}
+
+/// SplitMix64 PRNG state.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline(always)]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(GOLDEN);
+        mix(self.state)
+    }
+
+    /// Uniform in `[0, 1)` with 24 bits of mantissa (f32-exact; identical
+    /// to the Python generator).
+    #[inline(always)]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 40) as f64 / (1u64 << 24) as f64
+    }
+
+    /// Uniform integer in `[0, n)` (modulo; bias negligible for small n —
+    /// and identical to the Python side, which is what matters here).
+    #[inline(always)]
+    pub fn randint(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+
+    /// Standard normal via Box-Muller, cosine branch (2 uniform draws).
+    #[inline(always)]
+    pub fn normal(&mut self) -> f64 {
+        let mut u1 = self.uniform();
+        let u2 = self.uniform();
+        if u1 < 1e-12 {
+            u1 = 1e-12;
+        }
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fill a slice with `mu + sigma * z`, `z ~ N(0,1)`.
+    pub fn fill_normal(&mut self, out: &mut [f32], mu: f32, sigma: f32) {
+        for v in out.iter_mut() {
+            *v = mu + sigma * self.normal() as f32;
+        }
+    }
+}
+
+/// Per-sample seed derivation — mirrors `data.derive_seed`.
+pub fn derive_seed(base: u64, stream: u64, index: u64) -> u64 {
+    let mixed = base
+        ^ stream.wrapping_mul(0x9E37_79B1)
+        ^ index.wrapping_mul(0x85EB_CA77);
+    SplitMix64::new(mixed).next_u64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values_seed_zero() {
+        // Same pinned constants as python/tests/test_data.py.
+        let mut rng = SplitMix64::new(0);
+        assert_eq!(rng.next_u64(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(rng.next_u64(), 0x6E78_9E6A_A1B9_65F4);
+        assert_eq!(rng.next_u64(), 0x06C4_5D18_8009_454F);
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut rng = SplitMix64::new(7);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / 10_000.0 - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = SplitMix64::new(99);
+        let n = 20_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.normal();
+            s += z;
+            s2 += z * z;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn derive_seed_streams_differ() {
+        let seeds: std::collections::HashSet<u64> =
+            (1..6).map(|s| derive_seed(2025, s, 0)).collect();
+        assert_eq!(seeds.len(), 5);
+    }
+
+    #[test]
+    fn deterministic_sequences() {
+        let mut a = SplitMix64::new(123);
+        let mut b = SplitMix64::new(123);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+}

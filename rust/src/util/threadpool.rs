@@ -1,0 +1,149 @@
+//! Scoped parallel-for built on `crossbeam_utils::thread::scope` (rayon is
+//! not in the offline crate set).
+//!
+//! The PFP dense/conv operators use this for the paper's "Parallelization"
+//! schedule knob (Table 2): output rows are split into contiguous chunks,
+//! one scoped thread per chunk. On this container (1 hardware core) the
+//! parallel rows of Table 2/5 measure scheduling overhead rather than
+//! speedup — EXPERIMENTS.md reports this explicitly.
+
+use crossbeam_utils::thread as cb;
+
+/// Number of worker threads to use by default: `PFP_THREADS` env var or
+/// the machine's available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("PFP_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Split `n` items into at most `parts` contiguous ranges of near-equal
+/// size. Never returns empty ranges.
+pub fn split_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    let parts = parts.max(1).min(n.max(1));
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < rem);
+        if len == 0 {
+            break;
+        }
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Run `f(range, chunk_index)` over `n` items split into `threads` chunks.
+/// With `threads <= 1` runs inline (no spawn overhead).
+pub fn parallel_for<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>, usize) + Sync,
+{
+    if threads <= 1 || n <= 1 {
+        f(0..n, 0);
+        return;
+    }
+    let ranges = split_ranges(n, threads);
+    cb::scope(|s| {
+        for (i, r) in ranges.into_iter().enumerate() {
+            let f = &f;
+            s.spawn(move |_| f(r, i));
+        }
+    })
+    .expect("worker thread panicked");
+}
+
+/// Parallel-for over disjoint mutable chunks of `out`, where chunk `i`
+/// covers rows `ranges[i]` of a row-major `[n, row_len]` buffer.
+pub fn parallel_rows<F>(out: &mut [f32], n_rows: usize, row_len: usize, threads: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>, &mut [f32]) + Sync,
+{
+    assert_eq!(out.len(), n_rows * row_len);
+    if threads <= 1 || n_rows <= 1 {
+        f(0..n_rows, out);
+        return;
+    }
+    let ranges = split_ranges(n_rows, threads);
+    // split the output buffer into per-range disjoint slices
+    let mut slices: Vec<(&mut [f32], std::ops::Range<usize>)> = Vec::new();
+    let mut rest = out;
+    let mut consumed = 0usize;
+    for r in ranges {
+        let take = (r.end - r.start) * row_len;
+        let (head, tail) = rest.split_at_mut(take);
+        slices.push((head, r.clone()));
+        rest = tail;
+        consumed += take;
+    }
+    debug_assert_eq!(consumed, n_rows * row_len);
+    cb::scope(|s| {
+        for (chunk, r) in slices {
+            let f = &f;
+            s.spawn(move |_| f(r, chunk));
+        }
+    })
+    .expect("worker thread panicked");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn split_ranges_covers_all() {
+        for n in [0usize, 1, 7, 100] {
+            for parts in [1usize, 2, 3, 8] {
+                let rs = split_ranges(n, parts);
+                let total: usize = rs.iter().map(|r| r.end - r.start).sum();
+                assert_eq!(total, n, "n={n} parts={parts}");
+                for w in rs.windows(2) {
+                    assert_eq!(w[0].end, w[1].start);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_for_visits_everything() {
+        let count = AtomicUsize::new(0);
+        parallel_for(1000, 4, |r, _| {
+            count.fetch_add(r.end - r.start, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 1000);
+    }
+
+    #[test]
+    fn parallel_rows_disjoint_writes() {
+        let n_rows = 13;
+        let row_len = 7;
+        let mut out = vec![0.0f32; n_rows * row_len];
+        parallel_rows(&mut out, n_rows, row_len, 4, |rows, chunk| {
+            for (local, row) in rows.clone().enumerate() {
+                for c in 0..row_len {
+                    chunk[local * row_len + c] = (row * row_len + c) as f32;
+                }
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn inline_when_single_thread() {
+        let mut out = vec![0.0f32; 8];
+        parallel_rows(&mut out, 4, 2, 1, |rows, chunk| {
+            assert_eq!(rows, 0..4);
+            chunk.fill(1.0);
+        });
+        assert!(out.iter().all(|&v| v == 1.0));
+    }
+}

@@ -1,0 +1,190 @@
+//! Coordinator end-to-end: TCP server + native PFP backend on trained
+//! weights, driven by real synthetic Dirty-MNIST images — in-domain
+//! requests must come back confident, OOD requests flagged.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use pfp::coordinator::{protocol, NativePfpBackend, Server, ServerConfig, Service};
+use pfp::data::DirtyMnist;
+use pfp::model::{Arch, PosteriorWeights, Schedules};
+use pfp::runtime::Manifest;
+
+fn trained_service() -> Option<(Service, DirtyMnist, f64)> {
+    let dir = pfp::artifacts_dir();
+    if !dir.join("weights_mlp.npz").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    let arch = Arch::mlp();
+    let manifest = Manifest::load(&dir.join("manifest.json")).unwrap();
+    let calib = manifest.calibration_factor("mlp");
+    let weights = PosteriorWeights::load(&dir, &arch, calib).unwrap();
+    let data = DirtyMnist::load(&dir).unwrap();
+
+    // calibrate the OOD threshold: midpoint between mean in-domain and
+    // mean OOD MI on a small calibration slice
+    let mut exec =
+        pfp::model::PfpExecutor::new(arch.clone(), weights.clone(), Schedules::tuned(1));
+    let (mu_in, var_in) = exec.forward(&data.test_mnist.x.first_rows(64));
+    let (mu_ood, var_ood) = exec.forward(&data.test_ood.x.first_rows(64));
+    let u_in = pfp::uncertainty::pfp_uncertainty(&mu_in, &var_in, 30, 1);
+    let u_ood = pfp::uncertainty::pfp_uncertainty(&mu_ood, &var_ood, 30, 1);
+    let m_in = u_in.mi.iter().sum::<f64>() / 64.0;
+    let m_ood = u_ood.mi.iter().sum::<f64>() / 64.0;
+    let threshold = 0.5 * (m_in + m_ood);
+
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        ood_threshold: threshold,
+        ..Default::default()
+    };
+    let mut svc = Service::new(cfg);
+    svc.register(
+        "mlp",
+        784,
+        Box::new(NativePfpBackend::new(arch, weights, Schedules::tuned(1))),
+    );
+    Some((svc, data, threshold))
+}
+
+#[test]
+fn in_process_indomain_vs_ood() {
+    let Some((svc, data, _)) = trained_service() else { return };
+    let n = 40;
+    let mut ood_flags_in = 0;
+    let mut ood_flags_ood = 0;
+    let mut correct = 0;
+    for i in 0..n {
+        let resp = svc.infer_blocking(protocol::Request {
+            id: i as u64,
+            model: "mlp".into(),
+            input: data.test_mnist.x.row(i).to_vec(),
+        });
+        let p = resp.result.unwrap();
+        if p.pred == data.test_mnist.y[i] {
+            correct += 1;
+        }
+        ood_flags_in += p.ood as usize;
+    }
+    for i in 0..n {
+        let resp = svc.infer_blocking(protocol::Request {
+            id: (n + i) as u64,
+            model: "mlp".into(),
+            input: data.test_ood.x.row(i).to_vec(),
+        });
+        ood_flags_ood += resp.result.unwrap().ood as usize;
+    }
+    assert!(correct as f64 / n as f64 > 0.9, "accuracy {correct}/{n}");
+    assert!(
+        ood_flags_ood > ood_flags_in,
+        "OOD flagging failed: in={ood_flags_in} ood={ood_flags_ood}"
+    );
+}
+
+#[test]
+fn tcp_roundtrip_with_metrics() {
+    let Some((svc, data, _)) = trained_service() else { return };
+    let svc = Arc::new(svc);
+    let server = Server::bind(svc.clone()).unwrap();
+    let addr = server.addr;
+    std::thread::spawn(move || server.run());
+
+    let stream = TcpStream::connect(addr).unwrap();
+            stream.set_nodelay(true).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    // ping
+    writeln!(writer, r#"{{"cmd":"ping"}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("pong"));
+
+    // a few inferences
+    for i in 0..5 {
+        let req = protocol::request_json(i, "mlp", data.test_mnist.x.row(i as usize));
+        writeln!(writer, "{req}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = protocol::Response::parse(line.trim()).unwrap();
+        assert_eq!(resp.id, i);
+        let p = resp.result.expect("inference ok");
+        assert_eq!(p.mu.len(), 10);
+        assert!(p.total >= 0.0 && p.sme >= 0.0 && p.mi >= 0.0);
+    }
+
+    // metrics
+    writeln!(writer, r#"{{"cmd":"metrics"}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let m = pfp::util::json::Json::parse(line.trim()).unwrap();
+    assert!(m.num_field("responses").unwrap() >= 5.0);
+    assert!(m.num_field("latency_p50_us").unwrap() > 0.0);
+}
+
+#[test]
+fn malformed_requests_do_not_kill_connection() {
+    let Some((svc, data, _)) = trained_service() else { return };
+    let svc = Arc::new(svc);
+    let server = Server::bind(svc).unwrap();
+    let addr = server.addr;
+    std::thread::spawn(move || server.run());
+
+    let stream = TcpStream::connect(addr).unwrap();
+            stream.set_nodelay(true).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    writeln!(writer, "this is not json").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"));
+
+    // connection still alive for a valid request
+    writeln!(
+        writer,
+        "{}",
+        protocol::request_json(1, "mlp", data.test_mnist.x.row(0))
+    )
+    .unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let resp = protocol::Response::parse(line.trim()).unwrap();
+    assert!(resp.result.is_ok());
+}
+
+#[test]
+fn concurrent_clients_all_served() {
+    let Some((svc, data, _)) = trained_service() else { return };
+    let svc = Arc::new(svc);
+    let server = Server::bind(svc.clone()).unwrap();
+    let addr = server.addr;
+    std::thread::spawn(move || server.run());
+
+    let mut handles = Vec::new();
+    for c in 0..4 {
+        let x = data.test_mnist.x.row(c).to_vec();
+        handles.push(std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            stream.set_nodelay(true).unwrap();
+            let mut writer = stream.try_clone().unwrap();
+            let mut reader = BufReader::new(stream);
+            let mut ok = 0;
+            for i in 0..8u64 {
+                writeln!(writer, "{}", protocol::request_json(i, "mlp", &x)).unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                if protocol::Response::parse(line.trim()).unwrap().result.is_ok() {
+                    ok += 1;
+                }
+            }
+            ok
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 32);
+    // dynamic batching should have coalesced concurrent load
+    assert!(svc.metrics.mean_batch_size() >= 1.0);
+}

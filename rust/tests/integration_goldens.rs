@@ -1,0 +1,139 @@
+//! Cross-language correctness: the native Rust operator stack vs the JAX
+//! reference stack, on the *trained* weights and real test inputs.
+//!
+//! The goldens (`artifacts/goldens.npz`) are produced by
+//! `python/compile/aot.py`: for each (arch, variant, batch) entry, an
+//! input slice of the test set plus the JAX outputs. These tests require
+//! `make artifacts`; they skip (with a notice) when artifacts are absent.
+
+use pfp::model::npz::Npz;
+use pfp::model::{Arch, DetExecutor, PfpExecutor, PosteriorWeights, Schedules};
+use pfp::runtime::Manifest;
+use pfp::tensor::Tensor;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = pfp::artifacts_dir();
+    if dir.join("goldens.npz").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn load_weights(dir: &std::path::Path, arch: &Arch) -> (PosteriorWeights, f32) {
+    let manifest = Manifest::load(&dir.join("manifest.json")).unwrap();
+    let calib = manifest.calibration_factor(&arch.name);
+    (
+        PosteriorWeights::load(dir, arch, calib).unwrap(),
+        calib,
+    )
+}
+
+fn check_pfp(arch_name: &str, batch: usize, atol: f32) {
+    let Some(dir) = artifacts() else { return };
+    let goldens = Npz::open(&dir.join("goldens.npz")).unwrap();
+    let arch = Arch::by_name(arch_name).unwrap();
+    let (weights, _) = load_weights(&dir, &arch);
+    let key = format!("model_{arch_name}_pfp_b{batch}");
+    let x = goldens.tensor(&format!("{key}_x")).unwrap();
+    let want_mu = goldens.tensor(&format!("{key}_mu")).unwrap();
+    let want_var = goldens.tensor(&format!("{key}_var")).unwrap();
+
+    let x2d = x.clone().flatten_2d();
+    let mut exec = PfpExecutor::new(arch, weights, Schedules::tuned(1));
+    let (mu, var) = exec.forward(&x2d);
+
+    assert!(
+        mu.allclose(&want_mu.clone().flatten_2d(), atol, 1e-3),
+        "{key}: native mu deviates from JAX golden (max {:.2e})",
+        mu.max_abs_diff(&want_mu.flatten_2d())
+    );
+    assert!(
+        var.allclose(&want_var.clone().flatten_2d(), atol * 2.0, 5e-3),
+        "{key}: native var deviates from JAX golden (max {:.2e})",
+        var.max_abs_diff(&want_var.flatten_2d())
+    );
+}
+
+#[test]
+fn native_pfp_mlp_matches_jax_golden_b1() {
+    check_pfp("mlp", 1, 2e-3);
+}
+
+#[test]
+fn native_pfp_mlp_matches_jax_golden_b10() {
+    check_pfp("mlp", 10, 2e-3);
+}
+
+#[test]
+fn native_pfp_mlp_matches_jax_golden_b100() {
+    check_pfp("mlp", 100, 2e-3);
+}
+
+#[test]
+fn native_pfp_lenet_matches_jax_golden_b1() {
+    check_pfp("lenet", 1, 5e-3);
+}
+
+#[test]
+fn native_pfp_lenet_matches_jax_golden_b10() {
+    check_pfp("lenet", 10, 5e-3);
+}
+
+#[test]
+fn native_det_matches_jax_golden() {
+    let Some(dir) = artifacts() else { return };
+    let goldens = Npz::open(&dir.join("goldens.npz")).unwrap();
+    for arch_name in ["mlp", "lenet"] {
+        let arch = Arch::by_name(arch_name).unwrap();
+        let (weights, _) = load_weights(&dir, &arch);
+        let key = format!("model_{arch_name}_det_b10");
+        let x = goldens.tensor(&format!("{key}_x")).unwrap().flatten_2d();
+        let want = goldens
+            .tensor(&format!("{key}_logits"))
+            .unwrap()
+            .flatten_2d();
+        let exec = DetExecutor::new(arch, weights, Schedules::tuned(1));
+        let got = exec.forward(&x);
+        assert!(
+            got.allclose(&want, 1e-3, 1e-3),
+            "{key}: det logits deviate (max {:.2e})",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn native_uncertainty_matches_python_metrics() {
+    // The python pipeline stored PFP logit moments per split; recompute
+    // MI/SME in Rust from the same moments and compare to the python
+    // uncertainty arrays (same Eq. 11 protocol, different RNG -> compare
+    // distribution means, not elementwise).
+    let Some(dir) = artifacts() else { return };
+    let unc = Npz::open(&dir.join("uncertainty_mlp.npz")).unwrap();
+    for split in ["mnist", "ood"] {
+        let mu = unc.tensor(&format!("pfp_{split}_logit_mu")).unwrap();
+        let var = unc.tensor(&format!("pfp_{split}_logit_var")).unwrap();
+        let u = pfp::uncertainty::pfp_uncertainty(&mu, &var, 30, 9);
+        let py_mi = unc.tensor(&format!("pfp_{split}_mi")).unwrap();
+        let rust_mean: f64 = u.mi.iter().sum::<f64>() / u.mi.len() as f64;
+        let py_mean: f64 =
+            py_mi.data().iter().map(|&v| v as f64).sum::<f64>() / py_mi.len() as f64;
+        assert!(
+            (rust_mean - py_mean).abs() < 0.05 + 0.2 * py_mean.abs(),
+            "{split}: rust MI mean {rust_mean} vs python {py_mean}"
+        );
+    }
+}
+
+#[test]
+fn golden_input_shapes_consistent() {
+    let Some(dir) = artifacts() else { return };
+    let goldens = Npz::open(&dir.join("goldens.npz")).unwrap();
+    let x = goldens.tensor("model_mlp_pfp_b10_x").unwrap();
+    assert_eq!(x.shape(), &[10, 784]);
+    let x = goldens.tensor("model_lenet_pfp_b10_x").unwrap();
+    assert_eq!(x.shape(), &[10, 1, 28, 28]);
+    let _ = Tensor::zeros(vec![1]);
+}

@@ -1,0 +1,105 @@
+//! PJRT runtime integration: every AOT artifact (including the Pallas
+//! variants) loads, compiles and reproduces the JAX golden outputs through
+//! the `xla` crate's CPU client — the L1→L2→L3 composition proof.
+
+use pfp::model::npz::Npz;
+use pfp::model::{Arch, PosteriorWeights};
+use pfp::runtime::Engine;
+
+fn engine() -> Option<(Engine, std::path::PathBuf)> {
+    let dir = pfp::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some((Engine::new(&dir).unwrap(), dir))
+}
+
+fn check_artifact(name: &str, atol: f32) {
+    let Some((engine, dir)) = engine() else { return };
+    let goldens = Npz::open(&dir.join("goldens.npz")).unwrap();
+    let entry = engine.manifest.entry(name).expect("artifact in manifest");
+    let arch = Arch::by_name(&entry.arch).unwrap();
+    let calib = entry.calibration_factor.unwrap_or(1.0);
+    let weights = PosteriorWeights::load(&dir, &arch, calib).unwrap();
+
+    let model = engine.load(name, &weights).unwrap();
+    let x = goldens.tensor(&format!("{name}_x")).unwrap();
+    let outs = model.execute(&x).unwrap();
+
+    for (i, out_name) in entry.outputs.iter().enumerate() {
+        let want = goldens
+            .tensor(&format!("{name}_{out_name}"))
+            .unwrap()
+            .flatten_2d();
+        assert!(
+            outs[i].allclose(&want, atol, 1e-4),
+            "{name}/{out_name}: PJRT output deviates from JAX golden (max {:.2e})",
+            outs[i].max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn pfp_mlp_artifacts_execute() {
+    for b in [1usize, 10, 100] {
+        check_artifact(&format!("model_mlp_pfp_b{b}"), 1e-4);
+    }
+}
+
+#[test]
+fn pfp_lenet_artifacts_execute() {
+    for b in [1usize, 10] {
+        check_artifact(&format!("model_lenet_pfp_b{b}"), 1e-4);
+    }
+}
+
+#[test]
+fn det_artifacts_execute() {
+    check_artifact("model_mlp_det_b10", 1e-4);
+    check_artifact("model_lenet_det_b10", 1e-4);
+}
+
+#[test]
+fn pallas_artifacts_execute() {
+    // interpret-mode Pallas lowered into the same HLO pipeline: the
+    // L1 kernel path composes end-to-end through PJRT.
+    check_artifact("model_mlp_pfp_pallas_b1", 1e-4);
+    check_artifact("model_mlp_pfp_pallas_b10", 1e-4);
+    check_artifact("model_lenet_pfp_pallas_b1", 1e-4);
+}
+
+#[test]
+fn pallas_and_jnp_artifacts_agree() {
+    // the two lowerings of the same model must agree on the same input
+    let Some((engine, dir)) = engine() else { return };
+    let goldens = Npz::open(&dir.join("goldens.npz")).unwrap();
+    let arch = Arch::by_name("mlp").unwrap();
+    let calib = engine.manifest.calibration_factor("mlp");
+    let weights = PosteriorWeights::load(&dir, &arch, calib).unwrap();
+    let a = engine.load("model_mlp_pfp_b10", &weights).unwrap();
+    let b = engine.load("model_mlp_pfp_pallas_b10", &weights).unwrap();
+    let x = goldens.tensor("model_mlp_pfp_b10_x").unwrap();
+    let oa = a.execute(&x).unwrap();
+    let ob = b.execute(&x).unwrap();
+    assert!(oa[0].allclose(&ob[0], 3e-4, 3e-4), "pallas/jnp mu mismatch");
+    assert!(oa[1].allclose(&ob[1], 1e-3, 1e-3), "pallas/jnp var mismatch");
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let Some((engine, dir)) = engine() else { return };
+    let arch = Arch::by_name("mlp").unwrap();
+    let weights = PosteriorWeights::load(&dir, &arch, 1.0).unwrap();
+    let a = engine.load("model_mlp_pfp_b1", &weights).unwrap();
+    let b = engine.load("model_mlp_pfp_b1", &weights).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn unknown_artifact_errors() {
+    let Some((engine, dir)) = engine() else { return };
+    let arch = Arch::by_name("mlp").unwrap();
+    let weights = PosteriorWeights::load(&dir, &arch, 1.0).unwrap();
+    assert!(engine.load("model_nope_pfp_b1", &weights).is_err());
+}

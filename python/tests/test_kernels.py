@@ -4,10 +4,15 @@ Hypothesis sweeps shapes and value ranges; fixed-seed cases pin the exact
 architectural shapes used by the MLP and LeNet-5.
 """
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# Heavyweight deps are optional so the suite stays green offline
+# (ISSUE 1: CI must pass without jax/pallas/hypothesis installed).
+jax = pytest.importorskip("jax", reason="jax not installed (offline CI)")
+pytest.importorskip("hypothesis", reason="hypothesis not installed (offline CI)")
+
+import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
 from compile import kernels

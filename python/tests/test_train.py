@@ -1,10 +1,13 @@
 """Training pipeline smoke tests: ELBO pieces, Adam, and a tiny end-to-end
 SVI run that must learn the synthetic task."""
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# Heavyweight dep is optional so the suite stays green offline.
+jax = pytest.importorskip("jax", reason="jax not installed (offline CI)")
+
+import jax.numpy as jnp
 
 from compile import data as D
 from compile import metrics as M

@@ -1,0 +1,53 @@
+//! Dispatch-overhead micro-benchmark: the persistent worker pool vs the
+//! original `crossbeam_utils::thread::scope` spawn-per-call strategy, on
+//! the acceptance workload — a 64-row parallel-for with a near-empty
+//! body, so the measurement is pure scheduling cost.
+//!
+//! Acceptance (ISSUE 1): the pool's per-call dispatch must be at least
+//! 5x cheaper than spawn-per-call. A spawn/join pair costs tens of
+//! microseconds per chunk; pool dispatch is a channel send + latch wait.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use pfp::util::bench::{bench, black_box, report, BenchOpts};
+use pfp::util::threadpool::{
+    default_threads, parallel_for_in, scoped_parallel_for, ThreadPool,
+};
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let threads = default_threads().max(2);
+    let pool = ThreadPool::new(threads);
+    let n_rows = 64usize;
+    let sink = AtomicU64::new(0);
+
+    let mut results = Vec::new();
+    results.push(bench(
+        &format!("scoped spawn-per-call / {n_rows} rows x {threads} threads"),
+        opts,
+        || {
+            scoped_parallel_for(n_rows, threads, |r, _| {
+                sink.fetch_add((r.end - r.start) as u64, Ordering::Relaxed);
+            });
+        },
+    ));
+    results.push(bench(
+        &format!("persistent pool        / {n_rows} rows x {threads} threads"),
+        opts,
+        || {
+            parallel_for_in(&pool, n_rows, threads, |r, _| {
+                sink.fetch_add((r.end - r.start) as u64, Ordering::Relaxed);
+            });
+        },
+    ));
+    black_box(sink.load(Ordering::Relaxed));
+
+    report("pool dispatch overhead — 64-row parallel-for", &results);
+    let scoped_us = results[0].median_s * 1e6;
+    let pooled_us = results[1].median_s * 1e6;
+    println!(
+        "\nper-call dispatch: scoped {scoped_us:.1}us vs pool {pooled_us:.1}us \
+         -> {:.1}x lower (acceptance: >= 5x)",
+        scoped_us / pooled_us
+    );
+}

@@ -25,7 +25,15 @@ fn main() {
     opts.max_iters = if fast { 3 } else { 20 };
     let svi_samples = 30;
     let manifest = Manifest::load(&dir.join("manifest.json")).unwrap();
-    let engine = Engine::new(&dir).unwrap();
+    // the XLA/PJRT substrate is optional (stub engine without the
+    // `xla-runtime` feature) — native rows must still run without it
+    let engine = match Engine::new(&dir) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("(xla substrate unavailable: {e})");
+            None
+        }
+    };
     let threads = pfp::util::threadpool::default_threads().max(2);
 
     let batches: &[usize] = if fast { &[10] } else { &[10, 100] };
@@ -49,10 +57,12 @@ fn main() {
                 ("native-par", Schedules::tuned(threads)),
             ] {
                 let det_unt = DetExecutor::new(arch.clone(), weights.clone(), Schedules::baseline());
-                let det_tun = DetExecutor::new(arch.clone(), weights.clone(), sched_tuned);
+                let det_tun =
+                    DetExecutor::new(arch.clone(), weights.clone(), sched_tuned.clone());
                 let mut pfp_unt =
                     PfpExecutor::new(arch.clone(), weights.clone(), Schedules::baseline());
-                let mut pfp_tun = PfpExecutor::new(arch.clone(), weights.clone(), sched_tuned);
+                let mut pfp_tun =
+                    PfpExecutor::new(arch.clone(), weights.clone(), sched_tuned.clone());
                 let mut svi =
                     SviExecutor::new(arch.clone(), weights.clone(), sched_tuned, 9);
 
@@ -95,10 +105,12 @@ fn main() {
             // --- XLA/PJRT substrate (tuned-by-compiler; no untuned column)
             let pfp_name = format!("model_{arch_name}_pfp_b{b}");
             let det_name = format!("model_{arch_name}_det_b{b}");
-            if let (Ok(pfp_m), Ok(det_m)) = (
-                engine.load(&pfp_name, &weights),
-                engine.load(&det_name, &weights),
-            ) {
+            if let Some((pfp_m, det_m)) = engine.as_ref().and_then(|eng| {
+                match (eng.load(&pfp_name, &weights), eng.load(&det_name, &weights)) {
+                    (Ok(p), Ok(d)) => Some((p, d)),
+                    _ => None,
+                }
+            }) {
                 let r_det = bench("xla det", opts, || {
                     black_box(det_m.execute(&x).unwrap());
                 });
@@ -110,7 +122,7 @@ fn main() {
                 let mut svi_opts = opts;
                 svi_opts.max_iters = if fast { 2 } else { 5 };
                 svi_opts.warmup_iters = 1;
-                let entry = engine.manifest.entry(&det_name).unwrap().clone();
+                let entry = manifest.entry(&det_name).unwrap().clone();
                 let r_svi = bench("xla svi", svi_opts, || {
                     for _ in 0..svi_samples {
                         // sampling + re-transfer per posterior sample is part

@@ -87,6 +87,15 @@ impl Batcher {
         self.len() == 0
     }
 
+    /// Slots left before `push` starts rejecting (0 = saturated).
+    pub fn remaining_capacity(&self) -> usize {
+        self.cfg.capacity.saturating_sub(self.len())
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
     /// Blocking collect of the next batch: waits for the first item, then
     /// up to `max_wait` (since the first arrival) for more, capped at
     /// `max_batch`. Returns `None` when closed and drained.
@@ -185,12 +194,17 @@ mod tests {
             max_wait: Duration::from_millis(1),
             capacity: 2,
         });
+        assert_eq!(b.remaining_capacity(), 2);
         let (i1, _r1) = item(1);
         let (i2, _r2) = item(2);
         let (i3, _r3) = item(3);
         assert!(b.push(i1).is_ok());
         assert!(b.push(i2).is_ok());
+        assert_eq!(b.remaining_capacity(), 0);
         assert!(b.push(i3).is_err());
+        assert!(!b.is_closed());
+        b.close();
+        assert!(b.is_closed());
     }
 
     #[test]

@@ -24,6 +24,7 @@ use crate::coordinator::protocol::{self, Command, Inbound, Response};
 use crate::coordinator::{postprocess, Backend};
 use crate::error::{Error, Result};
 use crate::tensor::Tensor;
+use crate::util::threadpool::{self, ThreadPool};
 
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -33,6 +34,11 @@ pub struct ServerConfig {
     pub logit_samples: usize,
     /// MI threshold above which a prediction is flagged OOD.
     pub ood_threshold: f64,
+    /// Size of the service-owned persistent operator pool; 0 (default)
+    /// shares the process-wide pool. Every model lane dispatches its
+    /// parallel operators onto this one pool, so serving never pays
+    /// per-request thread-spawn cost.
+    pub pool_threads: usize,
 }
 
 impl Default for ServerConfig {
@@ -42,6 +48,7 @@ impl Default for ServerConfig {
             batcher: BatcherConfig::default(),
             logit_samples: 30,
             ood_threshold: 0.25,
+            pool_threads: 0,
         }
     }
 }
@@ -58,21 +65,37 @@ pub struct Service {
     cfg: ServerConfig,
     workers: Vec<std::thread::JoinHandle<()>>,
     stopping: Arc<AtomicBool>,
+    /// One persistent operator pool shared by every lane and request.
+    pool: Arc<ThreadPool>,
 }
 
 impl Service {
     pub fn new(cfg: ServerConfig) -> Self {
+        let pool = if cfg.pool_threads == 0 {
+            threadpool::global().clone()
+        } else {
+            Arc::new(ThreadPool::new(cfg.pool_threads))
+        };
         Self {
             lanes: HashMap::new(),
             metrics: Arc::new(Metrics::new()),
             cfg,
             workers: Vec::new(),
             stopping: Arc::new(AtomicBool::new(false)),
+            pool,
         }
     }
 
     pub fn config(&self) -> &ServerConfig {
         &self.cfg
+    }
+
+    /// The service-wide persistent operator pool. Backends registered on
+    /// this service should be built with
+    /// `Schedules::...with_pool(service.pool().clone())` so all lanes
+    /// reuse the same long-lived workers.
+    pub fn pool(&self) -> &Arc<ThreadPool> {
+        &self.pool
     }
 
     /// Register a model lane: spawns the worker thread that owns `backend`.

@@ -1,47 +1,73 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled Display/Error impls — `thiserror`
+//! is not in the offline crate set).
 
-use thiserror::Error;
-
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("shape mismatch: {0}")]
     Shape(String),
-
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("npz error: {0}")]
+    Io(std::io::Error),
     Npz(String),
-
-    #[error("json error: {0}")]
     Json(String),
-
-    #[error("manifest error: {0}")]
     Manifest(String),
-
-    #[error("runtime error: {0}")]
     Runtime(String),
-
-    #[error("xla error: {0}")]
     Xla(String),
-
-    #[error("coordinator error: {0}")]
     Coordinator(String),
-
-    #[error("config error: {0}")]
     Config(String),
 }
 
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Npz(m) => write!(f, "npz error: {m}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Manifest(m) => write!(f, "manifest error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla-runtime")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
     }
 }
 
-impl From<zip::result::ZipError> for Error {
-    fn from(e: zip::result::ZipError) -> Self {
-        Error::Npz(e.to_string())
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_category_and_message() {
+        assert_eq!(Error::Shape("2x3 vs 3x2".into()).to_string(), "shape mismatch: 2x3 vs 3x2");
+        assert_eq!(Error::Coordinator("queue full".into()).to_string(), "coordinator error: queue full");
+    }
+
+    #[test]
+    fn io_error_converts_and_sources() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }
-
-pub type Result<T> = std::result::Result<T, Error>;

@@ -57,6 +57,7 @@ fn print_help() {
          COMMANDS:\n\
            info                       show artifacts and Table-1 metrics\n\
            serve   [--arch mlp] [--backend native|xla|svi] [--addr 127.0.0.1:7878]\n\
+                   [--threads 1] [--pool-threads 0] [--max-batch 10]\n\
            eval    [--arch mlp] [--samples 30]\n\
            profile [--arch mlp] [--batch 10] [--passes 20] [--schedules tuned|baseline]\n\
            tune    [--arch mlp] [--batch 10] [--trials 24]\n"
@@ -119,16 +120,22 @@ fn cmd_serve(opts: &HashMap<String, String>) -> pfp::Result<()> {
     let (arch, weights, calib) = load_arch_weights(arch_name)?;
     let features = arch.input_len();
 
+    let threads = opt_usize(opts, "threads", 1);
     let mut cfg = ServerConfig::default();
     cfg.addr = addr.to_string();
     cfg.batcher.max_batch = opt_usize(opts, "max-batch", 10);
+    // 0 = share the process-wide pool; N = dedicated N-worker service pool
+    cfg.pool_threads = opt_usize(opts, "pool-threads", 0);
     let mut svc = Service::new(cfg);
+    // every backend dispatches onto the service's one persistent pool, so
+    // serving reuses the same workers across models and requests
+    let schedules = Schedules::tuned(threads).with_pool(svc.pool().clone());
 
     let backend: Box<dyn pfp::coordinator::Backend> = match backend_kind {
         "native" => Box::new(NativePfpBackend::new(
             arch.clone(),
             weights,
-            Schedules::tuned(1),
+            schedules,
         )),
         "xla" => {
             let engine = Engine::new(&pfp::artifacts_dir())?;
@@ -139,7 +146,7 @@ fn cmd_serve(opts: &HashMap<String, String>) -> pfp::Result<()> {
         "svi" => Box::new(SviBackend::new(
             arch.clone(),
             weights,
-            Schedules::tuned(1),
+            schedules,
             opt_usize(opts, "samples", 30),
             0xC0DE,
         )),

@@ -9,27 +9,40 @@
 //! "tooling" overhead) where representations disagree. The first compute
 //! layer uses the Eq. 13 deterministic-input kernels.
 
-use crate::ops::conv::{pfp_conv2d_first, pfp_conv2d_joint, ConvArgs};
-use crate::ops::dense::{pfp_dense_first, pfp_dense_joint, DenseArgs};
+use std::sync::Arc;
+
+use crate::ops::conv::{pfp_conv2d_first_in, pfp_conv2d_joint_in, ConvArgs};
+use crate::ops::dense::{pfp_dense_first_in, pfp_dense_joint_in, DenseArgs};
 use crate::ops::det::{det_conv2d, det_dense, det_relu};
-use crate::ops::maxpool::{det_maxpool2, pfp_maxpool2_vectorized, pfp_maxpool_generic};
-use crate::ops::relu::pfp_relu;
+use crate::ops::maxpool::{
+    det_maxpool2, pfp_maxpool2_vectorized_in, pfp_maxpool_generic,
+};
+use crate::ops::relu::pfp_relu_in;
 use crate::ops::svi::sample_tensor;
 use crate::ops::Schedule;
 use crate::profiling::Profiler;
 use crate::tensor::{ProbTensor, Rep, Tensor};
 use crate::util::rng::SplitMix64;
+use crate::util::threadpool::{self, ThreadPool};
 
 use super::{Arch, LayerSpec, PosteriorWeights};
 
-/// Per-operator-class schedule selection for a network.
-#[derive(Clone, Copy, Debug)]
+/// Per-operator-class schedule selection for a network, plus the shared
+/// persistent worker pool every parallel operator dispatches onto.
+#[derive(Clone, Debug)]
 pub struct Schedules {
     pub dense: Schedule,
     pub conv: Schedule,
     /// vectorized k=2 pool (true) vs generic reduction (false) — Table 3.
     pub vectorized_pool: bool,
     pub relu_threads: usize,
+    /// Worker tasks for the vectorized max-pool (1 = serial — Table 3's
+    /// hand-vectorized row; >1 reproduces the "automatic schedule" row).
+    pub maxpool_threads: usize,
+    /// Persistent worker-pool handle. Defaults to the process-wide pool;
+    /// the serving coordinator injects one shared handle per `Service` so
+    /// every model lane and request reuses the same workers.
+    pub pool: Arc<ThreadPool>,
 }
 
 impl Schedules {
@@ -40,6 +53,8 @@ impl Schedules {
             conv: Schedule::baseline(),
             vectorized_pool: false,
             relu_threads: 1,
+            maxpool_threads: 1,
+            pool: threadpool::global().clone(),
         }
     }
 
@@ -50,7 +65,16 @@ impl Schedules {
             conv: Schedule::tuned(threads),
             vectorized_pool: true,
             relu_threads: 1,
+            maxpool_threads: 1,
+            pool: threadpool::global().clone(),
         }
+    }
+
+    /// Replace the worker-pool handle (the serving path shares one pool
+    /// across all lanes).
+    pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Self {
+        self.pool = pool;
+        self
     }
 }
 
@@ -97,11 +121,13 @@ impl PfpExecutor {
                     let w = &self.weights.layers[compute_idx];
                     compute_idx += 1;
                     let sched = self.schedules.dense;
+                    let pool = Arc::clone(&self.schedules.pool);
                     let next = if let Some(prob) = state.take() {
                         let prob = convert_rep(&mut self.profiler, prob, Rep::E2);
                         let prob = prob.flatten_2d();
                         let (mu, var) = self.profiler.record(label, "dense", || {
-                            pfp_dense_joint(
+                            pfp_dense_joint_in(
+                                &pool,
                                 &DenseArgs {
                                     x_mu: &prob.mu,
                                     x_aux: &prob.aux,
@@ -119,7 +145,8 @@ impl PfpExecutor {
                         let x = x.flatten_2d();
                         let x_sq = x.squared();
                         let (mu, var) = self.profiler.record(label, "dense", || {
-                            pfp_dense_first(
+                            pfp_dense_first_in(
+                                &pool,
                                 &DenseArgs {
                                     x_mu: &x,
                                     x_aux: &x_sq,
@@ -139,10 +166,12 @@ impl PfpExecutor {
                     let w = &self.weights.layers[compute_idx];
                     compute_idx += 1;
                     let sched = self.schedules.conv;
+                    let pool = Arc::clone(&self.schedules.pool);
                     let next = if let Some(prob) = state.take() {
                         let prob = convert_rep(&mut self.profiler, prob, Rep::E2);
                         self.profiler.record(label, "conv2d", || {
-                            pfp_conv2d_joint(
+                            pfp_conv2d_joint_in(
+                                &pool,
                                 &prob,
                                 &ConvArgs {
                                     w_mu: &w.w_mu,
@@ -156,7 +185,8 @@ impl PfpExecutor {
                     } else {
                         let x = det_input.take().expect("input consumed twice");
                         self.profiler.record(label, "conv2d", || {
-                            pfp_conv2d_first(
+                            pfp_conv2d_first_in(
+                                &pool,
                                 &x,
                                 &ConvArgs {
                                     w_mu: &w.w_mu,
@@ -174,18 +204,21 @@ impl PfpExecutor {
                     let prob = state.take().expect("ReLU before first compute layer");
                     let prob = convert_rep(&mut self.profiler, prob, Rep::Var);
                     let threads = self.schedules.relu_threads;
+                    let pool = Arc::clone(&self.schedules.pool);
                     state = Some(
                         self.profiler
-                            .record(label, "relu", || pfp_relu(prob, threads)),
+                            .record(label, "relu", || pfp_relu_in(&pool, prob, threads)),
                     );
                 }
                 LayerSpec::MaxPool2 => {
                     let prob = state.take().expect("pool before first compute layer");
                     let prob = convert_rep(&mut self.profiler, prob, Rep::Var);
                     let vectorized = self.schedules.vectorized_pool;
+                    let threads = self.schedules.maxpool_threads;
+                    let pool = Arc::clone(&self.schedules.pool);
                     state = Some(self.profiler.record(label, "maxpool", || {
                         if vectorized {
-                            pfp_maxpool2_vectorized(&prob)
+                            pfp_maxpool2_vectorized_in(&pool, &prob, threads)
                         } else {
                             pfp_maxpool_generic(&prob, 2, 2)
                         }

@@ -5,7 +5,6 @@
 //! NPY format 1.0/2.0, stored or deflated zip members.
 
 use std::collections::BTreeMap;
-use std::io::Read;
 use std::path::Path;
 
 use crate::error::{Error, Result};
@@ -114,6 +113,97 @@ fn extract_shape(header: &str) -> Option<Vec<usize>> {
     Some(out)
 }
 
+// ---------------------------------------------------------------------------
+// minimal ZIP container parsing (the `zip` crate is not in the offline
+// crate set). `numpy.savez` writes *stored* (uncompressed) members, which
+// is all the artifact pipeline produces; deflated members
+// (`savez_compressed`) are rejected with a clear error.
+// ---------------------------------------------------------------------------
+
+fn le_u16(b: &[u8], at: usize) -> Option<u16> {
+    Some(u16::from_le_bytes([*b.get(at)?, *b.get(at + 1)?]))
+}
+
+fn le_u32(b: &[u8], at: usize) -> Option<u32> {
+    Some(u32::from_le_bytes([
+        *b.get(at)?,
+        *b.get(at + 1)?,
+        *b.get(at + 2)?,
+        *b.get(at + 3)?,
+    ]))
+}
+
+const EOCD_SIG: u32 = 0x0605_4b50;
+const CENTRAL_SIG: u32 = 0x0201_4b50;
+const LOCAL_SIG: u32 = 0x0403_4b50;
+
+/// Parse a ZIP archive's central directory and return the (name, payload)
+/// pairs of its stored members.
+fn zip_stored_members(bytes: &[u8]) -> Result<Vec<(String, &[u8])>> {
+    // EOCD record: scan backwards over the (possibly present) archive
+    // comment; the record itself is 22 bytes.
+    let eocd = (0..=bytes.len().saturating_sub(22))
+        .rev()
+        .find(|&i| le_u32(bytes, i) == Some(EOCD_SIG))
+        .ok_or_else(|| Error::Npz("not a zip archive (no end-of-central-directory)".into()))?;
+    let n_entries = le_u16(bytes, eocd + 10)
+        .ok_or_else(|| Error::Npz("truncated EOCD".into()))? as usize;
+    let mut at = le_u32(bytes, eocd + 16)
+        .ok_or_else(|| Error::Npz("truncated EOCD".into()))? as usize;
+
+    let mut out = Vec::with_capacity(n_entries);
+    for _ in 0..n_entries {
+        if le_u32(bytes, at) != Some(CENTRAL_SIG) {
+            return Err(Error::Npz("bad central directory entry".into()));
+        }
+        let field = |off: usize| -> Result<usize> {
+            le_u16(bytes, at + off)
+                .map(|v| v as usize)
+                .ok_or_else(|| Error::Npz("truncated central directory".into()))
+        };
+        let field32 = |off: usize| -> Result<usize> {
+            le_u32(bytes, at + off)
+                .map(|v| v as usize)
+                .ok_or_else(|| Error::Npz("truncated central directory".into()))
+        };
+        let method = field(10)?;
+        let csize = field32(20)?;
+        let name_len = field(28)?;
+        let extra_len = field(30)?;
+        let comment_len = field(32)?;
+        let local_off = field32(42)?;
+        let name_bytes = bytes
+            .get(at + 46..at + 46 + name_len)
+            .ok_or_else(|| Error::Npz("truncated member name".into()))?;
+        let name = String::from_utf8_lossy(name_bytes).into_owned();
+        if method != 0 {
+            return Err(Error::Npz(format!(
+                "member '{name}' is compressed (method {method}); only stored \
+                 members are supported — write artifacts with np.savez, not \
+                 np.savez_compressed"
+            )));
+        }
+        // local header: sizes can lag behind the central directory when a
+        // data descriptor is used, so take lengths from the central record
+        if le_u32(bytes, local_off) != Some(LOCAL_SIG) {
+            return Err(Error::Npz(format!("member '{name}': bad local header")));
+        }
+        let lname = le_u16(bytes, local_off + 26)
+            .ok_or_else(|| Error::Npz("truncated local header".into()))?
+            as usize;
+        let lextra = le_u16(bytes, local_off + 28)
+            .ok_or_else(|| Error::Npz("truncated local header".into()))?
+            as usize;
+        let start = local_off + 30 + lname + lextra;
+        let payload = bytes
+            .get(start..start + csize)
+            .ok_or_else(|| Error::Npz(format!("member '{name}': truncated payload")))?;
+        out.push((name, payload));
+        at += 46 + name_len + extra_len + comment_len;
+    }
+    Ok(out)
+}
+
 /// An NPZ archive loaded fully into memory.
 pub struct Npz {
     arrays: BTreeMap<String, NpyArray>,
@@ -121,20 +211,12 @@ pub struct Npz {
 
 impl Npz {
     pub fn open(path: &Path) -> Result<Self> {
-        let file = std::fs::File::open(path)
+        let bytes = std::fs::read(path)
             .map_err(|e| Error::Npz(format!("open {}: {e}", path.display())))?;
-        let mut zip = zip::ZipArchive::new(file)?;
         let mut arrays = BTreeMap::new();
-        for i in 0..zip.len() {
-            let mut entry = zip.by_index(i)?;
-            let name = entry
-                .name()
-                .strip_suffix(".npy")
-                .unwrap_or(entry.name())
-                .to_string();
-            let mut buf = Vec::with_capacity(entry.size() as usize);
-            entry.read_to_end(&mut buf)?;
-            arrays.insert(name, parse_npy(&buf)?);
+        for (member, payload) in zip_stored_members(&bytes)? {
+            let name = member.strip_suffix(".npy").unwrap_or(&member).to_string();
+            arrays.insert(name, parse_npy(payload)?);
         }
         Ok(Self { arrays })
     }
@@ -213,6 +295,92 @@ mod tests {
     #[test]
     fn rejects_garbage() {
         assert!(parse_npy(b"not numpy").is_err());
+    }
+
+    /// Assemble a minimal stored-member zip archive (local headers +
+    /// central directory + EOCD), byte-compatible with `numpy.savez`.
+    fn make_stored_zip(members: &[(&str, &[u8])]) -> Vec<u8> {
+        let mut out = Vec::new();
+        let mut centrals = Vec::new();
+        for (name, payload) in members {
+            let local_off = out.len() as u32;
+            // local file header
+            out.extend_from_slice(&0x0403_4b50u32.to_le_bytes());
+            out.extend_from_slice(&[20, 0, 0, 0, 0, 0]); // version, flags, method=0
+            out.extend_from_slice(&[0, 0, 0, 0]); // mod time/date
+            out.extend_from_slice(&0u32.to_le_bytes()); // crc (unchecked)
+            out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            out.extend_from_slice(&0u16.to_le_bytes()); // extra len
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(payload);
+
+            // matching central directory record
+            let mut c = Vec::new();
+            c.extend_from_slice(&0x0201_4b50u32.to_le_bytes());
+            c.extend_from_slice(&[20, 0, 20, 0, 0, 0, 0, 0]); // versions, flags, method=0
+            c.extend_from_slice(&[0, 0, 0, 0]); // mod time/date
+            c.extend_from_slice(&0u32.to_le_bytes()); // crc
+            c.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            c.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            c.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            c.extend_from_slice(&0u16.to_le_bytes()); // extra
+            c.extend_from_slice(&0u16.to_le_bytes()); // comment
+            c.extend_from_slice(&0u16.to_le_bytes()); // disk
+            c.extend_from_slice(&0u16.to_le_bytes()); // internal attrs
+            c.extend_from_slice(&0u32.to_le_bytes()); // external attrs
+            c.extend_from_slice(&local_off.to_le_bytes());
+            c.extend_from_slice(name.as_bytes());
+            centrals.push(c);
+        }
+        let cd_off = out.len() as u32;
+        for c in &centrals {
+            out.extend_from_slice(c);
+        }
+        let cd_len = out.len() as u32 - cd_off;
+        // EOCD
+        out.extend_from_slice(&0x0605_4b50u32.to_le_bytes());
+        out.extend_from_slice(&[0, 0, 0, 0]); // disk numbers
+        out.extend_from_slice(&(members.len() as u16).to_le_bytes());
+        out.extend_from_slice(&(members.len() as u16).to_le_bytes());
+        out.extend_from_slice(&cd_len.to_le_bytes());
+        out.extend_from_slice(&cd_off.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes()); // comment len
+        out
+    }
+
+    #[test]
+    fn stored_zip_roundtrip() {
+        let a = make_npy_f32(&[2, 2], &[1., 2., 3., 4.]);
+        let b = make_npy_f32(&[3], &[5., 6., 7.]);
+        let zip = make_stored_zip(&[("a.npy", &a), ("b.npy", &b)]);
+        let members = zip_stored_members(&zip).unwrap();
+        assert_eq!(members.len(), 2);
+        assert_eq!(members[0].0, "a.npy");
+        let arr = parse_npy(members[0].1).unwrap();
+        assert_eq!(arr.shape, vec![2, 2]);
+        assert_eq!(arr.data, vec![1., 2., 3., 4.]);
+        let arr_b = parse_npy(members[1].1).unwrap();
+        assert_eq!(arr_b.data, vec![5., 6., 7.]);
+    }
+
+    #[test]
+    fn compressed_member_rejected_with_hint() {
+        let a = make_npy_f32(&[1], &[1.0]);
+        let mut zip = make_stored_zip(&[("a.npy", &a)]);
+        // flip the central-directory method field (offset 10 into the
+        // record) to 8 (deflate)
+        let cd_off = zip.len() - 22 - (46 + "a.npy".len());
+        zip[cd_off + 10] = 8;
+        let err = zip_stored_members(&zip).unwrap_err();
+        assert!(err.to_string().contains("savez_compressed"), "{err}");
+    }
+
+    #[test]
+    fn garbage_zip_rejected() {
+        assert!(zip_stored_members(b"PK but not really").is_err());
+        assert!(zip_stored_members(b"").is_err());
     }
 
     #[test]

@@ -10,9 +10,10 @@
 //! the paper's LeNet-5 needs).
 
 use crate::tensor::{ProbTensor, Rep, Tensor};
+use crate::util::threadpool::{self, ThreadPool};
 
 use super::dense::{
-    dense_kernel, DenseArgs, FirstLayer, JointEq12,
+    dense_kernel_in, DenseArgs, FirstLayer, JointEq12,
 };
 use super::schedule::Schedule;
 
@@ -71,6 +72,7 @@ pub struct ConvArgs<'a> {
 }
 
 fn conv_via_dense<A: super::dense::Accum>(
+    pool: &ThreadPool,
     x_mu: &Tensor,
     x_aux: &Tensor,
     args: &ConvArgs<'_>,
@@ -83,7 +85,8 @@ fn conv_via_dense<A: super::dense::Accum>(
     let (pa, _) = im2col(x_aux, kh, kw);
     let wm = args.w_mu.clone().reshape(vec![o, i * kh * kw]).unwrap();
     let wa = args.w_aux.clone().reshape(vec![o, i * kh * kw]).unwrap();
-    let (mu, var) = dense_kernel::<A>(
+    let (mu, var) = dense_kernel_in::<A>(
+        pool,
         &DenseArgs {
             x_mu: &pm,
             x_aux: &pa,
@@ -104,16 +107,36 @@ pub fn pfp_conv2d_joint(
     args: &ConvArgs<'_>,
     sched: &Schedule,
 ) -> ProbTensor {
+    pfp_conv2d_joint_in(threadpool::global(), x, args, sched)
+}
+
+/// [`pfp_conv2d_joint`] on an explicit pool.
+pub fn pfp_conv2d_joint_in(
+    pool: &ThreadPool,
+    x: &ProbTensor,
+    args: &ConvArgs<'_>,
+    sched: &Schedule,
+) -> ProbTensor {
     debug_assert_eq!(x.rep, Rep::E2);
-    let (mu, var) = conv_via_dense::<JointEq12>(&x.mu, &x.aux, args, sched);
+    let (mu, var) = conv_via_dense::<JointEq12>(pool, &x.mu, &x.aux, args, sched);
     ProbTensor::new(mu, var, Rep::Var)
 }
 
 /// First-layer PFP conv2d (Eq. 13): deterministic input, weight aux =
 /// weight variance.
 pub fn pfp_conv2d_first(x: &Tensor, args: &ConvArgs<'_>, sched: &Schedule) -> ProbTensor {
+    pfp_conv2d_first_in(threadpool::global(), x, args, sched)
+}
+
+/// [`pfp_conv2d_first`] on an explicit pool.
+pub fn pfp_conv2d_first_in(
+    pool: &ThreadPool,
+    x: &Tensor,
+    args: &ConvArgs<'_>,
+    sched: &Schedule,
+) -> ProbTensor {
     let x_sq = x.squared();
-    let (mu, var) = conv_via_dense::<FirstLayer>(x, &x_sq, args, sched);
+    let (mu, var) = conv_via_dense::<FirstLayer>(pool, x, &x_sq, args, sched);
     ProbTensor::new(mu, var, Rep::Var)
 }
 

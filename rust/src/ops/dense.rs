@@ -21,8 +21,7 @@
 //! untuned baseline) strides the weight matrix by K in its inner loop.
 
 use crate::tensor::Tensor;
-use crate::util::threadpool::split_ranges;
-use crossbeam_utils::thread as cb;
+use crate::util::threadpool::{self, split_ranges, ThreadPool};
 
 use super::schedule::{LoopOrder, Schedule};
 
@@ -412,8 +411,13 @@ fn run_rows<A: Accum>(
     }
 }
 
-/// Execute kernel `A` with schedule `sched` -> (mu `[M,N]`, var `[M,N]`).
-pub fn dense_kernel<A: Accum>(args: &DenseArgs<'_>, sched: &Schedule) -> (Tensor, Tensor) {
+/// Execute kernel `A` with schedule `sched` on `pool`
+/// -> (mu `[M,N]`, var `[M,N]`).
+pub fn dense_kernel_in<A: Accum>(
+    pool: &ThreadPool,
+    args: &DenseArgs<'_>,
+    sched: &Schedule,
+) -> (Tensor, Tensor) {
     let (m, _, n) = args.dims();
     let mut out_mu = vec![0.0f32; m * n];
     let mut out_var = vec![0.0f32; m * n];
@@ -435,12 +439,11 @@ pub fn dense_kernel<A: Accum>(args: &DenseArgs<'_>, sched: &Schedule) -> (Tensor
             mu_rest = mu_tail;
             var_rest = var_tail;
         }
-        cb::scope(|s| {
+        pool.scope(|s| {
             for (r, mu_chunk, var_chunk) in chunks {
-                s.spawn(move |_| run_rows::<A>(args, sched, r, mu_chunk, var_chunk));
+                s.spawn(move || run_rows::<A>(args, sched, r, mu_chunk, var_chunk));
             }
-        })
-        .expect("dense worker panicked");
+        });
     }
 
     // bias + clamp epilogue
@@ -472,14 +475,32 @@ pub fn dense_kernel<A: Accum>(args: &DenseArgs<'_>, sched: &Schedule) -> (Tensor
     )
 }
 
+/// [`dense_kernel_in`] on the process-wide global pool.
+pub fn dense_kernel<A: Accum>(args: &DenseArgs<'_>, sched: &Schedule) -> (Tensor, Tensor) {
+    dense_kernel_in::<A>(threadpool::global(), args, sched)
+}
+
 // ---------------------------------------------------------------------------
 // public operator entry points
 // ---------------------------------------------------------------------------
+//
+// Each operator has an `_in` form taking an explicit pool handle (the
+// executor threads `Schedules::pool` through these) and a convenience
+// form on the process-wide global pool.
 
 /// Joint PFP dense, Eq. 12 (the production operator).
 /// aux inputs: activation E[x^2], weight E[w^2].
 pub fn pfp_dense_joint(args: &DenseArgs<'_>, sched: &Schedule) -> (Tensor, Tensor) {
     dense_kernel::<JointEq12>(args, sched)
+}
+
+/// [`pfp_dense_joint`] on an explicit pool.
+pub fn pfp_dense_joint_in(
+    pool: &ThreadPool,
+    args: &DenseArgs<'_>,
+    sched: &Schedule,
+) -> (Tensor, Tensor) {
+    dense_kernel_in::<JointEq12>(pool, args, sched)
 }
 
 /// Joint PFP dense, original Eq. 5 form.
@@ -498,6 +519,15 @@ pub fn pfp_dense_varform(args: &DenseArgs<'_>, sched: &Schedule) -> (Tensor, Ten
 /// aux inputs: ignored activation aux, weight *variance*.
 pub fn pfp_dense_first(args: &DenseArgs<'_>, sched: &Schedule) -> (Tensor, Tensor) {
     dense_kernel::<FirstLayer>(args, sched)
+}
+
+/// [`pfp_dense_first`] on an explicit pool.
+pub fn pfp_dense_first_in(
+    pool: &ThreadPool,
+    args: &DenseArgs<'_>,
+    sched: &Schedule,
+) -> (Tensor, Tensor) {
+    dense_kernel_in::<FirstLayer>(pool, args, sched)
 }
 
 /// Separate-operator PFP dense (Fig. 5 baseline): two full passes over the

@@ -18,6 +18,7 @@
 //! and both are validated against Monte-Carlo.
 
 use crate::tensor::{ProbTensor, Rep, Tensor};
+use crate::util::threadpool::{split_ranges, ThreadPool};
 
 use super::erf::{erf, norm_pdf, FRAC_1_SQRT_2};
 
@@ -100,26 +101,110 @@ pub fn pfp_maxpool2_vectorized(input: &ProbTensor) -> ProbTensor {
     let var = input.aux.data();
     let mut out_mu = vec![0.0f32; n * c * oh * ow];
     let mut out_var = vec![0.0f32; n * c * oh * ow];
+    // walk both source rows two elements at a time — contiguous,
+    // fixed-pattern loads the compiler can keep in registers.
     for plane in 0..n * c {
-        let base = plane * h * w;
-        let obase = plane * oh * ow;
-        for oy in 0..oh {
-            let r0 = base + (2 * oy) * w;
-            let r1 = base + (2 * oy + 1) * w;
-            let orow = obase + oy * ow;
-            // walk both source rows two elements at a time — contiguous,
-            // fixed-pattern loads the compiler can keep in registers.
-            for ox in 0..ow {
-                let i0 = r0 + 2 * ox;
-                let i1 = r1 + 2 * ox;
-                let (ma, va) = gaussian_max(mu[i0], var[i0], mu[i0 + 1], var[i0 + 1]);
-                let (mb, vb) = gaussian_max(mu[i1], var[i1], mu[i1 + 1], var[i1 + 1]);
-                let (m, v) = gaussian_max(ma, va, mb, vb);
-                out_mu[orow + ox] = m;
-                out_var[orow + ox] = v;
-            }
+        pool2_plane(
+            mu,
+            var,
+            plane * h * w,
+            h,
+            w,
+            &mut out_mu,
+            &mut out_var,
+            plane * oh * ow,
+        );
+    }
+    ProbTensor::new(
+        Tensor::new(vec![n, c, oh, ow], out_mu).unwrap(),
+        Tensor::new(vec![n, c, oh, ow], out_var).unwrap(),
+        Rep::Var,
+    )
+}
+
+/// One NCHW plane of the vectorized k=2/stride-2 pool: reads `h*w` mean/
+/// variance values at `base`, writes `oh*ow` outputs at `out_off`.
+#[inline(always)]
+fn pool2_plane(
+    mu: &[f32],
+    var: &[f32],
+    base: usize,
+    h: usize,
+    w: usize,
+    out_mu: &mut [f32],
+    out_var: &mut [f32],
+    out_off: usize,
+) {
+    let (oh, ow) = (h / 2, w / 2);
+    for oy in 0..oh {
+        let r0 = base + (2 * oy) * w;
+        let r1 = base + (2 * oy + 1) * w;
+        let orow = out_off + oy * ow;
+        for ox in 0..ow {
+            let i0 = r0 + 2 * ox;
+            let i1 = r1 + 2 * ox;
+            let (ma, va) = gaussian_max(mu[i0], var[i0], mu[i0 + 1], var[i0 + 1]);
+            let (mb, vb) = gaussian_max(mu[i1], var[i1], mu[i1 + 1], var[i1 + 1]);
+            let (m, v) = gaussian_max(ma, va, mb, vb);
+            out_mu[orow + ox] = m;
+            out_var[orow + ox] = v;
         }
     }
+}
+
+/// Pool-parallel vectorized k=2/stride-2 PFP max-pool: the `N*C` planes
+/// are split across `threads` persistent-pool tasks. Bit-identical to
+/// [`pfp_maxpool2_vectorized`] (planes are independent; only the schedule
+/// changes, not the association order).
+pub fn pfp_maxpool2_vectorized_in(
+    pool: &ThreadPool,
+    input: &ProbTensor,
+    threads: usize,
+) -> ProbTensor {
+    debug_assert_eq!(input.rep, Rep::Var);
+    let s = input.mu.shape();
+    let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+    let (oh, ow) = (h / 2, w / 2);
+    let planes = n * c;
+    if threads <= 1 || planes <= 1 {
+        return pfp_maxpool2_vectorized(input);
+    }
+    let mu = input.mu.data();
+    let var = input.aux.data();
+    let mut out_mu = vec![0.0f32; planes * oh * ow];
+    let mut out_var = vec![0.0f32; planes * oh * ow];
+    // split both output buffers into per-plane-range disjoint chunks
+    let ranges = split_ranges(planes, threads);
+    let plane_out = oh * ow;
+    let mut mu_rest: &mut [f32] = &mut out_mu;
+    let mut var_rest: &mut [f32] = &mut out_var;
+    let mut chunks = Vec::new();
+    for r in ranges {
+        let take = (r.end - r.start) * plane_out;
+        let (mh, mt) = mu_rest.split_at_mut(take);
+        let (vh, vt) = var_rest.split_at_mut(take);
+        chunks.push((r, mh, vh));
+        mu_rest = mt;
+        var_rest = vt;
+    }
+    pool.scope(|sc| {
+        for (r, mu_chunk, var_chunk) in chunks {
+            sc.spawn(move || {
+                for (local, plane) in r.enumerate() {
+                    pool2_plane(
+                        mu,
+                        var,
+                        plane * h * w,
+                        h,
+                        w,
+                        mu_chunk,
+                        var_chunk,
+                        local * plane_out,
+                    );
+                }
+            });
+        }
+    });
     ProbTensor::new(
         Tensor::new(vec![n, c, oh, ow], out_mu).unwrap(),
         Tensor::new(vec![n, c, oh, ow], out_var).unwrap(),
@@ -245,6 +330,18 @@ mod tests {
             let (m, _) = gaussian_max(mu1, v1, mu2, v2);
             assert!(m >= mu1.max(mu2) - 1e-4);
         });
+    }
+
+    #[test]
+    fn pool_parallel_matches_serial() {
+        let pool = crate::util::threadpool::ThreadPool::new(3);
+        let mut g = Gen::new(11);
+        let p = rand_prob(&mut g, 3, 4, 8, 8);
+        let a = pfp_maxpool2_vectorized(&p);
+        let b = pfp_maxpool2_vectorized_in(&pool, &p, 3);
+        // planes are independent: parallel split must be bit-identical
+        assert_eq!(a.mu.data(), b.mu.data());
+        assert_eq!(a.aux.data(), b.aux.data());
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! outputs (the joint-operator rule applied to an elementwise op).
 
 use crate::tensor::{ProbTensor, Rep, Tensor};
+use crate::util::threadpool::{self, ThreadPool};
 
 use super::erf::{erf, FRAC_1_SQRT_2, INV_SQRT_2PI};
 
@@ -30,6 +31,11 @@ pub fn relu_moments(mu: f32, var: f32) -> (f32, f32) {
 /// Input rep must be `Var` (converted by the caller/executor); output rep
 /// is `E2` by construction.
 pub fn pfp_relu(input: ProbTensor, threads: usize) -> ProbTensor {
+    pfp_relu_in(threadpool::global(), input, threads)
+}
+
+/// [`pfp_relu`] on an explicit pool.
+pub fn pfp_relu_in(pool: &ThreadPool, input: ProbTensor, threads: usize) -> ProbTensor {
     debug_assert_eq!(input.rep, Rep::Var);
     let shape = input.mu.shape().to_vec();
     let mu_in = input.mu.into_data();
@@ -58,11 +64,11 @@ pub fn pfp_relu(input: ProbTensor, threads: usize) -> ProbTensor {
             mu_rest = mt;
             e2_rest = et;
         }
-        crossbeam_utils::thread::scope(|s| {
+        pool.scope(|s| {
             for (r, mc, ec) in chunks {
                 let mu_in = &mu_in;
                 let var_in = &var_in;
-                s.spawn(move |_| {
+                s.spawn(move || {
                     for (j, i) in r.enumerate() {
                         let (m, e2) = relu_moments(mu_in[i], var_in[i]);
                         mc[j] = m;
@@ -70,8 +76,7 @@ pub fn pfp_relu(input: ProbTensor, threads: usize) -> ProbTensor {
                     }
                 });
             }
-        })
-        .expect("relu worker panicked");
+        });
     }
 
     ProbTensor::new(

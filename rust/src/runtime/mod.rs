@@ -1,205 +1,26 @@
 //! PJRT runtime: load the AOT HLO-text artifacts produced by
 //! `python/compile/aot.py` and execute them from the serving hot path.
 //!
-//! HLO *text* is the interchange format — jax >= 0.5 serializes protos
-//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md).
-//!
-//! Weight tensors are transferred to device once per loaded model
-//! (`execute_b` over cached `PjRtBuffer`s); only the input tensor is
-//! transferred per call.
+//! The actual engine depends on the `xla` crate (PJRT CPU client), which
+//! is heavyweight and not part of the offline crate set — it is gated
+//! behind the **`xla-runtime`** cargo feature. Without the feature an
+//! API-compatible [stub](stub) is compiled instead: manifest handling and
+//! all native-operator paths work, and any attempt to construct the
+//! engine reports how to enable the real one.
 
 pub mod manifest;
 
 pub use manifest::{Manifest, ManifestEntry};
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+#[cfg(feature = "xla-runtime")]
+mod pjrt;
+#[cfg(feature = "xla-runtime")]
+pub use pjrt::{Engine, LoadedModel};
 
-use crate::error::{Error, Result};
-use crate::model::PosteriorWeights;
-use crate::tensor::Tensor;
-
-/// A compiled model artifact with device-resident weights.
-pub struct LoadedModel {
-    pub entry: ManifestEntry,
-    exe: xla::PjRtLoadedExecutable,
-    weight_buffers: Vec<xla::PjRtBuffer>,
-    client: Arc<xla::PjRtClient>,
-}
-
-// The PJRT CPU client/executable handles are raw pointers behind Rc in the
-// crate, but the CPU plugin itself is thread-safe for execution; the
-// coordinator gives each model to exactly one worker thread and the cache
-// is Mutex-guarded, so cross-thread *sharing* only happens through &self
-// execute calls, which the CPU PJRT client supports.
-unsafe impl Send for LoadedModel {}
-unsafe impl Sync for LoadedModel {}
-
-impl LoadedModel {
-    /// Execute on a batch: input `[B, ...]` (flattened) -> output tensors
-    /// in the entry's declared order (`mu`,`var` for PFP; `logits` for det).
-    pub fn execute(&self, input: &Tensor) -> Result<Vec<Tensor>> {
-        let input_buf = self
-            .client
-            .buffer_from_host_buffer(input.data(), &self.entry.input_shape, None)?;
-        let mut args: Vec<&xla::PjRtBuffer> = vec![&input_buf];
-        args.extend(self.weight_buffers.iter());
-        let result = self.exe.execute_b(&args)?;
-        let lit = result[0][0].to_literal_sync()?;
-        let parts = lit.to_tuple()?;
-        if parts.len() != self.entry.outputs.len() {
-            return Err(Error::Runtime(format!(
-                "{}: expected {} outputs, got {}",
-                self.entry.name,
-                self.entry.outputs.len(),
-                parts.len()
-            )));
-        }
-        let batch = self.entry.batch;
-        parts
-            .into_iter()
-            .map(|p| {
-                let v = p.to_vec::<f32>()?;
-                let cols = v.len() / batch;
-                Tensor::new(vec![batch, cols], v)
-            })
-            .collect()
-    }
-
-    pub fn batch(&self) -> usize {
-        self.entry.batch
-    }
-
-    /// Execute with explicit weight tensors instead of the cached device
-    /// buffers — the SVI-on-XLA path: each posterior sample re-transfers
-    /// its sampled weights (that transfer is part of the paper's measured
-    /// per-sample cost).
-    pub fn execute_with_weights(
-        &self,
-        input: &Tensor,
-        weights: &[&Tensor],
-    ) -> Result<Vec<Tensor>> {
-        if weights.len() != self.entry.params.len() {
-            return Err(Error::Runtime(format!(
-                "{}: expected {} weight tensors, got {}",
-                self.entry.name,
-                self.entry.params.len(),
-                weights.len()
-            )));
-        }
-        let input_buf = self
-            .client
-            .buffer_from_host_buffer(input.data(), &self.entry.input_shape, None)?;
-        let mut bufs = Vec::with_capacity(weights.len());
-        for (param, t) in self.entry.params.iter().zip(weights) {
-            bufs.push(
-                self.client
-                    .buffer_from_host_buffer(t.data(), &param.shape, None)?,
-            );
-        }
-        let mut args: Vec<&xla::PjRtBuffer> = vec![&input_buf];
-        args.extend(bufs.iter());
-        let result = self.exe.execute_b(&args)?;
-        let lit = result[0][0].to_literal_sync()?;
-        let parts = lit.to_tuple()?;
-        let batch = self.entry.batch;
-        parts
-            .into_iter()
-            .map(|p| {
-                let v = p.to_vec::<f32>()?;
-                let cols = v.len() / batch;
-                Tensor::new(vec![batch, cols], v)
-            })
-            .collect()
-    }
-}
-
-/// The PJRT engine: one CPU client + a cache of compiled executables.
-pub struct Engine {
-    client: Arc<xla::PjRtClient>,
-    artifacts: PathBuf,
-    pub manifest: Manifest,
-    cache: Mutex<HashMap<String, Arc<LoadedModel>>>,
-}
-
-// See LoadedModel: CPU PJRT handles are usable across threads.
-unsafe impl Send for Engine {}
-unsafe impl Sync for Engine {}
-
-impl Engine {
-    pub fn new(artifacts: &Path) -> Result<Self> {
-        let manifest = Manifest::load(&artifacts.join("manifest.json"))?;
-        let client = Arc::new(xla::PjRtClient::cpu()?);
-        Ok(Self {
-            client,
-            artifacts: artifacts.to_path_buf(),
-            manifest,
-            cache: Mutex::new(HashMap::new()),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load (compile + bind weights) an artifact by manifest name, with
-    /// caching. Weight tensors come from the posterior store in the
-    /// manifest-declared parameter order.
-    pub fn load(&self, name: &str, weights: &PosteriorWeights) -> Result<Arc<LoadedModel>> {
-        if let Some(m) = self.cache.lock().unwrap().get(name) {
-            return Ok(m.clone());
-        }
-        let entry = self
-            .manifest
-            .entry(name)
-            .ok_or_else(|| Error::Manifest(format!("no artifact named '{name}'")))?
-            .clone();
-        let path = self.artifacts.join(&entry.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-
-        let tensors = entry.weight_tensors(weights)?;
-        let mut weight_buffers = Vec::with_capacity(tensors.len());
-        for (param, t) in entry.params.iter().zip(&tensors) {
-            if t.len() != param.shape.iter().product::<usize>() {
-                return Err(Error::Manifest(format!(
-                    "{}: param {} expects shape {:?}, weights give {} elements",
-                    entry.name,
-                    param.name,
-                    param.shape,
-                    t.len()
-                )));
-            }
-            weight_buffers.push(self.client.buffer_from_host_buffer(
-                t.data(),
-                &param.shape,
-                None,
-            )?);
-        }
-        let model = Arc::new(LoadedModel {
-            entry,
-            exe,
-            weight_buffers,
-            client: self.client.clone(),
-        });
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), model.clone());
-        Ok(model)
-    }
-
-    /// Artifact name for (arch, variant, batch).
-    pub fn artifact_name(arch: &str, variant: &str, batch: usize) -> String {
-        format!("model_{arch}_{variant}_b{batch}")
-    }
-}
+#[cfg(not(feature = "xla-runtime"))]
+mod stub;
+#[cfg(not(feature = "xla-runtime"))]
+pub use stub::{Engine, LoadedModel};
 
 #[cfg(test)]
 mod tests {

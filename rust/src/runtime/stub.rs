@@ -1,0 +1,93 @@
+//! Stub engine used when the crate is built **without** the
+//! `xla-runtime` feature (the default — the `xla` crate and its PJRT
+//! plugin are not in the offline crate set).
+//!
+//! API-compatible with the real engine in `pjrt.rs` so the coordinator,
+//! benches and CLI compile unchanged; constructing an [`Engine`] fails at
+//! runtime with a clear pointer at the feature flag. Manifest parsing and
+//! every native-operator path are fully functional without the feature.
+
+use std::path::Path;
+
+use super::manifest::{Manifest, ManifestEntry};
+use crate::error::{Error, Result};
+use crate::model::PosteriorWeights;
+use crate::tensor::Tensor;
+use std::sync::Arc;
+
+const UNAVAILABLE: &str =
+    "XLA/PJRT runtime not built: rebuild with `--features xla-runtime` \
+     (requires the `xla` crate and its xla_extension plugin)";
+
+/// Placeholder for a compiled model artifact; never constructible without
+/// the `xla-runtime` feature.
+pub struct LoadedModel {
+    pub entry: ManifestEntry,
+    // Prevents construction from outside this module.
+    _private: (),
+}
+
+impl LoadedModel {
+    pub fn execute(&self, _input: &Tensor) -> Result<Vec<Tensor>> {
+        Err(Error::Runtime(UNAVAILABLE.into()))
+    }
+
+    pub fn batch(&self) -> usize {
+        self.entry.batch
+    }
+
+    pub fn execute_with_weights(
+        &self,
+        _input: &Tensor,
+        _weights: &[&Tensor],
+    ) -> Result<Vec<Tensor>> {
+        Err(Error::Runtime(UNAVAILABLE.into()))
+    }
+}
+
+/// Placeholder engine: `new` always fails (after validating the manifest,
+/// so configuration errors still surface first).
+pub struct Engine {
+    pub manifest: Manifest,
+    _private: (),
+}
+
+impl Engine {
+    pub fn new(artifacts: &Path) -> Result<Self> {
+        // parse the manifest anyway: a missing/broken manifest is the more
+        // actionable error, and callers probe it before loading models
+        let _manifest = Manifest::load(&artifacts.join("manifest.json"))?;
+        Err(Error::Runtime(UNAVAILABLE.into()))
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".into()
+    }
+
+    pub fn load(&self, _name: &str, _weights: &PosteriorWeights) -> Result<Arc<LoadedModel>> {
+        Err(Error::Runtime(UNAVAILABLE.into()))
+    }
+
+    /// Artifact name for (arch, variant, batch).
+    pub fn artifact_name(arch: &str, variant: &str, batch: usize) -> String {
+        format!("model_{arch}_{variant}_b{batch}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_engine_errors_with_feature_hint() {
+        let dir = std::env::temp_dir().join("pfp-stub-engine-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"entries": [], "metrics": {}}"#,
+        )
+        .unwrap();
+        let err = Engine::new(&dir).unwrap_err();
+        assert!(err.to_string().contains("xla-runtime"), "{err}");
+    }
+}

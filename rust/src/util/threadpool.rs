@@ -1,11 +1,31 @@
-//! Scoped parallel-for built on `crossbeam_utils::thread::scope` (rayon is
-//! not in the offline crate set).
+//! Persistent worker-pool runtime for the parallel operators.
 //!
-//! The PFP dense/conv operators use this for the paper's "Parallelization"
-//! schedule knob (Table 2): output rows are split into contiguous chunks,
-//! one scoped thread per chunk. On this container (1 hardware core) the
-//! parallel rows of Table 2/5 measure scheduling overhead rather than
-//! speedup — EXPERIMENTS.md reports this explicitly.
+//! The PFP dense/conv/relu/pool operators use this for the paper's
+//! "Parallelization" schedule knob (Table 2): output rows are split into
+//! contiguous chunks, one task per chunk. The paper's tuning section warns
+//! that scheduling overhead dominates parallel gains at the small batch
+//! sizes PFP targets — so unlike the original scoped implementation
+//! (kept as [`scoped_parallel_for`] for the overhead benchmark), the pool
+//! spawns its OS threads **once** and feeds them closures over a channel.
+//! Per-call dispatch cost is a channel send + latch wait instead of a
+//! `thread::spawn`/`join` pair per chunk.
+//!
+//! Borrowed (non-`'static`) closures are supported through a
+//! [`ThreadPool::scope`] entry point in the style of
+//! `crossbeam_utils::thread::scope`: the scope blocks until every spawned
+//! task has completed before returning, so tasks may freely borrow from
+//! the caller's stack.
+//!
+//! One process-wide pool ([`global`]) backs the free-function helpers
+//! ([`parallel_for`] / [`parallel_rows`]); the serving path shares a
+//! single pool handle across all models and requests via
+//! `model::Schedules::pool`.
+
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use crossbeam_utils::thread as cb;
 
@@ -39,9 +59,171 @@ pub fn split_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
     out
 }
 
-/// Run `f(range, chunk_index)` over `n` items split into `threads` chunks.
-/// With `threads <= 1` runs inline (no spawn overhead).
-pub fn parallel_for<F>(n: usize, threads: usize, f: F)
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Long-lived worker pool fed through an MPMC (mutex-guarded) channel.
+///
+/// Workers run until the pool is dropped. Tasks are submitted through
+/// [`ThreadPool::scope`], which supports stack borrows by blocking until
+/// all of its tasks complete.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn `size` (at least 1) persistent workers.
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&rx);
+            let handle = std::thread::Builder::new()
+                .name(format!("pfp-pool-{i}"))
+                .spawn(move || loop {
+                    // Hold the lock only for the blocking recv; release it
+                    // before running the job so other workers can pick up.
+                    let job = match rx.lock() {
+                        Ok(guard) => guard.recv(),
+                        Err(_) => break,
+                    };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break, // sender dropped: shutdown
+                    }
+                })
+                .expect("spawn pool worker");
+            workers.push(handle);
+        }
+        Self { tx: Some(tx), workers, size }
+    }
+
+    /// Pool sized from `PFP_THREADS` / available parallelism.
+    pub fn with_default_threads() -> Self {
+        Self::new(default_threads())
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Run `f` with a [`Scope`] that can spawn borrowed tasks onto the
+    /// pool. Blocks until every spawned task has completed; panics from
+    /// tasks are propagated (after all tasks finish), mirroring the
+    /// `crossbeam` scope contract.
+    pub fn scope<'scope, F, R>(&self, f: F) -> R
+    where
+        F: FnOnce(&Scope<'_, 'scope>) -> R,
+    {
+        let scope = Scope {
+            pool: self,
+            latch: Arc::new(Latch {
+                pending: Mutex::new(0),
+                done: Condvar::new(),
+                panicked: AtomicBool::new(false),
+            }),
+            _marker: PhantomData,
+        };
+        // Even if `f` itself panics we must wait for already-spawned tasks
+        // before unwinding, or they would race with freed stack frames.
+        let result = catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        scope.wait_all();
+        match result {
+            Err(payload) => std::panic::resume_unwind(payload),
+            Ok(r) => {
+                if scope.latch.panicked.load(Ordering::SeqCst) {
+                    panic!("worker task panicked");
+                }
+                r
+            }
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Closing the channel makes every worker's recv fail -> exit.
+        drop(self.tx.take());
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool").field("size", &self.size).finish()
+    }
+}
+
+struct Latch {
+    pending: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+/// Spawn handle passed to the closure of [`ThreadPool::scope`].
+pub struct Scope<'pool, 'scope> {
+    pool: &'pool ThreadPool,
+    latch: Arc<Latch>,
+    // Invariant over 'scope, like crossbeam's scope.
+    _marker: PhantomData<&'scope mut &'scope ()>,
+}
+
+impl<'pool, 'scope> Scope<'pool, 'scope> {
+    /// Submit a task that may borrow anything outliving the scope.
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        *self.latch.pending.lock().unwrap() += 1;
+        let latch = Arc::clone(&self.latch);
+        let job: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+            if catch_unwind(AssertUnwindSafe(f)).is_err() {
+                latch.panicked.store(true, Ordering::SeqCst);
+            }
+            let mut pending = latch.pending.lock().unwrap();
+            *pending -= 1;
+            if *pending == 0 {
+                latch.done.notify_all();
+            }
+        });
+        // SAFETY: `ThreadPool::scope` calls `wait_all` before returning,
+        // so this job runs to completion while every `'scope` borrow it
+        // captures is still live; erasing the lifetime is therefore sound
+        // (same argument as `scoped_threadpool` / `crossbeam::scope`).
+        let job: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(job)
+        };
+        self.pool
+            .tx
+            .as_ref()
+            .expect("pool is shut down")
+            .send(job)
+            .expect("pool workers exited");
+    }
+
+    fn wait_all(&self) {
+        let mut pending = self.latch.pending.lock().unwrap();
+        while *pending > 0 {
+            pending = self.latch.done.wait(pending).unwrap();
+        }
+    }
+}
+
+/// The process-wide shared pool (sized by [`default_threads`]); spawned
+/// lazily on first parallel call and reused for the process lifetime.
+pub fn global() -> &'static Arc<ThreadPool> {
+    static POOL: OnceLock<Arc<ThreadPool>> = OnceLock::new();
+    POOL.get_or_init(|| Arc::new(ThreadPool::with_default_threads()))
+}
+
+/// Run `f(range, chunk_index)` over `n` items split into `threads` chunks
+/// on `pool`. With `threads <= 1` runs inline (no dispatch overhead).
+pub fn parallel_for_in<F>(pool: &ThreadPool, n: usize, threads: usize, f: F)
 where
     F: Fn(std::ops::Range<usize>, usize) + Sync,
 {
@@ -50,19 +232,32 @@ where
         return;
     }
     let ranges = split_ranges(n, threads);
-    cb::scope(|s| {
+    pool.scope(|s| {
         for (i, r) in ranges.into_iter().enumerate() {
             let f = &f;
-            s.spawn(move |_| f(r, i));
+            s.spawn(move || f(r, i));
         }
-    })
-    .expect("worker thread panicked");
+    });
+}
+
+/// [`parallel_for_in`] on the process-wide [`global`] pool.
+pub fn parallel_for<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>, usize) + Sync,
+{
+    parallel_for_in(global(), n, threads, f);
 }
 
 /// Parallel-for over disjoint mutable chunks of `out`, where chunk `i`
 /// covers rows `ranges[i]` of a row-major `[n, row_len]` buffer.
-pub fn parallel_rows<F>(out: &mut [f32], n_rows: usize, row_len: usize, threads: usize, f: F)
-where
+pub fn parallel_rows_in<F>(
+    pool: &ThreadPool,
+    out: &mut [f32],
+    n_rows: usize,
+    row_len: usize,
+    threads: usize,
+    f: F,
+) where
     F: Fn(std::ops::Range<usize>, &mut [f32]) + Sync,
 {
     assert_eq!(out.len(), n_rows * row_len);
@@ -83,10 +278,39 @@ where
         consumed += take;
     }
     debug_assert_eq!(consumed, n_rows * row_len);
-    cb::scope(|s| {
+    pool.scope(|s| {
         for (chunk, r) in slices {
             let f = &f;
-            s.spawn(move |_| f(r, chunk));
+            s.spawn(move || f(r, chunk));
+        }
+    });
+}
+
+/// [`parallel_rows_in`] on the process-wide [`global`] pool.
+pub fn parallel_rows<F>(out: &mut [f32], n_rows: usize, row_len: usize, threads: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>, &mut [f32]) + Sync,
+{
+    parallel_rows_in(global(), out, n_rows, row_len, threads, f);
+}
+
+/// The original spawn-per-call scoped parallel-for, kept as the baseline
+/// for the pool-dispatch-overhead micro-benchmark
+/// (`benches/pool_overhead.rs`): every call pays `threads` OS-thread
+/// spawns + joins.
+pub fn scoped_parallel_for<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>, usize) + Sync,
+{
+    if threads <= 1 || n <= 1 {
+        f(0..n, 0);
+        return;
+    }
+    let ranges = split_ranges(n, threads);
+    cb::scope(|s| {
+        for (i, r) in ranges.into_iter().enumerate() {
+            let f = &f;
+            s.spawn(move |_| f(r, i));
         }
     })
     .expect("worker thread panicked");
@@ -109,6 +333,29 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn split_ranges_zero_items_is_empty() {
+        assert!(split_ranges(0, 1).is_empty());
+        assert!(split_ranges(0, 4).is_empty());
+        assert!(split_ranges(0, 0).is_empty());
+    }
+
+    #[test]
+    fn split_ranges_more_parts_than_items() {
+        // parts is clamped to n: every range holds exactly one item.
+        let rs = split_ranges(3, 8);
+        assert_eq!(rs.len(), 3);
+        assert!(rs.iter().all(|r| r.end - r.start == 1));
+        assert_eq!(rs[0], 0..1);
+        assert_eq!(rs[2], 2..3);
+    }
+
+    #[test]
+    fn split_ranges_zero_parts_clamps_to_one() {
+        let rs = split_ranges(5, 0);
+        assert_eq!(rs, vec![0..5]);
     }
 
     #[test]
@@ -145,5 +392,107 @@ mod tests {
             chunk.fill(1.0);
         });
         assert!(out.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn pool_reuses_workers_across_calls() {
+        let pool = ThreadPool::new(3);
+        assert_eq!(pool.size(), 3);
+        for round in 0..50 {
+            let count = AtomicUsize::new(0);
+            parallel_for_in(&pool, 64, 3, |r, _| {
+                count.fetch_add(r.end - r.start, Ordering::SeqCst);
+            });
+            assert_eq!(count.load(Ordering::SeqCst), 64, "round {round}");
+        }
+    }
+
+    #[test]
+    fn scope_waits_for_all_tasks() {
+        let pool = ThreadPool::new(4);
+        let count = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for _ in 0..32 {
+                let count = &count;
+                s.spawn(move || {
+                    count.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        // all 32 tasks must have completed by the time scope returns
+        assert_eq!(count.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn scope_supports_stack_borrows() {
+        let pool = ThreadPool::new(2);
+        let data = vec![1u32, 2, 3, 4];
+        let sum = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for chunk in data.chunks(2) {
+                let sum = &sum;
+                s.spawn(move || {
+                    sum.fetch_add(
+                        chunk.iter().map(|&v| v as usize).sum(),
+                        Ordering::SeqCst,
+                    );
+                });
+            }
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn concurrent_scopes_share_one_pool() {
+        // Two OS threads driving scopes on the same pool (the serving
+        // topology: many requests, one pool) must not interfere.
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let pool = Arc::clone(&pool);
+            handles.push(std::thread::spawn(move || {
+                let count = AtomicUsize::new(0);
+                parallel_for_in(&pool, 100 + t, 2, |r, _| {
+                    count.fetch_add(r.end - r.start, Ordering::SeqCst);
+                });
+                count.load(Ordering::SeqCst)
+            }));
+        }
+        for (t, h) in handles.into_iter().enumerate() {
+            assert_eq!(h.join().unwrap(), 100 + t);
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(|s| {
+                s.spawn(|| panic!("task boom"));
+            });
+        }));
+        assert!(r.is_err());
+        // pool survives a panicked task and stays usable
+        let count = AtomicUsize::new(0);
+        parallel_for_in(&pool, 16, 2, |r, _| {
+            count.fetch_add(r.end - r.start, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn scoped_baseline_still_correct() {
+        let count = AtomicUsize::new(0);
+        scoped_parallel_for(257, 4, |r, _| {
+            count.fetch_add(r.end - r.start, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 257);
+    }
+
+    #[test]
+    fn global_pool_is_shared() {
+        let a = global() as *const _;
+        let b = global() as *const _;
+        assert_eq!(a, b);
     }
 }

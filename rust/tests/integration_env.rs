@@ -1,0 +1,41 @@
+//! `pfp::artifacts_dir()` resolution order: `$PFP_ARTIFACTS` env var,
+//! then `artifacts/` relative to the current directory, then the crate
+//! manifest dir.
+//!
+//! Env-var and cwd state are process-global, so every scenario runs
+//! sequentially inside ONE test function (this file is its own test
+//! binary, and cargo runs test binaries one at a time).
+
+use std::path::PathBuf;
+
+#[test]
+fn artifacts_dir_resolution_order() {
+    // 1. explicit PFP_ARTIFACTS wins over everything, even if the path
+    //    does not exist
+    std::env::set_var("PFP_ARTIFACTS", "/tmp/pfp-env-override");
+    assert_eq!(pfp::artifacts_dir(), PathBuf::from("/tmp/pfp-env-override"));
+    std::env::remove_var("PFP_ARTIFACTS");
+
+    // 2. without the env var, an `artifacts/` dir in cwd resolves to the
+    //    relative path
+    let sandbox =
+        std::env::temp_dir().join(format!("pfp-artifacts-order-{}", std::process::id()));
+    std::fs::create_dir_all(sandbox.join("artifacts")).unwrap();
+    let orig_cwd = std::env::current_dir().unwrap();
+    std::env::set_current_dir(&sandbox).unwrap();
+    assert_eq!(pfp::artifacts_dir(), PathBuf::from(pfp::ARTIFACTS_DIR));
+
+    // 3. with neither, fall back to <crate manifest dir>/artifacts
+    std::fs::remove_dir(sandbox.join("artifacts")).unwrap();
+    let d = pfp::artifacts_dir();
+    assert!(d.is_absolute(), "manifest-dir fallback must be absolute: {d:?}");
+    assert!(d.ends_with(pfp::ARTIFACTS_DIR), "unexpected fallback: {d:?}");
+
+    // and the env var still overrides the fallback
+    std::env::set_var("PFP_ARTIFACTS", "rel/override");
+    assert_eq!(pfp::artifacts_dir(), PathBuf::from("rel/override"));
+    std::env::remove_var("PFP_ARTIFACTS");
+
+    std::env::set_current_dir(orig_cwd).unwrap();
+    let _ = std::fs::remove_dir_all(&sandbox);
+}

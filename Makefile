@@ -4,9 +4,11 @@
 .PHONY: verify build test bench bench-build fmt clippy python-test artifacts clean
 
 # ---- tier-1 --------------------------------------------------------------
+# (plus the serving-bench compile gate, mirroring CI's bench-build job)
 verify:
 	cargo build --release
 	cargo test -q
+	cargo bench --no-run --bench pipeline_throughput
 
 build:
 	cargo build --release

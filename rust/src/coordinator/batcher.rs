@@ -173,6 +173,30 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_burst_coalesces_into_one_batch() {
+        // the pipelining contract: a consumer already waiting when a full
+        // max_batch burst lands (one connection's in-flight window) must
+        // hand the whole burst to the backend as a single batch
+        let b = Arc::new(Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(300),
+            capacity: 64,
+        }));
+        let b2 = b.clone();
+        let consumer = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(20)); // consumer is waiting
+        let mut rxs = Vec::new();
+        for i in 0..8 {
+            let (it, rx) = item(i);
+            b.push(it).map_err(|_| ()).unwrap();
+            rxs.push(rx);
+        }
+        let batch = consumer.join().unwrap().unwrap();
+        assert_eq!(batch.len(), 8, "burst must coalesce into one batch");
+        assert!(b.is_empty());
+    }
+
+    #[test]
     fn deadline_flushes_partial_batch() {
         let b = Arc::new(Batcher::new(BatcherConfig {
             max_batch: 8,

@@ -15,7 +15,16 @@ pub struct Metrics {
     pub ood_flagged: AtomicU64,
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
+    /// Gauge: requests admitted into a lane queue and not yet answered.
+    pub in_flight: AtomicU64,
+    /// Requests refused for exceeding a connection's pipeline depth.
+    pub depth_rejected: AtomicU64,
+    /// TCP connections admitted by the accept loop.
+    pub connections: AtomicU64,
+    /// Connections turned away at accept time (admission limit).
+    pub conns_rejected: AtomicU64,
     latencies_us: Mutex<Vec<f64>>, // end-to-end per request
+    conn_depth: Mutex<Vec<f64>>,   // per-connection in-flight depth at submit
 }
 
 impl Metrics {
@@ -32,8 +41,25 @@ impl Metrics {
         l.push(us);
     }
 
+    /// Record the connection's in-flight depth observed when a request was
+    /// admitted (the pipelining occupancy histogram).
+    pub fn record_conn_depth(&self, depth: f64) {
+        let mut d = self.conn_depth.lock().unwrap();
+        if d.len() >= 100_000 {
+            d.drain(..50_000);
+        }
+        d.push(depth);
+    }
+
     pub fn inc(counter: &AtomicU64) {
         counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Decrement a gauge. Wrapping subtraction: every `dec` must pair
+    /// with an `inc` that happened-before it (the gauge would otherwise
+    /// wrap to u64::MAX).
+    pub fn dec(counter: &AtomicU64) {
+        counter.fetch_sub(1, Ordering::Relaxed);
     }
 
     pub fn add(counter: &AtomicU64, n: u64) {
@@ -52,6 +78,7 @@ impl Metrics {
 
     pub fn snapshot(&self) -> Json {
         let l = self.latencies_us.lock().unwrap();
+        let d = self.conn_depth.lock().unwrap();
         Json::obj(vec![
             ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
             ("responses", Json::Num(self.responses.load(Ordering::Relaxed) as f64)),
@@ -59,6 +86,19 @@ impl Metrics {
             ("ood_flagged", Json::Num(self.ood_flagged.load(Ordering::Relaxed) as f64)),
             ("batches", Json::Num(self.batches.load(Ordering::Relaxed) as f64)),
             ("mean_batch_size", Json::Num(self.mean_batch_size())),
+            ("in_flight", Json::Num(self.in_flight.load(Ordering::Relaxed) as f64)),
+            (
+                "depth_rejected",
+                Json::Num(self.depth_rejected.load(Ordering::Relaxed) as f64),
+            ),
+            ("connections", Json::Num(self.connections.load(Ordering::Relaxed) as f64)),
+            (
+                "conns_rejected",
+                Json::Num(self.conns_rejected.load(Ordering::Relaxed) as f64),
+            ),
+            ("conn_depth_p50", Json::Num(stats::percentile(&d, 50.0))),
+            ("conn_depth_p95", Json::Num(stats::percentile(&d, 95.0))),
+            ("conn_depth_max", Json::Num(stats::percentile(&d, 100.0))),
             ("latency_p50_us", Json::Num(stats::percentile(&l, 50.0))),
             ("latency_p95_us", Json::Num(stats::percentile(&l, 95.0))),
             ("latency_p99_us", Json::Num(stats::percentile(&l, 99.0))),
@@ -85,6 +125,25 @@ mod tests {
         assert_eq!(snap.num_field("requests").unwrap(), 2.0);
         assert_eq!(snap.num_field("mean_batch_size").unwrap(), 8.0);
         assert_eq!(snap.num_field("latency_p50_us").unwrap(), 200.0);
+    }
+
+    #[test]
+    fn gauge_and_depth_histogram() {
+        let m = Metrics::new();
+        Metrics::inc(&m.in_flight);
+        Metrics::inc(&m.in_flight);
+        Metrics::dec(&m.in_flight);
+        Metrics::inc(&m.connections);
+        Metrics::inc(&m.conns_rejected);
+        for d in [1.0, 2.0, 4.0] {
+            m.record_conn_depth(d);
+        }
+        let snap = m.snapshot();
+        assert_eq!(snap.num_field("in_flight").unwrap(), 1.0);
+        assert_eq!(snap.num_field("connections").unwrap(), 1.0);
+        assert_eq!(snap.num_field("conns_rejected").unwrap(), 1.0);
+        assert_eq!(snap.num_field("conn_depth_p50").unwrap(), 2.0);
+        assert_eq!(snap.num_field("conn_depth_max").unwrap(), 4.0);
     }
 
     #[test]

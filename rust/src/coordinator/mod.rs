@@ -4,14 +4,20 @@
 //! serving shape this repo gives it is a small inference server in the
 //! vLLM-router mold:
 //!
-//! * [`protocol`] — line-delimited JSON wire format;
+//! * [`protocol`] — line-delimited JSON wire format with a `hello`
+//!   pipelining handshake and per-request error responses;
 //! * [`batcher`] — per-model dynamic batching with a deadline (requests
 //!   are coalesced up to `max_batch` or `max_wait`, mirroring the paper's
 //!   per-mini-batch-size tuning: each bucket size maps to an executable
 //!   tuned/compiled for that batch);
-//! * [`metrics`] — latency histograms + counters, queryable in-band;
-//! * [`server`] — std::net TCP front end, one thread per connection,
-//!   worker thread per model;
+//! * [`metrics`] — latency histograms + counters (including an in-flight
+//!   gauge and a per-connection pipeline-depth histogram), queryable
+//!   in-band;
+//! * [`server`] — std::net TCP front end over a bounded connection-worker
+//!   pool; each connection is split into a non-blocking reader and a
+//!   channel-fed writer so one client can keep `pipeline_depth` requests
+//!   in flight and receive responses out of order (tagged by `id`), plus
+//!   a worker thread per model;
 //! * backends — native PFP operators or PJRT-compiled AOT artifacts, plus
 //!   an SVI backend (N sampled passes) for baseline comparisons.
 //!

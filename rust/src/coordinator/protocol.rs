@@ -3,12 +3,29 @@
 //! Requests:
 //!   {"id": 7, "model": "mlp", "input": [784 floats]}
 //!   {"cmd": "metrics"} | {"cmd": "ping"} | {"cmd": "shutdown"}
+//!   {"cmd": "hello", "pipeline": true}
 //!
 //! Responses:
 //!   {"id": 7, "pred": 3, "mu": [...], "var": [...],
 //!    "total": 0.41, "sme": 0.33, "mi": 0.08, "ood": false,
 //!    "queue_us": 120, "infer_us": 850}
 //!   {"id": 7, "error": "queue full"}
+//!   {"hello": true, "pipeline": true, "pipeline_depth": 10, "max_batch": 10}
+//!
+//! Pipelining: after a `{"cmd": "hello", "pipeline": true}` handshake a
+//! connection may keep up to `pipeline_depth` inference requests in
+//! flight without reading responses; responses come back tagged by `id`
+//! in **completion order**, not submission order, and overrunning the
+//! window yields an explicit `{"id": N, "error": "pipeline depth ..."}`
+//! response. The handshake ack advertises the server's depth;
+//! `"pipeline": false` opts back out. Connections that never send
+//! `hello` are served with the legacy synchronous semantics — one
+//! request in flight, strictly in-order replies, reader-side
+//! backpressure — so old clients (lockstep *or* write-pipelining) behave
+//! identically to the pre-pipelining server. A request refused before
+//! reaching a model lane (unknown model, bad feature count, full queue)
+//! also gets an explicit per-request error response `{"id": N, "error":
+//! "..."}` so the client can match it to the request it sent.
 
 use crate::error::{Error, Result};
 use crate::util::json::Json;
@@ -27,6 +44,10 @@ pub enum Command {
     Metrics,
     Ping,
     Shutdown,
+    /// Pipelining handshake: `pipeline: false` pins the connection to one
+    /// request in flight; `true` (the default) requests the server's full
+    /// configured depth.
+    Hello { pipeline: bool },
 }
 
 /// A parsed inbound message.
@@ -43,6 +64,9 @@ pub fn parse_inbound(line: &str) -> Result<Inbound> {
             "metrics" => Command::Metrics,
             "ping" => Command::Ping,
             "shutdown" => Command::Shutdown,
+            "hello" => Command::Hello {
+                pipeline: v.get("pipeline").and_then(Json::as_bool).unwrap_or(true),
+            },
             c => return Err(Error::Coordinator(format!("unknown command '{c}'"))),
         }));
     }
@@ -126,6 +150,17 @@ impl Response {
     }
 }
 
+/// Serialize the server's `hello` handshake acknowledgement.
+pub fn hello_json(pipeline: bool, pipeline_depth: usize, max_batch: usize) -> String {
+    Json::obj(vec![
+        ("hello", Json::Bool(true)),
+        ("pipeline", Json::Bool(pipeline)),
+        ("pipeline_depth", Json::Num(pipeline_depth as f64)),
+        ("max_batch", Json::Num(max_batch as f64)),
+    ])
+    .dump()
+}
+
 /// Serialize an inference request.
 pub fn request_json(id: u64, model: &str, input: &[f32]) -> String {
     Json::obj(vec![
@@ -164,6 +199,27 @@ mod tests {
             Inbound::Control(Command::Shutdown)
         ));
         assert!(parse_inbound(r#"{"cmd":"reboot"}"#).is_err());
+    }
+
+    #[test]
+    fn hello_handshake() {
+        assert!(matches!(
+            parse_inbound(r#"{"cmd":"hello","pipeline":true}"#).unwrap(),
+            Inbound::Control(Command::Hello { pipeline: true })
+        ));
+        assert!(matches!(
+            parse_inbound(r#"{"cmd":"hello","pipeline":false}"#).unwrap(),
+            Inbound::Control(Command::Hello { pipeline: false })
+        ));
+        // absent field defaults to pipelining on
+        assert!(matches!(
+            parse_inbound(r#"{"cmd":"hello"}"#).unwrap(),
+            Inbound::Control(Command::Hello { pipeline: true })
+        ));
+        let ack = hello_json(true, 10, 10);
+        let v = crate::util::json::Json::parse(&ack).unwrap();
+        assert_eq!(v.get("hello").and_then(Json::as_bool), Some(true));
+        assert_eq!(v.num_field("pipeline_depth").unwrap(), 10.0);
     }
 
     #[test]

@@ -1,22 +1,38 @@
 //! TCP server + model workers.
 //!
-//! Topology: one listener thread accepts connections; each connection gets
-//! a reader thread that parses line-JSON requests, routes them to the
-//! model's [`Batcher`] and forwards responses back over the socket. One
-//! worker thread per registered model drains its batcher, runs the
-//! backend on the coalesced mini-batch, post-processes uncertainty and
-//! fans responses back out.
+//! Topology: one listener thread accepts connections into a **bounded
+//! connection-worker pool** (reusing [`util::threadpool`]); beyond
+//! `max_connections` concurrent connections, new sockets are rejected at
+//! accept time with an error line (`conns_rejected` counter). Each
+//! admitted connection is split into two pool jobs:
 //!
-//! Also usable in-process (no TCP) through [`Service::infer_blocking`] —
-//! the integration tests and benches drive it both ways.
+//! * a **reader** that parses line-JSON requests and `submit()`s them to
+//!   the model's [`Batcher`] *without blocking* — after the `hello`
+//!   handshake, up to `pipeline_depth` requests per connection may be in
+//!   flight at once, so the dynamic batcher can coalesce a single
+//!   client's burst into one probabilistic forward pass (the paper's
+//!   Fig. 7 batching advantage, reachable from one socket); connections
+//!   that never send `hello` keep the legacy one-at-a-time in-order
+//!   semantics;
+//! * a **writer** fed by a per-connection response channel that sends
+//!   responses back tagged by `id` in *completion order* (out-of-order
+//!   relative to submission is allowed and expected).
+//!
+//! One worker thread per registered model drains its batcher, runs the
+//! backend on the coalesced mini-batch, post-processes uncertainty and
+//! fans responses back out to each request's reply channel.
+//!
+//! Also usable in-process (no TCP) through [`Service::submit`] /
+//! [`Service::infer_blocking`] — the integration tests and benches drive
+//! it both ways.
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::channel;
-use std::sync::Arc;
-use std::time::Instant;
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{Batcher, BatcherConfig, WorkItem};
 use crate::coordinator::metrics::Metrics;
@@ -24,7 +40,20 @@ use crate::coordinator::protocol::{self, Command, Inbound, Response};
 use crate::coordinator::{postprocess, Backend};
 use crate::error::{Error, Result};
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 use crate::util::threadpool::{self, ThreadPool};
+
+/// Tick granularity for blocked connection readers: a reader blocked in
+/// `read_until` re-checks the server-wide stop flag at this interval, so
+/// `Server::run` terminates promptly even with idle clients connected.
+const READ_TICK: Duration = Duration::from_millis(200);
+
+/// Upper bound on one blocking socket write. A peer that sends requests
+/// but never drains responses would otherwise wedge a connection job in
+/// `write_all` forever — and `Server::run` waits for connection jobs, so
+/// a wedged write would turn into a shutdown hang. After a timed-out
+/// write the connection is killed instead.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(2);
 
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -39,6 +68,16 @@ pub struct ServerConfig {
     /// parallel operators onto this one pool, so serving never pays
     /// per-request thread-spawn cost.
     pub pool_threads: usize,
+    /// Accept-time admission limit: at most this many concurrent TCP
+    /// connections; further sockets are refused with an error line.
+    pub max_connections: usize,
+    /// Maximum inference requests one connection may keep in flight after
+    /// it opts in via the `hello` handshake (0 = follow
+    /// `batcher.max_batch`, so a single pipelined client can fill a whole
+    /// batch by itself). Requests past the limit get an immediate
+    /// per-request error response; connections that never send `hello`
+    /// are served one-at-a-time in order (legacy semantics).
+    pub pipeline_depth: usize,
 }
 
 impl Default for ServerConfig {
@@ -49,6 +88,8 @@ impl Default for ServerConfig {
             logit_samples: 30,
             ood_threshold: 0.25,
             pool_threads: 0,
+            max_connections: 64,
+            pipeline_depth: 0,
         }
     }
 }
@@ -90,6 +131,21 @@ impl Service {
         &self.cfg
     }
 
+    /// Effective per-connection pipeline depth (`pipeline_depth`, or
+    /// `batcher.max_batch` when left at 0 so one client can fill a batch).
+    pub fn pipeline_depth(&self) -> usize {
+        if self.cfg.pipeline_depth == 0 {
+            self.cfg.batcher.max_batch.max(1)
+        } else {
+            self.cfg.pipeline_depth
+        }
+    }
+
+    /// Accept-time connection admission limit.
+    pub fn max_connections(&self) -> usize {
+        self.cfg.max_connections.max(1)
+    }
+
     /// The service-wide persistent operator pool. Backends registered on
     /// this service should be built with
     /// `Schedules::...with_pool(service.pool().clone())` so all lanes
@@ -123,6 +179,7 @@ impl Service {
                         Ok(x) => x,
                         Err(e) => {
                             for it in batch {
+                                Metrics::dec(&metrics.in_flight);
                                 let _ = it.reply.send(Response {
                                     id: it.id,
                                     result: Err(format!("bad input: {e}")),
@@ -142,14 +199,14 @@ impl Service {
                                 if p.ood {
                                     Metrics::inc(&metrics.ood_flagged);
                                 }
-                                let queue_us =
-                                    it.enqueued.elapsed().as_micros() as u64 - infer_us.min(
-                                        it.enqueued.elapsed().as_micros() as u64,
-                                    );
-                                metrics.record_latency_us(
-                                    it.enqueued.elapsed().as_micros() as f64
-                                );
+                                // one timestamp per item: end-to-end latency,
+                                // of which everything not spent in the batch's
+                                // inference call was queueing/batching wait
+                                let elapsed = it.enqueued.elapsed().as_micros() as u64;
+                                let queue_us = elapsed.saturating_sub(infer_us);
+                                metrics.record_latency_us(elapsed as f64);
                                 Metrics::inc(&metrics.responses);
+                                Metrics::dec(&metrics.in_flight);
                                 let _ = it.reply.send(Response {
                                     id: it.id,
                                     result: Ok(p),
@@ -160,6 +217,7 @@ impl Service {
                         }
                         Err(e) => {
                             for it in batch {
+                                Metrics::dec(&metrics.in_flight);
                                 let _ = it.reply.send(Response {
                                     id: it.id,
                                     result: Err(format!("inference failed: {e}")),
@@ -176,8 +234,11 @@ impl Service {
         self.lanes.insert(name.to_string(), ModelLane { batcher, features });
     }
 
-    /// Route one request into its lane (non-blocking).
-    pub fn submit(&self, req: protocol::Request) -> Result<std::sync::mpsc::Receiver<Response>> {
+    /// Route one request into its lane (non-blocking), sending the
+    /// response to the caller-provided channel. This is the pipelining
+    /// primitive: many in-flight requests can share one reply sender, and
+    /// responses arrive on it in completion order.
+    pub fn submit_with(&self, req: protocol::Request, reply: Sender<Response>) -> Result<()> {
         let lane = self
             .lanes
             .get(&req.model)
@@ -191,17 +252,28 @@ impl Service {
             )));
         }
         Metrics::inc(&self.metrics.requests);
-        let (tx, rx) = channel();
+        // gauge up BEFORE the push publishes the item: the lane worker may
+        // pop and decrement immediately, and inc-after-push would let the
+        // unsigned gauge wrap below zero
+        Metrics::inc(&self.metrics.in_flight);
         let item = WorkItem {
             id: req.id,
             input: req.input,
             enqueued: Instant::now(),
-            reply: tx,
+            reply,
         };
         if lane.batcher.push(item).is_err() {
+            Metrics::dec(&self.metrics.in_flight);
             Metrics::inc(&self.metrics.rejected);
             return Err(Error::Coordinator("queue full".into()));
         }
+        Ok(())
+    }
+
+    /// Route one request into its lane (non-blocking) on a fresh channel.
+    pub fn submit(&self, req: protocol::Request) -> Result<Receiver<Response>> {
+        let (tx, rx) = channel();
+        self.submit_with(req, tx)?;
         Ok(rx)
     }
 
@@ -262,66 +334,330 @@ impl Server {
         Ok(Self { service, listener, addr })
     }
 
-    /// Serve until a shutdown command arrives.
+    /// Serve until a shutdown command arrives. Connections are handled by
+    /// a bounded worker pool (two jobs per connection: reader + writer);
+    /// past `max_connections` concurrent clients, new sockets get an
+    /// error line and are closed at accept time. Returns once the accept
+    /// loop has stopped and every connection job has finished (readers
+    /// notice the stop flag within [`READ_TICK`]).
     pub fn run(&self) -> Result<()> {
         self.listener.set_nonblocking(false)?;
-        for stream in self.listener.incoming() {
-            if self.service.is_stopping() {
-                break;
-            }
-            match stream {
-                Ok(s) => {
-                    let svc = self.service.clone();
-                    std::thread::spawn(move || {
-                        let _ = handle_connection(svc, s);
-                    });
+        let max_conns = self.service.max_connections();
+        let conn_pool = ThreadPool::new(2 * max_conns);
+        let active = AtomicUsize::new(0);
+        let listener_addr = self.addr;
+        conn_pool.scope(|s| {
+            for stream in self.listener.incoming() {
+                if self.service.is_stopping() {
+                    break;
                 }
-                Err(e) => {
-                    eprintln!("accept error: {e}");
+                match stream {
+                    Ok(sock) => {
+                        if active.load(Ordering::SeqCst) >= max_conns {
+                            Metrics::inc(&self.service.metrics.conns_rejected);
+                            let mut sock = sock;
+                            let _ = sock.write_all(
+                                b"{\"error\":\"server at max connections\"}\n",
+                            );
+                            continue; // socket dropped: rejected at accept
+                        }
+                        active.fetch_add(1, Ordering::SeqCst);
+                        Metrics::inc(&self.service.metrics.connections);
+                        match ConnectionHalves::split(self.service.clone(), sock) {
+                            Ok((reader, writer)) => {
+                                s.spawn(move || reader.run(listener_addr));
+                                let active = &active;
+                                s.spawn(move || {
+                                    writer.run();
+                                    // the writer outlives its reader (it
+                                    // exits only after the reader drops the
+                                    // reply sender and the channel drains),
+                                    // so the admission slot frees only when
+                                    // BOTH halves are done and both pool
+                                    // workers are truly reusable
+                                    active.fetch_sub(1, Ordering::SeqCst);
+                                });
+                            }
+                            Err(e) => {
+                                active.fetch_sub(1, Ordering::SeqCst);
+                                eprintln!("connection setup error: {e}");
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("accept error: {e}");
+                    }
                 }
             }
-        }
+        });
         Ok(())
     }
 }
 
-fn handle_connection(svc: Arc<Service>, stream: TcpStream) -> Result<()> {
-    // line-sized request/response pairs: Nagle + delayed-ACK would add
-    // ~40ms per round trip, swamping sub-ms inference.
-    stream.set_nodelay(true).ok();
-    let peer = stream.peer_addr()?;
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+/// Write one protocol line atomically (the socket is shared between the
+/// connection's reader — control/rejection replies — and its writer).
+///
+/// The whole line is subject to one [`WRITE_TIMEOUT`] budget: the socket's
+/// `SO_SNDTIMEO` only bounds a *single* `write()` call, so a slow-drip
+/// peer draining a few bytes per timeout could otherwise keep a plain
+/// `write_all` looping forever and wedge the connection job.
+fn send_line(out: &Mutex<TcpStream>, line: &str) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(line.len() + 1);
+    buf.extend_from_slice(line.as_bytes());
+    buf.push(b'\n');
+    let deadline = Instant::now() + WRITE_TIMEOUT;
+    let mut w = out.lock().unwrap();
+    let mut written = 0;
+    while written < buf.len() {
+        if Instant::now() >= deadline {
+            return Err(std::io::Error::new(
+                ErrorKind::TimedOut,
+                "write budget exceeded",
+            ));
         }
-        match protocol::parse_inbound(&line) {
-            Ok(Inbound::Control(Command::Ping)) => {
-                writeln!(writer, r#"{{"pong":true}}"#)?;
+        match w.write(&buf[written..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    ErrorKind::WriteZero,
+                    "peer closed",
+                ))
             }
-            Ok(Inbound::Control(Command::Metrics)) => {
-                writeln!(writer, "{}", svc.metrics.snapshot().dump())?;
-            }
-            Ok(Inbound::Control(Command::Shutdown)) => {
-                writeln!(writer, r#"{{"shutting_down":true}}"#)?;
-                svc.stopping.store(true, Ordering::SeqCst);
-                // poke the accept loop with a dummy connection
-                let _ = TcpStream::connect(writer.local_addr()?);
+            Ok(n) => written += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// The two pool jobs one admitted connection turns into.
+struct ConnectionHalves;
+
+impl ConnectionHalves {
+    fn split(svc: Arc<Service>, stream: TcpStream) -> Result<(ConnReader, ConnWriter)> {
+        // line-sized request/response pairs: Nagle + delayed-ACK would add
+        // ~40ms per round trip, swamping sub-ms inference.
+        stream.set_nodelay(true).ok();
+        // bounded blocking so the reader can notice a server-wide stop
+        stream.set_read_timeout(Some(READ_TICK)).ok();
+        // and so a never-draining peer cannot wedge a write forever
+        stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
+        let out = Arc::new(Mutex::new(stream.try_clone()?));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let (reply_tx, reply_rx) = channel::<Response>();
+        let reader = ConnReader {
+            svc,
+            reader: BufReader::new(stream),
+            out: out.clone(),
+            reply_tx,
+            in_flight: in_flight.clone(),
+        };
+        let writer = ConnWriter { reply_rx, out, in_flight };
+        Ok((reader, writer))
+    }
+}
+
+/// Reader half: parses inbound lines and routes them without blocking on
+/// inference, so one client can keep `pipeline_depth` requests in flight.
+struct ConnReader {
+    svc: Arc<Service>,
+    reader: BufReader<TcpStream>,
+    out: Arc<Mutex<TcpStream>>,
+    reply_tx: Sender<Response>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+/// Per-connection pipelining state, owned by the reader.
+struct ConnState {
+    /// Max requests in flight on this connection.
+    depth: usize,
+    /// True once the client opted in via `{"cmd":"hello","pipeline":true}`.
+    /// Pipelined connections get an explicit error response on a depth
+    /// overrun; non-pipelined ones are served with the legacy blocking
+    /// semantics (the reader waits for the window to drain), so clients
+    /// written against the old synchronous server behave identically.
+    pipelined: bool,
+}
+
+impl ConnReader {
+    fn run(mut self, listener_addr: SocketAddr) {
+        let configured_depth = self.svc.pipeline_depth();
+        // until the hello handshake opts in, a connection is limited to
+        // one request in flight and served strictly in order — exactly
+        // the old synchronous server's observable behaviour, even for
+        // clients that pipeline their *writes*
+        let mut state = ConnState { depth: 1, pipelined: false };
+        // accumulate raw bytes (NOT read_line into a String: on a timeout
+        // error read_line discards the bytes it already consumed from the
+        // socket, corrupting the stream; read_until keeps them appended,
+        // so partial lines survive READ_TICK timeouts until the newline
+        // arrives)
+        let mut acc: Vec<u8> = Vec::new();
+        loop {
+            if self.svc.is_stopping() {
                 break;
             }
+            match self.reader.read_until(b'\n', &mut acc) {
+                Ok(0) => break, // EOF
+                Ok(_) => {
+                    let bytes = std::mem::take(&mut acc);
+                    let line = String::from_utf8_lossy(&bytes);
+                    let line = line.trim();
+                    if line.is_empty() {
+                        continue;
+                    }
+                    if !self.handle_line(line, &mut state, configured_depth, listener_addr) {
+                        break;
+                    }
+                }
+                Err(e)
+                    if e.kind() == ErrorKind::WouldBlock
+                        || e.kind() == ErrorKind::TimedOut =>
+                {
+                    continue
+                }
+                Err(_) => break,
+            }
+        }
+        // dropping reply_tx lets the writer exit once all in-flight
+        // responses have drained
+    }
+
+    /// Handle one parsed line; returns false when the connection is done.
+    fn handle_line(
+        &self,
+        line: &str,
+        state: &mut ConnState,
+        configured_depth: usize,
+        listener_addr: SocketAddr,
+    ) -> bool {
+        match protocol::parse_inbound(line) {
+            Ok(Inbound::Control(Command::Ping)) => {
+                let _ = send_line(&self.out, r#"{"pong":true}"#);
+            }
+            Ok(Inbound::Control(Command::Hello { pipeline })) => {
+                state.pipelined = pipeline;
+                state.depth = if pipeline { configured_depth } else { 1 };
+                let ack = protocol::hello_json(
+                    pipeline,
+                    state.depth,
+                    self.svc.cfg.batcher.max_batch,
+                );
+                let _ = send_line(&self.out, &ack);
+            }
+            Ok(Inbound::Control(Command::Metrics)) => {
+                let _ = send_line(&self.out, &self.svc.metrics.snapshot().dump());
+            }
+            Ok(Inbound::Control(Command::Shutdown)) => {
+                let _ = send_line(&self.out, r#"{"shutting_down":true}"#);
+                self.svc.stopping.store(true, Ordering::SeqCst);
+                // wake the accept loop with a dummy connection to the
+                // *listener* address (the accepted socket's own address
+                // is not reliably dialable); a wildcard bind (0.0.0.0 /
+                // ::) is itself not dialable everywhere, so rewrite it to
+                // the matching loopback
+                let mut poke = listener_addr;
+                if poke.ip().is_unspecified() {
+                    poke.set_ip(match poke.ip() {
+                        std::net::IpAddr::V4(_) => {
+                            std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+                        }
+                        std::net::IpAddr::V6(_) => {
+                            std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+                        }
+                    });
+                }
+                let _ = TcpStream::connect(poke);
+                return false;
+            }
             Ok(Inbound::Infer(req)) => {
-                let resp = svc.infer_blocking(req);
-                writeln!(writer, "{}", resp.to_json().dump())?;
+                let mut current = self.in_flight.load(Ordering::SeqCst);
+                if current >= state.depth {
+                    if state.pipelined {
+                        // explicit per-request error: the client can match
+                        // it by id and retry after draining some responses
+                        Metrics::inc(&self.svc.metrics.depth_rejected);
+                        let resp = Response {
+                            id: req.id,
+                            result: Err(format!(
+                                "pipeline depth {} exceeded",
+                                state.depth
+                            )),
+                            queue_us: 0,
+                            infer_us: 0,
+                        };
+                        let _ = send_line(&self.out, &resp.to_json().dump());
+                        return true;
+                    }
+                    // legacy connection: emulate the old synchronous
+                    // server — apply backpressure by waiting for the
+                    // previous response to go out before admitting more
+                    while current >= state.depth {
+                        if self.svc.is_stopping() {
+                            return false;
+                        }
+                        std::thread::sleep(Duration::from_micros(200));
+                        current = self.in_flight.load(Ordering::SeqCst);
+                    }
+                }
+                self.svc.metrics.record_conn_depth((current + 1) as f64);
+                self.in_flight.fetch_add(1, Ordering::SeqCst);
+                let id = req.id;
+                if let Err(e) = self.svc.submit_with(req, self.reply_tx.clone()) {
+                    self.in_flight.fetch_sub(1, Ordering::SeqCst);
+                    let resp = Response {
+                        id,
+                        result: Err(e.to_string()),
+                        queue_us: 0,
+                        infer_us: 0,
+                    };
+                    let _ = send_line(&self.out, &resp.to_json().dump());
+                }
             }
             Err(e) => {
-                writeln!(writer, r#"{{"error":"bad request: {e}"}}"#).ok();
+                let msg = Json::obj(vec![(
+                    "error",
+                    Json::Str(format!("bad request: {e}")),
+                )]);
+                let _ = send_line(&self.out, &msg.dump());
+            }
+        }
+        true
+    }
+}
+
+/// Writer half: drains the per-connection response channel and sends each
+/// response (tagged by `id`, completion order) back over the socket.
+struct ConnWriter {
+    reply_rx: Receiver<Response>,
+    out: Arc<Mutex<TcpStream>>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl ConnWriter {
+    fn run(self) {
+        let ConnWriter { reply_rx, out, in_flight } = self;
+        let mut dead = false;
+        for resp in reply_rx {
+            // free the pipeline slot *before* the response hits the wire,
+            // so a client that replenishes on receipt never races into a
+            // spurious depth rejection
+            in_flight.fetch_sub(1, Ordering::SeqCst);
+            if dead {
+                // keep draining (without writing) so lane replies stay
+                // paired with the in-flight accounting
+                continue;
+            }
+            if send_line(&out, &resp.to_json().dump()).is_err() {
+                // peer gone or not draining (write timed out): kill the
+                // socket so the reader unblocks too, and stop writing
+                dead = true;
+                if let Ok(s) = out.lock() {
+                    let _ = s.shutdown(std::net::Shutdown::Both);
+                }
             }
         }
     }
-    let _ = peer;
-    Ok(())
 }
 
 #[cfg(test)]
@@ -379,6 +715,47 @@ mod tests {
             input: vec![0.0; 10],
         });
         assert!(resp.result.unwrap_err().contains("features"));
+    }
+
+    #[test]
+    fn pipeline_depth_defaults_to_max_batch() {
+        let mut cfg = ServerConfig::default();
+        cfg.batcher.max_batch = 7;
+        let svc = Service::new(cfg);
+        assert_eq!(svc.pipeline_depth(), 7);
+        let mut cfg = ServerConfig::default();
+        cfg.pipeline_depth = 3;
+        let svc = Service::new(cfg);
+        assert_eq!(svc.pipeline_depth(), 3);
+    }
+
+    #[test]
+    fn submit_with_shares_one_reply_channel() {
+        let svc = test_service();
+        let (tx, rx) = channel();
+        for i in 0..4u64 {
+            svc.submit_with(
+                protocol::Request {
+                    id: i,
+                    model: "mlp".into(),
+                    input: vec![0.25; 784],
+                },
+                tx.clone(),
+            )
+            .expect("submit");
+        }
+        drop(tx);
+        let mut ids: Vec<u64> = rx.iter().map(|r| {
+            assert!(r.result.is_ok());
+            r.id
+        }).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        // gauge drained back to zero once every response was delivered
+        assert_eq!(
+            svc.metrics.in_flight.load(std::sync::atomic::Ordering::Relaxed),
+            0
+        );
     }
 
     #[test]

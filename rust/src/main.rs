@@ -58,6 +58,7 @@ fn print_help() {
            info                       show artifacts and Table-1 metrics\n\
            serve   [--arch mlp] [--backend native|xla|svi] [--addr 127.0.0.1:7878]\n\
                    [--threads 1] [--pool-threads 0] [--max-batch 10]\n\
+                   [--max-connections 64] [--pipeline-depth 0 (= max-batch)]\n\
            eval    [--arch mlp] [--samples 30]\n\
            profile [--arch mlp] [--batch 10] [--passes 20] [--schedules tuned|baseline]\n\
            tune    [--arch mlp] [--batch 10] [--trials 24]\n"
@@ -126,6 +127,11 @@ fn cmd_serve(opts: &HashMap<String, String>) -> pfp::Result<()> {
     cfg.batcher.max_batch = opt_usize(opts, "max-batch", 10);
     // 0 = share the process-wide pool; N = dedicated N-worker service pool
     cfg.pool_threads = opt_usize(opts, "pool-threads", 0);
+    // accept-time connection admission limit
+    cfg.max_connections = opt_usize(opts, "max-connections", cfg.max_connections);
+    // per-connection in-flight window; 0 tracks max-batch so one pipelined
+    // client can fill a whole probabilistic forward pass by itself
+    cfg.pipeline_depth = opt_usize(opts, "pipeline-depth", 0);
     let mut svc = Service::new(cfg);
     // every backend dispatches onto the service's one persistent pool, so
     // serving reuses the same workers across models and requests
@@ -158,6 +164,11 @@ fn cmd_serve(opts: &HashMap<String, String>) -> pfp::Result<()> {
         "serving {arch_name} (backend={backend_kind}, calib={calib}) on {addr}"
     );
     svc.register(arch_name, features, backend);
+    println!(
+        "pipelining: depth {} per connection, max {} connections",
+        svc.pipeline_depth(),
+        svc.max_connections()
+    );
     let server = Server::bind(std::sync::Arc::new(svc))?;
     println!("listening on {}", server.addr);
     server.run()

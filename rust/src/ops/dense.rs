@@ -267,6 +267,13 @@ fn reduce_lanes<A: Accum, const LANES: usize>(
 #[inline(always)]
 fn reduce<A: Accum>(sched: &Schedule, xm: &[f32], xa: &[f32], wm: &[f32], wa: &[f32]) -> A {
     let mut lanes = if sched.vectorize { 8 } else { 1 } * sched.unroll.max(1);
+    // The dispatch below only has power-of-two kernels: round a non-pow2
+    // lane count (e.g. unroll=3 with vectorize -> 24) *down* to one, so
+    // it never falls through to the widest 64-lane kernel and pays its
+    // init/merge cost for a tiny K.
+    if !lanes.is_power_of_two() {
+        lanes = lanes.next_power_of_two() / 2;
+    }
     // Never use more lanes than reduction elements: a short K (e.g. a 5x5
     // single-channel conv's K=25) would otherwise pay full lane-array
     // init + merge while every element lands in the scalar remainder.
@@ -613,6 +620,48 @@ mod tests {
             let m = g.usize_in(1, 12);
             let k = g.usize_in(1, 96);
             let n = g.usize_in(1, 40);
+            let (x_mu, x_var, w_mu, w_var) = rand_dense(g, m, k, n);
+            let x_e2 = e2_of(&x_mu, &x_var);
+            let w_e2 = e2_of(&w_mu, &w_var);
+            let args = DenseArgs {
+                x_mu: &x_mu,
+                x_aux: &x_e2,
+                w_mu: &w_mu,
+                w_aux: &w_e2,
+                b_mu: None,
+                b_var: None,
+            };
+            let (want_mu, want_var) = naive_eq12(&x_mu, &x_e2, &w_mu, &w_e2);
+            for s in &schedules {
+                let (mu, var) = pfp_dense_joint(&args, s);
+                assert!(
+                    mu.allclose(&want_mu, 1e-4, 1e-4),
+                    "mu mismatch {} [{m},{k},{n}]",
+                    s.tag()
+                );
+                assert!(
+                    var.allclose(&want_var, 1e-3, 1e-3),
+                    "var mismatch {} [{m},{k},{n}]",
+                    s.tag()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn non_pow2_unroll_matches_naive() {
+        // unroll=3 with vectorize gives 24 requested lanes; the dispatcher
+        // must round down to a real power-of-two kernel (16), not fall
+        // through to the 64-lane one — and stay correct either way.
+        let schedules = [
+            Schedule::tuned(1).with_unroll(3),
+            Schedule::tuned(1).with_unroll(5),
+            Schedule::baseline().with_order(LoopOrder::Mnk).with_unroll(3),
+        ];
+        check(10, |g| {
+            let m = g.usize_in(1, 8);
+            let k = g.usize_in(1, 96);
+            let n = g.usize_in(1, 24);
             let (x_mu, x_var, w_mu, w_var) = rand_dense(g, m, k, n);
             let x_e2 = e2_of(&x_mu, &x_var);
             let w_e2 = e2_of(&w_mu, &w_var);

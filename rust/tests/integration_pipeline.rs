@@ -1,0 +1,338 @@
+//! Pipelined serving end-to-end: a single TCP connection keeping
+//! `pipeline_depth` requests in flight must let the dynamic batcher
+//! coalesce them into one probabilistic forward pass (the paper's Fig. 7
+//! batching advantage, reachable from one socket), responses must come
+//! back tagged by id in completion order, depth overruns must get
+//! explicit per-request error responses, and a shutdown command must
+//! terminate `Server::run` promptly.
+//!
+//! Uses a synthetic stub backend so the suite runs without trained
+//! artifacts.
+
+use std::collections::HashSet;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use pfp::coordinator::{protocol, Backend, BatcherConfig, Server, ServerConfig, Service};
+use pfp::tensor::Tensor;
+
+/// Stub backend: fixed moments, optional per-batch delay.
+struct StubBackend {
+    delay: Duration,
+}
+
+impl Backend for StubBackend {
+    fn infer(&mut self, x: &Tensor) -> pfp::Result<(Tensor, Tensor)> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        let b = x.dim(0);
+        Ok((
+            Tensor::full(vec![b, 4], 0.5),
+            Tensor::full(vec![b, 4], 1e-3),
+        ))
+    }
+
+    fn name(&self) -> String {
+        "stub".into()
+    }
+}
+
+fn service(max_batch: usize, max_wait_ms: u64, depth: usize, delay_ms: u64) -> Arc<Service> {
+    let mut cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        pipeline_depth: depth,
+        ..Default::default()
+    };
+    cfg.batcher = BatcherConfig {
+        max_batch,
+        max_wait: Duration::from_millis(max_wait_ms),
+        capacity: 1024,
+    };
+    let mut svc = Service::new(cfg);
+    svc.register(
+        "stub",
+        4,
+        Box::new(StubBackend { delay: Duration::from_millis(delay_ms) }),
+    );
+    Arc::new(svc)
+}
+
+struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        let writer = stream.try_clone().unwrap();
+        Self { writer, reader: BufReader::new(stream) }
+    }
+
+    fn send(&mut self, line: &str) {
+        writeln!(self.writer, "{line}").unwrap();
+    }
+
+    fn recv(&mut self) -> String {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        line.trim().to_string()
+    }
+}
+
+/// Join `run()`'s thread with a timeout so a hung accept loop fails the
+/// test instead of wedging the whole suite.
+fn join_within(h: std::thread::JoinHandle<pfp::Result<()>>, timeout: Duration) {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let r = h.join();
+        let _ = tx.send(r.is_ok());
+    });
+    rx.recv_timeout(timeout)
+        .expect("Server::run did not terminate after shutdown");
+}
+
+#[test]
+fn pipelined_burst_coalesces_and_returns_out_of_order_tags() {
+    let svc = service(8, 500, 8, 0);
+    let server = Server::bind(svc.clone()).unwrap();
+    let addr = server.addr;
+    let h = std::thread::spawn(move || server.run());
+
+    let mut c = Client::connect(addr);
+    c.send(r#"{"cmd":"hello","pipeline":true}"#);
+    let ack = c.recv();
+    assert!(ack.contains("\"hello\":true"), "bad hello ack: {ack}");
+    assert!(ack.contains("\"pipeline\":true"), "bad hello ack: {ack}");
+
+    // a full max_batch burst in flight before reading a single response
+    for i in 0..8u64 {
+        c.send(&protocol::request_json(i, "stub", &[0.25; 4]));
+    }
+    let mut ids = HashSet::new();
+    for _ in 0..8 {
+        let resp = protocol::Response::parse(&c.recv()).unwrap();
+        assert!(resp.result.is_ok(), "request {} failed", resp.id);
+        ids.insert(resp.id);
+    }
+    assert_eq!(ids.len(), 8, "each id answered exactly once");
+
+    // the whole burst must have been one backend call...
+    assert_eq!(
+        svc.metrics.batches.load(Ordering::Relaxed),
+        1,
+        "full burst must coalesce into a single batch"
+    );
+    // ...so the acceptance metric holds: mean batch size > 1 from ONE
+    // connection (the blocking front end could never achieve this)
+    assert!(svc.metrics.mean_batch_size() > 1.0);
+    assert_eq!(svc.metrics.in_flight.load(Ordering::Relaxed), 0);
+
+    c.send(r#"{"cmd":"shutdown"}"#);
+    assert!(c.recv().contains("shutting_down"));
+    drop(c);
+    join_within(h, Duration::from_secs(10));
+}
+
+#[test]
+fn partial_batch_still_flushes_at_deadline() {
+    let svc = service(8, 40, 8, 0);
+    let server = Server::bind(svc.clone()).unwrap();
+    let addr = server.addr;
+    let h = std::thread::spawn(move || server.run());
+
+    let mut c = Client::connect(addr);
+    c.send(r#"{"cmd":"hello","pipeline":true}"#);
+    assert!(c.recv().contains("\"hello\":true"));
+    let t0 = Instant::now();
+    for i in 0..3u64 {
+        c.send(&protocol::request_json(i, "stub", &[0.5; 4]));
+    }
+    for _ in 0..3 {
+        let resp = protocol::Response::parse(&c.recv()).unwrap();
+        assert!(resp.result.is_ok());
+    }
+    let elapsed = t0.elapsed();
+    // 3 < max_batch, so the batch can only flush via the max_wait
+    // deadline — and must not wait (much) longer than that
+    assert!(elapsed >= Duration::from_millis(20), "flushed too early: {elapsed:?}");
+    assert!(elapsed < Duration::from_secs(5), "deadline flush hung: {elapsed:?}");
+    assert_eq!(
+        svc.metrics.batches.load(Ordering::Relaxed),
+        1,
+        "partial burst must still be one coalesced batch"
+    );
+
+    c.send(r#"{"cmd":"shutdown"}"#);
+    assert!(c.recv().contains("shutting_down"));
+    drop(c);
+    join_within(h, Duration::from_secs(10));
+}
+
+#[test]
+fn shutdown_terminates_run_within_timeout() {
+    // regression: the shutdown wake-up poke must dial the *listener*
+    // address; dialing the accepted socket's own address left run() hung
+    // in accept
+    let svc = service(4, 5, 0, 0);
+    let server = Server::bind(svc).unwrap();
+    let addr = server.addr;
+    let h = std::thread::spawn(move || server.run());
+
+    let mut c = Client::connect(addr);
+    c.send(r#"{"cmd":"shutdown"}"#);
+    assert!(c.recv().contains("shutting_down"));
+    drop(c);
+    join_within(h, Duration::from_secs(10));
+}
+
+#[test]
+fn depth_overrun_gets_explicit_per_request_error() {
+    // depth 2, slow backend: requests 3.. of an eager burst must be
+    // rejected immediately with id-tagged errors while the first two are
+    // still inside the backend
+    let svc = service(1, 1, 2, 500);
+    let server = Server::bind(svc.clone()).unwrap();
+    let addr = server.addr;
+    let h = std::thread::spawn(move || server.run());
+
+    let mut c = Client::connect(addr);
+    c.send(r#"{"cmd":"hello","pipeline":true}"#);
+    assert!(c.recv().contains("\"pipeline_depth\":2"));
+    for i in 0..5u64 {
+        c.send(&protocol::request_json(i, "stub", &[0.1; 4]));
+    }
+    let mut errors = 0;
+    let mut oks = 0;
+    let mut ids = HashSet::new();
+    let first = protocol::Response::parse(&c.recv()).unwrap();
+    assert!(
+        first.result.is_err(),
+        "depth rejection must arrive before the slow backend answers"
+    );
+    ids.insert(first.id);
+    errors += 1;
+    for _ in 0..4 {
+        let resp = protocol::Response::parse(&c.recv()).unwrap();
+        ids.insert(resp.id);
+        match resp.result {
+            Ok(_) => oks += 1,
+            Err(e) => {
+                assert!(e.contains("pipeline depth"), "unexpected error: {e}");
+                errors += 1;
+            }
+        }
+    }
+    assert_eq!(ids.len(), 5, "every request answered exactly once");
+    assert_eq!(errors + oks, 5);
+    assert!(oks >= 2, "admitted requests must still succeed (got {oks})");
+    assert!(errors >= 1);
+    assert_eq!(
+        svc.metrics.depth_rejected.load(Ordering::Relaxed),
+        errors as u64,
+        "depth rejections must be counted"
+    );
+
+    c.send(r#"{"cmd":"shutdown"}"#);
+    assert!(c.recv().contains("shutting_down"));
+    drop(c);
+    join_within(h, Duration::from_secs(10));
+}
+
+#[test]
+fn legacy_synchronous_client_still_works() {
+    // an old client: no hello handshake, strict request -> response lockstep
+    let svc = service(4, 5, 0, 0);
+    let server = Server::bind(svc).unwrap();
+    let addr = server.addr;
+    let h = std::thread::spawn(move || server.run());
+
+    let mut c = Client::connect(addr);
+    for i in 0..3u64 {
+        c.send(&protocol::request_json(i, "stub", &[0.3; 4]));
+        let resp = protocol::Response::parse(&c.recv()).unwrap();
+        assert_eq!(resp.id, i, "lockstep clients see in-order responses");
+        assert!(resp.result.is_ok());
+    }
+
+    c.send(r#"{"cmd":"shutdown"}"#);
+    assert!(c.recv().contains("shutting_down"));
+    drop(c);
+    join_within(h, Duration::from_secs(10));
+}
+
+#[test]
+fn legacy_write_pipelining_client_gets_in_order_responses() {
+    // an old client that bursts writes but never sent hello must see the
+    // pre-pipelining server's behaviour: in-order replies, no depth
+    // errors (the reader applies backpressure instead)
+    let svc = service(4, 5, 8, 10);
+    let server = Server::bind(svc).unwrap();
+    let addr = server.addr;
+    let h = std::thread::spawn(move || server.run());
+
+    let mut c = Client::connect(addr);
+    for i in 0..4u64 {
+        c.send(&protocol::request_json(i, "stub", &[0.4; 4]));
+    }
+    for i in 0..4u64 {
+        let resp = protocol::Response::parse(&c.recv()).unwrap();
+        assert_eq!(resp.id, i, "legacy clients see submission-order responses");
+        assert!(resp.result.is_ok(), "legacy clients never see depth errors");
+    }
+
+    c.send(r#"{"cmd":"shutdown"}"#);
+    assert!(c.recv().contains("shutting_down"));
+    drop(c);
+    join_within(h, Duration::from_secs(10));
+}
+
+#[test]
+fn accept_limit_rejects_excess_connections() {
+    let mut cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_connections: 1,
+        ..Default::default()
+    };
+    cfg.batcher = BatcherConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(5),
+        capacity: 64,
+    };
+    let mut service = Service::new(cfg);
+    service.register("stub", 4, Box::new(StubBackend { delay: Duration::ZERO }));
+    let svc = Arc::new(service);
+    let server = Server::bind(svc.clone()).unwrap();
+    let addr = server.addr;
+    let h = std::thread::spawn(move || server.run());
+
+    let mut c1 = Client::connect(addr);
+    // roundtrip proves c1 is admitted before c2 dials in
+    c1.send(r#"{"cmd":"ping"}"#);
+    assert!(c1.recv().contains("pong"));
+
+    let mut c2 = Client::connect(addr);
+    let rejection = c2.recv();
+    assert!(
+        rejection.contains("max connections"),
+        "second connection must be refused at accept: {rejection}"
+    );
+    assert_eq!(svc.metrics.conns_rejected.load(Ordering::Relaxed), 1);
+    drop(c2);
+
+    // the admitted connection is unaffected
+    c1.send(&protocol::request_json(7, "stub", &[0.2; 4]));
+    let resp = protocol::Response::parse(&c1.recv()).unwrap();
+    assert_eq!(resp.id, 7);
+    assert!(resp.result.is_ok());
+
+    c1.send(r#"{"cmd":"shutdown"}"#);
+    assert!(c1.recv().contains("shutting_down"));
+    drop(c1);
+    join_within(h, Duration::from_secs(10));
+}

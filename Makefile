@@ -4,11 +4,13 @@
 .PHONY: verify build test bench bench-build fmt clippy python-test artifacts clean
 
 # ---- tier-1 --------------------------------------------------------------
-# (plus the serving-bench compile gate, mirroring CI's bench-build job)
+# (plus the examples + serving/plan bench compile gates, mirroring CI)
 verify:
 	cargo build --release
 	cargo test -q
+	cargo build --examples
 	cargo bench --no-run --bench pipeline_throughput
+	cargo bench --no-run --bench plan_vs_interpreter
 
 build:
 	cargo build --release

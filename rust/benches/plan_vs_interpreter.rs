@@ -1,0 +1,117 @@
+//! Interpreted walk vs compiled plan: the cost of the interpretive layer
+//! on the hottest path.
+//!
+//! Three execution strategies per (arch, batch):
+//!
+//! * **interpreted** — `PfpExecutor::forward_interpreted`: re-walks the
+//!   layer list, re-decides conversions, heap-allocates every
+//!   intermediate tensor (the pre-lowering executor);
+//! * **planned** — `PfpExecutor::forward`: cached `CompiledPlan` +
+//!   workspace, plus the output-tensor copy the executor API pays;
+//! * **plan-raw** — `CompiledPlan::execute` on a reused workspace: the
+//!   steady-state zero-allocation serving path.
+//!
+//! Batches 1 and 64 bracket the paper's serving regime (single-request
+//! latency vs a full batcher bucket). Emits the usual bench table/JSON
+//! lines plus a `BENCH_plan.json` summary (interpreted vs planned ns/row)
+//! so future PRs can track the trajectory.
+
+use std::sync::Arc;
+
+use pfp::model::{Arch, PfpExecutor, PosteriorWeights, Schedules};
+use pfp::plan::{CompiledPlan, PlanMode};
+use pfp::profiling::Profiler;
+use pfp::tensor::Tensor;
+use pfp::util::bench::{bench, black_box, report, BenchOpts};
+use pfp::util::json::Json;
+use pfp::util::prop::Gen;
+
+fn input(arch: &Arch, batch: usize) -> Tensor {
+    let mut g = Gen::new(0xBEE);
+    let n = batch * arch.input_len();
+    Tensor::new(
+        vec![batch, arch.input_len()],
+        (0..n).map(|_| g.f32_in(0.0, 1.0)).collect(),
+    )
+    .unwrap()
+}
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let mut results = Vec::new();
+    let mut summary: Vec<(String, Json)> = Vec::new();
+
+    for arch in [Arch::mlp(), Arch::lenet()] {
+        let weights = PosteriorWeights::synthetic(&arch, 1);
+        for batch in [1usize, 64] {
+            let x = input(&arch, batch);
+
+            let mut interp =
+                PfpExecutor::new(arch.clone(), weights.clone(), Schedules::tuned(1));
+            let r_interp = bench(
+                &format!("{} b{batch} interpreted", arch.name),
+                opts,
+                || {
+                    black_box(interp.forward_interpreted(&x));
+                },
+            );
+
+            let mut planned =
+                PfpExecutor::new(arch.clone(), weights.clone(), Schedules::tuned(1));
+            let r_planned = bench(&format!("{} b{batch} planned", arch.name), opts, || {
+                black_box(planned.forward(&x));
+            });
+
+            let plan = CompiledPlan::compile(
+                &arch,
+                Arc::new(weights.clone()),
+                &Schedules::tuned(1),
+                batch,
+                PlanMode::Pfp,
+            )
+            .unwrap();
+            let mut ws = plan.workspace();
+            let mut off = Profiler::new(false);
+            let r_raw = bench(&format!("{} b{batch} plan-raw", arch.name), opts, || {
+                let (mu, var) = plan.execute(x.data(), &mut ws, &mut off);
+                black_box((mu[0], var[0]));
+            });
+
+            let ns_row = |median_s: f64| median_s * 1e9 / batch as f64;
+            summary.push((
+                format!("{}_b{batch}_interpreted_ns_row", arch.name),
+                Json::Num(ns_row(r_interp.median_s)),
+            ));
+            summary.push((
+                format!("{}_b{batch}_planned_ns_row", arch.name),
+                Json::Num(ns_row(r_planned.median_s)),
+            ));
+            summary.push((
+                format!("{}_b{batch}_plan_raw_ns_row", arch.name),
+                Json::Num(ns_row(r_raw.median_s)),
+            ));
+            summary.push((
+                format!("{}_b{batch}_speedup", arch.name),
+                Json::Num(if r_raw.median_s > 0.0 {
+                    r_interp.median_s / r_raw.median_s
+                } else {
+                    0.0
+                }),
+            ));
+
+            results.push(r_interp);
+            results.push(r_planned);
+            results.push(r_raw);
+        }
+    }
+
+    report("plan vs interpreter (single probabilistic forward pass)", &results);
+
+    let refs: Vec<(&str, Json)> =
+        summary.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    let json = Json::obj(refs);
+    println!("\nBENCH_plan.json {}", json.dump());
+    if let Err(e) = std::fs::write("BENCH_plan.json", json.dump()) {
+        eprintln!("could not write BENCH_plan.json: {e}");
+    }
+}

@@ -23,6 +23,10 @@ pub struct Metrics {
     pub connections: AtomicU64,
     /// Connections turned away at accept time (admission limit).
     pub conns_rejected: AtomicU64,
+    /// Cold plan compiles: a backend lowered the network for a batch
+    /// size it had not served yet. Steady state this stops moving — every
+    /// batcher bucket is served from a cached compiled plan.
+    pub plan_compiles: AtomicU64,
     latencies_us: Mutex<Vec<f64>>, // end-to-end per request
     conn_depth: Mutex<Vec<f64>>,   // per-connection in-flight depth at submit
 }
@@ -95,6 +99,10 @@ impl Metrics {
             (
                 "conns_rejected",
                 Json::Num(self.conns_rejected.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "plan_compiles",
+                Json::Num(self.plan_compiles.load(Ordering::Relaxed) as f64),
             ),
             ("conn_depth_p50", Json::Num(stats::percentile(&d, 50.0))),
             ("conn_depth_p95", Json::Num(stats::percentile(&d, 95.0))),

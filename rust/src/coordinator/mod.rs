@@ -48,26 +48,54 @@ pub trait Backend: Send {
     /// `x: [B, features]` -> (mu `[B, K]`, var `[B, K]`).
     fn infer(&mut self, x: &Tensor) -> Result<(Tensor, Tensor)>;
     fn name(&self) -> String;
+    /// Called by [`Service::register`] so backends can publish their own
+    /// counters (e.g. cold plan compiles). Default: no-op.
+    fn attach_metrics(&mut self, _metrics: Arc<Metrics>) {}
 }
 
 /// Native-operator PFP backend.
+///
+/// Holds one compiled plan per dynamic-batcher bucket size (via the
+/// executor's plan cache): the first batch of a given size pays a cold
+/// compile — surfaced through the `plan_compiles` metric — and every
+/// later batch of that size executes the cached plan with a reusable
+/// zero-allocation workspace, realizing the paper's
+/// bucket-to-compiled-executable mapping on the serving path.
 pub struct NativePfpBackend {
     exec: PfpExecutor,
+    metrics: Option<Arc<Metrics>>,
 }
 
 impl NativePfpBackend {
     pub fn new(arch: Arch, weights: PosteriorWeights, schedules: Schedules) -> Self {
-        Self { exec: PfpExecutor::new(arch, weights, schedules) }
+        Self { exec: PfpExecutor::new(arch, weights, schedules), metrics: None }
+    }
+
+    /// Cold plan compiles so far (one per distinct batch size served).
+    pub fn plan_compiles(&self) -> u64 {
+        self.exec.plan_compiles()
     }
 }
 
 impl Backend for NativePfpBackend {
     fn infer(&mut self, x: &Tensor) -> Result<(Tensor, Tensor)> {
-        Ok(self.exec.forward(x))
+        let before = self.exec.plan_compiles();
+        let out = self.exec.forward(x);
+        if let Some(m) = &self.metrics {
+            let cold = self.exec.plan_compiles() - before;
+            if cold > 0 {
+                Metrics::add(&m.plan_compiles, cold);
+            }
+        }
+        Ok(out)
     }
 
     fn name(&self) -> String {
         format!("native-pfp/{}", self.exec.arch.name)
+    }
+
+    fn attach_metrics(&mut self, metrics: Arc<Metrics>) {
+        self.metrics = Some(metrics);
     }
 }
 

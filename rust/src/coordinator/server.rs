@@ -156,6 +156,8 @@ impl Service {
 
     /// Register a model lane: spawns the worker thread that owns `backend`.
     pub fn register(&mut self, name: &str, features: usize, mut backend: Box<dyn Backend>) {
+        // let the backend publish its own counters (cold plan compiles)
+        backend.attach_metrics(self.metrics.clone());
         let batcher = Arc::new(Batcher::new(self.cfg.batcher));
         let lane_batcher = batcher.clone();
         let metrics = self.metrics.clone();
@@ -343,7 +345,12 @@ impl Server {
     pub fn run(&self) -> Result<()> {
         self.listener.set_nonblocking(false)?;
         let max_conns = self.service.max_connections();
-        let conn_pool = ThreadPool::new(2 * max_conns);
+        // Lazily grown: an idle server owns zero connection threads; each
+        // admitted connection grows the pool by its two jobs (reader +
+        // writer) on demand, up to the 2-per-connection cap. The old
+        // eager sizing burned 2 * max_connections OS threads (128 with
+        // defaults) at bind time — hostile to the embedded target.
+        let conn_pool = ThreadPool::new_lazy(2 * max_conns);
         let active = AtomicUsize::new(0);
         let listener_addr = self.addr;
         conn_pool.scope(|s| {

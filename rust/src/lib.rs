@@ -24,6 +24,7 @@
 //! |---|---|
 //! | [`tensor`] | dense f32 tensors + Gaussian (mu, var)/(mu, E\[x²\]) pairs |
 //! | [`ops`] | PFP / deterministic / SVI operators with schedules |
+//! | [`plan`] | static lowering: compiled per-batch-size plans + zero-alloc workspace |
 //! | [`tuner`] | random + evolutionary schedule search (Meta-Scheduler analog) |
 //! | [`model`] | architecture specs, weight store (NPZ), native executor |
 //! | [`runtime`] | PJRT engine: HLO-text artifacts → compiled executables |
@@ -38,6 +39,7 @@ pub mod data;
 pub mod error;
 pub mod model;
 pub mod ops;
+pub mod plan;
 pub mod profiling;
 pub mod runtime;
 pub mod tensor;

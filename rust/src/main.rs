@@ -17,7 +17,6 @@ use pfp::coordinator::{
 };
 use pfp::data::DirtyMnist;
 use pfp::model::{Arch, PfpExecutor, PosteriorWeights, Schedules};
-use pfp::ops::dense::{pfp_dense_joint, DenseArgs};
 use pfp::runtime::Engine;
 use pfp::tensor::Tensor;
 use pfp::tuner::{self, SearchSpace, TuningRecords};
@@ -61,7 +60,7 @@ fn print_help() {
                    [--max-connections 64] [--pipeline-depth 0 (= max-batch)]\n\
            eval    [--arch mlp] [--samples 30]\n\
            profile [--arch mlp] [--batch 10] [--passes 20] [--schedules tuned|baseline]\n\
-           tune    [--arch mlp] [--batch 10] [--trials 24]\n"
+           tune    [--arch mlp] [--batch 10] [--trials 24]   (per-layer workload search)\n"
     );
 }
 
@@ -132,10 +131,21 @@ fn cmd_serve(opts: &HashMap<String, String>) -> pfp::Result<()> {
     // per-connection in-flight window; 0 tracks max-batch so one pipelined
     // client can fill a whole probabilistic forward pass by itself
     cfg.pipeline_depth = opt_usize(opts, "pipeline-depth", 0);
+    let max_batch = cfg.batcher.max_batch;
     let mut svc = Service::new(cfg);
     // every backend dispatches onto the service's one persistent pool, so
-    // serving reuses the same workers across models and requests
-    let schedules = Schedules::tuned(threads).with_pool(svc.pool().clone());
+    // serving reuses the same workers across models and requests; the
+    // tuning records ride along in `Schedules` so the executor re-resolves
+    // the per-layer table for each batcher bucket size it cold-compiles
+    let records = std::sync::Arc::new(TuningRecords::load_or_default(
+        &pfp::artifacts_dir().join("tuning").join("records.json"),
+    ));
+    let schedules = Schedules::from_records(
+        records,
+        &arch,
+        max_batch,
+        Schedules::tuned(threads).with_pool(svc.pool().clone()),
+    );
 
     let backend: Box<dyn pfp::coordinator::Backend> = match backend_kind {
         "native" => Box::new(NativePfpBackend::new(
@@ -251,55 +261,54 @@ fn cmd_tune(opts: &HashMap<String, String>) -> pfp::Result<()> {
     let trials = opt_usize(opts, "trials", 24);
     let (arch, weights, _) = load_arch_weights(arch_name)?;
     let dir = pfp::artifacts_dir();
-    let data = DirtyMnist::load(&dir)?;
-    let x = data.test_mnist.x.first_rows(batch);
 
-    // Tune the dominant dense layer (the paper's Table 2 target):
-    // layer 0 for the MLP; the first dense after flatten for LeNet.
-    let dense_idx = arch
-        .compute_layers()
-        .iter()
-        .position(|l| matches!(l, pfp::model::LayerSpec::Dense { .. }))
-        .unwrap();
-    let lw = &weights.layers[dense_idx];
-    let k = lw.w_mu.cols();
-    let x_mu = if arch.name == "mlp" {
-        x.clone()
-    } else {
-        Tensor::new(vec![batch, k], vec![0.5; batch * k]).unwrap()
-    };
-    let x_e2 = x_mu.squared();
-
+    // Tune every compute layer on its actual workload shape (the paper
+    // tunes per operator workload and per mini-batch size): each layer's
+    // best schedule lands in the per-layer table the compiled plans bind.
     let space = SearchSpace::dense_default(pfp::util::threadpool::default_threads());
     let topts = tuner::TuneOpts { random_trials: trials, ..Default::default() };
-    println!("tuning PFP dense [{}x{}x{}] ...", batch, k, lw.w_mu.rows());
-    let res = tuner::tune(&space, topts, |s| {
-        let _ = pfp_dense_joint(
-            &DenseArgs {
-                x_mu: &x_mu,
-                x_aux: &x_e2,
-                w_mu: &lw.w_mu,
-                w_aux: &lw.w_e2,
-                b_mu: Some(lw.b_mu.data()),
-                b_var: Some(lw.b_var.data()),
-            },
-            s,
-        );
-    });
-    println!(
-        "baseline {:.3}ms -> best {:.3}ms ({:.2}x) with {}",
-        res.baseline_ms,
-        res.best_ms,
-        res.speedup(),
-        res.best.tag()
-    );
+    println!("tuning {arch_name} per layer at batch {batch} ({trials} random trials/layer) ...");
+    let layer_results = tuner::tune_per_layer(&arch, &weights, batch, topts, &space);
+
     let records_path = dir.join("tuning").join("records.json");
     let mut records = TuningRecords::load_or_default(&records_path);
-    records.insert(
-        TuningRecords::key("dense", arch_name, batch),
-        res.best,
-        res.best_ms,
+    // heaviest workload per op class ("dense" and "conv" separately):
+    // each becomes that class's fallback record
+    let mut dominant: HashMap<&str, &tuner::LayerTuneResult> = HashMap::new();
+    println!(
+        "{:<12} {:<24} {:>10} {:>10} {:>7}  schedule",
+        "layer", "workload", "baseline", "best", "speedup"
     );
+    for lr in &layer_results {
+        let wl = &lr.workload;
+        println!(
+            "{:<12} {:<24} {:>8.3}ms {:>8.3}ms {:>6.2}x  {}",
+            wl.label,
+            format!("[{}x{}x{}]", wl.m, wl.k, wl.n),
+            lr.result.baseline_ms,
+            lr.result.best_ms,
+            lr.result.speedup(),
+            lr.result.best.tag()
+        );
+        records.insert(
+            TuningRecords::layer_key(wl.op, arch_name, wl.compute_idx, batch),
+            lr.result.best,
+            lr.result.best_ms,
+        );
+        let incumbent = dominant.get(wl.op);
+        if incumbent.map_or(true, |d| {
+            d.workload.m * d.workload.k * d.workload.n < wl.m * wl.k * wl.n
+        }) {
+            dominant.insert(wl.op, lr);
+        }
+    }
+    for d in dominant.values() {
+        records.insert(
+            TuningRecords::key(d.workload.op, arch_name, batch),
+            d.result.best,
+            d.result.best_ms,
+        );
+    }
     records.save(&records_path)?;
     println!("saved tuning records to {}", records_path.display());
     Ok(())

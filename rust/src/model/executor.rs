@@ -9,9 +9,11 @@
 //! "tooling" overhead) where representations disagree. The first compute
 //! layer uses the Eq. 13 deterministic-input kernels.
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use crate::ops::conv::{pfp_conv2d_first_in, pfp_conv2d_joint_in, ConvArgs};
+use crate::plan::{CompiledPlan, PlanMode, Workspace};
 use crate::ops::dense::{pfp_dense_first_in, pfp_dense_joint_in, DenseArgs};
 use crate::ops::det::{det_conv2d, det_dense, det_relu};
 use crate::ops::maxpool::{
@@ -27,12 +29,21 @@ use crate::util::threadpool::{self, ThreadPool};
 
 use super::{Arch, LayerSpec, PosteriorWeights};
 
-/// Per-operator-class schedule selection for a network, plus the shared
-/// persistent worker pool every parallel operator dispatches onto.
+/// Per-operator-class schedule selection for a network, a per-layer
+/// override table (the paper tunes per operator *workload*, not per
+/// operator class), plus the shared persistent worker pool every parallel
+/// operator dispatches onto.
 #[derive(Clone, Debug)]
 pub struct Schedules {
     pub dense: Schedule,
     pub conv: Schedule,
+    /// Per-compute-layer schedule overrides, indexed by compute-layer
+    /// position (the order of `Arch::compute_layers` /
+    /// `PosteriorWeights::layers`). `None` (or a short vector) falls back
+    /// to the op-class schedule above. The tuner populates this table by
+    /// measuring each layer's actual shape; the compiled plan binds one
+    /// entry per compute step.
+    pub per_layer: Vec<Option<Schedule>>,
     /// vectorized k=2 pool (true) vs generic reduction (false) — Table 3.
     pub vectorized_pool: bool,
     pub relu_threads: usize,
@@ -43,6 +54,12 @@ pub struct Schedules {
     /// the serving coordinator injects one shared handle per `Service` so
     /// every model lane and request reuses the same workers.
     pub pool: Arc<ThreadPool>,
+    /// Persisted tuning records carried along so the executors can
+    /// re-resolve the schedule tables **per plan batch size** at
+    /// cold-compile time ([`Schedules::for_batch`]) — the paper binds one
+    /// tuned executable per mini-batch size, not one table for all
+    /// buckets. `None` = use the tables above as-is for every batch.
+    pub records: Option<Arc<crate::tuner::TuningRecords>>,
 }
 
 impl Schedules {
@@ -51,10 +68,12 @@ impl Schedules {
         Self {
             dense: Schedule::baseline(),
             conv: Schedule::baseline(),
+            per_layer: Vec::new(),
             vectorized_pool: false,
             relu_threads: 1,
             maxpool_threads: 1,
             pool: threadpool::global().clone(),
+            records: None,
         }
     }
 
@@ -63,10 +82,12 @@ impl Schedules {
         Self {
             dense: Schedule::tuned(threads),
             conv: Schedule::tuned(threads),
+            per_layer: Vec::new(),
             vectorized_pool: true,
             relu_threads: 1,
             maxpool_threads: 1,
             pool: threadpool::global().clone(),
+            records: None,
         }
     }
 
@@ -76,6 +97,81 @@ impl Schedules {
         self.pool = pool;
         self
     }
+
+    /// The op-class schedule for a layer spec.
+    pub fn class_schedule(&self, spec: &LayerSpec) -> Schedule {
+        match spec {
+            LayerSpec::Conv { .. } => self.conv,
+            _ => self.dense,
+        }
+    }
+
+    /// Effective schedule for compute layer `compute_idx`: the per-layer
+    /// override when present, else the op-class schedule.
+    pub fn layer_schedule(&self, compute_idx: usize, spec: &LayerSpec) -> Schedule {
+        self.per_layer
+            .get(compute_idx)
+            .copied()
+            .flatten()
+            .unwrap_or_else(|| self.class_schedule(spec))
+    }
+
+    /// Set a per-layer override (builder form), growing the table as
+    /// needed.
+    pub fn with_layer_schedule(mut self, compute_idx: usize, sched: Schedule) -> Self {
+        if self.per_layer.len() <= compute_idx {
+            self.per_layer.resize(compute_idx + 1, None);
+        }
+        self.per_layer[compute_idx] = Some(sched);
+        self
+    }
+
+    /// Resolve schedules for `arch` at `batch` from persisted tuning
+    /// records: op-class schedules from the class keys, per-layer
+    /// overrides from the layer keys (`dense/<arch>/L<i>/b<batch>`),
+    /// nearest recorded batch either way. `base` supplies everything not
+    /// recorded (and the pool handle). The records handle is kept on the
+    /// result so executors re-resolve per plan batch size
+    /// ([`Schedules::for_batch`]).
+    pub fn from_records(
+        records: Arc<crate::tuner::TuningRecords>,
+        arch: &Arch,
+        batch: usize,
+        mut base: Schedules,
+    ) -> Schedules {
+        base.dense = records.lookup("dense", &arch.name, batch, base.dense);
+        base.conv = records.lookup("conv", &arch.name, batch, base.conv);
+        base.per_layer = arch
+            .compute_layers()
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let op = match spec {
+                    LayerSpec::Conv { .. } => "conv",
+                    _ => "dense",
+                };
+                let class = base.class_schedule(spec);
+                let s = records.lookup_layer(op, &arch.name, i, batch, class);
+                if s == class {
+                    None
+                } else {
+                    Some(s)
+                }
+            })
+            .collect();
+        base.records = Some(records);
+        base
+    }
+
+    /// The schedules a plan for `batch` should bind: when tuning records
+    /// are carried, re-resolve the tables against that batch (the paper's
+    /// per-mini-batch-size executables); otherwise use `self` as-is.
+    pub fn for_batch(&self, arch: &Arch, batch: usize) -> Schedules {
+        match &self.records {
+            Some(r) => Self::from_records(Arc::clone(r), arch, batch, self.clone()),
+            None => self.clone(),
+        }
+    }
 }
 
 impl Default for Schedules {
@@ -84,18 +180,90 @@ impl Default for Schedules {
     }
 }
 
+/// One cached compiled plan + its reusable workspace.
+struct PlanEntry {
+    plan: CompiledPlan,
+    ws: Workspace,
+    last_used: u64,
+}
+
+/// Upper bound on cached plans per executor. The serving path is bounded
+/// anyway (at most `max_batch` distinct bucket sizes); this bounds
+/// long-lived library callers feeding arbitrary batch sizes, each of
+/// which would otherwise pin a plan + workspace forever.
+const PLAN_CACHE_CAP: usize = 32;
+
+/// Bounded batch-size -> compiled-plan cache with least-recently-used
+/// eviction.
+#[derive(Default)]
+struct PlanCache {
+    tick: u64,
+    map: HashMap<usize, PlanEntry>,
+}
+
+impl PlanCache {
+    /// Fetch (or `build` and insert, evicting the LRU plan at the cap)
+    /// the entry for `batch`. Returns the entry and whether this was a
+    /// cold compile.
+    fn get_or_insert_with(
+        &mut self,
+        batch: usize,
+        build: impl FnOnce() -> PlanEntry,
+    ) -> (&mut PlanEntry, bool) {
+        self.tick += 1;
+        let mut cold = false;
+        if !self.map.contains_key(&batch) {
+            if self.map.len() >= PLAN_CACHE_CAP {
+                if let Some(evict) =
+                    self.map.iter().min_by_key(|(_, e)| e.last_used).map(|(b, _)| *b)
+                {
+                    self.map.remove(&evict);
+                }
+            }
+            self.map.insert(batch, build());
+            cold = true;
+        }
+        let entry = self.map.get_mut(&batch).unwrap();
+        entry.last_used = self.tick;
+        (entry, cold)
+    }
+
+    fn batches(&self) -> Vec<usize> {
+        let mut b: Vec<usize> = self.map.keys().copied().collect();
+        b.sort_unstable();
+        b
+    }
+}
+
 /// Single-probabilistic-forward-pass executor.
+///
+/// A thin wrapper over the lowering layer: `forward` compiles the network
+/// into a [`CompiledPlan`] for the request's batch size on first sight
+/// (a *cold compile*, counted by [`PfpExecutor::plan_compiles`]), caches
+/// it keyed by batch size, and thereafter just executes — the paper's
+/// per-mini-batch-size compiled executables. The pre-plan interpretive
+/// walk survives as [`PfpExecutor::forward_interpreted`] for parity tests
+/// and the plan-vs-interpreter benchmark.
 pub struct PfpExecutor {
     pub arch: Arch,
-    pub weights: PosteriorWeights,
+    pub weights: Arc<PosteriorWeights>,
     pub schedules: Schedules,
     pub profiler: Profiler,
+    plans: PlanCache,
+    plan_compiles: u64,
 }
 
 impl PfpExecutor {
     pub fn new(arch: Arch, weights: PosteriorWeights, schedules: Schedules) -> Self {
         assert_eq!(arch.compute_layers().len(), weights.layers.len());
-        Self { arch, weights, schedules, profiler: Profiler::new(false) }
+        Self {
+            arch,
+            weights: Arc::new(weights),
+            schedules,
+            profiler: Profiler::new(false),
+            plans: PlanCache::default(),
+            plan_compiles: 0,
+        }
     }
 
     pub fn with_profiling(mut self) -> Self {
@@ -103,9 +271,55 @@ impl PfpExecutor {
         self
     }
 
-    /// Run one probabilistic forward pass:
+    /// Cold plan compiles so far (one per distinct batch size seen).
+    pub fn plan_compiles(&self) -> u64 {
+        self.plan_compiles
+    }
+
+    /// Batch sizes with a cached plan (at most [`PLAN_CACHE_CAP`]).
+    pub fn cached_batches(&self) -> Vec<usize> {
+        self.plans.batches()
+    }
+
+    /// Run one probabilistic forward pass through the compiled plan for
+    /// this batch size (compiling and caching it on first sight):
     /// input `[B, ...input_shape]` -> (mu `[B, classes]`, var `[B, classes]`).
     pub fn forward(&mut self, x: &Tensor) -> (Tensor, Tensor) {
+        self.profiler.begin_pass();
+        let batch = x.dim(0);
+        let arch = &self.arch;
+        let weights = &self.weights;
+        let schedules = &self.schedules;
+        let (entry, cold) = self.plans.get_or_insert_with(batch, || {
+            let schedules = schedules.for_batch(arch, batch);
+            let plan = CompiledPlan::compile(
+                arch,
+                Arc::clone(weights),
+                &schedules,
+                batch,
+                PlanMode::Pfp,
+            )
+            .expect("plan lowering failed");
+            let ws = plan.workspace();
+            PlanEntry { plan, ws, last_used: 0 }
+        });
+        if cold {
+            self.plan_compiles += 1;
+        }
+        let (rows, cols) = entry.plan.out_shape();
+        let (mu, var) = entry.plan.execute(x.data(), &mut entry.ws, &mut self.profiler);
+        (
+            Tensor::new(vec![rows, cols], mu.to_vec()).unwrap(),
+            Tensor::new(vec![rows, cols], var.to_vec()).unwrap(),
+        )
+    }
+
+    /// The pre-lowering interpretive forward pass: re-walks `arch.layers`
+    /// every call, re-decides conversions at runtime, and allocates fresh
+    /// tensors per layer. Kept as the reference implementation —
+    /// `CompiledPlan::execute` must match it bit-for-bit (with serial
+    /// schedules) — and as the benchmark baseline.
+    pub fn forward_interpreted(&mut self, x: &Tensor) -> (Tensor, Tensor) {
         self.profiler.begin_pass();
         let labels = self.arch.layer_labels();
         let mut compute_idx = 0usize;
@@ -119,11 +333,11 @@ impl PfpExecutor {
             match layer {
                 LayerSpec::Dense { .. } => {
                     let w = &self.weights.layers[compute_idx];
+                    let sched = self.schedules.layer_schedule(compute_idx, layer);
                     compute_idx += 1;
-                    let sched = self.schedules.dense;
                     let pool = Arc::clone(&self.schedules.pool);
                     let next = if let Some(prob) = state.take() {
-                        let prob = convert_rep(&mut self.profiler, prob, Rep::E2);
+                        let prob = convert_rep(&mut self.profiler, prob, Rep::E2, label);
                         let prob = prob.flatten_2d();
                         let (mu, var) = self.profiler.record(label, "dense", || {
                             pfp_dense_joint_in(
@@ -164,11 +378,11 @@ impl PfpExecutor {
                 }
                 LayerSpec::Conv { .. } => {
                     let w = &self.weights.layers[compute_idx];
+                    let sched = self.schedules.layer_schedule(compute_idx, layer);
                     compute_idx += 1;
-                    let sched = self.schedules.conv;
                     let pool = Arc::clone(&self.schedules.pool);
                     let next = if let Some(prob) = state.take() {
-                        let prob = convert_rep(&mut self.profiler, prob, Rep::E2);
+                        let prob = convert_rep(&mut self.profiler, prob, Rep::E2, label);
                         self.profiler.record(label, "conv2d", || {
                             pfp_conv2d_joint_in(
                                 &pool,
@@ -202,7 +416,7 @@ impl PfpExecutor {
                 }
                 LayerSpec::Relu => {
                     let prob = state.take().expect("ReLU before first compute layer");
-                    let prob = convert_rep(&mut self.profiler, prob, Rep::Var);
+                    let prob = convert_rep(&mut self.profiler, prob, Rep::Var, label);
                     let threads = self.schedules.relu_threads;
                     let pool = Arc::clone(&self.schedules.pool);
                     state = Some(
@@ -212,7 +426,7 @@ impl PfpExecutor {
                 }
                 LayerSpec::MaxPool2 => {
                     let prob = state.take().expect("pool before first compute layer");
-                    let prob = convert_rep(&mut self.profiler, prob, Rep::Var);
+                    let prob = convert_rep(&mut self.profiler, prob, Rep::Var, label);
                     let vectorized = self.schedules.vectorized_pool;
                     let threads = self.schedules.maxpool_threads;
                     let pool = Arc::clone(&self.schedules.pool);
@@ -239,12 +453,21 @@ impl PfpExecutor {
 
 }
 
-/// Representation conversion, profiled as the paper's "tooling" overhead.
-fn convert_rep(profiler: &mut Profiler, prob: ProbTensor, rep: Rep) -> ProbTensor {
+/// Representation conversion, profiled as the paper's "tooling" overhead
+/// and attributed to the layer it feeds (`Convert@<layer>`, matching the
+/// compiled plan's explicit conversion steps) so the Table 4 per-layer
+/// profile shows *where* the overhead lands; the aggregate `convert`
+/// op-type row is unchanged.
+fn convert_rep(profiler: &mut Profiler, prob: ProbTensor, rep: Rep, at: &str) -> ProbTensor {
     if prob.rep == rep {
         return prob;
     }
-    profiler.record("Convert", "convert", || prob.to_rep(rep).0)
+    if !profiler.enabled() {
+        // skip the label allocation on unprofiled passes (this path is
+        // the benchmark baseline — keep it honest)
+        return prob.to_rep(rep).0;
+    }
+    profiler.record(&format!("Convert@{at}"), "convert", || prob.to_rep(rep).0)
 }
 
 fn reshape_input(arch: &Arch, x: &Tensor) -> Tensor {
@@ -255,25 +478,49 @@ fn reshape_input(arch: &Arch, x: &Tensor) -> Tensor {
 }
 
 /// Deterministic executor (posterior means).
+///
+/// Same thin-wrapper shape as [`PfpExecutor`]: compiles a
+/// [`PlanMode::Det`] plan per batch size (mean-only kernels, in-place
+/// ReLU, no representation conversions) and caches it. Interior
+/// mutability keeps the historical `&self` forward signature.
 pub struct DetExecutor {
     pub arch: Arch,
-    pub weights: PosteriorWeights,
+    pub weights: Arc<PosteriorWeights>,
     pub schedules: Schedules,
+    plans: Mutex<PlanCache>,
 }
 
 impl DetExecutor {
     pub fn new(arch: Arch, weights: PosteriorWeights, schedules: Schedules) -> Self {
-        Self { arch, weights, schedules }
+        assert_eq!(arch.compute_layers().len(), weights.layers.len());
+        Self {
+            arch,
+            weights: Arc::new(weights),
+            schedules,
+            plans: Mutex::new(PlanCache::default()),
+        }
     }
 
     pub fn forward(&self, x: &Tensor) -> Tensor {
-        let weights: Vec<(&Tensor, &Tensor)> = self
-            .weights
-            .layers
-            .iter()
-            .map(|l| (&l.w_mu, &l.b_mu))
-            .collect();
-        forward_det(&self.arch, &weights, x, &self.schedules)
+        let batch = x.dim(0);
+        let mut plans = self.plans.lock().unwrap();
+        let (entry, _) = plans.get_or_insert_with(batch, || {
+            let schedules = self.schedules.for_batch(&self.arch, batch);
+            let plan = CompiledPlan::compile(
+                &self.arch,
+                Arc::clone(&self.weights),
+                &schedules,
+                batch,
+                PlanMode::Det,
+            )
+            .expect("det plan lowering failed");
+            let ws = plan.workspace();
+            PlanEntry { plan, ws, last_used: 0 }
+        });
+        let (rows, cols) = entry.plan.out_shape();
+        let mut off = Profiler::new(false);
+        let (mu, _) = entry.plan.execute(x.data(), &mut entry.ws, &mut off);
+        Tensor::new(vec![rows, cols], mu.to_vec()).unwrap()
     }
 }
 
@@ -291,13 +538,15 @@ fn forward_det(
         h = match layer {
             LayerSpec::Dense { .. } => {
                 let (w, b) = weights[ci];
+                let sched = schedules.layer_schedule(ci, layer);
                 ci += 1;
-                det_dense(&h.flatten_2d(), w, Some(b.data()), &schedules.dense)
+                det_dense(&h.flatten_2d(), w, Some(b.data()), &sched)
             }
             LayerSpec::Conv { .. } => {
                 let (w, b) = weights[ci];
+                let sched = schedules.layer_schedule(ci, layer);
                 ci += 1;
-                det_conv2d(&h, w, Some(b.data()), &schedules.conv)
+                det_conv2d(&h, w, Some(b.data()), &sched)
             }
             LayerSpec::Relu => det_relu(&h),
             LayerSpec::MaxPool2 => det_maxpool2(&h),
@@ -357,6 +606,94 @@ mod tests {
         let mut shape = vec![batch];
         shape.extend_from_slice(&arch.input_shape);
         Tensor::new(shape, data).unwrap()
+    }
+
+    #[test]
+    fn plan_forward_matches_interpreter_bitwise() {
+        // The compiled plan runs the same kernels in the same order with
+        // the same serial schedules: outputs must be bit-identical to the
+        // interpretive walk, not merely close.
+        for arch in [Arch::mlp(), Arch::lenet()] {
+            let w = PosteriorWeights::synthetic(&arch, 11);
+            let x = input(&arch, 3, 7);
+            let (mu_i, var_i) = PfpExecutor::new(arch.clone(), w.clone(), Schedules::tuned(1))
+                .forward_interpreted(&x);
+            let (mu_p, var_p) =
+                PfpExecutor::new(arch.clone(), w, Schedules::tuned(1)).forward(&x);
+            assert_eq!(mu_i.data(), mu_p.data(), "{} mu", arch.name);
+            assert_eq!(var_i.data(), var_p.data(), "{} var", arch.name);
+        }
+    }
+
+    #[test]
+    fn plans_cached_per_batch_size() {
+        let arch = Arch::mlp();
+        let w = PosteriorWeights::synthetic(&arch, 12);
+        let mut ex = PfpExecutor::new(arch.clone(), w, Schedules::default());
+        for batch in [1usize, 4, 1, 4, 1] {
+            let _ = ex.forward(&input(&arch, batch, batch as u64));
+        }
+        assert_eq!(ex.plan_compiles(), 2, "one cold compile per batch size");
+        assert_eq!(ex.cached_batches(), vec![1, 4]);
+    }
+
+    #[test]
+    fn per_layer_overrides_agree_with_uniform() {
+        // overrides change the loop nest, not the math
+        for arch in [Arch::mlp(), Arch::lenet()] {
+            let w = PosteriorWeights::synthetic(&arch, 13);
+            let x = input(&arch, 2, 9);
+            let uniform = Schedules::tuned(1);
+            let mut over = Schedules::tuned(1)
+                .with_layer_schedule(0, Schedule::tuned(1).with_unroll(4))
+                .with_layer_schedule(1, Schedule::tiled(8, 32));
+            over = over.with_layer_schedule(
+                arch.compute_layers().len() - 1,
+                Schedule::baseline().with_order(crate::ops::schedule::LoopOrder::Mnk),
+            );
+            let (mu_u, var_u) =
+                PfpExecutor::new(arch.clone(), w.clone(), uniform).forward(&x);
+            let (mu_o, var_o) = PfpExecutor::new(arch.clone(), w, over).forward(&x);
+            assert!(mu_u.allclose(&mu_o, 1e-4, 1e-4), "{} mu", arch.name);
+            assert!(var_u.allclose(&var_o, 2e-3, 2e-3), "{} var", arch.name);
+        }
+    }
+
+    #[test]
+    fn plan_cache_is_bounded_with_lru_eviction() {
+        let arch = Arch::mlp();
+        let w = PosteriorWeights::synthetic(&arch, 14);
+        let mut ex = PfpExecutor::new(arch.clone(), w, Schedules::default());
+        for batch in 1..=(PLAN_CACHE_CAP + 4) {
+            let _ = ex.forward(&input(&arch, batch, batch as u64));
+        }
+        assert_eq!(ex.cached_batches().len(), PLAN_CACHE_CAP);
+        assert_eq!(ex.plan_compiles(), (PLAN_CACHE_CAP + 4) as u64);
+        // the oldest batch sizes were evicted, the newest retained
+        assert!(!ex.cached_batches().contains(&1));
+        assert!(ex.cached_batches().contains(&(PLAN_CACHE_CAP + 4)));
+        // re-seeing an evicted size recompiles (cold) exactly once more
+        let _ = ex.forward(&input(&arch, 1, 1));
+        assert_eq!(ex.plan_compiles(), (PLAN_CACHE_CAP + 5) as u64);
+    }
+
+    #[test]
+    fn for_batch_rebinds_records_per_batch_size() {
+        // serve resolves once at max_batch, but the carried records must
+        // re-bind each cold-compiled bucket to its own tuned table
+        let arch = Arch::mlp();
+        let mut r = crate::tuner::TuningRecords::default();
+        let b1 = Schedule::tuned(1).with_unroll(2);
+        let b64 = Schedule::tuned(1).with_unroll(4);
+        r.insert(crate::tuner::TuningRecords::layer_key("dense", "mlp", 0, 1), b1, 0.1);
+        r.insert(crate::tuner::TuningRecords::layer_key("dense", "mlp", 0, 64), b64, 0.2);
+        let s = Schedules::from_records(Arc::new(r), &arch, 64, Schedules::tuned(1));
+        assert_eq!(s.per_layer[0], Some(b64));
+        let s1 = s.for_batch(&arch, 1);
+        assert_eq!(s1.per_layer[0], Some(b1), "bucket 1 must bind its own record");
+        // without records, for_batch is the identity
+        let plain = Schedules::tuned(1).for_batch(&arch, 1);
+        assert!(plain.per_layer.is_empty());
     }
 
     #[test]

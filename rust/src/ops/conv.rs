@@ -13,19 +13,73 @@ use crate::tensor::{ProbTensor, Rep, Tensor};
 use crate::util::threadpool::{self, ThreadPool};
 
 use super::dense::{
-    dense_kernel_in, DenseArgs, FirstLayer, JointEq12,
+    dense_kernel_into, Accum, DenseSlices, FirstLayer, JointEq12,
 };
 use super::schedule::Schedule;
 
-/// im2col: `[N, C, H, W]` -> (`[N*OH*OW, C*kh*kw]`, (n, oh, ow)).
-pub fn im2col(x: &Tensor, kh: usize, kw: usize) -> (Tensor, (usize, usize, usize)) {
-    let s = x.shape();
-    let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
-    let (oh, ow) = (h - kh + 1, w - kw + 1);
-    let kk = c * kh * kw;
-    let d = x.data();
-    let mut out = vec![0.0f32; n * oh * ow * kk];
-    for img in 0..n {
+/// Static conv workload description (NCHW input, OIHW weights, VALID
+/// padding, stride 1). The compiled plan resolves one of these per conv
+/// step at plan time so execution never re-derives shapes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvShape {
+    /// batch
+    pub n: usize,
+    /// input channels
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    /// output channels
+    pub o: usize,
+    pub kh: usize,
+    pub kw: usize,
+}
+
+impl ConvShape {
+    pub fn oh(&self) -> usize {
+        self.h - self.kh + 1
+    }
+
+    pub fn ow(&self) -> usize {
+        self.w - self.kw + 1
+    }
+
+    /// im2col patch rows: `N * OH * OW`.
+    pub fn rows(&self) -> usize {
+        self.n * self.oh() * self.ow()
+    }
+
+    /// im2col patch width (the dense reduction length): `C * kh * kw`.
+    pub fn kk(&self) -> usize {
+        self.c * self.kh * self.kw
+    }
+
+    pub fn in_len(&self) -> usize {
+        self.n * self.c * self.h * self.w
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.n * self.o * self.oh() * self.ow()
+    }
+
+    /// Scratch floats [`conv_kernel_into`] needs: one or two im2col patch
+    /// matrices (`shared_aux` = the Eq. 13 first layer, whose aux operand
+    /// is ignored and aliases the mean patches) plus the two pre-scatter
+    /// dense outputs.
+    pub fn scratch_len(&self, shared_aux: bool) -> usize {
+        let patches = self.rows() * self.kk();
+        let outs = self.rows() * self.o;
+        patches * if shared_aux { 1 } else { 2 } + 2 * outs
+    }
+}
+
+/// im2col into a caller-provided `[N*OH*OW, C*kh*kw]` buffer.
+pub fn im2col_into(d: &[f32], sh: &ConvShape, out: &mut [f32]) {
+    let (c, h, w, kh, kw) = (sh.c, sh.h, sh.w, sh.kh, sh.kw);
+    let (oh, ow) = (sh.oh(), sh.ow());
+    let kk = sh.kk();
+    debug_assert_eq!(d.len(), sh.in_len());
+    debug_assert_eq!(out.len(), sh.rows() * kk);
+    for img in 0..sh.n {
         for oy in 0..oh {
             for ox in 0..ow {
                 let row = ((img * oh + oy) * ow + ox) * kk;
@@ -41,14 +95,34 @@ pub fn im2col(x: &Tensor, kh: usize, kw: usize) -> (Tensor, (usize, usize, usize
             }
         }
     }
-    (Tensor::new(vec![n * oh * ow, kk], out).unwrap(), (n, oh, ow))
 }
 
-/// Scatter `[N*OH*OW, O]` back to NCHW `[N, O, OH, OW]`.
-fn col2im(cols: Tensor, n: usize, oh: usize, ow: usize) -> Tensor {
-    let o = cols.cols();
-    let d = cols.data();
-    let mut out = vec![0.0f32; n * o * oh * ow];
+/// im2col: `[N, C, H, W]` -> (`[N*OH*OW, C*kh*kw]`, (n, oh, ow)).
+pub fn im2col(x: &Tensor, kh: usize, kw: usize) -> (Tensor, (usize, usize, usize)) {
+    let s = x.shape();
+    let sh = ConvShape {
+        n: s[0],
+        c: s[1],
+        h: s[2],
+        w: s[3],
+        o: 0,
+        kh,
+        kw,
+    };
+    let kk = sh.kk();
+    let mut out = vec![0.0f32; sh.rows() * kk];
+    im2col_into(x.data(), &sh, &mut out);
+    (
+        Tensor::new(vec![sh.rows(), kk], out).unwrap(),
+        (sh.n, sh.oh(), sh.ow()),
+    )
+}
+
+/// Scatter `[N*OH*OW, O]` back to NCHW `[N, O, OH, OW]`, into a
+/// caller-provided buffer.
+fn col2im_into(d: &[f32], n: usize, oh: usize, ow: usize, o: usize, out: &mut [f32]) {
+    debug_assert_eq!(d.len(), n * oh * ow * o);
+    debug_assert_eq!(out.len(), n * o * oh * ow);
     for img in 0..n {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -59,7 +133,64 @@ fn col2im(cols: Tensor, n: usize, oh: usize, ow: usize) -> Tensor {
             }
         }
     }
-    Tensor::new(vec![n, o, oh, ow], out).unwrap()
+}
+
+/// Slice-level conv kernel: im2col -> scheduled joint dense -> col2im,
+/// entirely within caller-provided scratch/output buffers (the plan's
+/// zero-allocation conv step). `x_aux = None` is the Eq. 13 first layer:
+/// its aux operand is ignored by the [`FirstLayer`] accumulator, so the
+/// mean patches are passed for both operands and the interpreter's
+/// explicit `squared()` pass is folded away. Weight matrices are the
+/// OIHW tensors viewed flat as `[O, C*kh*kw]` (identical memory layout).
+#[allow(clippy::too_many_arguments)]
+pub fn conv_kernel_into<A: Accum>(
+    pool: &ThreadPool,
+    sh: &ConvShape,
+    x_mu: &[f32],
+    x_aux: Option<&[f32]>,
+    w_mu: &[f32],
+    w_aux: &[f32],
+    b_mu: Option<&[f32]>,
+    b_var: Option<&[f32]>,
+    sched: &Schedule,
+    scratch: &mut [f32],
+    out_mu: &mut [f32],
+    out_var: &mut [f32],
+) {
+    let rows = sh.rows();
+    let kk = sh.kk();
+    debug_assert!(scratch.len() >= sh.scratch_len(x_aux.is_none()));
+    let (pm, rest) = scratch.split_at_mut(rows * kk);
+    im2col_into(x_mu, sh, pm);
+    let (pa, rest) = match x_aux {
+        Some(aux) => {
+            let (pa, rest) = rest.split_at_mut(rows * kk);
+            im2col_into(aux, sh, pa);
+            (&*pa, rest)
+        }
+        None => (&*pm, rest),
+    };
+    let (cm, rest) = rest.split_at_mut(rows * sh.o);
+    let (cv, _) = rest.split_at_mut(rows * sh.o);
+    dense_kernel_into::<A>(
+        pool,
+        &DenseSlices {
+            m: rows,
+            k: kk,
+            n: sh.o,
+            x_mu: pm,
+            x_aux: pa,
+            w_mu,
+            w_aux,
+            b_mu,
+            b_var,
+        },
+        sched,
+        cm,
+        cv,
+    );
+    col2im_into(cm, sh.n, sh.oh(), sh.ow(), sh.o, out_mu);
+    col2im_into(cv, sh.n, sh.oh(), sh.ow(), sh.o, out_var);
 }
 
 /// Conv arguments: weights OIHW; aux follows the kernel's formulation
@@ -71,33 +202,47 @@ pub struct ConvArgs<'a> {
     pub b_var: Option<&'a [f32]>,
 }
 
-fn conv_via_dense<A: super::dense::Accum>(
+fn conv_via_dense<A: Accum>(
     pool: &ThreadPool,
     x_mu: &Tensor,
-    x_aux: &Tensor,
+    x_aux: Option<&Tensor>,
     args: &ConvArgs<'_>,
     sched: &Schedule,
 ) -> (Tensor, Tensor) {
+    let xs = x_mu.shape();
     let ws = args.w_mu.shape();
-    let (o, i, kh, kw) = (ws[0], ws[1], ws[2], ws[3]);
-    debug_assert_eq!(x_mu.shape()[1], i);
-    let (pm, (n, oh, ow)) = im2col(x_mu, kh, kw);
-    let (pa, _) = im2col(x_aux, kh, kw);
-    let wm = args.w_mu.clone().reshape(vec![o, i * kh * kw]).unwrap();
-    let wa = args.w_aux.clone().reshape(vec![o, i * kh * kw]).unwrap();
-    let (mu, var) = dense_kernel_in::<A>(
+    let sh = ConvShape {
+        n: xs[0],
+        c: xs[1],
+        h: xs[2],
+        w: xs[3],
+        o: ws[0],
+        kh: ws[2],
+        kw: ws[3],
+    };
+    debug_assert_eq!(sh.c, ws[1]);
+    let mut scratch = vec![0.0f32; sh.scratch_len(x_aux.is_none())];
+    let mut out_mu = vec![0.0f32; sh.out_len()];
+    let mut out_var = vec![0.0f32; sh.out_len()];
+    conv_kernel_into::<A>(
         pool,
-        &DenseArgs {
-            x_mu: &pm,
-            x_aux: &pa,
-            w_mu: &wm,
-            w_aux: &wa,
-            b_mu: args.b_mu,
-            b_var: args.b_var,
-        },
+        &sh,
+        x_mu.data(),
+        x_aux.map(|t| t.data()),
+        args.w_mu.data(),
+        args.w_aux.data(),
+        args.b_mu,
+        args.b_var,
         sched,
+        &mut scratch,
+        &mut out_mu,
+        &mut out_var,
     );
-    (col2im(mu, n, oh, ow), col2im(var, n, oh, ow))
+    let shape = vec![sh.n, sh.o, sh.oh(), sh.ow()];
+    (
+        Tensor::new(shape.clone(), out_mu).unwrap(),
+        Tensor::new(shape, out_var).unwrap(),
+    )
 }
 
 /// Joint PFP conv2d (Eq. 12): activation aux = E[x^2], weight aux = E[w^2].
@@ -118,7 +263,7 @@ pub fn pfp_conv2d_joint_in(
     sched: &Schedule,
 ) -> ProbTensor {
     debug_assert_eq!(x.rep, Rep::E2);
-    let (mu, var) = conv_via_dense::<JointEq12>(pool, &x.mu, &x.aux, args, sched);
+    let (mu, var) = conv_via_dense::<JointEq12>(pool, &x.mu, Some(&x.aux), args, sched);
     ProbTensor::new(mu, var, Rep::Var)
 }
 
@@ -128,15 +273,16 @@ pub fn pfp_conv2d_first(x: &Tensor, args: &ConvArgs<'_>, sched: &Schedule) -> Pr
     pfp_conv2d_first_in(threadpool::global(), x, args, sched)
 }
 
-/// [`pfp_conv2d_first`] on an explicit pool.
+/// [`pfp_conv2d_first`] on an explicit pool. The Eq. 13 accumulator
+/// ignores its activation-aux operand, so no `squared()` pass is run —
+/// the mean patches serve as both operands.
 pub fn pfp_conv2d_first_in(
     pool: &ThreadPool,
     x: &Tensor,
     args: &ConvArgs<'_>,
     sched: &Schedule,
 ) -> ProbTensor {
-    let x_sq = x.squared();
-    let (mu, var) = conv_via_dense::<FirstLayer>(pool, x, &x_sq, args, sched);
+    let (mu, var) = conv_via_dense::<FirstLayer>(pool, x, None, args, sched);
     ProbTensor::new(mu, var, Rep::Var)
 }
 

@@ -312,21 +312,56 @@ impl<'a> DenseArgs<'a> {
         debug_assert_eq!(self.w_aux.shape(), self.w_mu.shape());
         (m, k, n)
     }
+
+    fn as_slices(&self) -> DenseSlices<'a> {
+        let (m, k, n) = self.dims();
+        DenseSlices {
+            m,
+            k,
+            n,
+            x_mu: self.x_mu.data(),
+            x_aux: self.x_aux.data(),
+            w_mu: self.w_mu.data(),
+            w_aux: self.w_aux.data(),
+            b_mu: self.b_mu,
+            b_var: self.b_var,
+        }
+    }
+}
+
+/// Raw-slice dense kernel inputs with explicit dims. The compiled plan
+/// executes directly on workspace slices through this form; the Tensor
+/// API ([`DenseArgs`]) lowers onto it.
+#[derive(Clone, Copy)]
+pub struct DenseSlices<'a> {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// `[M, K]` row-major activation means.
+    pub x_mu: &'a [f32],
+    /// `[M, K]` activation aux (E\[x^2\] / variance per the formulation).
+    pub x_aux: &'a [f32],
+    /// `[N, K]` row-major weight means.
+    pub w_mu: &'a [f32],
+    /// `[N, K]` weight aux.
+    pub w_aux: &'a [f32],
+    pub b_mu: Option<&'a [f32]>,
+    pub b_var: Option<&'a [f32]>,
 }
 
 /// Run kernel `A` over rows `rows`, writing `[len(rows), N]` chunks.
 fn run_rows<A: Accum>(
-    args: &DenseArgs<'_>,
+    args: &DenseSlices<'_>,
     sched: &Schedule,
     rows: std::ops::Range<usize>,
     out_mu: &mut [f32],
     out_var: &mut [f32],
 ) {
-    let (_, k, n) = args.dims();
-    let xm_all = args.x_mu.data();
-    let xa_all = args.x_aux.data();
-    let wm_all = args.w_mu.data();
-    let wa_all = args.w_aux.data();
+    let (k, n) = (args.k, args.n);
+    let xm_all = args.x_mu;
+    let xa_all = args.x_aux;
+    let wm_all = args.w_mu;
+    let wa_all = args.w_aux;
 
     match sched.loop_order {
         LoopOrder::Mnk if sched.tile_n == 0 && sched.tile_k == 0 => {
@@ -418,25 +453,36 @@ fn run_rows<A: Accum>(
     }
 }
 
-/// Execute kernel `A` with schedule `sched` on `pool`
-/// -> (mu `[M,N]`, var `[M,N]`).
-pub fn dense_kernel_in<A: Accum>(
+/// Execute kernel `A` with schedule `sched` on `pool`, writing the
+/// `[M, N]` moment outputs into caller-provided slices. This is the
+/// zero-allocation core the compiled plan drives: with a serial,
+/// untiled `Mnk` schedule (the tuned default) it performs **no** heap
+/// allocation; tiled/`Mkn` schedules allocate per-row accumulator
+/// vectors and `threads > 1` pays the pool's boxed-job dispatch.
+pub fn dense_kernel_into<A: Accum>(
     pool: &ThreadPool,
-    args: &DenseArgs<'_>,
+    args: &DenseSlices<'_>,
     sched: &Schedule,
-) -> (Tensor, Tensor) {
-    let (m, _, n) = args.dims();
-    let mut out_mu = vec![0.0f32; m * n];
-    let mut out_var = vec![0.0f32; m * n];
+    out_mu: &mut [f32],
+    out_var: &mut [f32],
+) {
+    let (m, n) = (args.m, args.n);
+    debug_assert_eq!(out_mu.len(), m * n);
+    debug_assert_eq!(out_var.len(), m * n);
+    debug_assert_eq!(args.x_mu.len(), m * args.k);
+    debug_assert_eq!(args.x_aux.len(), m * args.k);
+    debug_assert_eq!(args.w_mu.len(), n * args.k);
+    debug_assert_eq!(args.w_aux.len(), n * args.k);
 
     let threads = sched.threads.max(1).min(m.max(1));
     if threads <= 1 {
-        run_rows::<A>(args, sched, 0..m, &mut out_mu, &mut out_var);
+        run_rows::<A>(args, sched, 0..m, out_mu, out_var);
     } else {
         let ranges = split_ranges(m, threads);
         // split both output buffers into matching disjoint row chunks
-        let mut mu_rest: &mut [f32] = &mut out_mu;
-        let mut var_rest: &mut [f32] = &mut out_var;
+        // (reborrow, not move: the bias epilogue below needs the slices)
+        let mut mu_rest: &mut [f32] = &mut *out_mu;
+        let mut var_rest: &mut [f32] = &mut *out_var;
         let mut chunks = Vec::new();
         for r in ranges {
             let take = (r.end - r.start) * n;
@@ -475,7 +521,19 @@ pub fn dense_kernel_in<A: Accum>(
             }
         }
     }
+}
 
+/// Execute kernel `A` with schedule `sched` on `pool`
+/// -> (mu `[M,N]`, var `[M,N]`).
+pub fn dense_kernel_in<A: Accum>(
+    pool: &ThreadPool,
+    args: &DenseArgs<'_>,
+    sched: &Schedule,
+) -> (Tensor, Tensor) {
+    let (m, _, n) = args.dims();
+    let mut out_mu = vec![0.0f32; m * n];
+    let mut out_var = vec![0.0f32; m * n];
+    dense_kernel_into::<A>(pool, &args.as_slices(), sched, &mut out_mu, &mut out_var);
     (
         Tensor::new(vec![m, n], out_mu).unwrap(),
         Tensor::new(vec![m, n], out_var).unwrap(),

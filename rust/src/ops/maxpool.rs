@@ -42,17 +42,24 @@ fn out_hw(h: usize, w: usize, k: usize, stride: usize) -> (usize, usize) {
     ((h - k) / stride + 1, (w - k) / stride + 1)
 }
 
-/// Generic-reduction PFP max-pool over NCHW (mean, variance) tensors:
-/// iterated *sequential* pairwise Gaussian max over a k x k window.
-pub fn pfp_maxpool_generic(input: &ProbTensor, k: usize, stride: usize) -> ProbTensor {
-    debug_assert_eq!(input.rep, Rep::Var);
-    let s = input.mu.shape();
-    let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+/// Slice-level generic-reduction PFP max-pool (see
+/// [`pfp_maxpool_generic`]); writes into caller-provided buffers.
+#[allow(clippy::too_many_arguments)]
+pub fn pfp_maxpool_generic_into(
+    mu: &[f32],
+    var: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    out_mu: &mut [f32],
+    out_var: &mut [f32],
+) {
     let (oh, ow) = out_hw(h, w, k, stride);
-    let mu = input.mu.data();
-    let var = input.aux.data();
-    let mut out_mu = vec![0.0f32; n * c * oh * ow];
-    let mut out_var = vec![0.0f32; n * c * oh * ow];
+    debug_assert_eq!(mu.len(), n * c * h * w);
+    debug_assert_eq!(out_mu.len(), n * c * oh * ow);
     for img in 0..n {
         for ch in 0..c {
             let base = (img * c + ch) * h * w;
@@ -82,11 +89,113 @@ pub fn pfp_maxpool_generic(input: &ProbTensor, k: usize, stride: usize) -> ProbT
             }
         }
     }
+}
+
+/// Generic-reduction PFP max-pool over NCHW (mean, variance) tensors:
+/// iterated *sequential* pairwise Gaussian max over a k x k window.
+pub fn pfp_maxpool_generic(input: &ProbTensor, k: usize, stride: usize) -> ProbTensor {
+    debug_assert_eq!(input.rep, Rep::Var);
+    let s = input.mu.shape();
+    let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+    let (oh, ow) = out_hw(h, w, k, stride);
+    let mut out_mu = vec![0.0f32; n * c * oh * ow];
+    let mut out_var = vec![0.0f32; n * c * oh * ow];
+    pfp_maxpool_generic_into(
+        input.mu.data(),
+        input.aux.data(),
+        n,
+        c,
+        h,
+        w,
+        k,
+        stride,
+        &mut out_mu,
+        &mut out_var,
+    );
     ProbTensor::new(
         Tensor::new(vec![n, c, oh, ow], out_mu).unwrap(),
         Tensor::new(vec![n, c, oh, ow], out_var).unwrap(),
         Rep::Var,
     )
+}
+
+/// Slice-level vectorized k=2/stride-2 PFP max-pool (see
+/// [`pfp_maxpool2_vectorized`]); writes into caller-provided buffers.
+/// Allocation-free when `threads <= 1` or the input has a single plane.
+/// Bit-identical across thread counts (planes are independent).
+#[allow(clippy::too_many_arguments)]
+pub fn pfp_maxpool2_vectorized_into(
+    pool: &ThreadPool,
+    mu: &[f32],
+    var: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    threads: usize,
+    out_mu: &mut [f32],
+    out_var: &mut [f32],
+) {
+    let (oh, ow) = (h / 2, w / 2);
+    let planes = n * c;
+    debug_assert_eq!(mu.len(), planes * h * w);
+    debug_assert_eq!(out_mu.len(), planes * oh * ow);
+    if threads <= 1 || planes <= 1 {
+        pool2_serial(mu, var, n, c, h, w, out_mu, out_var);
+        return;
+    }
+    // split both output buffers into per-plane-range disjoint chunks
+    let ranges = split_ranges(planes, threads);
+    let plane_out = oh * ow;
+    let mut mu_rest: &mut [f32] = out_mu;
+    let mut var_rest: &mut [f32] = out_var;
+    let mut chunks = Vec::new();
+    for r in ranges {
+        let take = (r.end - r.start) * plane_out;
+        let (mh, mt) = mu_rest.split_at_mut(take);
+        let (vh, vt) = var_rest.split_at_mut(take);
+        chunks.push((r, mh, vh));
+        mu_rest = mt;
+        var_rest = vt;
+    }
+    pool.scope(|sc| {
+        for (r, mu_chunk, var_chunk) in chunks {
+            sc.spawn(move || {
+                for (local, plane) in r.enumerate() {
+                    pool2_plane(
+                        mu,
+                        var,
+                        plane * h * w,
+                        h,
+                        w,
+                        mu_chunk,
+                        var_chunk,
+                        local * plane_out,
+                    );
+                }
+            });
+        }
+    });
+}
+
+/// Serial plane walk shared by both vectorized-pool entry points: both
+/// source rows two elements at a time — contiguous, fixed-pattern loads
+/// the compiler can keep in registers.
+#[allow(clippy::too_many_arguments)]
+fn pool2_serial(
+    mu: &[f32],
+    var: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    out_mu: &mut [f32],
+    out_var: &mut [f32],
+) {
+    let (oh, ow) = (h / 2, w / 2);
+    for plane in 0..n * c {
+        pool2_plane(mu, var, plane * h * w, h, w, out_mu, out_var, plane * oh * ow);
+    }
 }
 
 /// Vectorized fixed-k=2/stride-2 PFP max-pool: balanced tree
@@ -97,24 +206,18 @@ pub fn pfp_maxpool2_vectorized(input: &ProbTensor) -> ProbTensor {
     let s = input.mu.shape();
     let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
     let (oh, ow) = (h / 2, w / 2);
-    let mu = input.mu.data();
-    let var = input.aux.data();
     let mut out_mu = vec![0.0f32; n * c * oh * ow];
     let mut out_var = vec![0.0f32; n * c * oh * ow];
-    // walk both source rows two elements at a time — contiguous,
-    // fixed-pattern loads the compiler can keep in registers.
-    for plane in 0..n * c {
-        pool2_plane(
-            mu,
-            var,
-            plane * h * w,
-            h,
-            w,
-            &mut out_mu,
-            &mut out_var,
-            plane * oh * ow,
-        );
-    }
+    pool2_serial(
+        input.mu.data(),
+        input.aux.data(),
+        n,
+        c,
+        h,
+        w,
+        &mut out_mu,
+        &mut out_var,
+    );
     ProbTensor::new(
         Tensor::new(vec![n, c, oh, ow], out_mu).unwrap(),
         Tensor::new(vec![n, c, oh, ow], out_var).unwrap(),
@@ -165,46 +268,20 @@ pub fn pfp_maxpool2_vectorized_in(
     let s = input.mu.shape();
     let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
     let (oh, ow) = (h / 2, w / 2);
-    let planes = n * c;
-    if threads <= 1 || planes <= 1 {
-        return pfp_maxpool2_vectorized(input);
-    }
-    let mu = input.mu.data();
-    let var = input.aux.data();
-    let mut out_mu = vec![0.0f32; planes * oh * ow];
-    let mut out_var = vec![0.0f32; planes * oh * ow];
-    // split both output buffers into per-plane-range disjoint chunks
-    let ranges = split_ranges(planes, threads);
-    let plane_out = oh * ow;
-    let mut mu_rest: &mut [f32] = &mut out_mu;
-    let mut var_rest: &mut [f32] = &mut out_var;
-    let mut chunks = Vec::new();
-    for r in ranges {
-        let take = (r.end - r.start) * plane_out;
-        let (mh, mt) = mu_rest.split_at_mut(take);
-        let (vh, vt) = var_rest.split_at_mut(take);
-        chunks.push((r, mh, vh));
-        mu_rest = mt;
-        var_rest = vt;
-    }
-    pool.scope(|sc| {
-        for (r, mu_chunk, var_chunk) in chunks {
-            sc.spawn(move || {
-                for (local, plane) in r.enumerate() {
-                    pool2_plane(
-                        mu,
-                        var,
-                        plane * h * w,
-                        h,
-                        w,
-                        mu_chunk,
-                        var_chunk,
-                        local * plane_out,
-                    );
-                }
-            });
-        }
-    });
+    let mut out_mu = vec![0.0f32; n * c * oh * ow];
+    let mut out_var = vec![0.0f32; n * c * oh * ow];
+    pfp_maxpool2_vectorized_into(
+        pool,
+        input.mu.data(),
+        input.aux.data(),
+        n,
+        c,
+        h,
+        w,
+        threads,
+        &mut out_mu,
+        &mut out_var,
+    );
     ProbTensor::new(
         Tensor::new(vec![n, c, oh, ow], out_mu).unwrap(),
         Tensor::new(vec![n, c, oh, ow], out_var).unwrap(),
@@ -212,13 +289,11 @@ pub fn pfp_maxpool2_vectorized_in(
     )
 }
 
-/// Deterministic max-pool (k=2, stride 2) for the baselines.
-pub fn det_maxpool2(x: &Tensor) -> Tensor {
-    let s = x.shape();
-    let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+/// Slice-level deterministic max-pool (k=2, stride 2).
+pub fn det_maxpool2_into(d: &[f32], n: usize, c: usize, h: usize, w: usize, out: &mut [f32]) {
     let (oh, ow) = (h / 2, w / 2);
-    let d = x.data();
-    let mut out = vec![0.0f32; n * c * oh * ow];
+    debug_assert_eq!(d.len(), n * c * h * w);
+    debug_assert_eq!(out.len(), n * c * oh * ow);
     for plane in 0..n * c {
         let base = plane * h * w;
         let obase = plane * oh * ow;
@@ -232,6 +307,15 @@ pub fn det_maxpool2(x: &Tensor) -> Tensor {
             }
         }
     }
+}
+
+/// Deterministic max-pool (k=2, stride 2) for the baselines.
+pub fn det_maxpool2(x: &Tensor) -> Tensor {
+    let s = x.shape();
+    let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![0.0f32; n * c * oh * ow];
+    det_maxpool2_into(x.data(), n, c, h, w, &mut out);
     Tensor::new(vec![n, c, oh, ow], out).unwrap()
 }
 

@@ -34,15 +34,21 @@ pub fn pfp_relu(input: ProbTensor, threads: usize) -> ProbTensor {
     pfp_relu_in(threadpool::global(), input, threads)
 }
 
-/// [`pfp_relu`] on an explicit pool.
-pub fn pfp_relu_in(pool: &ThreadPool, input: ProbTensor, threads: usize) -> ProbTensor {
-    debug_assert_eq!(input.rep, Rep::Var);
-    let shape = input.mu.shape().to_vec();
-    let mu_in = input.mu.into_data();
-    let var_in = input.aux.into_data();
+/// Slice-level moment-matched ReLU: reads (mean, variance), writes
+/// (mean, E\[x^2\]) into caller-provided buffers. Allocation-free when
+/// `threads <= 1` (the compiled plan's steady-state path).
+pub fn pfp_relu_into(
+    pool: &ThreadPool,
+    mu_in: &[f32],
+    var_in: &[f32],
+    threads: usize,
+    mu_out: &mut [f32],
+    e2_out: &mut [f32],
+) {
     let n = mu_in.len();
-    let mut mu_out = vec![0.0f32; n];
-    let mut e2_out = vec![0.0f32; n];
+    debug_assert_eq!(var_in.len(), n);
+    debug_assert_eq!(mu_out.len(), n);
+    debug_assert_eq!(e2_out.len(), n);
 
     if threads <= 1 {
         for i in 0..n {
@@ -53,8 +59,8 @@ pub fn pfp_relu_in(pool: &ThreadPool, input: ProbTensor, threads: usize) -> Prob
     } else {
         // split both output buffers into matching disjoint chunks
         let ranges = crate::util::threadpool::split_ranges(n, threads);
-        let mut mu_rest: &mut [f32] = &mut mu_out;
-        let mut e2_rest: &mut [f32] = &mut e2_out;
+        let mut mu_rest: &mut [f32] = mu_out;
+        let mut e2_rest: &mut [f32] = e2_out;
         let mut chunks = Vec::new();
         for r in ranges {
             let take = r.end - r.start;
@@ -66,8 +72,6 @@ pub fn pfp_relu_in(pool: &ThreadPool, input: ProbTensor, threads: usize) -> Prob
         }
         pool.scope(|s| {
             for (r, mc, ec) in chunks {
-                let mu_in = &mu_in;
-                let var_in = &var_in;
                 s.spawn(move || {
                     for (j, i) in r.enumerate() {
                         let (m, e2) = relu_moments(mu_in[i], var_in[i]);
@@ -78,7 +82,18 @@ pub fn pfp_relu_in(pool: &ThreadPool, input: ProbTensor, threads: usize) -> Prob
             }
         });
     }
+}
 
+/// [`pfp_relu`] on an explicit pool.
+pub fn pfp_relu_in(pool: &ThreadPool, input: ProbTensor, threads: usize) -> ProbTensor {
+    debug_assert_eq!(input.rep, Rep::Var);
+    let shape = input.mu.shape().to_vec();
+    let mu_in = input.mu.into_data();
+    let var_in = input.aux.into_data();
+    let n = mu_in.len();
+    let mut mu_out = vec![0.0f32; n];
+    let mut e2_out = vec![0.0f32; n];
+    pfp_relu_into(pool, &mu_in, &var_in, threads, &mut mu_out, &mut e2_out);
     ProbTensor::new(
         Tensor::new(shape.clone(), mu_out).unwrap(),
         Tensor::new(shape, e2_out).unwrap(),

@@ -1,0 +1,808 @@
+//! Static lowering: compile `Arch + PosteriorWeights + Schedules` into an
+//! executable plan for one fixed batch size — the paper's
+//! compile-then-execute architecture (TVM lowers the whole graph once,
+//! schedules bound per operator workload and per mini-batch size; the
+//! runtime just executes).
+//!
+//! A [`CompiledPlan`] is a flat sequence of pre-bound [`Step`]s with
+//!
+//! * all shapes and representation conversions resolved at plan time —
+//!   conversions become explicit steps inserted exactly where the layer
+//!   representation contracts disagree (labelled `Convert@<layer>` so the
+//!   profiler attributes the paper's "tooling" overhead to the layer it
+//!   feeds), the first-layer `squared()` is folded into the Eq. 13 kernel
+//!   (whose activation-aux operand is ignored), and `Flatten` vanishes
+//!   entirely (it is a shape-only relabeling of contiguous memory);
+//! * a [`Workspace`] arena sized at plan time: two ping-pong (mean, aux)
+//!   buffers at the network's high-water mark plus im2col scratch, so
+//!   steady-state [`CompiledPlan::execute`] performs **zero** heap
+//!   allocation (serial, untiled-`Mnk` schedules; see `Workspace` docs);
+//! * one schedule bound per *compute step* from the per-layer schedule
+//!   table ([`Schedules::per_layer`]), realizing the paper's
+//!   per-operator-workload tuning: the MLP's 784→100 and 100→10 layers
+//!   can carry different tiles/unrolls.
+//!
+//! `PfpExecutor` / `DetExecutor` build-and-cache plans keyed by batch
+//! size, and the serving `NativePfpBackend` maps every dynamic-batcher
+//! bucket size to its own cached plan — the paper's per-mini-batch-size
+//! compiled executables, end to end.
+
+pub mod workspace;
+
+pub use workspace::Workspace;
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::model::{Arch, LayerSpec, PosteriorWeights, Schedules};
+use crate::ops::conv::{conv_kernel_into, ConvShape};
+use crate::ops::dense::{dense_kernel_into, DenseSlices, FirstLayer, JointEq12, MeanOnly};
+use crate::ops::maxpool::{
+    det_maxpool2_into, pfp_maxpool2_vectorized_into, pfp_maxpool_generic_into,
+};
+use crate::ops::relu::pfp_relu_into;
+use crate::ops::Schedule;
+use crate::profiling::Profiler;
+use crate::tensor::{convert_in_place, Rep};
+use crate::util::threadpool::ThreadPool;
+
+use self::workspace::BufPair;
+
+/// What the plan computes: the probabilistic forward pass (mean +
+/// variance moments) or the deterministic baseline (means only; the aux
+/// half of the output is unspecified).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanMode {
+    Pfp,
+    Det,
+}
+
+/// One pre-bound executable step.
+#[derive(Clone, Debug)]
+struct Step {
+    kind: StepKind,
+    /// Schedule bound at plan time (compute steps only).
+    sched: Schedule,
+    /// Profiler label: the layer's Table-4 name, or `Convert@<layer>`.
+    label: String,
+    op_type: &'static str,
+    in_len: usize,
+    out_len: usize,
+}
+
+#[derive(Clone, Debug)]
+enum StepKind {
+    /// Scheduled dense kernel. `first` = PFP Eq. 13 (deterministic
+    /// input); in det mode the mean-only accumulator runs regardless.
+    Dense { w: usize, first: bool, m: usize, k: usize, n: usize },
+    /// Scheduled conv kernel via im2col into workspace scratch.
+    Conv { w: usize, first: bool, shape: ConvShape },
+    /// Moment-matched ReLU (consumes variance, produces E[x^2]).
+    Relu { threads: usize },
+    /// Deterministic ReLU, in place on the mean buffer.
+    ReluDet,
+    /// Gaussian max-pool k=2/stride-2 (variance to variance).
+    MaxPool { vectorized: bool, threads: usize, n: usize, c: usize, h: usize, w: usize },
+    /// Deterministic max-pool (means only).
+    MaxPoolDet { n: usize, c: usize, h: usize, w: usize },
+    /// Explicit representation conversion, in place on the aux buffer.
+    Convert { from: Rep, to: Rep },
+}
+
+/// The dense-kernel workload behind one compute step (conv reports its
+/// im2col'd dims) — what the tuner measures to fill the per-layer
+/// schedule table with each layer's *actual* shape.
+#[derive(Clone, Debug)]
+pub struct DenseWorkload {
+    /// Index into `PosteriorWeights::layers` / `Schedules::per_layer`.
+    pub compute_idx: usize,
+    /// Records op key: `"dense"` or `"conv"`.
+    pub op: &'static str,
+    /// Table-4 layer label (e.g. `"Dense 2"`).
+    pub label: String,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+/// A network lowered to a flat step sequence for one batch size.
+pub struct CompiledPlan {
+    pub arch_name: String,
+    pub mode: PlanMode,
+    pub batch: usize,
+    steps: Vec<Step>,
+    weights: Arc<PosteriorWeights>,
+    pool: Arc<ThreadPool>,
+    /// Expected input floats: `batch * input_len`.
+    in_len: usize,
+    /// Output classes (columns of the `[batch, classes]` result).
+    classes: usize,
+    /// Final output floats: `batch * classes`.
+    out_len: usize,
+    /// Ping-pong buffer high-water mark (floats per moment buffer).
+    hwm: usize,
+    /// Conv im2col scratch requirement (floats).
+    scratch_len: usize,
+}
+
+impl CompiledPlan {
+    /// Lower the network for a fixed `batch`. Shapes, conversions, and
+    /// per-layer schedules are resolved here, once; `execute` never
+    /// inspects the architecture again.
+    pub fn compile(
+        arch: &Arch,
+        weights: Arc<PosteriorWeights>,
+        schedules: &Schedules,
+        batch: usize,
+        mode: PlanMode,
+    ) -> Result<Self> {
+        if batch == 0 {
+            return Err(Error::Shape("plan batch must be > 0".into()));
+        }
+        if arch.compute_layers().len() != weights.layers.len() {
+            return Err(Error::Shape(format!(
+                "arch {} has {} compute layers, weights have {}",
+                arch.name,
+                arch.compute_layers().len(),
+                weights.layers.len()
+            )));
+        }
+        let labels = arch.layer_labels();
+        let mut steps: Vec<Step> = Vec::new();
+        // per-batch-element shape and representation of the current state
+        let mut shape: Vec<usize> = arch.input_shape.clone();
+        let mut rep: Option<Rep> = None;
+        let mut compute_idx = 0usize;
+        let mut cur_len = batch * arch.input_len();
+        let mut hwm = 0usize;
+        let mut scratch_len = 0usize;
+        let pfp = mode == PlanMode::Pfp;
+
+        for (li, layer) in arch.layers.iter().enumerate() {
+            match layer {
+                LayerSpec::Dense { d_in, d_out } => {
+                    let k: usize = shape.iter().product();
+                    if k != *d_in {
+                        return Err(Error::Shape(format!(
+                            "{}: expects {} input features, graph carries {}",
+                            labels[li], d_in, k
+                        )));
+                    }
+                    let lw = &weights.layers[compute_idx];
+                    if lw.w_mu.shape() != [*d_out, *d_in] {
+                        return Err(Error::Shape(format!(
+                            "{}: weight shape {:?} != [{}, {}]",
+                            labels[li],
+                            lw.w_mu.shape(),
+                            d_out,
+                            d_in
+                        )));
+                    }
+                    let first = rep.is_none();
+                    if pfp && !first && rep != Some(Rep::E2) {
+                        steps.push(convert_step(rep.unwrap(), Rep::E2, cur_len, &labels[li]));
+                        rep = Some(Rep::E2);
+                    }
+                    let out_len = batch * d_out;
+                    steps.push(Step {
+                        kind: StepKind::Dense {
+                            w: compute_idx,
+                            first: pfp && first,
+                            m: batch,
+                            k,
+                            n: *d_out,
+                        },
+                        sched: schedules.layer_schedule(compute_idx, layer),
+                        label: labels[li].clone(),
+                        op_type: "dense",
+                        in_len: cur_len,
+                        out_len,
+                    });
+                    shape = vec![*d_out];
+                    rep = Some(Rep::Var);
+                    cur_len = out_len;
+                    compute_idx += 1;
+                }
+                LayerSpec::Conv { in_ch, out_ch, k } => {
+                    if shape.len() != 3 || shape[0] != *in_ch {
+                        return Err(Error::Shape(format!(
+                            "{}: expects [{}; H; W] input, graph carries {:?}",
+                            labels[li], in_ch, shape
+                        )));
+                    }
+                    let (h, w) = (shape[1], shape[2]);
+                    if h < *k || w < *k {
+                        return Err(Error::Shape(format!(
+                            "{}: {}x{} kernel over {}x{} input",
+                            labels[li], k, k, h, w
+                        )));
+                    }
+                    let lw = &weights.layers[compute_idx];
+                    if lw.w_mu.shape() != [*out_ch, *in_ch, *k, *k] {
+                        return Err(Error::Shape(format!(
+                            "{}: weight shape {:?} != [{}, {}, {}, {}]",
+                            labels[li],
+                            lw.w_mu.shape(),
+                            out_ch,
+                            in_ch,
+                            k,
+                            k
+                        )));
+                    }
+                    let first = rep.is_none();
+                    if pfp && !first && rep != Some(Rep::E2) {
+                        steps.push(convert_step(rep.unwrap(), Rep::E2, cur_len, &labels[li]));
+                        rep = Some(Rep::E2);
+                    }
+                    let cs = ConvShape {
+                        n: batch,
+                        c: *in_ch,
+                        h,
+                        w,
+                        o: *out_ch,
+                        kh: *k,
+                        kw: *k,
+                    };
+                    // Eq. 13 (and det mean-only) aliases its ignored aux
+                    // patches onto the mean patches: one im2col, not two.
+                    let shared_aux = !pfp || first;
+                    scratch_len = scratch_len.max(cs.scratch_len(shared_aux));
+                    let out_len = cs.out_len();
+                    steps.push(Step {
+                        kind: StepKind::Conv {
+                            w: compute_idx,
+                            first: pfp && first,
+                            shape: cs,
+                        },
+                        sched: schedules.layer_schedule(compute_idx, layer),
+                        label: labels[li].clone(),
+                        op_type: "conv2d",
+                        in_len: cur_len,
+                        out_len,
+                    });
+                    shape = vec![*out_ch, cs.oh(), cs.ow()];
+                    rep = Some(Rep::Var);
+                    cur_len = out_len;
+                    compute_idx += 1;
+                }
+                LayerSpec::Relu => {
+                    if rep.is_none() {
+                        return Err(Error::Shape(format!(
+                            "{}: activation before first compute layer",
+                            labels[li]
+                        )));
+                    }
+                    if pfp {
+                        if rep != Some(Rep::Var) {
+                            steps.push(convert_step(
+                                rep.unwrap(),
+                                Rep::Var,
+                                cur_len,
+                                &labels[li],
+                            ));
+                        }
+                        steps.push(Step {
+                            kind: StepKind::Relu { threads: schedules.relu_threads },
+                            sched: Schedule::baseline(),
+                            label: labels[li].clone(),
+                            op_type: "relu",
+                            in_len: cur_len,
+                            out_len: cur_len,
+                        });
+                        rep = Some(Rep::E2);
+                    } else {
+                        steps.push(Step {
+                            kind: StepKind::ReluDet,
+                            sched: Schedule::baseline(),
+                            label: labels[li].clone(),
+                            op_type: "relu",
+                            in_len: cur_len,
+                            out_len: cur_len,
+                        });
+                    }
+                }
+                LayerSpec::MaxPool2 => {
+                    if rep.is_none() || shape.len() != 3 {
+                        return Err(Error::Shape(format!(
+                            "{}: pool needs a [C; H; W] state, got {:?}",
+                            labels[li], shape
+                        )));
+                    }
+                    let (c, h, w) = (shape[0], shape[1], shape[2]);
+                    let out_len = batch * c * (h / 2) * (w / 2);
+                    if pfp {
+                        if rep != Some(Rep::Var) {
+                            steps.push(convert_step(
+                                rep.unwrap(),
+                                Rep::Var,
+                                cur_len,
+                                &labels[li],
+                            ));
+                        }
+                        steps.push(Step {
+                            kind: StepKind::MaxPool {
+                                vectorized: schedules.vectorized_pool,
+                                threads: schedules.maxpool_threads,
+                                n: batch,
+                                c,
+                                h,
+                                w,
+                            },
+                            sched: Schedule::baseline(),
+                            label: labels[li].clone(),
+                            op_type: "maxpool",
+                            in_len: cur_len,
+                            out_len,
+                        });
+                        rep = Some(Rep::Var);
+                    } else {
+                        steps.push(Step {
+                            kind: StepKind::MaxPoolDet { n: batch, c, h, w },
+                            sched: Schedule::baseline(),
+                            label: labels[li].clone(),
+                            op_type: "maxpool",
+                            in_len: cur_len,
+                            out_len,
+                        });
+                    }
+                    shape = vec![c, h / 2, w / 2];
+                    cur_len = out_len;
+                }
+                // Shape-only relabeling of contiguous row-major memory:
+                // no step is emitted, the runtime never sees it.
+                LayerSpec::Flatten => {
+                    shape = vec![shape.iter().product()];
+                }
+            }
+            hwm = hwm.max(cur_len);
+        }
+
+        if rep.is_none() {
+            return Err(Error::Shape(format!(
+                "arch {} has no compute layers",
+                arch.name
+            )));
+        }
+        // the executor contract returns (mean, variance) moments
+        if pfp && rep != Some(Rep::Var) {
+            steps.push(convert_step(rep.unwrap(), Rep::Var, cur_len, "output"));
+        }
+
+        let classes: usize = shape.iter().product();
+        Ok(Self {
+            arch_name: arch.name.clone(),
+            mode,
+            batch,
+            steps,
+            weights,
+            pool: Arc::clone(&schedules.pool),
+            in_len: batch * arch.input_len(),
+            classes,
+            out_len: cur_len,
+            hwm,
+            scratch_len,
+        })
+    }
+
+    /// A workspace sized exactly for this plan.
+    pub fn workspace(&self) -> Workspace {
+        Workspace::with_capacity(self.hwm, self.scratch_len)
+    }
+
+    /// Output geometry: `[batch, classes]`.
+    pub fn out_shape(&self) -> (usize, usize) {
+        (self.batch, self.classes)
+    }
+
+    /// Number of lowered steps (compute + activation + pool + explicit
+    /// conversions).
+    pub fn num_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// (label, op_type) per step, in execution order — the resolved
+    /// program, conversions included.
+    pub fn step_labels(&self) -> Vec<(String, &'static str)> {
+        self.steps.iter().map(|s| (s.label.clone(), s.op_type)).collect()
+    }
+
+    /// The dense-kernel workload of every compute step (conv steps report
+    /// their im2col'd dims) — the tuner's per-layer search targets.
+    pub fn dense_workloads(&self) -> Vec<DenseWorkload> {
+        self.steps
+            .iter()
+            .filter_map(|s| match &s.kind {
+                StepKind::Dense { w, m, k, n, .. } => Some(DenseWorkload {
+                    compute_idx: *w,
+                    op: "dense",
+                    label: s.label.clone(),
+                    m: *m,
+                    k: *k,
+                    n: *n,
+                }),
+                StepKind::Conv { w, shape, .. } => Some(DenseWorkload {
+                    compute_idx: *w,
+                    op: "conv",
+                    label: s.label.clone(),
+                    m: shape.rows(),
+                    k: shape.kk(),
+                    n: shape.o,
+                }),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Run the plan on `x` (`batch * input_len` floats, row-major, any
+    /// input rank — shapes were resolved at compile time). Returns the
+    /// output moment slices `[batch, classes]` borrowed from the
+    /// workspace: mean and variance in PFP mode; in det mode the second
+    /// slice is unspecified. Allocation-free at steady state; `profiler`
+    /// (when enabled) attributes every step, conversions under their
+    /// `Convert@<layer>` label.
+    pub fn execute<'w>(
+        &self,
+        x: &[f32],
+        ws: &'w mut Workspace,
+        profiler: &mut Profiler,
+    ) -> (&'w [f32], &'w [f32]) {
+        assert_eq!(
+            x.len(),
+            self.in_len,
+            "plan {} b{} expects {} input floats",
+            self.arch_name,
+            self.batch,
+            self.in_len
+        );
+        ws.ensure(self.hwm, self.scratch_len);
+        let Workspace { a, b, scratch } = ws;
+        let pool = &self.pool;
+        // Ping-pong state: until the first compute step the state is the
+        // caller's `x`; afterwards it lives in buffer A or B.
+        let mut cur_a = false;
+        let mut first_done = false;
+
+        for step in &self.steps {
+            match &step.kind {
+                StepKind::Convert { from, to } => {
+                    let cur = if cur_a { &mut *a } else { &mut *b };
+                    let mu = &cur.mu[..step.in_len];
+                    let aux = &mut cur.aux[..step.in_len];
+                    profiler.record(&step.label, step.op_type, || {
+                        convert_in_place(mu, aux, *from, *to)
+                    });
+                }
+                StepKind::ReluDet => {
+                    let cur = if cur_a { &mut *a } else { &mut *b };
+                    let mu = &mut cur.mu[..step.in_len];
+                    profiler.record(&step.label, step.op_type, || {
+                        for v in mu.iter_mut() {
+                            *v = v.max(0.0);
+                        }
+                    });
+                }
+                StepKind::Dense { w, first, m, k, n } => {
+                    let lw = &self.weights.layers[*w];
+                    let dst_is_a = !first_done || !cur_a;
+                    let (dst, src) = if dst_is_a { (&mut *a, &*b) } else { (&mut *b, &*a) };
+                    let (x_mu, x_aux): (&[f32], &[f32]) = if first_done {
+                        (&src.mu[..step.in_len], &src.aux[..step.in_len])
+                    } else {
+                        // Eq. 13 / mean-only ignore the activation aux:
+                        // the folded-away squared() pass
+                        (x, x)
+                    };
+                    let (w_aux, b_var): (&[f32], Option<&[f32]>) = match (self.mode, *first) {
+                        (PlanMode::Det, _) => (lw.w_mu.data(), None),
+                        (PlanMode::Pfp, true) => (lw.w_var.data(), Some(lw.b_var.data())),
+                        (PlanMode::Pfp, false) => (lw.w_e2.data(), Some(lw.b_var.data())),
+                    };
+                    let args = DenseSlices {
+                        m: *m,
+                        k: *k,
+                        n: *n,
+                        x_mu,
+                        x_aux,
+                        w_mu: lw.w_mu.data(),
+                        w_aux,
+                        b_mu: Some(lw.b_mu.data()),
+                        b_var,
+                    };
+                    let out_mu = &mut dst.mu[..step.out_len];
+                    let out_var = &mut dst.aux[..step.out_len];
+                    profiler.record(&step.label, step.op_type, || match (self.mode, *first) {
+                        (PlanMode::Det, _) => dense_kernel_into::<MeanOnly>(
+                            pool, &args, &step.sched, out_mu, out_var,
+                        ),
+                        (PlanMode::Pfp, true) => dense_kernel_into::<FirstLayer>(
+                            pool, &args, &step.sched, out_mu, out_var,
+                        ),
+                        (PlanMode::Pfp, false) => dense_kernel_into::<JointEq12>(
+                            pool, &args, &step.sched, out_mu, out_var,
+                        ),
+                    });
+                    cur_a = dst_is_a;
+                    first_done = true;
+                }
+                StepKind::Conv { w, first, shape } => {
+                    let lw = &self.weights.layers[*w];
+                    let dst_is_a = !first_done || !cur_a;
+                    let (dst, src) = if dst_is_a { (&mut *a, &*b) } else { (&mut *b, &*a) };
+                    let x_mu: &[f32] = if first_done { &src.mu[..step.in_len] } else { x };
+                    // None = ignored-aux formulations (Eq. 13 / mean-only):
+                    // the kernel aliases the mean patches instead
+                    let x_aux: Option<&[f32]> = if self.mode == PlanMode::Det || *first {
+                        None
+                    } else {
+                        Some(&src.aux[..step.in_len])
+                    };
+                    let (w_aux, b_var): (&[f32], Option<&[f32]>) = match (self.mode, *first) {
+                        (PlanMode::Det, _) => (lw.w_mu.data(), None),
+                        (PlanMode::Pfp, true) => (lw.w_var.data(), Some(lw.b_var.data())),
+                        (PlanMode::Pfp, false) => (lw.w_e2.data(), Some(lw.b_var.data())),
+                    };
+                    let out_mu = &mut dst.mu[..step.out_len];
+                    let out_var = &mut dst.aux[..step.out_len];
+                    let scratch = &mut scratch[..];
+                    profiler.record(&step.label, step.op_type, || match (self.mode, *first) {
+                        (PlanMode::Det, _) => conv_kernel_into::<MeanOnly>(
+                            pool,
+                            shape,
+                            x_mu,
+                            x_aux,
+                            lw.w_mu.data(),
+                            w_aux,
+                            Some(lw.b_mu.data()),
+                            b_var,
+                            &step.sched,
+                            scratch,
+                            out_mu,
+                            out_var,
+                        ),
+                        (PlanMode::Pfp, true) => conv_kernel_into::<FirstLayer>(
+                            pool,
+                            shape,
+                            x_mu,
+                            x_aux,
+                            lw.w_mu.data(),
+                            w_aux,
+                            Some(lw.b_mu.data()),
+                            b_var,
+                            &step.sched,
+                            scratch,
+                            out_mu,
+                            out_var,
+                        ),
+                        (PlanMode::Pfp, false) => conv_kernel_into::<JointEq12>(
+                            pool,
+                            shape,
+                            x_mu,
+                            x_aux,
+                            lw.w_mu.data(),
+                            w_aux,
+                            Some(lw.b_mu.data()),
+                            b_var,
+                            &step.sched,
+                            scratch,
+                            out_mu,
+                            out_var,
+                        ),
+                    });
+                    cur_a = dst_is_a;
+                    first_done = true;
+                }
+                StepKind::Relu { threads } => {
+                    let (dst, src) = if cur_a { (&mut *b, &*a) } else { (&mut *a, &*b) };
+                    let mu_in = &src.mu[..step.in_len];
+                    let var_in = &src.aux[..step.in_len];
+                    let mu_out = &mut dst.mu[..step.out_len];
+                    let e2_out = &mut dst.aux[..step.out_len];
+                    profiler.record(&step.label, step.op_type, || {
+                        pfp_relu_into(pool, mu_in, var_in, *threads, mu_out, e2_out)
+                    });
+                    cur_a = !cur_a;
+                }
+                StepKind::MaxPool { vectorized, threads, n, c, h, w } => {
+                    let (dst, src) = if cur_a { (&mut *b, &*a) } else { (&mut *a, &*b) };
+                    let mu_in = &src.mu[..step.in_len];
+                    let var_in = &src.aux[..step.in_len];
+                    let mu_out = &mut dst.mu[..step.out_len];
+                    let var_out = &mut dst.aux[..step.out_len];
+                    profiler.record(&step.label, step.op_type, || {
+                        if *vectorized {
+                            pfp_maxpool2_vectorized_into(
+                                pool, mu_in, var_in, *n, *c, *h, *w, *threads, mu_out,
+                                var_out,
+                            )
+                        } else {
+                            pfp_maxpool_generic_into(
+                                mu_in, var_in, *n, *c, *h, *w, 2, 2, mu_out, var_out,
+                            )
+                        }
+                    });
+                    cur_a = !cur_a;
+                }
+                StepKind::MaxPoolDet { n, c, h, w } => {
+                    let (dst, src) = if cur_a { (&mut *b, &*a) } else { (&mut *a, &*b) };
+                    let mu_in = &src.mu[..step.in_len];
+                    let mu_out = &mut dst.mu[..step.out_len];
+                    profiler.record(&step.label, step.op_type, || {
+                        det_maxpool2_into(mu_in, *n, *c, *h, *w, mu_out)
+                    });
+                    cur_a = !cur_a;
+                }
+            }
+        }
+
+        let out: &BufPair = if cur_a { a } else { b };
+        (&out.mu[..self.out_len], &out.aux[..self.out_len])
+    }
+}
+
+fn convert_step(from: Rep, to: Rep, len: usize, at: &str) -> Step {
+    Step {
+        kind: StepKind::Convert { from, to },
+        sched: Schedule::baseline(),
+        label: format!("Convert@{at}"),
+        op_type: "convert",
+        in_len: len,
+        out_len: len,
+    }
+}
+
+impl std::fmt::Debug for CompiledPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CompiledPlan")
+            .field("arch", &self.arch_name)
+            .field("mode", &self.mode)
+            .field("batch", &self.batch)
+            .field("steps", &self.steps.len())
+            .field("hwm", &self.hwm)
+            .field("scratch", &self.scratch_len)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Arch;
+    use crate::tensor::Tensor;
+    use crate::util::prop::Gen;
+
+    fn input(arch: &Arch, batch: usize, seed: u64) -> Tensor {
+        let mut g = Gen::new(seed);
+        let n = batch * arch.input_len();
+        Tensor::new(vec![batch, arch.input_len()], (0..n).map(|_| g.f32_in(0.0, 1.0)).collect())
+            .unwrap()
+    }
+
+    fn compile_pfp(arch: &Arch, batch: usize) -> (CompiledPlan, Workspace) {
+        let w = Arc::new(PosteriorWeights::synthetic(arch, 9));
+        let plan =
+            CompiledPlan::compile(arch, w, &Schedules::tuned(1), batch, PlanMode::Pfp).unwrap();
+        let ws = plan.workspace();
+        (plan, ws)
+    }
+
+    #[test]
+    fn mlp_plan_has_no_conversions() {
+        // MLP: dense out (Var) -> relu (wants Var) -> out (E2) -> dense
+        // (wants E2): the representation contracts chain with zero
+        // conversions — the plan must discover that statically.
+        let (plan, _) = compile_pfp(&Arch::mlp(), 4);
+        assert_eq!(plan.num_steps(), 5, "3 dense + 2 relu, no converts");
+        assert!(plan.step_labels().iter().all(|(_, t)| *t != "convert"));
+    }
+
+    #[test]
+    fn lenet_plan_inserts_labelled_conversions() {
+        let (plan, _) = compile_pfp(&Arch::lenet(), 2);
+        let labels = plan.step_labels();
+        let converts: Vec<&str> = labels
+            .iter()
+            .filter(|(_, t)| *t == "convert")
+            .map(|(l, _)| l.as_str())
+            .collect();
+        // relu(E2) -> pool(Var) twice, pool(Var) -> conv2(E2),
+        // pool2(Var) -> dense3(E2)
+        assert_eq!(
+            converts,
+            ["Convert@Max Pool 1", "Convert@Conv2d 2", "Convert@Max Pool 2", "Convert@Dense 1"]
+        );
+        // 5 compute + 4 relu + 2 pool + 4 converts, no flatten step
+        assert_eq!(plan.num_steps(), 15);
+    }
+
+    #[test]
+    fn execute_matches_shapes_and_is_finite() {
+        for arch in [Arch::mlp(), Arch::lenet()] {
+            let (plan, mut ws) = compile_pfp(&arch, 3);
+            assert_eq!(plan.out_shape(), (3, 10));
+            let x = input(&arch, 3, 1);
+            let mut prof = Profiler::new(false);
+            let (mu, var) = plan.execute(x.data(), &mut ws, &mut prof);
+            assert_eq!(mu.len(), 30);
+            assert_eq!(var.len(), 30);
+            assert!(mu.iter().all(|v| v.is_finite()), "{}", arch.name);
+            assert!(var.iter().all(|&v| v >= 0.0), "{}", arch.name);
+        }
+    }
+
+    #[test]
+    fn repeated_execute_is_bit_identical() {
+        // workspace reuse must not leak state between calls
+        let arch = Arch::lenet();
+        let (plan, mut ws) = compile_pfp(&arch, 2);
+        let x = input(&arch, 2, 5);
+        let mut prof = Profiler::new(false);
+        let (mu1, var1) = {
+            let (m, v) = plan.execute(x.data(), &mut ws, &mut prof);
+            (m.to_vec(), v.to_vec())
+        };
+        let (mu2, var2) = plan.execute(x.data(), &mut ws, &mut prof);
+        assert_eq!(mu1.as_slice(), mu2);
+        assert_eq!(var1.as_slice(), var2);
+    }
+
+    #[test]
+    fn workspace_sized_at_high_water_mark() {
+        let (plan, ws) = compile_pfp(&Arch::lenet(), 2);
+        // LeNet b2 high-water mark: conv1 output 2*6*24*24 = 6912 floats
+        assert_eq!(ws.capacity(), 6912);
+        assert!(ws.scratch_capacity() > 0, "conv net needs im2col scratch");
+        // the input is read from the caller's slice, not the workspace:
+        // the MLP's high-water mark is its widest *hidden* layer
+        let (mlp_plan, mlp_ws) = compile_pfp(&Arch::mlp(), 2);
+        assert_eq!(mlp_ws.capacity(), 2 * 100);
+        assert_eq!(mlp_ws.scratch_capacity(), 0, "dense net needs no scratch");
+        assert_eq!(mlp_plan.out_shape(), (2, 10));
+        let _ = plan;
+    }
+
+    #[test]
+    fn det_mode_matches_relu_clamp_semantics() {
+        // det plan output must be finite and reproducible
+        let arch = Arch::mlp();
+        let w = Arc::new(PosteriorWeights::synthetic(&arch, 3));
+        let plan = CompiledPlan::compile(&arch, w, &Schedules::tuned(1), 2, PlanMode::Det)
+            .unwrap();
+        let mut ws = plan.workspace();
+        let x = input(&arch, 2, 2);
+        let mut prof = Profiler::new(false);
+        let (mu, _) = plan.execute(x.data(), &mut ws, &mut prof);
+        assert!(mu.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn dense_workloads_report_actual_shapes() {
+        let (plan, _) = compile_pfp(&Arch::lenet(), 10);
+        let wl = plan.dense_workloads();
+        assert_eq!(wl.len(), 5);
+        // conv1: rows = 10*24*24, k = 1*5*5, n = 6
+        assert_eq!((wl[0].op, wl[0].m, wl[0].k, wl[0].n), ("conv", 5760, 25, 6));
+        // first dense after flatten: 10 x 256 -> 120
+        assert_eq!((wl[2].op, wl[2].m, wl[2].k, wl[2].n), ("dense", 10, 256, 120));
+        assert_eq!(wl[4].n, 10, "classifier head");
+        assert_eq!(wl[1].compute_idx, 1);
+    }
+
+    #[test]
+    fn batch_mismatch_panics() {
+        let (plan, mut ws) = compile_pfp(&Arch::mlp(), 2);
+        let x = input(&Arch::mlp(), 3, 0);
+        let mut prof = Profiler::new(false);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = plan.execute(x.data(), &mut ws, &mut prof);
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn compile_rejects_weight_shape_mismatch() {
+        let arch = Arch::mlp();
+        let w = Arc::new(PosteriorWeights::synthetic(&Arch::lenet(), 1));
+        assert!(CompiledPlan::compile(&arch, w, &Schedules::tuned(1), 1, PlanMode::Pfp)
+            .is_err());
+    }
+}

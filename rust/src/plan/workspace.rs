@@ -1,0 +1,76 @@
+//! Pre-sized execution arena for [`CompiledPlan`](super::CompiledPlan).
+//!
+//! A workspace owns two ping-pong (mean, aux) buffer pairs sized at the
+//! network's high-water mark plus one scratch region for the im2col conv
+//! lowering, all allocated once at plan time. Steady-state
+//! `CompiledPlan::execute` calls write every intermediate activation into
+//! these buffers and perform **zero** heap allocation (with serial,
+//! untiled-`Mnk` schedules — the tuned default; parallel dispatch and the
+//! tiled/`Mkn` loop bodies pay their own small allocations).
+
+/// One (mean, aux) activation buffer of the ping-pong pair.
+#[derive(Debug, Default)]
+pub(crate) struct BufPair {
+    pub mu: Vec<f32>,
+    pub aux: Vec<f32>,
+}
+
+impl BufPair {
+    fn with_len(len: usize) -> Self {
+        Self { mu: vec![0.0; len], aux: vec![0.0; len] }
+    }
+
+    fn ensure(&mut self, len: usize) {
+        if self.mu.len() < len {
+            self.mu.resize(len, 0.0);
+            self.aux.resize(len, 0.0);
+        }
+    }
+}
+
+/// Plan execution arena: ping-pong activation buffers + conv scratch.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    pub(crate) a: BufPair,
+    pub(crate) b: BufPair,
+    pub(crate) scratch: Vec<f32>,
+}
+
+impl Workspace {
+    /// Arena with `hwm` floats per moment buffer and `scratch_len` floats
+    /// of conv scratch.
+    pub fn with_capacity(hwm: usize, scratch_len: usize) -> Self {
+        Self {
+            a: BufPair::with_len(hwm),
+            b: BufPair::with_len(hwm),
+            scratch: vec![0.0; scratch_len],
+        }
+    }
+
+    /// Grow to at least the requested sizes. No-op (and allocation-free)
+    /// when already large enough — the steady-state path.
+    pub(crate) fn ensure(&mut self, hwm: usize, scratch_len: usize) {
+        self.a.ensure(hwm);
+        self.b.ensure(hwm);
+        if self.scratch.len() < scratch_len {
+            self.scratch.resize(scratch_len, 0.0);
+        }
+    }
+
+    /// Per-buffer capacity in floats (the plan's high-water mark once
+    /// sized by [`CompiledPlan::workspace`](super::CompiledPlan::workspace)).
+    pub fn capacity(&self) -> usize {
+        self.a.mu.len()
+    }
+
+    /// Conv im2col scratch capacity in floats.
+    pub fn scratch_capacity(&self) -> usize {
+        self.scratch.len()
+    }
+
+    /// Total owned floats (both ping-pong pairs + scratch) — the plan's
+    /// entire steady-state memory footprint.
+    pub fn total_floats(&self) -> usize {
+        4 * self.a.mu.len() + self.scratch.len()
+    }
+}

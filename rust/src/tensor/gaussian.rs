@@ -11,6 +11,29 @@
 
 use super::Tensor;
 
+/// In-place representation conversion over raw moment slices: rewrites
+/// `aux` from `from` to `to` given the mean values. This is the
+/// allocation-free core the compiled plan's explicit conversion steps run
+/// on; [`ProbTensor::to_rep`] is the tensor-level wrapper.
+pub fn convert_in_place(mu: &[f32], aux: &mut [f32], from: Rep, to: Rep) {
+    debug_assert_eq!(mu.len(), aux.len());
+    match (from, to) {
+        (Rep::Var, Rep::E2) => {
+            // E[x^2] = mu^2 + var
+            for (a, &m) in aux.iter_mut().zip(mu) {
+                *a += m * m;
+            }
+        }
+        (Rep::E2, Rep::Var) => {
+            // var = max(E[x^2] - mu^2, 0)
+            for (a, &m) in aux.iter_mut().zip(mu) {
+                *a = (*a - m * m).max(0.0);
+            }
+        }
+        _ => {}
+    }
+}
+
 /// Which moment the auxiliary tensor holds.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Rep {
@@ -51,21 +74,11 @@ impl ProbTensor {
         if self.rep == rep {
             return (self, false);
         }
-        match (self.rep, rep) {
-            (Rep::Var, Rep::E2) => {
-                // E[x^2] = mu^2 + var
-                for (a, &m) in self.aux.data_mut().iter_mut().zip(self.mu.data()) {
-                    *a += m * m;
-                }
-            }
-            (Rep::E2, Rep::Var) => {
-                // var = max(E[x^2] - mu^2, 0)
-                for (a, &m) in self.aux.data_mut().iter_mut().zip(self.mu.data()) {
-                    *a = (*a - m * m).max(0.0);
-                }
-            }
-            _ => unreachable!(),
-        }
+        let from = self.rep;
+        // the two moment tensors are separate allocations, so the aux
+        // rewrite can borrow mu immutably
+        let Self { mu, aux, .. } = &mut self;
+        convert_in_place(mu.data(), aux.data_mut(), from, rep);
         self.rep = rep;
         (self, true)
     }

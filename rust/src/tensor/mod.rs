@@ -9,7 +9,7 @@
 
 pub mod gaussian;
 
-pub use gaussian::{ProbTensor, Rep};
+pub use gaussian::{convert_in_place, ProbTensor, Rep};
 
 use crate::error::{Error, Result};
 

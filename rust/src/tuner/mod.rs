@@ -16,7 +16,13 @@ pub mod space;
 pub use records::TuningRecords;
 pub use space::SearchSpace;
 
+use std::sync::Arc;
+
+use crate::model::{Arch, PosteriorWeights, Schedules};
+use crate::ops::dense::{pfp_dense_joint, DenseArgs};
 use crate::ops::Schedule;
+use crate::plan::{CompiledPlan, DenseWorkload, PlanMode};
+use crate::tensor::Tensor;
 use crate::util::rng::SplitMix64;
 
 /// One measured trial.
@@ -132,11 +138,71 @@ pub fn tune<F: FnMut(&Schedule)>(
     }
 }
 
+/// One tuned layer: the workload it was measured on plus the search
+/// outcome.
+#[derive(Clone, Debug)]
+pub struct LayerTuneResult {
+    pub workload: DenseWorkload,
+    pub result: TuneResult,
+}
+
+/// Tune every compute layer of `arch` on its **actual** workload shape at
+/// `batch` (conv layers are measured on their im2col'd dense dims, which
+/// is exactly the kernel the plan executes) — the per-operator-workload
+/// search the paper's Meta-Scheduler runs, feeding
+/// [`Schedules::per_layer`] via [`TuningRecords::layer_key`] records.
+///
+/// Measurement uses the production Eq. 12 joint kernel over the given
+/// posterior's real weight tensors (flattened to `[N, K]` — identical
+/// memory layout) and synthetic activations of the layer's true shape.
+pub fn tune_per_layer(
+    arch: &Arch,
+    weights: &PosteriorWeights,
+    batch: usize,
+    opts: TuneOpts,
+    space: &SearchSpace,
+) -> Vec<LayerTuneResult> {
+    // a throwaway plan lowering resolves every layer's concrete dims
+    let plan = CompiledPlan::compile(
+        arch,
+        Arc::new(weights.clone()),
+        &Schedules::baseline(),
+        batch,
+        PlanMode::Pfp,
+    )
+    .expect("plan lowering failed");
+    let mut rng = SplitMix64::new(opts.seed ^ 0xA11C);
+    plan.dense_workloads()
+        .into_iter()
+        .map(|wl| {
+            let lw = &weights.layers[wl.compute_idx];
+            let w_mu = Tensor::new(vec![wl.n, wl.k], lw.w_mu.data().to_vec()).unwrap();
+            let w_e2 = Tensor::new(vec![wl.n, wl.k], lw.w_e2.data().to_vec()).unwrap();
+            let mut x = vec![0.0f32; wl.m * wl.k];
+            rng.fill_normal(&mut x, 0.5, 0.25);
+            let x_mu = Tensor::new(vec![wl.m, wl.k], x).unwrap();
+            let x_e2 = x_mu.squared();
+            let result = tune(space, opts, |s| {
+                let _ = pfp_dense_joint(
+                    &DenseArgs {
+                        x_mu: &x_mu,
+                        x_aux: &x_e2,
+                        w_mu: &w_mu,
+                        w_aux: &w_e2,
+                        b_mu: Some(lw.b_mu.data()),
+                        b_var: Some(lw.b_var.data()),
+                    },
+                    s,
+                );
+            });
+            LayerTuneResult { workload: wl, result }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ops::dense::{pfp_dense_joint, DenseArgs};
-    use crate::tensor::Tensor;
     use crate::util::prop::Gen;
 
     #[test]
@@ -161,5 +227,25 @@ mod tests {
         assert!(res.best_ms <= res.baseline_ms * 1.2);
         assert!(res.trials.len() >= 7);
         assert!(res.speedup() > 0.0);
+    }
+
+    #[test]
+    fn per_layer_tuning_measures_actual_shapes() {
+        let arch = Arch::mlp();
+        let w = PosteriorWeights::synthetic(&arch, 2);
+        let space = SearchSpace::dense_default(1);
+        let opts = TuneOpts {
+            random_trials: 2,
+            generations: 0,
+            population: 2,
+            reps: 1,
+            seed: 3,
+        };
+        let res = tune_per_layer(&arch, &w, 4, opts, &space);
+        assert_eq!(res.len(), 3, "one search per compute layer");
+        // each layer searched on its own (m, k, n), not one class shape
+        assert_eq!((res[0].workload.m, res[0].workload.k, res[0].workload.n), (4, 784, 100));
+        assert_eq!((res[2].workload.k, res[2].workload.n), (100, 10));
+        assert!(res.iter().all(|r| r.result.best_ms > 0.0));
     }
 }

@@ -20,6 +20,14 @@ impl TuningRecords {
         format!("{op}/{arch}/b{batch}")
     }
 
+    /// Key for one compute layer's workload (the per-layer schedule
+    /// table): `dense/mlp/L2/b10`. Layer keys never collide with class
+    /// keys — [`lookup`](Self::lookup)'s `b`-prefix parse rejects the
+    /// `L<i>/` segment.
+    pub fn layer_key(op: &str, arch: &str, layer: usize, batch: usize) -> String {
+        format!("{op}/{arch}/L{layer}/b{batch}")
+    }
+
     pub fn insert(&mut self, key: String, sched: Schedule, ms: f64) {
         self.records.insert(key, (sched, ms));
     }
@@ -45,6 +53,34 @@ impl TuningRecords {
             }
         }
         best.map(|(_, s)| s).unwrap_or(default)
+    }
+
+    /// Best schedule for compute layer `layer` of (op, arch) at `batch`:
+    /// exact layer key, else nearest recorded batch for that layer, else
+    /// the class-level [`lookup`](Self::lookup), else `default`.
+    pub fn lookup_layer(
+        &self,
+        op: &str,
+        arch: &str,
+        layer: usize,
+        batch: usize,
+        default: Schedule,
+    ) -> Schedule {
+        if let Some((s, _)) = self.get(&Self::layer_key(op, arch, layer, batch)) {
+            return *s;
+        }
+        let prefix = format!("{op}/{arch}/L{layer}/b");
+        let mut best: Option<(usize, Schedule)> = None;
+        for (k, (s, _)) in &self.records {
+            if let Some(b) = k.strip_prefix(&prefix).and_then(|v| v.parse::<usize>().ok()) {
+                let dist = b.abs_diff(batch);
+                if best.map_or(true, |(d, _)| dist < d) {
+                    best = Some((dist, *s));
+                }
+            }
+        }
+        best.map(|(_, s)| s)
+            .unwrap_or_else(|| self.lookup(op, arch, batch, default))
     }
 
     pub fn to_json(&self) -> Json {
@@ -134,6 +170,39 @@ mod tests {
         assert_eq!(s, Schedule::tuned(4));
         let s = r.lookup("dense", "lenet", 10, Schedule::baseline());
         assert_eq!(s, Schedule::baseline());
+    }
+
+    #[test]
+    fn layer_keys_do_not_pollute_class_lookup() {
+        let mut r = TuningRecords::default();
+        r.insert(TuningRecords::key("dense", "mlp", 10), Schedule::tuned(2), 0.5);
+        r.insert(
+            TuningRecords::layer_key("dense", "mlp", 0, 10),
+            Schedule::tuned(4),
+            0.2,
+        );
+        // class lookup must not parse the L0 record's key
+        assert_eq!(r.lookup("dense", "mlp", 64, Schedule::baseline()), Schedule::tuned(2));
+        // exact layer hit
+        assert_eq!(
+            r.lookup_layer("dense", "mlp", 0, 10, Schedule::baseline()),
+            Schedule::tuned(4)
+        );
+        // nearest batch for the same layer
+        assert_eq!(
+            r.lookup_layer("dense", "mlp", 0, 64, Schedule::baseline()),
+            Schedule::tuned(4)
+        );
+        // unknown layer falls back to the class record
+        assert_eq!(
+            r.lookup_layer("dense", "mlp", 2, 10, Schedule::baseline()),
+            Schedule::tuned(2)
+        );
+        // unknown op/arch falls back to the default
+        assert_eq!(
+            r.lookup_layer("conv", "lenet", 0, 10, Schedule::baseline()),
+            Schedule::baseline()
+        );
     }
 
     #[test]

@@ -23,8 +23,8 @@
 
 use std::marker::PhantomData;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use crossbeam_utils::thread as cb;
@@ -66,39 +66,116 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 /// Workers run until the pool is dropped. Tasks are submitted through
 /// [`ThreadPool::scope`], which supports stack borrows by blocking until
 /// all of its tasks complete.
+///
+/// Two sizing modes:
+/// * [`ThreadPool::new`] spawns all `size` workers eagerly — right for
+///   the operator pools, whose workers are hot from the first request;
+/// * [`ThreadPool::new_lazy`] spawns **no** threads up front and grows on
+///   demand, one worker per outstanding job, up to the cap — right for
+///   the server's connection pool, where the eager `2 * max_connections`
+///   threads (128 with defaults) would sit idle on an embedded target.
+///   The growth rule (workers >= min(outstanding jobs, cap)) guarantees
+///   long-running jobs (connection readers/writers) can never starve a
+///   queued job of a worker.
 pub struct ThreadPool {
     tx: Option<Sender<Job>>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    rx: Arc<Mutex<Receiver<Job>>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Jobs submitted and not yet finished (queued + running).
+    outstanding: Arc<AtomicUsize>,
+    /// Workers spawned so far (monotonic until drop).
+    spawned: AtomicUsize,
+    /// Worker cap.
     size: usize,
 }
 
 impl ThreadPool {
-    /// Spawn `size` (at least 1) persistent workers.
+    /// Spawn `size` (at least 1) persistent workers eagerly.
     pub fn new(size: usize) -> Self {
+        let pool = Self::new_lazy(size);
+        for i in 0..pool.size {
+            pool.spawned.fetch_add(1, Ordering::SeqCst);
+            pool.spawn_worker(i);
+        }
+        pool
+    }
+
+    /// A pool that spawns **no** OS threads until jobs arrive, then grows
+    /// on demand up to `size` workers.
+    pub fn new_lazy(size: usize) -> Self {
         let size = size.max(1);
         let (tx, rx) = channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let mut workers = Vec::with_capacity(size);
-        for i in 0..size {
-            let rx = Arc::clone(&rx);
-            let handle = std::thread::Builder::new()
-                .name(format!("pfp-pool-{i}"))
-                .spawn(move || loop {
-                    // Hold the lock only for the blocking recv; release it
-                    // before running the job so other workers can pick up.
-                    let job = match rx.lock() {
-                        Ok(guard) => guard.recv(),
-                        Err(_) => break,
-                    };
-                    match job {
-                        Ok(job) => job(),
-                        Err(_) => break, // sender dropped: shutdown
-                    }
-                })
-                .expect("spawn pool worker");
-            workers.push(handle);
+        Self {
+            tx: Some(tx),
+            rx: Arc::new(Mutex::new(rx)),
+            workers: Mutex::new(Vec::new()),
+            outstanding: Arc::new(AtomicUsize::new(0)),
+            spawned: AtomicUsize::new(0),
+            size,
         }
-        Self { tx: Some(tx), workers, size }
+    }
+
+    /// `id` is the slot uniquely claimed on `spawned` (a CAS or the eager
+    /// loop index) — not `workers.len()`, which two concurrent growers
+    /// could read identically.
+    fn spawn_worker(&self, id: usize) {
+        let rx = Arc::clone(&self.rx);
+        let handle = std::thread::Builder::new()
+            .name(format!("pfp-pool-{id}"))
+            .spawn(move || loop {
+                // Hold the lock only for the blocking recv; release it
+                // before running the job so other workers can pick up.
+                let job = match rx.lock() {
+                    Ok(guard) => guard.recv(),
+                    Err(_) => break,
+                };
+                match job {
+                    Ok(job) => job(),
+                    Err(_) => break, // sender dropped: shutdown
+                }
+            })
+            .expect("spawn pool worker");
+        self.workers.lock().unwrap().push(handle);
+    }
+
+    /// Queue one job, growing the worker set so that every outstanding
+    /// job (queued or running) has a worker, up to the cap.
+    fn submit(&self, job: Job) {
+        // Pools at their cap (eager pools always; lazy pools once fully
+        // grown) can never spawn again: skip the outstanding tracking and
+        // keep the one-box dispatch on the hot kernel path.
+        if self.spawned.load(Ordering::Relaxed) >= self.size {
+            self.tx
+                .as_ref()
+                .expect("pool is shut down")
+                .send(job)
+                .expect("pool channel closed");
+            return;
+        }
+        let outstanding = Arc::clone(&self.outstanding);
+        outstanding.fetch_add(1, Ordering::SeqCst);
+        let tracked: Job = Box::new(move || {
+            job();
+            outstanding.fetch_sub(1, Ordering::SeqCst);
+        });
+        self.tx
+            .as_ref()
+            .expect("pool is shut down")
+            .send(tracked)
+            .expect("pool channel closed");
+        loop {
+            let spawned = self.spawned.load(Ordering::SeqCst);
+            if spawned >= self.size || spawned >= self.outstanding.load(Ordering::SeqCst) {
+                break;
+            }
+            if self
+                .spawned
+                .compare_exchange(spawned, spawned + 1, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                self.spawn_worker(spawned);
+            }
+        }
     }
 
     /// Pool sized from `PFP_THREADS` / available parallelism.
@@ -106,8 +183,14 @@ impl ThreadPool {
         Self::new(default_threads())
     }
 
+    /// Worker cap (for lazy pools, the maximum, not the current count).
     pub fn size(&self) -> usize {
         self.size
+    }
+
+    /// OS threads actually spawned so far.
+    pub fn spawned_workers(&self) -> usize {
+        self.spawned.load(Ordering::SeqCst)
     }
 
     /// Run `f` with a [`Scope`] that can spawn borrowed tasks onto the
@@ -147,7 +230,7 @@ impl Drop for ThreadPool {
     fn drop(&mut self) {
         // Closing the channel makes every worker's recv fail -> exit.
         drop(self.tx.take());
-        for h in self.workers.drain(..) {
+        for h in self.workers.lock().unwrap().drain(..) {
             let _ = h.join();
         }
     }
@@ -155,7 +238,10 @@ impl Drop for ThreadPool {
 
 impl std::fmt::Debug for ThreadPool {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("ThreadPool").field("size", &self.size).finish()
+        f.debug_struct("ThreadPool")
+            .field("size", &self.size)
+            .field("spawned", &self.spawned_workers())
+            .finish()
     }
 }
 
@@ -198,12 +284,7 @@ impl<'pool, 'scope> Scope<'pool, 'scope> {
         let job: Job = unsafe {
             std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(job)
         };
-        self.pool
-            .tx
-            .as_ref()
-            .expect("pool is shut down")
-            .send(job)
-            .expect("pool workers exited");
+        self.pool.submit(job);
     }
 
     fn wait_all(&self) {
@@ -405,6 +486,80 @@ mod tests {
             });
             assert_eq!(count.load(Ordering::SeqCst), 64, "round {round}");
         }
+    }
+
+    #[test]
+    fn lazy_pool_spawns_no_threads_up_front() {
+        let pool = ThreadPool::new_lazy(64);
+        assert_eq!(pool.spawned_workers(), 0, "idle lazy pool owns no threads");
+        assert_eq!(pool.size(), 64);
+        // first work grows the pool on demand...
+        let count = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for _ in 0..4 {
+                let count = &count;
+                s.spawn(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    count.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 4);
+        let grown = pool.spawned_workers();
+        assert!(grown >= 1, "demand must spawn workers");
+        assert!(grown <= 64, "growth respects the cap");
+        // ...and does not shrink-grow-thrash: a second burst of the same
+        // size reuses the existing workers
+        pool.scope(|s| {
+            for _ in 0..4 {
+                let count = &count;
+                s.spawn(move || {
+                    count.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert!(pool.spawned_workers() <= grown.max(4));
+    }
+
+    #[test]
+    fn lazy_pool_growth_covers_outstanding_long_jobs() {
+        // Long-running jobs (the server's connection readers/writers) must
+        // each get their own worker: a queued job may never starve behind
+        // a blocked one.
+        let pool = ThreadPool::new_lazy(8);
+        let release = Arc::new(AtomicBool::new(false));
+        let running = Arc::new(AtomicUsize::new(0));
+        pool.scope(|s| {
+            for _ in 0..6 {
+                let release = Arc::clone(&release);
+                let running = Arc::clone(&running);
+                s.spawn(move || {
+                    running.fetch_add(1, Ordering::SeqCst);
+                    while !release.load(Ordering::SeqCst) {
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                });
+            }
+            // all six blocked jobs must be running concurrently
+            let t0 = std::time::Instant::now();
+            while running.load(Ordering::SeqCst) < 6 {
+                assert!(
+                    t0.elapsed() < std::time::Duration::from_secs(5),
+                    "lazy growth starved a job: {} of 6 running",
+                    running.load(Ordering::SeqCst)
+                );
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            release.store(true, Ordering::SeqCst);
+        });
+        assert!(pool.spawned_workers() >= 6);
+        assert!(pool.spawned_workers() <= 8);
+    }
+
+    #[test]
+    fn eager_pool_reports_full_spawn() {
+        let pool = ThreadPool::new(3);
+        assert_eq!(pool.spawned_workers(), 3);
     }
 
     #[test]

@@ -82,6 +82,31 @@ fn native_pfp_lenet_matches_jax_golden_b10() {
 }
 
 #[test]
+fn compiled_plan_matches_interpreter_on_goldens() {
+    // On the *trained* posterior and real test inputs (not synthetic
+    // weights), the compiled plan must reproduce the interpretive
+    // executor bit for bit — and therefore inherit its golden match.
+    let Some(dir) = artifacts() else { return };
+    let goldens = Npz::open(&dir.join("goldens.npz")).unwrap();
+    for (arch_name, batch) in [("mlp", 10), ("lenet", 10)] {
+        let arch = Arch::by_name(arch_name).unwrap();
+        let (weights, _) = load_weights(&dir, &arch);
+        let key = format!("model_{arch_name}_pfp_b{batch}");
+        let x = goldens
+            .tensor(&format!("{key}_x"))
+            .unwrap()
+            .flatten_2d();
+        let (mu_i, var_i) =
+            PfpExecutor::new(arch.clone(), weights.clone(), Schedules::tuned(1))
+                .forward_interpreted(&x);
+        let (mu_p, var_p) =
+            PfpExecutor::new(arch, weights, Schedules::tuned(1)).forward(&x);
+        assert_eq!(mu_i.data(), mu_p.data(), "{key}: plan mu != interpreter mu");
+        assert_eq!(var_i.data(), var_p.data(), "{key}: plan var != interpreter var");
+    }
+}
+
+#[test]
 fn native_det_matches_jax_golden() {
     let Some(dir) = artifacts() else { return };
     let goldens = Npz::open(&dir.join("goldens.npz")).unwrap();

@@ -1,0 +1,184 @@
+//! Compiled-plan integration: plan-vs-interpreter parity, workspace
+//! reuse, per-layer schedule overrides, and plan-cache behaviour through
+//! the serving `Service` (the bucket -> compiled-executable mapping).
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use pfp::coordinator::{protocol, NativePfpBackend, ServerConfig, Service};
+use pfp::model::{Arch, PfpExecutor, PosteriorWeights, Schedules};
+use pfp::ops::Schedule;
+use pfp::plan::{CompiledPlan, PlanMode};
+use pfp::profiling::Profiler;
+use pfp::tensor::Tensor;
+use pfp::util::prop::Gen;
+
+fn input(arch: &Arch, batch: usize, seed: u64) -> Tensor {
+    let mut g = Gen::new(seed);
+    let n = batch * arch.input_len();
+    Tensor::new(
+        vec![batch, arch.input_len()],
+        (0..n).map(|_| g.f32_in(0.0, 1.0)).collect(),
+    )
+    .unwrap()
+}
+
+#[test]
+fn plan_matches_interpreter_bitwise_across_batches() {
+    // Same kernels, same order, same serial schedules: the lowering must
+    // be a pure reshuffling of *where* work happens, not *what* runs.
+    for arch in [Arch::mlp(), Arch::lenet()] {
+        let weights = PosteriorWeights::synthetic(&arch, 21);
+        for batch in [1usize, 3, 10] {
+            let x = input(&arch, batch, batch as u64);
+            let (mu_i, var_i) =
+                PfpExecutor::new(arch.clone(), weights.clone(), Schedules::tuned(1))
+                    .forward_interpreted(&x);
+            let (mu_p, var_p) =
+                PfpExecutor::new(arch.clone(), weights.clone(), Schedules::tuned(1))
+                    .forward(&x);
+            assert_eq!(mu_i.data(), mu_p.data(), "{} b{batch} mu", arch.name);
+            assert_eq!(var_i.data(), var_p.data(), "{} b{batch} var", arch.name);
+        }
+    }
+}
+
+#[test]
+fn plan_parity_holds_for_baseline_schedules_too() {
+    // generic pool + Mkn loop order exercise the non-default step kinds
+    let arch = Arch::lenet();
+    let weights = PosteriorWeights::synthetic(&arch, 22);
+    let x = input(&arch, 2, 7);
+    let (mu_i, var_i) =
+        PfpExecutor::new(arch.clone(), weights.clone(), Schedules::baseline())
+            .forward_interpreted(&x);
+    let (mu_p, var_p) =
+        PfpExecutor::new(arch.clone(), weights, Schedules::baseline()).forward(&x);
+    assert_eq!(mu_i.data(), mu_p.data());
+    assert_eq!(var_i.data(), var_p.data());
+}
+
+#[test]
+fn workspace_reuse_is_deterministic() {
+    // second execute() on the same workspace must be bit-identical to the
+    // first: no state may leak between calls
+    for arch in [Arch::mlp(), Arch::lenet()] {
+        let weights = Arc::new(PosteriorWeights::synthetic(&arch, 23));
+        let plan = CompiledPlan::compile(
+            &arch,
+            Arc::clone(&weights),
+            &Schedules::tuned(1),
+            4,
+            PlanMode::Pfp,
+        )
+        .unwrap();
+        let mut ws = plan.workspace();
+        let x = input(&arch, 4, 11);
+        let mut off = Profiler::new(false);
+        let first = {
+            let (mu, var) = plan.execute(x.data(), &mut ws, &mut off);
+            (mu.to_vec(), var.to_vec())
+        };
+        // interleave a different input to dirty every buffer...
+        let other = input(&arch, 4, 12);
+        let _ = plan.execute(other.data(), &mut ws, &mut off);
+        // ...then re-run the original
+        let (mu2, var2) = plan.execute(x.data(), &mut ws, &mut off);
+        assert_eq!(first.0.as_slice(), mu2, "{} mu drifted", arch.name);
+        assert_eq!(first.1.as_slice(), var2, "{} var drifted", arch.name);
+    }
+}
+
+#[test]
+fn per_layer_schedule_table_agrees_within_tolerances() {
+    // a fully heterogeneous table (every layer different) must agree with
+    // the uniform schedule within the repo's established tolerances
+    for arch in [Arch::mlp(), Arch::lenet()] {
+        let weights = PosteriorWeights::synthetic(&arch, 24);
+        let x = input(&arch, 3, 13);
+        let (mu_u, var_u) =
+            PfpExecutor::new(arch.clone(), weights.clone(), Schedules::tuned(1))
+                .forward(&x);
+        let variants = [
+            Schedule::tuned(1),
+            Schedule::tuned(1).with_unroll(4),
+            Schedule::tiled(16, 64),
+            Schedule::tuned(2),
+            Schedule::baseline(),
+        ];
+        let mut sched = Schedules::tuned(1);
+        for i in 0..arch.compute_layers().len() {
+            sched = sched.with_layer_schedule(i, variants[i % variants.len()]);
+        }
+        let (mu_o, var_o) = PfpExecutor::new(arch.clone(), weights, sched).forward(&x);
+        assert!(mu_u.allclose(&mu_o, 1e-4, 1e-4), "{} mu", arch.name);
+        assert!(var_u.allclose(&var_o, 2e-3, 2e-3), "{} var", arch.name);
+    }
+}
+
+fn plan_service(max_batch: usize) -> Service {
+    let mut cfg = ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() };
+    cfg.batcher.max_batch = max_batch;
+    let mut svc = Service::new(cfg);
+    let arch = Arch::mlp();
+    let weights = PosteriorWeights::synthetic(&arch, 25);
+    svc.register(
+        "mlp",
+        784,
+        Box::new(NativePfpBackend::new(arch, weights, Schedules::tuned(1))),
+    );
+    svc
+}
+
+fn plan_compiles(svc: &Service) -> u64 {
+    svc.metrics
+        .plan_compiles
+        .load(std::sync::atomic::Ordering::Relaxed)
+}
+
+#[test]
+fn service_serves_repeat_buckets_from_cached_plans() {
+    let svc = plan_service(4);
+    // sequential blocking requests: every forward pass runs at batch 1
+    for i in 0..6u64 {
+        let resp = svc.infer_blocking(protocol::Request {
+            id: i,
+            model: "mlp".into(),
+            input: vec![0.3; 784],
+        });
+        assert!(resp.result.is_ok());
+    }
+    assert_eq!(
+        plan_compiles(&svc),
+        1,
+        "six batch-1 passes must share one cold compile"
+    );
+}
+
+#[test]
+fn service_plan_cache_bounded_by_bucket_sizes() {
+    let svc = plan_service(4);
+    // mixed burst + blocking traffic: the dynamic batcher may form any
+    // bucket size in 1..=4, each compiled at most once
+    for round in 0..3u64 {
+        let (tx, rx) = channel();
+        for i in 0..8u64 {
+            svc.submit_with(
+                protocol::Request {
+                    id: round * 100 + i,
+                    model: "mlp".into(),
+                    input: vec![0.1 * (i % 7) as f32; 784],
+                },
+                tx.clone(),
+            )
+            .expect("submit");
+        }
+        drop(tx);
+        assert_eq!(rx.iter().filter(|r| r.result.is_ok()).count(), 8);
+    }
+    let compiles = plan_compiles(&svc);
+    assert!(
+        (1u64..=4).contains(&compiles),
+        "cold compiles ({compiles}) must be bounded by the bucket sizes, not the request count (24)"
+    );
+}

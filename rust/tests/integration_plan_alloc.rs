@@ -1,0 +1,105 @@
+//! Zero-allocation guarantee for steady-state plan execution, asserted
+//! with a counting global allocator.
+//!
+//! This file deliberately holds a single test: the allocator counter is
+//! process-global, and libtest runs a binary's tests on concurrent
+//! threads — any sibling test would race the measurement window.
+//!
+//! The guarantee being pinned: after warm-up, `CompiledPlan::execute`
+//! with the tuned serial schedule performs **zero** heap allocation —
+//! conv im2col runs in plan-owned scratch, activations ping-pong through
+//! the workspace, conversions rewrite aux in place, and the disabled
+//! profiler is a passthrough. (Parallel schedules pay boxed pool jobs and
+//! tiled/`Mkn` loop bodies allocate accumulators; the tuned default does
+//! neither.)
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use pfp::model::{Arch, PosteriorWeights, Schedules};
+use pfp::ops::Schedule;
+use pfp::plan::{CompiledPlan, PlanMode};
+use pfp::profiling::Profiler;
+use pfp::util::prop::Gen;
+use pfp::util::threadpool::ThreadPool;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_execute_performs_zero_heap_allocation() {
+    // LeNet exercises every step kind: conv (im2col scratch), relu,
+    // vectorized pool, dense, and explicit conversions.
+    for arch in [Arch::mlp(), Arch::lenet()] {
+        let weights = Arc::new(PosteriorWeights::synthetic(&arch, 7));
+        // serial, untiled Mnk; a zero-worker lazy pool (never dispatched
+        // to) instead of the process-global pool, so no background thread
+        // start-up can allocate inside the measurement window
+        let schedules = Schedules {
+            dense: Schedule::tuned(1),
+            conv: Schedule::tuned(1),
+            per_layer: Vec::new(),
+            vectorized_pool: true,
+            relu_threads: 1,
+            maxpool_threads: 1,
+            pool: Arc::new(ThreadPool::new_lazy(1)),
+            records: None,
+        };
+        let plan =
+            CompiledPlan::compile(&arch, weights, &schedules, 2, PlanMode::Pfp).unwrap();
+        let mut ws = plan.workspace();
+        let mut prof = Profiler::new(false);
+        let n = 2 * arch.input_len();
+        let x: Vec<f32> = {
+            let mut g = Gen::new(3);
+            (0..n).map(|_| g.f32_in(0.0, 1.0)).collect()
+        };
+
+        // warm-up twice (first call may touch lazily initialized state)
+        let _ = plan.execute(&x, &mut ws, &mut prof);
+        let _ = plan.execute(&x, &mut ws, &mut prof);
+
+        let before = ALLOCS.load(Ordering::SeqCst);
+        let mut checksum = 0.0f32;
+        for _ in 0..3 {
+            let (mu, var) = plan.execute(&x, &mut ws, &mut prof);
+            checksum += mu[0] + var[var.len() - 1];
+        }
+        let after = ALLOCS.load(Ordering::SeqCst);
+
+        assert!(checksum.is_finite());
+        assert_eq!(
+            after - before,
+            0,
+            "{}: steady-state execute allocated {} time(s)",
+            arch.name,
+            after - before
+        );
+    }
+}

@@ -1,0 +1,89 @@
+//! The server's connection pool must grow lazily: an idle server with a
+//! large `max_connections` may not own `2 * max_connections` OS threads
+//! (128 with defaults) — the ROADMAP's embedded-deployment item.
+//!
+//! Kept in its own file so sibling tests' thread usage cannot inflate the
+//! process-wide thread count this test asserts on.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use pfp::coordinator::{NativePfpBackend, Server, ServerConfig, Service};
+use pfp::model::{Arch, PosteriorWeights, Schedules};
+use pfp::ops::Schedule;
+
+/// OS threads in this process (Linux); None elsewhere.
+fn process_threads() -> Option<usize> {
+    if cfg!(target_os = "linux") {
+        std::fs::read_dir("/proc/self/task").ok().map(|d| d.count())
+    } else {
+        None
+    }
+}
+
+#[test]
+fn idle_server_owns_no_connection_threads() {
+    let mut cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_connections: 64, // eager sizing would spawn 128 threads here
+        // a small dedicated operator pool: keep the (nproc-sized) global
+        // pool out of this binary so the thread count stays meaningful
+        pool_threads: 2,
+        ..Default::default()
+    };
+    cfg.batcher.max_batch = 4;
+    let mut svc = Service::new(cfg);
+    let arch = Arch::mlp();
+    let weights = PosteriorWeights::synthetic(&arch, 1);
+    // struct literal, NOT Schedules::tuned(): the constructor would
+    // initialize the nproc-sized process-global pool as its default
+    // handle and skew the thread count being asserted
+    let schedules = Schedules {
+        dense: Schedule::tuned(1),
+        conv: Schedule::tuned(1),
+        per_layer: Vec::new(),
+        vectorized_pool: true,
+        relu_threads: 1,
+        maxpool_threads: 1,
+        pool: svc.pool().clone(),
+        records: None,
+    };
+    svc.register("mlp", 784, Box::new(NativePfpBackend::new(arch, weights, schedules)));
+    let svc = Arc::new(svc);
+    let server = Server::bind(svc.clone()).unwrap();
+    let addr = server.addr;
+    let run = std::thread::spawn(move || server.run());
+
+    // idle: listener + lane worker + 2 operator-pool workers + harness
+    // threads — nothing close to the 128 the eager pool would spawn
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    if let Some(n) = process_threads() {
+        assert!(
+            n < 32,
+            "idle server owns {n} threads — connection pool is not lazy"
+        );
+    }
+
+    // one live connection grows the pool by exactly its two jobs and the
+    // server still serves
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut wire = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writeln!(wire, r#"{{"cmd":"ping"}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("pong"), "bad ping reply: {line}");
+    if let Some(n) = process_threads() {
+        assert!(
+            n < 36,
+            "one connection grew the pool to {n} threads"
+        );
+    }
+
+    // clean shutdown
+    writeln!(wire, r#"{{"cmd":"shutdown"}}"#).unwrap();
+    let _ = reader.read_line(&mut String::new());
+    run.join().unwrap().unwrap();
+}

@@ -11,6 +11,7 @@ verify:
 	cargo build --examples
 	cargo bench --no-run --bench pipeline_throughput
 	cargo bench --no-run --bench plan_vs_interpreter
+	cargo bench --no-run --bench plan_parallel_scaling
 
 build:
 	cargo build --release

@@ -1,0 +1,121 @@
+//! Parallel scaling of the planned path: `CompiledPlan::execute` ns/row
+//! at tile-task counts (threads) x batch sizes — the Fig. 7 batch-scaling
+//! story applied to the compiled executor, and the acceptance gate for
+//! the plan-time work-partitioning refactor (planned throughput at >= 2
+//! threads must beat the serial planned path at batch 64).
+//!
+//! Every configuration is the *same* math (row partitioning is
+//! bit-identical to serial — asserted here on the fly, not just in the
+//! test suite), so the table isolates pure dispatch + scaling behaviour:
+//! threads = 1 is the zero-dispatch serial walk, threads > 1 pays one
+//! gang broadcast per parallel step.
+//!
+//! Emits the usual bench table/JSON lines plus a `BENCH_threads.json`
+//! summary (`<arch>_b<batch>_t<threads>_ns_row` keys and per-batch
+//! best-parallel speedups) so CI can archive the perf trajectory across
+//! PRs.
+
+use std::sync::Arc;
+
+use pfp::model::{Arch, PosteriorWeights, Schedules};
+use pfp::plan::{CompiledPlan, PlanMode};
+use pfp::profiling::Profiler;
+use pfp::tensor::Tensor;
+use pfp::util::bench::{bench, black_box, report, BenchOpts};
+use pfp::util::json::Json;
+use pfp::util::prop::Gen;
+use pfp::util::threadpool::default_threads;
+
+fn input(arch: &Arch, batch: usize) -> Tensor {
+    let mut g = Gen::new(0x5CA1E);
+    let n = batch * arch.input_len();
+    Tensor::new(
+        vec![batch, arch.input_len()],
+        (0..n).map(|_| g.f32_in(0.0, 1.0)).collect(),
+    )
+    .unwrap()
+}
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let mut thread_counts = vec![1usize, 2, 4, default_threads()];
+    thread_counts.sort_unstable();
+    thread_counts.dedup();
+
+    let mut results = Vec::new();
+    let mut summary: Vec<(String, Json)> = Vec::new();
+
+    for arch in [Arch::mlp(), Arch::lenet()] {
+        let weights = PosteriorWeights::synthetic(&arch, 1);
+        for batch in [1usize, 64] {
+            let x = input(&arch, batch);
+            let mut serial_ns = 0.0f64;
+            let mut best_parallel_ns = f64::INFINITY;
+            let mut serial_out: Option<(Vec<f32>, Vec<f32>)> = None;
+            for &t in &thread_counts {
+                let plan = CompiledPlan::compile(
+                    &arch,
+                    Arc::new(weights.clone()),
+                    &Schedules::tuned(1).with_plan_threads(t),
+                    batch,
+                    PlanMode::Pfp,
+                )
+                .unwrap();
+                let mut ws = plan.workspace();
+                let mut off = Profiler::new(false);
+                // determinism spot-check: every thread count must produce
+                // the exact bits the serial plan does
+                {
+                    let (mu, var) = plan.execute(x.data(), &mut ws, &mut off);
+                    match &serial_out {
+                        None => serial_out = Some((mu.to_vec(), var.to_vec())),
+                        Some((smu, svar)) => {
+                            assert_eq!(smu.as_slice(), mu, "{} b{batch} t{t} mu", arch.name);
+                            assert_eq!(svar.as_slice(), var, "{} b{batch} t{t} var", arch.name);
+                        }
+                    }
+                }
+                let r = bench(
+                    &format!("{} b{batch} planned t{t}", arch.name),
+                    opts,
+                    || {
+                        let (mu, var) = plan.execute(x.data(), &mut ws, &mut off);
+                        black_box((mu[0], var[0]));
+                    },
+                );
+                let ns_row = r.median_s * 1e9 / batch as f64;
+                if t == 1 {
+                    serial_ns = ns_row;
+                } else {
+                    best_parallel_ns = best_parallel_ns.min(ns_row);
+                }
+                summary.push((
+                    format!("{}_b{batch}_t{t}_ns_row", arch.name),
+                    Json::Num(ns_row),
+                ));
+                results.push(r);
+            }
+            summary.push((
+                format!("{}_b{batch}_parallel_speedup", arch.name),
+                Json::Num(if best_parallel_ns > 0.0 && best_parallel_ns.is_finite() {
+                    serial_ns / best_parallel_ns
+                } else {
+                    0.0
+                }),
+            ));
+        }
+    }
+
+    report(
+        "planned parallel scaling (tile tasks x batch, bit-identical across threads)",
+        &results,
+    );
+
+    let refs: Vec<(&str, Json)> =
+        summary.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    let json = Json::obj(refs);
+    println!("\nBENCH_threads.json {}", json.dump());
+    if let Err(e) = std::fs::write("BENCH_threads.json", json.dump()) {
+        eprintln!("could not write BENCH_threads.json: {e}");
+    }
+}

@@ -27,6 +27,11 @@ pub struct Metrics {
     /// size it had not served yet. Steady state this stops moving — every
     /// batcher bucket is served from a cached compiled plan.
     pub plan_compiles: AtomicU64,
+    /// Plans evicted from a backend's bounded LRU plan cache. A moving
+    /// value at steady state means the batcher's bucket-size working set
+    /// exceeds the cache cap and buckets keep recompiling (cache thrash
+    /// that was previously invisible).
+    pub plan_cache_evictions: AtomicU64,
     latencies_us: Mutex<Vec<f64>>, // end-to-end per request
     conn_depth: Mutex<Vec<f64>>,   // per-connection in-flight depth at submit
 }
@@ -104,6 +109,10 @@ impl Metrics {
                 "plan_compiles",
                 Json::Num(self.plan_compiles.load(Ordering::Relaxed) as f64),
             ),
+            (
+                "plan_cache_evictions",
+                Json::Num(self.plan_cache_evictions.load(Ordering::Relaxed) as f64),
+            ),
             ("conn_depth_p50", Json::Num(stats::percentile(&d, 50.0))),
             ("conn_depth_p95", Json::Num(stats::percentile(&d, 95.0))),
             ("conn_depth_max", Json::Num(stats::percentile(&d, 100.0))),
@@ -152,6 +161,16 @@ mod tests {
         assert_eq!(snap.num_field("conns_rejected").unwrap(), 1.0);
         assert_eq!(snap.num_field("conn_depth_p50").unwrap(), 2.0);
         assert_eq!(snap.num_field("conn_depth_max").unwrap(), 4.0);
+    }
+
+    #[test]
+    fn plan_cache_counters_surface_in_snapshot() {
+        let m = Metrics::new();
+        Metrics::add(&m.plan_compiles, 3);
+        Metrics::add(&m.plan_cache_evictions, 2);
+        let snap = m.snapshot();
+        assert_eq!(snap.num_field("plan_compiles").unwrap(), 3.0);
+        assert_eq!(snap.num_field("plan_cache_evictions").unwrap(), 2.0);
     }
 
     #[test]

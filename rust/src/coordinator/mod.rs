@@ -75,16 +75,27 @@ impl NativePfpBackend {
     pub fn plan_compiles(&self) -> u64 {
         self.exec.plan_compiles()
     }
+
+    /// Plans evicted from the bounded LRU cache so far (bucket working
+    /// set exceeded the cap — cache thrash).
+    pub fn plan_evictions(&self) -> u64 {
+        self.exec.plan_evictions()
+    }
 }
 
 impl Backend for NativePfpBackend {
     fn infer(&mut self, x: &Tensor) -> Result<(Tensor, Tensor)> {
         let before = self.exec.plan_compiles();
+        let before_evict = self.exec.plan_evictions();
         let out = self.exec.forward(x);
         if let Some(m) = &self.metrics {
             let cold = self.exec.plan_compiles() - before;
             if cold > 0 {
                 Metrics::add(&m.plan_compiles, cold);
+            }
+            let evicted = self.exec.plan_evictions() - before_evict;
+            if evicted > 0 {
+                Metrics::add(&m.plan_cache_evictions, evicted);
             }
         }
         Ok(out)

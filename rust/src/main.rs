@@ -56,11 +56,16 @@ fn print_help() {
          COMMANDS:\n\
            info                       show artifacts and Table-1 metrics\n\
            serve   [--arch mlp] [--backend native|xla|svi] [--addr 127.0.0.1:7878]\n\
-                   [--threads 1] [--pool-threads 0] [--max-batch 10]\n\
+                   [--threads 1] [--plan-threads 0] [--pool-threads 0] [--max-batch 10]\n\
                    [--max-connections 64] [--pipeline-depth 0 (= max-batch)]\n\
+                   (--plan-threads N partitions the compiled-plan compute/\n\
+                    relu/vectorized-pool steps into N tile tasks;\n\
+                    0 defers to the tuned schedules)\n\
            eval    [--arch mlp] [--samples 30]\n\
            profile [--arch mlp] [--batch 10] [--passes 20] [--schedules tuned|baseline]\n\
-           tune    [--arch mlp] [--batch 10] [--trials 24]   (per-layer workload search)\n"
+           tune    [--arch mlp] [--batch 10] [--trials 24] [--plan-threads nproc]\n\
+                   (per-layer workload search over parallel x tile-size\n\
+                    candidates, measured on the planned tile executor)\n"
     );
 }
 
@@ -140,11 +145,16 @@ fn cmd_serve(opts: &HashMap<String, String>) -> pfp::Result<()> {
     let records = std::sync::Arc::new(TuningRecords::load_or_default(
         &pfp::artifacts_dir().join("tuning").join("records.json"),
     ));
+    // plan-wide tile-task override for the compiled-plan path (0 = let
+    // each step follow its tuned schedule's threads knob)
+    let plan_threads = opt_usize(opts, "plan-threads", 0);
     let schedules = Schedules::from_records(
         records,
         &arch,
         max_batch,
-        Schedules::tuned(threads).with_pool(svc.pool().clone()),
+        Schedules::tuned(threads)
+            .with_pool(svc.pool().clone())
+            .with_plan_threads(plan_threads),
     );
 
     let backend: Box<dyn pfp::coordinator::Backend> = match backend_kind {
@@ -265,9 +275,17 @@ fn cmd_tune(opts: &HashMap<String, String>) -> pfp::Result<()> {
     // Tune every compute layer on its actual workload shape (the paper
     // tunes per operator workload and per mini-batch size): each layer's
     // best schedule lands in the per-layer table the compiled plans bind.
-    let space = SearchSpace::dense_default(pfp::util::threadpool::default_threads());
+    // Candidates are measured on the planned tile executor, so the search
+    // covers parallel (threads up to --plan-threads) x tile-size points
+    // exactly as serving would run them.
+    let max_threads =
+        opt_usize(opts, "plan-threads", pfp::util::threadpool::default_threads());
+    let space = SearchSpace::dense_default(max_threads);
     let topts = tuner::TuneOpts { random_trials: trials, ..Default::default() };
-    println!("tuning {arch_name} per layer at batch {batch} ({trials} random trials/layer) ...");
+    println!(
+        "tuning {arch_name} per layer at batch {batch} \
+         ({trials} random trials/layer, up to {max_threads} threads) ..."
+    );
     let layer_results = tuner::tune_per_layer(&arch, &weights, batch, topts, &space);
 
     let records_path = dir.join("tuning").join("records.json");

@@ -50,6 +50,18 @@ pub struct Schedules {
     /// Worker tasks for the vectorized max-pool (1 = serial — Table 3's
     /// hand-vectorized row; >1 reproduces the "automatic schedule" row).
     pub maxpool_threads: usize,
+    /// Plan-wide parallelism override for the compiled-plan path: when
+    /// > 0, every *partitionable* step of a lowered plan is split into
+    /// this many tile tasks at compile time (dense rows, conv
+    /// patch-rows/planes, relu elements, vectorized-pool planes),
+    /// regardless of the per-step schedule's `threads` or the
+    /// relu/maxpool thread knobs — conversion steps and the generic
+    /// (Table-3 baseline) pool stay serial by design. 0 (default) defers
+    /// to those per-step knobs. Threaded through
+    /// `pfp serve --plan-threads` / `pfp tune --plan-threads`; row
+    /// partitioning keeps planned-parallel output bit-identical to
+    /// planned-serial.
+    pub plan_threads: usize,
     /// Persistent worker-pool handle. Defaults to the process-wide pool;
     /// the serving coordinator injects one shared handle per `Service` so
     /// every model lane and request reuses the same workers.
@@ -72,6 +84,7 @@ impl Schedules {
             vectorized_pool: false,
             relu_threads: 1,
             maxpool_threads: 1,
+            plan_threads: 0,
             pool: threadpool::global().clone(),
             records: None,
         }
@@ -86,6 +99,7 @@ impl Schedules {
             vectorized_pool: true,
             relu_threads: 1,
             maxpool_threads: 1,
+            plan_threads: 0,
             pool: threadpool::global().clone(),
             records: None,
         }
@@ -95,6 +109,13 @@ impl Schedules {
     /// across all lanes).
     pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Self {
         self.pool = pool;
+        self
+    }
+
+    /// Set the plan-wide tile-task count (see
+    /// [`Schedules::plan_threads`]); 0 defers to per-step knobs.
+    pub fn with_plan_threads(mut self, plan_threads: usize) -> Self {
+        self.plan_threads = plan_threads;
         self
     }
 
@@ -199,6 +220,9 @@ const PLAN_CACHE_CAP: usize = 32;
 struct PlanCache {
     tick: u64,
     map: HashMap<usize, PlanEntry>,
+    /// Plans evicted at the cap — visible thrash across batch buckets
+    /// (surfaced as the `plan_cache_evictions` serving metric).
+    evictions: u64,
 }
 
 impl PlanCache {
@@ -218,6 +242,7 @@ impl PlanCache {
                     self.map.iter().min_by_key(|(_, e)| e.last_used).map(|(b, _)| *b)
                 {
                     self.map.remove(&evict);
+                    self.evictions += 1;
                 }
             }
             self.map.insert(batch, build());
@@ -274,6 +299,14 @@ impl PfpExecutor {
     /// Cold plan compiles so far (one per distinct batch size seen).
     pub fn plan_compiles(&self) -> u64 {
         self.plan_compiles
+    }
+
+    /// Plans evicted from the bounded LRU cache so far. A moving value at
+    /// steady state means the served batch-size working set exceeds the
+    /// cache cap and buckets are recompiling (cache thrash) — surfaced as
+    /// the `plan_cache_evictions` serving metric.
+    pub fn plan_evictions(&self) -> u64 {
+        self.plans.evictions
     }
 
     /// Batch sizes with a cached plan (at most [`PLAN_CACHE_CAP`]).
@@ -669,12 +702,51 @@ mod tests {
         }
         assert_eq!(ex.cached_batches().len(), PLAN_CACHE_CAP);
         assert_eq!(ex.plan_compiles(), (PLAN_CACHE_CAP + 4) as u64);
+        // eviction is counted, not silent: 4 batches past the cap
+        assert_eq!(ex.plan_evictions(), 4);
         // the oldest batch sizes were evicted, the newest retained
         assert!(!ex.cached_batches().contains(&1));
         assert!(ex.cached_batches().contains(&(PLAN_CACHE_CAP + 4)));
-        // re-seeing an evicted size recompiles (cold) exactly once more
+        // re-seeing an evicted size recompiles (cold) exactly once more,
+        // evicting one more victim
         let _ = ex.forward(&input(&arch, 1, 1));
         assert_eq!(ex.plan_compiles(), (PLAN_CACHE_CAP + 5) as u64);
+        assert_eq!(ex.plan_evictions(), 5);
+    }
+
+    #[test]
+    fn plan_cache_under_cap_never_evicts() {
+        let arch = Arch::mlp();
+        let w = PosteriorWeights::synthetic(&arch, 15);
+        let mut ex = PfpExecutor::new(arch.clone(), w, Schedules::default());
+        for batch in [1usize, 2, 3, 1, 2, 3] {
+            let _ = ex.forward(&input(&arch, batch, batch as u64));
+        }
+        assert_eq!(ex.plan_evictions(), 0);
+    }
+
+    #[test]
+    fn planned_parallel_forward_bitwise_matches_interpreter() {
+        // plan_threads only changes where work runs (row partitions), so
+        // the planned-parallel path must match the serial interpreter
+        // bit for bit — the tentpole determinism guarantee, through the
+        // executor API.
+        for arch in [Arch::mlp(), Arch::lenet()] {
+            let w = PosteriorWeights::synthetic(&arch, 16);
+            let x = input(&arch, 3, 8);
+            let (mu_i, var_i) = PfpExecutor::new(arch.clone(), w.clone(), Schedules::tuned(1))
+                .forward_interpreted(&x);
+            for t in [2usize, 4] {
+                let (mu_p, var_p) = PfpExecutor::new(
+                    arch.clone(),
+                    w.clone(),
+                    Schedules::tuned(1).with_plan_threads(t),
+                )
+                .forward(&x);
+                assert_eq!(mu_i.data(), mu_p.data(), "{} t={t} mu", arch.name);
+                assert_eq!(var_i.data(), var_p.data(), "{} t={t} var", arch.name);
+            }
+        }
     }
 
     #[test]

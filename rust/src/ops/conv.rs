@@ -10,10 +10,10 @@
 //! the paper's LeNet-5 needs).
 
 use crate::tensor::{ProbTensor, Rep, Tensor};
-use crate::util::threadpool::{self, ThreadPool};
+use crate::util::threadpool::{self, DisjointMut, ThreadPool};
 
 use super::dense::{
-    dense_kernel_into, Accum, DenseSlices, FirstLayer, JointEq12,
+    dense_kernel_into, dense_rows_into, Accum, DenseSlices, FirstLayer, JointEq12,
 };
 use super::schedule::Schedule;
 
@@ -72,29 +72,41 @@ impl ConvShape {
     }
 }
 
-/// im2col into a caller-provided `[N*OH*OW, C*kh*kw]` buffer.
-pub fn im2col_into(d: &[f32], sh: &ConvShape, out: &mut [f32]) {
+/// im2col for patch rows `rows` only, into a caller-provided
+/// `[rows.len(), C*kh*kw]` chunk (chunk-relative row indexing) — one
+/// planned conv tile's gather phase. Patch rows are independent, so any
+/// row partition writes exactly the bytes the full [`im2col_into`] would.
+pub fn im2col_rows_into(
+    d: &[f32],
+    sh: &ConvShape,
+    rows: std::ops::Range<usize>,
+    out: &mut [f32],
+) {
     let (c, h, w, kh, kw) = (sh.c, sh.h, sh.w, sh.kh, sh.kw);
     let (oh, ow) = (sh.oh(), sh.ow());
     let kk = sh.kk();
     debug_assert_eq!(d.len(), sh.in_len());
-    debug_assert_eq!(out.len(), sh.rows() * kk);
-    for img in 0..sh.n {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let row = ((img * oh + oy) * ow + ox) * kk;
-                let mut col = 0;
-                for ch in 0..c {
-                    let plane = (img * c + ch) * h * w;
-                    for dy in 0..kh {
-                        let src = plane + (oy + dy) * w + ox;
-                        out[row + col..row + col + kw].copy_from_slice(&d[src..src + kw]);
-                        col += kw;
-                    }
-                }
+    debug_assert_eq!(out.len(), (rows.end - rows.start) * kk);
+    for (local, prow) in rows.enumerate() {
+        let img = prow / (oh * ow);
+        let rem = prow % (oh * ow);
+        let (oy, ox) = (rem / ow, rem % ow);
+        let row = local * kk;
+        let mut col = 0;
+        for ch in 0..c {
+            let plane = (img * c + ch) * h * w;
+            for dy in 0..kh {
+                let src = plane + (oy + dy) * w + ox;
+                out[row + col..row + col + kw].copy_from_slice(&d[src..src + kw]);
+                col += kw;
             }
         }
     }
+}
+
+/// im2col into a caller-provided `[N*OH*OW, C*kh*kw]` buffer.
+pub fn im2col_into(d: &[f32], sh: &ConvShape, out: &mut [f32]) {
+    im2col_rows_into(d, sh, 0..sh.rows(), out);
 }
 
 /// im2col: `[N, C, H, W]` -> (`[N*OH*OW, C*kh*kw]`, (n, oh, ow)).
@@ -118,21 +130,36 @@ pub fn im2col(x: &Tensor, kh: usize, kw: usize) -> (Tensor, (usize, usize, usize
     )
 }
 
+/// Scatter the output planes `planes` (plane `p` = image `p / O`, channel
+/// `p % O`) of a `[N*OH*OW, O]` matrix back to NCHW, into a
+/// caller-provided chunk covering exactly those planes — one planned conv
+/// tile's scatter phase. Planes are contiguous in the NCHW output, so a
+/// plane partition maps to disjoint contiguous output chunks.
+pub fn col2im_planes_into(
+    d: &[f32],
+    oh: usize,
+    ow: usize,
+    o: usize,
+    planes: std::ops::Range<usize>,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (planes.end - planes.start) * oh * ow);
+    for (local, p) in planes.enumerate() {
+        let (img, ch) = (p / o, p % o);
+        let obase = local * oh * ow;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                out[obase + oy * ow + ox] = d[((img * oh + oy) * ow + ox) * o + ch];
+            }
+        }
+    }
+}
+
 /// Scatter `[N*OH*OW, O]` back to NCHW `[N, O, OH, OW]`, into a
 /// caller-provided buffer.
 fn col2im_into(d: &[f32], n: usize, oh: usize, ow: usize, o: usize, out: &mut [f32]) {
     debug_assert_eq!(d.len(), n * oh * ow * o);
-    debug_assert_eq!(out.len(), n * o * oh * ow);
-    for img in 0..n {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let row = ((img * oh + oy) * ow + ox) * o;
-                for ch in 0..o {
-                    out[((img * o + ch) * oh + oy) * ow + ox] = d[row + ch];
-                }
-            }
-        }
-    }
+    col2im_planes_into(d, oh, ow, o, 0..n * o, out);
 }
 
 /// Slice-level conv kernel: im2col -> scheduled joint dense -> col2im,
@@ -191,6 +218,127 @@ pub fn conv_kernel_into<A: Accum>(
     );
     col2im_into(cm, sh.n, sh.oh(), sh.ow(), sh.o, out_mu);
     col2im_into(cv, sh.n, sh.oh(), sh.ow(), sh.o, out_var);
+}
+
+/// Planned-tile conv kernel: the compiled plan's parallel conv step.
+///
+/// Two gang dispatches over the plan's pre-bound partitions, with zero
+/// heap allocation end to end:
+///
+/// 1. **patch-row tiles** (`tiles`): each tile im2cols its own patch rows
+///    into its disjoint chunk of the scratch patch matrices and runs the
+///    serial dense kernel over exactly those rows — the tile only ever
+///    reads patches it wrote itself, so the phase needs no barrier inside;
+/// 2. **output-plane tiles** (`scatter_tiles`): each tile scatters a range
+///    of NCHW output planes (contiguous in the output) from the shared
+///    pre-scatter matrices.
+///
+/// Row/plane partitioning never touches the per-patch reduction order, so
+/// the result is bit-identical to the serial [`conv_kernel_into`] with a
+/// `threads = 1` schedule at any tile count. `x_aux = None` is the Eq. 13
+/// first layer (aux patches alias the mean patches), as in
+/// [`conv_kernel_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn conv_kernel_tiled_into<A: Accum>(
+    pool: &ThreadPool,
+    sh: &ConvShape,
+    x_mu: &[f32],
+    x_aux: Option<&[f32]>,
+    w_mu: &[f32],
+    w_aux: &[f32],
+    b_mu: Option<&[f32]>,
+    b_var: Option<&[f32]>,
+    sched: &Schedule,
+    tiles: &[std::ops::Range<usize>],
+    scatter_tiles: &[std::ops::Range<usize>],
+    scratch: &mut [f32],
+    out_mu: &mut [f32],
+    out_var: &mut [f32],
+) {
+    let rows = sh.rows();
+    let kk = sh.kk();
+    let o = sh.o;
+    let (oh, ow) = (sh.oh(), sh.ow());
+    let serial = sched.with_threads(1);
+    debug_assert!(scratch.len() >= sh.scratch_len(x_aux.is_none()));
+    let (pm, rest) = scratch.split_at_mut(rows * kk);
+    let (pa, rest) = match x_aux {
+        Some(_) => {
+            let (pa, rest) = rest.split_at_mut(rows * kk);
+            (Some(pa), rest)
+        }
+        None => (None, rest),
+    };
+    let (cm, rest) = rest.split_at_mut(rows * o);
+    let (cv, _) = rest.split_at_mut(rows * o);
+
+    // phase 1: gather + reduce, partitioned by patch row
+    let pm_parts = DisjointMut::new(pm);
+    let pa_parts = pa.map(|p| DisjointMut::new(p));
+    let cm_parts = DisjointMut::new(cm);
+    let cv_parts = DisjointMut::new(cv);
+    let run_tile = |r: std::ops::Range<usize>| {
+        let len = r.end - r.start;
+        // SAFETY: patch-row tiles are disjoint, so every chunk below is
+        // touched by exactly one tile; run_tasks blocks until all finish.
+        let pm_chunk = unsafe { pm_parts.slice(r.start * kk, len * kk) };
+        im2col_rows_into(x_mu, sh, r.clone(), pm_chunk);
+        let pm_chunk: &[f32] = pm_chunk;
+        let pa_chunk: &[f32] = match (x_aux, &pa_parts) {
+            (Some(aux), Some(p)) => {
+                let chunk = unsafe { p.slice(r.start * kk, len * kk) };
+                im2col_rows_into(aux, sh, r.clone(), chunk);
+                chunk
+            }
+            // ignored-aux formulations (Eq. 13 / mean-only) alias the
+            // mean patches instead of gathering twice
+            _ => pm_chunk,
+        };
+        let cm_chunk = unsafe { cm_parts.slice(r.start * o, len * o) };
+        let cv_chunk = unsafe { cv_parts.slice(r.start * o, len * o) };
+        let args = DenseSlices {
+            m: len,
+            k: kk,
+            n: o,
+            x_mu: pm_chunk,
+            x_aux: pa_chunk,
+            w_mu,
+            w_aux,
+            b_mu,
+            b_var,
+        };
+        dense_rows_into::<A>(&args, &serial, 0..len, cm_chunk, cv_chunk);
+    };
+    if tiles.len() <= 1 {
+        run_tile(0..rows);
+    } else {
+        pool.run_tasks(tiles.len(), &|ti| run_tile(tiles[ti].clone()));
+    }
+
+    // phase 2: scatter back to NCHW, partitioned by output plane
+    if scatter_tiles.len() <= 1 {
+        col2im_planes_into(cm, oh, ow, o, 0..sh.n * o, out_mu);
+        col2im_planes_into(cv, oh, ow, o, 0..sh.n * o, out_var);
+    } else {
+        let plane_out = oh * ow;
+        let mu_parts = DisjointMut::new(out_mu);
+        let var_parts = DisjointMut::new(out_var);
+        let cm_ref: &[f32] = cm;
+        let cv_ref: &[f32] = cv;
+        pool.run_tasks(scatter_tiles.len(), &|ti| {
+            let p = scatter_tiles[ti].clone();
+            let len = (p.end - p.start) * plane_out;
+            // SAFETY: plane tiles are disjoint contiguous output chunks.
+            let (mu_chunk, var_chunk) = unsafe {
+                (
+                    mu_parts.slice(p.start * plane_out, len),
+                    var_parts.slice(p.start * plane_out, len),
+                )
+            };
+            col2im_planes_into(cm_ref, oh, ow, o, p.clone(), mu_chunk);
+            col2im_planes_into(cv_ref, oh, ow, o, p, var_chunk);
+        });
+    }
 }
 
 /// Conv arguments: weights OIHW; aux follows the kernel's formulation
@@ -412,6 +560,72 @@ mod tests {
         );
         assert!(first.mu.allclose(&generic.mu, 1e-4, 1e-4));
         assert!(first.aux.allclose(&generic.aux, 2e-3, 2e-3));
+    }
+
+    #[test]
+    fn tiled_conv_bit_identical_to_serial() {
+        // planned patch-row + plane partitions vs the serial kernel: the
+        // lowering must change where work runs, never a single bit
+        use crate::util::threadpool::{split_ranges, ThreadPool};
+        let pool = ThreadPool::new(3);
+        check(6, |g| {
+            let (x, w_mu, w_var, n, _c, o, _k, _hw) = rand_conv_case(g);
+            let w_e2 = w_mu.zip(&w_var, |m, v| m * m + v).unwrap();
+            let xs = x.shape();
+            let ws = w_mu.shape();
+            let sh = ConvShape {
+                n: xs[0],
+                c: xs[1],
+                h: xs[2],
+                w: xs[3],
+                o: ws[0],
+                kh: ws[2],
+                kw: ws[3],
+            };
+            let sched = Schedule::tuned(1);
+            let mut scratch = vec![0.0f32; sh.scratch_len(false)];
+            let mut want_mu = vec![0.0f32; sh.out_len()];
+            let mut want_var = vec![0.0f32; sh.out_len()];
+            conv_kernel_into::<JointEq12>(
+                &pool,
+                &sh,
+                x.mu.data(),
+                Some(x.aux.data()),
+                w_mu.data(),
+                w_e2.data(),
+                None,
+                None,
+                &sched,
+                &mut scratch,
+                &mut want_mu,
+                &mut want_var,
+            );
+            for tasks in [2usize, 3, 7] {
+                let tiles = split_ranges(sh.rows(), tasks);
+                let scatter = split_ranges(n * o, tasks);
+                let mut mu = vec![0.0f32; sh.out_len()];
+                let mut var = vec![0.0f32; sh.out_len()];
+                let mut scratch2 = vec![0.0f32; sh.scratch_len(false)];
+                conv_kernel_tiled_into::<JointEq12>(
+                    &pool,
+                    &sh,
+                    x.mu.data(),
+                    Some(x.aux.data()),
+                    w_mu.data(),
+                    w_e2.data(),
+                    None,
+                    None,
+                    &sched,
+                    &tiles,
+                    &scatter,
+                    &mut scratch2,
+                    &mut mu,
+                    &mut var,
+                );
+                assert_eq!(mu, want_mu, "tasks={tasks} mu");
+                assert_eq!(var, want_var, "tasks={tasks} var");
+            }
+        });
     }
 
     #[test]

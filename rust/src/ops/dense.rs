@@ -21,9 +21,18 @@
 //! untuned baseline) strides the weight matrix by K in its inner loop.
 
 use crate::tensor::Tensor;
-use crate::util::threadpool::{self, split_ranges, ThreadPool};
+use crate::util::threadpool::{self, split_ranges, DisjointMut, ThreadPool};
 
 use super::schedule::{LoopOrder, Schedule};
+
+/// Upper bound on the `tile_n` accumulator block: the cache-blocked loop
+/// body keeps its per-block accumulators in a fixed-size stack array so it
+/// allocates nothing (the compiled plan's zero-steady-state-allocation
+/// guarantee covers tiled schedules too). Larger requested tiles are
+/// processed in `MAX_TILE_N`-wide sub-blocks — numerically identical,
+/// since `tile_n` only groups *independent* outputs; only `tile_k` blocks
+/// the reduction itself.
+pub const MAX_TILE_N: usize = 64;
 
 /// Per-k accumulator contract. `step` must be `#[inline(always)]`-cheap;
 /// the schedule machinery instantiates 1..=16 independent copies for
@@ -379,16 +388,22 @@ fn run_rows<A: Accum>(
             }
         }
         LoopOrder::Mnk => {
-            // tiled: block the n and k loops
-            let tn = if sched.tile_n == 0 { n } else { sched.tile_n };
-            let tk = if sched.tile_k == 0 { k } else { sched.tile_k };
+            // tiled: block the n and k loops. The accumulator block is a
+            // fixed-size stack array (no per-row heap allocation); tile_n
+            // requests beyond MAX_TILE_N run as MAX_TILE_N-wide sub-blocks,
+            // which groups the same independent outputs differently but
+            // never touches the per-(m, n) reduction order.
+            let tn = (if sched.tile_n == 0 { n } else { sched.tile_n })
+                .max(1)
+                .min(MAX_TILE_N);
+            let tk = (if sched.tile_k == 0 { k } else { sched.tile_k }).max(1);
             for (local, m) in rows.enumerate() {
                 let xm = &xm_all[m * k..(m + 1) * k];
                 let xa = &xa_all[m * k..(m + 1) * k];
                 let mut n0 = 0;
                 while n0 < n {
                     let n1 = (n0 + tn).min(n);
-                    let mut accs: Vec<A> = vec![A::default(); n1 - n0];
+                    let mut accs = [A::default(); MAX_TILE_N];
                     let mut k0 = 0;
                     while k0 < k {
                         let k1 = (k0 + tk).min(k);
@@ -453,53 +468,28 @@ fn run_rows<A: Accum>(
     }
 }
 
-/// Execute kernel `A` with schedule `sched` on `pool`, writing the
-/// `[M, N]` moment outputs into caller-provided slices. This is the
-/// zero-allocation core the compiled plan drives: with a serial,
-/// untiled `Mnk` schedule (the tuned default) it performs **no** heap
-/// allocation; tiled/`Mkn` schedules allocate per-row accumulator
-/// vectors and `threads > 1` pays the pool's boxed-job dispatch.
-pub fn dense_kernel_into<A: Accum>(
-    pool: &ThreadPool,
+/// Run kernel `A` serially over output rows `rows` of the full workload
+/// described by `args`, writing the `[rows.len(), N]` chunk
+/// (chunk-relative row indexing) including the bias/clamp epilogue for
+/// those rows. This is one planned *tile*: the compiled plan partitions
+/// rows over the pool and gang-dispatches this per tile. Partitioning
+/// over rows never touches the per-row reduction order, and the epilogue
+/// is elementwise — so **any** row partition is bit-identical to the
+/// serial whole-matrix pass. Allocation-free for `Mnk` schedules (tiled
+/// or not); the deliberately naive `Mkn` baseline allocates its per-row
+/// accumulator vector.
+pub fn dense_rows_into<A: Accum>(
     args: &DenseSlices<'_>,
     sched: &Schedule,
+    rows: std::ops::Range<usize>,
     out_mu: &mut [f32],
     out_var: &mut [f32],
 ) {
-    let (m, n) = (args.m, args.n);
-    debug_assert_eq!(out_mu.len(), m * n);
-    debug_assert_eq!(out_var.len(), m * n);
-    debug_assert_eq!(args.x_mu.len(), m * args.k);
-    debug_assert_eq!(args.x_aux.len(), m * args.k);
-    debug_assert_eq!(args.w_mu.len(), n * args.k);
-    debug_assert_eq!(args.w_aux.len(), n * args.k);
-
-    let threads = sched.threads.max(1).min(m.max(1));
-    if threads <= 1 {
-        run_rows::<A>(args, sched, 0..m, out_mu, out_var);
-    } else {
-        let ranges = split_ranges(m, threads);
-        // split both output buffers into matching disjoint row chunks
-        // (reborrow, not move: the bias epilogue below needs the slices)
-        let mut mu_rest: &mut [f32] = &mut *out_mu;
-        let mut var_rest: &mut [f32] = &mut *out_var;
-        let mut chunks = Vec::new();
-        for r in ranges {
-            let take = (r.end - r.start) * n;
-            let (mu_head, mu_tail) = mu_rest.split_at_mut(take);
-            let (var_head, var_tail) = var_rest.split_at_mut(take);
-            chunks.push((r, mu_head, var_head));
-            mu_rest = mu_tail;
-            var_rest = var_tail;
-        }
-        pool.scope(|s| {
-            for (r, mu_chunk, var_chunk) in chunks {
-                s.spawn(move || run_rows::<A>(args, sched, r, mu_chunk, var_chunk));
-            }
-        });
-    }
-
-    // bias + clamp epilogue
+    let n = args.n;
+    debug_assert_eq!(out_mu.len(), (rows.end - rows.start) * n);
+    debug_assert_eq!(out_var.len(), (rows.end - rows.start) * n);
+    run_rows::<A>(args, sched, rows, out_mu, out_var);
+    // bias + clamp epilogue for this tile's rows
     if let Some(b) = args.b_mu {
         for row in out_mu.chunks_mut(n) {
             for (o, bv) in row.iter_mut().zip(b) {
@@ -521,6 +511,87 @@ pub fn dense_kernel_into<A: Accum>(
             }
         }
     }
+}
+
+/// Execute kernel `A` with schedule `sched` on `pool`, writing the
+/// `[M, N]` moment outputs into caller-provided slices. `threads > 1`
+/// splits rows over boxed scope jobs (the interpreted/Tensor-level path);
+/// the compiled plan instead pre-partitions rows and calls
+/// [`dense_kernel_tiled_into`], whose gang dispatch allocates nothing.
+pub fn dense_kernel_into<A: Accum>(
+    pool: &ThreadPool,
+    args: &DenseSlices<'_>,
+    sched: &Schedule,
+    out_mu: &mut [f32],
+    out_var: &mut [f32],
+) {
+    let (m, n) = (args.m, args.n);
+    debug_assert_eq!(out_mu.len(), m * n);
+    debug_assert_eq!(out_var.len(), m * n);
+    debug_assert_eq!(args.x_mu.len(), m * args.k);
+    debug_assert_eq!(args.x_aux.len(), m * args.k);
+    debug_assert_eq!(args.w_mu.len(), n * args.k);
+    debug_assert_eq!(args.w_aux.len(), n * args.k);
+
+    let threads = sched.threads.max(1).min(m.max(1));
+    if threads <= 1 {
+        dense_rows_into::<A>(args, sched, 0..m, out_mu, out_var);
+        return;
+    }
+    let ranges = split_ranges(m, threads);
+    // split both output buffers into matching disjoint row chunks
+    let mut mu_rest: &mut [f32] = &mut *out_mu;
+    let mut var_rest: &mut [f32] = &mut *out_var;
+    let mut chunks = Vec::new();
+    for r in ranges {
+        let take = (r.end - r.start) * n;
+        let (mu_head, mu_tail) = mu_rest.split_at_mut(take);
+        let (var_head, var_tail) = var_rest.split_at_mut(take);
+        chunks.push((r, mu_head, var_head));
+        mu_rest = mu_tail;
+        var_rest = var_tail;
+    }
+    pool.scope(|s| {
+        for (r, mu_chunk, var_chunk) in chunks {
+            s.spawn(move || dense_rows_into::<A>(args, sched, r, mu_chunk, var_chunk));
+        }
+    });
+}
+
+/// Execute kernel `A` the way [`CompiledPlan`](crate::plan::CompiledPlan)
+/// does: the output rows are pre-partitioned into `tiles` (see
+/// `plan::tile_ranges`), each tile runs the serial kernel over its own
+/// disjoint output chunk, and the tiles are gang-dispatched onto `pool`
+/// with **zero heap allocation** ([`ThreadPool::run_tasks`]). With zero
+/// or one tile this is exactly the serial path. The schedule's own
+/// `threads` knob is ignored here — the plan-level tile partition *is*
+/// the parallelization — and row partitioning keeps the result
+/// bit-identical to the serial pass.
+pub fn dense_kernel_tiled_into<A: Accum>(
+    pool: &ThreadPool,
+    args: &DenseSlices<'_>,
+    sched: &Schedule,
+    tiles: &[std::ops::Range<usize>],
+    out_mu: &mut [f32],
+    out_var: &mut [f32],
+) {
+    let serial = sched.with_threads(1);
+    if tiles.len() <= 1 {
+        dense_rows_into::<A>(args, &serial, 0..args.m, out_mu, out_var);
+        return;
+    }
+    let n = args.n;
+    let mu = DisjointMut::new(out_mu);
+    let var = DisjointMut::new(out_var);
+    pool.run_tasks(tiles.len(), &|ti| {
+        let r = tiles[ti].clone();
+        let len = (r.end - r.start) * n;
+        // SAFETY: tiles are disjoint row ranges, so the chunks never
+        // overlap, and run_tasks blocks until every tile completes.
+        let (mu_chunk, var_chunk) =
+            unsafe { (mu.slice(r.start * n, len), var.slice(r.start * n, len)) };
+        dense_rows_into::<A>(args, &serial, r, mu_chunk, var_chunk);
+    });
 }
 
 /// Execute kernel `A` with schedule `sched` on `pool`
@@ -847,6 +918,46 @@ mod tests {
         );
         assert!((mu.data()[0] - 13.0).abs() < 1e-6);
         assert!((var.data()[0] - 0.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn tiled_gang_dispatch_bit_identical_to_serial() {
+        // the planned path's row partition must not change a single bit,
+        // at any tile count, for plain and cache-blocked schedules alike
+        let pool = crate::util::threadpool::ThreadPool::new(3);
+        let mut g = Gen::new(33);
+        let (m, k, n) = (13, 96, 24);
+        let (x_mu, x_var, w_mu, w_var) = rand_dense(&mut g, m, k, n);
+        let x_e2 = e2_of(&x_mu, &x_var);
+        let w_e2 = e2_of(&w_mu, &w_var);
+        let b_mu: Vec<f32> = g.normal_vec(n, 0.5);
+        let b_var: Vec<f32> = g.var_vec(n, 0.1);
+        let slices = DenseSlices {
+            m,
+            k,
+            n,
+            x_mu: x_mu.data(),
+            x_aux: x_e2.data(),
+            w_mu: w_mu.data(),
+            w_aux: w_e2.data(),
+            b_mu: Some(&b_mu),
+            b_var: Some(&b_var),
+        };
+        for sched in [Schedule::tuned(1), Schedule::tiled(16, 32)] {
+            let mut want_mu = vec![0.0f32; m * n];
+            let mut want_var = vec![0.0f32; m * n];
+            dense_rows_into::<JointEq12>(&slices, &sched, 0..m, &mut want_mu, &mut want_var);
+            for tasks in [2usize, 3, 5, 13] {
+                let tiles = split_ranges(m, tasks);
+                let mut mu = vec![0.0f32; m * n];
+                let mut var = vec![0.0f32; m * n];
+                dense_kernel_tiled_into::<JointEq12>(
+                    &pool, &slices, &sched, &tiles, &mut mu, &mut var,
+                );
+                assert_eq!(mu, want_mu, "{} tasks={tasks} mu", sched.tag());
+                assert_eq!(var, want_var, "{} tasks={tasks} var", sched.tag());
+            }
+        }
     }
 
     #[test]

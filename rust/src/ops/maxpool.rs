@@ -18,7 +18,7 @@
 //! and both are validated against Monte-Carlo.
 
 use crate::tensor::{ProbTensor, Rep, Tensor};
-use crate::util::threadpool::{split_ranges, ThreadPool};
+use crate::util::threadpool::{split_ranges, DisjointMut, ThreadPool};
 
 use super::erf::{erf, norm_pdf, FRAC_1_SQRT_2};
 
@@ -178,6 +178,68 @@ pub fn pfp_maxpool2_vectorized_into(
     });
 }
 
+/// One tile of the vectorized k=2/stride-2 pool: NCHW planes `planes`
+/// into chunk-relative output slices. Planes are independent, so any
+/// plane partition is bit-identical to the serial pass. Allocation-free.
+#[allow(clippy::too_many_arguments)]
+pub fn pfp_maxpool2_planes_into(
+    mu: &[f32],
+    var: &[f32],
+    h: usize,
+    w: usize,
+    planes: std::ops::Range<usize>,
+    out_mu: &mut [f32],
+    out_var: &mut [f32],
+) {
+    let plane_out = (h / 2) * (w / 2);
+    debug_assert_eq!(out_mu.len(), (planes.end - planes.start) * plane_out);
+    for (local, plane) in planes.enumerate() {
+        pool2_plane(mu, var, plane * h * w, h, w, out_mu, out_var, local * plane_out);
+    }
+}
+
+/// Planned-tile vectorized k=2/stride-2 pool: the NCHW plane ranges were
+/// pre-partitioned at plan time and are gang-dispatched onto the pool
+/// with zero heap allocation ([`ThreadPool::run_tasks`]); bit-identical
+/// to the serial pass at any tile count (planes are independent — only
+/// the schedule changes, never the association order).
+#[allow(clippy::too_many_arguments)]
+pub fn pfp_maxpool2_tiled_into(
+    pool: &ThreadPool,
+    mu: &[f32],
+    var: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    tiles: &[std::ops::Range<usize>],
+    out_mu: &mut [f32],
+    out_var: &mut [f32],
+) {
+    let planes = n * c;
+    debug_assert_eq!(mu.len(), planes * h * w);
+    if tiles.len() <= 1 {
+        pfp_maxpool2_planes_into(mu, var, h, w, 0..planes, out_mu, out_var);
+        return;
+    }
+    let plane_out = (h / 2) * (w / 2);
+    let mu_parts = DisjointMut::new(out_mu);
+    let var_parts = DisjointMut::new(out_var);
+    pool.run_tasks(tiles.len(), &|ti| {
+        let r = tiles[ti].clone();
+        let len = (r.end - r.start) * plane_out;
+        // SAFETY: tiles are disjoint plane ranges; run_tasks blocks until
+        // every tile completes.
+        let (mc, vc) = unsafe {
+            (
+                mu_parts.slice(r.start * plane_out, len),
+                var_parts.slice(r.start * plane_out, len),
+            )
+        };
+        pfp_maxpool2_planes_into(mu, var, h, w, r, mc, vc);
+    });
+}
+
 /// Serial plane walk shared by both vectorized-pool entry points: both
 /// source rows two elements at a time — contiguous, fixed-pattern loads
 /// the compiler can keep in registers.
@@ -289,24 +351,76 @@ pub fn pfp_maxpool2_vectorized_in(
     )
 }
 
-/// Slice-level deterministic max-pool (k=2, stride 2).
-pub fn det_maxpool2_into(d: &[f32], n: usize, c: usize, h: usize, w: usize, out: &mut [f32]) {
+/// One NCHW plane of the deterministic k=2/stride-2 max-pool.
+#[inline(always)]
+fn det_pool2_plane(
+    d: &[f32],
+    base: usize,
+    h: usize,
+    w: usize,
+    out: &mut [f32],
+    out_off: usize,
+) {
     let (oh, ow) = (h / 2, w / 2);
-    debug_assert_eq!(d.len(), n * c * h * w);
-    debug_assert_eq!(out.len(), n * c * oh * ow);
-    for plane in 0..n * c {
-        let base = plane * h * w;
-        let obase = plane * oh * ow;
-        for oy in 0..oh {
-            let r0 = base + (2 * oy) * w;
-            let r1 = base + (2 * oy + 1) * w;
-            for ox in 0..ow {
-                let a = d[r0 + 2 * ox].max(d[r0 + 2 * ox + 1]);
-                let b = d[r1 + 2 * ox].max(d[r1 + 2 * ox + 1]);
-                out[obase + oy * ow + ox] = a.max(b);
-            }
+    for oy in 0..oh {
+        let r0 = base + (2 * oy) * w;
+        let r1 = base + (2 * oy + 1) * w;
+        for ox in 0..ow {
+            let a = d[r0 + 2 * ox].max(d[r0 + 2 * ox + 1]);
+            let b = d[r1 + 2 * ox].max(d[r1 + 2 * ox + 1]);
+            out[out_off + oy * ow + ox] = a.max(b);
         }
     }
+}
+
+/// One tile of the deterministic k=2/stride-2 max-pool: planes `planes`
+/// into a chunk-relative output slice.
+pub fn det_maxpool2_planes_into(
+    d: &[f32],
+    h: usize,
+    w: usize,
+    planes: std::ops::Range<usize>,
+    out: &mut [f32],
+) {
+    let plane_out = (h / 2) * (w / 2);
+    debug_assert_eq!(out.len(), (planes.end - planes.start) * plane_out);
+    for (local, plane) in planes.enumerate() {
+        det_pool2_plane(d, plane * h * w, h, w, out, local * plane_out);
+    }
+}
+
+/// Planned-tile deterministic max-pool: plane ranges gang-dispatched with
+/// zero allocation; bit-identical to the serial pass.
+#[allow(clippy::too_many_arguments)]
+pub fn det_maxpool2_tiled_into(
+    pool: &ThreadPool,
+    d: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    tiles: &[std::ops::Range<usize>],
+    out: &mut [f32],
+) {
+    if tiles.len() <= 1 {
+        det_maxpool2_planes_into(d, h, w, 0..n * c, out);
+        return;
+    }
+    let plane_out = (h / 2) * (w / 2);
+    let parts = DisjointMut::new(out);
+    pool.run_tasks(tiles.len(), &|ti| {
+        let r = tiles[ti].clone();
+        let len = (r.end - r.start) * plane_out;
+        // SAFETY: disjoint plane ranges.
+        let chunk = unsafe { parts.slice(r.start * plane_out, len) };
+        det_maxpool2_planes_into(d, h, w, r, chunk);
+    });
+}
+
+/// Slice-level deterministic max-pool (k=2, stride 2).
+pub fn det_maxpool2_into(d: &[f32], n: usize, c: usize, h: usize, w: usize, out: &mut [f32]) {
+    debug_assert_eq!(d.len(), n * c * h * w);
+    det_maxpool2_planes_into(d, h, w, 0..n * c, out);
 }
 
 /// Deterministic max-pool (k=2, stride 2) for the baselines.
@@ -426,6 +540,41 @@ mod tests {
         // planes are independent: parallel split must be bit-identical
         assert_eq!(a.mu.data(), b.mu.data());
         assert_eq!(a.aux.data(), b.aux.data());
+    }
+
+    #[test]
+    fn tiled_pool_bit_identical_to_serial() {
+        let pool = crate::util::threadpool::ThreadPool::new(3);
+        let mut g = Gen::new(13);
+        let (n, c, h, w) = (3usize, 4, 8, 8);
+        let p = rand_prob(&mut g, n, c, h, w);
+        let want = pfp_maxpool2_vectorized(&p);
+        for tasks in [2usize, 3, 5, 12] {
+            let tiles = split_ranges(n * c, tasks);
+            let mut mu = vec![0.0f32; n * c * (h / 2) * (w / 2)];
+            let mut var = vec![0.0f32; n * c * (h / 2) * (w / 2)];
+            pfp_maxpool2_tiled_into(
+                &pool,
+                p.mu.data(),
+                p.aux.data(),
+                n,
+                c,
+                h,
+                w,
+                &tiles,
+                &mut mu,
+                &mut var,
+            );
+            assert_eq!(mu.as_slice(), want.mu.data(), "tasks={tasks}");
+            assert_eq!(var.as_slice(), want.aux.data(), "tasks={tasks}");
+        }
+        // det variant too
+        let x = Tensor::new(vec![n, c, h, w], g.normal_vec(n * c * h * w, 1.0)).unwrap();
+        let want_det = det_maxpool2(&x);
+        let tiles = split_ranges(n * c, 5);
+        let mut out = vec![0.0f32; n * c * (h / 2) * (w / 2)];
+        det_maxpool2_tiled_into(&pool, x.data(), n, c, h, w, &tiles, &mut out);
+        assert_eq!(out.as_slice(), want_det.data());
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! outputs (the joint-operator rule applied to an elementwise op).
 
 use crate::tensor::{ProbTensor, Rep, Tensor};
-use crate::util::threadpool::{self, ThreadPool};
+use crate::util::threadpool::{self, DisjointMut, ThreadPool};
 
 use super::erf::{erf, FRAC_1_SQRT_2, INV_SQRT_2PI};
 
@@ -34,9 +34,62 @@ pub fn pfp_relu(input: ProbTensor, threads: usize) -> ProbTensor {
     pfp_relu_in(threadpool::global(), input, threads)
 }
 
+/// One tile of the moment-matched ReLU: elements `r` of the input, into
+/// chunk-relative output slices. Elementwise, so any partition is
+/// bit-identical to the serial pass. Allocation-free.
+pub fn pfp_relu_rows_into(
+    mu_in: &[f32],
+    var_in: &[f32],
+    r: std::ops::Range<usize>,
+    mu_out: &mut [f32],
+    e2_out: &mut [f32],
+) {
+    debug_assert_eq!(mu_out.len(), r.end - r.start);
+    debug_assert_eq!(e2_out.len(), r.end - r.start);
+    for (j, i) in r.enumerate() {
+        let (m, e2) = relu_moments(mu_in[i], var_in[i]);
+        mu_out[j] = m;
+        e2_out[j] = e2;
+    }
+}
+
+/// Planned-tile moment-matched ReLU: the element ranges were
+/// pre-partitioned at plan time and are gang-dispatched onto the pool
+/// with zero heap allocation ([`ThreadPool::run_tasks`]); with zero or
+/// one tile this is the serial pass, and every partition is bit-identical
+/// to it (elementwise).
+pub fn pfp_relu_tiled_into(
+    pool: &ThreadPool,
+    mu_in: &[f32],
+    var_in: &[f32],
+    tiles: &[std::ops::Range<usize>],
+    mu_out: &mut [f32],
+    e2_out: &mut [f32],
+) {
+    let n = mu_in.len();
+    debug_assert_eq!(var_in.len(), n);
+    debug_assert_eq!(mu_out.len(), n);
+    debug_assert_eq!(e2_out.len(), n);
+    if tiles.len() <= 1 {
+        pfp_relu_rows_into(mu_in, var_in, 0..n, mu_out, e2_out);
+        return;
+    }
+    let mu = DisjointMut::new(mu_out);
+    let e2 = DisjointMut::new(e2_out);
+    pool.run_tasks(tiles.len(), &|ti| {
+        let r = tiles[ti].clone();
+        let len = r.end - r.start;
+        // SAFETY: tiles are disjoint element ranges; run_tasks blocks
+        // until every tile completes.
+        let (mc, ec) = unsafe { (mu.slice(r.start, len), e2.slice(r.start, len)) };
+        pfp_relu_rows_into(mu_in, var_in, r, mc, ec);
+    });
+}
+
 /// Slice-level moment-matched ReLU: reads (mean, variance), writes
 /// (mean, E\[x^2\]) into caller-provided buffers. Allocation-free when
-/// `threads <= 1` (the compiled plan's steady-state path).
+/// `threads <= 1`; `threads > 1` is the boxed scope path used by the
+/// Tensor-level API (the compiled plan uses [`pfp_relu_tiled_into`]).
 pub fn pfp_relu_into(
     pool: &ThreadPool,
     mu_in: &[f32],
@@ -51,11 +104,7 @@ pub fn pfp_relu_into(
     debug_assert_eq!(e2_out.len(), n);
 
     if threads <= 1 {
-        for i in 0..n {
-            let (m, e2) = relu_moments(mu_in[i], var_in[i]);
-            mu_out[i] = m;
-            e2_out[i] = e2;
-        }
+        pfp_relu_rows_into(mu_in, var_in, 0..n, mu_out, e2_out);
     } else {
         // split both output buffers into matching disjoint chunks
         let ranges = crate::util::threadpool::split_ranges(n, threads);
@@ -164,6 +213,27 @@ mod tests {
             let (m, _) = relu_moments(mu, var);
             assert!(m >= mu.max(0.0) - 1e-5);
         });
+    }
+
+    #[test]
+    fn tiled_relu_bit_identical_to_serial() {
+        use crate::util::threadpool::{split_ranges, ThreadPool};
+        let pool = ThreadPool::new(3);
+        let mut g = crate::util::prop::Gen::new(17);
+        let n = 501;
+        let mu: Vec<f32> = g.normal_vec(n, 2.0);
+        let var: Vec<f32> = g.var_vec(n, 1.0);
+        let mut want_mu = vec![0.0f32; n];
+        let mut want_e2 = vec![0.0f32; n];
+        pfp_relu_rows_into(&mu, &var, 0..n, &mut want_mu, &mut want_e2);
+        for tasks in [2usize, 3, 8] {
+            let tiles = split_ranges(n, tasks);
+            let mut got_mu = vec![0.0f32; n];
+            let mut got_e2 = vec![0.0f32; n];
+            pfp_relu_tiled_into(&pool, &mu, &var, &tiles, &mut got_mu, &mut got_e2);
+            assert_eq!(got_mu, want_mu, "tasks={tasks}");
+            assert_eq!(got_e2, want_e2, "tasks={tasks}");
+        }
     }
 
     #[test]

@@ -7,7 +7,17 @@
 //! | Tiling           | `tile_n`/`tile_k` output/reduction blocking (0 = off) |
 //! | Loop Unrolling   | `unroll` ∈ {1,2,4,8}: independent accumulators in the k-loop |
 //! | Vectorization    | `vectorize`: SIMD-friendly fixed-width lanes in the inner loop |
-//! | Parallelization  | `threads`: row-parallel execution via the scoped pool |
+//! | Parallelization  | `threads`: row-parallel execution |
+//!
+//! `threads` has two realizations: the Tensor-level operator API splits
+//! rows over boxed scope jobs at call time, while the compiled plan reads
+//! it at **plan time** to pre-partition each compute step into disjoint
+//! row tiles that are gang-dispatched allocation-free
+//! (`ThreadPool::run_tasks`) — rows are never split along the reduction,
+//! so planned-parallel output is bit-identical to planned-serial. Tiled
+//! schedules run with fixed-size accumulator blocks
+//! (`ops::dense::MAX_TILE_N`) and are admitted into plan lowering like
+//! any other schedule.
 //!
 //! The paper's footnote "tiling does not support stochastic tuning" is
 //! mirrored in `tuner::space`: enabling tiles freezes the stochastic

@@ -16,11 +16,21 @@
 //! * a [`Workspace`] arena sized at plan time: two ping-pong (mean, aux)
 //!   buffers at the network's high-water mark plus im2col scratch, so
 //!   steady-state [`CompiledPlan::execute`] performs **zero** heap
-//!   allocation (serial, untiled-`Mnk` schedules; see `Workspace` docs);
+//!   allocation — serial *and* parallel, tiled or not;
 //! * one schedule bound per *compute step* from the per-layer schedule
 //!   table ([`Schedules::per_layer`]), realizing the paper's
 //!   per-operator-workload tuning: the MLP's 784→100 and 100→10 layers
-//!   can carry different tiles/unrolls.
+//!   can carry different tiles/unrolls;
+//! * the step's **work partition** resolved at plan time: each parallel
+//!   step carries a pre-bound list of disjoint tile tasks (row ranges for
+//!   dense, patch-row + output-plane ranges for conv's im2col lowering,
+//!   element ranges for ReLU, plane ranges for max-pool — split with
+//!   `split_ranges`), sized from the bound schedule's `threads` knob or
+//!   the plan-wide [`Schedules::plan_threads`] override. At execute time
+//!   the tiles are gang-dispatched over the plan's persistent pool
+//!   (`ThreadPool::run_tasks`) with no boxing and no `Vec` growth, and
+//!   because work is partitioned over rows — never over the reduction —
+//!   planned-parallel output is **bit-identical** to planned-serial.
 //!
 //! `PfpExecutor` / `DetExecutor` build-and-cache plans keyed by batch
 //! size, and the serving `NativePfpBackend` maps every dynamic-batcher
@@ -35,16 +45,16 @@ use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::model::{Arch, LayerSpec, PosteriorWeights, Schedules};
-use crate::ops::conv::{conv_kernel_into, ConvShape};
-use crate::ops::dense::{dense_kernel_into, DenseSlices, FirstLayer, JointEq12, MeanOnly};
+use crate::ops::conv::{conv_kernel_tiled_into, ConvShape};
+use crate::ops::dense::{dense_kernel_tiled_into, DenseSlices, FirstLayer, JointEq12, MeanOnly};
 use crate::ops::maxpool::{
-    det_maxpool2_into, pfp_maxpool2_vectorized_into, pfp_maxpool_generic_into,
+    det_maxpool2_tiled_into, pfp_maxpool2_tiled_into, pfp_maxpool_generic_into,
 };
-use crate::ops::relu::pfp_relu_into;
+use crate::ops::relu::pfp_relu_tiled_into;
 use crate::ops::Schedule;
 use crate::profiling::Profiler;
 use crate::tensor::{convert_in_place, Rep};
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{split_ranges, DisjointMut, ThreadPool};
 
 use self::workspace::BufPair;
 
@@ -57,12 +67,30 @@ pub enum PlanMode {
     Det,
 }
 
+/// Plan-time work partition: split `units` (rows / patch rows / planes /
+/// elements, per step kind) into at most `tasks` disjoint contiguous
+/// ranges via [`split_ranges`]. Zero or one effective task means the step
+/// runs serially — an empty vector, so serial plans carry no partition
+/// state at all. This is the partition the tuner's planned-executor
+/// measurements use too, so tuning records describe exactly what runs.
+pub fn tile_ranges(units: usize, tasks: usize) -> Vec<std::ops::Range<usize>> {
+    if tasks <= 1 || units <= 1 {
+        return Vec::new();
+    }
+    split_ranges(units, tasks)
+}
+
 /// One pre-bound executable step.
 #[derive(Clone, Debug)]
 struct Step {
     kind: StepKind,
-    /// Schedule bound at plan time (compute steps only).
+    /// Schedule bound at plan time (compute steps only; `threads` is
+    /// forced to 1 — the tile partition below is the parallelization).
     sched: Schedule,
+    /// Pre-bound disjoint tile tasks: row ranges (dense), patch-row
+    /// ranges (conv phase 1), element ranges (relu), plane ranges
+    /// (max-pool). Empty = serial.
+    tiles: Vec<std::ops::Range<usize>>,
     /// Profiler label: the layer's Table-4 name, or `Convert@<layer>`.
     label: String,
     op_type: &'static str,
@@ -76,13 +104,14 @@ enum StepKind {
     /// input); in det mode the mean-only accumulator runs regardless.
     Dense { w: usize, first: bool, m: usize, k: usize, n: usize },
     /// Scheduled conv kernel via im2col into workspace scratch.
-    Conv { w: usize, first: bool, shape: ConvShape },
+    /// `scatter` is the col2im phase's output-plane partition.
+    Conv { w: usize, first: bool, shape: ConvShape, scatter: Vec<std::ops::Range<usize>> },
     /// Moment-matched ReLU (consumes variance, produces E[x^2]).
-    Relu { threads: usize },
+    Relu,
     /// Deterministic ReLU, in place on the mean buffer.
     ReluDet,
     /// Gaussian max-pool k=2/stride-2 (variance to variance).
-    MaxPool { vectorized: bool, threads: usize, n: usize, c: usize, h: usize, w: usize },
+    MaxPool { vectorized: bool, n: usize, c: usize, h: usize, w: usize },
     /// Deterministic max-pool (means only).
     MaxPoolDet { n: usize, c: usize, h: usize, w: usize },
     /// Explicit representation conversion, in place on the aux buffer.
@@ -157,6 +186,12 @@ impl CompiledPlan {
         let mut hwm = 0usize;
         let mut scratch_len = 0usize;
         let pfp = mode == PlanMode::Pfp;
+        // Effective worker count per step: the plan-wide override when
+        // set, else the knob the step's schedule (or Schedules field)
+        // carries.
+        let plan_threads = schedules.plan_threads;
+        let step_tasks =
+            |sched_threads: usize| if plan_threads > 0 { plan_threads } else { sched_threads };
 
         for (li, layer) in arch.layers.iter().enumerate() {
             match layer {
@@ -184,6 +219,7 @@ impl CompiledPlan {
                         rep = Some(Rep::E2);
                     }
                     let out_len = batch * d_out;
+                    let sched = schedules.layer_schedule(compute_idx, layer);
                     steps.push(Step {
                         kind: StepKind::Dense {
                             w: compute_idx,
@@ -192,7 +228,8 @@ impl CompiledPlan {
                             k,
                             n: *d_out,
                         },
-                        sched: schedules.layer_schedule(compute_idx, layer),
+                        tiles: tile_ranges(batch, step_tasks(sched.threads)),
+                        sched: sched.with_threads(1),
                         label: labels[li].clone(),
                         op_type: "dense",
                         in_len: cur_len,
@@ -248,13 +285,17 @@ impl CompiledPlan {
                     let shared_aux = !pfp || first;
                     scratch_len = scratch_len.max(cs.scratch_len(shared_aux));
                     let out_len = cs.out_len();
+                    let sched = schedules.layer_schedule(compute_idx, layer);
+                    let tasks = step_tasks(sched.threads);
                     steps.push(Step {
                         kind: StepKind::Conv {
                             w: compute_idx,
                             first: pfp && first,
                             shape: cs,
+                            scatter: tile_ranges(batch * *out_ch, tasks),
                         },
-                        sched: schedules.layer_schedule(compute_idx, layer),
+                        tiles: tile_ranges(cs.rows(), tasks),
+                        sched: sched.with_threads(1),
                         label: labels[li].clone(),
                         op_type: "conv2d",
                         in_len: cur_len,
@@ -282,8 +323,9 @@ impl CompiledPlan {
                             ));
                         }
                         steps.push(Step {
-                            kind: StepKind::Relu { threads: schedules.relu_threads },
+                            kind: StepKind::Relu,
                             sched: Schedule::baseline(),
+                            tiles: tile_ranges(cur_len, step_tasks(schedules.relu_threads)),
                             label: labels[li].clone(),
                             op_type: "relu",
                             in_len: cur_len,
@@ -294,6 +336,7 @@ impl CompiledPlan {
                         steps.push(Step {
                             kind: StepKind::ReluDet,
                             sched: Schedule::baseline(),
+                            tiles: tile_ranges(cur_len, step_tasks(schedules.relu_threads)),
                             label: labels[li].clone(),
                             op_type: "relu",
                             in_len: cur_len,
@@ -319,16 +362,23 @@ impl CompiledPlan {
                                 &labels[li],
                             ));
                         }
+                        // the generic (non-vectorized) pool is the Table-3
+                        // slow baseline and stays serial by design
+                        let pool_tiles = if schedules.vectorized_pool {
+                            tile_ranges(batch * c, step_tasks(schedules.maxpool_threads))
+                        } else {
+                            Vec::new()
+                        };
                         steps.push(Step {
                             kind: StepKind::MaxPool {
                                 vectorized: schedules.vectorized_pool,
-                                threads: schedules.maxpool_threads,
                                 n: batch,
                                 c,
                                 h,
                                 w,
                             },
                             sched: Schedule::baseline(),
+                            tiles: pool_tiles,
                             label: labels[li].clone(),
                             op_type: "maxpool",
                             in_len: cur_len,
@@ -339,6 +389,10 @@ impl CompiledPlan {
                         steps.push(Step {
                             kind: StepKind::MaxPoolDet { n: batch, c, h, w },
                             sched: Schedule::baseline(),
+                            tiles: tile_ranges(
+                                batch * c,
+                                step_tasks(schedules.maxpool_threads),
+                            ),
                             label: labels[li].clone(),
                             op_type: "maxpool",
                             in_len: cur_len,
@@ -406,6 +460,14 @@ impl CompiledPlan {
         self.steps.iter().map(|s| (s.label.clone(), s.op_type)).collect()
     }
 
+    /// Steps lowered with a parallel tile partition (>1 pre-bound tile
+    /// task). Zero for a serial plan; lowering with
+    /// [`Schedules::plan_threads`] > 1 (or schedules carrying `threads`
+    /// > 1) partitions every step with enough units to split.
+    pub fn num_parallel_steps(&self) -> usize {
+        self.steps.iter().filter(|s| s.tiles.len() > 1).count()
+    }
+
     /// The dense-kernel workload of every compute step (conv steps report
     /// their im2col'd dims) — the tuner's per-layer search targets.
     pub fn dense_workloads(&self) -> Vec<DenseWorkload> {
@@ -437,9 +499,13 @@ impl CompiledPlan {
     /// input rank — shapes were resolved at compile time). Returns the
     /// output moment slices `[batch, classes]` borrowed from the
     /// workspace: mean and variance in PFP mode; in det mode the second
-    /// slice is unspecified. Allocation-free at steady state; `profiler`
-    /// (when enabled) attributes every step, conversions under their
-    /// `Convert@<layer>` label.
+    /// slice is unspecified. Allocation-free at steady state, serial and
+    /// parallel alike: parallel steps gang-dispatch their pre-bound tile
+    /// tasks over the plan's pool (`ThreadPool::run_tasks` — no boxing,
+    /// no `Vec` growth), and because tiles partition rows, never the
+    /// reduction, the output is bit-identical at every tile count.
+    /// `profiler` (when enabled) attributes every step, conversions under
+    /// their `Convert@<layer>` label.
     pub fn execute<'w>(
         &self,
         x: &[f32],
@@ -476,8 +542,21 @@ impl CompiledPlan {
                     let cur = if cur_a { &mut *a } else { &mut *b };
                     let mu = &mut cur.mu[..step.in_len];
                     profiler.record(&step.label, step.op_type, || {
-                        for v in mu.iter_mut() {
-                            *v = v.max(0.0);
+                        if step.tiles.len() <= 1 {
+                            for v in mu.iter_mut() {
+                                *v = v.max(0.0);
+                            }
+                        } else {
+                            let parts = DisjointMut::new(mu);
+                            pool.run_tasks(step.tiles.len(), &|ti| {
+                                let r = step.tiles[ti].clone();
+                                // SAFETY: disjoint element ranges.
+                                let chunk =
+                                    unsafe { parts.slice(r.start, r.end - r.start) };
+                                for v in chunk.iter_mut() {
+                                    *v = v.max(0.0);
+                                }
+                            });
                         }
                     });
                 }
@@ -511,20 +590,20 @@ impl CompiledPlan {
                     let out_mu = &mut dst.mu[..step.out_len];
                     let out_var = &mut dst.aux[..step.out_len];
                     profiler.record(&step.label, step.op_type, || match (self.mode, *first) {
-                        (PlanMode::Det, _) => dense_kernel_into::<MeanOnly>(
-                            pool, &args, &step.sched, out_mu, out_var,
+                        (PlanMode::Det, _) => dense_kernel_tiled_into::<MeanOnly>(
+                            pool, &args, &step.sched, &step.tiles, out_mu, out_var,
                         ),
-                        (PlanMode::Pfp, true) => dense_kernel_into::<FirstLayer>(
-                            pool, &args, &step.sched, out_mu, out_var,
+                        (PlanMode::Pfp, true) => dense_kernel_tiled_into::<FirstLayer>(
+                            pool, &args, &step.sched, &step.tiles, out_mu, out_var,
                         ),
-                        (PlanMode::Pfp, false) => dense_kernel_into::<JointEq12>(
-                            pool, &args, &step.sched, out_mu, out_var,
+                        (PlanMode::Pfp, false) => dense_kernel_tiled_into::<JointEq12>(
+                            pool, &args, &step.sched, &step.tiles, out_mu, out_var,
                         ),
                     });
                     cur_a = dst_is_a;
                     first_done = true;
                 }
-                StepKind::Conv { w, first, shape } => {
+                StepKind::Conv { w, first, shape, scatter } => {
                     let lw = &self.weights.layers[*w];
                     let dst_is_a = !first_done || !cur_a;
                     let (dst, src) = if dst_is_a { (&mut *a, &*b) } else { (&mut *b, &*a) };
@@ -545,7 +624,7 @@ impl CompiledPlan {
                     let out_var = &mut dst.aux[..step.out_len];
                     let scratch = &mut scratch[..];
                     profiler.record(&step.label, step.op_type, || match (self.mode, *first) {
-                        (PlanMode::Det, _) => conv_kernel_into::<MeanOnly>(
+                        (PlanMode::Det, _) => conv_kernel_tiled_into::<MeanOnly>(
                             pool,
                             shape,
                             x_mu,
@@ -555,11 +634,13 @@ impl CompiledPlan {
                             Some(lw.b_mu.data()),
                             b_var,
                             &step.sched,
+                            &step.tiles,
+                            scatter,
                             scratch,
                             out_mu,
                             out_var,
                         ),
-                        (PlanMode::Pfp, true) => conv_kernel_into::<FirstLayer>(
+                        (PlanMode::Pfp, true) => conv_kernel_tiled_into::<FirstLayer>(
                             pool,
                             shape,
                             x_mu,
@@ -569,11 +650,13 @@ impl CompiledPlan {
                             Some(lw.b_mu.data()),
                             b_var,
                             &step.sched,
+                            &step.tiles,
+                            scatter,
                             scratch,
                             out_mu,
                             out_var,
                         ),
-                        (PlanMode::Pfp, false) => conv_kernel_into::<JointEq12>(
+                        (PlanMode::Pfp, false) => conv_kernel_tiled_into::<JointEq12>(
                             pool,
                             shape,
                             x_mu,
@@ -583,6 +666,8 @@ impl CompiledPlan {
                             Some(lw.b_mu.data()),
                             b_var,
                             &step.sched,
+                            &step.tiles,
+                            scatter,
                             scratch,
                             out_mu,
                             out_var,
@@ -591,18 +676,18 @@ impl CompiledPlan {
                     cur_a = dst_is_a;
                     first_done = true;
                 }
-                StepKind::Relu { threads } => {
+                StepKind::Relu => {
                     let (dst, src) = if cur_a { (&mut *b, &*a) } else { (&mut *a, &*b) };
                     let mu_in = &src.mu[..step.in_len];
                     let var_in = &src.aux[..step.in_len];
                     let mu_out = &mut dst.mu[..step.out_len];
                     let e2_out = &mut dst.aux[..step.out_len];
                     profiler.record(&step.label, step.op_type, || {
-                        pfp_relu_into(pool, mu_in, var_in, *threads, mu_out, e2_out)
+                        pfp_relu_tiled_into(pool, mu_in, var_in, &step.tiles, mu_out, e2_out)
                     });
                     cur_a = !cur_a;
                 }
-                StepKind::MaxPool { vectorized, threads, n, c, h, w } => {
+                StepKind::MaxPool { vectorized, n, c, h, w } => {
                     let (dst, src) = if cur_a { (&mut *b, &*a) } else { (&mut *a, &*b) };
                     let mu_in = &src.mu[..step.in_len];
                     let var_in = &src.aux[..step.in_len];
@@ -610,8 +695,8 @@ impl CompiledPlan {
                     let var_out = &mut dst.aux[..step.out_len];
                     profiler.record(&step.label, step.op_type, || {
                         if *vectorized {
-                            pfp_maxpool2_vectorized_into(
-                                pool, mu_in, var_in, *n, *c, *h, *w, *threads, mu_out,
+                            pfp_maxpool2_tiled_into(
+                                pool, mu_in, var_in, *n, *c, *h, *w, &step.tiles, mu_out,
                                 var_out,
                             )
                         } else {
@@ -627,7 +712,9 @@ impl CompiledPlan {
                     let mu_in = &src.mu[..step.in_len];
                     let mu_out = &mut dst.mu[..step.out_len];
                     profiler.record(&step.label, step.op_type, || {
-                        det_maxpool2_into(mu_in, *n, *c, *h, *w, mu_out)
+                        det_maxpool2_tiled_into(
+                            pool, mu_in, *n, *c, *h, *w, &step.tiles, mu_out,
+                        )
                     });
                     cur_a = !cur_a;
                 }
@@ -643,6 +730,7 @@ fn convert_step(from: Rep, to: Rep, len: usize, at: &str) -> Step {
     Step {
         kind: StepKind::Convert { from, to },
         sched: Schedule::baseline(),
+        tiles: Vec::new(),
         label: format!("Convert@{at}"),
         op_type: "convert",
         in_len: len,
@@ -772,6 +860,78 @@ mod tests {
         let mut prof = Profiler::new(false);
         let (mu, _) = plan.execute(x.data(), &mut ws, &mut prof);
         assert!(mu.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn plan_threads_partitions_steps_at_plan_time() {
+        let arch = Arch::lenet();
+        let w = Arc::new(PosteriorWeights::synthetic(&arch, 9));
+        let serial = CompiledPlan::compile(
+            &arch,
+            Arc::clone(&w),
+            &Schedules::tuned(1),
+            2,
+            PlanMode::Pfp,
+        )
+        .unwrap();
+        assert_eq!(serial.num_parallel_steps(), 0, "tuned(1) lowers serial");
+        let par = CompiledPlan::compile(
+            &arch,
+            Arc::clone(&w),
+            &Schedules::tuned(1).with_plan_threads(4),
+            2,
+            PlanMode::Pfp,
+        )
+        .unwrap();
+        // every conv (patch rows), dense (batch rows), relu (elements)
+        // and vectorized pool (planes) step with >1 unit gets a partition
+        assert!(
+            par.num_parallel_steps() >= 11,
+            "only {} of {} steps partitioned",
+            par.num_parallel_steps(),
+            par.num_steps()
+        );
+        // schedules carrying threads themselves also partition (no
+        // plan_threads override needed)
+        let from_sched =
+            CompiledPlan::compile(&arch, w, &Schedules::tuned(3), 2, PlanMode::Pfp).unwrap();
+        assert!(from_sched.num_parallel_steps() >= 5, "dense/conv steps partition");
+    }
+
+    #[test]
+    fn parallel_execute_bit_identical_to_serial() {
+        for arch in [Arch::mlp(), Arch::lenet()] {
+            let w = Arc::new(PosteriorWeights::synthetic(&arch, 10));
+            let x = input(&arch, 4, 21);
+            let mut prof = Profiler::new(false);
+            let serial = CompiledPlan::compile(
+                &arch,
+                Arc::clone(&w),
+                &Schedules::tuned(1),
+                4,
+                PlanMode::Pfp,
+            )
+            .unwrap();
+            let mut ws = serial.workspace();
+            let (want_mu, want_var) = {
+                let (m, v) = serial.execute(x.data(), &mut ws, &mut prof);
+                (m.to_vec(), v.to_vec())
+            };
+            for t in [2usize, 3, 8] {
+                let par = CompiledPlan::compile(
+                    &arch,
+                    Arc::clone(&w),
+                    &Schedules::tuned(1).with_plan_threads(t),
+                    4,
+                    PlanMode::Pfp,
+                )
+                .unwrap();
+                let mut ws = par.workspace();
+                let (mu, var) = par.execute(x.data(), &mut ws, &mut prof);
+                assert_eq!(want_mu.as_slice(), mu, "{} t={t} mu", arch.name);
+                assert_eq!(want_var.as_slice(), var, "{} t={t} var", arch.name);
+            }
+        }
     }
 
     #[test]

@@ -4,9 +4,14 @@
 //! network's high-water mark plus one scratch region for the im2col conv
 //! lowering, all allocated once at plan time. Steady-state
 //! `CompiledPlan::execute` calls write every intermediate activation into
-//! these buffers and perform **zero** heap allocation (with serial,
-//! untiled-`Mnk` schedules — the tuned default; parallel dispatch and the
-//! tiled/`Mkn` loop bodies pay their own small allocations).
+//! these buffers and perform **zero** heap allocation — serial and
+//! parallel alike. Parallel steps need no execute-time task structures
+//! here: their disjoint tile partitions are pre-bound in the plan's steps
+//! at compile time and gang-dispatched by reference
+//! (`ThreadPool::run_tasks`), with each tile carving its `&mut` chunk out
+//! of these buffers via raw-pointer splits. Only the deliberately naive
+//! `Mkn` baseline schedule (Table 2 row 1) still allocates inside its
+//! loop body.
 
 /// One (mean, aux) activation buffer of the ping-pong pair.
 #[derive(Debug, Default)]

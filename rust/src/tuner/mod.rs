@@ -19,11 +19,12 @@ pub use space::SearchSpace;
 use std::sync::Arc;
 
 use crate::model::{Arch, PosteriorWeights, Schedules};
-use crate::ops::dense::{pfp_dense_joint, DenseArgs};
+use crate::ops::dense::{dense_kernel_tiled_into, DenseSlices, JointEq12};
 use crate::ops::Schedule;
-use crate::plan::{CompiledPlan, DenseWorkload, PlanMode};
+use crate::plan::{tile_ranges, CompiledPlan, DenseWorkload, PlanMode};
 use crate::tensor::Tensor;
 use crate::util::rng::SplitMix64;
+use crate::util::threadpool;
 
 /// One measured trial.
 #[derive(Clone, Debug)]
@@ -152,9 +153,15 @@ pub struct LayerTuneResult {
 /// search the paper's Meta-Scheduler runs, feeding
 /// [`Schedules::per_layer`] via [`TuningRecords::layer_key`] records.
 ///
-/// Measurement uses the production Eq. 12 joint kernel over the given
-/// posterior's real weight tensors (flattened to `[N, K]` — identical
-/// memory layout) and synthetic activations of the layer's true shape.
+/// Measurement runs the **planned executor**, not the Tensor-level
+/// operator API: each candidate's `threads` knob becomes the same
+/// pre-partitioned row-tile set the compiled plan would bind
+/// ([`tile_ranges`]), gang-dispatched onto the process pool into reused
+/// output buffers ([`dense_kernel_tiled_into`]) — so a persisted record
+/// describes exactly the code path that serves it, parallel and tiled
+/// candidates included. Inputs are the posterior's real weight tensors
+/// (flattened to `[N, K]` — identical memory layout) and synthetic
+/// activations of the layer's true shape.
 pub fn tune_per_layer(
     arch: &Arch,
     weights: &PosteriorWeights,
@@ -172,6 +179,7 @@ pub fn tune_per_layer(
     )
     .expect("plan lowering failed");
     let mut rng = SplitMix64::new(opts.seed ^ 0xA11C);
+    let pool = threadpool::global();
     plan.dense_workloads()
         .into_iter()
         .map(|wl| {
@@ -182,17 +190,29 @@ pub fn tune_per_layer(
             rng.fill_normal(&mut x, 0.5, 0.25);
             let x_mu = Tensor::new(vec![wl.m, wl.k], x).unwrap();
             let x_e2 = x_mu.squared();
+            // reused across trials, like the plan's workspace
+            let mut out_mu = vec![0.0f32; wl.m * wl.n];
+            let mut out_var = vec![0.0f32; wl.m * wl.n];
+            let slices = DenseSlices {
+                m: wl.m,
+                k: wl.k,
+                n: wl.n,
+                x_mu: x_mu.data(),
+                x_aux: x_e2.data(),
+                w_mu: w_mu.data(),
+                w_aux: w_e2.data(),
+                b_mu: Some(lw.b_mu.data()),
+                b_var: Some(lw.b_var.data()),
+            };
             let result = tune(space, opts, |s| {
-                let _ = pfp_dense_joint(
-                    &DenseArgs {
-                        x_mu: &x_mu,
-                        x_aux: &x_e2,
-                        w_mu: &w_mu,
-                        w_aux: &w_e2,
-                        b_mu: Some(lw.b_mu.data()),
-                        b_var: Some(lw.b_var.data()),
-                    },
+                let tiles = tile_ranges(wl.m, s.threads);
+                dense_kernel_tiled_into::<JointEq12>(
+                    pool,
+                    &slices,
                     s,
+                    &tiles,
+                    &mut out_mu,
+                    &mut out_var,
                 );
             });
             LayerTuneResult { workload: wl, result }
@@ -203,6 +223,7 @@ pub fn tune_per_layer(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ops::dense::{pfp_dense_joint, DenseArgs};
     use crate::util::prop::Gen;
 
     #[test]
@@ -247,5 +268,35 @@ mod tests {
         assert_eq!((res[0].workload.m, res[0].workload.k, res[0].workload.n), (4, 784, 100));
         assert_eq!((res[2].workload.k, res[2].workload.n), (100, 10));
         assert!(res.iter().all(|r| r.result.best_ms > 0.0));
+    }
+
+    #[test]
+    fn per_layer_tuning_searches_parallel_and_tiled_candidates() {
+        // with a multi-thread space every candidate — parallel and tiled
+        // included — must measure through the planned tile executor
+        // without error; the recorded trials cover the parallel region
+        let arch = Arch::mlp();
+        let w = PosteriorWeights::synthetic(&arch, 4);
+        let mut space = SearchSpace::dense_default(3);
+        space.tile_prob = 0.6; // force tiled candidates into the sample
+        let opts = TuneOpts {
+            random_trials: 8,
+            generations: 1,
+            population: 3,
+            reps: 1,
+            seed: 7,
+        };
+        let res = tune_per_layer(&arch, &w, 4, opts, &space);
+        let trials: Vec<&Trial> =
+            res.iter().flat_map(|r| r.result.trials.iter()).collect();
+        assert!(
+            trials.iter().any(|t| t.schedule.threads > 1),
+            "no parallel candidate was measured"
+        );
+        assert!(
+            trials.iter().any(|t| t.schedule.tile_n > 0),
+            "no tiled candidate was measured"
+        );
+        assert!(trials.iter().all(|t| t.median_ms > 0.0));
     }
 }

@@ -1,6 +1,12 @@
 //! Tuning records: persisted best schedules per (operator, arch, batch)
 //! so serving and benches reuse tuning results without re-searching —
 //! the analog of TVM's tuning logs.
+//!
+//! Records carry a schema [`version`](SCHEMA_VERSION): a records file
+//! tuned against a different code revision (different measurement
+//! harness, schedule semantics, or executor) binds schedules that no
+//! longer describe what runs, so a version mismatch is **warned about and
+//! ignored** instead of silently loaded.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -9,10 +15,28 @@ use crate::error::{Error, Result};
 use crate::ops::Schedule;
 use crate::util::json::Json;
 
+/// Current tuning-record schema version, stamped into every saved file as
+/// the reserved `__version__` key. Bump whenever what a record *means*
+/// changes. History:
+///
+/// * (unversioned) — PR 3: schedules measured on the Tensor-level
+///   interpreted operator API.
+/// * 2 — PR 4: schedules measured against the planned tile executor
+///   (row-partition gang dispatch, `threads` = plan-time tile count).
+pub const SCHEMA_VERSION: u64 = 2;
+
 /// Key -> (schedule, measured median ms).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct TuningRecords {
+    /// Schema version these records were produced under.
+    pub version: u64,
     pub records: BTreeMap<String, (Schedule, f64)>,
+}
+
+impl Default for TuningRecords {
+    fn default() -> Self {
+        Self { version: SCHEMA_VERSION, records: BTreeMap::new() }
+    }
 }
 
 impl TuningRecords {
@@ -85,6 +109,7 @@ impl TuningRecords {
 
     pub fn to_json(&self) -> Json {
         let mut obj = BTreeMap::new();
+        obj.insert("__version__".to_string(), Json::Num(self.version as f64));
         for (k, (s, ms)) in &self.records {
             obj.insert(
                 k.clone(),
@@ -97,12 +122,32 @@ impl TuningRecords {
         Json::Obj(obj)
     }
 
+    /// Parse records. A file whose `__version__` is missing (pre-version
+    /// era) or differs from [`SCHEMA_VERSION`] was tuned against a
+    /// different code revision: it is ignored with a warning — the caller
+    /// gets an empty table and falls back to the built-in schedules — not
+    /// silently bound.
     pub fn from_json(v: &Json) -> Result<Self> {
         let obj = v
             .as_obj()
             .ok_or_else(|| Error::Json("tuning records must be an object".into()))?;
+        let version = obj
+            .get("__version__")
+            .and_then(|n| n.as_f64())
+            .map(|n| n as u64)
+            .unwrap_or(0);
+        if version != SCHEMA_VERSION {
+            eprintln!(
+                "warning: ignoring tuning records with schema version {version} \
+                 (current {SCHEMA_VERSION}); re-run `pfp tune` to refresh them"
+            );
+            return Ok(Self::default());
+        }
         let mut records = BTreeMap::new();
         for (k, entry) in obj {
+            if k == "__version__" {
+                continue;
+            }
             let sched = Schedule::from_json(
                 entry
                     .get("schedule")
@@ -111,7 +156,7 @@ impl TuningRecords {
             let ms = entry.num_field("median_ms")?;
             records.insert(k.clone(), (sched, ms));
         }
-        Ok(Self { records })
+        Ok(Self { version, records })
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
@@ -203,6 +248,45 @@ mod tests {
             r.lookup_layer("conv", "lenet", 0, 10, Schedule::baseline()),
             Schedule::baseline()
         );
+    }
+
+    #[test]
+    fn version_mismatch_is_warned_and_ignored() {
+        let mut r = TuningRecords::default();
+        r.insert(TuningRecords::key("dense", "mlp", 10), Schedule::tuned(2), 0.5);
+        // tamper: pretend these were tuned under a future/old revision
+        let mut j = r.to_json();
+        if let Json::Obj(obj) = &mut j {
+            obj.insert("__version__".into(), Json::Num((SCHEMA_VERSION + 1) as f64));
+        }
+        let back = TuningRecords::from_json(&j).unwrap();
+        assert!(back.records.is_empty(), "stale records must not bind");
+        assert_eq!(back.version, SCHEMA_VERSION, "fallback is a current empty table");
+        // lookups on the ignored table fall back to the default schedule
+        assert_eq!(
+            back.lookup("dense", "mlp", 10, Schedule::baseline()),
+            Schedule::baseline()
+        );
+    }
+
+    #[test]
+    fn unversioned_records_are_ignored() {
+        // a PR-3-era file has no __version__ at all: same treatment
+        let text = r#"{"dense/mlp/b10":{"schedule":{"loop_order":"Mnk",
+            "tile_n":0,"tile_k":0,"unroll":8,"vectorize":true,"threads":1},
+            "median_ms":0.5}}"#;
+        let back = TuningRecords::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert!(back.records.is_empty());
+    }
+
+    #[test]
+    fn current_version_roundtrips_through_disk_format() {
+        let mut r = TuningRecords::default();
+        r.insert(TuningRecords::key("dense", "mlp", 10), Schedule::tuned(2), 0.5);
+        let back = TuningRecords::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.version, SCHEMA_VERSION);
+        assert_eq!(back.records.len(), 1, "__version__ is not a record");
+        assert!(back.get("__version__").is_none());
     }
 
     #[test]

@@ -6,25 +6,33 @@
 //! that scheduling overhead dominates parallel gains at the small batch
 //! sizes PFP targets — so unlike the original scoped implementation
 //! (kept as [`scoped_parallel_for`] for the overhead benchmark), the pool
-//! spawns its OS threads **once** and feeds them closures over a channel.
-//! Per-call dispatch cost is a channel send + latch wait instead of a
-//! `thread::spawn`/`join` pair per chunk.
+//! spawns its OS threads **once** and feeds them work from a shared
+//! condvar-guarded queue.
 //!
-//! Borrowed (non-`'static`) closures are supported through a
-//! [`ThreadPool::scope`] entry point in the style of
-//! `crossbeam_utils::thread::scope`: the scope blocks until every spawned
-//! task has completed before returning, so tasks may freely borrow from
-//! the caller's stack.
+//! Two dispatch paths with different cost models:
+//!
+//! * [`ThreadPool::scope`] — crossbeam-style borrowed closures, one boxed
+//!   job per spawned task. Used by the Tensor-level operator API and the
+//!   server's connection pool, where per-call boxing is noise.
+//! * [`ThreadPool::run_tasks`] — **gang dispatch** for the compiled plan's
+//!   pre-partitioned tile tasks: one shared `&dyn Fn(task_index)` closure
+//!   is published in a broadcast slot, workers (and the calling thread,
+//!   which always participates) claim task indices from it until drained.
+//!   No boxing, no channel sends, no `Vec` growth — **zero heap
+//!   allocation per dispatch**, which is what lets `CompiledPlan::execute`
+//!   keep its zero-steady-state-allocation guarantee under parallel
+//!   execution.
 //!
 //! One process-wide pool ([`global`]) backs the free-function helpers
 //! ([`parallel_for`] / [`parallel_rows`]); the serving path shares a
 //! single pool handle across all models and requests via
 //! `model::Schedules::pool`.
 
+use std::cell::Cell;
+use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use crossbeam_utils::thread as cb;
@@ -61,11 +69,54 @@ pub fn split_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// Long-lived worker pool fed through an MPMC (mutex-guarded) channel.
+/// One published gang: `n_tasks` task indices executed by whichever
+/// threads participate (workers + the publishing leader). The raw task
+/// pointer is only dereferenced while the publishing [`ThreadPool::run_tasks`]
+/// frame is alive — it blocks until `next == n_tasks && active == 0`.
+struct GangRun {
+    task: *const (dyn Fn(usize) + Sync),
+    n_tasks: usize,
+    /// Next unclaimed task index.
+    next: usize,
+    /// Claimed tasks still executing.
+    active: usize,
+    panicked: bool,
+}
+
+// SAFETY: the raw pointer crosses threads inside the state mutex; the
+// pointee is `Sync` (bound on `run_tasks`) and outlives every access
+// (the leader blocks until the gang fully drains).
+unsafe impl Send for GangRun {}
+
+struct PoolState {
+    queue: VecDeque<Job>,
+    gang: Option<GangRun>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Workers wait here for queued jobs or a published gang.
+    work_cv: Condvar,
+    /// Gang leaders wait here — for their gang to drain, or for the
+    /// single broadcast slot to free up.
+    sync_cv: Condvar,
+}
+
+thread_local! {
+    /// Set while the current thread executes gang tasks: a nested
+    /// `run_tasks` from inside a task runs inline instead of waiting on
+    /// the (occupied) broadcast slot.
+    static IN_GANG: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Long-lived worker pool fed through a condvar-guarded queue, plus a
+/// broadcast slot for allocation-free gang dispatch
+/// ([`ThreadPool::run_tasks`]).
 ///
-/// Workers run until the pool is dropped. Tasks are submitted through
-/// [`ThreadPool::scope`], which supports stack borrows by blocking until
-/// all of its tasks complete.
+/// Workers run until the pool is dropped. Boxed tasks are submitted
+/// through [`ThreadPool::scope`], which supports stack borrows by
+/// blocking until all of its tasks complete.
 ///
 /// Two sizing modes:
 /// * [`ThreadPool::new`] spawns all `size` workers eagerly — right for
@@ -76,10 +127,10 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 ///   threads (128 with defaults) would sit idle on an embedded target.
 ///   The growth rule (workers >= min(outstanding jobs, cap)) guarantees
 ///   long-running jobs (connection readers/writers) can never starve a
-///   queued job of a worker.
+///   queued job of a worker. Gang dispatch never grows a lazy pool — the
+///   leader runs any unclaimed tasks itself.
 pub struct ThreadPool {
-    tx: Option<Sender<Job>>,
-    rx: Arc<Mutex<Receiver<Job>>>,
+    shared: Arc<Shared>,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     /// Jobs submitted and not yet finished (queued + running).
     outstanding: Arc<AtomicUsize>,
@@ -104,10 +155,16 @@ impl ThreadPool {
     /// on demand up to `size` workers.
     pub fn new_lazy(size: usize) -> Self {
         let size = size.max(1);
-        let (tx, rx) = channel::<Job>();
         Self {
-            tx: Some(tx),
-            rx: Arc::new(Mutex::new(rx)),
+            shared: Arc::new(Shared {
+                state: Mutex::new(PoolState {
+                    queue: VecDeque::new(),
+                    gang: None,
+                    shutdown: false,
+                }),
+                work_cv: Condvar::new(),
+                sync_cv: Condvar::new(),
+            }),
             workers: Mutex::new(Vec::new()),
             outstanding: Arc::new(AtomicUsize::new(0)),
             spawned: AtomicUsize::new(0),
@@ -119,23 +176,21 @@ impl ThreadPool {
     /// loop index) — not `workers.len()`, which two concurrent growers
     /// could read identically.
     fn spawn_worker(&self, id: usize) {
-        let rx = Arc::clone(&self.rx);
+        let shared = Arc::clone(&self.shared);
         let handle = std::thread::Builder::new()
             .name(format!("pfp-pool-{id}"))
-            .spawn(move || loop {
-                // Hold the lock only for the blocking recv; release it
-                // before running the job so other workers can pick up.
-                let job = match rx.lock() {
-                    Ok(guard) => guard.recv(),
-                    Err(_) => break,
-                };
-                match job {
-                    Ok(job) => job(),
-                    Err(_) => break, // sender dropped: shutdown
-                }
-            })
+            .spawn(move || worker_loop(&shared))
             .expect("spawn pool worker");
         self.workers.lock().unwrap().push(handle);
+    }
+
+    /// Push one job onto the queue and wake a worker.
+    fn push_job(&self, job: Job) {
+        let mut st = self.shared.state.lock().unwrap();
+        assert!(!st.shutdown, "pool is shut down");
+        st.queue.push_back(job);
+        drop(st);
+        self.shared.work_cv.notify_one();
     }
 
     /// Queue one job, growing the worker set so that every outstanding
@@ -145,11 +200,7 @@ impl ThreadPool {
         // grown) can never spawn again: skip the outstanding tracking and
         // keep the one-box dispatch on the hot kernel path.
         if self.spawned.load(Ordering::Relaxed) >= self.size {
-            self.tx
-                .as_ref()
-                .expect("pool is shut down")
-                .send(job)
-                .expect("pool channel closed");
+            self.push_job(job);
             return;
         }
         let outstanding = Arc::clone(&self.outstanding);
@@ -158,11 +209,7 @@ impl ThreadPool {
             job();
             outstanding.fetch_sub(1, Ordering::SeqCst);
         });
-        self.tx
-            .as_ref()
-            .expect("pool is shut down")
-            .send(tracked)
-            .expect("pool channel closed");
+        self.push_job(tracked);
         loop {
             let spawned = self.spawned.load(Ordering::SeqCst);
             if spawned >= self.size || spawned >= self.outstanding.load(Ordering::SeqCst) {
@@ -191,6 +238,85 @@ impl ThreadPool {
     /// OS threads actually spawned so far.
     pub fn spawned_workers(&self) -> usize {
         self.spawned.load(Ordering::SeqCst)
+    }
+
+    /// Gang-dispatch `n_tasks` pre-partitioned tasks: `task(i)` runs
+    /// exactly once for every `i in 0..n_tasks`, spread over the pool's
+    /// workers *and* the calling thread, which always participates (so the
+    /// call completes even on a lazy pool with zero spawned workers).
+    /// Blocks until every task has finished.
+    ///
+    /// This is the compiled plan's execution primitive: unlike
+    /// [`ThreadPool::scope`] it performs **zero heap allocation** — the
+    /// shared closure is published by reference in a broadcast slot and
+    /// task indices are claimed under the pool mutex, so the plan's
+    /// zero-steady-state-allocation guarantee survives parallel execution.
+    /// Concurrent `run_tasks` calls on one pool serialize on the slot;
+    /// a nested call from inside a task runs inline. Task panics are
+    /// propagated to the caller after the gang drains.
+    pub fn run_tasks(&self, n_tasks: usize, task: &(dyn Fn(usize) + Sync)) {
+        if n_tasks == 0 {
+            return;
+        }
+        if n_tasks == 1 || IN_GANG.with(|g| g.get()) {
+            for i in 0..n_tasks {
+                task(i);
+            }
+            return;
+        }
+        // Erase the borrow lifetime for the broadcast slot. SAFETY: this
+        // frame blocks until `next == n_tasks && active == 0`, so the
+        // closure outlives every worker-side dereference.
+        let erased: *const (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(
+                task,
+            )
+        };
+        let mut st = self.shared.state.lock().unwrap();
+        while st.gang.is_some() {
+            st = self.shared.sync_cv.wait(st).unwrap();
+        }
+        st.gang = Some(GangRun {
+            task: erased,
+            n_tasks,
+            next: 0,
+            active: 0,
+            panicked: false,
+        });
+        drop(st);
+        self.shared.work_cv.notify_all();
+        IN_GANG.with(|g| g.set(true));
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            let g = st.gang.as_mut().expect("gang retired under its leader");
+            if g.next < g.n_tasks {
+                let idx = g.next;
+                g.next += 1;
+                g.active += 1;
+                drop(st);
+                let ok = catch_unwind(AssertUnwindSafe(|| task(idx))).is_ok();
+                st = self.shared.state.lock().unwrap();
+                let g = st.gang.as_mut().expect("gang retired under its leader");
+                g.active -= 1;
+                if !ok {
+                    g.panicked = true;
+                }
+            } else if g.active > 0 {
+                // stragglers on worker threads: wait for the last one
+                st = self.shared.sync_cv.wait(st).unwrap();
+            } else {
+                let panicked = g.panicked;
+                st.gang = None;
+                drop(st);
+                // wake any leader waiting for the broadcast slot
+                self.shared.sync_cv.notify_all();
+                IN_GANG.with(|g| g.set(false));
+                if panicked {
+                    panic!("gang task panicked");
+                }
+                return;
+            }
+        }
     }
 
     /// Run `f` with a [`Scope`] that can spawn borrowed tasks onto the
@@ -226,10 +352,58 @@ impl ThreadPool {
     }
 }
 
+/// Worker body: gang tasks preempt queued jobs (the gang leader is
+/// blocked waiting on them; queued jobs have their own waiters).
+fn worker_loop(shared: &Shared) {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        let claimed = match st.gang.as_mut() {
+            Some(g) if g.next < g.n_tasks => {
+                let idx = g.next;
+                g.next += 1;
+                g.active += 1;
+                Some((idx, g.task))
+            }
+            _ => None,
+        };
+        if let Some((idx, task)) = claimed {
+            drop(st);
+            IN_GANG.with(|f| f.set(true));
+            // SAFETY: the publishing `run_tasks` frame is alive (it blocks
+            // on `active`), so the closure behind `task` is too.
+            let ok = catch_unwind(AssertUnwindSafe(|| unsafe { (*task)(idx) })).is_ok();
+            IN_GANG.with(|f| f.set(false));
+            st = shared.state.lock().unwrap();
+            let g = st.gang.as_mut().expect("gang retired while tasks active");
+            g.active -= 1;
+            if !ok {
+                g.panicked = true;
+            }
+            if g.next >= g.n_tasks && g.active == 0 {
+                shared.sync_cv.notify_all();
+            }
+            continue;
+        }
+        if let Some(job) = st.queue.pop_front() {
+            drop(st);
+            job();
+            st = shared.state.lock().unwrap();
+            continue;
+        }
+        if st.shutdown {
+            return;
+        }
+        st = shared.work_cv.wait(st).unwrap();
+    }
+}
+
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        // Closing the channel makes every worker's recv fail -> exit.
-        drop(self.tx.take());
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
         for h in self.workers.lock().unwrap().drain(..) {
             let _ = h.join();
         }
@@ -242,6 +416,40 @@ impl std::fmt::Debug for ThreadPool {
             .field("size", &self.size)
             .field("spawned", &self.spawned_workers())
             .finish()
+    }
+}
+
+/// Raw shareable view of a mutable `f32` buffer for gang tasks that write
+/// provably disjoint ranges — the compiled plan's tile partitions. A
+/// borrow-checker-visible `&mut` split is impossible for a closure shared
+/// by every worker, so disjointness is promised by the caller instead.
+#[derive(Clone, Copy)]
+pub struct DisjointMut {
+    ptr: *mut f32,
+    len: usize,
+}
+
+// SAFETY: access is raw-pointer based and the `slice` contract requires
+// callers to hand out non-overlapping ranges.
+unsafe impl Send for DisjointMut {}
+unsafe impl Sync for DisjointMut {}
+
+impl DisjointMut {
+    pub fn new(s: &mut [f32]) -> Self {
+        Self { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// View `len` floats starting at `start` as a mutable slice.
+    ///
+    /// # Safety
+    /// Concurrent callers must request non-overlapping ranges, and the
+    /// backing buffer must outlive every returned slice (guaranteed when
+    /// used inside [`ThreadPool::run_tasks`], which blocks its caller
+    /// until all tasks finish).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [f32] {
+        debug_assert!(start + len <= self.len, "disjoint slice out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
     }
 }
 
@@ -633,6 +841,134 @@ mod tests {
             count.fetch_add(r.end - r.start, Ordering::SeqCst);
         });
         assert_eq!(count.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn run_tasks_executes_every_index_once() {
+        let pool = ThreadPool::new(3);
+        for n_tasks in [1usize, 2, 3, 7, 32] {
+            let hits: Vec<AtomicUsize> =
+                (0..n_tasks).map(|_| AtomicUsize::new(0)).collect();
+            pool.run_tasks(n_tasks, &|i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "task {i} of {n_tasks}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_tasks_completes_with_zero_workers() {
+        // lazy pool, nothing spawned: the leader runs every task itself
+        let pool = ThreadPool::new_lazy(4);
+        let count = AtomicUsize::new(0);
+        pool.run_tasks(5, &|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 5);
+        assert_eq!(pool.spawned_workers(), 0, "gang dispatch never grows a lazy pool");
+    }
+
+    #[test]
+    fn nested_run_tasks_runs_inline() {
+        let pool = ThreadPool::new(2);
+        let count = AtomicUsize::new(0);
+        pool.run_tasks(3, &|_| {
+            // nested gang from inside a task: must not deadlock on the
+            // occupied broadcast slot
+            pool.run_tasks(4, &|_| {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 12);
+    }
+
+    #[test]
+    fn run_tasks_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_tasks(4, &|i| {
+                if i == 2 {
+                    panic!("tile boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        let count = AtomicUsize::new(0);
+        pool.run_tasks(4, &|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn concurrent_run_tasks_serialize_on_the_slot() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let total = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let pool = Arc::clone(&pool);
+            let total = Arc::clone(&total);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..25 {
+                    pool.run_tasks(3, &|_| {
+                        total.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 4 * 25 * 3);
+    }
+
+    #[test]
+    fn run_tasks_coexists_with_scope_jobs() {
+        let pool = Arc::new(ThreadPool::new(3));
+        let scope_count = Arc::new(AtomicUsize::new(0));
+        let gang_count = Arc::new(AtomicUsize::new(0));
+        let p2 = Arc::clone(&pool);
+        let sc = Arc::clone(&scope_count);
+        let bg = std::thread::spawn(move || {
+            p2.scope(|s| {
+                for _ in 0..16 {
+                    let sc = &sc;
+                    s.spawn(move || {
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                        sc.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            });
+        });
+        for _ in 0..10 {
+            pool.run_tasks(4, &|_| {
+                gang_count.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        bg.join().unwrap();
+        assert_eq!(scope_count.load(Ordering::SeqCst), 16);
+        assert_eq!(gang_count.load(Ordering::SeqCst), 40);
+    }
+
+    #[test]
+    fn disjoint_mut_writes_land() {
+        let pool = ThreadPool::new(2);
+        let mut buf = vec![0.0f32; 12];
+        let ranges = split_ranges(12, 4);
+        let parts = DisjointMut::new(&mut buf);
+        pool.run_tasks(ranges.len(), &|ti| {
+            let r = ranges[ti].clone();
+            // SAFETY: split_ranges yields disjoint ranges.
+            let chunk = unsafe { parts.slice(r.start, r.end - r.start) };
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = (r.start + j) as f32;
+            }
+        });
+        for (i, v) in buf.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
     }
 
     #[test]

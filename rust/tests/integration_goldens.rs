@@ -100,9 +100,22 @@ fn compiled_plan_matches_interpreter_on_goldens() {
             PfpExecutor::new(arch.clone(), weights.clone(), Schedules::tuned(1))
                 .forward_interpreted(&x);
         let (mu_p, var_p) =
-            PfpExecutor::new(arch, weights, Schedules::tuned(1)).forward(&x);
+            PfpExecutor::new(arch.clone(), weights.clone(), Schedules::tuned(1))
+                .forward(&x);
         assert_eq!(mu_i.data(), mu_p.data(), "{key}: plan mu != interpreter mu");
         assert_eq!(var_i.data(), var_p.data(), "{key}: plan var != interpreter var");
+        // planned-parallel inherits the golden match too: row-partitioned
+        // tiles must be bit-identical at every thread count
+        for t in [2usize, 4] {
+            let (mu_t, var_t) = PfpExecutor::new(
+                arch.clone(),
+                weights.clone(),
+                Schedules::tuned(1).with_plan_threads(t),
+            )
+            .forward(&x);
+            assert_eq!(mu_p.data(), mu_t.data(), "{key}: t{t} plan mu diverged");
+            assert_eq!(var_p.data(), var_t.data(), "{key}: t{t} plan var diverged");
+        }
     }
 }
 

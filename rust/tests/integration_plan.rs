@@ -44,6 +44,96 @@ fn plan_matches_interpreter_bitwise_across_batches() {
 }
 
 #[test]
+fn planned_parallel_bit_identical_to_serial_and_interpreter() {
+    // The tentpole determinism guarantee: work is partitioned over rows
+    // (never over the reduction), so planned-parallel == planned-serial
+    // == forward_interpreted, bit for bit, at every thread count.
+    for arch in [Arch::mlp(), Arch::lenet()] {
+        let weights = PosteriorWeights::synthetic(&arch, 31);
+        for batch in [1usize, 4, 10] {
+            let x = input(&arch, batch, 100 + batch as u64);
+            let (mu_i, var_i) =
+                PfpExecutor::new(arch.clone(), weights.clone(), Schedules::tuned(1))
+                    .forward_interpreted(&x);
+            let (mu_s, var_s) =
+                PfpExecutor::new(arch.clone(), weights.clone(), Schedules::tuned(1))
+                    .forward(&x);
+            assert_eq!(mu_i.data(), mu_s.data(), "{} b{batch} serial mu", arch.name);
+            assert_eq!(var_i.data(), var_s.data(), "{} b{batch} serial var", arch.name);
+            for t in [2usize, 3, 4, 8] {
+                let (mu_p, var_p) = PfpExecutor::new(
+                    arch.clone(),
+                    weights.clone(),
+                    Schedules::tuned(1).with_plan_threads(t),
+                )
+                .forward(&x);
+                assert_eq!(
+                    mu_s.data(),
+                    mu_p.data(),
+                    "{} b{batch} t{t} mu diverged from serial",
+                    arch.name
+                );
+                assert_eq!(
+                    var_s.data(),
+                    var_p.data(),
+                    "{} b{batch} t{t} var diverged from serial",
+                    arch.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn planned_parallel_tiled_schedules_bit_identical_across_tile_counts() {
+    // Cache-blocked (tiled) schedules are admitted into plan lowering;
+    // within one schedule, the parallel partition must still not change a
+    // bit vs plan_threads = 1 (tile_k changes the reduction *grouping*,
+    // which is why the comparison baseline carries the same schedule).
+    for arch in [Arch::mlp(), Arch::lenet()] {
+        let weights = PosteriorWeights::synthetic(&arch, 32);
+        let x = input(&arch, 6, 41);
+        let mut tiled = Schedules::tuned(1);
+        tiled.dense = Schedule::tuned(1).with_tiles(16, 32);
+        tiled.conv = Schedule::tuned(1).with_tiles(8, 64);
+        let (mu_s, var_s) = PfpExecutor::new(
+            arch.clone(),
+            weights.clone(),
+            tiled.clone().with_plan_threads(1),
+        )
+        .forward(&x);
+        for t in [2usize, 5] {
+            let (mu_p, var_p) = PfpExecutor::new(
+                arch.clone(),
+                weights.clone(),
+                tiled.clone().with_plan_threads(t),
+            )
+            .forward(&x);
+            assert_eq!(mu_s.data(), mu_p.data(), "{} t{t} tiled mu", arch.name);
+            assert_eq!(var_s.data(), var_p.data(), "{} t{t} tiled var", arch.name);
+        }
+    }
+}
+
+#[test]
+fn det_plan_parallel_matches_serial() {
+    use pfp::model::DetExecutor;
+    for arch in [Arch::mlp(), Arch::lenet()] {
+        let weights = PosteriorWeights::synthetic(&arch, 33);
+        let x = input(&arch, 5, 51);
+        let serial = DetExecutor::new(arch.clone(), weights.clone(), Schedules::tuned(1))
+            .forward(&x);
+        let par = DetExecutor::new(
+            arch.clone(),
+            weights.clone(),
+            Schedules::tuned(1).with_plan_threads(4),
+        )
+        .forward(&x);
+        assert_eq!(serial.data(), par.data(), "{} det parallel", arch.name);
+    }
+}
+
+#[test]
 fn plan_parity_holds_for_baseline_schedules_too() {
     // generic pool + Mkn loop order exercise the non-default step kinds
     let arch = Arch::lenet();

@@ -1,17 +1,25 @@
 //! Zero-allocation guarantee for steady-state plan execution, asserted
-//! with a counting global allocator.
+//! with a counting global allocator — serial AND parallel.
 //!
 //! This file deliberately holds a single test: the allocator counter is
 //! process-global, and libtest runs a binary's tests on concurrent
 //! threads — any sibling test would race the measurement window.
 //!
 //! The guarantee being pinned: after warm-up, `CompiledPlan::execute`
-//! with the tuned serial schedule performs **zero** heap allocation —
-//! conv im2col runs in plan-owned scratch, activations ping-pong through
-//! the workspace, conversions rewrite aux in place, and the disabled
-//! profiler is a passthrough. (Parallel schedules pay boxed pool jobs and
-//! tiled/`Mkn` loop bodies allocate accumulators; the tuned default does
-//! neither.)
+//! performs **zero** heap allocation —
+//!
+//! * serial (tuned untiled schedules): conv im2col runs in plan-owned
+//!   scratch, activations ping-pong through the workspace, conversions
+//!   rewrite aux in place, and the disabled profiler is a passthrough;
+//! * parallel + tiled (`plan_threads > 1`, cache-blocked schedules): the
+//!   tile partitions were pre-bound at plan time, dispatch goes through
+//!   the pool's gang broadcast (`ThreadPool::run_tasks` — no boxed jobs,
+//!   no channel sends, no Vec growth), tiles carve disjoint `&mut`
+//!   chunks out of the workspace via raw-pointer splits, and the tiled
+//!   dense loop body keeps its accumulators in a fixed-size stack array.
+//!
+//! Only the deliberately naive `Mkn` baseline schedule still allocates in
+//! its loop body (it is the Table-2 "no optimizations" row).
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -52,15 +60,43 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
 
+/// Warm up, then assert the next `passes` executes allocate nothing.
+fn assert_zero_alloc_window(
+    label: &str,
+    plan: &CompiledPlan,
+    ws: &mut pfp::plan::Workspace,
+    x: &[f32],
+) {
+    let mut prof = Profiler::new(false);
+    // warm-up twice (first call may touch lazily initialized state; the
+    // parallel path also gets every pool worker hot)
+    let _ = plan.execute(x, ws, &mut prof);
+    let _ = plan.execute(x, ws, &mut prof);
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    let mut checksum = 0.0f32;
+    for _ in 0..3 {
+        let (mu, var) = plan.execute(x, ws, &mut prof);
+        checksum += mu[0] + var[var.len() - 1];
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+
+    assert!(checksum.is_finite());
+    assert_eq!(
+        after - before,
+        0,
+        "{label}: steady-state execute allocated {} time(s)",
+        after - before
+    );
+}
+
 #[test]
 fn steady_state_execute_performs_zero_heap_allocation() {
-    // LeNet exercises every step kind: conv (im2col scratch), relu,
-    // vectorized pool, dense, and explicit conversions.
+    // --- serial: tuned untiled schedules, zero-worker lazy pool (never
+    // dispatched to) so no background thread start-up can allocate inside
+    // the measurement window ---
     for arch in [Arch::mlp(), Arch::lenet()] {
         let weights = Arc::new(PosteriorWeights::synthetic(&arch, 7));
-        // serial, untiled Mnk; a zero-worker lazy pool (never dispatched
-        // to) instead of the process-global pool, so no background thread
-        // start-up can allocate inside the measurement window
         let schedules = Schedules {
             dense: Schedule::tuned(1),
             conv: Schedule::tuned(1),
@@ -68,38 +104,53 @@ fn steady_state_execute_performs_zero_heap_allocation() {
             vectorized_pool: true,
             relu_threads: 1,
             maxpool_threads: 1,
+            plan_threads: 0,
             pool: Arc::new(ThreadPool::new_lazy(1)),
             records: None,
         };
         let plan =
             CompiledPlan::compile(&arch, weights, &schedules, 2, PlanMode::Pfp).unwrap();
         let mut ws = plan.workspace();
-        let mut prof = Profiler::new(false);
         let n = 2 * arch.input_len();
         let x: Vec<f32> = {
             let mut g = Gen::new(3);
             (0..n).map(|_| g.f32_in(0.0, 1.0)).collect()
         };
+        assert_zero_alloc_window(&format!("{} serial", arch.name), &plan, &mut ws, &x);
+    }
 
-        // warm-up twice (first call may touch lazily initialized state)
-        let _ = plan.execute(&x, &mut ws, &mut prof);
-        let _ = plan.execute(&x, &mut ws, &mut prof);
-
-        let before = ALLOCS.load(Ordering::SeqCst);
-        let mut checksum = 0.0f32;
-        for _ in 0..3 {
-            let (mu, var) = plan.execute(&x, &mut ws, &mut prof);
-            checksum += mu[0] + var[var.len() - 1];
-        }
-        let after = ALLOCS.load(Ordering::SeqCst);
-
-        assert!(checksum.is_finite());
-        assert_eq!(
-            after - before,
-            0,
-            "{}: steady-state execute allocated {} time(s)",
-            arch.name,
-            after - before
+    // --- parallel + tiled: plan_threads 3 over an eager 3-worker pool
+    // (workers spawned before the window), cache-blocked dense schedule —
+    // LeNet exercises every parallel step kind: conv patch-row tiles +
+    // plane scatter, dense row tiles, relu element tiles, pool plane
+    // tiles, with serial converts in between ---
+    for arch in [Arch::mlp(), Arch::lenet()] {
+        let weights = Arc::new(PosteriorWeights::synthetic(&arch, 8));
+        let pool = Arc::new(ThreadPool::new(3));
+        let schedules = Schedules {
+            dense: Schedule::tuned(1).with_tiles(16, 64),
+            conv: Schedule::tuned(1),
+            per_layer: Vec::new(),
+            vectorized_pool: true,
+            relu_threads: 1,
+            maxpool_threads: 1,
+            plan_threads: 3,
+            pool,
+            records: None,
+        };
+        let plan =
+            CompiledPlan::compile(&arch, weights, &schedules, 4, PlanMode::Pfp).unwrap();
+        assert!(
+            plan.num_parallel_steps() > 0,
+            "{}: parallel lowering must actually partition steps",
+            arch.name
         );
+        let mut ws = plan.workspace();
+        let n = 4 * arch.input_len();
+        let x: Vec<f32> = {
+            let mut g = Gen::new(5);
+            (0..n).map(|_| g.f32_in(0.0, 1.0)).collect()
+        };
+        assert_zero_alloc_window(&format!("{} parallel", arch.name), &plan, &mut ws, &x);
     }
 }

@@ -46,6 +46,7 @@ fn idle_server_owns_no_connection_threads() {
         vectorized_pool: true,
         relu_threads: 1,
         maxpool_threads: 1,
+        plan_threads: 0,
         pool: svc.pool().clone(),
         records: None,
     };

@@ -1,7 +1,7 @@
 # Developer entry points. `make verify` is tier-1 and byte-identical to
 # what CI's build+test jobs run, so local green == CI green.
 
-.PHONY: verify build test bench bench-build fmt clippy python-test artifacts clean
+.PHONY: verify build test test-scalar test-native-cpu bench bench-build fmt clippy python-test artifacts clean
 
 # ---- tier-1 --------------------------------------------------------------
 # (plus the examples + serving/plan bench compile gates, mirroring CI)
@@ -12,6 +12,14 @@ verify:
 	cargo bench --no-run --bench pipeline_throughput
 	cargo bench --no-run --bench plan_vs_interpreter
 	cargo bench --no-run --bench plan_parallel_scaling
+	cargo bench --no-run --bench simd_kernels
+
+# both runtime dispatch branches, exactly as CI's test matrix runs them
+test-scalar:
+	PFP_FORCE_SCALAR=1 cargo test -q
+
+test-native-cpu:
+	RUSTFLAGS=-Ctarget-cpu=native cargo test -q
 
 build:
 	cargo build --release

@@ -91,7 +91,7 @@ fn main() {
     let pv = Tensor::new(vec![10, 6, 24, 24], g.var_vec(10 * 6 * 24 * 24, 0.5)).unwrap();
     let pool_in = ProbTensor::new(pm, pv, Rep::Var);
     results.push(bench("pool: balanced tree (vectorized)", opts, || {
-        black_box(pfp_maxpool2_vectorized(&pool_in));
+        black_box(pfp_maxpool2_vectorized(&pool_in, pfp::ops::Isa::Native));
     }));
     results.push(bench("pool: sequential fold (generic)", opts, || {
         black_box(pfp_maxpool_generic(&pool_in, 2, 2));

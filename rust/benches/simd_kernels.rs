@@ -1,0 +1,178 @@
+//! Scalar vs explicit-SIMD microkernels on the paper's workloads.
+//!
+//! Dense: the Table-2 MLP layers (784→100, 100→100, 100→10) plus LeNet's
+//! conv2 im2col'd dense workload (`[B*64, 150] x [16, 150]`), at batch 1
+//! and 64, through the planned serial row kernel (`dense_rows_into`,
+//! `JointEq12`) — tuned `Mnk` schedule, only the `isa` knob differs. The
+//! moment-matched ReLU is benched too (the transcendental-heavy
+//! elementwise op the SIMD layer accelerates most).
+//!
+//! Each case asserts scalar↔SIMD parity (the 1e-4 cross-ISA contract)
+//! before timing, so a broken backend can't post a fast-but-wrong number.
+//! Emits `BENCH_simd.json` (scalar/simd ns per batch row + speedup per
+//! shape); the CI bench gate compiles this target on every push and the
+//! perf job uploads the JSON artifact. The acceptance bar for the SIMD
+//! layer: `dense1_b64_speedup > 1` on AVX2/NEON hosts (the batch-64
+//! Table-2 shape; trivially ~1 when detection reports scalar).
+
+use pfp::ops::dense::{dense_rows_into, DenseSlices, JointEq12};
+use pfp::ops::relu::pfp_relu_rows_into;
+use pfp::ops::simd::{self, Isa};
+use pfp::ops::Schedule;
+use pfp::util::bench::{bench, black_box, report, BenchOpts};
+use pfp::util::json::Json;
+use pfp::util::prop::Gen;
+
+struct Case {
+    name: &'static str,
+    /// rows per batch element (1 for dense; OH*OW patch rows for conv)
+    rows_per_item: usize,
+    k: usize,
+    n: usize,
+}
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let backend = simd::detect();
+    println!("detected SIMD backend: {}", backend.name());
+
+    let cases = [
+        // Table-2 MLP dense layers on their true shapes
+        Case { name: "dense1_784x100", rows_per_item: 1, k: 784, n: 100 },
+        Case { name: "dense2_100x100", rows_per_item: 1, k: 100, n: 100 },
+        Case { name: "dense3_100x10", rows_per_item: 1, k: 100, n: 10 },
+        // LeNet conv2 as the plan executes it: im2col'd dense rows
+        Case { name: "conv2_im2col_150x16", rows_per_item: 64, k: 150, n: 16 },
+    ];
+
+    let mut results = Vec::new();
+    let mut summary: Vec<(String, Json)> = Vec::new();
+    let mut g = Gen::new(0x51D);
+
+    for batch in [1usize, 64] {
+        for case in &cases {
+            let m = batch * case.rows_per_item;
+            let (k, n) = (case.k, case.n);
+            let x_mu = g.normal_vec(m * k, 1.0);
+            let x_e2: Vec<f32> = x_mu.iter().map(|&v| v * v + 0.1).collect();
+            let w_mu = g.normal_vec(n * k, 0.2);
+            let w_e2: Vec<f32> = w_mu.iter().map(|&v| v * v + 0.01).collect();
+            let b_mu = g.normal_vec(n, 0.5);
+            let b_var = g.var_vec(n, 0.1);
+            let slices = DenseSlices {
+                m,
+                k,
+                n,
+                x_mu: &x_mu,
+                x_aux: &x_e2,
+                w_mu: &w_mu,
+                w_aux: &w_e2,
+                b_mu: Some(&b_mu),
+                b_var: Some(&b_var),
+            };
+            let scalar = Schedule::tuned(1).with_isa(Isa::Scalar);
+            let native = Schedule::tuned(1).with_isa(Isa::Native);
+
+            // parity guard: a broken backend must not post a number
+            let mut mu_s = vec![0.0f32; m * n];
+            let mut var_s = vec![0.0f32; m * n];
+            let mut mu_n = vec![0.0f32; m * n];
+            let mut var_n = vec![0.0f32; m * n];
+            dense_rows_into::<JointEq12>(&slices, &scalar, 0..m, &mut mu_s, &mut var_s);
+            dense_rows_into::<JointEq12>(&slices, &native, 0..m, &mut mu_n, &mut var_n);
+            for i in 0..m * n {
+                assert!(
+                    (mu_s[i] - mu_n[i]).abs() <= 1e-4 + 1e-4 * mu_s[i].abs(),
+                    "{} b{batch}: scalar/simd mu diverged at {i}",
+                    case.name
+                );
+                assert!(
+                    (var_s[i] - var_n[i]).abs() <= 1e-3 + 1e-3 * var_s[i].abs(),
+                    "{} b{batch}: scalar/simd var diverged at {i}",
+                    case.name
+                );
+            }
+
+            let r_scalar = bench(&format!("{} b{batch} scalar", case.name), opts, || {
+                dense_rows_into::<JointEq12>(&slices, &scalar, 0..m, &mut mu_s, &mut var_s);
+                black_box(mu_s[0]);
+            });
+            let r_simd = bench(
+                &format!("{} b{batch} {}", case.name, backend.name()),
+                opts,
+                || {
+                    dense_rows_into::<JointEq12>(&slices, &native, 0..m, &mut mu_n, &mut var_n);
+                    black_box(mu_n[0]);
+                },
+            );
+
+            let ns_row = |median_s: f64| median_s * 1e9 / batch as f64;
+            summary.push((
+                format!("{}_b{batch}_scalar_ns_row", case.name),
+                Json::Num(ns_row(r_scalar.median_s)),
+            ));
+            summary.push((
+                format!("{}_b{batch}_simd_ns_row", case.name),
+                Json::Num(ns_row(r_simd.median_s)),
+            ));
+            summary.push((
+                format!("{}_b{batch}_speedup", case.name),
+                Json::Num(if r_simd.median_s > 0.0 {
+                    r_scalar.median_s / r_simd.median_s
+                } else {
+                    0.0
+                }),
+            ));
+            results.push(r_scalar);
+            results.push(r_simd);
+        }
+    }
+
+    // the elementwise transcendental hot spot: moment-matched ReLU on a
+    // LeNet-conv1-sized activation (batch 64)
+    {
+        let n = 64 * 6 * 24 * 24;
+        let mu = g.normal_vec(n, 2.0);
+        let var = g.var_vec(n, 1.0);
+        let mut om = vec![0.0f32; n];
+        let mut oe = vec![0.0f32; n];
+        let r_scalar = bench("relu_moments b64 scalar", opts, || {
+            pfp_relu_rows_into(Isa::Scalar, &mu, &var, 0..n, &mut om, &mut oe);
+            black_box(om[0]);
+        });
+        let r_simd = bench(&format!("relu_moments b64 {}", backend.name()), opts, || {
+            pfp_relu_rows_into(Isa::Native, &mu, &var, 0..n, &mut om, &mut oe);
+            black_box(om[0]);
+        });
+        summary.push((
+            "relu_b64_scalar_ns_row".into(),
+            Json::Num(r_scalar.median_s * 1e9 / 64.0),
+        ));
+        summary.push((
+            "relu_b64_simd_ns_row".into(),
+            Json::Num(r_simd.median_s * 1e9 / 64.0),
+        ));
+        summary.push((
+            "relu_b64_speedup".into(),
+            Json::Num(if r_simd.median_s > 0.0 {
+                r_scalar.median_s / r_simd.median_s
+            } else {
+                0.0
+            }),
+        ));
+        results.push(r_scalar);
+        results.push(r_simd);
+    }
+
+    summary.push(("backend".into(), Json::Str(backend.name().to_string())));
+
+    report("scalar vs explicit SIMD microkernels", &results);
+
+    let refs: Vec<(&str, Json)> =
+        summary.iter().map(|(kk, v)| (kk.as_str(), v.clone())).collect();
+    let json = Json::obj(refs);
+    println!("\nBENCH_simd.json {}", json.dump());
+    if let Err(e) = std::fs::write("BENCH_simd.json", json.dump()) {
+        eprintln!("could not write BENCH_simd.json: {e}");
+    }
+}

@@ -98,13 +98,16 @@ fn main() {
     results.push(bench("pool only / generic, auto-tuned", opts, || {
         black_box(pool_generic_autotuned(&input, threads));
     }));
-    results.push(bench("pool only / vectorized k=2", opts, || {
-        black_box(pfp_maxpool2_vectorized(&input));
+    results.push(bench("pool only / vectorized k=2 (scalar isa)", opts, || {
+        black_box(pfp_maxpool2_vectorized(&input, pfp::ops::Isa::Scalar));
+    }));
+    results.push(bench("pool only / vectorized k=2 (simd isa)", opts, || {
+        black_box(pfp_maxpool2_vectorized(&input, pfp::ops::Isa::Native));
     }));
     results.push(bench("pool only / vectorized + auto sched", opts, || {
         // the paper's pathological row: auto-scheduling the hand-tuned op
         let v = pool_generic_autotuned(&input, threads);
-        black_box(pfp_maxpool2_vectorized(&v));
+        black_box(pfp_maxpool2_vectorized(&v, pfp::ops::Isa::Native));
     }));
 
     // ---- whole-network effect (Table 3 right column) ---------------------

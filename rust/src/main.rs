@@ -58,14 +58,19 @@ fn print_help() {
            serve   [--arch mlp] [--backend native|xla|svi] [--addr 127.0.0.1:7878]\n\
                    [--threads 1] [--plan-threads 0] [--pool-threads 0] [--max-batch 10]\n\
                    [--max-connections 64] [--pipeline-depth 0 (= max-batch)]\n\
+                   [--isa scalar|native]\n\
                    (--plan-threads N partitions the compiled-plan compute/\n\
                     relu/vectorized-pool steps into N tile tasks;\n\
-                    0 defers to the tuned schedules)\n\
+                    0 defers to the tuned schedules. --isa forces every\n\
+                    kernel onto one ISA; default: runtime-detected SIMD\n\
+                    with scalar fallback, PFP_FORCE_SCALAR=1 honored)\n\
            eval    [--arch mlp] [--samples 30]\n\
            profile [--arch mlp] [--batch 10] [--passes 20] [--schedules tuned|baseline]\n\
            tune    [--arch mlp] [--batch 10] [--trials 24] [--plan-threads nproc]\n\
-                   (per-layer workload search over parallel x tile-size\n\
-                    candidates, measured on the planned tile executor)\n"
+                   [--isa scalar|native]\n\
+                   (per-layer workload search over parallel x tile-size x\n\
+                    ISA candidates, measured on the planned tile executor;\n\
+                    --isa narrows the ISA dimension to one backend)\n"
     );
 }
 
@@ -91,6 +96,17 @@ fn opt<'a>(opts: &'a HashMap<String, String>, key: &str, default: &'a str) -> &'
 
 fn opt_usize(opts: &HashMap<String, String>, key: &str, default: usize) -> usize {
     opts.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Parse the optional `--isa scalar|native` flag; absent = None (each
+/// schedule's own knob decides, elementwise ops default to native).
+fn opt_isa(opts: &HashMap<String, String>) -> pfp::Result<Option<pfp::ops::Isa>> {
+    match opts.get("isa").map(|s| s.as_str()) {
+        None => Ok(None),
+        Some(s) => pfp::ops::Isa::parse(s).map(Some).ok_or_else(|| {
+            pfp::Error::Config(format!("unknown --isa '{s}' (expected scalar|native)"))
+        }),
+    }
 }
 
 fn load_arch_weights(arch_name: &str) -> pfp::Result<(Arch, PosteriorWeights, f32)> {
@@ -148,13 +164,17 @@ fn cmd_serve(opts: &HashMap<String, String>) -> pfp::Result<()> {
     // plan-wide tile-task override for the compiled-plan path (0 = let
     // each step follow its tuned schedule's threads knob)
     let plan_threads = opt_usize(opts, "plan-threads", 0);
+    // ISA policy: --isa scalar|native pins every kernel; default lets the
+    // tuned schedules' isa knobs decide (runtime-detected SIMD)
+    let isa_override = opt_isa(opts)?;
     let schedules = Schedules::from_records(
         records,
         &arch,
         max_batch,
         Schedules::tuned(threads)
             .with_pool(svc.pool().clone())
-            .with_plan_threads(plan_threads),
+            .with_plan_threads(plan_threads)
+            .with_isa_override(isa_override),
     );
 
     let backend: Box<dyn pfp::coordinator::Backend> = match backend_kind {
@@ -280,11 +300,18 @@ fn cmd_tune(opts: &HashMap<String, String>) -> pfp::Result<()> {
     // exactly as serving would run them.
     let max_threads =
         opt_usize(opts, "plan-threads", pfp::util::threadpool::default_threads());
-    let space = SearchSpace::dense_default(max_threads);
+    let mut space = SearchSpace::dense_default(max_threads);
+    // --isa narrows the search's ISA dimension to one backend (the
+    // detector still caps native at whatever the host supports)
+    if let Some(isa) = opt_isa(opts)? {
+        space.isas = vec![isa];
+    }
     let topts = tuner::TuneOpts { random_trials: trials, ..Default::default() };
     println!(
         "tuning {arch_name} per layer at batch {batch} \
-         ({trials} random trials/layer, up to {max_threads} threads) ..."
+         ({trials} random trials/layer, up to {max_threads} threads, \
+         simd backend: {}) ...",
+        pfp::ops::simd::detect().name()
     );
     let layer_results = tuner::tune_per_layer(&arch, &weights, batch, topts, &space);
 

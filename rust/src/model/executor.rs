@@ -20,6 +20,7 @@ use crate::ops::maxpool::{
     det_maxpool2, pfp_maxpool2_vectorized_in, pfp_maxpool_generic,
 };
 use crate::ops::relu::pfp_relu_in;
+use crate::ops::simd::Isa;
 use crate::ops::svi::sample_tensor;
 use crate::ops::Schedule;
 use crate::profiling::Profiler;
@@ -62,6 +63,14 @@ pub struct Schedules {
     /// partitioning keeps planned-parallel output bit-identical to
     /// planned-serial.
     pub plan_threads: usize,
+    /// ISA policy override (the serve/tune `--isa scalar|native` flag):
+    /// `Some(isa)` forces every bound schedule — compute steps *and* the
+    /// elementwise ReLU/pool kernels — onto that ISA; `None` (default)
+    /// lets each schedule's own `isa` knob decide, with the elementwise
+    /// ops defaulting to `Native` (runtime-detected, scalar fallback, and
+    /// `PFP_FORCE_SCALAR=1` caps everything at the detector level
+    /// regardless).
+    pub isa_override: Option<Isa>,
     /// Persistent worker-pool handle. Defaults to the process-wide pool;
     /// the serving coordinator injects one shared handle per `Service` so
     /// every model lane and request reuses the same workers.
@@ -85,6 +94,7 @@ impl Schedules {
             relu_threads: 1,
             maxpool_threads: 1,
             plan_threads: 0,
+            isa_override: None,
             pool: threadpool::global().clone(),
             records: None,
         }
@@ -100,6 +110,7 @@ impl Schedules {
             relu_threads: 1,
             maxpool_threads: 1,
             plan_threads: 0,
+            isa_override: None,
             pool: threadpool::global().clone(),
             records: None,
         }
@@ -119,6 +130,21 @@ impl Schedules {
         self
     }
 
+    /// Set (or clear) the ISA policy override (see
+    /// [`Schedules::isa_override`]).
+    pub fn with_isa_override(mut self, isa: Option<Isa>) -> Self {
+        self.isa_override = isa;
+        self
+    }
+
+    /// The ISA the elementwise moment-matching kernels (ReLU, vectorized
+    /// max-pool) bind: the override when set, else `Native` — the
+    /// erf/exp-dominated ops always want the vector math unless the
+    /// operator explicitly opts out.
+    pub fn elementwise_isa(&self) -> Isa {
+        self.isa_override.unwrap_or(Isa::Native)
+    }
+
     /// The op-class schedule for a layer spec.
     pub fn class_schedule(&self, spec: &LayerSpec) -> Schedule {
         match spec {
@@ -128,13 +154,21 @@ impl Schedules {
     }
 
     /// Effective schedule for compute layer `compute_idx`: the per-layer
-    /// override when present, else the op-class schedule.
+    /// override when present, else the op-class schedule — with the ISA
+    /// policy override applied either way (both the compiled plan and the
+    /// interpreted walk resolve through here, so the two paths always
+    /// bind the same ISA and stay bit-identical).
     pub fn layer_schedule(&self, compute_idx: usize, spec: &LayerSpec) -> Schedule {
-        self.per_layer
+        let s = self
+            .per_layer
             .get(compute_idx)
             .copied()
             .flatten()
-            .unwrap_or_else(|| self.class_schedule(spec))
+            .unwrap_or_else(|| self.class_schedule(spec));
+        match self.isa_override {
+            Some(isa) => s.with_isa(isa),
+            None => s,
+        }
     }
 
     /// Set a per-layer override (builder form), growing the table as
@@ -451,10 +485,11 @@ impl PfpExecutor {
                     let prob = state.take().expect("ReLU before first compute layer");
                     let prob = convert_rep(&mut self.profiler, prob, Rep::Var, label);
                     let threads = self.schedules.relu_threads;
+                    let isa = self.schedules.elementwise_isa();
                     let pool = Arc::clone(&self.schedules.pool);
                     state = Some(
                         self.profiler
-                            .record(label, "relu", || pfp_relu_in(&pool, prob, threads)),
+                            .record(label, "relu", || pfp_relu_in(&pool, prob, threads, isa)),
                     );
                 }
                 LayerSpec::MaxPool2 => {
@@ -462,10 +497,11 @@ impl PfpExecutor {
                     let prob = convert_rep(&mut self.profiler, prob, Rep::Var, label);
                     let vectorized = self.schedules.vectorized_pool;
                     let threads = self.schedules.maxpool_threads;
+                    let isa = self.schedules.elementwise_isa();
                     let pool = Arc::clone(&self.schedules.pool);
                     state = Some(self.profiler.record(label, "maxpool", || {
                         if vectorized {
-                            pfp_maxpool2_vectorized_in(&pool, &prob, threads)
+                            pfp_maxpool2_vectorized_in(&pool, &prob, threads, isa)
                         } else {
                             pfp_maxpool_generic(&prob, 2, 2)
                         }
@@ -766,6 +802,46 @@ mod tests {
         // without records, for_batch is the identity
         let plain = Schedules::tuned(1).for_batch(&arch, 1);
         assert!(plain.per_layer.is_empty());
+    }
+
+    #[test]
+    fn isa_override_rebinds_every_schedule() {
+        use crate::ops::simd::Isa;
+        let arch = Arch::mlp();
+        let s = Schedules::tuned(1).with_isa_override(Some(Isa::Scalar));
+        // tuned schedules carry Native; the override must win everywhere
+        for (i, spec) in arch.compute_layers().iter().enumerate() {
+            assert_eq!(s.layer_schedule(i, spec).isa, Isa::Scalar);
+        }
+        assert_eq!(s.elementwise_isa(), Isa::Scalar);
+        // and per-layer overrides are re-pinned too
+        let s = s.with_layer_schedule(0, Schedule::tuned(1));
+        assert_eq!(s.layer_schedule(0, arch.compute_layers()[0]).isa, Isa::Scalar);
+        // no override: schedules keep their own knob, elementwise is Native
+        let plain = Schedules::tuned(1);
+        assert_eq!(plain.layer_schedule(0, arch.compute_layers()[0]).isa, Isa::Native);
+        assert_eq!(plain.elementwise_isa(), Isa::Native);
+    }
+
+    #[test]
+    fn scalar_isa_forward_matches_native_closely() {
+        // the cross-ISA tolerance contract through the whole executor:
+        // <= 1e-4 relative (trivially equal when detection reports scalar)
+        use crate::ops::simd::Isa;
+        for arch in [Arch::mlp(), Arch::lenet()] {
+            let w = PosteriorWeights::synthetic(&arch, 21);
+            let x = input(&arch, 2, 14);
+            let (mu_n, var_n) =
+                PfpExecutor::new(arch.clone(), w.clone(), Schedules::tuned(1)).forward(&x);
+            let (mu_s, var_s) = PfpExecutor::new(
+                arch.clone(),
+                w,
+                Schedules::tuned(1).with_isa_override(Some(Isa::Scalar)),
+            )
+            .forward(&x);
+            assert!(mu_n.allclose(&mu_s, 1e-4, 1e-4), "{} mu", arch.name);
+            assert!(var_n.allclose(&var_s, 1e-3, 1e-4), "{} var", arch.name);
+        }
     }
 
     #[test]

@@ -3,7 +3,10 @@
 //! Lowered to the *same* scheduled joint dense kernel as the fully
 //! connected layer via im2col (exactly like the Pallas kernel in
 //! `python/compile/kernels/conv.py`), so conv inherits every schedule knob
-//! and the tuner tunes both operators with one search space. A direct
+//! — the explicit-SIMD `isa` knob included: a `Native` schedule runs the
+//! fused im2col+dense phase's per-patch reductions on the AVX2/NEON
+//! microkernels of [`ops::simd`](super::simd), with the im2col gather and
+//! col2im scatter staying `copy_from_slice` memory moves. A direct
 //! (no-im2col) implementation is kept for the ablation bench.
 //!
 //! Layout: activations NCHW, weights OIHW, padding VALID, stride 1 (all

@@ -19,11 +19,19 @@
 //! Layout: activations `[M, K]`, weights `[N, K]` row-major, so the `Mnk`
 //! order walks two contiguous rows (dot-product form) while `Mkn` (the
 //! untuned baseline) strides the weight matrix by K in its inner loop.
+//!
+//! Schedules with `isa: Native` route the `Mnk` inner reduction through
+//! the explicit SIMD microkernels in [`ops::simd`](super::simd)
+//! (AVX2+FMA / NEON, runtime-detected) via [`Accum::reduce_simd`] — the
+//! production formulations (`JointEq12`, `FirstLayer`, `MeanOnly`) have
+//! vector kernels; everything else, the scalar ISA, and the deliberately
+//! naive `Mkn` baseline keep the portable lane machinery unchanged.
 
 use crate::tensor::Tensor;
 use crate::util::threadpool::{self, split_ranges, DisjointMut, ThreadPool};
 
 use super::schedule::{LoopOrder, Schedule};
+use super::simd::{self, Backend};
 
 /// Upper bound on the `tile_n` accumulator block: the cache-blocked loop
 /// body keeps its per-block accumulators in a fixed-size stack array so it
@@ -45,6 +53,24 @@ pub trait Accum: Copy + Default {
     fn merge(&mut self, other: Self);
     /// (mean contribution, raw variance contribution).
     fn finish(self) -> (f32, f32);
+
+    /// Whole-(sub)row reduction on an explicit SIMD backend, when this
+    /// formulation has a microkernel ([`ops::simd`](super::simd)). `None`
+    /// (the default, and always for [`Backend::Scalar`]) falls back to the
+    /// portable lane machinery — so forcing scalar reproduces the
+    /// historical outputs bit for bit. Implemented for the three
+    /// formulations the compiled plan executes ([`JointEq12`],
+    /// [`FirstLayer`], [`MeanOnly`]).
+    #[inline(always)]
+    fn reduce_simd(
+        _b: Backend,
+        _xm: &[f32],
+        _xa: &[f32],
+        _wm: &[f32],
+        _wa: &[f32],
+    ) -> Option<Self> {
+        None
+    }
 }
 
 /// Eq. 12 joint kernel (raw-moment form, shared mean product).
@@ -79,6 +105,15 @@ impl Accum for JointEq12 {
     #[inline(always)]
     fn finish(self) -> (f32, f32) {
         (self.mu, self.var)
+    }
+
+    #[inline(always)]
+    fn reduce_simd(b: Backend, xm: &[f32], xa: &[f32], wm: &[f32], wa: &[f32]) -> Option<Self> {
+        if b == Backend::Scalar {
+            return None;
+        }
+        let (mu, var) = simd::dot_joint_eq12(b, xm, xa, wm, wa);
+        Some(Self { mu, var })
     }
 }
 
@@ -163,6 +198,15 @@ impl Accum for FirstLayer {
     fn finish(self) -> (f32, f32) {
         (self.mu, self.var)
     }
+
+    #[inline(always)]
+    fn reduce_simd(b: Backend, xm: &[f32], _xa: &[f32], wm: &[f32], wa: &[f32]) -> Option<Self> {
+        if b == Backend::Scalar {
+            return None;
+        }
+        let (mu, var) = simd::dot_first_layer(b, xm, wm, wa);
+        Some(Self { mu, var })
+    }
 }
 
 /// Mean-only pass (the "separate operators" split, Fig. 5).
@@ -185,6 +229,14 @@ impl Accum for MeanOnly {
     #[inline(always)]
     fn finish(self) -> (f32, f32) {
         (self.mu, 0.0)
+    }
+
+    #[inline(always)]
+    fn reduce_simd(b: Backend, xm: &[f32], _xa: &[f32], wm: &[f32], _wa: &[f32]) -> Option<Self> {
+        if b == Backend::Scalar {
+            return None;
+        }
+        Some(Self { mu: simd::dot_mean(b, xm, wm) })
     }
 }
 
@@ -371,6 +423,11 @@ fn run_rows<A: Accum>(
     let xa_all = args.x_aux;
     let wm_all = args.w_mu;
     let wa_all = args.w_aux;
+    // The schedule's ISA knob, resolved once per row-range call (a cached
+    // atomic load). `Mnk` reductions go through the explicit microkernel
+    // when the formulation has one; the scalar backend (and the `Mkn`
+    // baseline below) keeps the portable lane machinery bit for bit.
+    let be = simd::resolve(sched.isa);
 
     match sched.loop_order {
         LoopOrder::Mnk if sched.tile_n == 0 && sched.tile_k == 0 => {
@@ -380,7 +437,10 @@ fn run_rows<A: Accum>(
                 for nn in 0..n {
                     let wm = &wm_all[nn * k..(nn + 1) * k];
                     let wa = &wa_all[nn * k..(nn + 1) * k];
-                    let acc: A = reduce(sched, xm, xa, wm, wa);
+                    let acc: A = match A::reduce_simd(be, xm, xa, wm, wa) {
+                        Some(acc) => acc,
+                        None => reduce(sched, xm, xa, wm, wa),
+                    };
                     let (mu, var) = acc.finish();
                     out_mu[local * n + nn] = mu;
                     out_var[local * n + nn] = var;
@@ -410,7 +470,11 @@ fn run_rows<A: Accum>(
                         for (ai, nn) in (n0..n1).enumerate() {
                             let wm = &wm_all[nn * k + k0..nn * k + k1];
                             let wa = &wa_all[nn * k + k0..nn * k + k1];
-                            let mut part: A = reduce(sched, &xm[k0..k1], &xa[k0..k1], wm, wa);
+                            let mut part: A =
+                                match A::reduce_simd(be, &xm[k0..k1], &xa[k0..k1], wm, wa) {
+                                    Some(acc) => acc,
+                                    None => reduce(sched, &xm[k0..k1], &xa[k0..k1], wm, wa),
+                                };
                             part.merge(accs[ai]);
                             accs[ai] = part;
                         }
@@ -822,6 +886,11 @@ mod tests {
     #[test]
     fn formulations_are_equivalent() {
         // Eq. 5 == Eq. 12 == Eq. 7 == separate, on matching inputs.
+        // Pinned to the scalar ISA: the tight separate-vs-joint bound
+        // below relies on every formulation running the same scalar
+        // arithmetic (the SIMD backends reassociate with FMA and only
+        // cover the planned formulations; their cross-ISA contract is
+        // policed by `tests/integration_simd_parity.rs`).
         check(12, |g| {
             let m = g.usize_in(1, 8);
             let k = g.usize_in(1, 64);
@@ -829,7 +898,7 @@ mod tests {
             let (x_mu, x_var, w_mu, w_var) = rand_dense(g, m, k, n);
             let x_e2 = e2_of(&x_mu, &x_var);
             let w_e2 = e2_of(&w_mu, &w_var);
-            let s = Schedule::tuned(1);
+            let s = Schedule::tuned(1).with_isa(crate::ops::simd::Isa::Scalar);
 
             let eq12 = pfp_dense_joint(
                 &DenseArgs {
@@ -958,6 +1027,50 @@ mod tests {
                 assert_eq!(var, want_var, "{} tasks={tasks} var", sched.tag());
             }
         }
+    }
+
+    #[test]
+    fn simd_schedule_matches_scalar_schedule_closely() {
+        // the explicit-ISA kernels reassociate the reduction (FMA, lane
+        // sums) but must stay within the documented 1e-4 relative
+        // cross-ISA contract on the production formulations
+        use crate::ops::simd::Isa;
+        check(10, |g| {
+            let m = g.usize_in(1, 10);
+            let k = g.usize_in(1, 160);
+            let n = g.usize_in(1, 32);
+            let (x_mu, x_var, w_mu, w_var) = rand_dense(g, m, k, n);
+            let x_e2 = e2_of(&x_mu, &x_var);
+            let w_e2 = e2_of(&w_mu, &w_var);
+            let args = DenseArgs {
+                x_mu: &x_mu,
+                x_aux: &x_e2,
+                w_mu: &w_mu,
+                w_aux: &w_e2,
+                b_mu: None,
+                b_var: None,
+            };
+            let scalar = Schedule::tuned(1).with_isa(Isa::Scalar);
+            let native = Schedule::tuned(1).with_isa(Isa::Native);
+            let (mu_s, var_s) = pfp_dense_joint(&args, &scalar);
+            let (mu_n, var_n) = pfp_dense_joint(&args, &native);
+            assert!(mu_n.allclose(&mu_s, 1e-4, 1e-4), "mu [{m},{k},{n}]");
+            assert!(var_n.allclose(&var_s, 1e-3, 1e-3), "var [{m},{k},{n}]");
+            // first-layer kernel too (det input)
+            let x_sq = x_mu.squared();
+            let fargs = DenseArgs {
+                x_mu: &x_mu,
+                x_aux: &x_sq,
+                w_mu: &w_mu,
+                w_aux: &w_var,
+                b_mu: None,
+                b_var: None,
+            };
+            let (fmu_s, fvar_s) = pfp_dense_first(&fargs, &scalar);
+            let (fmu_n, fvar_n) = pfp_dense_first(&fargs, &native);
+            assert!(fmu_n.allclose(&fmu_s, 1e-4, 1e-4), "first mu");
+            assert!(fvar_n.allclose(&fvar_s, 1e-3, 1e-3), "first var");
+        });
     }
 
     #[test]

@@ -16,11 +16,22 @@
 //! sequential fold). The vectorized tree matches the Pallas/JAX kernel
 //! (`kernels/maxpool.py`) exactly — that is the cross-language contract —
 //! and both are validated against Monte-Carlo.
+//!
+//! The k=2 tree additionally takes an [`Isa`]: `Native` evaluates the
+//! three pairwise matches on the explicit SIMD backends of
+//! [`ops::simd`](super::simd) — the strided window operands are gathered
+//! into fixed 8-lane stack buffers and the expensive erf/exp/div/sqrt
+//! math runs vectorized (same association order, so it is the *same*
+//! approximation as the scalar tree up to FMA/poly-exp rounding, within
+//! the 1e-4 cross-ISA contract); `Scalar` keeps the historical per-pixel
+//! loop bit for bit. The generic reduction stays scalar by design (it is
+//! the Table-3 slow baseline).
 
 use crate::tensor::{ProbTensor, Rep, Tensor};
 use crate::util::threadpool::{split_ranges, DisjointMut, ThreadPool};
 
 use super::erf::{erf, norm_pdf, FRAC_1_SQRT_2};
+use super::simd::{self, Backend, Isa};
 
 const EPS: f32 = 1e-12;
 
@@ -126,6 +137,7 @@ pub fn pfp_maxpool_generic(input: &ProbTensor, k: usize, stride: usize) -> ProbT
 #[allow(clippy::too_many_arguments)]
 pub fn pfp_maxpool2_vectorized_into(
     pool: &ThreadPool,
+    isa: Isa,
     mu: &[f32],
     var: &[f32],
     n: usize,
@@ -138,10 +150,11 @@ pub fn pfp_maxpool2_vectorized_into(
 ) {
     let (oh, ow) = (h / 2, w / 2);
     let planes = n * c;
+    let b = simd::resolve(isa);
     debug_assert_eq!(mu.len(), planes * h * w);
     debug_assert_eq!(out_mu.len(), planes * oh * ow);
     if threads <= 1 || planes <= 1 {
-        pool2_serial(mu, var, n, c, h, w, out_mu, out_var);
+        pool2_serial(b, mu, var, n, c, h, w, out_mu, out_var);
         return;
     }
     // split both output buffers into per-plane-range disjoint chunks
@@ -163,6 +176,7 @@ pub fn pfp_maxpool2_vectorized_into(
             sc.spawn(move || {
                 for (local, plane) in r.enumerate() {
                     pool2_plane(
+                        b,
                         mu,
                         var,
                         plane * h * w,
@@ -180,9 +194,11 @@ pub fn pfp_maxpool2_vectorized_into(
 
 /// One tile of the vectorized k=2/stride-2 pool: NCHW planes `planes`
 /// into chunk-relative output slices. Planes are independent, so any
-/// plane partition is bit-identical to the serial pass. Allocation-free.
+/// plane partition is bit-identical to the serial pass (within one ISA).
+/// Allocation-free.
 #[allow(clippy::too_many_arguments)]
 pub fn pfp_maxpool2_planes_into(
+    isa: Isa,
     mu: &[f32],
     var: &[f32],
     h: usize,
@@ -192,9 +208,10 @@ pub fn pfp_maxpool2_planes_into(
     out_var: &mut [f32],
 ) {
     let plane_out = (h / 2) * (w / 2);
+    let b = simd::resolve(isa);
     debug_assert_eq!(out_mu.len(), (planes.end - planes.start) * plane_out);
     for (local, plane) in planes.enumerate() {
-        pool2_plane(mu, var, plane * h * w, h, w, out_mu, out_var, local * plane_out);
+        pool2_plane(b, mu, var, plane * h * w, h, w, out_mu, out_var, local * plane_out);
     }
 }
 
@@ -206,6 +223,7 @@ pub fn pfp_maxpool2_planes_into(
 #[allow(clippy::too_many_arguments)]
 pub fn pfp_maxpool2_tiled_into(
     pool: &ThreadPool,
+    isa: Isa,
     mu: &[f32],
     var: &[f32],
     n: usize,
@@ -219,7 +237,7 @@ pub fn pfp_maxpool2_tiled_into(
     let planes = n * c;
     debug_assert_eq!(mu.len(), planes * h * w);
     if tiles.len() <= 1 {
-        pfp_maxpool2_planes_into(mu, var, h, w, 0..planes, out_mu, out_var);
+        pfp_maxpool2_planes_into(isa, mu, var, h, w, 0..planes, out_mu, out_var);
         return;
     }
     let plane_out = (h / 2) * (w / 2);
@@ -236,7 +254,7 @@ pub fn pfp_maxpool2_tiled_into(
                 var_parts.slice(r.start * plane_out, len),
             )
         };
-        pfp_maxpool2_planes_into(mu, var, h, w, r, mc, vc);
+        pfp_maxpool2_planes_into(isa, mu, var, h, w, r, mc, vc);
     });
 }
 
@@ -245,6 +263,7 @@ pub fn pfp_maxpool2_tiled_into(
 /// the compiler can keep in registers.
 #[allow(clippy::too_many_arguments)]
 fn pool2_serial(
+    b: Backend,
     mu: &[f32],
     var: &[f32],
     n: usize,
@@ -256,14 +275,15 @@ fn pool2_serial(
 ) {
     let (oh, ow) = (h / 2, w / 2);
     for plane in 0..n * c {
-        pool2_plane(mu, var, plane * h * w, h, w, out_mu, out_var, plane * oh * ow);
+        pool2_plane(b, mu, var, plane * h * w, h, w, out_mu, out_var, plane * oh * ow);
     }
 }
 
 /// Vectorized fixed-k=2/stride-2 PFP max-pool: balanced tree
 /// `gmax(gmax(a,b), gmax(c,d))` with row-contiguous inner loops.
-/// Matches the Pallas kernel bit-for-bit in structure.
-pub fn pfp_maxpool2_vectorized(input: &ProbTensor) -> ProbTensor {
+/// Matches the Pallas kernel bit-for-bit in structure (and, with
+/// `Isa::Scalar`, in arithmetic).
+pub fn pfp_maxpool2_vectorized(input: &ProbTensor, isa: Isa) -> ProbTensor {
     debug_assert_eq!(input.rep, Rep::Var);
     let s = input.mu.shape();
     let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
@@ -271,6 +291,7 @@ pub fn pfp_maxpool2_vectorized(input: &ProbTensor) -> ProbTensor {
     let mut out_mu = vec![0.0f32; n * c * oh * ow];
     let mut out_var = vec![0.0f32; n * c * oh * ow];
     pool2_serial(
+        simd::resolve(isa),
         input.mu.data(),
         input.aux.data(),
         n,
@@ -289,8 +310,15 @@ pub fn pfp_maxpool2_vectorized(input: &ProbTensor) -> ProbTensor {
 
 /// One NCHW plane of the vectorized k=2/stride-2 pool: reads `h*w` mean/
 /// variance values at `base`, writes `oh*ow` outputs at `out_off`.
+///
+/// On a SIMD backend the three pairwise matches run 8 output pixels at a
+/// time: the strided window operands are gathered into fixed stack
+/// buffers (cheap — the erf/exp/div/sqrt inside `gaussian_max` dominate),
+/// short rows pad the unused lanes. Same balanced-tree association order
+/// as the scalar walk.
 #[inline(always)]
 fn pool2_plane(
+    b: Backend,
     mu: &[f32],
     var: &[f32],
     base: usize,
@@ -301,30 +329,77 @@ fn pool2_plane(
     out_off: usize,
 ) {
     let (oh, ow) = (h / 2, w / 2);
+    if b == Backend::Scalar {
+        for oy in 0..oh {
+            let r0 = base + (2 * oy) * w;
+            let r1 = base + (2 * oy + 1) * w;
+            let orow = out_off + oy * ow;
+            for ox in 0..ow {
+                let i0 = r0 + 2 * ox;
+                let i1 = r1 + 2 * ox;
+                let (ma, va) = gaussian_max(mu[i0], var[i0], mu[i0 + 1], var[i0 + 1]);
+                let (mb, vb) = gaussian_max(mu[i1], var[i1], mu[i1 + 1], var[i1 + 1]);
+                let (m, v) = gaussian_max(ma, va, mb, vb);
+                out_mu[orow + ox] = m;
+                out_var[orow + ox] = v;
+            }
+        }
+        return;
+    }
     for oy in 0..oh {
         let r0 = base + (2 * oy) * w;
         let r1 = base + (2 * oy + 1) * w;
         let orow = out_off + oy * ow;
-        for ox in 0..ow {
-            let i0 = r0 + 2 * ox;
-            let i1 = r1 + 2 * ox;
-            let (ma, va) = gaussian_max(mu[i0], var[i0], mu[i0 + 1], var[i0 + 1]);
-            let (mb, vb) = gaussian_max(mu[i1], var[i1], mu[i1 + 1], var[i1 + 1]);
-            let (m, v) = gaussian_max(ma, va, mb, vb);
-            out_mu[orow + ox] = m;
-            out_var[orow + ox] = v;
+        let mut ox = 0;
+        while ox < ow {
+            let lanes = (ow - ox).min(8);
+            // gather the four window corners; pad tails with (0, 1) so
+            // the vector math stays finite on unused lanes
+            let mut am = [0.0f32; 8];
+            let mut av = [1.0f32; 8];
+            let mut bm = [0.0f32; 8];
+            let mut bv = [1.0f32; 8];
+            let mut cm = [0.0f32; 8];
+            let mut cv = [1.0f32; 8];
+            let mut dm = [0.0f32; 8];
+            let mut dv = [1.0f32; 8];
+            for j in 0..lanes {
+                let i0 = r0 + 2 * (ox + j);
+                let i1 = r1 + 2 * (ox + j);
+                am[j] = mu[i0];
+                av[j] = var[i0];
+                bm[j] = mu[i0 + 1];
+                bv[j] = var[i0 + 1];
+                cm[j] = mu[i1];
+                cv[j] = var[i1];
+                dm[j] = mu[i1 + 1];
+                dv[j] = var[i1 + 1];
+            }
+            let mut m1 = [0.0f32; 8];
+            let mut v1 = [0.0f32; 8];
+            let mut m2 = [0.0f32; 8];
+            let mut v2 = [0.0f32; 8];
+            simd::gaussian_max2_into(b, &am, &av, &bm, &bv, &mut m1, &mut v1);
+            simd::gaussian_max2_into(b, &cm, &cv, &dm, &dv, &mut m2, &mut v2);
+            let mut mo = [0.0f32; 8];
+            let mut vo = [0.0f32; 8];
+            simd::gaussian_max2_into(b, &m1, &v1, &m2, &v2, &mut mo, &mut vo);
+            out_mu[orow + ox..orow + ox + lanes].copy_from_slice(&mo[..lanes]);
+            out_var[orow + ox..orow + ox + lanes].copy_from_slice(&vo[..lanes]);
+            ox += lanes;
         }
     }
 }
 
 /// Pool-parallel vectorized k=2/stride-2 PFP max-pool: the `N*C` planes
 /// are split across `threads` persistent-pool tasks. Bit-identical to
-/// [`pfp_maxpool2_vectorized`] (planes are independent; only the schedule
-/// changes, not the association order).
+/// [`pfp_maxpool2_vectorized`] at the same ISA (planes are independent;
+/// only the schedule changes, not the association order).
 pub fn pfp_maxpool2_vectorized_in(
     pool: &ThreadPool,
     input: &ProbTensor,
     threads: usize,
+    isa: Isa,
 ) -> ProbTensor {
     debug_assert_eq!(input.rep, Rep::Var);
     let s = input.mu.shape();
@@ -334,6 +409,7 @@ pub fn pfp_maxpool2_vectorized_in(
     let mut out_var = vec![0.0f32; n * c * oh * ow];
     pfp_maxpool2_vectorized_into(
         pool,
+        isa,
         input.mu.data(),
         input.aux.data(),
         n,
@@ -484,7 +560,7 @@ mod tests {
         // the vectorized pool halves H and W
         let mut g = Gen::new(1);
         let p = rand_prob(&mut g, 2, 3, 8, 10);
-        let out = pfp_maxpool2_vectorized(&p);
+        let out = pfp_maxpool2_vectorized(&p, Isa::Native);
         assert_eq!(out.shape(), &[2, 3, 4, 5]);
         assert!(out.aux.data().iter().all(|&v| v >= 0.0));
     }
@@ -495,7 +571,7 @@ mod tests {
         check(10, |g| {
             let p = rand_prob(g, 1, 2, 6, 6);
             let a = pfp_maxpool_generic(&p, 2, 2);
-            let b = pfp_maxpool2_vectorized(&p);
+            let b = pfp_maxpool2_vectorized(&p, Isa::Scalar);
             let dm: f32 = a
                 .mu
                 .data()
@@ -508,13 +584,32 @@ mod tests {
     }
 
     #[test]
+    fn simd_isa_close_to_scalar_isa() {
+        // same balanced tree, different rendering: <= 1e-4 relative
+        // (odd widths exercise the gathered padded-lane tail)
+        check(8, |g| {
+            let n = g.usize_in(1, 2);
+            let c = g.usize_in(1, 3);
+            let h = 2 * g.usize_in(1, 5);
+            let w = 2 * g.usize_in(1, 7);
+            let p = rand_prob(g, n, c, h, w);
+            let a = pfp_maxpool2_vectorized(&p, Isa::Scalar);
+            let b = pfp_maxpool2_vectorized(&p, Isa::Native);
+            assert!(b.mu.allclose(&a.mu, 1e-4, 1e-5), "mu [{n},{c},{h},{w}]");
+            assert!(b.aux.allclose(&a.aux, 1e-3, 1e-4), "var [{n},{c},{h},{w}]");
+        });
+    }
+
+    #[test]
     fn deterministic_limit_equals_det_maxpool() {
         let mut g = Gen::new(3);
         let x = Tensor::new(vec![1, 2, 6, 6], g.normal_vec(72, 1.0)).unwrap();
         let p = ProbTensor::new(x.clone(), Tensor::full(vec![1, 2, 6, 6], 1e-10), Rep::Var);
-        let pooled = pfp_maxpool2_vectorized(&p);
-        let want = det_maxpool2(&x);
-        assert!(pooled.mu.allclose(&want, 1e-3, 1e-3));
+        for isa in [Isa::Scalar, Isa::Native] {
+            let pooled = pfp_maxpool2_vectorized(&p, isa);
+            let want = det_maxpool2(&x);
+            assert!(pooled.mu.allclose(&want, 1e-3, 1e-3), "{isa:?}");
+        }
     }
 
     #[test]
@@ -535,11 +630,13 @@ mod tests {
         let pool = crate::util::threadpool::ThreadPool::new(3);
         let mut g = Gen::new(11);
         let p = rand_prob(&mut g, 3, 4, 8, 8);
-        let a = pfp_maxpool2_vectorized(&p);
-        let b = pfp_maxpool2_vectorized_in(&pool, &p, 3);
-        // planes are independent: parallel split must be bit-identical
-        assert_eq!(a.mu.data(), b.mu.data());
-        assert_eq!(a.aux.data(), b.aux.data());
+        for isa in [Isa::Scalar, Isa::Native] {
+            let a = pfp_maxpool2_vectorized(&p, isa);
+            let b = pfp_maxpool2_vectorized_in(&pool, &p, 3, isa);
+            // planes are independent: parallel split must be bit-identical
+            assert_eq!(a.mu.data(), b.mu.data(), "{isa:?}");
+            assert_eq!(a.aux.data(), b.aux.data(), "{isa:?}");
+        }
     }
 
     #[test]
@@ -548,25 +645,28 @@ mod tests {
         let mut g = Gen::new(13);
         let (n, c, h, w) = (3usize, 4, 8, 8);
         let p = rand_prob(&mut g, n, c, h, w);
-        let want = pfp_maxpool2_vectorized(&p);
-        for tasks in [2usize, 3, 5, 12] {
-            let tiles = split_ranges(n * c, tasks);
-            let mut mu = vec![0.0f32; n * c * (h / 2) * (w / 2)];
-            let mut var = vec![0.0f32; n * c * (h / 2) * (w / 2)];
-            pfp_maxpool2_tiled_into(
-                &pool,
-                p.mu.data(),
-                p.aux.data(),
-                n,
-                c,
-                h,
-                w,
-                &tiles,
-                &mut mu,
-                &mut var,
-            );
-            assert_eq!(mu.as_slice(), want.mu.data(), "tasks={tasks}");
-            assert_eq!(var.as_slice(), want.aux.data(), "tasks={tasks}");
+        for isa in [Isa::Scalar, Isa::Native] {
+            let want = pfp_maxpool2_vectorized(&p, isa);
+            for tasks in [2usize, 3, 5, 12] {
+                let tiles = split_ranges(n * c, tasks);
+                let mut mu = vec![0.0f32; n * c * (h / 2) * (w / 2)];
+                let mut var = vec![0.0f32; n * c * (h / 2) * (w / 2)];
+                pfp_maxpool2_tiled_into(
+                    &pool,
+                    isa,
+                    p.mu.data(),
+                    p.aux.data(),
+                    n,
+                    c,
+                    h,
+                    w,
+                    &tiles,
+                    &mut mu,
+                    &mut var,
+                );
+                assert_eq!(mu.as_slice(), want.mu.data(), "{isa:?} tasks={tasks}");
+                assert_eq!(var.as_slice(), want.aux.data(), "{isa:?} tasks={tasks}");
+            }
         }
         // det variant too
         let x = Tensor::new(vec![n, c, h, w], g.normal_vec(n * c * h * w, 1.0)).unwrap();

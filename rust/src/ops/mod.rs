@@ -23,6 +23,8 @@ pub mod erf;
 pub mod maxpool;
 pub mod relu;
 pub mod schedule;
+pub mod simd;
 pub mod svi;
 
 pub use schedule::{LoopOrder, Schedule};
+pub use simd::Isa;

@@ -7,11 +7,21 @@
 //!
 //! The cdf/pdf sub-terms are computed once and shared between the two
 //! outputs (the joint-operator rule applied to an elementwise op).
+//!
+//! Every entry point takes an [`Isa`]: `Native` runs the vectorized
+//! erf/exp kernels from [`ops::simd`](super::simd) (AVX2+FMA / NEON,
+//! runtime-detected — this is where the SIMD layer pays off most, the op
+//! is pure transcendental math); `Scalar` keeps the historical per-element
+//! loop bit for bit. Within one ISA every partition of the element range
+//! is bit-identical to the serial pass (elementwise, and the vector kernel
+//! is position-independent: tails run through padded lanes of the same
+//! code).
 
 use crate::tensor::{ProbTensor, Rep, Tensor};
 use crate::util::threadpool::{self, DisjointMut, ThreadPool};
 
 use super::erf::{erf, FRAC_1_SQRT_2, INV_SQRT_2PI};
+use super::simd::{self, Backend, Isa};
 
 const EPS: f32 = 1e-12;
 
@@ -30,14 +40,15 @@ pub fn relu_moments(mu: f32, var: f32) -> (f32, f32) {
 /// Moment-matched ReLU over a probabilistic activation tensor.
 /// Input rep must be `Var` (converted by the caller/executor); output rep
 /// is `E2` by construction.
-pub fn pfp_relu(input: ProbTensor, threads: usize) -> ProbTensor {
-    pfp_relu_in(threadpool::global(), input, threads)
+pub fn pfp_relu(input: ProbTensor, threads: usize, isa: Isa) -> ProbTensor {
+    pfp_relu_in(threadpool::global(), input, threads, isa)
 }
 
 /// One tile of the moment-matched ReLU: elements `r` of the input, into
 /// chunk-relative output slices. Elementwise, so any partition is
-/// bit-identical to the serial pass. Allocation-free.
+/// bit-identical to the serial pass (within one ISA). Allocation-free.
 pub fn pfp_relu_rows_into(
+    isa: Isa,
     mu_in: &[f32],
     var_in: &[f32],
     r: std::ops::Range<usize>,
@@ -46,10 +57,15 @@ pub fn pfp_relu_rows_into(
 ) {
     debug_assert_eq!(mu_out.len(), r.end - r.start);
     debug_assert_eq!(e2_out.len(), r.end - r.start);
-    for (j, i) in r.enumerate() {
-        let (m, e2) = relu_moments(mu_in[i], var_in[i]);
-        mu_out[j] = m;
-        e2_out[j] = e2;
+    let b = simd::resolve(isa);
+    if b == Backend::Scalar {
+        for (j, i) in r.enumerate() {
+            let (m, e2) = relu_moments(mu_in[i], var_in[i]);
+            mu_out[j] = m;
+            e2_out[j] = e2;
+        }
+    } else {
+        simd::relu_moments_into(b, &mu_in[r.start..r.end], &var_in[r.start..r.end], mu_out, e2_out);
     }
 }
 
@@ -60,6 +76,7 @@ pub fn pfp_relu_rows_into(
 /// to it (elementwise).
 pub fn pfp_relu_tiled_into(
     pool: &ThreadPool,
+    isa: Isa,
     mu_in: &[f32],
     var_in: &[f32],
     tiles: &[std::ops::Range<usize>],
@@ -71,7 +88,7 @@ pub fn pfp_relu_tiled_into(
     debug_assert_eq!(mu_out.len(), n);
     debug_assert_eq!(e2_out.len(), n);
     if tiles.len() <= 1 {
-        pfp_relu_rows_into(mu_in, var_in, 0..n, mu_out, e2_out);
+        pfp_relu_rows_into(isa, mu_in, var_in, 0..n, mu_out, e2_out);
         return;
     }
     let mu = DisjointMut::new(mu_out);
@@ -82,7 +99,7 @@ pub fn pfp_relu_tiled_into(
         // SAFETY: tiles are disjoint element ranges; run_tasks blocks
         // until every tile completes.
         let (mc, ec) = unsafe { (mu.slice(r.start, len), e2.slice(r.start, len)) };
-        pfp_relu_rows_into(mu_in, var_in, r, mc, ec);
+        pfp_relu_rows_into(isa, mu_in, var_in, r, mc, ec);
     });
 }
 
@@ -92,6 +109,7 @@ pub fn pfp_relu_tiled_into(
 /// Tensor-level API (the compiled plan uses [`pfp_relu_tiled_into`]).
 pub fn pfp_relu_into(
     pool: &ThreadPool,
+    isa: Isa,
     mu_in: &[f32],
     var_in: &[f32],
     threads: usize,
@@ -104,7 +122,7 @@ pub fn pfp_relu_into(
     debug_assert_eq!(e2_out.len(), n);
 
     if threads <= 1 {
-        pfp_relu_rows_into(mu_in, var_in, 0..n, mu_out, e2_out);
+        pfp_relu_rows_into(isa, mu_in, var_in, 0..n, mu_out, e2_out);
     } else {
         // split both output buffers into matching disjoint chunks
         let ranges = crate::util::threadpool::split_ranges(n, threads);
@@ -121,20 +139,14 @@ pub fn pfp_relu_into(
         }
         pool.scope(|s| {
             for (r, mc, ec) in chunks {
-                s.spawn(move || {
-                    for (j, i) in r.enumerate() {
-                        let (m, e2) = relu_moments(mu_in[i], var_in[i]);
-                        mc[j] = m;
-                        ec[j] = e2;
-                    }
-                });
+                s.spawn(move || pfp_relu_rows_into(isa, mu_in, var_in, r, mc, ec));
             }
         });
     }
 }
 
 /// [`pfp_relu`] on an explicit pool.
-pub fn pfp_relu_in(pool: &ThreadPool, input: ProbTensor, threads: usize) -> ProbTensor {
+pub fn pfp_relu_in(pool: &ThreadPool, input: ProbTensor, threads: usize, isa: Isa) -> ProbTensor {
     debug_assert_eq!(input.rep, Rep::Var);
     let shape = input.mu.shape().to_vec();
     let mu_in = input.mu.into_data();
@@ -142,7 +154,7 @@ pub fn pfp_relu_in(pool: &ThreadPool, input: ProbTensor, threads: usize) -> Prob
     let n = mu_in.len();
     let mut mu_out = vec![0.0f32; n];
     let mut e2_out = vec![0.0f32; n];
-    pfp_relu_into(pool, &mu_in, &var_in, threads, &mut mu_out, &mut e2_out);
+    pfp_relu_into(pool, isa, &mu_in, &var_in, threads, &mut mu_out, &mut e2_out);
     ProbTensor::new(
         Tensor::new(shape.clone(), mu_out).unwrap(),
         Tensor::new(shape, e2_out).unwrap(),
@@ -216,23 +228,54 @@ mod tests {
     }
 
     #[test]
-    fn tiled_relu_bit_identical_to_serial() {
+    fn tiled_relu_bit_identical_to_serial_per_isa() {
         use crate::util::threadpool::{split_ranges, ThreadPool};
         let pool = ThreadPool::new(3);
         let mut g = crate::util::prop::Gen::new(17);
         let n = 501;
         let mu: Vec<f32> = g.normal_vec(n, 2.0);
         let var: Vec<f32> = g.var_vec(n, 1.0);
-        let mut want_mu = vec![0.0f32; n];
-        let mut want_e2 = vec![0.0f32; n];
-        pfp_relu_rows_into(&mu, &var, 0..n, &mut want_mu, &mut want_e2);
-        for tasks in [2usize, 3, 8] {
-            let tiles = split_ranges(n, tasks);
-            let mut got_mu = vec![0.0f32; n];
-            let mut got_e2 = vec![0.0f32; n];
-            pfp_relu_tiled_into(&pool, &mu, &var, &tiles, &mut got_mu, &mut got_e2);
-            assert_eq!(got_mu, want_mu, "tasks={tasks}");
-            assert_eq!(got_e2, want_e2, "tasks={tasks}");
+        for isa in [Isa::Scalar, Isa::Native] {
+            let mut want_mu = vec![0.0f32; n];
+            let mut want_e2 = vec![0.0f32; n];
+            pfp_relu_rows_into(isa, &mu, &var, 0..n, &mut want_mu, &mut want_e2);
+            for tasks in [2usize, 3, 8] {
+                let tiles = split_ranges(n, tasks);
+                let mut got_mu = vec![0.0f32; n];
+                let mut got_e2 = vec![0.0f32; n];
+                pfp_relu_tiled_into(&pool, isa, &mu, &var, &tiles, &mut got_mu, &mut got_e2);
+                assert_eq!(got_mu, want_mu, "{isa:?} tasks={tasks}");
+                assert_eq!(got_e2, want_e2, "{isa:?} tasks={tasks}");
+            }
+        }
+    }
+
+    #[test]
+    fn native_isa_matches_scalar_closely() {
+        // cross-ISA contract on the op level: <= 1e-4 relative
+        let mut g = crate::util::prop::Gen::new(23);
+        let n = 777;
+        let mu: Vec<f32> = g.normal_vec(n, 2.0);
+        let var: Vec<f32> = g.var_vec(n, 1.0);
+        let mut s_mu = vec![0.0f32; n];
+        let mut s_e2 = vec![0.0f32; n];
+        let mut n_mu = vec![0.0f32; n];
+        let mut n_e2 = vec![0.0f32; n];
+        pfp_relu_rows_into(Isa::Scalar, &mu, &var, 0..n, &mut s_mu, &mut s_e2);
+        pfp_relu_rows_into(Isa::Native, &mu, &var, 0..n, &mut n_mu, &mut n_e2);
+        for i in 0..n {
+            assert!(
+                (s_mu[i] - n_mu[i]).abs() <= 1e-5 + 1e-4 * s_mu[i].abs(),
+                "mu[{i}]: {} vs {}",
+                n_mu[i],
+                s_mu[i]
+            );
+            assert!(
+                (s_e2[i] - n_e2[i]).abs() <= 1e-5 + 1e-4 * s_e2[i].abs(),
+                "e2[{i}]: {} vs {}",
+                n_e2[i],
+                s_e2[i]
+            );
         }
     }
 
@@ -242,10 +285,12 @@ mod tests {
         let n = 1000;
         let mu = Tensor::from_vec(g.normal_vec(n, 2.0));
         let var = Tensor::from_vec(g.var_vec(n, 1.0));
-        let a = pfp_relu(ProbTensor::new(mu.clone(), var.clone(), Rep::Var), 1);
-        let b = pfp_relu(ProbTensor::new(mu, var, Rep::Var), 4);
-        assert!(a.mu.allclose(&b.mu, 1e-7, 1e-7));
-        assert!(a.aux.allclose(&b.aux, 1e-7, 1e-7));
-        assert_eq!(a.rep, Rep::E2);
+        for isa in [Isa::Scalar, Isa::Native] {
+            let a = pfp_relu(ProbTensor::new(mu.clone(), var.clone(), Rep::Var), 1, isa);
+            let b = pfp_relu(ProbTensor::new(mu.clone(), var.clone(), Rep::Var), 4, isa);
+            assert!(a.mu.allclose(&b.mu, 1e-7, 1e-7));
+            assert!(a.aux.allclose(&b.aux, 1e-7, 1e-7));
+            assert_eq!(a.rep, Rep::E2);
+        }
     }
 }

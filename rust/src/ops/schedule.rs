@@ -22,6 +22,17 @@
 //! The paper's footnote "tiling does not support stochastic tuning" is
 //! mirrored in `tuner::space`: enabling tiles freezes the stochastic
 //! mutation of the other knobs.
+//!
+//! Since PR 5 a schedule also carries an [`Isa`] knob — the explicit-SIMD
+//! dimension. `vectorize` keeps its historical meaning (fixed-width lane
+//! *hints* the compiler may or may not vectorize); `isa: Native` swaps the
+//! `Mnk` inner reduction for the hand-written AVX2+FMA / NEON microkernels
+//! in [`ops::simd`](super::simd), resolved by one-time runtime feature
+//! detection (scalar fallback always compiled, `PFP_FORCE_SCALAR=1`
+//! honored). The tuner explores the knob; `CompiledPlan::compile` binds it
+//! per step like every other knob.
+
+use super::simd::Isa;
 
 /// Loop nest order for the dense/conv matmul core.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -48,6 +59,11 @@ pub struct Schedule {
     pub vectorize: bool,
     /// Worker threads for row-parallel execution (1 = off).
     pub threads: usize,
+    /// Explicit-SIMD microkernel selection: `Scalar` keeps the portable
+    /// lane machinery; `Native` dispatches the `Mnk` inner reduction (and
+    /// the elementwise moment-matching ops bound with this schedule) to
+    /// the runtime-detected ISA backend.
+    pub isa: Isa,
 }
 
 impl Default for Schedule {
@@ -66,11 +82,13 @@ impl Schedule {
             unroll: 1,
             vectorize: false,
             threads: 1,
+            isa: Isa::Scalar,
         }
     }
 
     /// The hand-tuned schedule that Table 2's "All Optimizations (no
-    /// tiling) + stochastic tuning" row converges to.
+    /// tiling) + stochastic tuning" row converges to — explicit SIMD
+    /// included (runtime-detected, scalar where unsupported).
     pub fn tuned(threads: usize) -> Self {
         Self {
             loop_order: LoopOrder::Mnk,
@@ -79,6 +97,7 @@ impl Schedule {
             unroll: 8,
             vectorize: true,
             threads,
+            isa: Isa::Native,
         }
     }
 
@@ -91,6 +110,7 @@ impl Schedule {
             unroll: 1,
             vectorize: false,
             threads: 1,
+            isa: Isa::Scalar,
         }
     }
 
@@ -120,10 +140,15 @@ impl Schedule {
         self
     }
 
+    pub fn with_isa(mut self, isa: Isa) -> Self {
+        self.isa = isa;
+        self
+    }
+
     /// Short human tag, used in bench output and tuning records.
     pub fn tag(&self) -> String {
         format!(
-            "{:?}{}{}{}{}",
+            "{:?}{}{}{}{}{}",
             self.loop_order,
             if self.tile_n > 0 || self.tile_k > 0 {
                 format!("+tile{}x{}", self.tile_n, self.tile_k)
@@ -132,6 +157,7 @@ impl Schedule {
             },
             if self.unroll > 1 { format!("+u{}", self.unroll) } else { String::new() },
             if self.vectorize { "+vec" } else { "" },
+            if self.isa == Isa::Native { "+simd" } else { "" },
             if self.threads > 1 { format!("+t{}", self.threads) } else { String::new() },
         )
     }
@@ -149,6 +175,7 @@ impl Schedule {
             ("unroll", Json::Num(self.unroll as f64)),
             ("vectorize", Json::Bool(self.vectorize)),
             ("threads", Json::Num(self.threads as f64)),
+            ("isa", Json::Str(self.isa.as_str().to_string())),
         ])
     }
 
@@ -166,6 +193,13 @@ impl Schedule {
             unroll: (v.num_field("unroll")? as usize).max(1),
             vectorize: v.get("vectorize").and_then(|b| b.as_bool()).unwrap_or(false),
             threads: (v.num_field("threads")? as usize).max(1),
+            // absent in pre-SIMD records: those schedules were measured on
+            // the scalar kernels, so that is what they keep describing
+            isa: v
+                .get("isa")
+                .and_then(|s| s.as_str())
+                .and_then(Isa::parse)
+                .unwrap_or(Isa::Scalar),
         })
     }
 }
@@ -186,5 +220,23 @@ mod tests {
     fn tags_are_distinct() {
         assert_ne!(Schedule::baseline().tag(), Schedule::tuned(1).tag());
         assert_ne!(Schedule::tuned(1).tag(), Schedule::tuned(4).tag());
+        // the ISA knob is visible in the tag (tuned carries Native)
+        assert_ne!(
+            Schedule::tuned(1).tag(),
+            Schedule::tuned(1).with_isa(Isa::Scalar).tag()
+        );
+    }
+
+    #[test]
+    fn missing_isa_field_parses_as_scalar() {
+        // pre-SIMD-era schedule JSON: those schedules were measured on the
+        // scalar kernels, so they must keep binding the scalar backend
+        let mut j = Schedule::tuned(2).to_json();
+        if let crate::util::json::Json::Obj(obj) = &mut j {
+            obj.remove("isa");
+        }
+        let back = Schedule::from_json(&j).unwrap();
+        assert_eq!(back.isa, Isa::Scalar);
+        assert_eq!(back.unroll, 8);
     }
 }

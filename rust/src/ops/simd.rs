@@ -1,0 +1,1153 @@
+//! Explicit SIMD microkernels with one-time runtime ISA dispatch — the
+//! paper's "code generation for CPU targets" lever (TVM emits NEON on the
+//! Jetson; we emit AVX2+FMA / NEON through `std::arch` intrinsics), layered
+//! *beneath* the scheduled operator library so every schedule knob keeps
+//! working on top of it.
+//!
+//! Three backends behind one slice-level API:
+//!
+//! * [`Backend::Scalar`] — always compiled, always tested: plain loops over
+//!   the exact same scalar helpers the pre-SIMD operators used
+//!   ([`erf`](super::erf::erf), [`relu_moments`](super::relu::relu_moments),
+//!   [`gaussian_max`](super::maxpool::gaussian_max)), so forcing scalar
+//!   reproduces the historical outputs bit for bit.
+//! * [`Backend::Avx2`] — `x86_64`, 8 f32 lanes, selected at runtime when
+//!   `avx2` **and** `fma` are present.
+//! * [`Backend::Neon`] — `aarch64`, 4 f32 lanes (NEON is baseline on
+//!   aarch64, so it is selected unconditionally there).
+//!
+//! Detection runs **once** per process ([`detect`]) and is cached in a
+//! `OnceLock`, so resolving a schedule's [`Isa`] knob on the hot path is a
+//! single atomic load — no allocation, preserving the compiled plan's
+//! zero-steady-state-allocation guarantee. Setting `PFP_FORCE_SCALAR=1`
+//! makes detection report [`Backend::Scalar`] regardless of hardware (the
+//! CI dispatch-path matrix runs the whole suite once per branch).
+//!
+//! ## Accuracy contract (policed by the differential test suite)
+//!
+//! * Within one backend the kernels are deterministic: the same inputs
+//!   produce bit-identical outputs at every plan tile count (partitioning
+//!   never crosses a reduction or changes per-element math).
+//! * Across backends outputs may differ — FMA contraction reassociates the
+//!   dense reductions, and the vector `exp` is a polynomial
+//!   (Cephes-style, ~7e-8 max relative error, validated in unit tests)
+//!   rather than libm — but stay within **1e-4 relative** end to end
+//!   (`tests/integration_simd_parity.rs`) and within ~1e-6 absolute of a
+//!   high-precision `erf`/`norm_cdf`/`norm_pdf` reference
+//!   (`ops/erf.rs` table tests).
+
+use std::sync::OnceLock;
+
+use super::erf::{ERF_A1, ERF_A2, ERF_A3, ERF_A4, ERF_A5, ERF_P, FRAC_1_SQRT_2, INV_SQRT_2PI};
+
+/// Variance floor shared with the scalar moment-matching ops.
+const EPS: f32 = 1e-12;
+
+// ---------------------------------------------------------------------------
+// ISA selection
+// ---------------------------------------------------------------------------
+
+/// Schedule-level ISA knob: what a [`Schedule`](super::Schedule) asks for.
+/// `Native` resolves to the best backend the host supports at runtime
+/// ([`detect`]); `Scalar` pins the portable fallback. The tuner explores
+/// this dimension like any other knob and records it with the schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar kernels (the pre-SIMD code paths, bit for bit).
+    Scalar,
+    /// Runtime-detected SIMD backend (AVX2+FMA / NEON), falling back to
+    /// scalar on hosts without one or under `PFP_FORCE_SCALAR=1`.
+    Native,
+}
+
+impl Isa {
+    /// CLI / record spelling: `"scalar"` or `"native"`.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Native => "native",
+        }
+    }
+
+    /// Parse the CLI / record spelling (case-sensitive, lowercase).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "scalar" => Some(Isa::Scalar),
+            "native" => Some(Isa::Native),
+            _ => None,
+        }
+    }
+}
+
+/// A concrete instruction-set backend. All variants exist on every
+/// architecture (so records and logs are portable); only the ones the
+/// build target supports are ever *returned* by [`detect`] or executed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Scalar,
+    /// x86_64 AVX2 + FMA, 8 f32 lanes.
+    Avx2,
+    /// aarch64 NEON, 4 f32 lanes.
+    Neon,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2+fma",
+            Backend::Neon => "neon",
+        }
+    }
+}
+
+static DETECTED: OnceLock<Backend> = OnceLock::new();
+
+/// The best backend this host supports, detected once per process and
+/// cached (later calls are one atomic load — no allocation, hot-path
+/// safe). `PFP_FORCE_SCALAR=1` forces [`Backend::Scalar`], which is how
+/// CI exercises the fallback dispatch path on SIMD-capable runners.
+pub fn detect() -> Backend {
+    *DETECTED.get_or_init(|| {
+        if std::env::var("PFP_FORCE_SCALAR").as_deref() == Ok("1") {
+            return Backend::Scalar;
+        }
+        native_backend()
+    })
+}
+
+#[allow(unreachable_code)]
+fn native_backend() -> Backend {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma") {
+            return Backend::Avx2;
+        }
+        return Backend::Scalar;
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON is architecturally baseline on aarch64.
+        return Backend::Neon;
+    }
+    Backend::Scalar
+}
+
+/// Resolve a schedule's [`Isa`] knob to the backend that will execute it.
+#[inline]
+pub fn resolve(isa: Isa) -> Backend {
+    match isa {
+        Isa::Scalar => Backend::Scalar,
+        Isa::Native => detect(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared polynomial-exp constants (Cephes expf: 2^k * P(r) with Cody-Waite
+// range reduction; max relative error ~7e-8, validated in the unit tests)
+// ---------------------------------------------------------------------------
+
+const EXP_HI: f32 = 88.376_26;
+const EXP_LO: f32 = -87.336_54;
+const LOG2EF: f32 = 1.442_695;
+const EXP_C1: f32 = 0.693_359_4;
+const EXP_C2: f32 = -2.121_944_4e-4;
+const EXP_P0: f32 = 1.987_569_2e-4;
+const EXP_P1: f32 = 1.398_199_9e-3;
+const EXP_P2: f32 = 8.333_452e-3;
+const EXP_P3: f32 = 4.166_579_6e-2;
+const EXP_P4: f32 = 1.666_666_5e-1;
+const EXP_P5: f32 = 5.000_000_3e-1;
+
+/// Scalar reference implementation of the vector `exp` polynomial (the
+/// exact algorithm the AVX2/NEON lanes run, minus FMA contraction). Kept
+/// public so the accuracy tests can pin the approximation itself, not
+/// just one backend's rendering of it.
+pub fn exp_poly(x: f32) -> f32 {
+    let x = x.clamp(EXP_LO, EXP_HI);
+    let kf = (x * LOG2EF).round_ties_even();
+    let r = x - kf * EXP_C1;
+    let r = r - kf * EXP_C2;
+    let mut y = EXP_P0;
+    y = y * r + EXP_P1;
+    y = y * r + EXP_P2;
+    y = y * r + EXP_P3;
+    y = y * r + EXP_P4;
+    y = y * r + EXP_P5;
+    let y = y * (r * r) + r + 1.0;
+    let scale = f32::from_bits((((kf as i32) + 127) << 23) as u32);
+    y * scale
+}
+
+// ---------------------------------------------------------------------------
+// slice-level vector math (dispatched once per call)
+// ---------------------------------------------------------------------------
+
+/// erf over a slice. Scalar backend = [`erf`](super::erf::erf) per element.
+pub fn erf_into(b: Backend, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::erf_into(x, out) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::erf_into(x, out) },
+        _ => {
+            for (o, &v) in out.iter_mut().zip(x) {
+                *o = super::erf::erf(v);
+            }
+        }
+    }
+}
+
+/// Standard normal CDF over a slice.
+pub fn norm_cdf_into(b: Backend, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::norm_cdf_into(x, out) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::norm_cdf_into(x, out) },
+        _ => {
+            for (o, &v) in out.iter_mut().zip(x) {
+                *o = super::erf::norm_cdf(v);
+            }
+        }
+    }
+}
+
+/// Standard normal PDF over a slice.
+pub fn norm_pdf_into(b: Backend, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::norm_pdf_into(x, out) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::norm_pdf_into(x, out) },
+        _ => {
+            for (o, &v) in out.iter_mut().zip(x) {
+                *o = super::erf::norm_pdf(v);
+            }
+        }
+    }
+}
+
+/// Moment-matched ReLU over slices: (mu, var) -> (mu', E\[x'^2\]), the
+/// vectorized body of [`relu_moments`](super::relu::relu_moments).
+pub fn relu_moments_into(
+    b: Backend,
+    mu: &[f32],
+    var: &[f32],
+    out_mu: &mut [f32],
+    out_e2: &mut [f32],
+) {
+    debug_assert_eq!(mu.len(), var.len());
+    debug_assert_eq!(mu.len(), out_mu.len());
+    debug_assert_eq!(mu.len(), out_e2.len());
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::relu_moments_into(mu, var, out_mu, out_e2) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::relu_moments_into(mu, var, out_mu, out_e2) },
+        _ => {
+            for i in 0..mu.len() {
+                let (m, e2) = super::relu::relu_moments(mu[i], var[i]);
+                out_mu[i] = m;
+                out_e2[i] = e2;
+            }
+        }
+    }
+}
+
+/// Elementwise moment-matched Gaussian max over slices — the vectorized
+/// body of [`gaussian_max`](super::maxpool::gaussian_max), used by the
+/// k=2 max-pool tree with gathered lane buffers.
+#[allow(clippy::too_many_arguments)]
+pub fn gaussian_max2_into(
+    b: Backend,
+    mu1: &[f32],
+    var1: &[f32],
+    mu2: &[f32],
+    var2: &[f32],
+    out_mu: &mut [f32],
+    out_var: &mut [f32],
+) {
+    debug_assert_eq!(mu1.len(), var1.len());
+    debug_assert_eq!(mu1.len(), mu2.len());
+    debug_assert_eq!(mu1.len(), var2.len());
+    debug_assert_eq!(mu1.len(), out_mu.len());
+    debug_assert_eq!(mu1.len(), out_var.len());
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe {
+            avx2::gaussian_max2_into(mu1, var1, mu2, var2, out_mu, out_var)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe {
+            neon::gaussian_max2_into(mu1, var1, mu2, var2, out_mu, out_var)
+        },
+        _ => {
+            for i in 0..mu1.len() {
+                let (m, v) = super::maxpool::gaussian_max(mu1[i], var1[i], mu2[i], var2[i]);
+                out_mu[i] = m;
+                out_var[i] = v;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dense-reduction microkernels (the Eq. 12/13 mu+var inner loops)
+// ---------------------------------------------------------------------------
+
+/// Eq. 12 joint dot product over one (row, row) pair:
+/// returns `(Σ mu_x·mu_w, Σ (E[x²]E[w²] − (mu_x·mu_w)²))`. Two
+/// accumulators per lane, exactly like the scalar [`JointEq12`]
+/// formulation: the variance lanes accumulate the **per-element
+/// difference** (`fnmadd(t, t, xa·wa)`), never two independent large sums
+/// whose subtraction would magnify cancellation when the variance is a
+/// tiny residual of the raw moments (confident posteriors).
+pub fn dot_joint_eq12(b: Backend, xm: &[f32], xa: &[f32], wm: &[f32], wa: &[f32]) -> (f32, f32) {
+    debug_assert_eq!(xm.len(), wm.len());
+    debug_assert_eq!(xm.len(), xa.len());
+    debug_assert_eq!(xm.len(), wa.len());
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::dot_joint_eq12(xm, xa, wm, wa) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::dot_joint_eq12(xm, xa, wm, wa) },
+        _ => {
+            let (mut mu, mut var) = (0.0f32, 0.0f32);
+            for i in 0..xm.len() {
+                let t = xm[i] * wm[i];
+                mu += t;
+                var += xa[i] * wa[i] - t * t;
+            }
+            (mu, var)
+        }
+    }
+}
+
+/// Eq. 13 first-layer dot product (deterministic input):
+/// returns `(Σ x·mu_w, Σ x²·var_w)`.
+pub fn dot_first_layer(b: Backend, xm: &[f32], wm: &[f32], wa: &[f32]) -> (f32, f32) {
+    debug_assert_eq!(xm.len(), wm.len());
+    debug_assert_eq!(xm.len(), wa.len());
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::dot_first_layer(xm, wm, wa) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::dot_first_layer(xm, wm, wa) },
+        _ => {
+            let (mut mu, mut var) = (0.0f32, 0.0f32);
+            for i in 0..xm.len() {
+                mu += xm[i] * wm[i];
+                var += xm[i] * xm[i] * wa[i];
+            }
+            (mu, var)
+        }
+    }
+}
+
+/// Mean-only dot product (det mode / separate-operator baseline).
+pub fn dot_mean(b: Backend, xm: &[f32], wm: &[f32]) -> f32 {
+    debug_assert_eq!(xm.len(), wm.len());
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::dot_mean(xm, wm) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::dot_mean(xm, wm) },
+        _ => {
+            let mut mu = 0.0f32;
+            for i in 0..xm.len() {
+                mu += xm[i] * wm[i];
+            }
+            mu
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 + FMA backend (x86_64, 8 f32 lanes)
+// ---------------------------------------------------------------------------
+
+/// SAFETY: every function in this module is `#[target_feature(enable =
+/// "avx2,fma")]` and is only reached through [`detect`]-gated dispatch,
+/// which verified both features at runtime. Loads/stores are unaligned
+/// (`loadu`/`storeu`); tails go through padded stack buffers so slices of
+/// any length are safe.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    use super::{
+        EPS, ERF_A1, ERF_A2, ERF_A3, ERF_A4, ERF_A5, ERF_P, EXP_C1, EXP_C2, EXP_HI, EXP_LO,
+        EXP_P0, EXP_P1, EXP_P2, EXP_P3, EXP_P4, EXP_P5, FRAC_1_SQRT_2, INV_SQRT_2PI, LOG2EF,
+    };
+
+    /// exp(x) as 2^k * P(r): Cody-Waite reduction, degree-6 polynomial,
+    /// exponent built by integer bit manipulation.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn exp_v(x: __m256) -> __m256 {
+        let x = _mm256_min_ps(x, _mm256_set1_ps(EXP_HI));
+        let x = _mm256_max_ps(x, _mm256_set1_ps(EXP_LO));
+        let k_i = _mm256_cvtps_epi32(_mm256_mul_ps(x, _mm256_set1_ps(LOG2EF)));
+        let kf = _mm256_cvtepi32_ps(k_i);
+        let r = _mm256_fnmadd_ps(kf, _mm256_set1_ps(EXP_C1), x);
+        let r = _mm256_fnmadd_ps(kf, _mm256_set1_ps(EXP_C2), r);
+        let mut y = _mm256_set1_ps(EXP_P0);
+        y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(EXP_P1));
+        y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(EXP_P2));
+        y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(EXP_P3));
+        y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(EXP_P4));
+        y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(EXP_P5));
+        let y = _mm256_add_ps(
+            _mm256_fmadd_ps(y, _mm256_mul_ps(r, r), r),
+            _mm256_set1_ps(1.0),
+        );
+        let scale = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(
+            k_i,
+            _mm256_set1_epi32(127),
+        )));
+        _mm256_mul_ps(y, scale)
+    }
+
+    /// A&S 7.1.26 erf, sign handled by bit masking.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn erf_v(x: __m256) -> __m256 {
+        let sign_mask = _mm256_set1_ps(-0.0);
+        let sign = _mm256_and_ps(x, sign_mask);
+        let xa = _mm256_andnot_ps(sign_mask, x);
+        let one = _mm256_set1_ps(1.0);
+        let t = _mm256_div_ps(one, _mm256_fmadd_ps(_mm256_set1_ps(ERF_P), xa, one));
+        let mut poly = _mm256_set1_ps(ERF_A5);
+        poly = _mm256_fmadd_ps(poly, t, _mm256_set1_ps(ERF_A4));
+        poly = _mm256_fmadd_ps(poly, t, _mm256_set1_ps(ERF_A3));
+        poly = _mm256_fmadd_ps(poly, t, _mm256_set1_ps(ERF_A2));
+        poly = _mm256_fmadd_ps(poly, t, _mm256_set1_ps(ERF_A1));
+        poly = _mm256_mul_ps(poly, t);
+        let e = exp_v(_mm256_sub_ps(_mm256_setzero_ps(), _mm256_mul_ps(xa, xa)));
+        let r = _mm256_fnmadd_ps(poly, e, one);
+        _mm256_or_ps(r, sign)
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn norm_cdf_v(x: __m256) -> __m256 {
+        let z = _mm256_mul_ps(x, _mm256_set1_ps(FRAC_1_SQRT_2));
+        _mm256_mul_ps(
+            _mm256_set1_ps(0.5),
+            _mm256_add_ps(_mm256_set1_ps(1.0), erf_v(z)),
+        )
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn norm_pdf_v(x: __m256) -> __m256 {
+        let arg = _mm256_mul_ps(_mm256_set1_ps(-0.5), _mm256_mul_ps(x, x));
+        _mm256_mul_ps(_mm256_set1_ps(INV_SQRT_2PI), exp_v(arg))
+    }
+
+    /// Run the named lane function over the slice 8 lanes at a time; the
+    /// tail is padded into a stack buffer so every element goes through
+    /// the same vector code (a direct call, not a closure — closures
+    /// would leave the `unsafe fn` / target-feature context).
+    macro_rules! map_v {
+        ($x:expr, $out:expr, $op:ident) => {{
+            let x: &[f32] = $x;
+            let out: &mut [f32] = $out;
+            let n = x.len();
+            let mut i = 0;
+            while i + 8 <= n {
+                let v = _mm256_loadu_ps(x.as_ptr().add(i));
+                _mm256_storeu_ps(out.as_mut_ptr().add(i), $op(v));
+                i += 8;
+            }
+            if i < n {
+                let mut buf = [0.0f32; 8];
+                buf[..n - i].copy_from_slice(&x[i..]);
+                let r = $op(_mm256_loadu_ps(buf.as_ptr()));
+                _mm256_storeu_ps(buf.as_mut_ptr(), r);
+                out[i..].copy_from_slice(&buf[..n - i]);
+            }
+        }};
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn erf_into(x: &[f32], out: &mut [f32]) {
+        map_v!(x, out, erf_v);
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn norm_cdf_into(x: &[f32], out: &mut [f32]) {
+        map_v!(x, out, norm_cdf_v);
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn norm_pdf_into(x: &[f32], out: &mut [f32]) {
+        map_v!(x, out, norm_pdf_v);
+    }
+
+    /// (mu, var) -> (mu', E[x'^2]) — the Eqs. 8/9 body on 8 lanes.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn relu_v(mu: __m256, var: __m256) -> (__m256, __m256) {
+        let var = _mm256_max_ps(var, _mm256_set1_ps(EPS));
+        let std = _mm256_sqrt_ps(var);
+        let cdf = norm_cdf_v(_mm256_div_ps(mu, std));
+        let mu2 = _mm256_mul_ps(mu, mu);
+        let arg = _mm256_sub_ps(
+            _mm256_setzero_ps(),
+            _mm256_div_ps(mu2, _mm256_mul_ps(_mm256_set1_ps(2.0), var)),
+        );
+        let pdf = _mm256_mul_ps(_mm256_mul_ps(std, _mm256_set1_ps(INV_SQRT_2PI)), exp_v(arg));
+        let m = _mm256_fmadd_ps(mu, cdf, pdf);
+        let e2 = _mm256_fmadd_ps(_mm256_add_ps(var, mu2), cdf, _mm256_mul_ps(mu, pdf));
+        (m, _mm256_max_ps(e2, _mm256_setzero_ps()))
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn relu_moments_into(
+        mu: &[f32],
+        var: &[f32],
+        out_mu: &mut [f32],
+        out_e2: &mut [f32],
+    ) {
+        let n = mu.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            let (m, e2) = relu_v(
+                _mm256_loadu_ps(mu.as_ptr().add(i)),
+                _mm256_loadu_ps(var.as_ptr().add(i)),
+            );
+            _mm256_storeu_ps(out_mu.as_mut_ptr().add(i), m);
+            _mm256_storeu_ps(out_e2.as_mut_ptr().add(i), e2);
+            i += 8;
+        }
+        if i < n {
+            let mut mb = [0.0f32; 8];
+            let mut vb = [1.0f32; 8]; // pad variance 1: sqrt/div stay finite
+            mb[..n - i].copy_from_slice(&mu[i..]);
+            vb[..n - i].copy_from_slice(&var[i..]);
+            let (m, e2) = relu_v(_mm256_loadu_ps(mb.as_ptr()), _mm256_loadu_ps(vb.as_ptr()));
+            _mm256_storeu_ps(mb.as_mut_ptr(), m);
+            _mm256_storeu_ps(vb.as_mut_ptr(), e2);
+            out_mu[i..].copy_from_slice(&mb[..n - i]);
+            out_e2[i..].copy_from_slice(&vb[..n - i]);
+        }
+    }
+
+    /// Moment-matched max of two Gaussians on 8 lanes (Roth 2021).
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn gmax_v(
+        mu1: __m256,
+        var1: __m256,
+        mu2: __m256,
+        var2: __m256,
+    ) -> (__m256, __m256) {
+        let one = _mm256_set1_ps(1.0);
+        let theta = _mm256_sqrt_ps(_mm256_max_ps(
+            _mm256_add_ps(var1, var2),
+            _mm256_set1_ps(EPS),
+        ));
+        let alpha = _mm256_div_ps(_mm256_sub_ps(mu1, mu2), theta);
+        let cdf = norm_cdf_v(alpha);
+        let q = _mm256_sub_ps(one, cdf);
+        let pdf = norm_pdf_v(alpha);
+        let tp = _mm256_mul_ps(theta, pdf);
+        let m = _mm256_fmadd_ps(mu1, cdf, _mm256_fmadd_ps(mu2, q, tp));
+        let s1 = _mm256_fmadd_ps(mu1, mu1, var1);
+        let s2 = _mm256_fmadd_ps(mu2, mu2, var2);
+        let e2 = _mm256_fmadd_ps(
+            s1,
+            cdf,
+            _mm256_fmadd_ps(s2, q, _mm256_mul_ps(_mm256_add_ps(mu1, mu2), tp)),
+        );
+        let v = _mm256_max_ps(_mm256_fnmadd_ps(m, m, e2), _mm256_setzero_ps());
+        (m, v)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn gaussian_max2_into(
+        mu1: &[f32],
+        var1: &[f32],
+        mu2: &[f32],
+        var2: &[f32],
+        out_mu: &mut [f32],
+        out_var: &mut [f32],
+    ) {
+        let n = mu1.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            let (m, v) = gmax_v(
+                _mm256_loadu_ps(mu1.as_ptr().add(i)),
+                _mm256_loadu_ps(var1.as_ptr().add(i)),
+                _mm256_loadu_ps(mu2.as_ptr().add(i)),
+                _mm256_loadu_ps(var2.as_ptr().add(i)),
+            );
+            _mm256_storeu_ps(out_mu.as_mut_ptr().add(i), m);
+            _mm256_storeu_ps(out_var.as_mut_ptr().add(i), v);
+            i += 8;
+        }
+        if i < n {
+            let mut m1 = [0.0f32; 8];
+            let mut v1 = [1.0f32; 8];
+            let mut m2 = [0.0f32; 8];
+            let mut v2 = [1.0f32; 8];
+            m1[..n - i].copy_from_slice(&mu1[i..]);
+            v1[..n - i].copy_from_slice(&var1[i..]);
+            m2[..n - i].copy_from_slice(&mu2[i..]);
+            v2[..n - i].copy_from_slice(&var2[i..]);
+            let (m, v) = gmax_v(
+                _mm256_loadu_ps(m1.as_ptr()),
+                _mm256_loadu_ps(v1.as_ptr()),
+                _mm256_loadu_ps(m2.as_ptr()),
+                _mm256_loadu_ps(v2.as_ptr()),
+            );
+            _mm256_storeu_ps(m1.as_mut_ptr(), m);
+            _mm256_storeu_ps(v1.as_mut_ptr(), v);
+            out_mu[i..].copy_from_slice(&m1[..n - i]);
+            out_var[i..].copy_from_slice(&v1[..n - i]);
+        }
+    }
+
+    /// Deterministic 8-lane horizontal sum (pairwise, fixed order).
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let mut buf = [0.0f32; 8];
+        _mm256_storeu_ps(buf.as_mut_ptr(), v);
+        ((buf[0] + buf[4]) + (buf[1] + buf[5])) + ((buf[2] + buf[6]) + (buf[3] + buf[7]))
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot_joint_eq12(
+        xm: &[f32],
+        xa: &[f32],
+        wm: &[f32],
+        wa: &[f32],
+    ) -> (f32, f32) {
+        let k = xm.len();
+        let mut mu = _mm256_setzero_ps();
+        let mut var = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= k {
+            let xmv = _mm256_loadu_ps(xm.as_ptr().add(i));
+            let wmv = _mm256_loadu_ps(wm.as_ptr().add(i));
+            let xav = _mm256_loadu_ps(xa.as_ptr().add(i));
+            let wav = _mm256_loadu_ps(wa.as_ptr().add(i));
+            let t = _mm256_mul_ps(xmv, wmv);
+            mu = _mm256_add_ps(mu, t);
+            // per-element difference, like the scalar kernel: the
+            // variance lanes never hold the (much larger) raw-moment sum
+            var = _mm256_add_ps(var, _mm256_fnmadd_ps(t, t, _mm256_mul_ps(xav, wav)));
+            i += 8;
+        }
+        let mut mu_s = hsum(mu);
+        let mut var_s = hsum(var);
+        while i < k {
+            let t = xm[i] * wm[i];
+            mu_s += t;
+            var_s += xa[i] * wa[i] - t * t;
+            i += 1;
+        }
+        (mu_s, var_s)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot_first_layer(xm: &[f32], wm: &[f32], wa: &[f32]) -> (f32, f32) {
+        let k = xm.len();
+        let mut mu = _mm256_setzero_ps();
+        let mut var = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= k {
+            let xmv = _mm256_loadu_ps(xm.as_ptr().add(i));
+            let wmv = _mm256_loadu_ps(wm.as_ptr().add(i));
+            let wav = _mm256_loadu_ps(wa.as_ptr().add(i));
+            mu = _mm256_fmadd_ps(xmv, wmv, mu);
+            var = _mm256_fmadd_ps(_mm256_mul_ps(xmv, xmv), wav, var);
+            i += 8;
+        }
+        let mut mu_s = hsum(mu);
+        let mut var_s = hsum(var);
+        while i < k {
+            mu_s += xm[i] * wm[i];
+            var_s += xm[i] * xm[i] * wa[i];
+            i += 1;
+        }
+        (mu_s, var_s)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot_mean(xm: &[f32], wm: &[f32]) -> f32 {
+        let k = xm.len();
+        let mut mu = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= k {
+            mu = _mm256_fmadd_ps(
+                _mm256_loadu_ps(xm.as_ptr().add(i)),
+                _mm256_loadu_ps(wm.as_ptr().add(i)),
+                mu,
+            );
+            i += 8;
+        }
+        let mut mu_s = hsum(mu);
+        while i < k {
+            mu_s += xm[i] * wm[i];
+            i += 1;
+        }
+        mu_s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON backend (aarch64, 4 f32 lanes)
+// ---------------------------------------------------------------------------
+
+/// SAFETY: NEON is baseline on aarch64 and [`detect`] only returns
+/// [`Backend::Neon`] there; tails are padded exactly like the AVX2 module.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    use super::{
+        EPS, ERF_A1, ERF_A2, ERF_A3, ERF_A4, ERF_A5, ERF_P, EXP_C1, EXP_C2, EXP_HI, EXP_LO,
+        EXP_P0, EXP_P1, EXP_P2, EXP_P3, EXP_P4, EXP_P5, FRAC_1_SQRT_2, INV_SQRT_2PI, LOG2EF,
+    };
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn exp_v(x: float32x4_t) -> float32x4_t {
+        let x = vminq_f32(x, vdupq_n_f32(EXP_HI));
+        let x = vmaxq_f32(x, vdupq_n_f32(EXP_LO));
+        let k_i = vcvtnq_s32_f32(vmulq_f32(x, vdupq_n_f32(LOG2EF)));
+        let kf = vcvtq_f32_s32(k_i);
+        let r = vfmsq_f32(x, kf, vdupq_n_f32(EXP_C1));
+        let r = vfmsq_f32(r, kf, vdupq_n_f32(EXP_C2));
+        let mut y = vdupq_n_f32(EXP_P0);
+        y = vfmaq_f32(vdupq_n_f32(EXP_P1), y, r);
+        y = vfmaq_f32(vdupq_n_f32(EXP_P2), y, r);
+        y = vfmaq_f32(vdupq_n_f32(EXP_P3), y, r);
+        y = vfmaq_f32(vdupq_n_f32(EXP_P4), y, r);
+        y = vfmaq_f32(vdupq_n_f32(EXP_P5), y, r);
+        let y = vaddq_f32(vfmaq_f32(r, y, vmulq_f32(r, r)), vdupq_n_f32(1.0));
+        let scale =
+            vreinterpretq_f32_s32(vshlq_n_s32::<23>(vaddq_s32(k_i, vdupq_n_s32(127))));
+        vmulq_f32(y, scale)
+    }
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn erf_v(x: float32x4_t) -> float32x4_t {
+        let xa = vabsq_f32(x);
+        let one = vdupq_n_f32(1.0);
+        let t = vdivq_f32(one, vfmaq_f32(one, vdupq_n_f32(ERF_P), xa));
+        let mut poly = vdupq_n_f32(ERF_A5);
+        poly = vfmaq_f32(vdupq_n_f32(ERF_A4), poly, t);
+        poly = vfmaq_f32(vdupq_n_f32(ERF_A3), poly, t);
+        poly = vfmaq_f32(vdupq_n_f32(ERF_A2), poly, t);
+        poly = vfmaq_f32(vdupq_n_f32(ERF_A1), poly, t);
+        poly = vmulq_f32(poly, t);
+        let e = exp_v(vnegq_f32(vmulq_f32(xa, xa)));
+        let r = vfmsq_f32(one, poly, e);
+        // transplant the argument's sign bit onto the magnitude result
+        vbslq_f32(vdupq_n_u32(0x8000_0000), x, r)
+    }
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn norm_cdf_v(x: float32x4_t) -> float32x4_t {
+        let z = vmulq_f32(x, vdupq_n_f32(FRAC_1_SQRT_2));
+        vmulq_f32(vdupq_n_f32(0.5), vaddq_f32(vdupq_n_f32(1.0), erf_v(z)))
+    }
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn norm_pdf_v(x: float32x4_t) -> float32x4_t {
+        let arg = vmulq_f32(vdupq_n_f32(-0.5), vmulq_f32(x, x));
+        vmulq_f32(vdupq_n_f32(INV_SQRT_2PI), exp_v(arg))
+    }
+
+    macro_rules! map_v {
+        ($x:expr, $out:expr, $op:ident) => {{
+            let x: &[f32] = $x;
+            let out: &mut [f32] = $out;
+            let n = x.len();
+            let mut i = 0;
+            while i + 4 <= n {
+                let v = vld1q_f32(x.as_ptr().add(i));
+                vst1q_f32(out.as_mut_ptr().add(i), $op(v));
+                i += 4;
+            }
+            if i < n {
+                let mut buf = [0.0f32; 4];
+                buf[..n - i].copy_from_slice(&x[i..]);
+                let r = $op(vld1q_f32(buf.as_ptr()));
+                vst1q_f32(buf.as_mut_ptr(), r);
+                out[i..].copy_from_slice(&buf[..n - i]);
+            }
+        }};
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn erf_into(x: &[f32], out: &mut [f32]) {
+        map_v!(x, out, erf_v);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn norm_cdf_into(x: &[f32], out: &mut [f32]) {
+        map_v!(x, out, norm_cdf_v);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn norm_pdf_into(x: &[f32], out: &mut [f32]) {
+        map_v!(x, out, norm_pdf_v);
+    }
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn relu_v(mu: float32x4_t, var: float32x4_t) -> (float32x4_t, float32x4_t) {
+        let var = vmaxq_f32(var, vdupq_n_f32(EPS));
+        let std = vsqrtq_f32(var);
+        let cdf = norm_cdf_v(vdivq_f32(mu, std));
+        let mu2 = vmulq_f32(mu, mu);
+        let arg = vnegq_f32(vdivq_f32(mu2, vmulq_f32(vdupq_n_f32(2.0), var)));
+        let pdf = vmulq_f32(vmulq_f32(std, vdupq_n_f32(INV_SQRT_2PI)), exp_v(arg));
+        let m = vfmaq_f32(pdf, mu, cdf);
+        let e2 = vfmaq_f32(vmulq_f32(mu, pdf), vaddq_f32(var, mu2), cdf);
+        (m, vmaxq_f32(e2, vdupq_n_f32(0.0)))
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn relu_moments_into(
+        mu: &[f32],
+        var: &[f32],
+        out_mu: &mut [f32],
+        out_e2: &mut [f32],
+    ) {
+        let n = mu.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            let (m, e2) = relu_v(vld1q_f32(mu.as_ptr().add(i)), vld1q_f32(var.as_ptr().add(i)));
+            vst1q_f32(out_mu.as_mut_ptr().add(i), m);
+            vst1q_f32(out_e2.as_mut_ptr().add(i), e2);
+            i += 4;
+        }
+        if i < n {
+            let mut mb = [0.0f32; 4];
+            let mut vb = [1.0f32; 4];
+            mb[..n - i].copy_from_slice(&mu[i..]);
+            vb[..n - i].copy_from_slice(&var[i..]);
+            let (m, e2) = relu_v(vld1q_f32(mb.as_ptr()), vld1q_f32(vb.as_ptr()));
+            vst1q_f32(mb.as_mut_ptr(), m);
+            vst1q_f32(vb.as_mut_ptr(), e2);
+            out_mu[i..].copy_from_slice(&mb[..n - i]);
+            out_e2[i..].copy_from_slice(&vb[..n - i]);
+        }
+    }
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn gmax_v(
+        mu1: float32x4_t,
+        var1: float32x4_t,
+        mu2: float32x4_t,
+        var2: float32x4_t,
+    ) -> (float32x4_t, float32x4_t) {
+        let one = vdupq_n_f32(1.0);
+        let theta = vsqrtq_f32(vmaxq_f32(vaddq_f32(var1, var2), vdupq_n_f32(EPS)));
+        let alpha = vdivq_f32(vsubq_f32(mu1, mu2), theta);
+        let cdf = norm_cdf_v(alpha);
+        let q = vsubq_f32(one, cdf);
+        let pdf = norm_pdf_v(alpha);
+        let tp = vmulq_f32(theta, pdf);
+        let m = vfmaq_f32(vfmaq_f32(tp, mu2, q), mu1, cdf);
+        let s1 = vfmaq_f32(var1, mu1, mu1);
+        let s2 = vfmaq_f32(var2, mu2, mu2);
+        let e2 = vfmaq_f32(
+            vfmaq_f32(vmulq_f32(vaddq_f32(mu1, mu2), tp), s2, q),
+            s1,
+            cdf,
+        );
+        let v = vmaxq_f32(vfmsq_f32(e2, m, m), vdupq_n_f32(0.0));
+        (m, v)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn gaussian_max2_into(
+        mu1: &[f32],
+        var1: &[f32],
+        mu2: &[f32],
+        var2: &[f32],
+        out_mu: &mut [f32],
+        out_var: &mut [f32],
+    ) {
+        let n = mu1.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            let (m, v) = gmax_v(
+                vld1q_f32(mu1.as_ptr().add(i)),
+                vld1q_f32(var1.as_ptr().add(i)),
+                vld1q_f32(mu2.as_ptr().add(i)),
+                vld1q_f32(var2.as_ptr().add(i)),
+            );
+            vst1q_f32(out_mu.as_mut_ptr().add(i), m);
+            vst1q_f32(out_var.as_mut_ptr().add(i), v);
+            i += 4;
+        }
+        if i < n {
+            let mut m1 = [0.0f32; 4];
+            let mut v1 = [1.0f32; 4];
+            let mut m2 = [0.0f32; 4];
+            let mut v2 = [1.0f32; 4];
+            m1[..n - i].copy_from_slice(&mu1[i..]);
+            v1[..n - i].copy_from_slice(&var1[i..]);
+            m2[..n - i].copy_from_slice(&mu2[i..]);
+            v2[..n - i].copy_from_slice(&var2[i..]);
+            let (m, v) = gmax_v(
+                vld1q_f32(m1.as_ptr()),
+                vld1q_f32(v1.as_ptr()),
+                vld1q_f32(m2.as_ptr()),
+                vld1q_f32(v2.as_ptr()),
+            );
+            vst1q_f32(m1.as_mut_ptr(), m);
+            vst1q_f32(v1.as_mut_ptr(), v);
+            out_mu[i..].copy_from_slice(&m1[..n - i]);
+            out_var[i..].copy_from_slice(&v1[..n - i]);
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_joint_eq12(
+        xm: &[f32],
+        xa: &[f32],
+        wm: &[f32],
+        wa: &[f32],
+    ) -> (f32, f32) {
+        let k = xm.len();
+        let mut mu = vdupq_n_f32(0.0);
+        let mut var = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 4 <= k {
+            let xmv = vld1q_f32(xm.as_ptr().add(i));
+            let wmv = vld1q_f32(wm.as_ptr().add(i));
+            let xav = vld1q_f32(xa.as_ptr().add(i));
+            let wav = vld1q_f32(wa.as_ptr().add(i));
+            let t = vmulq_f32(xmv, wmv);
+            mu = vaddq_f32(mu, t);
+            // per-element difference, like the scalar kernel
+            var = vaddq_f32(var, vfmsq_f32(vmulq_f32(xav, wav), t, t));
+            i += 4;
+        }
+        let mut mu_s = vaddvq_f32(mu);
+        let mut var_s = vaddvq_f32(var);
+        while i < k {
+            let t = xm[i] * wm[i];
+            mu_s += t;
+            var_s += xa[i] * wa[i] - t * t;
+            i += 1;
+        }
+        (mu_s, var_s)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_first_layer(xm: &[f32], wm: &[f32], wa: &[f32]) -> (f32, f32) {
+        let k = xm.len();
+        let mut mu = vdupq_n_f32(0.0);
+        let mut var = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 4 <= k {
+            let xmv = vld1q_f32(xm.as_ptr().add(i));
+            let wmv = vld1q_f32(wm.as_ptr().add(i));
+            let wav = vld1q_f32(wa.as_ptr().add(i));
+            mu = vfmaq_f32(mu, xmv, wmv);
+            var = vfmaq_f32(var, vmulq_f32(xmv, xmv), wav);
+            i += 4;
+        }
+        let mut mu_s = vaddvq_f32(mu);
+        let mut var_s = vaddvq_f32(var);
+        while i < k {
+            mu_s += xm[i] * wm[i];
+            var_s += xm[i] * xm[i] * wa[i];
+            i += 1;
+        }
+        (mu_s, var_s)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_mean(xm: &[f32], wm: &[f32]) -> f32 {
+        let k = xm.len();
+        let mut mu = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 4 <= k {
+            mu = vfmaq_f32(mu, vld1q_f32(xm.as_ptr().add(i)), vld1q_f32(wm.as_ptr().add(i)));
+            i += 4;
+        }
+        let mut mu_s = vaddvq_f32(mu);
+        while i < k {
+            mu_s += xm[i] * wm[i];
+            i += 1;
+        }
+        mu_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn isa_spelling_roundtrips() {
+        for isa in [Isa::Scalar, Isa::Native] {
+            assert_eq!(Isa::parse(isa.as_str()), Some(isa));
+        }
+        assert_eq!(Isa::parse("avx512"), None);
+        assert_eq!(resolve(Isa::Scalar), Backend::Scalar);
+        // Native resolves to *some* backend, deterministically
+        assert_eq!(resolve(Isa::Native), resolve(Isa::Native));
+    }
+
+    #[test]
+    fn exp_poly_matches_f64_exp() {
+        // the shared polynomial algorithm itself, before any backend
+        // renders it: ~1e-7 relative against f64 exp over the range the
+        // moment-matching ops use (erf feeds it -x^2, x in [-6, 6])
+        let mut worst = 0.0f64;
+        for i in -3600..=100 {
+            let x = i as f32 * 0.01;
+            let got = exp_poly(x) as f64;
+            let want = (x as f64).exp();
+            let rel = ((got - want) / want).abs();
+            worst = worst.max(rel);
+        }
+        assert!(worst < 5e-7, "exp_poly max relative error {worst}");
+    }
+
+    #[test]
+    fn detected_backend_is_stable_and_named() {
+        let b = detect();
+        assert_eq!(b, detect());
+        assert!(!b.name().is_empty());
+    }
+
+    #[test]
+    fn simd_erf_matches_scalar_closely() {
+        let b = detect();
+        let xs: Vec<f32> = (-600..=600).map(|i| i as f32 * 0.01).collect();
+        let mut got = vec![0.0f32; xs.len()];
+        erf_into(b, &xs, &mut got);
+        for (&x, &g) in xs.iter().zip(&got) {
+            let s = crate::ops::erf::erf(x);
+            assert!(
+                (g - s).abs() <= 1e-6,
+                "erf({x}): {} backend {g} vs scalar {s}",
+                b.name()
+            );
+        }
+    }
+
+    #[test]
+    fn simd_relu_moments_match_scalar_closely() {
+        let b = detect();
+        check(10, |g| {
+            let n = g.usize_in(1, 67); // odd sizes exercise the padded tail
+            let mu: Vec<f32> = g.normal_vec(n, 2.0);
+            let var: Vec<f32> = g.var_vec(n, 1.0);
+            let mut om = vec![0.0f32; n];
+            let mut oe = vec![0.0f32; n];
+            relu_moments_into(b, &mu, &var, &mut om, &mut oe);
+            for i in 0..n {
+                let (m, e2) = crate::ops::relu::relu_moments(mu[i], var[i]);
+                assert!(
+                    (om[i] - m).abs() <= 1e-5 + 1e-4 * m.abs(),
+                    "relu mu lane {i}: {} vs {m}",
+                    om[i]
+                );
+                assert!(
+                    (oe[i] - e2).abs() <= 1e-5 + 1e-4 * e2.abs(),
+                    "relu e2 lane {i}: {} vs {e2}",
+                    oe[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn simd_gaussian_max_matches_scalar_closely() {
+        let b = detect();
+        check(10, |g| {
+            let n = g.usize_in(1, 35);
+            let m1: Vec<f32> = g.normal_vec(n, 2.0);
+            let v1: Vec<f32> = g.var_vec(n, 1.0);
+            let m2: Vec<f32> = g.normal_vec(n, 2.0);
+            let v2: Vec<f32> = g.var_vec(n, 1.0);
+            let mut om = vec![0.0f32; n];
+            let mut ov = vec![0.0f32; n];
+            gaussian_max2_into(b, &m1, &v1, &m2, &v2, &mut om, &mut ov);
+            for i in 0..n {
+                let (m, v) = crate::ops::maxpool::gaussian_max(m1[i], v1[i], m2[i], v2[i]);
+                assert!((om[i] - m).abs() <= 1e-5 + 1e-4 * m.abs(), "gmax mu lane {i}");
+                assert!((ov[i] - v).abs() <= 1e-4 + 1e-3 * v.abs(), "gmax var lane {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn simd_dots_match_naive_reductions() {
+        let b = detect();
+        check(12, |g| {
+            let k = g.usize_in(1, 130); // covers sub-lane and remainder
+            let xm: Vec<f32> = g.normal_vec(k, 1.0);
+            let xa: Vec<f32> = g.var_vec(k, 1.0);
+            let wm: Vec<f32> = g.normal_vec(k, 0.3);
+            let wa: Vec<f32> = g.var_vec(k, 0.1);
+            // f64 references
+            let (mut mu64, mut e64, mut c64, mut f64v) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+            for i in 0..k {
+                let t = xm[i] as f64 * wm[i] as f64;
+                mu64 += t;
+                e64 += xa[i] as f64 * wa[i] as f64;
+                c64 += t * t;
+                f64v += (xm[i] as f64) * (xm[i] as f64) * wa[i] as f64;
+            }
+            let (mu, var) = dot_joint_eq12(b, &xm, &xa, &wm, &wa);
+            assert!((mu as f64 - mu64).abs() <= 1e-4 + 1e-4 * mu64.abs(), "eq12 mu");
+            let want_var = e64 - c64;
+            assert!(
+                (var as f64 - want_var).abs() <= 1e-3 + 1e-3 * want_var.abs(),
+                "eq12 var {var} vs {want_var}"
+            );
+            let (fmu, fvar) = dot_first_layer(b, &xm, &wm, &wa);
+            assert!((fmu as f64 - mu64).abs() <= 1e-4 + 1e-4 * mu64.abs(), "eq13 mu");
+            assert!((fvar as f64 - f64v).abs() <= 1e-4 + 1e-4 * f64v.abs(), "eq13 var");
+            let m = dot_mean(b, &xm, &wm);
+            assert!((m as f64 - mu64).abs() <= 1e-4 + 1e-4 * mu64.abs(), "mean");
+        });
+    }
+
+    #[test]
+    fn scalar_backend_is_bit_identical_to_scalar_helpers() {
+        // the always-available fallback must reproduce the historical
+        // scalar ops exactly — it IS those ops
+        let mut g = Gen::new(9);
+        let n = 23;
+        let mu: Vec<f32> = g.normal_vec(n, 2.0);
+        let var: Vec<f32> = g.var_vec(n, 1.0);
+        let mut om = vec![0.0f32; n];
+        let mut oe = vec![0.0f32; n];
+        relu_moments_into(Backend::Scalar, &mu, &var, &mut om, &mut oe);
+        for i in 0..n {
+            let (m, e2) = crate::ops::relu::relu_moments(mu[i], var[i]);
+            assert_eq!(om[i].to_bits(), m.to_bits());
+            assert_eq!(oe[i].to_bits(), e2.to_bits());
+        }
+        let mut out = vec![0.0f32; n];
+        erf_into(Backend::Scalar, &mu, &mut out);
+        for i in 0..n {
+            assert_eq!(out[i].to_bits(), crate::ops::erf::erf(mu[i]).to_bits());
+        }
+    }
+}

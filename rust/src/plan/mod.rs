@@ -20,7 +20,13 @@
 //! * one schedule bound per *compute step* from the per-layer schedule
 //!   table ([`Schedules::per_layer`]), realizing the paper's
 //!   per-operator-workload tuning: the MLP's 784→100 and 100→10 layers
-//!   can carry different tiles/unrolls;
+//!   can carry different tiles/unrolls — and, since PR 5, different
+//!   [`Isa`](crate::ops::Isa) knobs: compute steps bind their schedule's
+//!   ISA (subject to the `Schedules::isa_override` serve/tune `--isa`
+//!   policy), ReLU and the vectorized pool bind the plan-wide elementwise
+//!   ISA, and the one-time runtime detector resolves `Native` to
+//!   AVX2+FMA / NEON / scalar at execution (`PFP_FORCE_SCALAR=1` forces
+//!   the fallback);
 //! * the step's **work partition** resolved at plan time: each parallel
 //!   step carries a pre-bound list of disjoint tile tasks (row ranges for
 //!   dense, patch-row + output-plane ranges for conv's im2col lowering,
@@ -324,7 +330,11 @@ impl CompiledPlan {
                         }
                         steps.push(Step {
                             kind: StepKind::Relu,
-                            sched: Schedule::baseline(),
+                            // the elementwise moment-matching kernels bind
+                            // the plan-wide ISA policy (Native unless
+                            // overridden — erf/exp dominate this step)
+                            sched: Schedule::baseline()
+                                .with_isa(schedules.elementwise_isa()),
                             tiles: tile_ranges(cur_len, step_tasks(schedules.relu_threads)),
                             label: labels[li].clone(),
                             op_type: "relu",
@@ -377,7 +387,8 @@ impl CompiledPlan {
                                 h,
                                 w,
                             },
-                            sched: Schedule::baseline(),
+                            sched: Schedule::baseline()
+                                .with_isa(schedules.elementwise_isa()),
                             tiles: pool_tiles,
                             label: labels[li].clone(),
                             op_type: "maxpool",
@@ -683,7 +694,9 @@ impl CompiledPlan {
                     let mu_out = &mut dst.mu[..step.out_len];
                     let e2_out = &mut dst.aux[..step.out_len];
                     profiler.record(&step.label, step.op_type, || {
-                        pfp_relu_tiled_into(pool, mu_in, var_in, &step.tiles, mu_out, e2_out)
+                        pfp_relu_tiled_into(
+                            pool, step.sched.isa, mu_in, var_in, &step.tiles, mu_out, e2_out,
+                        )
                     });
                     cur_a = !cur_a;
                 }
@@ -696,8 +709,8 @@ impl CompiledPlan {
                     profiler.record(&step.label, step.op_type, || {
                         if *vectorized {
                             pfp_maxpool2_tiled_into(
-                                pool, mu_in, var_in, *n, *c, *h, *w, &step.tiles, mu_out,
-                                var_out,
+                                pool, step.sched.isa, mu_in, var_in, *n, *c, *h, *w,
+                                &step.tiles, mu_out, var_out,
                             )
                         } else {
                             pfp_maxpool_generic_into(

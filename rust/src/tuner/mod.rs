@@ -158,8 +158,9 @@ pub struct LayerTuneResult {
 /// pre-partitioned row-tile set the compiled plan would bind
 /// ([`tile_ranges`]), gang-dispatched onto the process pool into reused
 /// output buffers ([`dense_kernel_tiled_into`]) — so a persisted record
-/// describes exactly the code path that serves it, parallel and tiled
-/// candidates included. Inputs are the posterior's real weight tensors
+/// describes exactly the code path that serves it, parallel, tiled, and
+/// explicit-SIMD (`isa`) candidates included (the candidate's ISA knob
+/// resolves through the same runtime detector serving uses). Inputs are the posterior's real weight tensors
 /// (flattened to `[N, K]` — identical memory layout) and synthetic
 /// activations of the layer's true shape.
 pub fn tune_per_layer(

@@ -23,7 +23,12 @@ use crate::util::json::Json;
 ///   interpreted operator API.
 /// * 2 — PR 4: schedules measured against the planned tile executor
 ///   (row-partition gang dispatch, `threads` = plan-time tile count).
-pub const SCHEMA_VERSION: u64 = 2;
+/// * 3 — PR 5: schedules carry the explicit-SIMD `isa` knob and were
+///   measured on the ISA they name; v2 records (no `isa` field — tuned
+///   against scalar-only kernels on a different search space) are
+///   ignored so a stale scalar best can't silently outrank the SIMD
+///   microkernels.
+pub const SCHEMA_VERSION: u64 = 3;
 
 /// Key -> (schedule, measured median ms).
 #[derive(Clone, Debug)]

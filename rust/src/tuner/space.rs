@@ -1,5 +1,6 @@
 //! Schedule search space (what the paper's TE schedule templates expose).
 
+use crate::ops::simd::Isa;
 use crate::ops::{LoopOrder, Schedule};
 use crate::util::rng::SplitMix64;
 
@@ -11,6 +12,9 @@ pub struct SearchSpace {
     pub tile_ns: Vec<usize>,
     pub tile_ks: Vec<usize>,
     pub max_threads: usize,
+    /// ISA candidates (the explicit-SIMD dimension). Defaults to both;
+    /// `pfp tune --isa scalar|native` narrows it to one.
+    pub isas: Vec<Isa>,
     /// probability of sampling a tiled candidate at all
     pub tile_prob: f64,
 }
@@ -24,6 +28,7 @@ impl SearchSpace {
             tile_ns: vec![0, 8, 16, 32],
             tile_ks: vec![0, 32, 64, 128],
             max_threads: max_threads.max(1),
+            isas: vec![Isa::Scalar, Isa::Native],
             tile_prob: 0.25,
         }
     }
@@ -50,6 +55,7 @@ impl SearchSpace {
             unroll: *self.pick(&self.unrolls, rng),
             vectorize: rng.randint(2) == 0,
             threads: 1 + rng.randint(self.max_threads as u64) as usize,
+            isa: *self.pick(&self.isas, rng),
         }
     }
 
@@ -58,10 +64,11 @@ impl SearchSpace {
     /// the stochastic search).
     pub fn mutate(&self, parent: &Schedule, rng: &mut SplitMix64) -> Schedule {
         let mut s = *parent;
-        match rng.randint(4) {
+        match rng.randint(5) {
             0 => s.loop_order = *self.pick(&self.orders, rng),
             1 => s.unroll = *self.pick(&self.unrolls, rng),
             2 => s.vectorize = !s.vectorize,
+            3 => s.isa = *self.pick(&self.isas, rng),
             _ => s.threads = 1 + rng.randint(self.max_threads as u64) as usize,
         }
         s
@@ -76,14 +83,32 @@ mod tests {
     fn samples_stay_in_bounds() {
         let space = SearchSpace::dense_default(4);
         let mut rng = SplitMix64::new(1);
+        let mut saw_native = false;
+        let mut saw_scalar = false;
         for _ in 0..200 {
             let s = space.sample(&mut rng);
             assert!(space.unrolls.contains(&s.unroll));
             assert!((1..=4).contains(&s.threads));
+            assert!(space.isas.contains(&s.isa));
+            saw_native |= s.isa == Isa::Native;
+            saw_scalar |= s.isa == Isa::Scalar;
             if s.tile_n > 0 {
                 assert!(space.tile_ns.contains(&s.tile_n));
                 assert!(s.tile_k > 0);
             }
+        }
+        assert!(saw_native && saw_scalar, "sampling must cover the ISA dimension");
+    }
+
+    #[test]
+    fn restricted_isa_space_samples_only_that_isa() {
+        let mut space = SearchSpace::dense_default(2);
+        space.isas = vec![Isa::Scalar];
+        let mut rng = SplitMix64::new(5);
+        for _ in 0..50 {
+            assert_eq!(space.sample(&mut rng).isa, Isa::Scalar);
+            let child = space.mutate(&Schedule::tuned(1).with_isa(Isa::Scalar), &mut rng);
+            assert_eq!(child.isa, Isa::Scalar);
         }
     }
 
@@ -100,6 +125,7 @@ mod tests {
                 child.loop_order != parent.loop_order,
                 child.unroll != parent.unroll,
                 child.vectorize != parent.vectorize,
+                child.isa != parent.isa,
                 child.threads != parent.threads,
             ]
             .iter()

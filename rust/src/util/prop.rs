@@ -51,6 +51,48 @@ impl Gen {
     pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.usize_in(0, xs.len() - 1)]
     }
+
+    /// Random ISA knob (the SIMD dispatch dimension).
+    pub fn isa(&mut self) -> crate::ops::simd::Isa {
+        use crate::ops::simd::Isa;
+        if self.bool() {
+            Isa::Native
+        } else {
+            Isa::Scalar
+        }
+    }
+
+    /// Random dense workload shape `(m, k, n)` within the given caps
+    /// (inclusive, each at least 1).
+    pub fn dense_shape(&mut self, m_max: usize, k_max: usize, n_max: usize) -> (usize, usize, usize) {
+        (
+            self.usize_in(1, m_max),
+            self.usize_in(1, k_max),
+            self.usize_in(1, n_max),
+        )
+    }
+
+    /// Random schedule across every knob — loop order, tiles, unroll,
+    /// vectorize hints, ISA — with `threads` pinned to 1 (differential
+    /// tests drive parallelism through explicit tile partitions instead).
+    pub fn schedule(&mut self) -> crate::ops::Schedule {
+        use crate::ops::{LoopOrder, Schedule};
+        let tiled = self.usize_in(0, 3) == 0;
+        let (tile_n, tile_k) = if tiled {
+            (*self.pick(&[8usize, 16, 32]), *self.pick(&[32usize, 64, 128]))
+        } else {
+            (0, 0)
+        };
+        Schedule {
+            loop_order: if self.bool() { LoopOrder::Mnk } else { LoopOrder::Mkn },
+            tile_n,
+            tile_k,
+            unroll: *self.pick(&[1usize, 2, 3, 4, 8]),
+            vectorize: self.bool(),
+            threads: 1,
+            isa: self.isa(),
+        }
+    }
 }
 
 /// Run `body` for `cases` seeded cases. Panics (with the case seed) on the

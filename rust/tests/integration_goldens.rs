@@ -5,9 +5,26 @@
 //! `python/compile/aot.py`: for each (arch, variant, batch) entry, an
 //! input slice of the test set plus the JAX outputs. These tests require
 //! `make artifacts`; they skip (with a notice) when artifacts are absent.
+//!
+//! ## Tolerance policy (SIMD dispatch)
+//!
+//! The PFP goldens are checked on **both** dispatch paths: the tuned
+//! schedules' native ISA (runtime-detected AVX2+FMA / NEON) and the
+//! forced-scalar path (`--isa scalar` semantics; CI additionally runs the
+//! whole suite under `PFP_FORCE_SCALAR=1`). The layered contract:
+//!
+//! * within one ISA, planned == interpreted == planned-parallel **bit for
+//!   bit** (asserted below on the trained posterior);
+//! * across ISAs, outputs differ by <= 1e-4 relative (FMA reassociation
+//!   plus the vectorized exp/erf polynomials, each ~1e-6 absolute —
+//!   `ops/erf.rs` pins those bounds against an f64 reference table);
+//! * both ISAs therefore land inside the JAX-golden envelope (2e-3 mlp /
+//!   5e-3 lenet — dominated by f32-vs-f64 and training-artifact noise,
+//!   not by the ISA choice).
 
 use pfp::model::npz::Npz;
 use pfp::model::{Arch, DetExecutor, PfpExecutor, PosteriorWeights, Schedules};
+use pfp::ops::simd::Isa;
 use pfp::runtime::Manifest;
 use pfp::tensor::Tensor;
 
@@ -41,19 +58,27 @@ fn check_pfp(arch_name: &str, batch: usize, atol: f32) {
     let want_var = goldens.tensor(&format!("{key}_var")).unwrap();
 
     let x2d = x.clone().flatten_2d();
-    let mut exec = PfpExecutor::new(arch, weights, Schedules::tuned(1));
-    let (mu, var) = exec.forward(&x2d);
-
-    assert!(
-        mu.allclose(&want_mu.clone().flatten_2d(), atol, 1e-3),
-        "{key}: native mu deviates from JAX golden (max {:.2e})",
-        mu.max_abs_diff(&want_mu.flatten_2d())
-    );
-    assert!(
-        var.allclose(&want_var.clone().flatten_2d(), atol * 2.0, 5e-3),
-        "{key}: native var deviates from JAX golden (max {:.2e})",
-        var.max_abs_diff(&want_var.flatten_2d())
-    );
+    // both dispatch paths must sit inside the golden envelope (see the
+    // tolerance policy in the file header)
+    for isa_override in [None, Some(Isa::Scalar)] {
+        let schedules = Schedules::tuned(1).with_isa_override(isa_override);
+        let mut exec = PfpExecutor::new(arch.clone(), weights.clone(), schedules);
+        let (mu, var) = exec.forward(&x2d);
+        let isa_tag = match isa_override {
+            None => "native",
+            Some(_) => "scalar",
+        };
+        assert!(
+            mu.allclose(&want_mu.clone().flatten_2d(), atol, 1e-3),
+            "{key} [{isa_tag}]: mu deviates from JAX golden (max {:.2e})",
+            mu.max_abs_diff(&want_mu.clone().flatten_2d())
+        );
+        assert!(
+            var.allclose(&want_var.clone().flatten_2d(), atol * 2.0, 5e-3),
+            "{key} [{isa_tag}]: var deviates from JAX golden (max {:.2e})",
+            var.max_abs_diff(&want_var.clone().flatten_2d())
+        );
+    }
 }
 
 #[test]

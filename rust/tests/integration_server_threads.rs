@@ -47,6 +47,7 @@ fn idle_server_owns_no_connection_threads() {
         relu_threads: 1,
         maxpool_threads: 1,
         plan_threads: 0,
+        isa_override: None,
         pool: svc.pool().clone(),
         records: None,
     };

@@ -1,0 +1,247 @@
+//! Differential property-test harness for the SIMD microkernel layer —
+//! randomized cross-backend parity under an explicit tolerance contract.
+//!
+//! The contract being policed (documented in `ops/simd.rs`):
+//!
+//! * **bit-identical within one ISA at a fixed thread/tile count** — and,
+//!   because plan partitioning never splits a reduction, bit-identical
+//!   *across* tile counts {1, 2, 4} within one ISA too;
+//! * **<= 1e-4 relative across ISAs** — FMA contraction reassociates the
+//!   dense reductions, and the vector `exp` is a polynomial, so scalar
+//!   and native outputs are close, not equal (under `PFP_FORCE_SCALAR=1`
+//!   native resolves to scalar and the cross-ISA checks become exact —
+//!   the CI dispatch matrix runs both branches);
+//! * planned and interpreted execution agree bit for bit at the same ISA.
+//!
+//! Shapes, schedules (every knob, ISA included), and inputs are drawn
+//! from the seeded [`prop::check`] harness, which prints the failing case
+//! seed (`PFP_PROP_SEED=<base>, case seed <s>`) so any failure replays
+//! exactly.
+
+use pfp::model::{Arch, PfpExecutor, PosteriorWeights, Schedules};
+use pfp::ops::dense::{
+    dense_kernel_tiled_into, dense_rows_into, DenseSlices, FirstLayer, JointEq12,
+};
+use pfp::ops::maxpool::pfp_maxpool2_planes_into;
+use pfp::ops::relu::pfp_relu_tiled_into;
+use pfp::ops::simd::Isa;
+use pfp::plan::tile_ranges;
+use pfp::tensor::Tensor;
+use pfp::util::prop::{check, Gen};
+use pfp::util::threadpool::ThreadPool;
+
+/// |a - b| <= atol + rtol * |b| per element, with the failing index named.
+fn assert_close(tag: &str, got: &[f32], want: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(got.len(), want.len(), "{tag}: length mismatch");
+    for i in 0..got.len() {
+        let (a, b) = (got[i], want[i]);
+        assert!(
+            (a - b).abs() <= atol + rtol * b.abs(),
+            "{tag}: element {i}: {a} vs {b} (diff {})",
+            (a - b).abs()
+        );
+    }
+}
+
+fn rand_dense_case(
+    g: &mut Gen,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let x_mu = g.normal_vec(m * k, 1.0);
+    let x_e2: Vec<f32> = x_mu.iter().map(|&v| v * v + 0.1).collect();
+    let w_mu = g.normal_vec(n * k, 0.2);
+    let w_e2: Vec<f32> = w_mu.iter().map(|&v| v * v + 0.01).collect();
+    let b_mu = g.normal_vec(n, 0.5);
+    let b_var = g.var_vec(n, 0.1);
+    (x_mu, x_e2, w_mu, w_e2, b_mu, b_var)
+}
+
+#[test]
+fn dense_randomized_cross_isa_and_tile_parity() {
+    let pool = ThreadPool::new(4);
+    check(20, |g| {
+        let (m, k, n) = g.dense_shape(10, 130, 40);
+        let sched = g.schedule();
+        let (x_mu, x_e2, w_mu, w_e2, b_mu, b_var) = rand_dense_case(g, m, k, n);
+        let slices = DenseSlices {
+            m,
+            k,
+            n,
+            x_mu: &x_mu,
+            x_aux: &x_e2,
+            w_mu: &w_mu,
+            w_aux: &w_e2,
+            b_mu: Some(&b_mu),
+            b_var: Some(&b_var),
+        };
+        let mut outs: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+        for isa in [Isa::Scalar, Isa::Native] {
+            let s = sched.with_isa(isa);
+            // serial reference for this ISA
+            let mut want_mu = vec![0.0f32; m * n];
+            let mut want_var = vec![0.0f32; m * n];
+            dense_rows_into::<JointEq12>(&slices, &s, 0..m, &mut want_mu, &mut want_var);
+            // thread/tile counts {1, 2, 4}: bit-identical within the ISA
+            for tasks in [1usize, 2, 4] {
+                let tiles = tile_ranges(m, tasks);
+                let mut mu = vec![0.0f32; m * n];
+                let mut var = vec![0.0f32; m * n];
+                dense_kernel_tiled_into::<JointEq12>(
+                    &pool, &slices, &s, &tiles, &mut mu, &mut var,
+                );
+                assert_eq!(mu, want_mu, "{} [{m},{k},{n}] tasks={tasks} mu", s.tag());
+                assert_eq!(var, want_var, "{} [{m},{k},{n}] tasks={tasks} var", s.tag());
+            }
+            outs.push((want_mu, want_var));
+        }
+        // across ISAs: the 1e-4-relative contract
+        let tag = format!("{} [{m},{k},{n}]", sched.tag());
+        assert_close(&format!("{tag} mu"), &outs[1].0, &outs[0].0, 1e-4, 1e-4);
+        assert_close(&format!("{tag} var"), &outs[1].1, &outs[0].1, 1e-3, 1e-4);
+    });
+}
+
+#[test]
+fn first_layer_randomized_cross_isa_parity() {
+    check(12, |g| {
+        let (m, k, n) = g.dense_shape(6, 100, 24);
+        let sched = g.schedule();
+        let x = g.normal_vec(m * k, 1.0);
+        let x_sq: Vec<f32> = x.iter().map(|&v| v * v).collect();
+        let w_mu = g.normal_vec(n * k, 0.2);
+        let w_var = g.var_vec(n * k, 0.02);
+        let slices = DenseSlices {
+            m,
+            k,
+            n,
+            x_mu: &x,
+            x_aux: &x_sq,
+            w_mu: &w_mu,
+            w_aux: &w_var,
+            b_mu: None,
+            b_var: None,
+        };
+        let mut mu_s = vec![0.0f32; m * n];
+        let mut var_s = vec![0.0f32; m * n];
+        let mut mu_n = vec![0.0f32; m * n];
+        let mut var_n = vec![0.0f32; m * n];
+        dense_rows_into::<FirstLayer>(
+            &slices,
+            &sched.with_isa(Isa::Scalar),
+            0..m,
+            &mut mu_s,
+            &mut var_s,
+        );
+        dense_rows_into::<FirstLayer>(
+            &slices,
+            &sched.with_isa(Isa::Native),
+            0..m,
+            &mut mu_n,
+            &mut var_n,
+        );
+        let tag = format!("first {} [{m},{k},{n}]", sched.tag());
+        assert_close(&format!("{tag} mu"), &mu_n, &mu_s, 1e-4, 1e-4);
+        assert_close(&format!("{tag} var"), &var_n, &var_s, 1e-3, 1e-4);
+    });
+}
+
+#[test]
+fn relu_randomized_cross_isa_and_tile_parity() {
+    let pool = ThreadPool::new(4);
+    check(16, |g| {
+        let n = g.usize_in(1, 600);
+        let mu = g.normal_vec(n, 2.0);
+        let var = g.var_vec(n, 1.0);
+        let mut per_isa: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+        for isa in [Isa::Scalar, Isa::Native] {
+            let mut want_mu = vec![0.0f32; n];
+            let mut want_e2 = vec![0.0f32; n];
+            pfp_relu_tiled_into(&pool, isa, &mu, &var, &[], &mut want_mu, &mut want_e2);
+            for tasks in [2usize, 4] {
+                let tiles = tile_ranges(n, tasks);
+                let mut got_mu = vec![0.0f32; n];
+                let mut got_e2 = vec![0.0f32; n];
+                pfp_relu_tiled_into(&pool, isa, &mu, &var, &tiles, &mut got_mu, &mut got_e2);
+                assert_eq!(got_mu, want_mu, "{isa:?} n={n} tasks={tasks} mu");
+                assert_eq!(got_e2, want_e2, "{isa:?} n={n} tasks={tasks} e2");
+            }
+            per_isa.push((want_mu, want_e2));
+        }
+        assert_close(&format!("relu n={n} mu"), &per_isa[1].0, &per_isa[0].0, 1e-4, 1e-5);
+        assert_close(&format!("relu n={n} e2"), &per_isa[1].1, &per_isa[0].1, 1e-4, 1e-5);
+    });
+}
+
+#[test]
+fn maxpool_randomized_cross_isa_parity() {
+    check(12, |g| {
+        let planes = g.usize_in(1, 6);
+        let h = 2 * g.usize_in(1, 6);
+        let w = 2 * g.usize_in(1, 9); // odd output widths hit the lane tail
+        let mu = g.normal_vec(planes * h * w, 1.0);
+        let var = g.var_vec(planes * h * w, 0.5);
+        let out_len = planes * (h / 2) * (w / 2);
+        let mut per_isa: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+        for isa in [Isa::Scalar, Isa::Native] {
+            let mut out_mu = vec![0.0f32; out_len];
+            let mut out_var = vec![0.0f32; out_len];
+            pfp_maxpool2_planes_into(isa, &mu, &var, h, w, 0..planes, &mut out_mu, &mut out_var);
+            per_isa.push((out_mu, out_var));
+        }
+        let tag = format!("pool [{planes}x{h}x{w}]");
+        assert_close(&format!("{tag} mu"), &per_isa[1].0, &per_isa[0].0, 1e-4, 1e-5);
+        assert_close(&format!("{tag} var"), &per_isa[1].1, &per_isa[0].1, 1e-3, 1e-4);
+    });
+}
+
+#[test]
+fn network_planned_interpreted_and_cross_isa_parity() {
+    // whole-network differential: for each arch and random batch,
+    //  * planned == interpreted bit for bit at the native ISA,
+    //  * planned at plan_threads {2, 4} == planned serial bit for bit,
+    //  * native vs forced-scalar within the 1e-4-relative contract.
+    for arch in [Arch::mlp(), Arch::lenet()] {
+        let weights = PosteriorWeights::synthetic(&arch, 31);
+        check(3, |g| {
+            let batch = g.usize_in(1, 5);
+            let n = batch * arch.input_len();
+            let x = Tensor::new(
+                vec![batch, arch.input_len()],
+                (0..n).map(|_| g.f32_in(0.0, 1.0)).collect(),
+            )
+            .unwrap();
+
+            let (mu_i, var_i) =
+                PfpExecutor::new(arch.clone(), weights.clone(), Schedules::tuned(1))
+                    .forward_interpreted(&x);
+            let (mu_p, var_p) =
+                PfpExecutor::new(arch.clone(), weights.clone(), Schedules::tuned(1))
+                    .forward(&x);
+            assert_eq!(mu_i.data(), mu_p.data(), "{} b{batch} plan != interp mu", arch.name);
+            assert_eq!(var_i.data(), var_p.data(), "{} b{batch} plan != interp var", arch.name);
+
+            for t in [2usize, 4] {
+                let (mu_t, var_t) = PfpExecutor::new(
+                    arch.clone(),
+                    weights.clone(),
+                    Schedules::tuned(1).with_plan_threads(t),
+                )
+                .forward(&x);
+                assert_eq!(mu_p.data(), mu_t.data(), "{} b{batch} t{t} mu", arch.name);
+                assert_eq!(var_p.data(), var_t.data(), "{} b{batch} t{t} var", arch.name);
+            }
+
+            let (mu_s, var_s) = PfpExecutor::new(
+                arch.clone(),
+                weights.clone(),
+                Schedules::tuned(1).with_isa_override(Some(Isa::Scalar)),
+            )
+            .forward(&x);
+            let tag = format!("{} b{batch} native-vs-scalar", arch.name);
+            assert_close(&format!("{tag} mu"), mu_p.data(), mu_s.data(), 1e-4, 1e-4);
+            assert_close(&format!("{tag} var"), var_p.data(), var_s.data(), 1e-3, 1e-4);
+        });
+    }
+}

@@ -13,6 +13,7 @@ verify:
 	cargo bench --no-run --bench plan_vs_interpreter
 	cargo bench --no-run --bench plan_parallel_scaling
 	cargo bench --no-run --bench simd_kernels
+	cargo bench --no-run --bench registry_churn
 
 # both runtime dispatch branches, exactly as CI's test matrix runs them
 test-scalar:

@@ -1,0 +1,181 @@
+//! Registry churn: hot load/swap/unload while the service keeps serving.
+//!
+//! The multi-model registry's operational claim is that admin traffic is
+//! cheap relative to inference: a `swap` publishes a new version with an
+//! atomic pointer cutover, in-flight requests drain on the version they
+//! were pinned to at submit, and the old executor (plan cache included)
+//! frees at refcount zero. This bench measures that claim directly, with
+//! synthetic posteriors (no trained artifacts needed):
+//!
+//! * **steady ns/row** — blocking single-request latency through a
+//!   registry lane, cold plan already compiled (the pure serving cost a
+//!   churning admin plane must not disturb);
+//! * **cutover latency** — wall time of `admin_swap` itself (NPZ load +
+//!   checksum + atomic publish) and, separately, the first post-swap
+//!   request (which pays the new version's cold plan compile);
+//! * **churn loop** — load/swap/unload cycles with pipelined requests
+//!   interleaved across every cutover, asserting zero dropped or error
+//!   responses and correct version attribution throughout.
+//!
+//! Emits `BENCH_registry.json` (committed into `bench/` by CI's
+//! bench-perf job as part of the perf trajectory).
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pfp::coordinator::{protocol, ProtoVersion, ServerConfig, Service};
+use pfp::model::{Arch, PosteriorWeights, SchedulesBuilder};
+use pfp::registry::Registry;
+use pfp::util::json::Json;
+use pfp::util::stats;
+
+fn write_weights(tag: &str, seed: u64) -> std::path::PathBuf {
+    let arch = Arch::mlp();
+    let path = std::env::temp_dir().join(format!(
+        "pfp_bench_registry_{}_{tag}.npz",
+        std::process::id()
+    ));
+    PosteriorWeights::synthetic(&arch, seed).save_npz(&path).unwrap();
+    path
+}
+
+fn request(id: u64, input: &[f32]) -> protocol::Request {
+    protocol::Request { id, model: "mlp".into(), input: input.to_vec() }
+}
+
+fn main() {
+    let fast = std::env::var("PFP_BENCH_FAST").as_deref() == Ok("1");
+    let steady_reqs = if fast { 20 } else { 200 };
+    let churn_rounds = if fast { 3 } else { 12 };
+    let reqs_per_wave = if fast { 8 } else { 32 };
+    let input = vec![0.5f32; 784];
+
+    let mut cfg = ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() };
+    cfg.batcher.max_batch = 8;
+    cfg.batcher.max_wait = Duration::from_millis(1);
+    let mut svc = Service::new(cfg);
+    svc.attach_registry(
+        Arc::new(Registry::new(None, true, SchedulesBuilder::tuned(1))),
+        1.0,
+    );
+    let svc = Arc::new(svc);
+
+    let p_even = write_weights("even", 2);
+    let p_odd = write_weights("odd", 3);
+    svc.admin_load("mlp", &p_even.to_string_lossy(), None, None).unwrap();
+
+    // -- steady-state serving cost (plan warm after the first request) --
+    let mut steady_ns = Vec::with_capacity(steady_reqs);
+    for i in 0..steady_reqs {
+        let t = Instant::now();
+        let resp = svc.infer_blocking(request(i as u64, &input));
+        let dt = t.elapsed().as_secs_f64() * 1e9;
+        assert!(resp.result.is_ok(), "steady request {i} failed");
+        if i > 0 {
+            steady_ns.push(dt); // drop the cold-compile first request
+        }
+    }
+
+    // -- churn loop: swap every round, requests pipelined across it --
+    let mut swap_ns = Vec::with_capacity(churn_rounds);
+    let mut first_post_swap_ns = Vec::with_capacity(churn_rounds);
+    let mut next_id = steady_reqs as u64;
+    for round in 0..churn_rounds {
+        let (tx, rx) = channel();
+        for _ in 0..reqs_per_wave {
+            svc.submit_with_proto(request(next_id, &input), tx.clone(), ProtoVersion::V1)
+                .expect("submit");
+            next_id += 1;
+        }
+        let path = if round % 2 == 0 { &p_odd } else { &p_even };
+        let t = Instant::now();
+        let ack = svc.admin_swap("mlp", &path.to_string_lossy(), None, None).unwrap();
+        swap_ns.push(t.elapsed().as_secs_f64() * 1e9);
+        let version = ack.num_field("version").unwrap() as u64;
+
+        // the swap boundary: everything above served <= version-1, the
+        // first request below pays the new version's cold plan compile
+        let t = Instant::now();
+        let resp = svc.infer_blocking(request(next_id, &input));
+        first_post_swap_ns.push(t.elapsed().as_secs_f64() * 1e9);
+        next_id += 1;
+        assert!(resp.result.is_ok());
+        assert_eq!(resp.model_version, version, "post-swap request on old version");
+
+        for _ in 0..reqs_per_wave {
+            svc.submit_with_proto(request(next_id, &input), tx.clone(), ProtoVersion::V1)
+                .expect("submit");
+            next_id += 1;
+        }
+        drop(tx);
+        let mut got = 0usize;
+        for resp in rx.iter() {
+            assert!(
+                resp.result.is_ok(),
+                "round {round}: churn must drop zero requests, id {} errored",
+                resp.id
+            );
+            assert!(resp.model_version >= version - 1 && resp.model_version <= version);
+            got += 1;
+        }
+        assert_eq!(got, 2 * reqs_per_wave, "round {round}: lost responses");
+    }
+
+    // -- unload/load cycle: full teardown + cold re-admission --
+    let mut reload_ns = Vec::with_capacity(churn_rounds);
+    for _ in 0..churn_rounds {
+        let t = Instant::now();
+        svc.admin_unload("mlp").unwrap();
+        svc.admin_load("mlp", &p_even.to_string_lossy(), None, None).unwrap();
+        reload_ns.push(t.elapsed().as_secs_f64() * 1e9);
+    }
+    let resp = svc.infer_blocking(request(next_id, &input));
+    assert!(resp.result.is_ok(), "service must serve after reload churn");
+
+    let registry = svc.registry().unwrap();
+    println!("== registry churn (synthetic mlp posterior) ==");
+    println!("{:<26} {:>12} {:>12} {:>7}", "case", "median", "p95", "n");
+    for (name, xs) in [
+        ("steady infer ns/row", &steady_ns),
+        ("swap cutover ns", &swap_ns),
+        ("first post-swap req ns", &first_post_swap_ns),
+        ("unload+load cycle ns", &reload_ns),
+    ] {
+        println!(
+            "{:<26} {:>12.0} {:>12.0} {:>7}",
+            name,
+            stats::median(xs),
+            stats::percentile(xs, 95.0),
+            xs.len()
+        );
+    }
+    println!(
+        "churn: {churn_rounds} swaps + {churn_rounds} unload/load cycles, \
+         {} interleaved requests, 0 errors; plan bytes resident: {}",
+        churn_rounds * (2 * reqs_per_wave + 1),
+        registry.total_plan_bytes()
+    );
+
+    let json = Json::obj(vec![
+        ("steady_infer_ns_median", Json::Num(stats::median(&steady_ns))),
+        ("steady_infer_ns_p95", Json::Num(stats::percentile(&steady_ns, 95.0))),
+        ("swap_cutover_ns_median", Json::Num(stats::median(&swap_ns))),
+        ("swap_cutover_ns_p95", Json::Num(stats::percentile(&swap_ns, 95.0))),
+        (
+            "first_post_swap_ns_median",
+            Json::Num(stats::median(&first_post_swap_ns)),
+        ),
+        ("reload_cycle_ns_median", Json::Num(stats::median(&reload_ns))),
+        ("churn_rounds", Json::Num(churn_rounds as f64)),
+        ("interleaved_requests", Json::Num((churn_rounds * (2 * reqs_per_wave + 1)) as f64)),
+        ("errors", Json::Num(0.0)),
+    ]);
+    println!("\nBENCH_registry.json {}", json.dump());
+    if let Err(e) = std::fs::write("BENCH_registry.json", json.dump()) {
+        eprintln!("could not write BENCH_registry.json: {e}");
+    }
+
+    std::fs::remove_file(&p_even).ok();
+    std::fs::remove_file(&p_odd).ok();
+}

@@ -6,16 +6,25 @@
 //! most `max_wait` for up to `max_batch` requests, then run one forward
 //! pass for the whole group.
 //!
+//! Registry lanes pin a model *version* per request (the `Arc` captured at
+//! submit time). One mini-batch runs one forward pass on one executor, so
+//! a batch must never mix versions: [`Batcher::next_batch`] drains only
+//! the longest version-contiguous prefix of the queue. Around a hot swap
+//! this splits the stream exactly at the cutover point — old-version
+//! requests batch together and finish on the old executor, new-version
+//! requests batch behind them.
+//!
 //! Backpressure: the queue is bounded (`capacity`); when full, requests
 //! are rejected immediately (the caller sees an error response rather than
 //! unbounded latency).
 
 use std::collections::VecDeque;
 use std::sync::mpsc::Sender;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::protocol::Response;
+use crate::coordinator::protocol::{ProtoVersion, Response};
+use crate::registry::ModelVersion;
 
 /// A queued unit of work: one request row + its response channel.
 pub struct WorkItem {
@@ -23,6 +32,24 @@ pub struct WorkItem {
     pub input: Vec<f32>,
     pub enqueued: Instant,
     pub reply: Sender<Response>,
+    /// Protocol generation the request arrived under (its response is
+    /// serialized in kind).
+    pub proto: ProtoVersion,
+    /// Registry lanes: the model version pinned at submit time. `None` on
+    /// legacy `register()`ed lanes.
+    pub model: Option<Arc<ModelVersion>>,
+}
+
+impl WorkItem {
+    /// Whether two items may share a mini-batch (same pinned version, by
+    /// identity — one `Arc` per published version).
+    pub fn same_version(&self, other: &WorkItem) -> bool {
+        match (&self.model, &other.model) {
+            (None, None) => true,
+            (Some(a), Some(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -45,6 +72,23 @@ impl Default for BatcherConfig {
 struct Inner {
     queue: VecDeque<WorkItem>,
     closed: bool,
+}
+
+impl Inner {
+    /// Longest batchable prefix: capped by `max` and by the first version
+    /// boundary (items behind a boundary can never join this batch, so
+    /// waiting for more arrivals cannot grow the prefix past it).
+    fn contiguous_prefix(&self, max: usize) -> usize {
+        let Some(first) = self.queue.front() else {
+            return 0;
+        };
+        let cap = max.min(self.queue.len());
+        let mut n = 1;
+        while n < cap && self.queue[n].same_version(first) {
+            n += 1;
+        }
+        n
+    }
 }
 
 /// Bounded, condvar-signalled batching queue.
@@ -98,7 +142,9 @@ impl Batcher {
 
     /// Blocking collect of the next batch: waits for the first item, then
     /// up to `max_wait` (since the first arrival) for more, capped at
-    /// `max_batch`. Returns `None` when closed and drained.
+    /// `max_batch` *and at the first model-version boundary* (a batch is
+    /// one forward pass on one executor). Returns `None` when closed and
+    /// drained.
     pub fn next_batch(&self) -> Option<Vec<WorkItem>> {
         let mut inner = self.inner.lock().unwrap();
         loop {
@@ -112,7 +158,16 @@ impl Batcher {
         }
         // first arrival defines the deadline
         let deadline = inner.queue.front().unwrap().enqueued + self.cfg.max_wait;
-        while inner.queue.len() < self.cfg.max_batch && !inner.closed {
+        loop {
+            let prefix = inner.contiguous_prefix(self.cfg.max_batch);
+            if prefix >= self.cfg.max_batch || inner.closed {
+                break;
+            }
+            if prefix < inner.queue.len() {
+                // capped by a version boundary: later arrivals can never
+                // extend this batch, flush it now
+                break;
+            }
             let now = Instant::now();
             if now >= deadline {
                 break;
@@ -126,7 +181,7 @@ impl Batcher {
                 break;
             }
         }
-        let take = inner.queue.len().min(self.cfg.max_batch);
+        let take = inner.contiguous_prefix(self.cfg.max_batch);
         Some(inner.queue.drain(..take).collect())
     }
 
@@ -141,15 +196,31 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::registry;
     use std::sync::mpsc::channel;
-    use std::sync::Arc;
 
     fn item(id: u64) -> (WorkItem, std::sync::mpsc::Receiver<Response>) {
         let (tx, rx) = channel();
         (
-            WorkItem { id, input: vec![0.0; 4], enqueued: Instant::now(), reply: tx },
+            WorkItem {
+                id,
+                input: vec![0.0; 4],
+                enqueued: Instant::now(),
+                reply: tx,
+                proto: ProtoVersion::V0,
+                model: None,
+            },
             rx,
         )
+    }
+
+    fn versioned_item(
+        id: u64,
+        model: &Arc<ModelVersion>,
+    ) -> (WorkItem, std::sync::mpsc::Receiver<Response>) {
+        let (mut it, rx) = item(id);
+        it.model = Some(Arc::clone(model));
+        (it, rx)
     }
 
     #[test]
@@ -209,6 +280,73 @@ mod tests {
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 1);
         assert!(t.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn version_boundary_splits_batches() {
+        // a hot swap mid-queue: the batch must cut exactly at the version
+        // boundary so each forward pass runs on one executor
+        let v1 = registry::synthetic_version("m", 1);
+        let v2 = registry::synthetic_version("m", 2);
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            capacity: 16,
+        });
+        let mut rxs = Vec::new();
+        for (id, mv) in [(0, &v1), (1, &v1), (2, &v2), (3, &v2), (4, &v2)] {
+            let (it, rx) = versioned_item(id, mv);
+            b.push(it).map_err(|_| ()).unwrap();
+            rxs.push(rx);
+        }
+        let first = b.next_batch().unwrap();
+        assert_eq!(first.len(), 2, "v1 prefix only");
+        assert!(first.iter().all(|it| it.same_version(&first[0])));
+        assert_eq!(first[0].model.as_ref().unwrap().version, 1);
+        let second = b.next_batch().unwrap();
+        assert_eq!(second.len(), 3, "v2 run batches together");
+        assert_eq!(second[0].model.as_ref().unwrap().version, 2);
+    }
+
+    #[test]
+    fn boundary_flushes_without_waiting_for_deadline() {
+        // a boundary caps the prefix: the batch flushes immediately even
+        // though max_wait is far away and max_batch is not reached
+        let v1 = registry::synthetic_version("m", 1);
+        let v2 = registry::synthetic_version("m", 2);
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_secs(5),
+            capacity: 16,
+        });
+        let (i1, _r1) = versioned_item(0, &v1);
+        let (i2, _r2) = versioned_item(1, &v2);
+        b.push(i1).map_err(|_| ()).unwrap();
+        b.push(i2).map_err(|_| ()).unwrap();
+        let t = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(
+            t.elapsed() < Duration::from_secs(1),
+            "boundary must flush early, waited {:?}",
+            t.elapsed()
+        );
+    }
+
+    #[test]
+    fn legacy_and_versioned_items_never_mix() {
+        let v1 = registry::synthetic_version("m", 1);
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            capacity: 16,
+        });
+        let (i1, _r1) = item(0);
+        let (i2, _r2) = versioned_item(1, &v1);
+        b.push(i1).map_err(|_| ()).unwrap();
+        b.push(i2).map_err(|_| ()).unwrap();
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+        assert_eq!(b.next_batch().unwrap().len(), 1);
     }
 
     #[test]

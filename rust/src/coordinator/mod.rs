@@ -32,7 +32,7 @@ pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::Metrics;
-pub use protocol::{Request, Response};
+pub use protocol::{Envelope, ProtoVersion, Request, Response, PROTOCOL_VERSION};
 pub use server::{Server, ServerConfig, Service};
 
 use std::sync::Arc;

@@ -1,34 +1,68 @@
-//! Wire protocol: line-delimited JSON over TCP.
+//! Wire protocol: line-delimited JSON over TCP, versioned.
 //!
-//! Requests:
-//!   {"id": 7, "model": "mlp", "input": [784 floats]}
-//!   {"cmd": "metrics"} | {"cmd": "ping"} | {"cmd": "shutdown"}
-//!   {"cmd": "hello", "pipeline": true}
+//! Every message travels in a uniform envelope carrying the protocol
+//! version:
 //!
-//! Responses:
-//!   {"id": 7, "pred": 3, "mu": [...], "var": [...],
+//!   {"v": 1, "id": 7, "model": "mlp", "input": [784 floats]}
+//!   {"v": 1, "cmd": "metrics"} | {"v":1,"cmd":"ping"} | {"v":1,"cmd":"shutdown"}
+//!   {"v": 1, "cmd": "hello", "pipeline": true}
+//!   {"v": 1, "cmd": "load", "model": "mlp2", "path": "weights_mlp.npz",
+//!    "arch": "mlp", "calib": 0.3}
+//!   {"v": 1, "cmd": "swap", "model": "mlp2", "path": "weights_mlp_v2.npz"}
+//!   {"v": 1, "cmd": "unload", "model": "mlp2"}
+//!   {"v": 1, "cmd": "models"}
+//!
+//! Responses (v1):
+//!   {"v": 1, "id": 7, "version": 2, "pred": 3, "mu": [...], "var": [...],
 //!    "total": 0.41, "sme": 0.33, "mi": 0.08, "ood": false,
 //!    "queue_us": 120, "infer_us": 850}
-//!   {"id": 7, "error": "queue full"}
-//!   {"hello": true, "pipeline": true, "pipeline_depth": 10, "max_batch": 10}
+//!   {"v": 1, "id": 7, "error": "queue full"}
 //!
-//! Pipelining: after a `{"cmd": "hello", "pipeline": true}` handshake a
-//! connection may keep up to `pipeline_depth` inference requests in
-//! flight without reading responses; responses come back tagged by `id`
-//! in **completion order**, not submission order, and overrunning the
-//! window yields an explicit `{"id": N, "error": "pipeline depth ..."}`
-//! response. The handshake ack advertises the server's depth;
-//! `"pipeline": false` opts back out. Connections that never send
-//! `hello` are served with the legacy synchronous semantics — one
-//! request in flight, strictly in-order replies, reader-side
-//! backpressure — so old clients (lockstep *or* write-pipelining) behave
-//! identically to the pre-pipelining server. A request refused before
-//! reaching a model lane (unknown model, bad feature count, full queue)
-//! also gets an explicit per-request error response `{"id": N, "error":
-//! "..."}` so the client can match it to the request it sent.
+//! `version` is the registry model version that computed the prediction —
+//! the observable half of the hot-swap guarantee (in-flight requests keep
+//! reporting the pre-swap version; legacy non-registry lanes omit it).
+//!
+//! **v0 compatibility**: messages without `"v"` are accepted as legacy v0
+//! and answered without an envelope, exactly as before this protocol
+//! existed — except that the first v0 reply on a connection carries a
+//! one-time `"deprecated"` warning field. Messages with an unknown
+//! version are rejected outright. [`Envelope::parse`] is the single
+//! parse path for both generations (the old free-standing
+//! [`parse_inbound`] survives as a deprecated shim).
+//!
+//! Pipelining semantics are unchanged from the unversioned protocol: a
+//! `hello` handshake opts into `pipeline_depth` requests in flight with
+//! completion-order responses tagged by `id`; connections that never
+//! send `hello` get strict one-in-flight in-order service.
 
 use crate::error::{Error, Result};
 use crate::util::json::Json;
+
+/// The current wire protocol version.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// The protocol generation a message arrived under (and its reply must
+/// be serialized under).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ProtoVersion {
+    /// Legacy unversioned messages (no `"v"` field). Deprecated.
+    #[default]
+    V0,
+    V1,
+}
+
+impl ProtoVersion {
+    pub fn as_u64(self) -> u64 {
+        match self {
+            ProtoVersion::V0 => 0,
+            ProtoVersion::V1 => 1,
+        }
+    }
+}
+
+/// The one-time warning attached to the first v0 reply on a connection.
+pub const V0_DEPRECATION: &str =
+    "unversioned protocol (v0) is deprecated; send {\"v\":1,...} envelopes";
 
 /// A client inference request.
 #[derive(Clone, Debug)]
@@ -39,7 +73,7 @@ pub struct Request {
 }
 
 /// Control commands.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Command {
     Metrics,
     Ping,
@@ -48,35 +82,121 @@ pub enum Command {
     /// request in flight; `true` (the default) requests the server's full
     /// configured depth.
     Hello { pipeline: bool },
+    /// Admin: publish a new model from a weight archive. `arch` defaults
+    /// to the model name; `calib` to the server's configured factor.
+    Load {
+        model: String,
+        path: String,
+        arch: Option<String>,
+        calib: Option<f64>,
+    },
+    /// Admin: atomically publish the next version of a loaded model.
+    /// In-flight requests finish on the old version.
+    Swap {
+        model: String,
+        path: String,
+        arch: Option<String>,
+        calib: Option<f64>,
+    },
+    /// Admin: remove a model (in-flight requests drain first).
+    Unload { model: String },
+    /// Admin: list registered models with version/checksum/plan-cache
+    /// metadata.
+    Models,
 }
 
-/// A parsed inbound message.
+/// A parsed inbound message body.
 #[derive(Clone, Debug)]
 pub enum Inbound {
     Infer(Request),
     Control(Command),
 }
 
-pub fn parse_inbound(line: &str) -> Result<Inbound> {
-    let v = Json::parse(line)?;
-    if let Some(cmd) = v.get("cmd").and_then(Json::as_str) {
-        return Ok(Inbound::Control(match cmd {
-            "metrics" => Command::Metrics,
-            "ping" => Command::Ping,
-            "shutdown" => Command::Shutdown,
-            "hello" => Command::Hello {
-                pipeline: v.get("pipeline").and_then(Json::as_bool).unwrap_or(true),
+/// A parsed inbound message: body + the protocol generation it arrived
+/// under. This is the single parse path for every wire message.
+#[derive(Clone, Debug)]
+pub struct Envelope {
+    pub proto: ProtoVersion,
+    pub body: Inbound,
+}
+
+impl Envelope {
+    pub fn parse(line: &str) -> Result<Envelope> {
+        let v = Json::parse(line)?;
+        let proto = match v.get("v") {
+            None => ProtoVersion::V0,
+            Some(j) => match j.as_f64() {
+                Some(x) if x == PROTOCOL_VERSION as f64 => ProtoVersion::V1,
+                Some(x) => {
+                    return Err(Error::Coordinator(format!(
+                        "unknown protocol version {x} (this server speaks v{PROTOCOL_VERSION})"
+                    )))
+                }
+                None => {
+                    return Err(Error::Coordinator(
+                        "protocol version 'v' must be a number".into(),
+                    ))
+                }
             },
-            c => return Err(Error::Coordinator(format!("unknown command '{c}'"))),
-        }));
+        };
+        let body = if let Some(cmd) = v.get("cmd").and_then(Json::as_str) {
+            let model = || -> Result<String> { Ok(v.str_field("model")?.to_string()) };
+            let path = || -> Result<String> { Ok(v.str_field("path")?.to_string()) };
+            let arch = v.get("arch").and_then(Json::as_str).map(String::from);
+            let calib = v.get("calib").and_then(Json::as_f64);
+            Inbound::Control(match cmd {
+                "metrics" => Command::Metrics,
+                "ping" => Command::Ping,
+                "shutdown" => Command::Shutdown,
+                "hello" => Command::Hello {
+                    pipeline: v.get("pipeline").and_then(Json::as_bool).unwrap_or(true),
+                },
+                "load" => Command::Load { model: model()?, path: path()?, arch, calib },
+                "swap" => Command::Swap { model: model()?, path: path()?, arch, calib },
+                "unload" => Command::Unload { model: model()? },
+                "models" => Command::Models,
+                c => return Err(Error::Coordinator(format!("unknown command '{c}'"))),
+            })
+        } else {
+            let id = v.num_field("id")? as u64;
+            let model = v.str_field("model")?.to_string();
+            let input = v
+                .get("input")
+                .ok_or_else(|| Error::Coordinator("missing input".into()))?
+                .to_f32_vec()?;
+            Inbound::Infer(Request { id, model, input })
+        };
+        Ok(Envelope { proto, body })
     }
-    let id = v.num_field("id")? as u64;
-    let model = v.str_field("model")?.to_string();
-    let input = v
-        .get("input")
-        .ok_or_else(|| Error::Coordinator("missing input".into()))?
-        .to_f32_vec()?;
-    Ok(Inbound::Infer(Request { id, model, input }))
+
+    /// Stamp `body` with the envelope fields for `proto`: v1 gains
+    /// `"v":1`; v0 stays bare (legacy shape). `warning`, when present,
+    /// is attached as a `"deprecated"` field either way — the server
+    /// sends it once per v0 connection.
+    pub fn seal(body: Json, proto: ProtoVersion, warning: Option<&str>) -> Json {
+        let mut map = match body {
+            Json::Obj(m) => m,
+            other => {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("body".to_string(), other);
+                m
+            }
+        };
+        if proto == ProtoVersion::V1 {
+            map.insert("v".to_string(), Json::Num(PROTOCOL_VERSION as f64));
+        }
+        if let Some(w) = warning {
+            map.insert("deprecated".to_string(), Json::Str(w.to_string()));
+        }
+        Json::Obj(map)
+    }
+}
+
+/// Legacy single-shot parse (pre-envelope). Use [`Envelope::parse`],
+/// which also reports the protocol generation the reply must carry.
+#[deprecated(note = "use Envelope::parse; it returns the protocol version too")]
+pub fn parse_inbound(line: &str) -> Result<Inbound> {
+    Ok(Envelope::parse(line)?.body)
 }
 
 /// One prediction with uncertainty decomposition.
@@ -98,32 +218,50 @@ pub struct Response {
     pub result: std::result::Result<Prediction, String>,
     pub queue_us: u64,
     pub infer_us: u64,
+    /// Protocol generation of the request this answers (the reply is
+    /// serialized in kind).
+    pub proto: ProtoVersion,
+    /// Registry model version that served the request; 0 on legacy
+    /// (non-registry) lanes, serialized as `"version"` when nonzero.
+    pub model_version: u64,
 }
 
 impl Response {
     pub fn to_json(&self) -> Json {
-        match &self.result {
-            Ok(p) => Json::obj(vec![
-                ("id", Json::Num(self.id as f64)),
-                ("pred", Json::Num(p.pred as f64)),
-                ("mu", Json::arr_f32(&p.mu)),
-                ("var", Json::arr_f32(&p.var)),
-                ("total", Json::Num(p.total)),
-                ("sme", Json::Num(p.sme)),
-                ("mi", Json::Num(p.mi)),
-                ("ood", Json::Bool(p.ood)),
-                ("queue_us", Json::Num(self.queue_us as f64)),
-                ("infer_us", Json::Num(self.infer_us as f64)),
-            ]),
+        let body = match &self.result {
+            Ok(p) => {
+                let mut fields = vec![
+                    ("id", Json::Num(self.id as f64)),
+                    ("pred", Json::Num(p.pred as f64)),
+                    ("mu", Json::arr_f32(&p.mu)),
+                    ("var", Json::arr_f32(&p.var)),
+                    ("total", Json::Num(p.total)),
+                    ("sme", Json::Num(p.sme)),
+                    ("mi", Json::Num(p.mi)),
+                    ("ood", Json::Bool(p.ood)),
+                    ("queue_us", Json::Num(self.queue_us as f64)),
+                    ("infer_us", Json::Num(self.infer_us as f64)),
+                ];
+                if self.model_version > 0 {
+                    fields.push(("version", Json::Num(self.model_version as f64)));
+                }
+                Json::obj(fields)
+            }
             Err(e) => Json::obj(vec![
                 ("id", Json::Num(self.id as f64)),
                 ("error", Json::Str(e.clone())),
             ]),
-        }
+        };
+        Envelope::seal(body, self.proto, None)
     }
 
     pub fn parse(line: &str) -> Result<Self> {
         let v = Json::parse(line)?;
+        let proto = match v.get("v").and_then(Json::as_f64) {
+            Some(x) if x == 1.0 => ProtoVersion::V1,
+            _ => ProtoVersion::V0,
+        };
+        let model_version = v.get("version").and_then(Json::as_f64).unwrap_or(0.0) as u64;
         let id = v.num_field("id")? as u64;
         if let Some(err) = v.get("error").and_then(Json::as_str) {
             return Ok(Response {
@@ -131,6 +269,8 @@ impl Response {
                 result: Err(err.to_string()),
                 queue_us: 0,
                 infer_us: 0,
+                proto,
+                model_version,
             });
         }
         Ok(Response {
@@ -146,22 +286,40 @@ impl Response {
             }),
             queue_us: v.get("queue_us").and_then(Json::as_f64).unwrap_or(0.0) as u64,
             infer_us: v.get("infer_us").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            proto,
+            model_version,
         })
     }
 }
 
 /// Serialize the server's `hello` handshake acknowledgement.
 pub fn hello_json(pipeline: bool, pipeline_depth: usize, max_batch: usize) -> String {
-    Json::obj(vec![
-        ("hello", Json::Bool(true)),
-        ("pipeline", Json::Bool(pipeline)),
-        ("pipeline_depth", Json::Num(pipeline_depth as f64)),
-        ("max_batch", Json::Num(max_batch as f64)),
-    ])
+    hello_json_proto(pipeline, pipeline_depth, max_batch, ProtoVersion::V0, None)
+}
+
+/// Versioned `hello` ack; `warning` carries the one-time v0 deprecation
+/// notice.
+pub fn hello_json_proto(
+    pipeline: bool,
+    pipeline_depth: usize,
+    max_batch: usize,
+    proto: ProtoVersion,
+    warning: Option<&str>,
+) -> String {
+    Envelope::seal(
+        Json::obj(vec![
+            ("hello", Json::Bool(true)),
+            ("pipeline", Json::Bool(pipeline)),
+            ("pipeline_depth", Json::Num(pipeline_depth as f64)),
+            ("max_batch", Json::Num(max_batch as f64)),
+        ]),
+        proto,
+        warning,
+    )
     .dump()
 }
 
-/// Serialize an inference request.
+/// Serialize a legacy (v0) inference request.
 pub fn request_json(id: u64, model: &str, input: &[f32]) -> String {
     Json::obj(vec![
         ("id", Json::Num(id as f64)),
@@ -171,14 +329,30 @@ pub fn request_json(id: u64, model: &str, input: &[f32]) -> String {
     .dump()
 }
 
+/// Serialize a v1-envelope inference request.
+pub fn request_json_v1(id: u64, model: &str, input: &[f32]) -> String {
+    Envelope::seal(
+        Json::parse(&request_json(id, model, input)).expect("request is valid json"),
+        ProtoVersion::V1,
+        None,
+    )
+    .dump()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn parse(line: &str) -> Envelope {
+        Envelope::parse(line).unwrap()
+    }
+
     #[test]
-    fn request_roundtrip() {
+    fn v0_request_roundtrip_with_legacy_proto() {
         let line = request_json(7, "mlp", &[0.1, 0.2]);
-        match parse_inbound(&line).unwrap() {
+        let env = parse(&line);
+        assert_eq!(env.proto, ProtoVersion::V0);
+        match env.body {
             Inbound::Infer(r) => {
                 assert_eq!(r.id, 7);
                 assert_eq!(r.model, "mlp");
@@ -189,61 +363,144 @@ mod tests {
     }
 
     #[test]
-    fn control_commands() {
+    fn v1_request_roundtrip() {
+        let line = request_json_v1(9, "mlp", &[0.5]);
+        assert!(line.contains("\"v\":1"), "{line}");
+        let env = parse(&line);
+        assert_eq!(env.proto, ProtoVersion::V1);
+        match env.body {
+            Inbound::Infer(r) => assert_eq!(r.id, 9),
+            _ => panic!("expected infer"),
+        }
+    }
+
+    #[test]
+    fn unknown_version_rejected() {
+        let err = Envelope::parse(r#"{"v":2,"cmd":"ping"}"#).unwrap_err();
+        assert!(err.to_string().contains("unknown protocol version"), "{err}");
+        assert!(Envelope::parse(r#"{"v":"one","cmd":"ping"}"#).is_err());
+    }
+
+    #[test]
+    fn control_commands_both_generations() {
+        for (line, proto) in [
+            (r#"{"cmd":"metrics"}"#, ProtoVersion::V0),
+            (r#"{"v":1,"cmd":"metrics"}"#, ProtoVersion::V1),
+        ] {
+            let env = parse(line);
+            assert_eq!(env.proto, proto);
+            assert!(matches!(env.body, Inbound::Control(Command::Metrics)));
+        }
         assert!(matches!(
-            parse_inbound(r#"{"cmd":"metrics"}"#).unwrap(),
-            Inbound::Control(Command::Metrics)
-        ));
-        assert!(matches!(
-            parse_inbound(r#"{"cmd":"shutdown"}"#).unwrap(),
+            parse(r#"{"v":1,"cmd":"shutdown"}"#).body,
             Inbound::Control(Command::Shutdown)
         ));
-        assert!(parse_inbound(r#"{"cmd":"reboot"}"#).is_err());
+        assert!(Envelope::parse(r#"{"cmd":"reboot"}"#).is_err());
+    }
+
+    #[test]
+    fn admin_commands_parse() {
+        let env = parse(
+            r#"{"v":1,"cmd":"load","model":"m2","path":"w.npz","arch":"mlp","calib":0.3}"#,
+        );
+        match env.body {
+            Inbound::Control(Command::Load { model, path, arch, calib }) => {
+                assert_eq!(model, "m2");
+                assert_eq!(path, "w.npz");
+                assert_eq!(arch.as_deref(), Some("mlp"));
+                assert!((calib.unwrap() - 0.3).abs() < 1e-9);
+            }
+            other => panic!("expected load, got {other:?}"),
+        }
+        match parse(r#"{"v":1,"cmd":"swap","model":"m2","path":"w2.npz"}"#).body {
+            Inbound::Control(Command::Swap { model, path, arch, calib }) => {
+                assert_eq!(model, "m2");
+                assert_eq!(path, "w2.npz");
+                assert!(arch.is_none() && calib.is_none());
+            }
+            other => panic!("expected swap, got {other:?}"),
+        }
+        assert!(matches!(
+            parse(r#"{"v":1,"cmd":"unload","model":"m2"}"#).body,
+            Inbound::Control(Command::Unload { .. })
+        ));
+        assert!(matches!(
+            parse(r#"{"v":1,"cmd":"models"}"#).body,
+            Inbound::Control(Command::Models)
+        ));
+        // load without a path is malformed
+        assert!(Envelope::parse(r#"{"v":1,"cmd":"load","model":"m2"}"#).is_err());
     }
 
     #[test]
     fn hello_handshake() {
+        let env = parse(r#"{"cmd":"hello","pipeline":true}"#);
+        assert!(matches!(env.body, Inbound::Control(Command::Hello { pipeline: true })));
         assert!(matches!(
-            parse_inbound(r#"{"cmd":"hello","pipeline":true}"#).unwrap(),
-            Inbound::Control(Command::Hello { pipeline: true })
-        ));
-        assert!(matches!(
-            parse_inbound(r#"{"cmd":"hello","pipeline":false}"#).unwrap(),
+            parse(r#"{"cmd":"hello","pipeline":false}"#).body,
             Inbound::Control(Command::Hello { pipeline: false })
         ));
         // absent field defaults to pipelining on
         assert!(matches!(
-            parse_inbound(r#"{"cmd":"hello"}"#).unwrap(),
+            parse(r#"{"cmd":"hello"}"#).body,
             Inbound::Control(Command::Hello { pipeline: true })
         ));
         let ack = hello_json(true, 10, 10);
-        let v = crate::util::json::Json::parse(&ack).unwrap();
+        let v = Json::parse(&ack).unwrap();
         assert_eq!(v.get("hello").and_then(Json::as_bool), Some(true));
         assert_eq!(v.num_field("pipeline_depth").unwrap(), 10.0);
+        assert!(v.get("v").is_none(), "v0 ack stays bare");
+
+        let ack1 = hello_json_proto(true, 10, 10, ProtoVersion::V1, None);
+        let v1 = Json::parse(&ack1).unwrap();
+        assert_eq!(v1.num_field("v").unwrap(), 1.0);
     }
 
     #[test]
-    fn response_roundtrip() {
-        let resp = Response {
-            id: 3,
-            result: Ok(Prediction {
-                pred: 5,
-                mu: vec![1.0, 2.0],
-                var: vec![0.1, 0.2],
-                total: 0.5,
-                sme: 0.4,
-                mi: 0.1,
-                ood: true,
-            }),
-            queue_us: 10,
-            infer_us: 20,
-        };
-        let parsed = Response::parse(&resp.to_json().dump()).unwrap();
-        assert_eq!(parsed.id, 3);
-        let p = parsed.result.unwrap();
-        assert_eq!(p.pred, 5);
-        assert!(p.ood);
-        assert!((p.mi - 0.1).abs() < 1e-9);
+    fn v0_ack_can_carry_one_time_deprecation_warning() {
+        let ack = hello_json_proto(true, 4, 8, ProtoVersion::V0, Some(V0_DEPRECATION));
+        let v = Json::parse(&ack).unwrap();
+        assert!(v.get("v").is_none());
+        assert!(v.str_field("deprecated").unwrap().contains("deprecated"));
+    }
+
+    #[test]
+    fn response_roundtrip_v0_and_v1() {
+        for (proto, model_version) in
+            [(ProtoVersion::V0, 0u64), (ProtoVersion::V1, 3u64)]
+        {
+            let resp = Response {
+                id: 3,
+                result: Ok(Prediction {
+                    pred: 5,
+                    mu: vec![1.0, 2.0],
+                    var: vec![0.1, 0.2],
+                    total: 0.5,
+                    sme: 0.4,
+                    mi: 0.1,
+                    ood: true,
+                }),
+                queue_us: 10,
+                infer_us: 20,
+                proto,
+                model_version,
+            };
+            let line = resp.to_json().dump();
+            if proto == ProtoVersion::V1 {
+                assert!(line.contains("\"v\":1"), "{line}");
+                assert!(line.contains("\"version\":3"), "{line}");
+            } else {
+                assert!(!line.contains("\"v\":"), "{line}");
+            }
+            let parsed = Response::parse(&line).unwrap();
+            assert_eq!(parsed.id, 3);
+            assert_eq!(parsed.proto, proto);
+            assert_eq!(parsed.model_version, model_version);
+            let p = parsed.result.unwrap();
+            assert_eq!(p.pred, 5);
+            assert!(p.ood);
+            assert!((p.mi - 0.1).abs() < 1e-9);
+        }
     }
 
     #[test]
@@ -253,8 +510,21 @@ mod tests {
             result: Err("queue full".into()),
             queue_us: 0,
             infer_us: 0,
+            proto: ProtoVersion::V1,
+            model_version: 0,
         };
-        let parsed = Response::parse(&resp.to_json().dump()).unwrap();
+        let line = resp.to_json().dump();
+        assert!(line.contains("\"v\":1"));
+        let parsed = Response::parse(&line).unwrap();
         assert_eq!(parsed.result.unwrap_err(), "queue full");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_parse_inbound_shim_still_works() {
+        assert!(matches!(
+            parse_inbound(r#"{"cmd":"ping"}"#).unwrap(),
+            Inbound::Control(Command::Ping)
+        ));
     }
 }

@@ -6,21 +6,33 @@
 //! accept time with an error line (`conns_rejected` counter). Each
 //! admitted connection is split into two pool jobs:
 //!
-//! * a **reader** that parses line-JSON requests and `submit()`s them to
-//!   the model's [`Batcher`] *without blocking* — after the `hello`
-//!   handshake, up to `pipeline_depth` requests per connection may be in
-//!   flight at once, so the dynamic batcher can coalesce a single
-//!   client's burst into one probabilistic forward pass (the paper's
-//!   Fig. 7 batching advantage, reachable from one socket); connections
-//!   that never send `hello` keep the legacy one-at-a-time in-order
-//!   semantics;
+//! * a **reader** that parses line-JSON envelopes (v1, or legacy v0 — see
+//!   [`protocol`]) and `submit()`s requests to the model's [`Batcher`]
+//!   *without blocking* — after the `hello` handshake, up to
+//!   `pipeline_depth` requests per connection may be in flight at once,
+//!   so the dynamic batcher can coalesce a single client's burst into one
+//!   probabilistic forward pass (the paper's Fig. 7 batching advantage,
+//!   reachable from one socket); connections that never send `hello` keep
+//!   the legacy one-at-a-time in-order semantics;
 //! * a **writer** fed by a per-connection response channel that sends
 //!   responses back tagged by `id` in *completion order* (out-of-order
 //!   relative to submission is allowed and expected).
 //!
-//! One worker thread per registered model drains its batcher, runs the
-//! backend on the coalesced mini-batch, post-processes uncertainty and
-//! fans responses back out to each request's reply channel.
+//! One worker thread per model lane drains its batcher, runs the lane on
+//! the coalesced mini-batch, post-processes uncertainty and fans
+//! responses back out to each request's reply channel. Lanes come in two
+//! kinds:
+//!
+//! * **static lanes** ([`Service::register`]) own a boxed [`Backend`] for
+//!   the process lifetime — the xla / svi paths;
+//! * **registry lanes** (opened by the admin `load` command or
+//!   [`Service::attach_registry`]) resolve their executor per batch
+//!   through the [`Registry`]: each request pins the then-active
+//!   [`ModelVersion`] `Arc` at submit time, the batcher never mixes
+//!   versions in one batch, and a `swap` cuts over atomically — in-flight
+//!   requests finish on the version they pinned, new ones land on the new
+//!   version, and the old executor (plans included) frees at refcount
+//!   zero.
 //!
 //! Also usable in-process (no TCP) through [`Service::submit`] /
 //! [`Service::infer_blocking`] — the integration tests and benches drive
@@ -29,16 +41,21 @@
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{Batcher, BatcherConfig, WorkItem};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::protocol::{self, Command, Inbound, Response};
+use crate::coordinator::protocol::{
+    self, Command, Envelope, Inbound, ProtoVersion, Response,
+};
 use crate::coordinator::{postprocess, Backend};
 use crate::error::{Error, Result};
+use crate::model::Arch;
+use crate::registry::{ModelSpec, ModelVersion, Registry};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::threadpool::{self, ThreadPool};
@@ -96,18 +113,36 @@ impl Default for ServerConfig {
 
 struct ModelLane {
     batcher: Arc<Batcher>,
+    /// Input width for static lanes; registry lanes re-read it from the
+    /// active version at submit (a swap may change the architecture).
     features: usize,
+    registry_backed: bool,
+}
+
+/// What a lane worker runs its batches on.
+enum LaneMode {
+    /// A process-lifetime boxed backend (xla / svi / plain native).
+    Static { backend: Box<dyn Backend>, features: usize },
+    /// Per-batch executor resolution through the version `Arc` each
+    /// request pinned at submit time.
+    Registry { registry: Arc<Registry> },
 }
 
 /// The routing + batching service (transport-agnostic core).
 pub struct Service {
-    lanes: HashMap<String, ModelLane>,
+    lanes: RwLock<HashMap<String, ModelLane>>,
     pub metrics: Arc<Metrics>,
     cfg: ServerConfig,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     stopping: Arc<AtomicBool>,
     /// One persistent operator pool shared by every lane and request.
     pool: Arc<ThreadPool>,
+    /// The multi-model control plane, when serving registry-managed
+    /// models (admin `load` / `swap` / `unload` / `models`).
+    registry: Option<Arc<Registry>>,
+    /// Calibration factor admin `load`/`swap` fall back to when the
+    /// command omits `calib`.
+    default_calib: f32,
 }
 
 impl Service {
@@ -118,12 +153,14 @@ impl Service {
             Arc::new(ThreadPool::new(cfg.pool_threads))
         };
         Self {
-            lanes: HashMap::new(),
+            lanes: RwLock::new(HashMap::new()),
             metrics: Arc::new(Metrics::new()),
             cfg,
-            workers: Vec::new(),
+            workers: Mutex::new(Vec::new()),
             stopping: Arc::new(AtomicBool::new(false)),
             pool,
+            registry: None,
+            default_calib: 1.0,
         }
     }
 
@@ -154,102 +191,209 @@ impl Service {
         &self.pool
     }
 
-    /// Register a model lane: spawns the worker thread that owns `backend`.
+    /// Register a static model lane: spawns the worker thread that owns
+    /// `backend` for the process lifetime.
     pub fn register(&mut self, name: &str, features: usize, mut backend: Box<dyn Backend>) {
         // let the backend publish its own counters (cold plan compiles)
         backend.attach_metrics(self.metrics.clone());
+        self.spawn_lane(name, features, false, LaneMode::Static { backend, features });
+    }
+
+    /// Adopt a model registry: admin commands (`load`/`swap`/`unload`/
+    /// `models`) become live, and a registry lane is opened for every
+    /// model already published in it. `default_calib` is the calibration
+    /// factor admin loads fall back to.
+    pub fn attach_registry(&mut self, registry: Arc<Registry>, default_calib: f32) {
+        for name in registry.names() {
+            if let Some(mv) = registry.get(&name) {
+                self.ensure_registry_lane(&name, mv.features());
+            }
+        }
+        self.default_calib = default_calib;
+        self.registry = Some(registry);
+    }
+
+    /// The attached registry, if any.
+    pub fn registry(&self) -> Option<&Arc<Registry>> {
+        self.registry.as_ref()
+    }
+
+    fn require_registry(&self) -> Result<&Arc<Registry>> {
+        self.registry.as_ref().ok_or_else(|| {
+            Error::Coordinator(
+                "no model registry attached (serve with --backend native)".into(),
+            )
+        })
+    }
+
+    fn spawn_lane(&self, name: &str, features: usize, registry_backed: bool, mode: LaneMode) {
         let batcher = Arc::new(Batcher::new(self.cfg.batcher));
         let lane_batcher = batcher.clone();
         let metrics = self.metrics.clone();
         let samples = self.cfg.logit_samples;
         let threshold = self.cfg.ood_threshold;
-        let model = name.to_string();
         let handle = std::thread::Builder::new()
-            .name(format!("worker-{model}"))
-            .spawn(move || {
-                let mut seed = 0x5EED_u64;
-                while let Some(batch) = lane_batcher.next_batch() {
-                    let b = batch.len();
-                    Metrics::inc(&metrics.batches);
-                    Metrics::add(&metrics.batched_items, b as u64);
-                    let infer_t = Instant::now();
-                    let mut data = Vec::with_capacity(b * features);
-                    for it in &batch {
-                        data.extend_from_slice(&it.input);
-                    }
-                    let x = match Tensor::new(vec![b, features], data) {
-                        Ok(x) => x,
-                        Err(e) => {
-                            for it in batch {
-                                Metrics::dec(&metrics.in_flight);
-                                let _ = it.reply.send(Response {
-                                    id: it.id,
-                                    result: Err(format!("bad input: {e}")),
-                                    queue_us: 0,
-                                    infer_us: 0,
-                                });
-                            }
-                            continue;
-                        }
-                    };
-                    seed = seed.wrapping_add(1);
-                    match backend.infer(&x) {
-                        Ok((mu, var)) => {
-                            let infer_us = infer_t.elapsed().as_micros() as u64;
-                            let preds = postprocess(&mu, &var, samples, threshold, seed);
-                            for (it, p) in batch.into_iter().zip(preds) {
-                                if p.ood {
-                                    Metrics::inc(&metrics.ood_flagged);
-                                }
-                                // one timestamp per item: end-to-end latency,
-                                // of which everything not spent in the batch's
-                                // inference call was queueing/batching wait
-                                let elapsed = it.enqueued.elapsed().as_micros() as u64;
-                                let queue_us = elapsed.saturating_sub(infer_us);
-                                metrics.record_latency_us(elapsed as f64);
-                                Metrics::inc(&metrics.responses);
-                                Metrics::dec(&metrics.in_flight);
-                                let _ = it.reply.send(Response {
-                                    id: it.id,
-                                    result: Ok(p),
-                                    queue_us,
-                                    infer_us,
-                                });
-                            }
-                        }
-                        Err(e) => {
-                            for it in batch {
-                                Metrics::dec(&metrics.in_flight);
-                                let _ = it.reply.send(Response {
-                                    id: it.id,
-                                    result: Err(format!("inference failed: {e}")),
-                                    queue_us: 0,
-                                    infer_us: 0,
-                                });
-                            }
-                        }
-                    }
-                }
-            })
+            .name(format!("worker-{name}"))
+            .spawn(move || lane_worker(lane_batcher, metrics, samples, threshold, mode))
             .expect("spawn worker");
-        self.workers.push(handle);
-        self.lanes.insert(name.to_string(), ModelLane { batcher, features });
+        self.workers.lock().unwrap().push(handle);
+        self.lanes.write().unwrap().insert(
+            name.to_string(),
+            ModelLane { batcher, features, registry_backed },
+        );
+    }
+
+    fn ensure_registry_lane(&self, name: &str, features: usize) {
+        if self.lanes.read().unwrap().contains_key(name) {
+            return;
+        }
+        let registry = self
+            .registry
+            .as_ref()
+            .expect("registry lanes require an attached registry")
+            .clone();
+        self.spawn_lane(name, features, true, LaneMode::Registry { registry });
+    }
+
+    fn admin_spec(
+        &self,
+        model: &str,
+        path: &str,
+        arch: Option<&str>,
+        calib: Option<f64>,
+    ) -> Result<ModelSpec> {
+        Ok(ModelSpec {
+            name: model.to_string(),
+            path: PathBuf::from(path),
+            arch: Arch::by_name(arch.unwrap_or(model))?,
+            calib: calib.map(|c| c as f32).unwrap_or(self.default_calib),
+        })
+    }
+
+    fn reject_static_lane(&self, model: &str) -> Result<()> {
+        let lanes = self.lanes.read().unwrap();
+        match lanes.get(model) {
+            Some(l) if !l.registry_backed => Err(Error::Coordinator(format!(
+                "model '{model}' is a static lane (not registry-managed)"
+            ))),
+            _ => Ok(()),
+        }
+    }
+
+    /// Admin `load`: publish a weight archive as a new model (version 1)
+    /// and open its serving lane.
+    pub fn admin_load(
+        &self,
+        model: &str,
+        path: &str,
+        arch: Option<&str>,
+        calib: Option<f64>,
+    ) -> Result<Json> {
+        let registry = self.require_registry()?.clone();
+        self.reject_static_lane(model)?;
+        let spec = self.admin_spec(model, path, arch, calib)?;
+        let mv = registry.load(&spec)?;
+        self.ensure_registry_lane(model, mv.features());
+        Ok(Json::obj(vec![
+            ("loaded", Json::Bool(true)),
+            ("model", Json::Str(model.to_string())),
+            ("version", Json::Num(mv.version as f64)),
+            ("checksum", Json::Str(format!("{:016x}", mv.checksum))),
+            ("mapped", Json::Bool(mv.mapped)),
+        ]))
+    }
+
+    /// Admin `swap`: atomically publish the next version of `model`.
+    /// In-flight requests finish on the version they pinned at submit.
+    pub fn admin_swap(
+        &self,
+        model: &str,
+        path: &str,
+        arch: Option<&str>,
+        calib: Option<f64>,
+    ) -> Result<Json> {
+        let registry = self.require_registry()?.clone();
+        self.reject_static_lane(model)?;
+        let spec = self.admin_spec(model, path, arch, calib)?;
+        let mv = registry.swap(&spec)?;
+        self.ensure_registry_lane(model, mv.features());
+        Ok(Json::obj(vec![
+            ("swapped", Json::Bool(true)),
+            ("model", Json::Str(model.to_string())),
+            ("version", Json::Num(mv.version as f64)),
+            ("checksum", Json::Str(format!("{:016x}", mv.checksum))),
+            ("mapped", Json::Bool(mv.mapped)),
+        ]))
+    }
+
+    /// Admin `unload`: retire a model. Queued and in-flight requests
+    /// still drain on their pinned versions; the lane then closes.
+    pub fn admin_unload(&self, model: &str) -> Result<Json> {
+        let registry = self.require_registry()?.clone();
+        self.reject_static_lane(model)?;
+        registry.unload(model)?;
+        if let Some(lane) = self.lanes.write().unwrap().remove(model) {
+            lane.batcher.close();
+        }
+        Ok(Json::obj(vec![
+            ("unloaded", Json::Bool(true)),
+            ("model", Json::Str(model.to_string())),
+        ]))
+    }
+
+    /// Admin `models`: the registry listing (per-model version, checksum,
+    /// request/plan counters, budget headline).
+    pub fn admin_models(&self) -> Result<Json> {
+        Ok(self.require_registry()?.models_json())
+    }
+
+    /// The metrics snapshot, extended with the registry listing when a
+    /// registry is attached (per-model request / plan-cache counters).
+    pub fn metrics_snapshot(&self) -> Json {
+        let base = self.metrics.snapshot();
+        match (&self.registry, base) {
+            (Some(reg), Json::Obj(mut m)) => {
+                m.insert("registry".to_string(), reg.models_json());
+                Json::Obj(m)
+            }
+            (_, base) => base,
+        }
     }
 
     /// Route one request into its lane (non-blocking), sending the
     /// response to the caller-provided channel. This is the pipelining
     /// primitive: many in-flight requests can share one reply sender, and
-    /// responses arrive on it in completion order.
-    pub fn submit_with(&self, req: protocol::Request, reply: Sender<Response>) -> Result<()> {
-        let lane = self
-            .lanes
+    /// responses arrive on it in completion order. On registry lanes the
+    /// then-active model version is pinned here — the epoch handoff that
+    /// makes `swap` atomic from the request's point of view.
+    pub fn submit_with_proto(
+        &self,
+        req: protocol::Request,
+        reply: Sender<Response>,
+        proto: ProtoVersion,
+    ) -> Result<()> {
+        let lanes = self.lanes.read().unwrap();
+        let lane = lanes
             .get(&req.model)
             .ok_or_else(|| Error::Coordinator(format!("unknown model '{}'", req.model)))?;
-        if req.input.len() != lane.features {
+        let model = if lane.registry_backed {
+            Some(
+                self.registry
+                    .as_ref()
+                    .and_then(|r| r.get(&req.model))
+                    .ok_or_else(|| {
+                        Error::Coordinator(format!("unknown model '{}'", req.model))
+                    })?,
+            )
+        } else {
+            None
+        };
+        let features = model.as_ref().map_or(lane.features, |m| m.features());
+        if req.input.len() != features {
             return Err(Error::Coordinator(format!(
                 "model '{}' expects {} features, got {}",
                 req.model,
-                lane.features,
+                features,
                 req.input.len()
             )));
         }
@@ -263,6 +407,8 @@ impl Service {
             input: req.input,
             enqueued: Instant::now(),
             reply,
+            proto,
+            model,
         };
         if lane.batcher.push(item).is_err() {
             Metrics::dec(&self.metrics.in_flight);
@@ -270,6 +416,12 @@ impl Service {
             return Err(Error::Coordinator("queue full".into()));
         }
         Ok(())
+    }
+
+    /// [`submit_with_proto`](Self::submit_with_proto) under the legacy
+    /// (v0) response shape.
+    pub fn submit_with(&self, req: protocol::Request, reply: Sender<Response>) -> Result<()> {
+        self.submit_with_proto(req, reply, ProtoVersion::V0)
     }
 
     /// Route one request into its lane (non-blocking) on a fresh channel.
@@ -288,12 +440,16 @@ impl Service {
                 result: Err("worker dropped".into()),
                 queue_us: 0,
                 infer_us: 0,
+                proto: ProtoVersion::V0,
+                model_version: 0,
             }),
             Err(e) => Response {
                 id,
                 result: Err(e.to_string()),
                 queue_us: 0,
                 infer_us: 0,
+                proto: ProtoVersion::V0,
+                model_version: 0,
             },
         }
     }
@@ -301,10 +457,11 @@ impl Service {
     /// Close all lanes and join workers.
     pub fn shutdown(&mut self) {
         self.stopping.store(true, Ordering::SeqCst);
-        for lane in self.lanes.values() {
+        for lane in self.lanes.read().unwrap().values() {
             lane.batcher.close();
         }
-        for h in self.workers.drain(..) {
+        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        for h in handles {
             let _ = h.join();
         }
     }
@@ -317,6 +474,112 @@ impl Service {
 impl Drop for Service {
     fn drop(&mut self) {
         self.shutdown();
+    }
+}
+
+/// One model lane's worker loop: drain version-contiguous batches, run
+/// them, fan the responses back out.
+fn lane_worker(
+    batcher: Arc<Batcher>,
+    metrics: Arc<Metrics>,
+    samples: usize,
+    threshold: f64,
+    mut mode: LaneMode,
+) {
+    let mut seed = 0x5EED_u64;
+    while let Some(batch) = batcher.next_batch() {
+        let b = batch.len();
+        Metrics::inc(&metrics.batches);
+        Metrics::add(&metrics.batched_items, b as u64);
+        let infer_t = Instant::now();
+        // the batcher never mixes versions: the first item's pinned Arc
+        // (if any) is the whole batch's executor
+        let mv: Option<Arc<ModelVersion>> = batch[0].model.clone();
+        let model_version = mv.as_ref().map_or(0, |m| m.version);
+        let features = match (&mode, &mv) {
+            (LaneMode::Static { features, .. }, _) => *features,
+            (LaneMode::Registry { .. }, Some(m)) => m.features(),
+            (LaneMode::Registry { .. }, None) => {
+                fan_errors(batch, &metrics, "request lost its model version", 0);
+                continue;
+            }
+        };
+        let mut data = Vec::with_capacity(b * features);
+        for it in &batch {
+            data.extend_from_slice(&it.input);
+        }
+        let x = match Tensor::new(vec![b, features], data) {
+            Ok(x) => x,
+            Err(e) => {
+                fan_errors(batch, &metrics, &format!("bad input: {e}"), model_version);
+                continue;
+            }
+        };
+        seed = seed.wrapping_add(1);
+        let outcome = match &mut mode {
+            LaneMode::Static { backend, .. } => backend.infer(&x),
+            LaneMode::Registry { registry } => {
+                let m = mv.as_ref().expect("registry batch carries its version");
+                m.infer(&x).map(|(mu, var, delta)| {
+                    // per-batch plan-cache movement -> global counters,
+                    // then hold the whole fleet to the memory budget
+                    Metrics::add(&metrics.plan_compiles, delta.compiles);
+                    Metrics::add(&metrics.plan_cache_evictions, delta.evictions);
+                    Metrics::add(
+                        &metrics.plan_cache_evictions,
+                        registry.enforce_budget(),
+                    );
+                    (mu, var)
+                })
+            }
+        };
+        match outcome {
+            Ok((mu, var)) => {
+                let infer_us = infer_t.elapsed().as_micros() as u64;
+                let preds = postprocess(&mu, &var, samples, threshold, seed);
+                for (it, p) in batch.into_iter().zip(preds) {
+                    if p.ood {
+                        Metrics::inc(&metrics.ood_flagged);
+                    }
+                    // one timestamp per item: end-to-end latency, of which
+                    // everything not spent in the batch's inference call
+                    // was queueing/batching wait
+                    let elapsed = it.enqueued.elapsed().as_micros() as u64;
+                    let queue_us = elapsed.saturating_sub(infer_us);
+                    metrics.record_latency_us(elapsed as f64);
+                    Metrics::inc(&metrics.responses);
+                    Metrics::dec(&metrics.in_flight);
+                    let _ = it.reply.send(Response {
+                        id: it.id,
+                        result: Ok(p),
+                        queue_us,
+                        infer_us,
+                        proto: it.proto,
+                        model_version,
+                    });
+                }
+            }
+            Err(e) => fan_errors(
+                batch,
+                &metrics,
+                &format!("inference failed: {e}"),
+                model_version,
+            ),
+        }
+    }
+}
+
+fn fan_errors(batch: Vec<WorkItem>, metrics: &Metrics, msg: &str, model_version: u64) {
+    for it in batch {
+        Metrics::dec(&metrics.in_flight);
+        let _ = it.reply.send(Response {
+            id: it.id,
+            result: Err(msg.to_string()),
+            queue_us: 0,
+            infer_us: 0,
+            proto: it.proto,
+            model_version,
+        });
     }
 }
 
@@ -484,6 +747,9 @@ struct ConnState {
     /// semantics (the reader waits for the window to drain), so clients
     /// written against the old synchronous server behave identically.
     pipelined: bool,
+    /// Whether the one-time v0 deprecation warning already went out on
+    /// this connection.
+    warned_v0: bool,
 }
 
 impl ConnReader {
@@ -493,7 +759,7 @@ impl ConnReader {
         // one request in flight and served strictly in order — exactly
         // the old synchronous server's observable behaviour, even for
         // clients that pipeline their *writes*
-        let mut state = ConnState { depth: 1, pipelined: false };
+        let mut state = ConnState { depth: 1, pipelined: false, warned_v0: false };
         // accumulate raw bytes (NOT read_line into a String: on a timeout
         // error read_line discards the bytes it already consumed from the
         // socket, corrupting the stream; read_until keeps them appended,
@@ -530,6 +796,27 @@ impl ConnReader {
         // responses have drained
     }
 
+    /// Take the one-time v0 deprecation warning if this message earns it.
+    fn take_v0_warning(
+        &self,
+        proto: ProtoVersion,
+        state: &mut ConnState,
+    ) -> Option<&'static str> {
+        if proto == ProtoVersion::V0 && !state.warned_v0 {
+            state.warned_v0 = true;
+            Some(protocol::V0_DEPRECATION)
+        } else {
+            None
+        }
+    }
+
+    /// Send a control acknowledgement sealed under the request's protocol
+    /// generation (first v0 ack carries the deprecation warning).
+    fn ack(&self, body: Json, proto: ProtoVersion, state: &mut ConnState) {
+        let warning = self.take_v0_warning(proto, state);
+        let _ = send_line(&self.out, &Envelope::seal(body, proto, warning).dump());
+    }
+
     /// Handle one parsed line; returns false when the connection is done.
     fn handle_line(
         &self,
@@ -538,25 +825,46 @@ impl ConnReader {
         configured_depth: usize,
         listener_addr: SocketAddr,
     ) -> bool {
-        match protocol::parse_inbound(line) {
-            Ok(Inbound::Control(Command::Ping)) => {
-                let _ = send_line(&self.out, r#"{"pong":true}"#);
+        let env = match Envelope::parse(line) {
+            Ok(env) => env,
+            Err(e) => {
+                // a malformed or unknown-version line has no trustworthy
+                // generation to answer under: reply bare, like v0 always did
+                let msg = Json::obj(vec![(
+                    "error",
+                    Json::Str(format!("bad request: {e}")),
+                )]);
+                let _ = send_line(&self.out, &msg.dump());
+                return true;
             }
-            Ok(Inbound::Control(Command::Hello { pipeline })) => {
+        };
+        let proto = env.proto;
+        match env.body {
+            Inbound::Control(Command::Ping) => {
+                self.ack(Json::obj(vec![("pong", Json::Bool(true))]), proto, state);
+            }
+            Inbound::Control(Command::Hello { pipeline }) => {
                 state.pipelined = pipeline;
                 state.depth = if pipeline { configured_depth } else { 1 };
-                let ack = protocol::hello_json(
+                let warning = self.take_v0_warning(proto, state);
+                let ack = protocol::hello_json_proto(
                     pipeline,
                     state.depth,
                     self.svc.cfg.batcher.max_batch,
+                    proto,
+                    warning,
                 );
                 let _ = send_line(&self.out, &ack);
             }
-            Ok(Inbound::Control(Command::Metrics)) => {
-                let _ = send_line(&self.out, &self.svc.metrics.snapshot().dump());
+            Inbound::Control(Command::Metrics) => {
+                self.ack(self.svc.metrics_snapshot(), proto, state);
             }
-            Ok(Inbound::Control(Command::Shutdown)) => {
-                let _ = send_line(&self.out, r#"{"shutting_down":true}"#);
+            Inbound::Control(Command::Shutdown) => {
+                self.ack(
+                    Json::obj(vec![("shutting_down", Json::Bool(true))]),
+                    proto,
+                    state,
+                );
                 self.svc.stopping.store(true, Ordering::SeqCst);
                 // wake the accept loop with a dummy connection to the
                 // *listener* address (the accepted socket's own address
@@ -577,7 +885,37 @@ impl ConnReader {
                 let _ = TcpStream::connect(poke);
                 return false;
             }
-            Ok(Inbound::Infer(req)) => {
+            Inbound::Control(Command::Load { model, path, arch, calib }) => {
+                let body = self
+                    .svc
+                    .admin_load(&model, &path, arch.as_deref(), calib)
+                    .unwrap_or_else(|e| {
+                        Json::obj(vec![("error", Json::Str(e.to_string()))])
+                    });
+                self.ack(body, proto, state);
+            }
+            Inbound::Control(Command::Swap { model, path, arch, calib }) => {
+                let body = self
+                    .svc
+                    .admin_swap(&model, &path, arch.as_deref(), calib)
+                    .unwrap_or_else(|e| {
+                        Json::obj(vec![("error", Json::Str(e.to_string()))])
+                    });
+                self.ack(body, proto, state);
+            }
+            Inbound::Control(Command::Unload { model }) => {
+                let body = self.svc.admin_unload(&model).unwrap_or_else(|e| {
+                    Json::obj(vec![("error", Json::Str(e.to_string()))])
+                });
+                self.ack(body, proto, state);
+            }
+            Inbound::Control(Command::Models) => {
+                let body = self.svc.admin_models().unwrap_or_else(|e| {
+                    Json::obj(vec![("error", Json::Str(e.to_string()))])
+                });
+                self.ack(body, proto, state);
+            }
+            Inbound::Infer(req) => {
                 let mut current = self.in_flight.load(Ordering::SeqCst);
                 if current >= state.depth {
                     if state.pipelined {
@@ -592,6 +930,8 @@ impl ConnReader {
                             )),
                             queue_us: 0,
                             infer_us: 0,
+                            proto,
+                            model_version: 0,
                         };
                         let _ = send_line(&self.out, &resp.to_json().dump());
                         return true;
@@ -610,23 +950,19 @@ impl ConnReader {
                 self.svc.metrics.record_conn_depth((current + 1) as f64);
                 self.in_flight.fetch_add(1, Ordering::SeqCst);
                 let id = req.id;
-                if let Err(e) = self.svc.submit_with(req, self.reply_tx.clone()) {
+                if let Err(e) = self.svc.submit_with_proto(req, self.reply_tx.clone(), proto)
+                {
                     self.in_flight.fetch_sub(1, Ordering::SeqCst);
                     let resp = Response {
                         id,
                         result: Err(e.to_string()),
                         queue_us: 0,
                         infer_us: 0,
+                        proto,
+                        model_version: 0,
                     };
                     let _ = send_line(&self.out, &resp.to_json().dump());
                 }
-            }
-            Err(e) => {
-                let msg = Json::obj(vec![(
-                    "error",
-                    Json::Str(format!("bad request: {e}")),
-                )]);
-                let _ = send_line(&self.out, &msg.dump());
             }
         }
         true
@@ -671,7 +1007,7 @@ impl ConnWriter {
 mod tests {
     use super::*;
     use crate::coordinator::NativePfpBackend;
-    use crate::model::{Arch, PosteriorWeights, Schedules};
+    use crate::model::{Arch, PosteriorWeights, Schedules, SchedulesBuilder};
 
     fn test_service() -> Service {
         let mut svc = Service::new(ServerConfig {
@@ -688,6 +1024,22 @@ mod tests {
         svc
     }
 
+    fn registry_service(tag: &str) -> (Service, std::path::PathBuf) {
+        let mut svc = Service::new(ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        });
+        let registry = Arc::new(Registry::new(None, true, SchedulesBuilder::tuned(1)));
+        svc.attach_registry(registry, 1.0);
+        let arch = Arch::mlp();
+        let path = std::env::temp_dir().join(format!(
+            "pfp_server_reg_{}_{tag}.npz",
+            std::process::id()
+        ));
+        PosteriorWeights::synthetic(&arch, 9).save_npz(&path).unwrap();
+        (svc, path)
+    }
+
     #[test]
     fn in_process_roundtrip() {
         let svc = test_service();
@@ -700,6 +1052,7 @@ mod tests {
         assert!((0..10).contains(&p.pred));
         assert_eq!(p.mu.len(), 10);
         assert!(p.total >= p.mi - 1e-9);
+        assert_eq!(resp.model_version, 0, "static lanes carry no version");
     }
 
     #[test]
@@ -789,5 +1142,60 @@ mod tests {
             svc.metrics.responses.load(std::sync::atomic::Ordering::Relaxed),
             20
         );
+    }
+
+    #[test]
+    fn admin_lifecycle_load_infer_swap_unload() {
+        let (svc, path) = registry_service("lifecycle");
+        let p = path.to_string_lossy().to_string();
+
+        // load opens a lane; responses carry the version
+        let ack = svc.admin_load("mlp", &p, None, None).unwrap();
+        assert_eq!(ack.num_field("version").unwrap(), 1.0);
+        let resp = svc.infer_blocking(protocol::Request {
+            id: 1,
+            model: "mlp".into(),
+            input: vec![0.5; 784],
+        });
+        assert!(resp.result.is_ok());
+        assert_eq!(resp.model_version, 1);
+
+        // swap bumps the served version
+        let ack = svc.admin_swap("mlp", &p, None, None).unwrap();
+        assert_eq!(ack.num_field("version").unwrap(), 2.0);
+        let resp = svc.infer_blocking(protocol::Request {
+            id: 2,
+            model: "mlp".into(),
+            input: vec![0.5; 784],
+        });
+        assert_eq!(resp.model_version, 2);
+
+        // listing + merged metrics see the registry
+        let models = svc.admin_models().unwrap();
+        assert!(models.get("models").is_some());
+        assert!(svc.metrics_snapshot().get("registry").is_some());
+
+        // unload closes the lane
+        svc.admin_unload("mlp").unwrap();
+        let resp = svc.infer_blocking(protocol::Request {
+            id: 3,
+            model: "mlp".into(),
+            input: vec![0.5; 784],
+        });
+        assert!(resp.result.is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn admin_requires_registry() {
+        let svc = test_service();
+        assert!(svc.admin_models().is_err());
+        assert!(svc.admin_load("m", "w.npz", None, None).is_err());
+        // and a static lane name cannot be hijacked even with a registry
+        let (svc2, path) = registry_service("requires");
+        drop(svc2);
+        std::fs::remove_file(&path).ok();
+        let err = svc.admin_unload("mlp").unwrap_err();
+        assert!(err.to_string().contains("no model registry"));
     }
 }

@@ -41,6 +41,7 @@ pub mod model;
 pub mod ops;
 pub mod plan;
 pub mod profiling;
+pub mod registry;
 pub mod runtime;
 pub mod tensor;
 pub mod tuner;

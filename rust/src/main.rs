@@ -12,9 +12,7 @@
 
 use std::collections::HashMap;
 
-use pfp::coordinator::{
-    NativePfpBackend, Server, ServerConfig, Service, SviBackend, XlaPfpBackend,
-};
+use pfp::coordinator::{Server, ServerConfig, Service, SviBackend, XlaPfpBackend};
 use pfp::data::DirtyMnist;
 use pfp::model::{Arch, PfpExecutor, PosteriorWeights, Schedules};
 use pfp::runtime::Engine;
@@ -59,11 +57,19 @@ fn print_help() {
                    [--threads 1] [--plan-threads 0] [--pool-threads 0] [--max-batch 10]\n\
                    [--max-connections 64] [--pipeline-depth 0 (= max-batch)]\n\
                    [--isa scalar|native]\n\
+                   [--models <dir>] [--memory-budget <MB>] [--no-mmap] [--calib 1.0]\n\
                    (--plan-threads N partitions the compiled-plan compute/\n\
                     relu/vectorized-pool steps into N tile tasks;\n\
                     0 defers to the tuned schedules. --isa forces every\n\
                     kernel onto one ISA; default: runtime-detected SIMD\n\
-                    with scalar fallback, PFP_FORCE_SCALAR=1 honored)\n\
+                    with scalar fallback, PFP_FORCE_SCALAR=1 honored.\n\
+                    native backend serves through the model registry:\n\
+                    --models preloads every weights_<arch>.npz in <dir>,\n\
+                    weights are mmap'd zero-copy (--no-mmap forces the\n\
+                    heap loader), --memory-budget caps resident compiled-\n\
+                    plan bytes across all models with global LRU eviction,\n\
+                    and the admin commands load/swap/unload/models are\n\
+                    live on the wire protocol)\n\
            eval    [--arch mlp] [--samples 30]\n\
            profile [--arch mlp] [--batch 10] [--passes 20] [--schedules tuned|baseline]\n\
            tune    [--arch mlp] [--batch 10] [--trials 24] [--plan-threads nproc]\n\
@@ -138,8 +144,6 @@ fn cmd_serve(opts: &HashMap<String, String>) -> pfp::Result<()> {
     let arch_name = opt(opts, "arch", "mlp");
     let backend_kind = opt(opts, "backend", "native");
     let addr = opt(opts, "addr", "127.0.0.1:7878");
-    let (arch, weights, calib) = load_arch_weights(arch_name)?;
-    let features = arch.input_len();
 
     let threads = opt_usize(opts, "threads", 1);
     let mut cfg = ServerConfig::default();
@@ -154,56 +158,111 @@ fn cmd_serve(opts: &HashMap<String, String>) -> pfp::Result<()> {
     cfg.pipeline_depth = opt_usize(opts, "pipeline-depth", 0);
     let max_batch = cfg.batcher.max_batch;
     let mut svc = Service::new(cfg);
-    // every backend dispatches onto the service's one persistent pool, so
+    // every lane dispatches onto the service's one persistent pool, so
     // serving reuses the same workers across models and requests; the
     // tuning records ride along in `Schedules` so the executor re-resolves
     // the per-layer table for each batcher bucket size it cold-compiles
     let records = std::sync::Arc::new(TuningRecords::load_or_default(
         &pfp::artifacts_dir().join("tuning").join("records.json"),
     ));
-    // plan-wide tile-task override for the compiled-plan path (0 = let
-    // each step follow its tuned schedule's threads knob)
-    let plan_threads = opt_usize(opts, "plan-threads", 0);
-    // ISA policy: --isa scalar|native pins every kernel; default lets the
-    // tuned schedules' isa knobs decide (runtime-detected SIMD)
-    let isa_override = opt_isa(opts)?;
-    let schedules = Schedules::from_records(
-        records,
-        &arch,
-        max_batch,
-        Schedules::tuned(threads)
-            .with_pool(svc.pool().clone())
-            .with_plan_threads(plan_threads)
-            .with_isa_override(isa_override),
-    );
+    // One builder carries every serving knob: plan-time (--plan-threads
+    // tile partitioning, --isa pinning) and bind-time (the service pool,
+    // the tuning-records handle). Registry lanes clone it per model
+    // version and resolve per-batch schedules lazily; static backends
+    // resolve it eagerly for their serving shape via build_for.
+    let builder = Schedules::builder(threads)
+        .pool(svc.pool().clone())
+        .plan_threads(opt_usize(opts, "plan-threads", 0))
+        .isa_override(opt_isa(opts)?)
+        .records(Some(records));
 
-    let backend: Box<dyn pfp::coordinator::Backend> = match backend_kind {
-        "native" => Box::new(NativePfpBackend::new(
-            arch.clone(),
-            weights,
-            schedules,
-        )),
+    match backend_kind {
+        "native" => {
+            // native serving goes through the model registry: mmap'd
+            // weights, hot swap, and the admin wire commands
+            let use_mmap = !opts.contains_key("no-mmap");
+            let budget_mb = opt_usize(opts, "memory-budget", 0);
+            let budget = (budget_mb > 0).then(|| budget_mb << 20);
+            let registry = std::sync::Arc::new(pfp::registry::Registry::new(
+                budget,
+                use_mmap,
+                builder.clone(),
+            ));
+            let specs = match opts.get("models") {
+                Some(dir) => {
+                    let calib = opts
+                        .get("calib")
+                        .and_then(|s| s.parse::<f32>().ok())
+                        .unwrap_or(1.0);
+                    pfp::registry::scan_models_dir(std::path::Path::new(dir), calib)?
+                }
+                None => {
+                    let dir = pfp::artifacts_dir();
+                    let arch = Arch::by_name(arch_name)?;
+                    let manifest =
+                        pfp::runtime::Manifest::load(&dir.join("manifest.json"))?;
+                    vec![pfp::registry::ModelSpec {
+                        name: arch_name.to_string(),
+                        path: dir.join(format!("weights_{arch_name}.npz")),
+                        arch,
+                        calib: manifest.calibration_factor(arch_name),
+                    }]
+                }
+            };
+            if specs.is_empty() {
+                return Err(pfp::Error::Config(
+                    "no weights_<arch>.npz archives found to serve".into(),
+                ));
+            }
+            let default_calib = specs[0].calib;
+            svc.attach_registry(registry, default_calib);
+            for spec in &specs {
+                let ack = svc.admin_load(
+                    &spec.name,
+                    &spec.path.to_string_lossy(),
+                    Some(&spec.arch.name),
+                    Some(spec.calib as f64),
+                )?;
+                println!("loaded model: {}", ack.dump());
+            }
+            match budget {
+                Some(b) => println!(
+                    "registry: {} model(s), plan memory budget {} MiB",
+                    specs.len(),
+                    b >> 20
+                ),
+                None => println!(
+                    "registry: {} model(s), no plan memory budget",
+                    specs.len()
+                ),
+            }
+        }
         "xla" => {
+            let (arch, weights, calib) = load_arch_weights(arch_name)?;
             let engine = Engine::new(&pfp::artifacts_dir())?;
             // leak: engine must outlive the backend worker thread
             let engine: &'static Engine = Box::leak(Box::new(engine));
-            Box::new(XlaPfpBackend::new(engine, arch_name, &weights)?)
+            let backend = Box::new(XlaPfpBackend::new(engine, arch_name, &weights)?);
+            println!("serving {arch_name} (backend=xla, calib={calib}) on {addr}");
+            svc.register(arch_name, arch.input_len(), backend);
         }
-        "svi" => Box::new(SviBackend::new(
-            arch.clone(),
-            weights,
-            schedules,
-            opt_usize(opts, "samples", 30),
-            0xC0DE,
-        )),
+        "svi" => {
+            let (arch, weights, calib) = load_arch_weights(arch_name)?;
+            let schedules = builder.clone().build_for(&arch, max_batch);
+            let backend = Box::new(SviBackend::new(
+                arch.clone(),
+                weights,
+                schedules,
+                opt_usize(opts, "samples", 30),
+                0xC0DE,
+            ));
+            println!("serving {arch_name} (backend=svi, calib={calib}) on {addr}");
+            svc.register(arch_name, arch.input_len(), backend);
+        }
         other => {
             return Err(pfp::Error::Config(format!("unknown backend '{other}'")));
         }
-    };
-    println!(
-        "serving {arch_name} (backend={backend_kind}, calib={calib}) on {addr}"
-    );
-    svc.register(arch_name, features, backend);
+    }
     println!(
         "pipelining: depth {} per connection, max {} connections",
         svc.pipeline_depth(),

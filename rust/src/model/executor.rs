@@ -10,7 +10,10 @@
 //! layer uses the Eq. 13 deterministic-input kernels.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+use crate::error::Result;
 
 use crate::ops::conv::{pfp_conv2d_first_in, pfp_conv2d_joint_in, ConvArgs};
 use crate::plan::{CompiledPlan, PlanMode, Workspace};
@@ -235,6 +238,120 @@ impl Default for Schedules {
     }
 }
 
+/// Order-independent [`Schedules`] construction — the replacement for the
+/// accreted `with_*` chains whose meaning depended on call order (most
+/// notably `Schedules::from_records`, which had to be the *outermost*
+/// call or the records were resolved against stale tables).
+///
+/// Knob timing, for the record:
+///
+/// * **plan-time** knobs are baked into each compiled plan at cold
+///   compile: `plan_threads` (tile partitioning), `isa_override` (kernel
+///   selection), the per-layer schedule tables that `records` resolve to,
+///   and `vectorized_pool`. Changing them only affects plans compiled
+///   afterwards.
+/// * **bind-time** knobs are looked up on every dispatch: `pool` (which
+///   workers run the tiles) and the `records` *handle itself* (re-resolved
+///   per batch size by [`Schedules::for_batch`] at each cold compile —
+///   which is why `build()` can attach it in any order).
+#[derive(Clone)]
+pub struct SchedulesBuilder {
+    threads: usize,
+    baseline: bool,
+    pool: Option<Arc<ThreadPool>>,
+    plan_threads: usize,
+    isa_override: Option<Isa>,
+    records: Option<Arc<crate::tuner::TuningRecords>>,
+    vectorized_pool: Option<bool>,
+}
+
+impl SchedulesBuilder {
+    /// Start from the tuned defaults for `threads` workers.
+    pub fn tuned(threads: usize) -> Self {
+        Self {
+            threads,
+            baseline: false,
+            pool: None,
+            plan_threads: 0,
+            isa_override: None,
+            records: None,
+            vectorized_pool: None,
+        }
+    }
+
+    /// Start from the untuned baseline (Table 2 row 1).
+    pub fn baseline() -> Self {
+        Self { baseline: true, ..Self::tuned(1) }
+    }
+
+    /// Share a worker pool (bind-time; defaults to the process-wide pool).
+    pub fn pool(mut self, pool: Arc<ThreadPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Plan-wide tile-task count (plan-time; 0 defers to per-step knobs).
+    pub fn plan_threads(mut self, plan_threads: usize) -> Self {
+        self.plan_threads = plan_threads;
+        self
+    }
+
+    /// ISA policy override (plan-time; `None` lets each schedule decide).
+    pub fn isa_override(mut self, isa: Option<Isa>) -> Self {
+        self.isa_override = isa;
+        self
+    }
+
+    /// Attach persisted tuning records. Resolution is **lazy**: each cold
+    /// compile re-resolves the tables for its own batch size
+    /// ([`Schedules::for_batch`]), so this composes with every other knob
+    /// regardless of call order.
+    pub fn records(mut self, records: Option<Arc<crate::tuner::TuningRecords>>) -> Self {
+        self.records = records;
+        self
+    }
+
+    /// Force the vectorized (true) or generic (false) k=2 max-pool.
+    pub fn vectorized_pool(mut self, on: bool) -> Self {
+        self.vectorized_pool = Some(on);
+        self
+    }
+
+    pub fn build(self) -> Schedules {
+        let mut s = if self.baseline {
+            Schedules::baseline()
+        } else {
+            Schedules::tuned(self.threads)
+        };
+        if let Some(pool) = self.pool {
+            s.pool = pool;
+        }
+        s.plan_threads = self.plan_threads;
+        s.isa_override = self.isa_override;
+        if let Some(v) = self.vectorized_pool {
+            s.vectorized_pool = v;
+        }
+        s.records = self.records;
+        s
+    }
+
+    /// Build and eagerly resolve the schedule tables for one
+    /// (arch, batch) — what `pfp serve` historically did against
+    /// `max_batch`. The records handle stays attached either way, so
+    /// other batch sizes still re-resolve at their own cold compiles.
+    pub fn build_for(self, arch: &Arch, batch: usize) -> Schedules {
+        let s = self.build();
+        s.for_batch(arch, batch)
+    }
+}
+
+impl Schedules {
+    /// Entry point for [`SchedulesBuilder`].
+    pub fn builder(threads: usize) -> SchedulesBuilder {
+        SchedulesBuilder::tuned(threads)
+    }
+}
+
 /// One cached compiled plan + its reusable workspace.
 struct PlanEntry {
     plan: CompiledPlan,
@@ -248,14 +365,27 @@ struct PlanEntry {
 /// which would otherwise pin a plan + workspace forever.
 const PLAN_CACHE_CAP: usize = 32;
 
+/// Process-wide LRU clock shared by every plan cache. A global clock (vs
+/// the old per-cache tick) makes `last_used` stamps comparable *across*
+/// executors, which is what the registry's cross-model memory-budget
+/// eviction orders by.
+static PLAN_CLOCK: AtomicU64 = AtomicU64::new(1);
+
+fn plan_clock_tick() -> u64 {
+    PLAN_CLOCK.fetch_add(1, Ordering::Relaxed)
+}
+
 /// Bounded batch-size -> compiled-plan cache with least-recently-used
 /// eviction.
 #[derive(Default)]
 struct PlanCache {
-    tick: u64,
     map: HashMap<usize, PlanEntry>,
-    /// Plans evicted at the cap — visible thrash across batch buckets
-    /// (surfaced as the `plan_cache_evictions` serving metric).
+    /// Cold compiles (one per batch size first seen, plus recompiles
+    /// after eviction).
+    compiles: u64,
+    /// Plans evicted at the cap or by the registry's memory budget —
+    /// visible thrash across batch buckets (surfaced as the
+    /// `plan_cache_evictions` serving metric).
     evictions: u64,
 }
 
@@ -268,7 +398,6 @@ impl PlanCache {
         batch: usize,
         build: impl FnOnce() -> PlanEntry,
     ) -> (&mut PlanEntry, bool) {
-        self.tick += 1;
         let mut cold = false;
         if !self.map.contains_key(&batch) {
             if self.map.len() >= PLAN_CACHE_CAP {
@@ -280,10 +409,11 @@ impl PlanCache {
                 }
             }
             self.map.insert(batch, build());
+            self.compiles += 1;
             cold = true;
         }
         let entry = self.map.get_mut(&batch).unwrap();
-        entry.last_used = self.tick;
+        entry.last_used = plan_clock_tick();
         (entry, cold)
     }
 
@@ -292,6 +422,61 @@ impl PlanCache {
         b.sort_unstable();
         b
     }
+
+    /// Resident footprint: every cached plan's workspace, in bytes.
+    fn bytes(&self) -> usize {
+        self.map.values().map(|e| e.ws.total_floats() * 4).sum()
+    }
+
+    /// The least-recently-used entry as `(batch, last_used)` — the
+    /// registry compares these stamps across models (they share
+    /// [`PLAN_CLOCK`]).
+    fn lru(&self) -> Option<(usize, u64)> {
+        self.map
+            .iter()
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(b, e)| (*b, e.last_used))
+    }
+
+    /// Drop the plan for `batch` (counted as an eviction when present).
+    fn evict(&mut self, batch: usize) -> bool {
+        if self.map.remove(&batch).is_some() {
+            self.evictions += 1;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// The one object-safe surface every servable executor exposes: the
+/// registry, [`NativePfpBackend`](crate::coordinator::NativePfpBackend)
+/// and the future selective-prediction router all dispatch through
+/// `Box<dyn Executor>` instead of branching on the concrete
+/// [`PfpExecutor`] / [`DetExecutor`] types.
+///
+/// `forward` is the probabilistic contract `(mu, var)`; deterministic
+/// executors return zero variance. The remaining methods are plan-cache
+/// accessors: compile/eviction counters for metrics, and the
+/// bytes/LRU/evict triple the registry's cross-model memory budget
+/// drives.
+pub trait Executor: Send {
+    fn arch(&self) -> &Arch;
+    /// One forward pass: input `[B, ...input_shape]` ->
+    /// `(mu [B, classes], var [B, classes])`.
+    fn forward(&mut self, x: &Tensor) -> Result<(Tensor, Tensor)>;
+    /// Cold plan compiles so far.
+    fn plan_compiles(&self) -> u64;
+    /// Plans evicted (cap or memory budget) so far.
+    fn plan_evictions(&self) -> u64;
+    /// Batch sizes with a resident compiled plan.
+    fn cached_batches(&self) -> Vec<usize>;
+    /// Resident plan-cache footprint in bytes (workspace arenas).
+    fn plan_bytes(&self) -> usize;
+    /// Least-recently-used resident plan as `(batch, global LRU stamp)`.
+    fn lru_plan(&self) -> Option<(usize, u64)>;
+    /// Drop the plan for `batch`; returns whether one was resident.
+    fn evict_plan(&mut self, batch: usize) -> bool;
 }
 
 /// Single-probabilistic-forward-pass executor.
@@ -309,7 +494,6 @@ pub struct PfpExecutor {
     pub schedules: Schedules,
     pub profiler: Profiler,
     plans: PlanCache,
-    plan_compiles: u64,
 }
 
 impl PfpExecutor {
@@ -321,7 +505,6 @@ impl PfpExecutor {
             schedules,
             profiler: Profiler::new(false),
             plans: PlanCache::default(),
-            plan_compiles: 0,
         }
     }
 
@@ -332,7 +515,7 @@ impl PfpExecutor {
 
     /// Cold plan compiles so far (one per distinct batch size seen).
     pub fn plan_compiles(&self) -> u64 {
-        self.plan_compiles
+        self.plans.compiles
     }
 
     /// Plans evicted from the bounded LRU cache so far. A moving value at
@@ -357,7 +540,7 @@ impl PfpExecutor {
         let arch = &self.arch;
         let weights = &self.weights;
         let schedules = &self.schedules;
-        let (entry, cold) = self.plans.get_or_insert_with(batch, || {
+        let (entry, _cold) = self.plans.get_or_insert_with(batch, || {
             let schedules = schedules.for_batch(arch, batch);
             let plan = CompiledPlan::compile(
                 arch,
@@ -370,9 +553,6 @@ impl PfpExecutor {
             let ws = plan.workspace();
             PlanEntry { plan, ws, last_used: 0 }
         });
-        if cold {
-            self.plan_compiles += 1;
-        }
         let (rows, cols) = entry.plan.out_shape();
         let (mu, var) = entry.plan.execute(x.data(), &mut entry.ws, &mut self.profiler);
         (
@@ -522,6 +702,40 @@ impl PfpExecutor {
 
 }
 
+impl Executor for PfpExecutor {
+    fn arch(&self) -> &Arch {
+        &self.arch
+    }
+
+    fn forward(&mut self, x: &Tensor) -> Result<(Tensor, Tensor)> {
+        Ok(PfpExecutor::forward(self, x))
+    }
+
+    fn plan_compiles(&self) -> u64 {
+        self.plans.compiles
+    }
+
+    fn plan_evictions(&self) -> u64 {
+        self.plans.evictions
+    }
+
+    fn cached_batches(&self) -> Vec<usize> {
+        self.plans.batches()
+    }
+
+    fn plan_bytes(&self) -> usize {
+        self.plans.bytes()
+    }
+
+    fn lru_plan(&self) -> Option<(usize, u64)> {
+        self.plans.lru()
+    }
+
+    fn evict_plan(&mut self, batch: usize) -> bool {
+        self.plans.evict(batch)
+    }
+}
+
 /// Representation conversion, profiled as the paper's "tooling" overhead
 /// and attributed to the layer it feeds (`Convert@<layer>`, matching the
 /// compiled plan's explicit conversion steps) so the Table 4 per-layer
@@ -590,6 +804,44 @@ impl DetExecutor {
         let mut off = Profiler::new(false);
         let (mu, _) = entry.plan.execute(x.data(), &mut entry.ws, &mut off);
         Tensor::new(vec![rows, cols], mu.to_vec()).unwrap()
+    }
+}
+
+impl Executor for DetExecutor {
+    fn arch(&self) -> &Arch {
+        &self.arch
+    }
+
+    /// Deterministic executors fulfil the probabilistic contract with
+    /// zero predictive variance.
+    fn forward(&mut self, x: &Tensor) -> Result<(Tensor, Tensor)> {
+        let mu = DetExecutor::forward(self, x);
+        let var = Tensor::zeros(mu.shape().to_vec());
+        Ok((mu, var))
+    }
+
+    fn plan_compiles(&self) -> u64 {
+        self.plans.lock().unwrap().compiles
+    }
+
+    fn plan_evictions(&self) -> u64 {
+        self.plans.lock().unwrap().evictions
+    }
+
+    fn cached_batches(&self) -> Vec<usize> {
+        self.plans.lock().unwrap().batches()
+    }
+
+    fn plan_bytes(&self) -> usize {
+        self.plans.lock().unwrap().bytes()
+    }
+
+    fn lru_plan(&self) -> Option<(usize, u64)> {
+        self.plans.lock().unwrap().lru()
+    }
+
+    fn evict_plan(&mut self, batch: usize) -> bool {
+        self.plans.lock().unwrap().evict(batch)
     }
 }
 
@@ -948,6 +1200,96 @@ mod tests {
         let emp_t = Tensor::new(mu.shape().to_vec(), emp).unwrap();
         let diff = emp_t.max_abs_diff(&mu);
         assert!(diff < 0.5, "SVI empirical mean too far from PFP mean: {diff}");
+    }
+
+    #[test]
+    fn executor_trait_unifies_pfp_and_det() {
+        // both concrete executors behind one Box<dyn Executor>, same
+        // dispatch surface; det reports zero variance.
+        let arch = Arch::mlp();
+        let w = PosteriorWeights::synthetic(&arch, 31);
+        let x = input(&arch, 2, 19);
+        let mut execs: Vec<Box<dyn Executor>> = vec![
+            Box::new(PfpExecutor::new(arch.clone(), w.clone(), Schedules::tuned(1))),
+            Box::new(DetExecutor::new(arch.clone(), w, Schedules::tuned(1))),
+        ];
+        for ex in execs.iter_mut() {
+            assert_eq!(ex.arch().name, "mlp");
+            let (mu, var) = ex.forward(&x).unwrap();
+            assert_eq!(mu.shape(), &[2, 10]);
+            assert_eq!(var.shape(), &[2, 10]);
+            assert_eq!(ex.plan_compiles(), 1);
+            assert_eq!(ex.cached_batches(), vec![2]);
+            assert!(ex.plan_bytes() > 0, "workspace bytes must be accounted");
+            let (batch, stamp) = ex.lru_plan().unwrap();
+            assert_eq!(batch, 2);
+            assert!(stamp > 0);
+        }
+        let det_var = execs[1].forward(&x).unwrap().1;
+        assert!(det_var.data().iter().all(|&v| v == 0.0));
+        // targeted eviction is counted and frees the footprint
+        assert!(execs[0].evict_plan(2));
+        assert!(!execs[0].evict_plan(2));
+        assert_eq!(execs[0].plan_evictions(), 1);
+        assert_eq!(execs[0].plan_bytes(), 0);
+    }
+
+    #[test]
+    fn global_plan_clock_orders_across_executors() {
+        // LRU stamps from two different executors must be comparable —
+        // the cross-model eviction ordering the registry relies on.
+        let arch = Arch::mlp();
+        let w = PosteriorWeights::synthetic(&arch, 32);
+        let mut a = PfpExecutor::new(arch.clone(), w.clone(), Schedules::tuned(1));
+        let mut b = PfpExecutor::new(arch.clone(), w, Schedules::tuned(1));
+        let x = input(&arch, 1, 3);
+        let _ = a.forward(&x);
+        let _ = b.forward(&x);
+        let sa = Executor::lru_plan(&a).unwrap().1;
+        let sb = Executor::lru_plan(&b).unwrap().1;
+        assert!(sb > sa, "second touch must carry a later global stamp");
+        let _ = a.forward(&x);
+        assert!(Executor::lru_plan(&a).unwrap().1 > sb);
+    }
+
+    #[test]
+    fn builder_is_order_independent() {
+        use crate::ops::simd::Isa;
+        // the with_* hazard: from_records had to be outermost. The
+        // builder attaches records lazily, so knob order cannot matter.
+        let mut r = crate::tuner::TuningRecords::default();
+        let tuned = Schedule::tuned(1).with_unroll(4);
+        r.insert(crate::tuner::TuningRecords::layer_key("dense", "mlp", 0, 8), tuned, 0.1);
+        let records = Arc::new(r);
+        let arch = Arch::mlp();
+
+        let a = SchedulesBuilder::tuned(2)
+            .records(Some(Arc::clone(&records)))
+            .plan_threads(3)
+            .isa_override(Some(Isa::Scalar))
+            .build();
+        let b = SchedulesBuilder::tuned(2)
+            .isa_override(Some(Isa::Scalar))
+            .plan_threads(3)
+            .records(Some(Arc::clone(&records)))
+            .build();
+        for s in [&a, &b] {
+            assert_eq!(s.plan_threads, 3);
+            assert_eq!(s.isa_override, Some(Isa::Scalar));
+            assert!(s.records.is_some());
+            // lazy: tables resolve at cold compile via for_batch
+            let resolved = s.for_batch(&arch, 8);
+            assert_eq!(
+                resolved.layer_schedule(0, arch.compute_layers()[0]),
+                tuned.with_isa(Isa::Scalar),
+                "records must resolve under the ISA override regardless of order"
+            );
+        }
+        // eager form matches what serve used to do
+        let eager = SchedulesBuilder::tuned(2)
+            .records(Some(records))
+            .build_for(&arch, 8);
+        assert_eq!(eager.per_layer[0], Some(tuned));
     }
 
     #[test]

@@ -9,8 +9,10 @@ pub mod executor;
 pub mod npz;
 pub mod weights;
 
-pub use executor::{DetExecutor, PfpExecutor, Schedules, SviExecutor};
-pub use weights::{LayerWeights, PosteriorWeights};
+pub use executor::{
+    DetExecutor, Executor, PfpExecutor, Schedules, SchedulesBuilder, SviExecutor,
+};
+pub use weights::{LayerWeights, LoadedWeights, PosteriorWeights};
 
 use crate::error::{Error, Result};
 

@@ -25,8 +25,17 @@ impl NpyArray {
     }
 }
 
-/// Parse one `.npy` payload.
-pub fn parse_npy(bytes: &[u8]) -> Result<NpyArray> {
+/// Parsed NPY header: shape, dtype descriptor, and the byte offset of the
+/// raw data within the `.npy` payload.
+#[derive(Clone, Debug)]
+pub struct NpyHeader {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    pub data_off: usize,
+}
+
+/// Parse just the header of one `.npy` payload (no data copy).
+pub fn parse_npy_header(bytes: &[u8]) -> Result<NpyHeader> {
     if bytes.len() < 10 || &bytes[..6] != b"\x93NUMPY" {
         return Err(Error::Npz("not an NPY payload".into()));
     }
@@ -53,8 +62,15 @@ pub fn parse_npy(bytes: &[u8]) -> Result<NpyArray> {
     }
     let shape = extract_shape(header)
         .ok_or_else(|| Error::Npz(format!("missing shape in header: {header}")))?;
+    Ok(NpyHeader { shape, dtype, data_off: header_start + header_len })
+}
+
+/// Parse one `.npy` payload.
+pub fn parse_npy(bytes: &[u8]) -> Result<NpyArray> {
+    let hdr = parse_npy_header(bytes)?;
+    let NpyHeader { shape, dtype, data_off } = hdr;
     let n: usize = shape.iter().product();
-    let payload = &bytes[header_start + header_len..];
+    let payload = &bytes[data_off..];
 
     let data = match dtype.as_str() {
         "<f4" => {
@@ -140,6 +156,16 @@ const LOCAL_SIG: u32 = 0x0403_4b50;
 /// Parse a ZIP archive's central directory and return the (name, payload)
 /// pairs of its stored members.
 fn zip_stored_members(bytes: &[u8]) -> Result<Vec<(String, &[u8])>> {
+    Ok(zip_member_ranges(bytes)?
+        .into_iter()
+        .map(|(name, range)| (name, &bytes[range]))
+        .collect())
+}
+
+/// Like [`zip_stored_members`] but returns byte ranges into the archive
+/// instead of borrowed slices — what the mmap-backed store needs to keep
+/// absolute offsets for alignment checks.
+fn zip_member_ranges(bytes: &[u8]) -> Result<Vec<(String, std::ops::Range<usize>)>> {
     // EOCD record: scan backwards over the (possibly present) archive
     // comment; the record itself is 22 bytes.
     let eocd = (0..=bytes.len().saturating_sub(22))
@@ -195,10 +221,10 @@ fn zip_stored_members(bytes: &[u8]) -> Result<Vec<(String, &[u8])>> {
             .ok_or_else(|| Error::Npz("truncated local header".into()))?
             as usize;
         let start = local_off + 30 + lname + lextra;
-        let payload = bytes
-            .get(start..start + csize)
-            .ok_or_else(|| Error::Npz(format!("member '{name}': truncated payload")))?;
-        out.push((name, payload));
+        if bytes.get(start..start + csize).is_none() {
+            return Err(Error::Npz(format!("member '{name}': truncated payload")));
+        }
+        out.push((name, start..start + csize));
         at += 46 + name_len + extra_len + comment_len;
     }
     Ok(out)
@@ -243,6 +269,258 @@ impl Npz {
     pub fn labels(&self, name: &str) -> Result<Vec<i32>> {
         Ok(self.get(name)?.data.iter().map(|&v| v as i32).collect())
     }
+}
+
+// ---------------------------------------------------------------------------
+// mmap-backed NPZ store
+// ---------------------------------------------------------------------------
+
+/// FNV-1a 64-bit hash — the registry's cheap content checksum for weight
+/// archives (no crypto needed, just change detection surfaced in `models`).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+struct MappedMember {
+    header: NpyHeader,
+    /// absolute byte range of the `.npy` payload within the archive
+    range: std::ops::Range<usize>,
+    /// the `<f4` data window is 4-byte aligned in the mapping and the
+    /// target is little-endian → eligible for zero-copy reinterpretation
+    zero_copy: bool,
+}
+
+/// An NPZ archive backed by a shared memory mapping. Aligned
+/// little-endian `<f4` members become zero-copy [`Tensor::mapped`] views;
+/// everything else (misaligned payloads — the usual case for
+/// `numpy.savez` output, see [`repack_aligned`] — or non-f32 dtypes)
+/// falls back to the same copying decode as [`Npz`], bit-identical either
+/// way.
+pub struct MappedNpz {
+    region: Arc<MappedFile>,
+    members: BTreeMap<String, MappedMember>,
+    checksum: u64,
+}
+
+use std::sync::Arc;
+
+use crate::util::mmap::MappedFile;
+
+impl MappedNpz {
+    pub fn open(path: &Path) -> Result<Self> {
+        Self::open_with(path, true)
+    }
+
+    /// `use_mmap: false` forces the heap fallback (`--no-mmap`); member
+    /// decoding logic is identical.
+    pub fn open_with(path: &Path, use_mmap: bool) -> Result<Self> {
+        let region = Arc::new(MappedFile::open_with(path, use_mmap)?);
+        let bytes = region.bytes();
+        let checksum = fnv1a(bytes);
+        let base = bytes.as_ptr() as usize;
+        let mut members = BTreeMap::new();
+        for (member, range) in zip_member_ranges(bytes)? {
+            let name = member.strip_suffix(".npy").unwrap_or(&member).to_string();
+            let header = parse_npy_header(&bytes[range.clone()])?;
+            let data_addr = base + range.start + header.data_off;
+            let zero_copy = header.dtype == "<f4"
+                && cfg!(target_endian = "little")
+                && data_addr % std::mem::align_of::<f32>() == 0;
+            members.insert(name, MappedMember { header, range, zero_copy });
+        }
+        Ok(Self { region, members, checksum })
+    }
+
+    /// FNV-1a of the whole archive.
+    pub fn checksum(&self) -> u64 {
+        self.checksum
+    }
+
+    /// Whether the file is held by a live mmap (vs the heap fallback).
+    pub fn is_mapped(&self) -> bool {
+        self.region.is_mapped()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.members.keys().map(|s| s.as_str())
+    }
+
+    /// Members served zero-copy straight out of the mapping.
+    pub fn zero_copy_members(&self) -> Vec<&str> {
+        self.members
+            .iter()
+            .filter(|(_, m)| m.zero_copy)
+            .map(|(n, _)| n.as_str())
+            .collect()
+    }
+
+    /// Members that go through the copying decode path.
+    pub fn copied_members(&self) -> Vec<&str> {
+        self.members
+            .iter()
+            .filter(|(_, m)| !m.zero_copy)
+            .map(|(n, _)| n.as_str())
+            .collect()
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<Tensor> {
+        let m = self
+            .members
+            .get(name)
+            .ok_or_else(|| Error::Npz(format!("missing array '{name}'")))?;
+        if m.zero_copy {
+            let off = m.range.start + m.header.data_off;
+            if let Some(t) =
+                Tensor::mapped(m.header.shape.clone(), self.region.clone(), off)
+            {
+                return Ok(t);
+            }
+        }
+        parse_npy(&self.region.bytes()[m.range.clone()])?.into_tensor()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// aligned stored-zip writer + repack
+// ---------------------------------------------------------------------------
+
+/// Serialize one f32 array as a `.npy` payload whose header is padded so
+/// the data starts at a multiple of 64 bytes from the payload start —
+/// numpy's own convention (`numpy.lib.format` pads to
+/// `ARRAY_ALIGN = 64`).
+pub fn write_npy_f32(shape: &[usize], data: &[f32]) -> Vec<u8> {
+    let shape_str = match shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", shape[0]),
+        _ => format!(
+            "({})",
+            shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    let mut header =
+        format!("{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}");
+    // total = magic(8) + len(2) + header + '\n', padded to 64
+    let total = 10 + header.len() + 1;
+    let pad = (64 - total % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+    let mut out = Vec::with_capacity(10 + header.len() + data.len() * 4);
+    out.extend_from_slice(b"\x93NUMPY\x01\x00");
+    out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    debug_assert_eq!(out.len() % 64, data.len() * 4 % 64);
+    out
+}
+
+/// Write a stored (uncompressed) zip whose member payloads start at
+/// 64-byte-aligned archive offsets, using local-header extra-field
+/// padding. Combined with [`write_npy_f32`]'s 64-padded headers, every
+/// f32 data window lands 64-byte aligned — the condition for
+/// [`MappedNpz`]'s zero-copy path.
+pub fn write_aligned_stored_zip(path: &Path, members: &[(String, Vec<u8>)]) -> Result<()> {
+    const ALIGN: usize = 64;
+    let mut out: Vec<u8> = Vec::new();
+    let mut centrals: Vec<Vec<u8>> = Vec::new();
+    for (name, payload) in members {
+        let local_off = out.len();
+        // the member's *data* (past the npy header, when it parses as
+        // npy) must land on an ALIGN boundary: payload starts at
+        // local_off + 30 + name + extra; pick extra so payload_start +
+        // anchor is ALIGN-aligned. An extra field needs >= 4 bytes for
+        // its (id, size) header, so bump short pads by one alignment
+        // unit.
+        let anchor = parse_npy_header(payload).map(|h| h.data_off).unwrap_or(0);
+        let base = local_off + 30 + name.len() + anchor;
+        let mut pad = (ALIGN - base % ALIGN) % ALIGN;
+        if pad > 0 && pad < 4 {
+            pad += ALIGN;
+        }
+        let mut extra = Vec::new();
+        if pad > 0 {
+            extra.extend_from_slice(&0x5050_u16.to_le_bytes()); // "PP" pad id
+            extra.extend_from_slice(&((pad - 4) as u16).to_le_bytes());
+            extra.resize(pad, 0);
+        }
+        out.extend_from_slice(&LOCAL_SIG.to_le_bytes());
+        out.extend_from_slice(&[20, 0, 0, 0, 0, 0]); // version, flags, method=0
+        out.extend_from_slice(&[0, 0, 0, 0]); // mod time/date
+        out.extend_from_slice(&0u32.to_le_bytes()); // crc (unchecked by this reader)
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(&(extra.len() as u16).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.extend_from_slice(&extra);
+        debug_assert_eq!((out.len() + anchor) % ALIGN, 0);
+        out.extend_from_slice(payload);
+
+        let mut c = Vec::new();
+        c.extend_from_slice(&CENTRAL_SIG.to_le_bytes());
+        c.extend_from_slice(&[20, 0, 20, 0, 0, 0, 0, 0]);
+        c.extend_from_slice(&[0, 0, 0, 0]);
+        c.extend_from_slice(&0u32.to_le_bytes());
+        c.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        c.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        c.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        c.extend_from_slice(&0u16.to_le_bytes()); // extra (central)
+        c.extend_from_slice(&0u16.to_le_bytes()); // comment
+        c.extend_from_slice(&0u16.to_le_bytes()); // disk
+        c.extend_from_slice(&0u16.to_le_bytes()); // internal attrs
+        c.extend_from_slice(&0u32.to_le_bytes()); // external attrs
+        c.extend_from_slice(&(local_off as u32).to_le_bytes());
+        c.extend_from_slice(name.as_bytes());
+        centrals.push(c);
+    }
+    let cd_off = out.len() as u32;
+    for c in &centrals {
+        out.extend_from_slice(c);
+    }
+    let cd_len = out.len() as u32 - cd_off;
+    out.extend_from_slice(&EOCD_SIG.to_le_bytes());
+    out.extend_from_slice(&[0, 0, 0, 0]);
+    out.extend_from_slice(&(members.len() as u16).to_le_bytes());
+    out.extend_from_slice(&(members.len() as u16).to_le_bytes());
+    out.extend_from_slice(&cd_len.to_le_bytes());
+    out.extend_from_slice(&cd_off.to_le_bytes());
+    out.extend_from_slice(&0u16.to_le_bytes());
+    std::fs::write(path, &out)
+        .map_err(|e| Error::Npz(format!("write {}: {e}", path.display())))?;
+    Ok(())
+}
+
+/// Save f32 tensors as an aligned NPZ every member of which qualifies for
+/// [`MappedNpz`]'s zero-copy path. Used by the registry tests and by
+/// [`repack_aligned`].
+pub fn save_npz(path: &Path, entries: &[(&str, &Tensor)]) -> Result<()> {
+    let members: Vec<(String, Vec<u8>)> = entries
+        .iter()
+        .map(|(name, t)| {
+            (format!("{name}.npy"), write_npy_f32(t.shape(), t.data()))
+        })
+        .collect();
+    write_aligned_stored_zip(path, &members)
+}
+
+/// Repack a stored NPZ so every member payload starts 64-byte aligned
+/// (member bytes preserved verbatim when already 64-padded `.npy`, else
+/// re-serialized). `numpy.savez` output is misaligned by its zip layout;
+/// run weights through this once to unlock genuine zero-copy serving.
+pub fn repack_aligned(src: &Path, dst: &Path) -> Result<()> {
+    let bytes = std::fs::read(src)
+        .map_err(|e| Error::Npz(format!("open {}: {e}", src.display())))?;
+    let members: Vec<(String, Vec<u8>)> = zip_stored_members(&bytes)?
+        .into_iter()
+        .map(|(name, payload)| (name, payload.to_vec()))
+        .collect();
+    write_aligned_stored_zip(dst, &members)
 }
 
 #[cfg(test)]
@@ -397,5 +675,117 @@ mod tests {
         assert_eq!(w.shape(), &[100, 784]);
         let sig = npz.tensor("l0_w_sigma").unwrap();
         assert!(sig.data().iter().all(|&s| s > 0.0));
+    }
+
+    // ---- mmap-backed store ----------------------------------------------
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("pfp_npz_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn aligned_npz_serves_zero_copy_and_matches_vec_loader() {
+        let a = Tensor::new(vec![3, 5], (0..15).map(|i| i as f32 * 0.5).collect()).unwrap();
+        let b = Tensor::from_vec(vec![-1.0, 2.5, 7.0]);
+        let path = tmp("aligned.npz");
+        save_npz(&path, &[("a", &a), ("b", &b)]).unwrap();
+
+        let mapped = MappedNpz::open(&path).unwrap();
+        // every member qualifies for zero-copy in an aligned archive
+        assert_eq!(mapped.copied_members().len(), 0, "{:?}", mapped.copied_members());
+        assert_eq!(mapped.zero_copy_members().len(), 2);
+        let ta = mapped.tensor("a").unwrap();
+        if mapped.is_mapped() {
+            assert!(ta.is_mapped(), "aligned member should be served zero-copy");
+        }
+        // bit-identical to the read-into-Vec loader
+        let vec_npz = Npz::open(&path).unwrap();
+        assert_eq!(ta, vec_npz.tensor("a").unwrap());
+        assert_eq!(mapped.tensor("b").unwrap(), vec_npz.tensor("b").unwrap());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn misaligned_npz_falls_back_to_copy_bit_identical() {
+        // the legacy test helper emits numpy-savez-style misaligned
+        // members (data offset ≡ 1 mod 4 for these names)
+        let a = make_npy_f32(&[2, 2], &[1.5, -2.5, 3.25, 4.0]);
+        let zip = make_stored_zip(&[("w.npy", &a)]);
+        let path = tmp("misaligned.npz");
+        std::fs::write(&path, &zip).unwrap();
+
+        let mapped = MappedNpz::open(&path).unwrap();
+        assert_eq!(mapped.zero_copy_members().len(), 0);
+        assert_eq!(mapped.copied_members(), vec!["w"]);
+        let t = mapped.tensor("w").unwrap();
+        assert!(!t.is_mapped());
+        assert_eq!(t, Npz::open(&path).unwrap().tensor("w").unwrap());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn repack_aligned_unlocks_zero_copy() {
+        let a = make_npy_f32(&[4], &[1.0, 2.0, 3.0, 4.0]);
+        let zip = make_stored_zip(&[("x.npy", &a)]);
+        let src = tmp("repack_src.npz");
+        let dst = tmp("repack_dst.npz");
+        std::fs::write(&src, &zip).unwrap();
+        assert_eq!(MappedNpz::open(&src).unwrap().zero_copy_members().len(), 0);
+
+        repack_aligned(&src, &dst).unwrap();
+        let mapped = MappedNpz::open(&dst).unwrap();
+        assert_eq!(mapped.zero_copy_members(), vec!["x"]);
+        let t = mapped.tensor("x").unwrap();
+        assert_eq!(t.data(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t, Npz::open(&src).unwrap().tensor("x").unwrap());
+        std::fs::remove_file(&src).ok();
+        std::fs::remove_file(&dst).ok();
+    }
+
+    #[test]
+    fn no_mmap_flag_forces_heap_and_stays_identical() {
+        let a = Tensor::from_vec(vec![9.0, 8.0, 7.0]);
+        let path = tmp("nommap.npz");
+        save_npz(&path, &[("a", &a)]).unwrap();
+        let heap = MappedNpz::open_with(&path, false).unwrap();
+        assert!(!heap.is_mapped());
+        let mapped = MappedNpz::open(&path).unwrap();
+        assert_eq!(heap.tensor("a").unwrap(), mapped.tensor("a").unwrap());
+        assert_eq!(heap.checksum(), mapped.checksum());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn checksum_detects_content_change() {
+        let p1 = tmp("sum1.npz");
+        let p2 = tmp("sum2.npz");
+        save_npz(&p1, &[("a", &Tensor::from_vec(vec![1.0]))]).unwrap();
+        save_npz(&p2, &[("a", &Tensor::from_vec(vec![2.0]))]).unwrap();
+        let c1 = MappedNpz::open(&p1).unwrap().checksum();
+        let c2 = MappedNpz::open(&p2).unwrap().checksum();
+        assert_ne!(c1, c2);
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+
+    #[test]
+    fn mmap_matches_vec_loader_on_golden_npz() {
+        // acceptance criterion: mmap-backed loading is bit-identical to
+        // the Vec-based loader on the python-trained golden archive.
+        let dir = crate::artifacts_dir();
+        let path = dir.join("weights_mlp.npz");
+        if !path.exists() {
+            eprintln!("skipping: {} not built", path.display());
+            return;
+        }
+        let vec_npz = Npz::open(&path).unwrap();
+        let mapped = MappedNpz::open(&path).unwrap();
+        let names: Vec<String> = vec_npz.names().map(|s| s.to_string()).collect();
+        assert!(!names.is_empty());
+        for name in &names {
+            let a = vec_npz.tensor(name).unwrap();
+            let b = mapped.tensor(name).unwrap();
+            assert_eq!(a, b, "member {name} differs between loaders");
+        }
     }
 }

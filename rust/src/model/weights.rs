@@ -58,6 +58,21 @@ pub struct PosteriorWeights {
     pub layers: Vec<LayerWeights>,
 }
 
+/// A posterior loaded through the mmap-backed store, plus the registry
+/// metadata the loader derives along the way.
+#[derive(Clone, Debug)]
+pub struct LoadedWeights {
+    pub weights: PosteriorWeights,
+    /// FNV-1a of the archive bytes (change detection in `models`).
+    pub checksum: u64,
+    /// file is held by a live mmap (vs the heap fallback)
+    pub mapped: bool,
+    /// members served zero-copy straight out of the mapping
+    pub zero_copy_members: usize,
+    /// members decoded through the copy fallback
+    pub copied_members: usize,
+}
+
 impl PosteriorWeights {
     /// Load `weights_{arch}.npz` and apply the calibration factor.
     pub fn load(dir: &Path, arch: &Arch, calib: f32) -> Result<Self> {
@@ -77,6 +92,58 @@ impl PosteriorWeights {
             calibration_factor: calib,
             layers,
         })
+    }
+
+    /// Load an arbitrary weight archive through [`MappedNpz`]: aligned
+    /// `<f4` members stay zero-copy views into the mapping (the derived
+    /// `w_var`/`w_e2` tensors are always owned), everything else decodes
+    /// through the bit-identical copy fallback. `use_mmap: false` forces
+    /// the heap path (`--no-mmap`).
+    pub fn load_mapped(
+        path: &Path,
+        arch: &Arch,
+        calib: f32,
+        use_mmap: bool,
+    ) -> Result<LoadedWeights> {
+        let npz = super::npz::MappedNpz::open_with(path, use_mmap)?;
+        let mut layers = Vec::new();
+        for (i, _) in arch.compute_layers().iter().enumerate() {
+            layers.push(LayerWeights::from_posterior(
+                npz.tensor(&format!("l{i}_w_mu"))?,
+                npz.tensor(&format!("l{i}_w_sigma"))?,
+                npz.tensor(&format!("l{i}_b_mu"))?,
+                npz.tensor(&format!("l{i}_b_sigma"))?,
+                calib,
+            ));
+        }
+        Ok(LoadedWeights {
+            weights: PosteriorWeights {
+                arch_name: arch.name.clone(),
+                calibration_factor: calib,
+                layers,
+            },
+            checksum: npz.checksum(),
+            mapped: npz.is_mapped(),
+            zero_copy_members: npz.zero_copy_members().len(),
+            copied_members: npz.copied_members().len(),
+        })
+    }
+
+    /// Write this posterior as an aligned NPZ ([`save_npz`]-format) that
+    /// [`load_mapped`](Self::load_mapped) can serve zero-copy. Note the
+    /// raw `sigma` tensors are stored (calibration is re-applied on
+    /// load).
+    pub fn save_npz(&self, path: &Path) -> Result<()> {
+        let mut entries = Vec::new();
+        for (i, l) in self.layers.iter().enumerate() {
+            entries.push((format!("l{i}_w_mu"), &l.w_mu));
+            entries.push((format!("l{i}_w_sigma"), &l.w_sigma));
+            entries.push((format!("l{i}_b_mu"), &l.b_mu));
+            entries.push((format!("l{i}_b_sigma"), &l.b_sigma));
+        }
+        let borrowed: Vec<(&str, &Tensor)> =
+            entries.iter().map(|(n, t)| (n.as_str(), *t)).collect();
+        super::npz::save_npz(path, &borrowed)
     }
 
     /// Re-apply a different calibration factor (for the sweep).
@@ -200,5 +267,56 @@ mod tests {
         assert_eq!(w.layers.len(), 3);
         assert_eq!(w.layers[0].w_mu.shape(), &[100, 784]);
         assert!((w.calibration_factor - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn save_and_load_mapped_roundtrip_bit_identical() {
+        let arch = Arch::mlp();
+        let w = PosteriorWeights::synthetic(&arch, 7);
+        let path = std::env::temp_dir()
+            .join(format!("pfp_weights_rt_{}.npz", std::process::id()));
+        w.save_npz(&path).unwrap();
+
+        let loaded = PosteriorWeights::load_mapped(&path, &arch, 1.0, true).unwrap();
+        assert_eq!(loaded.copied_members, 0, "aligned archive should be all zero-copy");
+        assert_eq!(loaded.zero_copy_members, 4 * arch.compute_layers().len());
+        for (a, b) in w.layers.iter().zip(&loaded.weights.layers) {
+            assert_eq!(a.w_mu, b.w_mu);
+            assert_eq!(a.w_sigma, b.w_sigma);
+            assert_eq!(a.w_var, b.w_var);
+            assert_eq!(a.w_e2, b.w_e2);
+            assert_eq!(a.b_mu, b.b_mu);
+        }
+
+        // --no-mmap heap path: same bytes, same checksum, same tensors
+        let heap = PosteriorWeights::load_mapped(&path, &arch, 1.0, false).unwrap();
+        assert!(!heap.mapped);
+        assert_eq!(heap.checksum, loaded.checksum);
+        for (a, b) in heap.weights.layers.iter().zip(&loaded.weights.layers) {
+            assert_eq!(a.w_mu, b.w_mu);
+            assert_eq!(a.w_e2, b.w_e2);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_mapped_matches_vec_loader_on_golden_npz() {
+        let dir = crate::artifacts_dir();
+        let path = dir.join("weights_mlp.npz");
+        if !path.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let arch = Arch::mlp();
+        let vec_w = PosteriorWeights::load(&dir, &arch, 0.3).unwrap();
+        let mapped = PosteriorWeights::load_mapped(&path, &arch, 0.3, true).unwrap();
+        for (a, b) in vec_w.layers.iter().zip(&mapped.weights.layers) {
+            assert_eq!(a.w_mu, b.w_mu);
+            assert_eq!(a.w_sigma, b.w_sigma);
+            assert_eq!(a.w_var, b.w_var);
+            assert_eq!(a.w_e2, b.w_e2);
+            assert_eq!(a.b_mu, b.b_mu);
+            assert_eq!(a.b_var, b.b_var);
+        }
     }
 }

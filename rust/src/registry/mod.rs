@@ -1,0 +1,679 @@
+//! Multi-model registry: every servable model, owned in one place.
+//!
+//! The ROADMAP north star is a fleet serving many BNN posteriors with
+//! rolling weight updates and never a gap in uncertainty coverage. This
+//! module is that control plane:
+//!
+//! * **mmap'd weights** — each version's posterior loads through
+//!   [`PosteriorWeights::load_mapped`]: aligned `<f4` NPZ members stay
+//!   zero-copy views into a shared mapping (page-cache friendly on the
+//!   paper's embedded targets), everything else takes the bit-identical
+//!   copy fallback;
+//! * **versioned atomic cutover** — [`Registry::swap`] publishes a new
+//!   [`ModelVersion`] under the model name while in-flight requests keep
+//!   the `Arc` they captured at submit time and finish on the old
+//!   version; the old executor (and its whole compiled-plan cache) drops
+//!   at refcount zero. [`Registry::live_versions`] watches the `Weak`
+//!   history so tests can assert the drain;
+//! * **one global memory budget** — every version's plan cache carries
+//!   globally-comparable LRU stamps (see `PLAN_CLOCK` in the executor),
+//!   so [`Registry::enforce_budget`] evicts the least-recently-used
+//!   compiled plan *across models* until the resident plan bytes fit.
+//!
+//! The serving wiring (admin `load`/`unload`/`swap`/`models` commands,
+//! per-(model, version) batching) lives in `coordinator::server`; this
+//! module is deliberately transport-free.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock, Weak};
+
+use crate::error::{Error, Result};
+use crate::model::{Arch, Executor, PfpExecutor, PosteriorWeights, SchedulesBuilder};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// What one `load`/`swap` asks for.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    /// registry key (the wire protocol's `model` field)
+    pub name: String,
+    /// weight archive (`.npz`) path
+    pub path: PathBuf,
+    pub arch: Arch,
+    /// calibration factor applied at load (`w_var = c * sigma^2`)
+    pub calib: f32,
+}
+
+/// Plan-cache counter movement observed across one inference — what the
+/// serving worker publishes to the global metrics as deltas.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanDelta {
+    pub compiles: u64,
+    pub evictions: u64,
+}
+
+/// One immutable published version of a model. Requests capture an
+/// `Arc<ModelVersion>` at submit; whichever version they captured serves
+/// them, regardless of concurrent swaps.
+pub struct ModelVersion {
+    pub name: String,
+    /// Monotonic per-model version, starting at 1 on `load`.
+    pub version: u64,
+    pub arch: Arch,
+    /// FNV-1a of the weight archive bytes.
+    pub checksum: u64,
+    /// weight archive this version was loaded from
+    pub source: PathBuf,
+    /// weights held by a live mmap (vs the heap fallback)
+    pub mapped: bool,
+    /// NPZ members served zero-copy out of the mapping
+    pub zero_copy_members: usize,
+    /// NPZ members that took the copy fallback
+    pub copied_members: usize,
+    /// requests served by this version
+    pub requests: AtomicU64,
+    exec: Mutex<Box<dyn Executor>>,
+}
+
+impl ModelVersion {
+    /// Flattened input length this version expects.
+    pub fn features(&self) -> usize {
+        self.arch.input_len()
+    }
+
+    /// One batched inference on this version's executor, returning the
+    /// logit moments plus the plan-cache counter deltas it caused.
+    pub fn infer(&self, x: &Tensor) -> Result<(Tensor, Tensor, PlanDelta)> {
+        let mut exec = self.exec.lock().unwrap();
+        let before_c = exec.plan_compiles();
+        let before_e = exec.plan_evictions();
+        let (mu, var) = exec.forward(x)?;
+        let delta = PlanDelta {
+            compiles: exec.plan_compiles() - before_c,
+            evictions: exec.plan_evictions() - before_e,
+        };
+        self.requests.fetch_add(x.dim(0) as u64, Ordering::Relaxed);
+        Ok((mu, var, delta))
+    }
+
+    pub fn plan_compiles(&self) -> u64 {
+        self.exec.lock().unwrap().plan_compiles()
+    }
+
+    pub fn plan_evictions(&self) -> u64 {
+        self.exec.lock().unwrap().plan_evictions()
+    }
+
+    pub fn plan_bytes(&self) -> usize {
+        self.exec.lock().unwrap().plan_bytes()
+    }
+
+    pub fn cached_batches(&self) -> Vec<usize> {
+        self.exec.lock().unwrap().cached_batches()
+    }
+
+    /// Non-blocking plan-cache probe: `None` when the lane is mid-infer.
+    fn try_probe(&self) -> Option<(usize, Option<(usize, u64)>)> {
+        let exec = self.exec.try_lock().ok()?;
+        Some((exec.plan_bytes(), exec.lru_plan()))
+    }
+
+    fn try_evict(&self, batch: usize) -> bool {
+        match self.exec.try_lock() {
+            Ok(mut exec) => exec.evict_plan(batch),
+            Err(_) => false,
+        }
+    }
+
+    fn describe(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("version", Json::Num(self.version as f64)),
+            ("arch", Json::Str(self.arch.name.clone())),
+            ("checksum", Json::Str(format!("{:016x}", self.checksum))),
+            ("source", Json::Str(self.source.display().to_string())),
+            ("mapped", Json::Bool(self.mapped)),
+            ("zero_copy_members", Json::Num(self.zero_copy_members as f64)),
+            ("copied_members", Json::Num(self.copied_members as f64)),
+            (
+                "requests",
+                Json::Num(self.requests.load(Ordering::Relaxed) as f64),
+            ),
+            ("plan_compiles", Json::Num(self.plan_compiles() as f64)),
+            ("plan_evictions", Json::Num(self.plan_evictions() as f64)),
+            ("plan_bytes", Json::Num(self.plan_bytes() as f64)),
+            (
+                "cached_batches",
+                Json::Arr(
+                    self.cached_batches()
+                        .into_iter()
+                        .map(|b| Json::Num(b as f64))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+impl std::fmt::Debug for ModelVersion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelVersion")
+            .field("name", &self.name)
+            .field("version", &self.version)
+            .field("arch", &self.arch.name)
+            .field("checksum", &format_args!("{:016x}", self.checksum))
+            .finish()
+    }
+}
+
+/// One registered model name: the active version plus weak handles to
+/// every version ever published under it (drain observability).
+struct Slot {
+    active: Arc<ModelVersion>,
+    history: Vec<Weak<ModelVersion>>,
+    next_version: u64,
+}
+
+/// The model registry. Interior mutability throughout — the server shares
+/// one `Arc<Registry>` between the admin surface, the per-model batch
+/// workers, and metrics.
+pub struct Registry {
+    models: RwLock<HashMap<String, Slot>>,
+    /// Global cap on resident compiled-plan bytes across all models
+    /// (weights are mmap'd and accounted to the page cache, not here).
+    budget_bytes: Option<usize>,
+    /// `false` forces the heap weight-loading path (`--no-mmap`).
+    use_mmap: bool,
+    /// Schedule template every new version's executor is built from.
+    schedules: SchedulesBuilder,
+    /// Budget-driven evictions performed by [`enforce_budget`]
+    /// (per-executor caches count their own cap evictions on top).
+    budget_evictions: AtomicU64,
+}
+
+impl Registry {
+    pub fn new(
+        budget_bytes: Option<usize>,
+        use_mmap: bool,
+        schedules: SchedulesBuilder,
+    ) -> Self {
+        Self {
+            models: RwLock::new(HashMap::new()),
+            budget_bytes,
+            use_mmap,
+            schedules,
+            budget_evictions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn budget_bytes(&self) -> Option<usize> {
+        self.budget_bytes
+    }
+
+    pub fn budget_evictions(&self) -> u64 {
+        self.budget_evictions.load(Ordering::Relaxed)
+    }
+
+    fn build_version(&self, spec: &ModelSpec, version: u64) -> Result<Arc<ModelVersion>> {
+        let loaded = PosteriorWeights::load_mapped(
+            &spec.path,
+            &spec.arch,
+            spec.calib,
+            self.use_mmap,
+        )?;
+        let schedules = self.schedules.clone().build();
+        let exec: Box<dyn Executor> = Box::new(PfpExecutor::new(
+            spec.arch.clone(),
+            loaded.weights,
+            schedules,
+        ));
+        Ok(Arc::new(ModelVersion {
+            name: spec.name.clone(),
+            version,
+            arch: spec.arch.clone(),
+            checksum: loaded.checksum,
+            source: spec.path.clone(),
+            mapped: loaded.mapped,
+            zero_copy_members: loaded.zero_copy_members,
+            copied_members: loaded.copied_members,
+            requests: AtomicU64::new(0),
+            exec: Mutex::new(exec),
+        }))
+    }
+
+    /// Publish a new model under `spec.name` at version 1. Errors if the
+    /// name is already registered (that is what [`swap`](Self::swap) is
+    /// for).
+    pub fn load(&self, spec: &ModelSpec) -> Result<Arc<ModelVersion>> {
+        if self.models.read().unwrap().contains_key(&spec.name) {
+            return Err(Error::Coordinator(format!(
+                "model '{}' already loaded (use swap to replace it)",
+                spec.name
+            )));
+        }
+        let version = self.build_version(spec, 1)?;
+        let mut models = self.models.write().unwrap();
+        // re-check under the write lock (two concurrent loads)
+        if models.contains_key(&spec.name) {
+            return Err(Error::Coordinator(format!(
+                "model '{}' already loaded (use swap to replace it)",
+                spec.name
+            )));
+        }
+        models.insert(
+            spec.name.clone(),
+            Slot {
+                active: Arc::clone(&version),
+                history: vec![Arc::downgrade(&version)],
+                next_version: 2,
+            },
+        );
+        drop(models);
+        self.enforce_budget();
+        Ok(version)
+    }
+
+    /// Atomically publish the next version of an existing model. The
+    /// swap is a pointer handoff: requests submitted before it keep (and
+    /// are served by) the old `Arc`; requests submitted after it see the
+    /// new one; nothing is dropped mid-flight.
+    pub fn swap(&self, spec: &ModelSpec) -> Result<Arc<ModelVersion>> {
+        let next = {
+            let models = self.models.read().unwrap();
+            let slot = models.get(&spec.name).ok_or_else(|| {
+                Error::Coordinator(format!(
+                    "model '{}' not loaded (use load first)",
+                    spec.name
+                ))
+            })?;
+            slot.next_version
+        };
+        // build outside the lock — weight loading and mmap setup must not
+        // stall concurrent lookups
+        let version = self.build_version(spec, next)?;
+        let mut models = self.models.write().unwrap();
+        let slot = models.get_mut(&spec.name).ok_or_else(|| {
+            Error::Coordinator(format!("model '{}' was unloaded mid-swap", spec.name))
+        })?;
+        slot.active = Arc::clone(&version);
+        slot.next_version = slot.next_version.max(version.version) + 1;
+        slot.history.push(Arc::downgrade(&version));
+        drop(models);
+        self.enforce_budget();
+        Ok(version)
+    }
+
+    /// Remove a model name. In-flight requests still holding the version
+    /// Arc finish normally; the executor and plans free at refcount zero.
+    pub fn unload(&self, name: &str) -> Result<()> {
+        match self.models.write().unwrap().remove(name) {
+            Some(_) => Ok(()),
+            None => Err(Error::Coordinator(format!("model '{name}' not loaded"))),
+        }
+    }
+
+    /// The active version for `name` — the Arc clone *is* the epoch
+    /// handoff (callers pin whatever was active when they asked).
+    pub fn get(&self, name: &str) -> Option<Arc<ModelVersion>> {
+        self.models
+            .read()
+            .unwrap()
+            .get(name)
+            .map(|s| Arc::clone(&s.active))
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> =
+            self.models.read().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Version numbers still alive (reachable by anyone — the registry,
+    /// a batcher queue, or an in-flight batch) for `name`, including
+    /// versions already swapped out but not yet drained.
+    pub fn live_versions(&self, name: &str) -> Vec<u64> {
+        let models = self.models.read().unwrap();
+        let Some(slot) = models.get(name) else {
+            return Vec::new();
+        };
+        let mut v: Vec<u64> = slot
+            .history
+            .iter()
+            .filter_map(|w| w.upgrade())
+            .map(|m| m.version)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Resident compiled-plan bytes across every active version. Skips
+    /// (undercounts) lanes that are mid-infer rather than blocking them.
+    pub fn total_plan_bytes(&self) -> usize {
+        let models = self.models.read().unwrap();
+        models
+            .values()
+            .filter_map(|s| s.active.try_probe())
+            .map(|(bytes, _)| bytes)
+            .sum()
+    }
+
+    /// Evict globally-least-recently-used compiled plans until resident
+    /// plan bytes fit the budget. Busy lanes (mid-infer) are skipped via
+    /// `try_lock` — eviction never blocks serving; a lane that stays busy
+    /// is touching its plan anyway and is exactly not the LRU. Returns
+    /// the number of plans evicted.
+    pub fn enforce_budget(&self) -> u64 {
+        let Some(budget) = self.budget_bytes else {
+            return 0;
+        };
+        let mut evicted = 0u64;
+        // bounded pass count: each iteration drops one plan, and the
+        // total number of resident plans is finite
+        loop {
+            let actives: Vec<Arc<ModelVersion>> = {
+                let models = self.models.read().unwrap();
+                models.values().map(|s| Arc::clone(&s.active)).collect()
+            };
+            let mut total = 0usize;
+            let mut lru: Option<(Arc<ModelVersion>, usize, u64)> = None;
+            for mv in &actives {
+                let Some((bytes, lru_plan)) = mv.try_probe() else {
+                    continue;
+                };
+                total += bytes;
+                if let Some((batch, stamp)) = lru_plan {
+                    let older = match &lru {
+                        Some((_, _, best)) => stamp < *best,
+                        None => true,
+                    };
+                    if older {
+                        lru = Some((Arc::clone(mv), batch, stamp));
+                    }
+                }
+            }
+            if total <= budget {
+                break;
+            }
+            let Some((victim, batch, _)) = lru else {
+                break; // nothing evictable (all lanes busy)
+            };
+            if victim.try_evict(batch) {
+                evicted += 1;
+                self.budget_evictions.fetch_add(1, Ordering::Relaxed);
+            } else {
+                break; // lane went busy between probe and evict
+            }
+        }
+        evicted
+    }
+
+    /// The `models` admin listing: one entry per registered name,
+    /// plus the budget headline.
+    pub fn models_json(&self) -> Json {
+        let entries: Vec<Json> = {
+            let models = self.models.read().unwrap();
+            let mut names: Vec<&String> = models.keys().collect();
+            names.sort();
+            names
+                .into_iter()
+                .map(|n| models[n].active.describe())
+                .collect()
+        };
+        Json::obj(vec![
+            ("models", Json::Arr(entries)),
+            (
+                "memory_budget_bytes",
+                match self.budget_bytes {
+                    Some(b) => Json::Num(b as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("plan_bytes", Json::Num(self.total_plan_bytes() as f64)),
+            (
+                "budget_evictions",
+                Json::Num(self.budget_evictions() as f64),
+            ),
+        ])
+    }
+}
+
+/// Test-only: a published version backed by synthetic weights and no
+/// archive on disk (identity-distinct `Arc` per call — what the batcher
+/// tests need to exercise version-contiguous draining).
+#[cfg(test)]
+pub(crate) fn synthetic_version(name: &str, version: u64) -> Arc<ModelVersion> {
+    let arch = Arch::mlp();
+    let w = PosteriorWeights::synthetic(&arch, version);
+    let exec: Box<dyn Executor> = Box::new(PfpExecutor::new(
+        arch.clone(),
+        w,
+        SchedulesBuilder::tuned(1).build(),
+    ));
+    Arc::new(ModelVersion {
+        name: name.to_string(),
+        version,
+        arch,
+        checksum: version,
+        source: PathBuf::new(),
+        mapped: false,
+        zero_copy_members: 0,
+        copied_members: 0,
+        requests: AtomicU64::new(0),
+        exec: Mutex::new(exec),
+    })
+}
+
+/// Scan a directory for `weights_<arch>.npz` archives and return the
+/// specs `pfp serve --models <dir>` should preload. Only known arch
+/// names are picked up; the model name is the arch name.
+pub fn scan_models_dir(dir: &Path, calib: f32) -> Result<Vec<ModelSpec>> {
+    let mut specs = Vec::new();
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| Error::Coordinator(format!("read {}: {e}", dir.display())))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| Error::Coordinator(e.to_string()))?;
+        let fname = entry.file_name();
+        let fname = fname.to_string_lossy();
+        let Some(arch_name) = fname
+            .strip_prefix("weights_")
+            .and_then(|s| s.strip_suffix(".npz"))
+        else {
+            continue;
+        };
+        let Ok(arch) = Arch::by_name(arch_name) else {
+            continue; // unknown architecture: not servable, skip
+        };
+        specs.push(ModelSpec {
+            name: arch_name.to_string(),
+            path: entry.path(),
+            arch,
+            calib,
+        });
+    }
+    specs.sort_by(|a, b| a.name.cmp(&b.name));
+    Ok(specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Arch;
+
+    fn write_model(name: &str, seed: u64) -> (ModelSpec, PathBuf) {
+        let arch = Arch::mlp();
+        let w = PosteriorWeights::synthetic(&arch, seed);
+        let path = std::env::temp_dir().join(format!(
+            "pfp_registry_{}_{name}_{seed}.npz",
+            std::process::id()
+        ));
+        w.save_npz(&path).unwrap();
+        (
+            ModelSpec {
+                name: name.to_string(),
+                path: path.clone(),
+                arch,
+                calib: 1.0,
+            },
+            path,
+        )
+    }
+
+    fn registry(budget: Option<usize>) -> Registry {
+        Registry::new(budget, true, SchedulesBuilder::tuned(1))
+    }
+
+    fn input(batch: usize) -> Tensor {
+        Tensor::new(vec![batch, 784], vec![0.5; batch * 784]).unwrap()
+    }
+
+    #[test]
+    fn load_infer_unload_lifecycle() {
+        let reg = registry(None);
+        let (spec, path) = write_model("m", 40);
+        let v = reg.load(&spec).unwrap();
+        assert_eq!(v.version, 1);
+        assert_eq!(v.features(), 784);
+        assert!(v.zero_copy_members > 0);
+        assert_eq!(v.copied_members, 0);
+
+        // double load is an error; swap is the way
+        assert!(reg.load(&spec).is_err());
+
+        let (mu, var, delta) = v.infer(&input(2)).unwrap();
+        assert_eq!(mu.shape(), &[2, 10]);
+        assert_eq!(var.shape(), &[2, 10]);
+        assert_eq!(delta.compiles, 1, "first batch size is a cold compile");
+        assert_eq!(v.requests.load(Ordering::Relaxed), 2);
+
+        assert_eq!(reg.names(), vec!["m"]);
+        reg.unload("m").unwrap();
+        assert!(reg.get("m").is_none());
+        assert!(reg.unload("m").is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn swap_bumps_version_and_drops_old_at_refcount_zero() {
+        let reg = registry(None);
+        let (spec, p1) = write_model("m", 41);
+        let v1 = reg.load(&spec).unwrap();
+        let _ = v1.infer(&input(1)).unwrap();
+        let c1 = v1.checksum;
+
+        let (spec2, p2) = write_model("m", 42);
+        assert!(reg.swap(&ModelSpec { name: "other".into(), ..spec2.clone() }).is_err());
+        let v2 = reg.swap(&spec2).unwrap();
+        assert_eq!(v2.version, 2);
+        assert_ne!(v2.checksum, c1, "different weights, different checksum");
+
+        // in-flight holders keep serving on v1 while v2 is active
+        assert_eq!(reg.get("m").unwrap().version, 2);
+        let (mu_old, _, _) = v1.infer(&input(1)).unwrap();
+        assert_eq!(mu_old.shape(), &[1, 10]);
+        assert_eq!(reg.live_versions("m"), vec![1, 2]);
+
+        // dropping the last v1 handle frees it (plans included)
+        let weak = Arc::downgrade(&v1);
+        drop(v1);
+        assert!(weak.upgrade().is_none(), "old version must die at refcount zero");
+        assert_eq!(reg.live_versions("m"), vec![2]);
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+
+    #[test]
+    fn budget_evicts_lru_plans_across_models() {
+        // one mlp plan at batch 1 is ~ 4 * (4*hwm) bytes; a tiny budget
+        // forces cross-model eviction of the least recently used plan.
+        let reg = registry(Some(1)); // 1 byte: nothing fits
+        let (spec_a, pa) = write_model("a", 43);
+        let (spec_b, pb) = write_model("b", 44);
+        let va = reg.load(&spec_a).unwrap();
+        let vb = reg.load(&spec_b).unwrap();
+
+        let _ = va.infer(&input(1)).unwrap();
+        let _ = vb.infer(&input(1)).unwrap();
+        assert!(va.plan_bytes() + vb.plan_bytes() > 0);
+
+        let evicted = reg.enforce_budget();
+        assert!(evicted >= 2, "both plans exceed a 1-byte budget, evicted {evicted}");
+        assert_eq!(reg.total_plan_bytes(), 0);
+        assert!(reg.budget_evictions() >= 2);
+        // per-executor eviction counters saw it too
+        assert_eq!(va.plan_evictions() + vb.plan_evictions(), evicted);
+        std::fs::remove_file(&pa).ok();
+        std::fs::remove_file(&pb).ok();
+    }
+
+    #[test]
+    fn budget_keeps_hot_plan_evicts_cold() {
+        let (spec_a, pa) = write_model("a", 45);
+        let (spec_b, pb) = write_model("b", 46);
+        let reg = registry(None);
+        let va = reg.load(&spec_a).unwrap();
+        let vb = reg.load(&spec_b).unwrap();
+        let _ = va.infer(&input(1)).unwrap();
+        let _ = vb.infer(&input(1)).unwrap();
+        let _ = vb.infer(&input(1)).unwrap(); // b is hotter (later stamp)
+        let one_plan = va.plan_bytes();
+
+        // budget admits exactly one plan: the LRU (a's) must go
+        let reg2 = Registry::new(Some(one_plan), true, SchedulesBuilder::tuned(1));
+        // rebuild under the budgeted registry to keep the test hermetic
+        let (sa, p3) = write_model("a", 45);
+        let (sb, p4) = write_model("b", 46);
+        let wa = reg2.load(&sa).unwrap();
+        let wb = reg2.load(&sb).unwrap();
+        let _ = wa.infer(&input(1)).unwrap();
+        let _ = wb.infer(&input(1)).unwrap();
+        let evicted = reg2.enforce_budget();
+        assert_eq!(evicted, 1);
+        assert_eq!(wa.cached_batches(), Vec::<usize>::new(), "LRU (a) evicted");
+        assert_eq!(wb.cached_batches(), vec![1], "hot (b) retained");
+        for p in [&pa, &pb, &p3, &p4] {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn models_json_lists_metadata() {
+        let reg = registry(Some(1 << 20));
+        let (spec, path) = write_model("m", 47);
+        let v = reg.load(&spec).unwrap();
+        let _ = v.infer(&input(1)).unwrap();
+        let json = reg.models_json();
+        let models = match json.get("models") {
+            Some(Json::Arr(a)) => a,
+            other => panic!("models not an array: {other:?}"),
+        };
+        assert_eq!(models.len(), 1);
+        assert_eq!(models[0].str_field("name").unwrap(), "m");
+        assert_eq!(models[0].num_field("version").unwrap(), 1.0);
+        assert_eq!(models[0].str_field("arch").unwrap(), "mlp");
+        assert_eq!(models[0].str_field("checksum").unwrap().len(), 16);
+        assert!(models[0].num_field("plan_bytes").unwrap() > 0.0);
+        assert_eq!(json.num_field("memory_budget_bytes").unwrap(), (1 << 20) as f64);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn scan_dir_picks_up_known_arches() {
+        let dir = std::env::temp_dir().join(format!("pfp_scan_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let arch = Arch::mlp();
+        PosteriorWeights::synthetic(&arch, 48)
+            .save_npz(&dir.join("weights_mlp.npz"))
+            .unwrap();
+        std::fs::write(dir.join("weights_unknown.npz"), b"junk").unwrap();
+        std::fs::write(dir.join("notes.txt"), b"ignored").unwrap();
+        let specs = scan_models_dir(&dir, 0.5).unwrap();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].name, "mlp");
+        assert!((specs[0].calib - 0.5).abs() < 1e-9);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

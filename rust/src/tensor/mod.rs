@@ -6,18 +6,48 @@
 //! the paper's representation discipline — a mean tensor plus either a
 //! variance or a second-raw-moment tensor — so the executor can track and
 //! convert representations exactly as Section 5 prescribes.
+//!
+//! Storage is copy-on-write: a tensor either owns its `Vec<f32>` or
+//! borrows an aligned little-endian `<f4` slice out of a shared
+//! memory-mapped file ([`Tensor::mapped`]). Reads are uniform (`data()`);
+//! any mutation or move-out (`data_mut`, `into_data`, `reshape`) promotes
+//! a mapped tensor to an owned copy first, so the rest of the crate never
+//! sees the difference. Registry weights stay page-cache resident this
+//! way; activations are always owned.
 
 pub mod gaussian;
 
 pub use gaussian::{convert_in_place, ProbTensor, Rep};
 
+use std::sync::Arc;
+
 use crate::error::{Error, Result};
+use crate::util::mmap::MappedFile;
+
+#[derive(Clone, Debug)]
+enum Storage {
+    Owned(Vec<f32>),
+    /// A `len`-float window at `byte_off` into a shared mapping. The
+    /// constructor guarantees 4-byte alignment, in-bounds extent, and a
+    /// little-endian target, so reinterpreting the bytes is sound.
+    Mapped {
+        region: Arc<MappedFile>,
+        byte_off: usize,
+        len: usize,
+    },
+}
 
 /// A dense row-major f32 tensor.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct Tensor {
     shape: Vec<usize>,
-    data: Vec<f32>,
+    data: Storage,
+}
+
+impl PartialEq for Tensor {
+    fn eq(&self, other: &Self) -> bool {
+        self.shape == other.shape && self.data() == other.data()
+    }
 }
 
 impl Tensor {
@@ -31,21 +61,75 @@ impl Tensor {
                 data.len()
             )));
         }
-        Ok(Self { shape, data })
+        Ok(Self { shape, data: Storage::Owned(data) })
     }
 
     pub fn zeros(shape: Vec<usize>) -> Self {
         let n: usize = shape.iter().product();
-        Self { shape, data: vec![0.0; n] }
+        Self { shape, data: Storage::Owned(vec![0.0; n]) }
     }
 
     pub fn full(shape: Vec<usize>, v: f32) -> Self {
         let n: usize = shape.iter().product();
-        Self { shape, data: vec![v; n] }
+        Self { shape, data: Storage::Owned(vec![v; n]) }
     }
 
     pub fn from_vec(data: Vec<f32>) -> Self {
-        Self { shape: vec![data.len()], data }
+        Self { shape: vec![data.len()], data: Storage::Owned(data) }
+    }
+
+    /// Zero-copy view into a mapped file: `len = shape.product()` f32
+    /// values starting at `byte_off`. Returns `None` when the window is
+    /// misaligned, out of bounds, or the target is big-endian — callers
+    /// fall back to a copying load in those cases.
+    pub fn mapped(
+        shape: Vec<usize>,
+        region: Arc<MappedFile>,
+        byte_off: usize,
+    ) -> Option<Self> {
+        if !cfg!(target_endian = "little") {
+            return None;
+        }
+        let n: usize = shape.iter().product();
+        let end = byte_off.checked_add(n.checked_mul(4)?)?;
+        if end > region.len() {
+            return None;
+        }
+        let ptr = region.bytes()[byte_off..].as_ptr();
+        if (ptr as usize) % std::mem::align_of::<f32>() != 0 {
+            return None;
+        }
+        Some(Self {
+            shape,
+            data: Storage::Mapped { region, byte_off, len: n },
+        })
+    }
+
+    /// Whether this tensor still borrows mmap'd storage (vs owning a Vec).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.data, Storage::Mapped { .. })
+    }
+
+    /// Promote mapped storage to an owned copy; no-op when already owned.
+    fn make_owned(&mut self) {
+        if let Storage::Mapped { .. } = self.data {
+            self.data = Storage::Owned(self.data_slice().to_vec());
+        }
+    }
+
+    fn data_slice(&self) -> &[f32] {
+        match &self.data {
+            Storage::Owned(v) => v,
+            Storage::Mapped { region, byte_off, len } => {
+                // Alignment, bounds and endianness were validated by
+                // `Tensor::mapped`; the mapping is immutable for its
+                // lifetime and kept alive by the Arc.
+                let bytes = &region.bytes()[*byte_off..*byte_off + *len * 4];
+                unsafe {
+                    std::slice::from_raw_parts(bytes.as_ptr() as *const f32, *len)
+                }
+            }
+        }
     }
 
     // ---- accessors -------------------------------------------------------
@@ -59,23 +143,34 @@ impl Tensor {
     }
 
     pub fn len(&self) -> usize {
-        self.data.len()
+        match &self.data {
+            Storage::Owned(v) => v.len(),
+            Storage::Mapped { len, .. } => *len,
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.len() == 0
     }
 
     pub fn data(&self) -> &[f32] {
-        &self.data
+        self.data_slice()
     }
 
     pub fn data_mut(&mut self) -> &mut [f32] {
-        &mut self.data
+        self.make_owned();
+        match &mut self.data {
+            Storage::Owned(v) => v,
+            Storage::Mapped { .. } => unreachable!("make_owned promoted"),
+        }
     }
 
-    pub fn into_data(self) -> Vec<f32> {
-        self.data
+    pub fn into_data(mut self) -> Vec<f32> {
+        self.make_owned();
+        match self.data {
+            Storage::Owned(v) => v,
+            Storage::Mapped { .. } => unreachable!("make_owned promoted"),
+        }
     }
 
     /// Size of dimension `d`.
@@ -98,7 +193,7 @@ impl Tensor {
     /// Row `i` of a 2-D tensor as a slice.
     pub fn row(&self, i: usize) -> &[f32] {
         let c = self.cols();
-        &self.data[i * c..(i + 1) * c]
+        &self.data_slice()[i * c..(i + 1) * c]
     }
 
     // ---- transforms ------------------------------------------------------
@@ -106,7 +201,7 @@ impl Tensor {
     /// Reshape in place (must preserve element count).
     pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
         let n: usize = shape.iter().product();
-        if n != self.data.len() {
+        if n != self.len() {
             return Err(Error::Shape(format!(
                 "cannot reshape {:?} -> {:?}",
                 self.shape, shape
@@ -117,17 +212,18 @@ impl Tensor {
     }
 
     /// Flatten to 2-D `[rows, everything-else]`.
-    pub fn flatten_2d(self) -> Self {
+    pub fn flatten_2d(mut self) -> Self {
         let rows = self.shape[0];
-        let cols = self.data.len() / rows.max(1);
-        Self { shape: vec![rows, cols], data: self.data }
+        let cols = self.len() / rows.max(1);
+        self.shape = vec![rows, cols];
+        self
     }
 
     /// Elementwise map into a new tensor.
     pub fn map<F: Fn(f32) -> f32>(&self, f: F) -> Self {
         Self {
             shape: self.shape.clone(),
-            data: self.data.iter().map(|&x| f(x)).collect(),
+            data: Storage::Owned(self.data_slice().iter().map(|&x| f(x)).collect()),
         }
     }
 
@@ -141,12 +237,13 @@ impl Tensor {
         }
         Ok(Self {
             shape: self.shape.clone(),
-            data: self
-                .data
-                .iter()
-                .zip(&other.data)
-                .map(|(&a, &b)| f(a, b))
-                .collect(),
+            data: Storage::Owned(
+                self.data_slice()
+                    .iter()
+                    .zip(other.data_slice())
+                    .map(|(&a, &b)| f(a, b))
+                    .collect(),
+            ),
         })
     }
 
@@ -157,9 +254,9 @@ impl Tensor {
 
     /// Maximum absolute difference to another tensor.
     pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
-        self.data
+        self.data_slice()
             .iter()
-            .zip(&other.data)
+            .zip(other.data_slice())
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max)
     }
@@ -168,9 +265,9 @@ impl Tensor {
     pub fn allclose(&self, other: &Tensor, atol: f32, rtol: f32) -> bool {
         self.shape == other.shape
             && self
-                .data
+                .data_slice()
                 .iter()
-                .zip(&other.data)
+                .zip(other.data_slice())
                 .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
     }
 
@@ -179,7 +276,10 @@ impl Tensor {
         let row: usize = self.shape[1..].iter().product();
         let mut shape = self.shape.clone();
         shape[0] = n;
-        Tensor { shape, data: self.data[..n * row].to_vec() }
+        Tensor {
+            shape,
+            data: Storage::Owned(self.data_slice()[..n * row].to_vec()),
+        }
     }
 }
 
@@ -229,5 +329,57 @@ mod tests {
     fn flatten_2d_works() {
         let t = Tensor::zeros(vec![2, 3, 4]);
         assert_eq!(t.flatten_2d().shape(), &[2, 12]);
+    }
+
+    // ---- copy-on-write / mapped storage ---------------------------------
+
+    fn mapped_fixture(vals: &[f32]) -> (Arc<MappedFile>, std::path::PathBuf) {
+        let mut bytes = Vec::new();
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let path = std::env::temp_dir()
+            .join(format!("pfp_tensor_map_{}_{}.bin", std::process::id(), vals.len()));
+        std::fs::write(&path, &bytes).unwrap();
+        (Arc::new(MappedFile::open(&path).unwrap()), path)
+    }
+
+    #[test]
+    fn mapped_tensor_reads_and_promotes() {
+        let vals = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let (region, path) = mapped_fixture(&vals);
+        let t = Tensor::mapped(vec![2, 3], region.clone(), 0).unwrap();
+        assert!(t.is_mapped() || !region.is_mapped() || cfg!(not(target_endian = "little")));
+        assert_eq!(t.data(), &vals[..]);
+        assert_eq!(t.row(1), &[4.0, 5.0, 6.0]);
+
+        // mutation promotes to owned without touching the mapping
+        let mut m = t.clone();
+        m.data_mut()[0] = 99.0;
+        assert!(!m.is_mapped());
+        assert_eq!(t.data()[0], 1.0);
+        assert_eq!(m.into_data()[0], 99.0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mapped_tensor_equals_owned_twin() {
+        let vals = [0.5f32, -1.5, 2.25, 8.0];
+        let (region, path) = mapped_fixture(&vals);
+        let t = Tensor::mapped(vec![4], region, 0).unwrap();
+        let owned = Tensor::from_vec(vals.to_vec());
+        assert_eq!(t, owned);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mapped_rejects_bad_windows() {
+        let vals = [1.0f32, 2.0];
+        let (region, path) = mapped_fixture(&vals);
+        // out of bounds
+        assert!(Tensor::mapped(vec![3], region.clone(), 0).is_none());
+        // misaligned offset (1 byte into a page-aligned mapping)
+        assert!(Tensor::mapped(vec![1], region, 1).is_none());
+        std::fs::remove_file(&path).ok();
     }
 }

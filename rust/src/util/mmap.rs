@@ -1,0 +1,206 @@
+//! Read-only memory mapping without the `memmap2` crate (not in the
+//! offline crate set).
+//!
+//! On unix targets `std` already links libc, so `mmap`/`munmap` are
+//! declared directly and a [`MappedFile`] wraps a `PROT_READ` /
+//! `MAP_PRIVATE` mapping of a whole file. Everywhere else — and whenever
+//! the syscall fails — [`MappedFile::open`] falls back to reading the file
+//! into an anonymous heap buffer, so callers get identical bytes either
+//! way and never need to branch on platform. `is_mapped()` reports which
+//! path was taken (tests and the registry's `models` listing use it).
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+#[cfg(unix)]
+mod sys {
+    use std::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+}
+
+enum Backing {
+    /// Live mmap: pointer + length, unmapped on drop.
+    #[cfg(unix)]
+    Mapped { ptr: *const u8, len: usize },
+    /// Heap fallback (non-unix, empty file, or mmap refused).
+    Heap(Vec<u8>),
+}
+
+/// A whole file held read-only in memory — by `mmap` when possible, by a
+/// heap copy otherwise. Dereferences to `&[u8]`.
+pub struct MappedFile {
+    backing: Backing,
+}
+
+// The mapping is PROT_READ and never mutated; sharing the raw pointer
+// across threads is as safe as sharing `&[u8]`.
+unsafe impl Send for MappedFile {}
+unsafe impl Sync for MappedFile {}
+
+impl MappedFile {
+    /// Map `path` read-only, falling back to a heap read on any failure.
+    pub fn open(path: &Path) -> Result<Self> {
+        Self::open_with(path, true)
+    }
+
+    /// Like [`open`](Self::open) but `use_mmap: false` forces the heap
+    /// path (the `--no-mmap` serve flag).
+    pub fn open_with(path: &Path, use_mmap: bool) -> Result<Self> {
+        #[cfg(unix)]
+        if use_mmap {
+            if let Some(backing) = Self::try_mmap(path) {
+                return Ok(Self { backing });
+            }
+        }
+        let _ = use_mmap;
+        let bytes = std::fs::read(path).map_err(|e| {
+            Error::Io(std::io::Error::new(
+                e.kind(),
+                format!("read {}: {e}", path.display()),
+            ))
+        })?;
+        Ok(Self { backing: Backing::Heap(bytes) })
+    }
+
+    #[cfg(unix)]
+    fn try_mmap(path: &Path) -> Option<Backing> {
+        use std::os::unix::io::AsRawFd;
+        let file = std::fs::File::open(path).ok()?;
+        let len = file.metadata().ok()?.len() as usize;
+        if len == 0 {
+            // zero-length mmap is EINVAL; the heap path handles it.
+            return None;
+        }
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == sys::MAP_FAILED {
+            return None;
+        }
+        Some(Backing::Mapped { ptr: ptr as *const u8, len })
+    }
+
+    /// Whether the bytes come from a live mapping (vs the heap fallback).
+    pub fn is_mapped(&self) -> bool {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Mapped { .. } => true,
+            Backing::Heap(_) => false,
+        }
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Mapped { ptr, len } => unsafe {
+                std::slice::from_raw_parts(*ptr, *len)
+            },
+            Backing::Heap(v) => v,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Drop for MappedFile {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Backing::Mapped { ptr, len } = self.backing {
+            unsafe {
+                sys::munmap(ptr as *mut std::ffi::c_void, len);
+            }
+        }
+    }
+}
+
+impl std::ops::Deref for MappedFile {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.bytes()
+    }
+}
+
+impl std::fmt::Debug for MappedFile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MappedFile")
+            .field("len", &self.len())
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_file(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let path = std::env::temp_dir().join(format!("pfp_mmap_{}_{name}", std::process::id()));
+        std::fs::write(&path, bytes).unwrap();
+        path
+    }
+
+    #[test]
+    fn mapped_bytes_match_file() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        let path = tmp_file("match", &data);
+        let m = MappedFile::open(&path).unwrap();
+        assert_eq!(&*m, &data[..]);
+        #[cfg(unix)]
+        assert!(m.is_mapped());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn heap_fallback_matches() {
+        let data = b"heap path bytes".to_vec();
+        let path = tmp_file("heap", &data);
+        let m = MappedFile::open_with(&path, false).unwrap();
+        assert!(!m.is_mapped());
+        assert_eq!(&*m, &data[..]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_file_uses_heap() {
+        let path = tmp_file("empty", b"");
+        let m = MappedFile::open(&path).unwrap();
+        assert!(!m.is_mapped());
+        assert!(m.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(MappedFile::open(Path::new("/nonexistent/pfp_mmap")).is_err());
+    }
+}

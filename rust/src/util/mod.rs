@@ -5,6 +5,7 @@
 
 pub mod bench;
 pub mod json;
+pub mod mmap;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,265 @@
+//! Registry end-to-end: hot swap under pipelined in-flight load, the
+//! global plan-memory budget, and the versioned admin wire protocol.
+//!
+//! The hot-swap contract under test: a `swap` while requests are in
+//! flight completes with **zero dropped or error responses**; every
+//! request submitted before the swap is verifiably served by the
+//! pre-swap version (the `version` tag in its response), every request
+//! submitted after it by the new version; and once the old version's
+//! last in-flight holder drains, its executor — compiled-plan cache
+//! included — is freed (observed through `Registry::live_versions`).
+//!
+//! Uses synthetic posteriors written to temp NPZ archives so the suite
+//! runs without trained artifacts.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::{self, channel};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pfp::coordinator::{protocol, ProtoVersion, Server, ServerConfig, Service};
+use pfp::model::{Arch, PosteriorWeights, SchedulesBuilder};
+use pfp::registry::Registry;
+
+fn write_weights(tag: &str, seed: u64) -> std::path::PathBuf {
+    let arch = Arch::mlp();
+    let path = std::env::temp_dir().join(format!(
+        "pfp_intreg_{}_{tag}.npz",
+        std::process::id()
+    ));
+    PosteriorWeights::synthetic(&arch, seed).save_npz(&path).unwrap();
+    path
+}
+
+fn registry_service(budget: Option<usize>, max_batch: usize) -> Service {
+    let mut cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    };
+    cfg.batcher.max_batch = max_batch;
+    cfg.batcher.max_wait = Duration::from_millis(1);
+    let mut svc = Service::new(cfg);
+    let registry = Arc::new(Registry::new(budget, true, SchedulesBuilder::tuned(1)));
+    svc.attach_registry(registry, 1.0);
+    svc
+}
+
+struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        let writer = stream.try_clone().unwrap();
+        Self { writer, reader: BufReader::new(stream) }
+    }
+
+    fn send(&mut self, line: &str) {
+        writeln!(self.writer, "{line}").unwrap();
+    }
+
+    fn recv(&mut self) -> String {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        line.trim().to_string()
+    }
+}
+
+fn join_within(h: std::thread::JoinHandle<pfp::Result<()>>, timeout: Duration) {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let r = h.join();
+        let _ = tx.send(r.is_ok());
+    });
+    rx.recv_timeout(timeout)
+        .expect("Server::run did not terminate after shutdown");
+}
+
+#[test]
+fn swap_under_pipelined_load_zero_errors_and_version_split() {
+    let svc = registry_service(None, 4);
+    let p1 = write_weights("swap_v1", 11);
+    let p2 = write_weights("swap_v2", 12);
+    svc.admin_load("mlp", &p1.to_string_lossy(), None, None).unwrap();
+
+    // first wave: pipelined in-flight load pinned to v1 at submit time
+    let (tx, rx) = channel();
+    for i in 0..40u64 {
+        svc.submit_with_proto(
+            protocol::Request {
+                id: i,
+                model: "mlp".into(),
+                input: vec![0.5; 784],
+            },
+            tx.clone(),
+            ProtoVersion::V1,
+        )
+        .expect("submit");
+    }
+
+    // swap while the first wave is still draining through the batcher
+    let ack = svc.admin_swap("mlp", &p2.to_string_lossy(), None, None).unwrap();
+    assert_eq!(ack.num_field("version").unwrap(), 2.0);
+
+    // second wave lands on v2
+    for i in 40..80u64 {
+        svc.submit_with_proto(
+            protocol::Request {
+                id: i,
+                model: "mlp".into(),
+                input: vec![0.5; 784],
+            },
+            tx.clone(),
+            ProtoVersion::V1,
+        )
+        .expect("submit");
+    }
+    drop(tx);
+
+    let mut count = 0usize;
+    for resp in rx.iter() {
+        assert!(
+            resp.result.is_ok(),
+            "swap must drop zero requests, id {} errored: {:?}",
+            resp.id,
+            resp.result
+        );
+        assert_eq!(resp.proto, ProtoVersion::V1);
+        let expect = if resp.id < 40 { 1 } else { 2 };
+        assert_eq!(
+            resp.model_version, expect,
+            "id {} served by wrong version",
+            resp.id
+        );
+        count += 1;
+    }
+    assert_eq!(count, 80, "every request must be answered exactly once");
+
+    // once the last v1 holder drains, the old executor (and its whole
+    // compiled-plan cache) frees at refcount zero
+    let registry = svc.registry().unwrap();
+    let t = Instant::now();
+    while registry.live_versions("mlp") != vec![2] {
+        assert!(
+            t.elapsed() < Duration::from_secs(5),
+            "v1 not drained: live versions {:?}",
+            registry.live_versions("mlp")
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p2).ok();
+}
+
+#[test]
+fn memory_budget_evicts_lru_plans_across_models() {
+    // 1-byte budget: after every batch the worker holds the fleet to the
+    // budget, so no compiled plan may stay resident
+    let svc = registry_service(Some(1), 4);
+    let pa = write_weights("budget_a", 13);
+    let pb = write_weights("budget_b", 14);
+    svc.admin_load("a", &pa.to_string_lossy(), Some("mlp"), None).unwrap();
+    svc.admin_load("b", &pb.to_string_lossy(), Some("mlp"), None).unwrap();
+
+    for (i, name) in ["a", "b", "a"].iter().enumerate() {
+        let resp = svc.infer_blocking(protocol::Request {
+            id: i as u64,
+            model: name.to_string(),
+            input: vec![0.25; 784],
+        });
+        assert!(resp.result.is_ok(), "budget pressure must not fail serving");
+    }
+
+    let registry = svc.registry().unwrap();
+    assert!(
+        registry.budget_evictions() >= 2,
+        "each model's plan must have been evicted at least once, got {}",
+        registry.budget_evictions()
+    );
+    assert_eq!(registry.total_plan_bytes(), 0, "nothing fits a 1-byte budget");
+    // budget evictions surface in the global metrics counter too
+    assert!(
+        svc.metrics
+            .plan_cache_evictions
+            .load(std::sync::atomic::Ordering::Relaxed)
+            >= 2
+    );
+    std::fs::remove_file(&pa).ok();
+    std::fs::remove_file(&pb).ok();
+}
+
+#[test]
+fn versioned_admin_protocol_over_tcp() {
+    let svc = Arc::new(registry_service(None, 8));
+    let p1 = write_weights("wire_v1", 15);
+    let p2 = write_weights("wire_v2", 16);
+    let server = Server::bind(svc.clone()).unwrap();
+    let addr = server.addr;
+    let h = std::thread::spawn(move || server.run());
+    let mut c = Client::connect(addr);
+
+    // legacy v0 line: accepted, but the first ack carries the one-time
+    // deprecation warning — and only the first
+    c.send(r#"{"cmd":"ping"}"#);
+    let ack = c.recv();
+    assert!(ack.contains("pong"), "bad ping ack: {ack}");
+    assert!(ack.contains("deprecated"), "first v0 ack must warn: {ack}");
+    c.send(r#"{"cmd":"ping"}"#);
+    let ack = c.recv();
+    assert!(ack.contains("pong") && !ack.contains("deprecated"), "{ack}");
+
+    // unknown protocol versions are rejected outright
+    c.send(r#"{"v":9,"cmd":"ping"}"#);
+    let ack = c.recv();
+    assert!(ack.contains("unknown protocol version"), "{ack}");
+
+    // v1 admin: load -> models -> infer -> swap -> infer -> unload
+    c.send(&format!(
+        r#"{{"v":1,"cmd":"load","model":"mlp","path":"{}"}}"#,
+        p1.display()
+    ));
+    let ack = c.recv();
+    assert!(ack.contains("\"loaded\":true"), "{ack}");
+    assert!(ack.contains("\"v\":1"), "v1 command gets a v1 envelope: {ack}");
+    assert!(ack.contains("\"version\":1"), "{ack}");
+
+    c.send(r#"{"v":1,"cmd":"models"}"#);
+    let listing = c.recv();
+    assert!(listing.contains("\"models\""), "{listing}");
+    assert!(listing.contains("\"checksum\""), "{listing}");
+
+    c.send(&protocol::request_json_v1(7, "mlp", &[0.5; 784]));
+    let resp = protocol::Response::parse(&c.recv()).unwrap();
+    assert!(resp.result.is_ok());
+    assert_eq!(resp.proto, ProtoVersion::V1);
+    assert_eq!(resp.model_version, 1, "infer response tags the serving version");
+
+    c.send(&format!(
+        r#"{{"v":1,"cmd":"swap","model":"mlp","path":"{}"}}"#,
+        p2.display()
+    ));
+    let ack = c.recv();
+    assert!(ack.contains("\"swapped\":true"), "{ack}");
+    assert!(ack.contains("\"version\":2"), "{ack}");
+
+    c.send(&protocol::request_json_v1(8, "mlp", &[0.5; 784]));
+    let resp = protocol::Response::parse(&c.recv()).unwrap();
+    assert_eq!(resp.model_version, 2, "post-swap requests serve on v2");
+
+    c.send(r#"{"v":1,"cmd":"unload","model":"mlp"}"#);
+    let ack = c.recv();
+    assert!(ack.contains("\"unloaded\":true"), "{ack}");
+    c.send(&protocol::request_json_v1(9, "mlp", &[0.5; 784]));
+    let resp = protocol::Response::parse(&c.recv()).unwrap();
+    assert!(resp.result.is_err(), "unloaded model must reject");
+
+    c.send(r#"{"v":1,"cmd":"shutdown"}"#);
+    assert!(c.recv().contains("shutting_down"));
+    join_within(h, Duration::from_secs(10));
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p2).ok();
+}

@@ -1,10 +1,11 @@
 # Developer entry points. `make verify` is tier-1 and byte-identical to
 # what CI's build+test jobs run, so local green == CI green.
 
-.PHONY: verify build test test-scalar test-native-cpu bench bench-build fmt clippy python-test artifacts clean
+.PHONY: verify build test test-scalar test-native-cpu bench bench-build fmt clippy lint model-check miri python-test artifacts clean
 
 # ---- tier-1 --------------------------------------------------------------
-# (plus the examples + serving/plan bench compile gates, mirroring CI)
+# (plus the examples + serving/plan bench compile gates, mirroring CI,
+# plus the static-analysis gates: project lints + concurrency models)
 verify:
 	cargo build --release
 	cargo test -q
@@ -14,6 +15,8 @@ verify:
 	cargo bench --no-run --bench plan_parallel_scaling
 	cargo bench --no-run --bench simd_kernels
 	cargo bench --no-run --bench registry_churn
+	$(MAKE) lint
+	$(MAKE) model-check
 
 # both runtime dispatch branches, exactly as CI's test matrix runs them
 test-scalar:
@@ -34,6 +37,24 @@ fmt:
 
 clippy:
 	cargo clippy --all-targets -- -D warnings
+
+# project-invariant lints: SAFETY comments, hot-path allocation freedom,
+# schema-version consistency, bench gate coverage (rust/src/verify/lint.rs)
+lint:
+	cargo run --bin pfp-lint
+
+# exhaustive interleaving exploration of the unsafe concurrency protocols
+# + the seeded-mutant detection corpus (rust/src/verify/)
+model-check:
+	cargo test -q --features model_check verify::
+	cargo test -q --features model_check --test model_check
+
+# unsafe-heavy subset under the miri interpreter (nightly toolchain)
+miri:
+	MIRIFLAGS=-Zmiri-disable-isolation cargo +nightly miri test --lib util::threadpool
+	MIRIFLAGS=-Zmiri-disable-isolation cargo +nightly miri test --lib util::mmap
+	MIRIFLAGS=-Zmiri-disable-isolation cargo +nightly miri test --lib tensor::
+	MIRIFLAGS=-Zmiri-disable-isolation cargo +nightly miri test --lib verify::shim
 
 # ---- benchmarks ----------------------------------------------------------
 # compile-only (the CI gate): every Table/Fig reproduction must build

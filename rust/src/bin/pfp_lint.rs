@@ -1,0 +1,35 @@
+//! `pfp-lint` — the project-invariant lint gate (`cargo run --bin
+//! pfp-lint`, or `make lint`).
+//!
+//! Runs every rule in [`pfp::verify::lint`] over the repository and
+//! exits nonzero on any finding; CI's `lint` job blocks on it. Pass a
+//! repo root as the first argument to lint a different checkout.
+
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let root = std::env::args()
+        .nth(1)
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(pfp::verify::lint::repo_root);
+    let findings = match pfp::verify::lint::lint_tree(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("pfp-lint: cannot read tree at {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    if findings.is_empty() {
+        println!(
+            "pfp-lint: clean ({} ok: SAFETY discipline, hot-path alloc ban, \
+             version single-sourcing, bench gate)",
+            root.display()
+        );
+        return ExitCode::SUCCESS;
+    }
+    for f in &findings {
+        println!("{f}");
+    }
+    eprintln!("pfp-lint: {} violation(s)", findings.len());
+    ExitCode::FAILURE
+}

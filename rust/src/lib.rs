@@ -29,10 +29,12 @@
 //! | [`model`] | architecture specs, weight store (NPZ), native executor |
 //! | [`runtime`] | PJRT engine: HLO-text artifacts → compiled executables |
 //! | [`coordinator`] | TCP server, router, dynamic batcher, metrics |
+//! | [`registry`] | multi-model registry: mmap'd weights, hot swap, refcount drain |
 //! | [`uncertainty`] | logit sampling (Eq. 11), entropy/SME/MI (Eqs. 1-3), AUROC |
 //! | [`data`] | synthetic Dirty-MNIST (mirrors `python/compile/data.py`) |
 //! | [`profiling`] | per-operator timing (Table 4 / Fig. 6) |
 //! | [`util`] | offline substrate: RNG, JSON, stats, thread pool, prop tests |
+//! | [`verify`] | static analysis: concurrency model checker + project lints |
 
 pub mod coordinator;
 pub mod data;
@@ -47,6 +49,7 @@ pub mod tensor;
 pub mod tuner;
 pub mod uncertainty;
 pub mod util;
+pub mod verify;
 
 pub use error::{Error, Result};
 

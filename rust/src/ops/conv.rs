@@ -277,7 +277,7 @@ pub fn conv_kernel_tiled_into<A: Accum>(
 
     // phase 1: gather + reduce, partitioned by patch row
     let pm_parts = DisjointMut::new(pm);
-    let pa_parts = pa.map(|p| DisjointMut::new(p));
+    let pa_parts = pa.map(DisjointMut::new);
     let cm_parts = DisjointMut::new(cm);
     let cv_parts = DisjointMut::new(cv);
     let run_tile = |r: std::ops::Range<usize>| {
@@ -289,6 +289,7 @@ pub fn conv_kernel_tiled_into<A: Accum>(
         let pm_chunk: &[f32] = pm_chunk;
         let pa_chunk: &[f32] = match (x_aux, &pa_parts) {
             (Some(aux), Some(p)) => {
+                // SAFETY: same disjoint patch-row tiles as `pm_chunk`.
                 let chunk = unsafe { p.slice(r.start * kk, len * kk) };
                 im2col_rows_into(aux, sh, r.clone(), chunk);
                 chunk
@@ -297,7 +298,9 @@ pub fn conv_kernel_tiled_into<A: Accum>(
             // mean patches instead of gathering twice
             _ => pm_chunk,
         };
+        // SAFETY: per-tile output rows are disjoint (same tiles as above).
         let cm_chunk = unsafe { cm_parts.slice(r.start * o, len * o) };
+        // SAFETY: per-tile output rows are disjoint (same tiles as above).
         let cv_chunk = unsafe { cv_parts.slice(r.start * o, len * o) };
         let args = DenseSlices {
             m: len,

@@ -650,9 +650,9 @@ pub fn dense_kernel_tiled_into<A: Accum>(
     pool.run_tasks(tiles.len(), &|ti| {
         let r = tiles[ti].clone();
         let len = (r.end - r.start) * n;
-        // SAFETY: tiles are disjoint row ranges, so the chunks never
-        // overlap, and run_tasks blocks until every tile completes.
         let (mu_chunk, var_chunk) =
+            // SAFETY: tiles are disjoint row ranges, so the chunks never
+            // overlap, and run_tasks blocks until every tile completes.
             unsafe { (mu.slice(r.start * n, len), var.slice(r.start * n, len)) };
         dense_rows_into::<A>(args, &serial, r, mu_chunk, var_chunk);
     });

@@ -188,9 +188,9 @@ pub fn erf_into(b: Backend, x: &[f32], out: &mut [f32]) {
     debug_assert_eq!(x.len(), out.len());
     match b {
         #[cfg(target_arch = "x86_64")]
-        Backend::Avx2 => unsafe { avx2::erf_into(x, out) },
+        Backend::Avx2 => unsafe { avx2::erf_into(x, out) }, // SAFETY: `b == Avx2` only comes from [`detect`] (avx2+fma was verified at runtime); the kernels accept any slice length.
         #[cfg(target_arch = "aarch64")]
-        Backend::Neon => unsafe { neon::erf_into(x, out) },
+        Backend::Neon => unsafe { neon::erf_into(x, out) }, // SAFETY: `b == Neon` only comes from [`detect`] (neon is baseline on aarch64); the kernels accept any slice length.
         _ => {
             for (o, &v) in out.iter_mut().zip(x) {
                 *o = super::erf::erf(v);
@@ -204,9 +204,9 @@ pub fn norm_cdf_into(b: Backend, x: &[f32], out: &mut [f32]) {
     debug_assert_eq!(x.len(), out.len());
     match b {
         #[cfg(target_arch = "x86_64")]
-        Backend::Avx2 => unsafe { avx2::norm_cdf_into(x, out) },
+        Backend::Avx2 => unsafe { avx2::norm_cdf_into(x, out) }, // SAFETY: `b == Avx2` only comes from [`detect`] (avx2+fma was verified at runtime); the kernels accept any slice length.
         #[cfg(target_arch = "aarch64")]
-        Backend::Neon => unsafe { neon::norm_cdf_into(x, out) },
+        Backend::Neon => unsafe { neon::norm_cdf_into(x, out) }, // SAFETY: `b == Neon` only comes from [`detect`] (neon is baseline on aarch64); the kernels accept any slice length.
         _ => {
             for (o, &v) in out.iter_mut().zip(x) {
                 *o = super::erf::norm_cdf(v);
@@ -220,9 +220,9 @@ pub fn norm_pdf_into(b: Backend, x: &[f32], out: &mut [f32]) {
     debug_assert_eq!(x.len(), out.len());
     match b {
         #[cfg(target_arch = "x86_64")]
-        Backend::Avx2 => unsafe { avx2::norm_pdf_into(x, out) },
+        Backend::Avx2 => unsafe { avx2::norm_pdf_into(x, out) }, // SAFETY: `b == Avx2` only comes from [`detect`] (avx2+fma was verified at runtime); the kernels accept any slice length.
         #[cfg(target_arch = "aarch64")]
-        Backend::Neon => unsafe { neon::norm_pdf_into(x, out) },
+        Backend::Neon => unsafe { neon::norm_pdf_into(x, out) }, // SAFETY: `b == Neon` only comes from [`detect`] (neon is baseline on aarch64); the kernels accept any slice length.
         _ => {
             for (o, &v) in out.iter_mut().zip(x) {
                 *o = super::erf::norm_pdf(v);
@@ -245,9 +245,9 @@ pub fn relu_moments_into(
     debug_assert_eq!(mu.len(), out_e2.len());
     match b {
         #[cfg(target_arch = "x86_64")]
-        Backend::Avx2 => unsafe { avx2::relu_moments_into(mu, var, out_mu, out_e2) },
+        Backend::Avx2 => unsafe { avx2::relu_moments_into(mu, var, out_mu, out_e2) }, // SAFETY: `b == Avx2` only comes from [`detect`] (avx2+fma was verified at runtime); the kernels accept any slice length.
         #[cfg(target_arch = "aarch64")]
-        Backend::Neon => unsafe { neon::relu_moments_into(mu, var, out_mu, out_e2) },
+        Backend::Neon => unsafe { neon::relu_moments_into(mu, var, out_mu, out_e2) }, // SAFETY: `b == Neon` only comes from [`detect`] (neon is baseline on aarch64); the kernels accept any slice length.
         _ => {
             for i in 0..mu.len() {
                 let (m, e2) = super::relu::relu_moments(mu[i], var[i]);
@@ -278,11 +278,11 @@ pub fn gaussian_max2_into(
     debug_assert_eq!(mu1.len(), out_var.len());
     match b {
         #[cfg(target_arch = "x86_64")]
-        Backend::Avx2 => unsafe {
+        Backend::Avx2 => unsafe { // SAFETY: `b == Avx2` only comes from [`detect`] (avx2+fma was verified at runtime); the kernels accept any slice length.
             avx2::gaussian_max2_into(mu1, var1, mu2, var2, out_mu, out_var)
         },
         #[cfg(target_arch = "aarch64")]
-        Backend::Neon => unsafe {
+        Backend::Neon => unsafe { // SAFETY: `b == Neon` only comes from [`detect`] (neon is baseline on aarch64); the kernels accept any slice length.
             neon::gaussian_max2_into(mu1, var1, mu2, var2, out_mu, out_var)
         },
         _ => {
@@ -312,9 +312,9 @@ pub fn dot_joint_eq12(b: Backend, xm: &[f32], xa: &[f32], wm: &[f32], wa: &[f32]
     debug_assert_eq!(xm.len(), wa.len());
     match b {
         #[cfg(target_arch = "x86_64")]
-        Backend::Avx2 => unsafe { avx2::dot_joint_eq12(xm, xa, wm, wa) },
+        Backend::Avx2 => unsafe { avx2::dot_joint_eq12(xm, xa, wm, wa) }, // SAFETY: `b == Avx2` only comes from [`detect`] (avx2+fma was verified at runtime); the kernels accept any slice length.
         #[cfg(target_arch = "aarch64")]
-        Backend::Neon => unsafe { neon::dot_joint_eq12(xm, xa, wm, wa) },
+        Backend::Neon => unsafe { neon::dot_joint_eq12(xm, xa, wm, wa) }, // SAFETY: `b == Neon` only comes from [`detect`] (neon is baseline on aarch64); the kernels accept any slice length.
         _ => {
             let (mut mu, mut var) = (0.0f32, 0.0f32);
             for i in 0..xm.len() {
@@ -334,9 +334,9 @@ pub fn dot_first_layer(b: Backend, xm: &[f32], wm: &[f32], wa: &[f32]) -> (f32, 
     debug_assert_eq!(xm.len(), wa.len());
     match b {
         #[cfg(target_arch = "x86_64")]
-        Backend::Avx2 => unsafe { avx2::dot_first_layer(xm, wm, wa) },
+        Backend::Avx2 => unsafe { avx2::dot_first_layer(xm, wm, wa) }, // SAFETY: `b == Avx2` only comes from [`detect`] (avx2+fma was verified at runtime); the kernels accept any slice length.
         #[cfg(target_arch = "aarch64")]
-        Backend::Neon => unsafe { neon::dot_first_layer(xm, wm, wa) },
+        Backend::Neon => unsafe { neon::dot_first_layer(xm, wm, wa) }, // SAFETY: `b == Neon` only comes from [`detect`] (neon is baseline on aarch64); the kernels accept any slice length.
         _ => {
             let (mut mu, mut var) = (0.0f32, 0.0f32);
             for i in 0..xm.len() {
@@ -353,9 +353,9 @@ pub fn dot_mean(b: Backend, xm: &[f32], wm: &[f32]) -> f32 {
     debug_assert_eq!(xm.len(), wm.len());
     match b {
         #[cfg(target_arch = "x86_64")]
-        Backend::Avx2 => unsafe { avx2::dot_mean(xm, wm) },
+        Backend::Avx2 => unsafe { avx2::dot_mean(xm, wm) }, // SAFETY: `b == Avx2` only comes from [`detect`] (avx2+fma was verified at runtime); the kernels accept any slice length.
         #[cfg(target_arch = "aarch64")]
-        Backend::Neon => unsafe { neon::dot_mean(xm, wm) },
+        Backend::Neon => unsafe { neon::dot_mean(xm, wm) }, // SAFETY: `b == Neon` only comes from [`detect`] (neon is baseline on aarch64); the kernels accept any slice length.
         _ => {
             let mut mu = 0.0f32;
             for i in 0..xm.len() {
@@ -388,6 +388,8 @@ mod avx2 {
     /// exponent built by integer bit manipulation.
     #[inline]
     #[target_feature(enable = "avx2,fma")]
+    // SAFETY: register-only math; requires avx2+fma, which every caller
+    // (itself a target_feature fn reached via detect-gated dispatch) has.
     unsafe fn exp_v(x: __m256) -> __m256 {
         let x = _mm256_min_ps(x, _mm256_set1_ps(EXP_HI));
         let x = _mm256_max_ps(x, _mm256_set1_ps(EXP_LO));
@@ -415,6 +417,8 @@ mod avx2 {
     /// A&S 7.1.26 erf, sign handled by bit masking.
     #[inline]
     #[target_feature(enable = "avx2,fma")]
+    // SAFETY: register-only math; requires avx2+fma, which every caller
+    // (itself a target_feature fn reached via detect-gated dispatch) has.
     unsafe fn erf_v(x: __m256) -> __m256 {
         let sign_mask = _mm256_set1_ps(-0.0);
         let sign = _mm256_and_ps(x, sign_mask);
@@ -434,6 +438,8 @@ mod avx2 {
 
     #[inline]
     #[target_feature(enable = "avx2,fma")]
+    // SAFETY: register-only math; requires avx2+fma, which every caller
+    // (itself a target_feature fn reached via detect-gated dispatch) has.
     unsafe fn norm_cdf_v(x: __m256) -> __m256 {
         let z = _mm256_mul_ps(x, _mm256_set1_ps(FRAC_1_SQRT_2));
         _mm256_mul_ps(
@@ -444,6 +450,8 @@ mod avx2 {
 
     #[inline]
     #[target_feature(enable = "avx2,fma")]
+    // SAFETY: register-only math; requires avx2+fma, which every caller
+    // (itself a target_feature fn reached via detect-gated dispatch) has.
     unsafe fn norm_pdf_v(x: __m256) -> __m256 {
         let arg = _mm256_mul_ps(_mm256_set1_ps(-0.5), _mm256_mul_ps(x, x));
         _mm256_mul_ps(_mm256_set1_ps(INV_SQRT_2PI), exp_v(arg))
@@ -475,16 +483,28 @@ mod avx2 {
     }
 
     #[target_feature(enable = "avx2,fma")]
+    // SAFETY: callable only with avx2+fma available — guaranteed by the
+    // detect-gated dispatch above. Memory access is unaligned loads/stores
+    // over the argument slices plus padded stack tail buffers, so every
+    // slice length stays in bounds.
     pub unsafe fn erf_into(x: &[f32], out: &mut [f32]) {
         map_v!(x, out, erf_v);
     }
 
     #[target_feature(enable = "avx2,fma")]
+    // SAFETY: callable only with avx2+fma available — guaranteed by the
+    // detect-gated dispatch above. Memory access is unaligned loads/stores
+    // over the argument slices plus padded stack tail buffers, so every
+    // slice length stays in bounds.
     pub unsafe fn norm_cdf_into(x: &[f32], out: &mut [f32]) {
         map_v!(x, out, norm_cdf_v);
     }
 
     #[target_feature(enable = "avx2,fma")]
+    // SAFETY: callable only with avx2+fma available — guaranteed by the
+    // detect-gated dispatch above. Memory access is unaligned loads/stores
+    // over the argument slices plus padded stack tail buffers, so every
+    // slice length stays in bounds.
     pub unsafe fn norm_pdf_into(x: &[f32], out: &mut [f32]) {
         map_v!(x, out, norm_pdf_v);
     }
@@ -492,6 +512,8 @@ mod avx2 {
     /// (mu, var) -> (mu', E[x'^2]) — the Eqs. 8/9 body on 8 lanes.
     #[inline]
     #[target_feature(enable = "avx2,fma")]
+    // SAFETY: register-only math; requires avx2+fma, which every caller
+    // (itself a target_feature fn reached via detect-gated dispatch) has.
     unsafe fn relu_v(mu: __m256, var: __m256) -> (__m256, __m256) {
         let var = _mm256_max_ps(var, _mm256_set1_ps(EPS));
         let std = _mm256_sqrt_ps(var);
@@ -508,6 +530,10 @@ mod avx2 {
     }
 
     #[target_feature(enable = "avx2,fma")]
+    // SAFETY: callable only with avx2+fma available — guaranteed by the
+    // detect-gated dispatch above. Memory access is unaligned loads/stores
+    // over the argument slices plus padded stack tail buffers, so every
+    // slice length stays in bounds.
     pub unsafe fn relu_moments_into(
         mu: &[f32],
         var: &[f32],
@@ -541,6 +567,8 @@ mod avx2 {
     /// Moment-matched max of two Gaussians on 8 lanes (Roth 2021).
     #[inline]
     #[target_feature(enable = "avx2,fma")]
+    // SAFETY: register-only math; requires avx2+fma, which every caller
+    // (itself a target_feature fn reached via detect-gated dispatch) has.
     unsafe fn gmax_v(
         mu1: __m256,
         var1: __m256,
@@ -570,6 +598,10 @@ mod avx2 {
     }
 
     #[target_feature(enable = "avx2,fma")]
+    // SAFETY: callable only with avx2+fma available — guaranteed by the
+    // detect-gated dispatch above. Memory access is unaligned loads/stores
+    // over the argument slices plus padded stack tail buffers, so every
+    // slice length stays in bounds.
     pub unsafe fn gaussian_max2_into(
         mu1: &[f32],
         var1: &[f32],
@@ -616,6 +648,8 @@ mod avx2 {
     /// Deterministic 8-lane horizontal sum (pairwise, fixed order).
     #[inline]
     #[target_feature(enable = "avx2,fma")]
+    // SAFETY: register-only math; requires avx2+fma, which every caller
+    // (itself a target_feature fn reached via detect-gated dispatch) has.
     unsafe fn hsum(v: __m256) -> f32 {
         let mut buf = [0.0f32; 8];
         _mm256_storeu_ps(buf.as_mut_ptr(), v);
@@ -623,6 +657,10 @@ mod avx2 {
     }
 
     #[target_feature(enable = "avx2,fma")]
+    // SAFETY: callable only with avx2+fma available — guaranteed by the
+    // detect-gated dispatch above. Memory access is unaligned loads/stores
+    // over the argument slices plus padded stack tail buffers, so every
+    // slice length stays in bounds.
     pub unsafe fn dot_joint_eq12(
         xm: &[f32],
         xa: &[f32],
@@ -657,6 +695,10 @@ mod avx2 {
     }
 
     #[target_feature(enable = "avx2,fma")]
+    // SAFETY: callable only with avx2+fma available — guaranteed by the
+    // detect-gated dispatch above. Memory access is unaligned loads/stores
+    // over the argument slices plus padded stack tail buffers, so every
+    // slice length stays in bounds.
     pub unsafe fn dot_first_layer(xm: &[f32], wm: &[f32], wa: &[f32]) -> (f32, f32) {
         let k = xm.len();
         let mut mu = _mm256_setzero_ps();
@@ -681,6 +723,10 @@ mod avx2 {
     }
 
     #[target_feature(enable = "avx2,fma")]
+    // SAFETY: callable only with avx2+fma available — guaranteed by the
+    // detect-gated dispatch above. Memory access is unaligned loads/stores
+    // over the argument slices plus padded stack tail buffers, so every
+    // slice length stays in bounds.
     pub unsafe fn dot_mean(xm: &[f32], wm: &[f32]) -> f32 {
         let k = xm.len();
         let mut mu = _mm256_setzero_ps();
@@ -719,6 +765,8 @@ mod neon {
 
     #[inline]
     #[target_feature(enable = "neon")]
+    // SAFETY: register-only math; requires neon, which every caller
+    // (itself a target_feature fn reached via detect-gated dispatch) has.
     unsafe fn exp_v(x: float32x4_t) -> float32x4_t {
         let x = vminq_f32(x, vdupq_n_f32(EXP_HI));
         let x = vmaxq_f32(x, vdupq_n_f32(EXP_LO));
@@ -740,6 +788,8 @@ mod neon {
 
     #[inline]
     #[target_feature(enable = "neon")]
+    // SAFETY: register-only math; requires neon, which every caller
+    // (itself a target_feature fn reached via detect-gated dispatch) has.
     unsafe fn erf_v(x: float32x4_t) -> float32x4_t {
         let xa = vabsq_f32(x);
         let one = vdupq_n_f32(1.0);
@@ -758,6 +808,8 @@ mod neon {
 
     #[inline]
     #[target_feature(enable = "neon")]
+    // SAFETY: register-only math; requires neon, which every caller
+    // (itself a target_feature fn reached via detect-gated dispatch) has.
     unsafe fn norm_cdf_v(x: float32x4_t) -> float32x4_t {
         let z = vmulq_f32(x, vdupq_n_f32(FRAC_1_SQRT_2));
         vmulq_f32(vdupq_n_f32(0.5), vaddq_f32(vdupq_n_f32(1.0), erf_v(z)))
@@ -765,6 +817,8 @@ mod neon {
 
     #[inline]
     #[target_feature(enable = "neon")]
+    // SAFETY: register-only math; requires neon, which every caller
+    // (itself a target_feature fn reached via detect-gated dispatch) has.
     unsafe fn norm_pdf_v(x: float32x4_t) -> float32x4_t {
         let arg = vmulq_f32(vdupq_n_f32(-0.5), vmulq_f32(x, x));
         vmulq_f32(vdupq_n_f32(INV_SQRT_2PI), exp_v(arg))
@@ -792,22 +846,36 @@ mod neon {
     }
 
     #[target_feature(enable = "neon")]
+    // SAFETY: callable only with neon available — guaranteed by the
+    // detect-gated dispatch above. Memory access is unaligned loads/stores
+    // over the argument slices plus padded stack tail buffers, so every
+    // slice length stays in bounds.
     pub unsafe fn erf_into(x: &[f32], out: &mut [f32]) {
         map_v!(x, out, erf_v);
     }
 
     #[target_feature(enable = "neon")]
+    // SAFETY: callable only with neon available — guaranteed by the
+    // detect-gated dispatch above. Memory access is unaligned loads/stores
+    // over the argument slices plus padded stack tail buffers, so every
+    // slice length stays in bounds.
     pub unsafe fn norm_cdf_into(x: &[f32], out: &mut [f32]) {
         map_v!(x, out, norm_cdf_v);
     }
 
     #[target_feature(enable = "neon")]
+    // SAFETY: callable only with neon available — guaranteed by the
+    // detect-gated dispatch above. Memory access is unaligned loads/stores
+    // over the argument slices plus padded stack tail buffers, so every
+    // slice length stays in bounds.
     pub unsafe fn norm_pdf_into(x: &[f32], out: &mut [f32]) {
         map_v!(x, out, norm_pdf_v);
     }
 
     #[inline]
     #[target_feature(enable = "neon")]
+    // SAFETY: register-only math; requires neon, which every caller
+    // (itself a target_feature fn reached via detect-gated dispatch) has.
     unsafe fn relu_v(mu: float32x4_t, var: float32x4_t) -> (float32x4_t, float32x4_t) {
         let var = vmaxq_f32(var, vdupq_n_f32(EPS));
         let std = vsqrtq_f32(var);
@@ -821,6 +889,10 @@ mod neon {
     }
 
     #[target_feature(enable = "neon")]
+    // SAFETY: callable only with neon available — guaranteed by the
+    // detect-gated dispatch above. Memory access is unaligned loads/stores
+    // over the argument slices plus padded stack tail buffers, so every
+    // slice length stays in bounds.
     pub unsafe fn relu_moments_into(
         mu: &[f32],
         var: &[f32],
@@ -850,6 +922,8 @@ mod neon {
 
     #[inline]
     #[target_feature(enable = "neon")]
+    // SAFETY: register-only math; requires neon, which every caller
+    // (itself a target_feature fn reached via detect-gated dispatch) has.
     unsafe fn gmax_v(
         mu1: float32x4_t,
         var1: float32x4_t,
@@ -876,6 +950,10 @@ mod neon {
     }
 
     #[target_feature(enable = "neon")]
+    // SAFETY: callable only with neon available — guaranteed by the
+    // detect-gated dispatch above. Memory access is unaligned loads/stores
+    // over the argument slices plus padded stack tail buffers, so every
+    // slice length stays in bounds.
     pub unsafe fn gaussian_max2_into(
         mu1: &[f32],
         var1: &[f32],
@@ -920,6 +998,10 @@ mod neon {
     }
 
     #[target_feature(enable = "neon")]
+    // SAFETY: callable only with neon available — guaranteed by the
+    // detect-gated dispatch above. Memory access is unaligned loads/stores
+    // over the argument slices plus padded stack tail buffers, so every
+    // slice length stays in bounds.
     pub unsafe fn dot_joint_eq12(
         xm: &[f32],
         xa: &[f32],
@@ -953,6 +1035,10 @@ mod neon {
     }
 
     #[target_feature(enable = "neon")]
+    // SAFETY: callable only with neon available — guaranteed by the
+    // detect-gated dispatch above. Memory access is unaligned loads/stores
+    // over the argument slices plus padded stack tail buffers, so every
+    // slice length stays in bounds.
     pub unsafe fn dot_first_layer(xm: &[f32], wm: &[f32], wa: &[f32]) -> (f32, f32) {
         let k = xm.len();
         let mut mu = vdupq_n_f32(0.0);
@@ -977,6 +1063,10 @@ mod neon {
     }
 
     #[target_feature(enable = "neon")]
+    // SAFETY: callable only with neon available — guaranteed by the
+    // detect-gated dispatch above. Memory access is unaligned loads/stores
+    // over the argument slices plus padded stack tail buffers, so every
+    // slice length stays in bounds.
     pub unsafe fn dot_mean(xm: &[f32], wm: &[f32]) -> f32 {
         let k = xm.len();
         let mut mu = vdupq_n_f32(0.0);

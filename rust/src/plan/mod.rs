@@ -561,8 +561,8 @@ impl CompiledPlan {
                             let parts = DisjointMut::new(mu);
                             pool.run_tasks(step.tiles.len(), &|ti| {
                                 let r = step.tiles[ti].clone();
-                                // SAFETY: disjoint element ranges.
                                 let chunk =
+                                    // SAFETY: disjoint element ranges.
                                     unsafe { parts.slice(r.start, r.end - r.start) };
                                 for v in chunk.iter_mut() {
                                     *v = v.max(0.0);

@@ -27,8 +27,10 @@ impl BufPair {
 
     fn ensure(&mut self, len: usize) {
         if self.mu.len() < len {
-            self.mu.resize(len, 0.0);
-            self.aux.resize(len, 0.0);
+            // One-time growth to the plan's high-water mark; steady-state
+            // calls take the len-check fast path above.
+            self.mu.resize(len, 0.0); // lint: allow(alloc) — cold growth
+            self.aux.resize(len, 0.0); // lint: allow(alloc) — cold growth
         }
     }
 }
@@ -58,6 +60,7 @@ impl Workspace {
         self.a.ensure(hwm);
         self.b.ensure(hwm);
         if self.scratch.len() < scratch_len {
+            // lint: allow(alloc) — cold growth path, same rationale as BufPair.
             self.scratch.resize(scratch_len, 0.0);
         }
     }

@@ -26,12 +26,15 @@ pub struct LoadedModel {
     client: Arc<xla::PjRtClient>,
 }
 
-// The PJRT CPU client/executable handles are raw pointers behind Rc in the
-// crate, but the CPU plugin itself is thread-safe for execution; the
-// coordinator gives each model to exactly one worker thread and the cache
-// is Mutex-guarded, so cross-thread *sharing* only happens through &self
-// execute calls, which the CPU PJRT client supports.
+// SAFETY: the PJRT CPU client/executable handles are raw pointers behind
+// Rc in the `xla` crate, but the CPU plugin itself is thread-safe for
+// execution; the coordinator gives each model to exactly one worker
+// thread and the cache is Mutex-guarded, so the Rc refcounts are never
+// touched concurrently — ownership moves whole between threads.
 unsafe impl Send for LoadedModel {}
+// SAFETY: cross-thread *sharing* only happens through `&self` execute
+// calls, which the CPU PJRT client explicitly supports (no interior
+// mutation of the handles outside the plugin's own synchronization).
 unsafe impl Sync for LoadedModel {}
 
 impl LoadedModel {
@@ -121,8 +124,11 @@ pub struct Engine {
     cache: Mutex<HashMap<String, Arc<LoadedModel>>>,
 }
 
-// See LoadedModel: CPU PJRT handles are usable across threads.
+// SAFETY: see `LoadedModel` — CPU PJRT handles move whole between
+// threads; the executable cache is Mutex-guarded.
 unsafe impl Send for Engine {}
+// SAFETY: shared access is `&self` execution plus the Mutex'd cache;
+// the CPU PJRT client supports concurrent execute calls.
 unsafe impl Sync for Engine {}
 
 impl Engine {

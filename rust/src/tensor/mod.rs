@@ -121,10 +121,12 @@ impl Tensor {
         match &self.data {
             Storage::Owned(v) => v,
             Storage::Mapped { region, byte_off, len } => {
-                // Alignment, bounds and endianness were validated by
-                // `Tensor::mapped`; the mapping is immutable for its
-                // lifetime and kept alive by the Arc.
                 let bytes = &region.bytes()[*byte_off..*byte_off + *len * 4];
+                // SAFETY: 4-byte alignment, bounds and little-endian layout
+                // were validated by `Tensor::mapped` before this variant
+                // could be constructed; the mapping is immutable for its
+                // whole lifetime and kept alive by the Arc'd region, so the
+                // reborrow as `&[f32]` reads initialized, stable memory.
                 unsafe {
                     std::slice::from_raw_parts(bytes.as_ptr() as *const f32, *len)
                 }

@@ -422,21 +422,37 @@ impl std::fmt::Debug for ThreadPool {
 /// Raw shareable view of a mutable `f32` buffer for gang tasks that write
 /// provably disjoint ranges — the compiled plan's tile partitions. A
 /// borrow-checker-visible `&mut` split is impossible for a closure shared
-/// by every worker, so disjointness is promised by the caller instead.
-#[derive(Clone, Copy)]
+/// by every worker, so disjointness is promised by the caller instead —
+/// and double-checked in debug builds, where [`slice`](Self::slice)
+/// panics if two claims overlap.
 pub struct DisjointMut {
     ptr: *mut f32,
     len: usize,
+    /// Debug-build ledger of handed-out `(start, len)` ranges: a wrong
+    /// tile partition becomes a loud panic instead of a silent data race.
+    #[cfg(debug_assertions)]
+    claims: Mutex<Vec<(usize, usize)>>,
 }
 
-// SAFETY: access is raw-pointer based and the `slice` contract requires
-// callers to hand out non-overlapping ranges.
+// SAFETY: the pointer comes from a live `&mut [f32]` that outlives the
+// view (its callers keep the borrow across the blocking `run_tasks`
+// call), and the `slice` contract — enforced by the debug-build claims
+// ledger — makes every concurrent access disjoint, so no aliased `&mut`
+// can be formed on another thread. `f32` is plain old data: no drop
+// glue, no interior mutability, every bit pattern valid.
 unsafe impl Send for DisjointMut {}
+// SAFETY: same argument as `Send` — `&DisjointMut` only exposes `slice`,
+// whose disjointness contract is exactly the guarantee `Sync` needs.
 unsafe impl Sync for DisjointMut {}
 
 impl DisjointMut {
     pub fn new(s: &mut [f32]) -> Self {
-        Self { ptr: s.as_mut_ptr(), len: s.len() }
+        Self {
+            ptr: s.as_mut_ptr(),
+            len: s.len(),
+            #[cfg(debug_assertions)]
+            claims: Mutex::new(Vec::new()),
+        }
     }
 
     /// View `len` floats starting at `start` as a mutable slice.
@@ -445,10 +461,24 @@ impl DisjointMut {
     /// Concurrent callers must request non-overlapping ranges, and the
     /// backing buffer must outlive every returned slice (guaranteed when
     /// used inside [`ThreadPool::run_tasks`], which blocks its caller
-    /// until all tasks finish).
+    /// until all tasks finish). Debug builds verify the disjointness
+    /// half of the contract and panic on overlap.
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [f32] {
         debug_assert!(start + len <= self.len, "disjoint slice out of bounds");
+        #[cfg(debug_assertions)]
+        {
+            let mut claims = self.claims.lock().unwrap();
+            for &(s0, l0) in claims.iter() {
+                assert!(
+                    start + len <= s0 || s0 + l0 <= start,
+                    "DisjointMut::slice overlap: [{start}, {}) vs prior claim [{s0}, {})",
+                    start + len,
+                    s0 + l0,
+                );
+            }
+            claims.push((start, len));
+        }
         std::slice::from_raw_parts_mut(self.ptr.add(start), len)
     }
 }
@@ -684,6 +714,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // timing/volume test, not a memory-safety target
     fn pool_reuses_workers_across_calls() {
         let pool = ThreadPool::new(3);
         assert_eq!(pool.size(), 3);
@@ -697,6 +728,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // timing/volume test, not a memory-safety target
     fn lazy_pool_spawns_no_threads_up_front() {
         let pool = ThreadPool::new_lazy(64);
         assert_eq!(pool.spawned_workers(), 0, "idle lazy pool owns no threads");
@@ -730,6 +762,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // timing/volume test, not a memory-safety target
     fn lazy_pool_growth_covers_outstanding_long_jobs() {
         // Long-running jobs (the server's connection readers/writers) must
         // each get their own worker: a queued job may never starve behind
@@ -903,6 +936,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // timing/volume test, not a memory-safety target
     fn concurrent_run_tasks_serialize_on_the_slot() {
         let pool = Arc::new(ThreadPool::new(2));
         let total = Arc::new(AtomicUsize::new(0));
@@ -925,6 +959,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // timing/volume test, not a memory-safety target
     fn run_tasks_coexists_with_scope_jobs() {
         let pool = Arc::new(ThreadPool::new(3));
         let scope_count = Arc::new(AtomicUsize::new(0));

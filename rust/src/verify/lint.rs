@@ -1,0 +1,814 @@
+//! Project-invariant lint pass (the library behind `cargo run --bin
+//! pfp-lint`).
+//!
+//! Source-level analysis over `rust/src` — dependency-free, line-based,
+//! with a small comment/string-aware scanner so tokens inside literals
+//! and comments never count as code. Four rule families:
+//!
+//! 1. **`SAFETY:` discipline** — every `unsafe` block, fn, or impl must
+//!    be justified by a `SAFETY:` comment on the same line or in the
+//!    contiguous comment/attribute run directly above it (a `/// #
+//!    Safety` doc section also counts, for `unsafe fn` whose contract is
+//!    the doc).
+//! 2. **hot-path allocation ban** — the plan-execute path promises zero
+//!    steady-state allocation (asserted dynamically by the counting
+//!    allocator in `tests/integration_plan_alloc.rs`; enforced
+//!    *statically* here): no `Vec::`, `Box::new`, `.to_vec(`,
+//!    `.collect(`, `format!`, `vec!`, `String::from`, `.to_string(` and
+//!    no `Instant::now` inside the named hot functions
+//!    ([`HOT_PATHS`]), except on lines annotated `// lint: allow(alloc)
+//!    — <reason>` (cold growth paths).
+//! 3. **version single-sourcing** — `SCHEMA_VERSION` /
+//!    `PROTOCOL_VERSION` are each declared exactly once, and no JSON
+//!    emission of a version key hardcodes a numeral instead of the
+//!    constant.
+//! 4. **bench-gate consistency** — every bench that emits a
+//!    `BENCH_*.json` perf artifact must be named by an explicit
+//!    `--bench` gate in `.github/workflows/ci.yml`, so a Cargo target
+//!    regression cannot silently drop an emitter from CI.
+//!
+//! Everything here is pure (`&str` in, [`Finding`]s out) so the rules
+//! are unit-testable on synthetic sources — including the required
+//! demonstrations that deleting a `SAFETY:` comment or injecting a
+//! `Vec::new()` into `plan/mod.rs::execute` fails the lint.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path relative to the repo root, forward slashes.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule family id (`safety`, `hot-path-alloc`, `version`, `bench-gate`).
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// comment/string-aware scanner
+// ---------------------------------------------------------------------------
+
+/// Carry-over lexical state between lines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Lex {
+    Code,
+    /// Inside `/* */`, with nesting depth (Rust block comments nest).
+    Block(usize),
+    /// Inside a normal `"` string that spans lines.
+    Str,
+    /// Inside a raw string, with the number of `#`s in its delimiter.
+    RawStr(usize),
+}
+
+/// Strips comments and string/char literal *contents* from source lines,
+/// preserving everything else, so token scans see only code.
+pub struct Scanner {
+    state: Lex,
+}
+
+impl Default for Scanner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scanner {
+    pub fn new() -> Self {
+        Self { state: Lex::Code }
+    }
+
+    /// Strip one line (call in file order; the scanner carries
+    /// block-comment and multiline-string state across calls).
+    pub fn strip(&mut self, line: &str) -> String {
+        let b: Vec<char> = line.chars().collect();
+        let mut out = String::with_capacity(line.len());
+        let mut i = 0;
+        while i < b.len() {
+            match self.state {
+                Lex::Block(depth) => {
+                    if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                        i += 2;
+                        self.state =
+                            if depth == 1 { Lex::Code } else { Lex::Block(depth - 1) };
+                    } else if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                        i += 2;
+                        self.state = Lex::Block(depth + 1);
+                    } else {
+                        i += 1;
+                    }
+                }
+                Lex::Str => {
+                    if b[i] == '\\' {
+                        i += 2;
+                    } else if b[i] == '"' {
+                        i += 1;
+                        self.state = Lex::Code;
+                    } else {
+                        i += 1;
+                    }
+                }
+                Lex::RawStr(hashes) => {
+                    if b[i] == '"'
+                        && (1..=hashes).all(|k| b.get(i + k) == Some(&'#'))
+                    {
+                        i += 1 + hashes;
+                        self.state = Lex::Code;
+                    } else {
+                        i += 1;
+                    }
+                }
+                Lex::Code => {
+                    let c = b[i];
+                    if c == '/' && b.get(i + 1) == Some(&'/') {
+                        break; // line comment: rest of the line is gone
+                    } else if c == '/' && b.get(i + 1) == Some(&'*') {
+                        out.push(' ');
+                        i += 2;
+                        self.state = Lex::Block(1);
+                    } else if c == '"' {
+                        out.push(' ');
+                        i += 1;
+                        self.state = Lex::Str;
+                    } else if (c == 'r' || c == 'b')
+                        && !prev_is_ident(&b, i)
+                        && raw_hashes(&b, i).is_some()
+                    {
+                        let hashes = raw_hashes(&b, i).unwrap();
+                        out.push(' ');
+                        // skip past `r##"` (or `br#"` etc.)
+                        i += raw_prefix_len(&b, i) + hashes + 1;
+                        self.state = Lex::RawStr(hashes);
+                    } else if c == 'b' && b.get(i + 1) == Some(&'"') && !prev_is_ident(&b, i)
+                    {
+                        out.push(' ');
+                        i += 2;
+                        self.state = Lex::Str;
+                    } else if c == '\'' {
+                        i = skip_char_or_lifetime(&b, i, &mut out);
+                    } else {
+                        out.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+fn prev_is_ident(b: &[char], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_')
+}
+
+/// If `b[i..]` starts a raw string (`r"`, `r#"`, `br##"` …), the number
+/// of `#`s in its delimiter.
+fn raw_hashes(b: &[char], i: usize) -> Option<usize> {
+    let mut j = i;
+    if b.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if b.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while b.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    (b.get(j) == Some(&'"')).then_some(hashes)
+}
+
+fn raw_prefix_len(b: &[char], i: usize) -> usize {
+    if b.get(i) == Some(&'b') {
+        2 // `br`
+    } else {
+        1 // `r`
+    }
+}
+
+/// Handles `'x'`, `'\n'`, `'\u{…}'` char literals and `'lifetime`s.
+fn skip_char_or_lifetime(b: &[char], i: usize, out: &mut String) -> usize {
+    if b.get(i + 1) == Some(&'\\') {
+        // escaped char literal: scan to the closing quote
+        let mut j = i + 2;
+        while j < b.len() && b[j] != '\'' {
+            j += 1;
+        }
+        out.push(' ');
+        j + 1
+    } else if b.get(i + 2) == Some(&'\'') {
+        // simple char literal (including '"' and '{')
+        out.push(' ');
+        i + 3
+    } else {
+        // a lifetime: drop the quote, keep scanning the identifier
+        i + 1
+    }
+}
+
+/// Does `hay` contain `needle` as a standalone word (not an identifier
+/// substring)?
+fn contains_word(hay: &str, needle: &str) -> bool {
+    find_word(hay, needle).is_some()
+}
+
+fn find_word(hay: &str, needle: &str) -> Option<usize> {
+    let bytes = hay.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = hay[from..].find(needle) {
+        let start = from + pos;
+        let end = start + needle.len();
+        let pre_ok = start == 0 || {
+            let c = bytes[start - 1] as char;
+            !c.is_alphanumeric() && c != '_'
+        };
+        let post_ok = end >= bytes.len() || {
+            let c = bytes[end] as char;
+            !c.is_alphanumeric() && c != '_'
+        };
+        if pre_ok && post_ok {
+            return Some(start);
+        }
+        from = end;
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// rule 1: SAFETY discipline
+// ---------------------------------------------------------------------------
+
+/// Is `line` (raw) part of a comment/attribute run that may sit between
+/// a `SAFETY:` justification and its `unsafe` site?
+fn is_annotation_line(line: &str) -> bool {
+    let t = line.trim_start();
+    t.is_empty()
+        || t.starts_with("//")
+        || t.starts_with("#[")
+        || t.starts_with("#![")
+        || t.starts_with("*") // inner lines of `/* … */`
+        || t == ")]"
+        || t == "))]"
+}
+
+/// Every `unsafe` token in code must carry a `SAFETY:` comment on the
+/// same line or in the contiguous annotation run directly above
+/// (`/// # Safety` doc sections count).
+pub fn lint_safety(relpath: &str, content: &str) -> Vec<Finding> {
+    let raw: Vec<&str> = content.lines().collect();
+    let mut scanner = Scanner::new();
+    let stripped: Vec<String> = raw.iter().map(|l| scanner.strip(l)).collect();
+    let mut findings = Vec::new();
+    for (idx, code) in stripped.iter().enumerate() {
+        if !contains_word(code, "unsafe") {
+            continue;
+        }
+        if raw[idx].contains("SAFETY:") {
+            continue;
+        }
+        let mut justified = false;
+        let mut k = idx;
+        while k > 0 && is_annotation_line(raw[k - 1]) {
+            k -= 1;
+            if raw[k].contains("SAFETY:") || raw[k].contains("# Safety") {
+                justified = true;
+                break;
+            }
+        }
+        if !justified {
+            findings.push(Finding {
+                file: relpath.to_string(),
+                line: idx + 1,
+                rule: "safety",
+                message: "`unsafe` without a `SAFETY:` comment (same line or the \
+                          comment/attribute block directly above)"
+                    .to_string(),
+            });
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// rule 2: hot-path allocation ban
+// ---------------------------------------------------------------------------
+
+/// The plan-execute hot path: (file suffix, steady-state functions that
+/// must not allocate or read the clock). Wrappers that legitimately
+/// allocate (`pfp_relu_into`, scope-path dispatch, plan *compilation*)
+/// are deliberately absent — this list is the contract for what runs
+/// per-request after warmup.
+pub const HOT_PATHS: &[(&str, &[&str])] = &[
+    ("plan/mod.rs", &["execute"]),
+    ("plan/workspace.rs", &["ensure"]),
+    ("ops/dense.rs", &["dense_rows_into", "dense_kernel_tiled_into"]),
+    ("ops/conv.rs", &["im2col_rows_into", "col2im_planes_into", "conv_kernel_tiled_into"]),
+    ("ops/relu.rs", &["pfp_relu_rows_into", "pfp_relu_tiled_into"]),
+    (
+        "ops/maxpool.rs",
+        &[
+            "pfp_maxpool2_planes_into",
+            "pfp_maxpool2_tiled_into",
+            "det_maxpool2_planes_into",
+            "det_maxpool2_tiled_into",
+        ],
+    ),
+    ("util/threadpool.rs", &["run_tasks", "worker_loop"]),
+];
+
+/// Tokens that allocate (or read the clock) and are banned from the
+/// steady-state execute path.
+const BANNED: &[&str] = &[
+    "Vec::",
+    "Box::new",
+    ".to_vec(",
+    ".collect(",
+    ".collect::<",
+    ".resize(",
+    "format!",
+    "vec!",
+    "String::from",
+    ".to_string(",
+    "Instant::now",
+];
+
+/// The escape hatch for audited cold paths inside a hot function.
+pub const ALLOW_ALLOC: &str = "lint: allow(alloc)";
+
+/// Find the (start, end) line ranges (0-based, inclusive) of every `fn
+/// <name>` body in already-stripped lines.
+fn fn_body_ranges(stripped: &[String], name: &str) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    let mut i = 0;
+    while i < stripped.len() {
+        let line = &stripped[i];
+        let is_decl = find_word(line, "fn")
+            .map(|pos| {
+                let after = line[pos + 2..].trim_start();
+                after.starts_with(name)
+                    && after[name.len()..]
+                        .chars()
+                        .next()
+                        .map(|c| c == '(' || c == '<' || c.is_whitespace())
+                        .unwrap_or(false)
+            })
+            .unwrap_or(false);
+        if !is_decl {
+            i += 1;
+            continue;
+        }
+        // walk forward to the opening brace, then to its close
+        let mut depth = 0usize;
+        let mut opened = false;
+        let start = i;
+        let mut j = i;
+        'outer: while j < stripped.len() {
+            for c in stripped[j].chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        depth = depth.saturating_sub(1);
+                        if opened && depth == 0 {
+                            break 'outer;
+                        }
+                    }
+                    ';' if !opened => break 'outer, // trait method decl, no body
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        if opened {
+            ranges.push((start, j.min(stripped.len() - 1)));
+        }
+        i = j + 1;
+    }
+    ranges
+}
+
+/// Enforce the allocation/clock ban inside the configured hot functions
+/// of `relpath` (no-op for files not in [`HOT_PATHS`]).
+pub fn lint_hot_path(relpath: &str, content: &str) -> Vec<Finding> {
+    let Some((_, fns)) =
+        HOT_PATHS.iter().find(|(suffix, _)| relpath.ends_with(suffix))
+    else {
+        return Vec::new();
+    };
+    let raw: Vec<&str> = content.lines().collect();
+    let mut scanner = Scanner::new();
+    let stripped: Vec<String> = raw.iter().map(|l| scanner.strip(l)).collect();
+    let mut findings = Vec::new();
+    for &fn_name in fns.iter() {
+        for (start, end) in fn_body_ranges(&stripped, fn_name) {
+            for idx in start..=end {
+                let escaped = raw[idx].contains(ALLOW_ALLOC)
+                    || (idx > 0 && raw[idx - 1].contains(ALLOW_ALLOC));
+                if escaped {
+                    continue;
+                }
+                for tok in BANNED {
+                    if stripped[idx].contains(tok) {
+                        findings.push(Finding {
+                            file: relpath.to_string(),
+                            line: idx + 1,
+                            rule: "hot-path-alloc",
+                            message: format!(
+                                "`{tok}` in hot function `{fn_name}` (zero \
+                                 steady-state allocation contract); annotate an \
+                                 audited cold path with `// {ALLOW_ALLOC} — reason`"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// rule 3: version single-sourcing
+// ---------------------------------------------------------------------------
+
+/// After `Json::Num(`, is the argument a bare numeric literal (a
+/// hardcoded version) rather than an expression over the constant?
+fn num_call_with_literal(code: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = code[from..].find("Num(") {
+        let rest = code[from + pos + 4..].trim_start();
+        if rest.chars().next().map(|c| c.is_ascii_digit()).unwrap_or(false) {
+            return true;
+        }
+        from += pos + 4;
+    }
+    false
+}
+
+/// Versioned-artifact consistency over the whole tree: each version
+/// constant declared exactly once; version keys always emitted through
+/// their constant, never a numeral.
+pub fn lint_versions(files: &[(String, String)]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for (const_name, key) in
+        [("SCHEMA_VERSION", "\"__version__\""), ("PROTOCOL_VERSION", "\"v\"")]
+    {
+        let mut decls: Vec<(String, usize)> = Vec::new();
+        for (relpath, content) in files {
+            let mut scanner = Scanner::new();
+            for (idx, raw) in content.lines().enumerate() {
+                let code = scanner.strip(raw);
+                if contains_word(&code, "const")
+                    && contains_word(&code, const_name)
+                    && code.contains('=')
+                {
+                    decls.push((relpath.clone(), idx + 1));
+                }
+                // a line that writes the version key with a hardcoded
+                // numeral instead of the constant
+                if raw.contains(key)
+                    && num_call_with_literal(&code)
+                    && !raw.contains(const_name)
+                    && !raw.contains("lint: allow(version)")
+                {
+                    findings.push(Finding {
+                        file: relpath.clone(),
+                        line: idx + 1,
+                        rule: "version",
+                        message: format!(
+                            "{key} emitted with a numeric literal; use {const_name}"
+                        ),
+                    });
+                }
+            }
+        }
+        if decls.len() != 1 {
+            let at: Vec<String> =
+                decls.iter().map(|(f, l)| format!("{f}:{l}")).collect();
+            findings.push(Finding {
+                file: decls
+                    .first()
+                    .map(|(f, _)| f.clone())
+                    .unwrap_or_else(|| "rust/src".to_string()),
+                line: decls.first().map(|(_, l)| *l).unwrap_or(0),
+                rule: "version",
+                message: format!(
+                    "{const_name} must be declared exactly once (found {}: {at:?})",
+                    decls.len()
+                ),
+            });
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// rule 4: bench-gate consistency
+// ---------------------------------------------------------------------------
+
+/// Every bench emitting `BENCH_*.json` must be named via `--bench
+/// <stem>` somewhere in the CI workflow.
+pub fn lint_bench_gate(bench_files: &[(String, String)], ci_yaml: &str) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for (relpath, content) in bench_files {
+        let stem = Path::new(relpath)
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or(relpath);
+        let mut emits_at = None;
+        for (idx, raw) in content.lines().enumerate() {
+            if let Some(pos) = raw.find("BENCH_") {
+                if raw[pos..].contains(".json") {
+                    emits_at = Some(idx + 1);
+                    break;
+                }
+            }
+        }
+        if let Some(line) = emits_at {
+            let gate = format!("--bench {stem}");
+            if !ci_yaml.contains(&gate) {
+                findings.push(Finding {
+                    file: relpath.clone(),
+                    line,
+                    rule: "bench-gate",
+                    message: format!(
+                        "bench `{stem}` emits a BENCH_*.json perf artifact but is \
+                         not named by `{gate}` in .github/workflows/ci.yml"
+                    ),
+                });
+            }
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// tree driver
+// ---------------------------------------------------------------------------
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> =
+        fs::read_dir(dir)?.collect::<std::io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.path());
+    for entry in entries {
+        let path = entry.path();
+        if path.is_dir() {
+            walk_rs(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn rel(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+/// Run every rule over the repository at `root`. Returns all findings
+/// (empty = the tree passes).
+pub fn lint_tree(root: &Path) -> std::io::Result<Vec<Finding>> {
+    let src = root.join("rust/src");
+    let mut paths = Vec::new();
+    walk_rs(&src, &mut paths)?;
+    let files: Vec<(String, String)> = paths
+        .iter()
+        .map(|p| Ok((rel(root, p), fs::read_to_string(p)?)))
+        .collect::<std::io::Result<_>>()?;
+
+    let mut findings = Vec::new();
+    for (relpath, content) in &files {
+        findings.extend(lint_safety(relpath, content));
+        findings.extend(lint_hot_path(relpath, content));
+    }
+    findings.extend(lint_versions(&files));
+
+    let bench_dir = root.join("rust/benches");
+    if bench_dir.is_dir() {
+        let mut bench_paths = Vec::new();
+        walk_rs(&bench_dir, &mut bench_paths)?;
+        let bench_files: Vec<(String, String)> = bench_paths
+            .iter()
+            .map(|p| Ok((rel(root, p), fs::read_to_string(p)?)))
+            .collect::<std::io::Result<_>>()?;
+        let ci = fs::read_to_string(root.join(".github/workflows/ci.yml"))
+            .unwrap_or_default();
+        findings.extend(lint_bench_gate(&bench_files, &ci));
+    }
+    Ok(findings)
+}
+
+/// The repo root, resolved from the crate manifest dir (`rust/`).
+pub fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives in <root>/rust")
+        .to_path_buf()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strip_all(src: &str) -> Vec<String> {
+        let mut sc = Scanner::new();
+        src.lines().map(|l| sc.strip(l)).collect()
+    }
+
+    #[test]
+    fn scanner_strips_strings_comments_and_char_literals() {
+        let s = strip_all(
+            "let a = \"unsafe in a string\"; // unsafe in a comment\n\
+             let q = '\"'; let l: &'static str = x; /* unsafe\n\
+             still comment */ let tail = 1;\n\
+             let r = r#\"raw unsafe\"#;",
+        );
+        assert!(!s[0].contains("unsafe"), "{:?}", s[0]);
+        assert!(s[0].contains("let a ="));
+        assert!(!s[1].contains("unsafe"), "{:?}", s[1]);
+        assert!(s[1].contains("static"), "lifetime must not open a char literal");
+        assert!(s[2].contains("let tail"), "block comment must close");
+        assert!(!s[2].contains("still"));
+        assert!(!s[3].contains("unsafe"), "{:?}", s[3]);
+    }
+
+    #[test]
+    fn safety_rule_accepts_justified_sites() {
+        let src = "\
+// SAFETY: the buffer outlives the call.
+let x = unsafe { deref(p) };
+
+/// # Safety
+/// Caller guarantees `p` is valid.
+#[inline]
+pub unsafe fn deref(p: *const u8) -> u8 { *p }
+
+let y = unsafe { deref(p) }; // SAFETY: p checked above
+";
+        assert_eq!(lint_safety("a.rs", src), vec![]);
+    }
+
+    #[test]
+    fn removing_a_safety_comment_fails_the_lint() {
+        let with = "// SAFETY: justified.\nlet x = unsafe { f() };\n";
+        assert!(lint_safety("a.rs", with).is_empty());
+        let without = "// plain comment.\nlet x = unsafe { f() };\n";
+        let findings = lint_safety("a.rs", without);
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].rule, "safety");
+        assert_eq!(findings[0].line, 2);
+    }
+
+    #[test]
+    fn unsafe_in_strings_and_comments_is_ignored() {
+        let src = "let s = \"unsafe\"; // unsafe unsafe\n/* unsafe */ let t = 1;\n";
+        assert_eq!(lint_safety("a.rs", src), vec![]);
+    }
+
+    #[test]
+    fn hot_path_rule_flags_alloc_in_named_fn_only() {
+        let src = "\
+pub fn execute(x: &[f32]) -> usize {
+    let n = x.len();
+    n
+}
+
+pub fn compile() -> Vec<f32> {
+    Vec::new()
+}
+";
+        assert_eq!(lint_hot_path("rust/src/plan/mod.rs", src), vec![]);
+        let bad = src.replace("let n = x.len();", "let n = Vec::new().len();");
+        let findings = lint_hot_path("rust/src/plan/mod.rs", &bad);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].rule, "hot-path-alloc");
+        // not a hot file ⇒ no findings at all
+        assert_eq!(lint_hot_path("rust/src/tuner/mod.rs", &bad), vec![]);
+    }
+
+    #[test]
+    fn allow_alloc_escape_exempts_audited_lines() {
+        let src = "\
+pub fn execute(x: &mut Vec<f32>) {
+    // lint: allow(alloc) — cold growth path, audited
+    x.resize(4, 0.0);
+}
+";
+        assert_eq!(lint_hot_path("rust/src/plan/mod.rs", src), vec![]);
+        let unescaped = src.replace("// lint: allow(alloc) — cold growth path, audited", "");
+        assert_eq!(lint_hot_path("rust/src/plan/mod.rs", &unescaped).len(), 1);
+    }
+
+    #[test]
+    fn instant_now_is_banned_on_the_hot_path() {
+        let src = "pub fn run_tasks(&self) {\n    let t = Instant::now();\n}\n";
+        let findings = lint_hot_path("rust/src/util/threadpool.rs", src);
+        assert_eq!(findings.len(), 1);
+        assert!(findings[0].message.contains("Instant::now"));
+    }
+
+    #[test]
+    fn version_rule_requires_single_declaration_and_constant_emission() {
+        let dup = vec![
+            ("a.rs".to_string(), "pub const SCHEMA_VERSION: u64 = 3;\n".to_string()),
+            ("b.rs".to_string(), "pub const SCHEMA_VERSION: u64 = 4;\npub const PROTOCOL_VERSION: u64 = 1;\n".to_string()),
+        ];
+        let findings = lint_versions(&dup);
+        assert!(
+            findings.iter().any(|f| f.message.contains("exactly once")),
+            "{findings:?}"
+        );
+
+        let hardcoded = vec![(
+            "records.rs".to_string(),
+            "pub const SCHEMA_VERSION: u64 = 3;\npub const PROTOCOL_VERSION: u64 = 1;\n\
+             obj.insert(\"__version__\".into(), Json::Num(3.0));\n"
+                .to_string(),
+        )];
+        let findings = lint_versions(&hardcoded);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert!(findings[0].message.contains("SCHEMA_VERSION"));
+
+        let through_const = vec![(
+            "records.rs".to_string(),
+            "pub const SCHEMA_VERSION: u64 = 3;\npub const PROTOCOL_VERSION: u64 = 1;\n\
+             obj.insert(\"__version__\".into(), Json::Num(SCHEMA_VERSION as f64));\n"
+                .to_string(),
+        )];
+        assert_eq!(lint_versions(&through_const), vec![]);
+    }
+
+    #[test]
+    fn bench_gate_rule_catches_unlisted_emitters() {
+        let benches = vec![(
+            "rust/benches/new_bench.rs".to_string(),
+            "fs::write(\"BENCH_new.json\", line)?;\n".to_string(),
+        )];
+        let ci_without = "- run: cargo bench --no-run";
+        let findings = lint_bench_gate(&benches, ci_without);
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].rule, "bench-gate");
+        let ci_with = "- run: cargo bench --no-run --bench new_bench";
+        assert_eq!(lint_bench_gate(&benches, ci_with), vec![]);
+    }
+
+    // ---- the acceptance-criteria demonstrations against the real tree ----
+
+    #[test]
+    fn real_tree_passes_every_rule() {
+        let findings = lint_tree(&repo_root()).expect("tree must be readable");
+        assert!(
+            findings.is_empty(),
+            "pfp-lint found {} violation(s):\n{}",
+            findings.len(),
+            findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+
+    #[test]
+    fn injecting_vec_new_into_plan_execute_fails() {
+        let path = repo_root().join("rust/src/plan/mod.rs");
+        let content = fs::read_to_string(path).expect("plan/mod.rs must exist");
+        assert_eq!(
+            lint_hot_path("rust/src/plan/mod.rs", &content),
+            vec![],
+            "the real execute path must be clean"
+        );
+        // `ws.ensure(` is the unique call inside `execute`'s body
+        assert_eq!(content.matches("ws.ensure(").count(), 1);
+        let sabotaged = content.replace(
+            "ws.ensure(",
+            "let _leak: Vec<f32> = Vec::new();\n        ws.ensure(",
+        );
+        let findings = lint_hot_path("rust/src/plan/mod.rs", &sabotaged);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert!(findings[0].message.contains("Vec::"));
+    }
+
+    #[test]
+    fn deleting_any_real_safety_comment_fails() {
+        let path = repo_root().join("rust/src/util/threadpool.rs");
+        let content = fs::read_to_string(path).expect("threadpool.rs must exist");
+        assert_eq!(lint_safety("rust/src/util/threadpool.rs", &content), vec![]);
+        // neuter every SAFETY justification: each unsafe site must now trip
+        let sabotaged = content.replace("SAFETY:", "NOTE:");
+        assert_ne!(content, sabotaged, "threadpool.rs must contain SAFETY comments");
+        let findings = lint_safety("rust/src/util/threadpool.rs", &sabotaged);
+        assert!(!findings.is_empty());
+    }
+}

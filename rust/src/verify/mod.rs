@@ -1,0 +1,39 @@
+//! # verify — static analysis for the unsafe runtime
+//!
+//! The serving stack rests on hand-rolled concurrency (the
+//! [`crate::util::ThreadPool`] gang broadcast, lazy worker growth, the
+//! registry's refcount-drained hot swap) and ~74 `unsafe` sites across the
+//! SIMD kernels, `DisjointMut`, and the mmap'd weight views. This module
+//! is the layer that *checks* those invariants instead of asserting them
+//! in prose:
+//!
+//! * [`checker`] — a dependency-free explicit-state model checker (a
+//!   mini-loom): virtual threads step through extracted state machines of
+//!   the concurrency protocols while a DFS with memoization exhaustively
+//!   enumerates every interleaving, detecting assertion violations and
+//!   lost-wakeup deadlocks, and reporting a replayable schedule trace.
+//! * [`shim`] — `MockMutex` / `MockCondvar` / `MockAtomic`: cloneable,
+//!   hashable stand-ins for the `std::sync` primitives; condvar wakeups
+//!   are granted to the threads waiting at notify time (notify_one's
+//!   "which waiter" choice is left to the scheduler search), so
+//!   notify/wait nondeterminism is part of the explored state space.
+//! * [`models`] — the protocol models: `run_tasks` broadcast
+//!   publish/claim/retire, lazy-pool grow vs. shutdown, and registry swap
+//!   refcount-drain, each with seeded mutants proving the checker can
+//!   fail (not just pass).
+//! * [`lint`] — the project-invariant lint pass behind the `pfp-lint`
+//!   binary: `SAFETY:` comments on every unsafe site, the hot-path
+//!   allocation ban, schema-version single-sourcing, and the
+//!   bench-emitter/CI-gate consistency rule.
+//!
+//! Fast configurations of every model run under plain `cargo test`
+//! (tier-1). The `model_check` cargo feature additionally compiles
+//! `rust/tests/model_check.rs`, which explores the full-size
+//! configurations and the mutant corpus (`make model-check`).
+
+pub mod checker;
+pub mod lint;
+pub mod models;
+pub mod shim;
+
+pub use checker::{Checker, Model, Report, Violation};

@@ -1,0 +1,521 @@
+//! Model of `ThreadPool::run_tasks` — the gang-broadcast primitive
+//! (`util/threadpool.rs`).
+//!
+//! The real protocol publishes a borrowed closure by raw pointer in a
+//! one-deep broadcast slot, lets workers and the calling thread claim
+//! task indices under the pool mutex, and blocks the caller until
+//! `next == n_tasks && active == 0` before retiring the slot. Three
+//! properties keep that sound, and this model checks all of them across
+//! every interleaving:
+//!
+//! 1. **no double-claim** — each task index is claimed exactly once
+//!    (the disjoint-tile guarantee `DisjointMut` relies on);
+//! 2. **no use-after-retire** — no worker dereferences the published
+//!    closure after its `run_tasks` frame retires the gang (the
+//!    lifetime-transmute's entire justification);
+//! 3. **no lost wakeup** — the leader's drain wait and a second leader's
+//!    slot wait are always eventually woken (checker deadlock detection).
+//!
+//! Step granularity mirrors the real lock structure: the leader's
+//! claim-loop iteration (including the `active -= 1` re-entry) happens
+//! under a single mutex acquisition in the source, so it is a single
+//! atomic step here; task execution happens outside the lock, so it is
+//! its own step. The publish step folds `drop(st); work_cv.notify_all()`
+//! into one action: the only thread that could interleave in that window
+//! either sees claimable work (and claims instead of parking) or parks
+//! and is in the wait set when the (guaranteed-coming) notify arrives —
+//! no behavior is lost, see the argument in `verify::shim`.
+//!
+//! The [`Broadcast::lost_notify_mutant`] flag drops the last-finisher
+//! `sync_cv.notify_all()` on the worker path — the seeded bug proving
+//! the checker can fail: the leader then drain-waits forever and the
+//! checker reports the deadlock with its schedule.
+
+use crate::verify::checker::Model;
+use crate::verify::shim::{MockCondvar, MockMutex};
+
+/// What the body of task 0 does: nothing extra, or a *nested*
+/// `run_tasks` call — the re-entry case the pool's `IN_GANG`
+/// thread-local exists for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Nested {
+    /// Tasks are plain computations (the default model).
+    None,
+    /// Task 0 re-enters `run_tasks`; the `IN_GANG` guard makes the
+    /// nested dispatch run inline on the calling thread (production).
+    Inline,
+    /// Regression mutant: the `IN_GANG` guard is removed, so the nested
+    /// call tries to publish into the (occupied) broadcast slot and
+    /// waits for it — while its own claim keeps `active > 0` forever.
+    /// The checker must find the self-deadlock.
+    Blocking,
+}
+
+/// Model configuration. Thread ids: `0..leaders` run `run_tasks` once
+/// each; `leaders..leaders + workers` run `worker_loop` forever.
+#[derive(Debug, Clone, Copy)]
+pub struct Broadcast {
+    pub leaders: usize,
+    pub workers: usize,
+    pub n_tasks: usize,
+    /// Seeded bug: the last-claim finisher on the worker path skips
+    /// `sync_cv.notify_all()`, losing the leader's drain wakeup.
+    pub lost_notify_mutant: bool,
+    /// Behavior of task 0's body (nested-re-entry corpus).
+    pub nested: Nested,
+}
+
+impl Broadcast {
+    /// The production shape: one caller gang-dispatching over the pool.
+    pub fn leader_and_workers(workers: usize, n_tasks: usize) -> Self {
+        Self { leaders: 1, workers, n_tasks, lost_notify_mutant: false, nested: Nested::None }
+    }
+
+    /// Two concurrent `run_tasks` callers serializing on the slot.
+    pub fn competing_leaders(n_tasks: usize) -> Self {
+        Self { leaders: 2, workers: 1, n_tasks, lost_notify_mutant: false, nested: Nested::None }
+    }
+
+    pub fn with_lost_notify(mut self) -> Self {
+        self.lost_notify_mutant = true;
+        self
+    }
+
+    pub fn with_nested(mut self, nested: Nested) -> Self {
+        self.nested = nested;
+        self
+    }
+
+    fn is_leader(&self, tid: usize) -> bool {
+        tid < self.leaders
+    }
+}
+
+/// Per-thread program counter.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+enum Pc {
+    // leader (run_tasks)
+    LAcquire,   // lock; publish if slot free, else sync-wait
+    LSlotWait,  // parked on sync_cv waiting for the slot
+    LClaim,     // lock held path: claim next / drain-wait / retire
+    LDrainWait, // parked on sync_cv waiting for active == 0
+    LExec,      // running its claimed task outside the lock
+    LDec,       // re-lock; active -= 1; next loop iteration (same guard)
+    LNotify,    // retired: outside the lock, sync_cv.notify_all()
+    LDone,
+    // worker (worker_loop)
+    WClaim,  // lock; claim next gang index or park on work_cv
+    WExec,   // dereferencing the published closure outside the lock
+    WDec,    // re-lock; active -= 1; last-finisher notify; next iteration
+    WParked, // parked on work_cv
+    // nested-re-entry mutant (`Nested::Blocking`): the task body calls
+    // run_tasks without the IN_GANG inline guard
+    WNestedAcquire, // lock; slot occupied (its own gang) → sync-wait
+    WNestedWait,    // parked on sync_cv inside the task body
+}
+
+/// Published gang slot: `(owner leader, next unclaimed, active count)`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+struct Gang {
+    owner: usize,
+    next: usize,
+    active: usize,
+}
+
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct State {
+    m: MockMutex,
+    work_cv: MockCondvar,
+    sync_cv: MockCondvar,
+    gang: Option<Gang>,
+    /// Is leader `l`'s closure still alive (between publish and retire)?
+    alive: Vec<bool>,
+    /// `executed[l][i]`: times task `i` of leader `l`'s gang ran.
+    executed: Vec<Vec<u8>>,
+    pc: Vec<Pc>,
+    /// Claimed task index (valid in `LExec`/`WExec`).
+    local_idx: Vec<usize>,
+    /// Gang owner the claim came from (valid in `WExec`).
+    local_gang: Vec<usize>,
+    /// Nested inline dispatches completed (one per task-0 execution
+    /// when [`Nested::Inline`]).
+    nested_runs: u8,
+}
+
+impl Broadcast {
+    /// Claim-or-park body shared by the worker's lock-holding steps.
+    /// Runs with `m` held; releases it on every path. Mirrors the top of
+    /// `worker_loop`'s loop (queue handling elided: this model's pool
+    /// carries gang work only — `lazygrow` models the queue).
+    fn worker_claim_or_park(&self, s: &mut State, tid: usize) {
+        match s.gang {
+            Some(ref mut g) if g.next < self.n_tasks => {
+                let idx = g.next;
+                g.next += 1;
+                g.active += 1;
+                let owner = g.owner;
+                s.local_idx[tid] = idx;
+                s.local_gang[tid] = owner;
+                s.m.release(tid);
+                s.pc[tid] = Pc::WExec;
+            }
+            _ => {
+                // no claimable gang work, empty queue, no shutdown:
+                // park on work_cv (releases the mutex atomically)
+                s.work_cv.wait(&mut s.m, tid);
+                s.pc[tid] = Pc::WParked;
+            }
+        }
+    }
+
+    /// Leader claim-loop body. Runs with `m` held; releases on every
+    /// path. One iteration of the `loop` in `run_tasks`, which the
+    /// source executes under a single `MutexGuard`.
+    fn leader_claim_loop(&self, s: &mut State, tid: usize) -> Result<(), String> {
+        let g = match s.gang {
+            Some(ref mut g) if g.owner == tid => g,
+            ref other => {
+                return Err(format!(
+                    "gang retired under its leader {tid}: slot = {other:?}"
+                ))
+            }
+        };
+        if g.next < self.n_tasks {
+            let idx = g.next;
+            g.next += 1;
+            g.active += 1;
+            s.local_idx[tid] = idx;
+            s.m.release(tid);
+            s.pc[tid] = Pc::LExec;
+        } else if g.active > 0 {
+            s.sync_cv.wait(&mut s.m, tid);
+            s.pc[tid] = Pc::LDrainWait;
+        } else {
+            // retire: the frame is about to return, the closure dies
+            s.gang = None;
+            s.alive[tid] = false;
+            s.m.release(tid);
+            s.pc[tid] = Pc::LNotify;
+        }
+        Ok(())
+    }
+}
+
+impl Model for Broadcast {
+    type State = State;
+
+    fn init(&self) -> State {
+        let n = self.leaders + self.workers;
+        let pc = (0..n)
+            .map(|t| if self.is_leader(t) { Pc::LAcquire } else { Pc::WClaim })
+            .collect();
+        State {
+            m: MockMutex::default(),
+            work_cv: MockCondvar::default(),
+            sync_cv: MockCondvar::default(),
+            gang: None,
+            alive: vec![false; self.leaders],
+            executed: vec![vec![0; self.n_tasks]; self.leaders],
+            pc,
+            local_idx: vec![0; n],
+            local_gang: vec![0; n],
+            nested_runs: 0,
+        }
+    }
+
+    fn threads(&self) -> usize {
+        self.leaders + self.workers
+    }
+
+    fn enabled(&self, s: &State, tid: usize) -> bool {
+        match s.pc[tid] {
+            Pc::LAcquire
+            | Pc::LClaim
+            | Pc::LDec
+            | Pc::WClaim
+            | Pc::WDec
+            | Pc::WNestedAcquire => s.m.is_free(),
+            Pc::LSlotWait | Pc::LDrainWait | Pc::WNestedWait => s.sync_cv.can_wake(tid),
+            Pc::WParked => s.work_cv.can_wake(tid),
+            Pc::LExec | Pc::WExec | Pc::LNotify => true,
+            Pc::LDone => false,
+        }
+    }
+
+    fn done(&self, s: &State, tid: usize) -> bool {
+        if self.is_leader(tid) {
+            s.pc[tid] == Pc::LDone
+        } else {
+            // Workers run forever in reality; in this single-burst model
+            // a worker is "done" once it is parked and no gang work can
+            // ever arrive again (every leader has returned).
+            s.pc[tid] == Pc::WParked
+                && s.gang.is_none()
+                && (0..self.leaders).all(|l| s.pc[l] == Pc::LDone)
+        }
+    }
+
+    fn step(&self, s: &mut State, tid: usize) -> Result<(), String> {
+        match s.pc[tid] {
+            Pc::LAcquire => {
+                s.m.acquire(tid);
+                if s.gang.is_some() {
+                    // slot occupied by another leader: wait for retire
+                    s.sync_cv.wait(&mut s.m, tid);
+                    s.pc[tid] = Pc::LSlotWait;
+                } else {
+                    // publish + drop(st) + work_cv.notify_all() (see the
+                    // module docs for why folding the notify is sound)
+                    s.gang = Some(Gang { owner: tid, next: 0, active: 0 });
+                    s.alive[tid] = true;
+                    s.m.release(tid);
+                    s.work_cv.notify_all();
+                    s.pc[tid] = Pc::LClaim;
+                }
+                Ok(())
+            }
+            Pc::LSlotWait => {
+                s.sync_cv.wake(tid);
+                s.pc[tid] = Pc::LAcquire;
+                Ok(())
+            }
+            Pc::LClaim => {
+                s.m.acquire(tid);
+                self.leader_claim_loop(s, tid)
+            }
+            Pc::LDrainWait => {
+                s.sync_cv.wake(tid);
+                // woken: re-acquires the guard and re-runs the loop body
+                s.pc[tid] = Pc::LClaim;
+                Ok(())
+            }
+            Pc::LExec => {
+                // the leader calls `task(idx)` through the original
+                // borrow; record execution for the exactly-once check
+                let idx = s.local_idx[tid];
+                s.executed[tid][idx] += 1;
+                if s.executed[tid][idx] > 1 {
+                    return Err(format!(
+                        "double-claim: leader {tid} ran its task {idx} twice"
+                    ));
+                }
+                match self.nested {
+                    // the leader set IN_GANG before its claim loop, so a
+                    // nested run_tasks inside the task body runs inline
+                    Nested::Inline if idx == 0 => s.nested_runs += 1,
+                    // mutant: without the guard the task body re-enters
+                    // run_tasks from scratch — and slot-waits on a gang
+                    // its own unfinished claim keeps alive
+                    Nested::Blocking if idx == 0 => {
+                        s.pc[tid] = Pc::LAcquire;
+                        return Ok(());
+                    }
+                    _ => {}
+                }
+                s.pc[tid] = Pc::LDec;
+                Ok(())
+            }
+            Pc::LDec => {
+                // `st = lock(); g.active -= 1;` and the next loop
+                // iteration run under the same guard in the source, so
+                // they are one atomic step here.
+                s.m.acquire(tid);
+                match s.gang {
+                    Some(ref mut g) if g.owner == tid => g.active -= 1,
+                    ref other => {
+                        return Err(format!(
+                            "gang retired under its leader {tid}: slot = {other:?}"
+                        ))
+                    }
+                }
+                self.leader_claim_loop(s, tid)
+            }
+            Pc::LNotify => {
+                s.sync_cv.notify_all();
+                s.pc[tid] = Pc::LDone;
+                Ok(())
+            }
+            Pc::LDone => Err("stepped a done leader".into()),
+            Pc::WClaim => {
+                s.m.acquire(tid);
+                self.worker_claim_or_park(s, tid);
+                Ok(())
+            }
+            Pc::WExec => {
+                let owner = s.local_gang[tid];
+                if !s.alive[owner] {
+                    return Err(format!(
+                        "use-after-retire: worker {tid} dereferenced leader \
+                         {owner}'s closure after its gang retired"
+                    ));
+                }
+                let idx = s.local_idx[tid];
+                s.executed[owner][idx] += 1;
+                if s.executed[owner][idx] > 1 {
+                    return Err(format!(
+                        "double-claim: task {idx} of leader {owner} ran twice"
+                    ));
+                }
+                match self.nested {
+                    // worker_loop sets IN_GANG around the task call, so
+                    // the nested dispatch runs inline right here
+                    Nested::Inline if idx == 0 => s.nested_runs += 1,
+                    Nested::Blocking if idx == 0 => {
+                        s.pc[tid] = Pc::WNestedAcquire;
+                        return Ok(());
+                    }
+                    _ => {}
+                }
+                s.pc[tid] = Pc::WDec;
+                Ok(())
+            }
+            Pc::WNestedAcquire => {
+                // the guard-less nested run_tasks: lock, find the slot
+                // occupied (by the very gang whose task is running), and
+                // wait for a retire that can never come — this thread's
+                // own claim holds `active > 0`
+                s.m.acquire(tid);
+                if s.gang.is_some() {
+                    s.sync_cv.wait(&mut s.m, tid);
+                    s.pc[tid] = Pc::WNestedWait;
+                } else {
+                    // unreachable while our claim is active; tolerate it
+                    s.m.release(tid);
+                    s.pc[tid] = Pc::WDec;
+                }
+                Ok(())
+            }
+            Pc::WNestedWait => {
+                s.sync_cv.wake(tid);
+                s.pc[tid] = Pc::WNestedAcquire;
+                Ok(())
+            }
+            Pc::WDec => {
+                // re-lock; active -= 1; last-finisher notify; `continue`
+                // loops straight into the claim match under the same
+                // guard — one atomic step, exactly like the source.
+                s.m.acquire(tid);
+                match s.gang {
+                    Some(ref mut g) => {
+                        g.active -= 1;
+                        if g.next >= self.n_tasks
+                            && g.active == 0
+                            && !self.lost_notify_mutant
+                        {
+                            // wake the drain-waiting leader
+                            s.sync_cv.notify_all();
+                        }
+                    }
+                    None => {
+                        return Err(format!(
+                            "gang retired while worker {tid}'s task was active"
+                        ))
+                    }
+                }
+                self.worker_claim_or_park(s, tid);
+                Ok(())
+            }
+            Pc::WParked => {
+                s.work_cv.wake(tid);
+                s.pc[tid] = Pc::WClaim;
+                Ok(())
+            }
+        }
+    }
+
+    fn check(&self, s: &State) -> Result<(), String> {
+        if let Some(g) = s.gang {
+            if g.active > self.threads() {
+                return Err(format!("active count {} exceeds thread count", g.active));
+            }
+            if g.next > self.n_tasks {
+                return Err(format!("next {} ran past n_tasks {}", g.next, self.n_tasks));
+            }
+        }
+        Ok(())
+    }
+
+    fn check_final(&self, s: &State) -> Result<(), String> {
+        if s.gang.is_some() {
+            return Err("broadcast slot still occupied at termination".into());
+        }
+        for (l, counts) in s.executed.iter().enumerate() {
+            for (i, &c) in counts.iter().enumerate() {
+                if c != 1 {
+                    return Err(format!(
+                        "task {i} of leader {l} executed {c} times (want exactly 1)"
+                    ));
+                }
+            }
+        }
+        if self.nested == Nested::Inline && s.nested_runs != self.leaders as u8 {
+            return Err(format!(
+                "nested inline dispatch ran {} times (want one per gang, {})",
+                s.nested_runs, self.leaders
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::verify::Checker;
+
+    #[test]
+    fn leader_with_two_workers_is_sound() {
+        let report = Checker::default().run(&Broadcast::leader_and_workers(2, 2));
+        assert!(report.passed(), "{:?}", report.violation);
+        assert!(report.states > 10, "trivial exploration: {} states", report.states);
+    }
+
+    #[test]
+    fn competing_leaders_serialize_on_the_slot() {
+        let report = Checker::default().run(&Broadcast::competing_leaders(2));
+        assert!(report.passed(), "{:?}", report.violation);
+    }
+
+    #[test]
+    fn seeded_lost_notify_is_detected_as_lost_wakeup() {
+        let m = Broadcast::leader_and_workers(2, 2).with_lost_notify();
+        let report = Checker::default().run(&m);
+        let v = report.violation.expect("checker must find the seeded lost wakeup");
+        assert!(v.message.contains("deadlock / lost wakeup"), "{v}");
+        assert!(!v.schedule.is_empty(), "violation must carry a replay schedule");
+    }
+
+    #[test]
+    fn mutant_with_zero_workers_cannot_deadlock() {
+        // With no workers the leader claims every index itself and the
+        // dropped worker-side notify is unreachable: the mutant must
+        // pass, proving detection comes from the protocol, not noise.
+        let m = Broadcast {
+            leaders: 1,
+            workers: 0,
+            n_tasks: 2,
+            lost_notify_mutant: true,
+            nested: Nested::None,
+        };
+        let report = Checker::default().run(&m);
+        assert!(report.passed(), "{:?}", report.violation);
+    }
+
+    #[test]
+    fn nested_reentry_is_sound_with_the_inline_guard() {
+        let m = Broadcast::leader_and_workers(2, 2).with_nested(Nested::Inline);
+        let report = Checker::default().run(&m);
+        assert!(report.passed(), "{:?}", report.violation);
+    }
+
+    #[test]
+    fn nested_reentry_without_the_guard_self_deadlocks() {
+        // Regression corpus for the IN_GANG audit: removing the inline
+        // guard must be caught as a deadlock (the nested publish waits
+        // on a slot its own claim pins).
+        let m = Broadcast::leader_and_workers(2, 2).with_nested(Nested::Blocking);
+        let report = Checker::default().run(&m);
+        let v = report.violation.expect("guard-less re-entry must deadlock");
+        assert!(v.message.contains("deadlock / lost wakeup"), "{v}");
+    }
+}

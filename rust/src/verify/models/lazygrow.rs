@@ -1,0 +1,299 @@
+//! Model of lazy pool growth vs. shutdown (`ThreadPool::submit`,
+//! `worker_loop`'s queue path, and `Drop for ThreadPool`).
+//!
+//! The real pool spawns workers on demand: `submit` pushes the job,
+//! bumps `outstanding`, and CAS-loops `spawned` upward until
+//! `spawned >= min(outstanding, cap)`. `Drop` sets `shutdown` under the
+//! lock, wakes everyone, and joins. The subtle properties:
+//!
+//! 1. **drain before shutdown** — a worker observing `shutdown == true`
+//!    must still drain queued jobs first (the source checks the queue
+//!    before the shutdown flag), so every submitted job runs even when
+//!    `Drop` races the last submit;
+//! 2. **no lost wakeup** — a parked worker is always woken while work
+//!    remains ([`LazyGrow::lost_submit_notify_mutant`] drops the
+//!    `notify_one` after a push and the checker reports the deadlock);
+//! 3. **the grow rule spawns enough workers** — checked as a state
+//!    invariant: after every submit completes its grow loop,
+//!    `spawned >= min(outstanding, cap)`.
+//!
+//! Threads: tid 0 is the submitter (submits `jobs` jobs, then drops the
+//! pool: shutdown + notify_all + join); tids `1..=cap` are workers that
+//! begin unspawned and only become schedulable once the grow loop has
+//! spawned them — lazy spawning is scheduling, not magic.
+
+use crate::verify::checker::Model;
+use crate::verify::shim::{MockAtomic, MockCondvar, MockMutex};
+
+/// Model configuration. `threads() == 1 + cap`.
+#[derive(Debug, Clone, Copy)]
+pub struct LazyGrow {
+    /// Jobs the submitter pushes before dropping the pool.
+    pub jobs: usize,
+    /// Worker cap (`ThreadPool::new(cap)` with lazy spawning).
+    pub cap: usize,
+    /// Seeded bug: `push_job` skips `work_cv.notify_one()`.
+    pub lost_submit_notify_mutant: bool,
+}
+
+impl LazyGrow {
+    pub fn new(jobs: usize, cap: usize) -> Self {
+        Self { jobs, cap, lost_submit_notify_mutant: false }
+    }
+
+    pub fn with_lost_notify(mut self) -> Self {
+        self.lost_submit_notify_mutant = true;
+        self
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+enum Pc {
+    // submitter
+    SPush,     // lock; queue += 1; unlock; notify_one; start grow loop
+    SGrow,     // CAS spawned upward toward min(outstanding, cap)
+    SAwait,    // latch wait: blocked until outstanding == 0
+    SShutdown, // lock; shutdown = true; unlock; notify_all
+    SJoin,     // blocked until every spawned worker has exited
+    SDone,
+    // workers
+    WUnspawned, // not yet an OS thread; enabled once spawned covers it
+    WLoop,      // lock; pop job / observe shutdown / park
+    WRun,       // running a popped job outside the lock
+    WParked,    // parked on work_cv
+    WDone,      // worker_loop returned (joined by Drop)
+}
+
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct State {
+    m: MockMutex,
+    work_cv: MockCondvar,
+    queue: usize,
+    shutdown: bool,
+    /// Lock-free counters, as in the source (`AtomicUsize`).
+    spawned: MockAtomic,
+    outstanding: MockAtomic,
+    /// Jobs fully executed (the drain property's witness).
+    executed: usize,
+    /// Jobs the submitter has pushed so far.
+    pushed: usize,
+    pc: Vec<Pc>,
+}
+
+impl LazyGrow {
+    fn worker_tid(&self, k: usize) -> usize {
+        1 + k
+    }
+}
+
+impl Model for LazyGrow {
+    type State = State;
+
+    fn init(&self) -> State {
+        let mut pc = vec![if self.jobs == 0 { Pc::SAwait } else { Pc::SPush }];
+        pc.extend(std::iter::repeat(Pc::WUnspawned).take(self.cap));
+        State {
+            m: MockMutex::default(),
+            work_cv: MockCondvar::default(),
+            queue: 0,
+            shutdown: false,
+            spawned: MockAtomic::default(),
+            outstanding: MockAtomic::default(),
+            executed: 0,
+            pushed: 0,
+            pc,
+        }
+    }
+
+    fn threads(&self) -> usize {
+        1 + self.cap
+    }
+
+    fn enabled(&self, s: &State, tid: usize) -> bool {
+        match s.pc[tid] {
+            Pc::SPush | Pc::SShutdown | Pc::WLoop => s.m.is_free(),
+            // the CAS loop and job bodies run without the mutex
+            Pc::SGrow | Pc::WRun => true,
+            // latch wait (`Scope::wait_all` analog): wakeups on the
+            // latch's own condvar are modeled as perfect — this model
+            // checks the *pool's* wakeup discipline, not the latch's
+            Pc::SAwait => s.outstanding.load() == 0,
+            Pc::SJoin => (0..self.cap).all(|k| {
+                let w = self.worker_tid(k);
+                // join returns once every spawned worker exited;
+                // never-spawned workers have no handle to join
+                s.pc[w] == Pc::WDone || s.pc[w] == Pc::WUnspawned
+            }),
+            Pc::WUnspawned => (tid - 1) < s.spawned.load() as usize,
+            Pc::WParked => s.work_cv.can_wake(tid),
+            Pc::SDone | Pc::WDone => false,
+        }
+    }
+
+    fn done(&self, s: &State, tid: usize) -> bool {
+        match s.pc[tid] {
+            Pc::SDone | Pc::WDone => true,
+            // a worker the grow rule never needed is fine at exit
+            Pc::WUnspawned => (tid - 1) >= s.spawned.load() as usize,
+            _ => false,
+        }
+    }
+
+    fn step(&self, s: &mut State, tid: usize) -> Result<(), String> {
+        match s.pc[tid] {
+            Pc::SPush => {
+                // outstanding.fetch_add precedes the push in the source;
+                // both are lock-free / under the lock in one window the
+                // grow loop only reads afterwards, so folding them with
+                // the push is behavior-preserving for the grow bound.
+                s.outstanding.fetch_add(1);
+                s.m.acquire(tid);
+                s.queue += 1;
+                s.pushed += 1;
+                s.m.release(tid);
+                if !self.lost_submit_notify_mutant {
+                    s.work_cv.notify_one();
+                }
+                s.pc[tid] = Pc::SGrow;
+                Ok(())
+            }
+            Pc::SGrow => {
+                // one CAS iteration of the grow loop
+                let spawned = s.spawned.load();
+                let target = s.outstanding.load().min(self.cap as u64);
+                if spawned >= target {
+                    // grow loop converged: next job, or wait for drain
+                    // before dropping the pool (callers always join
+                    // their work — scope latch / run_tasks block — so a
+                    // lost wakeup strands this wait, not the shutdown
+                    // broadcast, exactly as in production)
+                    s.pc[tid] = if s.pushed < self.jobs { Pc::SPush } else { Pc::SAwait };
+                } else {
+                    // CAS always succeeds here: the submitter is the
+                    // only thread that writes `spawned`
+                    s.spawned
+                        .compare_exchange(spawned, spawned + 1)
+                        .map_err(|v| format!("spawned CAS raced: {v}"))?;
+                }
+                Ok(())
+            }
+            Pc::SAwait => {
+                // outstanding drained to zero: proceed to Drop
+                s.pc[tid] = Pc::SShutdown;
+                Ok(())
+            }
+            Pc::SShutdown => {
+                s.m.acquire(tid);
+                s.shutdown = true;
+                s.m.release(tid);
+                s.work_cv.notify_all();
+                s.pc[tid] = Pc::SJoin;
+                Ok(())
+            }
+            Pc::SJoin => {
+                s.pc[tid] = Pc::SDone;
+                Ok(())
+            }
+            Pc::SDone => Err("stepped the done submitter".into()),
+            Pc::WUnspawned => {
+                // std::thread::spawn completed; enter worker_loop
+                s.pc[tid] = Pc::WLoop;
+                Ok(())
+            }
+            Pc::WLoop => {
+                s.m.acquire(tid);
+                if s.queue > 0 {
+                    // pop_front before the shutdown check: drain first
+                    s.queue -= 1;
+                    s.m.release(tid);
+                    s.pc[tid] = Pc::WRun;
+                } else if s.shutdown {
+                    s.m.release(tid);
+                    s.pc[tid] = Pc::WDone;
+                } else {
+                    s.work_cv.wait(&mut s.m, tid);
+                    s.pc[tid] = Pc::WParked;
+                }
+                Ok(())
+            }
+            Pc::WRun => {
+                s.executed += 1;
+                s.outstanding.fetch_sub(1);
+                s.pc[tid] = Pc::WLoop;
+                Ok(())
+            }
+            Pc::WParked => {
+                s.work_cv.wake(tid);
+                s.pc[tid] = Pc::WLoop;
+                Ok(())
+            }
+            Pc::WDone => Err("stepped a done worker".into()),
+        }
+    }
+
+    fn check(&self, s: &State) -> Result<(), String> {
+        // The grow rule, as a state invariant: whenever the submitter is
+        // back at the push/shutdown boundary (its grow loop converged),
+        // enough workers exist for every outstanding job, up to the cap.
+        if matches!(s.pc[0], Pc::SPush | Pc::SAwait | Pc::SShutdown | Pc::SJoin | Pc::SDone) {
+            let need = s.outstanding.load().min(self.cap as u64);
+            if s.spawned.load() < need {
+                return Err(format!(
+                    "grow rule violated: spawned {} < min(outstanding {}, cap {})",
+                    s.spawned.load(),
+                    s.outstanding.load(),
+                    self.cap
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn check_final(&self, s: &State) -> Result<(), String> {
+        if s.executed != self.jobs {
+            return Err(format!(
+                "shutdown lost jobs: executed {} of {} submitted",
+                s.executed, self.jobs
+            ));
+        }
+        if s.queue != 0 {
+            return Err(format!("{} jobs still queued at exit", s.queue));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::verify::Checker;
+
+    #[test]
+    fn grow_and_drain_are_sound_at_two_workers() {
+        let report = Checker::default().run(&LazyGrow::new(2, 2));
+        assert!(report.passed(), "{:?}", report.violation);
+        assert!(report.states > 10);
+    }
+
+    #[test]
+    fn more_jobs_than_workers_still_drains() {
+        let report = Checker::default().run(&LazyGrow::new(3, 1));
+        assert!(report.passed(), "{:?}", report.violation);
+    }
+
+    #[test]
+    fn zero_jobs_shutdown_is_clean() {
+        let report = Checker::default().run(&LazyGrow::new(0, 2));
+        assert!(report.passed(), "{:?}", report.violation);
+    }
+
+    #[test]
+    fn dropped_submit_notify_is_detected() {
+        let report = Checker::default().run(&LazyGrow::new(2, 2).with_lost_notify());
+        let v = report.violation.expect("checker must find the lost wakeup");
+        assert!(
+            v.message.contains("deadlock / lost wakeup") || v.message.contains("lost jobs"),
+            "{v}"
+        );
+    }
+}

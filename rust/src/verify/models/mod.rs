@@ -1,0 +1,23 @@
+//! Extracted state-machine models of the three trickiest protocols in
+//! the runtime, checked exhaustively by [`crate::verify::Checker`]:
+//!
+//! * [`broadcast`] — `ThreadPool::run_tasks` publish/claim/retire
+//!   (`util/threadpool.rs`): no lost wakeup, no double-claimed tile
+//!   index, no use of the published closure after its gang retires.
+//! * [`lazygrow`] — lazy worker growth vs. pool shutdown
+//!   (`ThreadPool::submit` / `worker_loop` / `Drop`): every submitted job
+//!   runs before shutdown completes; the grow rule spawns enough workers.
+//! * [`swapdrain`] — registry hot swap with refcount drain
+//!   (`registry/mod.rs`): a request's pinned version is never freed
+//!   under it; the displaced version frees exactly once at refcount zero.
+//!
+//! Each model carries seeded mutants (a dropped notify, a split
+//! read-then-pin) proving the checker detects the bug class it exists to
+//! rule out. Model granularity follows the soundness rule from
+//! [`crate::verify::checker`]: everything done under one real mutex
+//! acquisition is one atomic step, and every lock release / wait / wake
+//! is an interleaving point.
+
+pub mod broadcast;
+pub mod lazygrow;
+pub mod swapdrain;

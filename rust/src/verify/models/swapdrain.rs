@@ -1,0 +1,266 @@
+//! Model of the registry's hot-swap refcount drain (`registry/mod.rs`).
+//!
+//! In production a request pins its model version at submit time by
+//! cloning the `Arc<ModelVersion>` out of the registry *while holding
+//! the registry read lock*; `swap` replaces the active slot under the
+//! write lock and drops the registry's own reference to the displaced
+//! version, whose executor frees when the last in-flight request drops
+//! its pin (Arc strong count → 0). The checked properties:
+//!
+//! 1. **no use-after-free** — a request never touches an executor whose
+//!    version has been freed;
+//! 2. **no double-free / no leak** — the displaced version frees exactly
+//!    once, and only after every pin is gone; the new version stays
+//!    alive (the registry holds it).
+//!
+//! The [`SwapDrain::split_pin_mutant`] seeds the TOCTOU bug this
+//! protocol exists to prevent: reading the active version and
+//! incrementing its refcount in two separate steps (i.e. cloning the
+//! `Arc` *after* releasing the registry lock from a bare pointer). The
+//! checker finds the interleaving where the swap drains and frees the
+//! version between the read and the pin.
+//!
+//! The registry lock is modeled as a [`MockMutex`]: the read/write
+//! distinction only widens the schedule set for readers, and with ≤2
+//! request threads the mutex serialization explores the same races the
+//! RwLock admits for this protocol (pin and swap both mutate refcounts
+//! atomically; concurrent read-side pins commute).
+
+use crate::verify::checker::Model;
+use crate::verify::shim::{MockAtomic, MockMutex};
+
+/// Model configuration: `requesters` request threads (tids
+/// `0..requesters`) each pin/use/unpin once; the last tid is the admin
+/// performing one swap from version 0 to version 1.
+#[derive(Debug, Clone, Copy)]
+pub struct SwapDrain {
+    pub requesters: usize,
+    /// Seeded TOCTOU bug: read the active version id and take the pin in
+    /// two separate atomic steps instead of one.
+    pub split_pin_mutant: bool,
+}
+
+impl SwapDrain {
+    pub fn new(requesters: usize) -> Self {
+        Self { requesters, split_pin_mutant: false }
+    }
+
+    pub fn with_split_pin(mut self) -> Self {
+        self.split_pin_mutant = true;
+        self
+    }
+
+    fn admin_tid(&self) -> usize {
+        self.requesters
+    }
+}
+
+const VERSIONS: usize = 2;
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+enum Pc {
+    // requesters
+    RPin,     // lock; v = active; refcnt[v] += 1; unlock (atomic pin)
+    RPinRead, // mutant: lock; v = active; unlock — pin comes later
+    RPinInc,  // mutant: lock; refcnt[v] += 1; unlock (the stale pin)
+    RUse,     // execute against the pinned version (no lock)
+    RUnpin,   // drop the Arc: refcnt -= 1; free at zero
+    RDone,
+    // admin
+    ASwap, // write lock; active = 1; move the registry's own ref
+    ADone,
+}
+
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct State {
+    lock: MockMutex,
+    active: usize,
+    /// Arc strong counts (registry ref + request pins).
+    refcnt: [MockAtomic; VERSIONS],
+    freed: [bool; VERSIONS],
+    pc: Vec<Pc>,
+    /// The version each requester pinned (valid from pin to unpin).
+    pinned: Vec<usize>,
+}
+
+/// Drop one reference to `v`; free the executor at strong count zero.
+fn drop_ref(s: &mut State, v: usize) -> Result<(), String> {
+    if s.refcnt[v].load() == 0 {
+        return Err(format!("refcount underflow on version {v}"));
+    }
+    if s.refcnt[v].fetch_sub(1) == 1 {
+        if s.freed[v] {
+            return Err(format!("double-free of version {v}"));
+        }
+        s.freed[v] = true;
+    }
+    Ok(())
+}
+
+impl Model for SwapDrain {
+    type State = State;
+
+    fn init(&self) -> State {
+        let start = if self.split_pin_mutant { Pc::RPinRead } else { Pc::RPin };
+        let mut pc = vec![start; self.requesters];
+        pc.push(Pc::ASwap);
+        State {
+            lock: MockMutex::default(),
+            active: 0,
+            // the registry's own reference to version 0; version 1 is
+            // constructed by the swap
+            refcnt: [MockAtomic(1), MockAtomic(0)],
+            freed: [false, false],
+            pc,
+            pinned: vec![0; self.requesters],
+        }
+    }
+
+    fn threads(&self) -> usize {
+        self.requesters + 1
+    }
+
+    fn enabled(&self, s: &State, tid: usize) -> bool {
+        match s.pc[tid] {
+            Pc::RPin | Pc::RPinRead | Pc::RPinInc | Pc::ASwap => s.lock.is_free(),
+            // using the executor and dropping an Arc take no registry lock
+            Pc::RUse | Pc::RUnpin => true,
+            Pc::RDone | Pc::ADone => false,
+        }
+    }
+
+    fn done(&self, s: &State, tid: usize) -> bool {
+        matches!(s.pc[tid], Pc::RDone | Pc::ADone)
+    }
+
+    fn step(&self, s: &mut State, tid: usize) -> Result<(), String> {
+        match s.pc[tid] {
+            Pc::RPin => {
+                // Arc::clone(&slot.active) under the registry read lock:
+                // observing the version and pinning it are inseparable
+                s.lock.acquire(tid);
+                let v = s.active;
+                s.refcnt[v].fetch_add(1);
+                s.lock.release(tid);
+                s.pinned[tid] = v;
+                s.pc[tid] = Pc::RUse;
+                Ok(())
+            }
+            Pc::RPinRead => {
+                // mutant: remember which version is active ...
+                s.lock.acquire(tid);
+                s.pinned[tid] = s.active;
+                s.lock.release(tid);
+                s.pc[tid] = Pc::RPinInc;
+                Ok(())
+            }
+            Pc::RPinInc => {
+                // ... and pin it in a later step (TOCTOU window)
+                let v = s.pinned[tid];
+                s.lock.acquire(tid);
+                s.refcnt[v].fetch_add(1);
+                s.lock.release(tid);
+                s.pc[tid] = Pc::RUse;
+                Ok(())
+            }
+            Pc::RUse => {
+                let v = s.pinned[tid];
+                if s.freed[v] {
+                    return Err(format!(
+                        "use-after-free: requester {tid} executed against freed \
+                         version {v}"
+                    ));
+                }
+                s.pc[tid] = Pc::RUnpin;
+                Ok(())
+            }
+            Pc::RUnpin => {
+                let v = s.pinned[tid];
+                drop_ref(s, v)?;
+                s.pc[tid] = Pc::RDone;
+                Ok(())
+            }
+            Pc::RDone => Err("stepped a done requester".into()),
+            Pc::ASwap => {
+                // under the write lock: install v1 (registry takes its
+                // ref) and drop the registry's ref to v0 — the displaced
+                // executor frees now iff no request still pins it
+                s.lock.acquire(tid);
+                s.active = 1;
+                s.refcnt[1].fetch_add(1);
+                let r = drop_ref(s, 0);
+                s.lock.release(tid);
+                s.pc[tid] = Pc::ADone;
+                r
+            }
+            Pc::ADone => Err("stepped the done admin".into()),
+        }
+    }
+
+    fn check(&self, s: &State) -> Result<(), String> {
+        for v in 0..VERSIONS {
+            if s.freed[v] && s.refcnt[v].load() > 0 {
+                return Err(format!(
+                    "version {v} freed while {} references remain",
+                    s.refcnt[v].load()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn check_final(&self, s: &State) -> Result<(), String> {
+        if !s.freed[0] {
+            return Err("displaced version 0 leaked (never freed)".into());
+        }
+        if s.refcnt[0].load() != 0 {
+            return Err(format!("version 0 still has {} refs", s.refcnt[0].load()));
+        }
+        if s.freed[1] || s.refcnt[1].load() != 1 {
+            return Err(format!(
+                "active version 1 must stay alive with exactly the registry's ref \
+                 (freed = {}, refs = {})",
+                s.freed[1],
+                s.refcnt[1].load()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::verify::Checker;
+
+    #[test]
+    fn atomic_pin_drains_cleanly_with_two_requesters() {
+        let report = Checker::default().run(&SwapDrain::new(2));
+        assert!(report.passed(), "{:?}", report.violation);
+        assert!(report.states > 10);
+    }
+
+    #[test]
+    fn single_requester_is_sound() {
+        let report = Checker::default().run(&SwapDrain::new(1));
+        assert!(report.passed(), "{:?}", report.violation);
+    }
+
+    #[test]
+    fn split_pin_mutant_is_caught_as_use_after_free() {
+        let report = Checker::default().run(&SwapDrain::new(1).with_split_pin());
+        let v = report.violation.expect("checker must find the TOCTOU");
+        // the race surfaces either as the pinned-after-free invariant or
+        // as the use itself, depending on which step DFS reaches first
+        assert!(
+            v.message.contains("use-after-free") || v.message.contains("freed while"),
+            "{v}"
+        );
+    }
+
+    #[test]
+    fn split_pin_mutant_caught_at_two_requesters_too() {
+        let report = Checker::default().run(&SwapDrain::new(2).with_split_pin());
+        assert!(report.violation.is_some());
+    }
+}

@@ -1,0 +1,300 @@
+//! Instrumented stand-ins for the `std::sync` primitives.
+//!
+//! Model states must be cloneable and hashable, so the shims are plain
+//! value types manipulated by [`Model::step`](crate::verify::Model::step)
+//! handlers rather than RAII guards. The semantics mirror what the real
+//! primitives guarantee:
+//!
+//! * [`MockMutex`] — ownership tracking. A thread whose next action needs
+//!   the mutex is *disabled* (not merely spinning) while another thread
+//!   holds it, exactly like a parked `std::sync::Mutex` acquirer.
+//! * [`MockCondvar`] — a wait set plus wakeup grants scoped to the
+//!   threads that were **waiting at notify time**. `notify_all` moves the
+//!   whole current wait set into a woken set; `notify_one` records a
+//!   token eligible to any one of the current waiters (which one wakes is
+//!   left to the scheduler search, mirroring the real nondeterminism). A
+//!   thread that starts waiting *after* a notify can never consume that
+//!   notify — real condvars wake threads already in the wait queue, and
+//!   an earlier (counter-based) version of this shim wrongly let a late
+//!   waiter steal a `notify_all` grant, deadlocking sound protocols. A
+//!   missed notify is observable as a permanently disabled thread (a
+//!   lost wakeup, reported by the checker as a deadlock). Spurious
+//!   wakeups are *not* modeled: the real code wraps every wait in a
+//!   re-check loop, so a spurious wake only adds equivalent schedules.
+//! * [`MockAtomic`] — a bare integer cell. Each model step is already
+//!   atomic, so the value type only documents intent (which shared cells
+//!   are lock-free in the real code) and centralizes the RMW helpers.
+//!
+//! The `wait` half of `Condvar::wait` is split the way loom splits it:
+//! `wait()` atomically releases the mutex and joins the wait set (one
+//! step); waking takes the grant (a second step); the woken thread then
+//! re-acquires the mutex and re-checks its predicate (its pc loops back
+//! to the acquire state). That is exactly the `while cond { cv.wait() }`
+//! idiom used everywhere in `util/threadpool.rs`.
+
+use std::collections::BTreeSet;
+
+/// Ownership-tracking mutex for model states.
+#[derive(Clone, PartialEq, Eq, Hash, Debug, Default)]
+pub struct MockMutex {
+    held_by: Option<usize>,
+}
+
+impl MockMutex {
+    /// Is the mutex free (an acquirer would be enabled)?
+    pub fn is_free(&self) -> bool {
+        self.held_by.is_none()
+    }
+
+    /// Current owner, if any.
+    pub fn holder(&self) -> Option<usize> {
+        self.held_by
+    }
+
+    /// Acquire for `tid`. Callers must only step an acquire when
+    /// [`MockMutex::is_free`] (the model's `enabled` gate); acquiring a
+    /// held mutex is a model bug, not an explored behavior.
+    pub fn acquire(&mut self, tid: usize) {
+        assert!(self.held_by.is_none(), "acquire of a held MockMutex");
+        self.held_by = Some(tid);
+    }
+
+    /// Release; panics if `tid` is not the owner (a model bug).
+    pub fn release(&mut self, tid: usize) {
+        assert_eq!(self.held_by, Some(tid), "release by non-owner");
+        self.held_by = None;
+    }
+}
+
+/// Wait-set condition variable for model states, with wakeup grants
+/// scoped to the threads that were waiting when the notify happened.
+#[derive(Clone, PartialEq, Eq, Hash, Debug, Default)]
+pub struct MockCondvar {
+    /// Threads parked in `wait` with no grant yet.
+    waiters: BTreeSet<usize>,
+    /// Threads released by a `notify_all` but not yet scheduled.
+    woken: BTreeSet<usize>,
+    /// One entry per pending `notify_one`: the wait set snapshotted at
+    /// notify time. Any one member may consume the token — the scheduler
+    /// explores every choice, mirroring the real "which waiter wakes"
+    /// nondeterminism. A token whose members all leave the wait set by
+    /// other means is dropped (the notify is absorbed, as in pthreads).
+    tokens: Vec<BTreeSet<usize>>,
+}
+
+impl MockCondvar {
+    /// Atomically release `m` and join the wait set (the blocking half of
+    /// `Condvar::wait`). The caller's pc must transition to a "waiting"
+    /// state whose only exit is [`MockCondvar::wake`].
+    pub fn wait(&mut self, m: &mut MockMutex, tid: usize) {
+        m.release(tid);
+        assert!(
+            !self.woken.contains(&tid),
+            "thread {tid} waited again before taking its wakeup"
+        );
+        let fresh = self.waiters.insert(tid);
+        assert!(fresh, "thread {tid} waited twice without waking");
+    }
+
+    /// Grant one wakeup to some current waiter (`Condvar::notify_one`).
+    /// A no-op when nobody is waiting — that notify is *lost*, exactly
+    /// the real-condvar behavior the checker exists to catch.
+    pub fn notify_one(&mut self) {
+        if !self.waiters.is_empty() {
+            self.tokens.push(self.waiters.clone());
+        }
+    }
+
+    /// Wake every **current** waiter (`Condvar::notify_all`). Threads
+    /// that wait after this call are not covered by it.
+    pub fn notify_all(&mut self) {
+        self.woken.append(&mut self.waiters);
+        // every token's eligible set was ⊆ the old wait set, which is now
+        // wholly woken — those notify_ones are absorbed.
+        self.tokens.clear();
+    }
+
+    /// Scheduler gate: may `tid` leave the wait set this step?
+    pub fn can_wake(&self, tid: usize) -> bool {
+        self.woken.contains(&tid) || self.tokens.iter().any(|t| t.contains(&tid))
+    }
+
+    /// Take the wakeup and leave the wait set. The caller's next action
+    /// is re-acquiring the mutex (its pc loops to the acquire state,
+    /// re-checking the wait predicate under the lock).
+    pub fn wake(&mut self, tid: usize) {
+        assert!(self.can_wake(tid), "wake without a grant");
+        self.waiters.remove(&tid);
+        if !self.woken.remove(&tid) {
+            let i = self
+                .tokens
+                .iter()
+                .position(|t| t.contains(&tid))
+                .expect("can_wake implies a token");
+            self.tokens.remove(i);
+        }
+        // `tid` left the wait set: it can no longer be the target of any
+        // other pending notify_one.
+        self.tokens.retain_mut(|t| {
+            t.remove(&tid);
+            !t.is_empty()
+        });
+    }
+
+    /// Is `tid` parked in the wait (granted a wakeup or not)?
+    pub fn is_waiting(&self, tid: usize) -> bool {
+        self.waiters.contains(&tid) || self.woken.contains(&tid)
+    }
+}
+
+/// Lock-free integer cell. Steps are atomic by construction; the type
+/// marks which shared state is atomics (not mutex-protected) in the real
+/// code and provides the RMW shapes the pool uses.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, Default)]
+pub struct MockAtomic(pub u64);
+
+impl MockAtomic {
+    pub fn load(&self) -> u64 {
+        self.0
+    }
+
+    pub fn store(&mut self, v: u64) {
+        self.0 = v;
+    }
+
+    pub fn fetch_add(&mut self, v: u64) -> u64 {
+        let old = self.0;
+        self.0 += v;
+        old
+    }
+
+    pub fn fetch_sub(&mut self, v: u64) -> u64 {
+        let old = self.0;
+        self.0 -= v;
+        old
+    }
+
+    /// `compare_exchange(current, new)` → `Ok(current)` / `Err(actual)`.
+    pub fn compare_exchange(&mut self, current: u64, new: u64) -> Result<u64, u64> {
+        if self.0 == current {
+            self.0 = new;
+            Ok(current)
+        } else {
+            Err(self.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mutex_tracks_ownership() {
+        let mut m = MockMutex::default();
+        assert!(m.is_free());
+        m.acquire(1);
+        assert!(!m.is_free());
+        assert_eq!(m.holder(), Some(1));
+        m.release(1);
+        assert!(m.is_free());
+    }
+
+    #[test]
+    #[should_panic(expected = "release by non-owner")]
+    fn mutex_release_by_non_owner_is_a_model_bug() {
+        let mut m = MockMutex::default();
+        m.acquire(0);
+        m.release(1);
+    }
+
+    #[test]
+    fn condvar_grant_semantics() {
+        let mut m = MockMutex::default();
+        let mut cv = MockCondvar::default();
+        // notify with no waiters is a no-op (real condvar semantics)
+        cv.notify_one();
+        assert_eq!(cv, MockCondvar::default());
+
+        m.acquire(0);
+        cv.wait(&mut m, 0);
+        assert!(m.is_free(), "wait releases the mutex");
+        assert!(cv.is_waiting(0));
+        assert!(!cv.can_wake(0), "no grant yet: a lost wakeup blocks forever");
+
+        cv.notify_one();
+        assert!(cv.can_wake(0));
+        cv.wake(0);
+        assert!(!cv.is_waiting(0));
+        assert!(!cv.can_wake(0));
+    }
+
+    #[test]
+    fn notify_all_covers_every_current_waiter() {
+        let mut m = MockMutex::default();
+        let mut cv = MockCondvar::default();
+        for tid in 0..3 {
+            m.acquire(tid);
+            cv.wait(&mut m, tid);
+        }
+        // notify_one twice ≠ notify_all for 3 waiters: any of the three
+        // may take either token, but only two in total can wake.
+        cv.notify_one();
+        cv.notify_one();
+        assert!((0..3).filter(|&t| cv.can_wake(t)).count() == 3, "tokens are shared");
+        cv.wake(0);
+        cv.wake(1);
+        assert!(!cv.can_wake(2), "only two wakeups were granted");
+        cv.notify_all();
+        assert!(cv.can_wake(2));
+        cv.wake(2);
+    }
+
+    #[test]
+    fn late_waiter_cannot_steal_an_earlier_notify_all() {
+        // Regression: a counter-based budget let a thread that waited
+        // *after* notify_all consume the grant meant for an existing
+        // waiter, making sound protocols (competing run_tasks leaders
+        // sharing one sync condvar) look like deadlocks.
+        let mut m = MockMutex::default();
+        let mut cv = MockCondvar::default();
+        m.acquire(0);
+        cv.wait(&mut m, 0);
+        cv.notify_all();
+        m.acquire(1);
+        cv.wait(&mut m, 1); // waits after the notify
+        assert!(cv.can_wake(0), "the thread waiting at notify time keeps its grant");
+        assert!(!cv.can_wake(1), "the late waiter is not covered");
+        cv.wake(0);
+        assert!(!cv.can_wake(1));
+    }
+
+    #[test]
+    fn notify_one_token_is_absorbed_when_its_waiters_leave() {
+        let mut m = MockMutex::default();
+        let mut cv = MockCondvar::default();
+        m.acquire(0);
+        cv.wait(&mut m, 0);
+        cv.notify_one(); // token eligible to {0} only
+        cv.notify_all(); // 0 leaves via the broadcast instead
+        cv.wake(0);
+        m.acquire(1);
+        cv.wait(&mut m, 1);
+        assert!(
+            !cv.can_wake(1),
+            "the stale notify_one token must not wake a future waiter"
+        );
+    }
+
+    #[test]
+    fn atomic_rmw_helpers() {
+        let mut a = MockAtomic::default();
+        assert_eq!(a.fetch_add(2), 0);
+        assert_eq!(a.load(), 2);
+        assert_eq!(a.compare_exchange(2, 5), Ok(2));
+        assert_eq!(a.compare_exchange(2, 9), Err(5));
+        assert_eq!(a.fetch_sub(1), 5);
+        a.store(7);
+        assert_eq!(a.load(), 7);
+    }
+}

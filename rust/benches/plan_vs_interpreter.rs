@@ -9,16 +9,20 @@
 //! * **planned** — `PfpExecutor::forward`: cached `CompiledPlan` +
 //!   workspace, plus the output-tensor copy the executor API pays;
 //! * **plan-raw** — `CompiledPlan::execute` on a reused workspace: the
-//!   steady-state zero-allocation serving path.
+//!   steady-state zero-allocation serving path;
+//! * **plan-fused** — plan-raw with epilogue fusion forced on
+//!   (`FusePolicy::On`): dense/conv → ReLU (→ convert) chains run as
+//!   single register-resident steps, no intermediate buffer round trips.
 //!
 //! Batches 1 and 64 bracket the paper's serving regime (single-request
 //! latency vs a full batcher bucket). Emits the usual bench table/JSON
-//! lines plus a `BENCH_plan.json` summary (interpreted vs planned ns/row)
-//! so future PRs can track the trajectory.
+//! lines plus a `BENCH_plan.json` summary (interpreted vs planned vs
+//! fused ns/row, and the fused-over-unfused `fuse_speedup`) so future PRs
+//! can track the trajectory.
 
 use std::sync::Arc;
 
-use pfp::model::{Arch, PfpExecutor, PosteriorWeights, Schedules};
+use pfp::model::{Arch, FusePolicy, PfpExecutor, PosteriorWeights, Schedules};
 use pfp::plan::{CompiledPlan, PlanMode};
 use pfp::profiling::Profiler;
 use pfp::tensor::Tensor;
@@ -77,6 +81,22 @@ fn main() {
                 black_box((mu[0], var[0]));
             });
 
+            let fused_plan = CompiledPlan::compile(
+                &arch,
+                Arc::new(weights.clone()),
+                &Schedules::tuned(1).with_fuse(FusePolicy::On),
+                batch,
+                PlanMode::Pfp,
+            )
+            .unwrap();
+            assert!(fused_plan.num_fused_steps() > 0);
+            let mut fused_ws = fused_plan.workspace();
+            let r_fused =
+                bench(&format!("{} b{batch} plan-fused", arch.name), opts, || {
+                    let (mu, var) = fused_plan.execute(x.data(), &mut fused_ws, &mut off);
+                    black_box((mu[0], var[0]));
+                });
+
             let ns_row = |median_s: f64| median_s * 1e9 / batch as f64;
             summary.push((
                 format!("{}_b{batch}_interpreted_ns_row", arch.name),
@@ -91,9 +111,21 @@ fn main() {
                 Json::Num(ns_row(r_raw.median_s)),
             ));
             summary.push((
+                format!("{}_b{batch}_plan_fused_ns_row", arch.name),
+                Json::Num(ns_row(r_fused.median_s)),
+            ));
+            summary.push((
                 format!("{}_b{batch}_speedup", arch.name),
                 Json::Num(if r_raw.median_s > 0.0 {
                     r_interp.median_s / r_raw.median_s
+                } else {
+                    0.0
+                }),
+            ));
+            summary.push((
+                format!("{}_b{batch}_fuse_speedup", arch.name),
+                Json::Num(if r_fused.median_s > 0.0 {
+                    r_raw.median_s / r_fused.median_s
                 } else {
                     0.0
                 }),
@@ -102,6 +134,7 @@ fn main() {
             results.push(r_interp);
             results.push(r_planned);
             results.push(r_raw);
+            results.push(r_fused);
         }
     }
 

@@ -18,7 +18,7 @@
 use pfp::ops::dense::{dense_rows_into, DenseSlices, JointEq12};
 use pfp::ops::relu::pfp_relu_rows_into;
 use pfp::ops::simd::{self, Isa};
-use pfp::ops::Schedule;
+use pfp::ops::{Epilogue, Schedule};
 use pfp::util::bench::{bench, black_box, report, BenchOpts};
 use pfp::util::json::Json;
 use pfp::util::prop::Gen;
@@ -78,8 +78,8 @@ fn main() {
             let mut var_s = vec![0.0f32; m * n];
             let mut mu_n = vec![0.0f32; m * n];
             let mut var_n = vec![0.0f32; m * n];
-            dense_rows_into::<JointEq12>(&slices, &scalar, 0..m, &mut mu_s, &mut var_s);
-            dense_rows_into::<JointEq12>(&slices, &native, 0..m, &mut mu_n, &mut var_n);
+            dense_rows_into::<JointEq12>(&slices, &scalar, Epilogue::None, 0..m, &mut mu_s, &mut var_s);
+            dense_rows_into::<JointEq12>(&slices, &native, Epilogue::None, 0..m, &mut mu_n, &mut var_n);
             for i in 0..m * n {
                 assert!(
                     (mu_s[i] - mu_n[i]).abs() <= 1e-4 + 1e-4 * mu_s[i].abs(),
@@ -94,14 +94,18 @@ fn main() {
             }
 
             let r_scalar = bench(&format!("{} b{batch} scalar", case.name), opts, || {
-                dense_rows_into::<JointEq12>(&slices, &scalar, 0..m, &mut mu_s, &mut var_s);
+                dense_rows_into::<JointEq12>(
+                    &slices, &scalar, Epilogue::None, 0..m, &mut mu_s, &mut var_s,
+                );
                 black_box(mu_s[0]);
             });
             let r_simd = bench(
                 &format!("{} b{batch} {}", case.name, backend.name()),
                 opts,
                 || {
-                    dense_rows_into::<JointEq12>(&slices, &native, 0..m, &mut mu_n, &mut var_n);
+                    dense_rows_into::<JointEq12>(
+                        &slices, &native, Epilogue::None, 0..m, &mut mu_n, &mut var_n,
+                    );
                     black_box(mu_n[0]);
                 },
             );

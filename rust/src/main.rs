@@ -14,7 +14,7 @@ use std::collections::HashMap;
 
 use pfp::coordinator::{Server, ServerConfig, Service, SviBackend, XlaPfpBackend};
 use pfp::data::DirtyMnist;
-use pfp::model::{Arch, PfpExecutor, PosteriorWeights, Schedules};
+use pfp::model::{Arch, FusePolicy, PfpExecutor, PosteriorWeights, Schedules};
 use pfp::runtime::Engine;
 use pfp::tensor::Tensor;
 use pfp::tuner::{self, SearchSpace, TuningRecords};
@@ -56,13 +56,17 @@ fn print_help() {
            serve   [--arch mlp] [--backend native|xla|svi] [--addr 127.0.0.1:7878]\n\
                    [--threads 1] [--plan-threads 0] [--pool-threads 0] [--max-batch 10]\n\
                    [--max-connections 64] [--pipeline-depth 0 (= max-batch)]\n\
-                   [--isa scalar|native]\n\
+                   [--isa scalar|native] [--fuse on|off|auto]\n\
                    [--models <dir>] [--memory-budget <MB>] [--no-mmap] [--calib 1.0]\n\
                    (--plan-threads N partitions the compiled-plan compute/\n\
                     relu/vectorized-pool steps into N tile tasks;\n\
                     0 defers to the tuned schedules. --isa forces every\n\
                     kernel onto one ISA; default: runtime-detected SIMD\n\
                     with scalar fallback, PFP_FORCE_SCALAR=1 honored.\n\
+                    --fuse controls epilogue fusion of dense/conv -> ReLU\n\
+                    (-> convert) chains into one plan step: on fuses every\n\
+                    fusable pattern, off never fuses, auto (default)\n\
+                    defers to each layer's tuned `fuse` knob.\n\
                     native backend serves through the model registry:\n\
                     --models preloads every weights_<arch>.npz in <dir>,\n\
                     weights are mmap'd zero-copy (--no-mmap forces the\n\
@@ -73,10 +77,11 @@ fn print_help() {
            eval    [--arch mlp] [--samples 30]\n\
            profile [--arch mlp] [--batch 10] [--passes 20] [--schedules tuned|baseline]\n\
            tune    [--arch mlp] [--batch 10] [--trials 24] [--plan-threads nproc]\n\
-                   [--isa scalar|native]\n\
+                   [--isa scalar|native] [--fuse on|off|auto]\n\
                    (per-layer workload search over parallel x tile-size x\n\
-                    ISA candidates, measured on the planned tile executor;\n\
-                    --isa narrows the ISA dimension to one backend)\n"
+                    ISA x fused-epilogue candidates, measured on the\n\
+                    planned tile executor; --isa narrows the ISA dimension\n\
+                    to one backend, --fuse on|off pins the fusion knob)\n"
     );
 }
 
@@ -102,6 +107,19 @@ fn opt<'a>(opts: &'a HashMap<String, String>, key: &str, default: &'a str) -> &'
 
 fn opt_usize(opts: &HashMap<String, String>, key: &str, default: usize) -> usize {
     opts.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Parse the optional `--fuse on|off|auto` flag; absent = Auto (each
+/// bound schedule's tuner-searched `fuse` knob decides per layer).
+fn opt_fuse(opts: &HashMap<String, String>) -> pfp::Result<FusePolicy> {
+    match opts.get("fuse").map(|s| s.as_str()) {
+        None | Some("auto") => Ok(FusePolicy::Auto),
+        Some("on") => Ok(FusePolicy::On),
+        Some("off") => Ok(FusePolicy::Off),
+        Some(s) => Err(pfp::Error::Config(format!(
+            "unknown --fuse '{s}' (expected on|off|auto)"
+        ))),
+    }
 }
 
 /// Parse the optional `--isa scalar|native` flag; absent = None (each
@@ -174,6 +192,7 @@ fn cmd_serve(opts: &HashMap<String, String>) -> pfp::Result<()> {
         .pool(svc.pool().clone())
         .plan_threads(opt_usize(opts, "plan-threads", 0))
         .isa_override(opt_isa(opts)?)
+        .fuse(opt_fuse(opts)?)
         .records(Some(records));
 
     match backend_kind {
@@ -364,6 +383,13 @@ fn cmd_tune(opts: &HashMap<String, String>) -> pfp::Result<()> {
     // detector still caps native at whatever the host supports)
     if let Some(isa) = opt_isa(opts)? {
         space.isas = vec![isa];
+    }
+    // --fuse pins the fused-epilogue dimension; auto (default) keeps both
+    // so the search decides per layer whether fusing pays
+    match opt_fuse(opts)? {
+        FusePolicy::On => space.fuses = vec![true],
+        FusePolicy::Off => space.fuses = vec![false],
+        FusePolicy::Auto => {}
     }
     let topts = tuner::TuneOpts { random_trials: trials, ..Default::default() };
     println!(

@@ -33,6 +33,25 @@ use crate::util::threadpool::{self, ThreadPool};
 
 use super::{Arch, LayerSpec, PosteriorWeights};
 
+/// Plan-lowering fusion policy (the serve/tune `--fuse on|off|auto`
+/// flag). Governs whether `CompiledPlan::compile` collapses a
+/// dense/conv step followed by a moment-matched ReLU (and an absorbable
+/// representation `Convert`) into one fused step whose kernel epilogue
+/// applies the elementwise chain on the cache-hot output tile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FusePolicy {
+    /// Never fuse — every plan lowers exactly as before PR 8, and stays
+    /// bit-identical to the interpreted walk.
+    Off,
+    /// Fuse every fusable pattern regardless of the per-step schedule's
+    /// `fuse` knob.
+    On,
+    /// Defer to each compute step's bound schedule: fuse where the
+    /// (tuner-searched) `fuse` knob is on. With no tuning records this
+    /// behaves like `Off`, since the stock schedules carry `fuse: false`.
+    Auto,
+}
+
 /// Per-operator-class schedule selection for a network, a per-layer
 /// override table (the paper tunes per operator *workload*, not per
 /// operator class), plus the shared persistent worker pool every parallel
@@ -74,6 +93,11 @@ pub struct Schedules {
     /// `PFP_FORCE_SCALAR=1` caps everything at the detector level
     /// regardless).
     pub isa_override: Option<Isa>,
+    /// Elementwise-chain fusion policy for plan lowering (see
+    /// [`FusePolicy`]). `Auto` (the constructor default) defers to each
+    /// bound schedule's `fuse` knob, so plans only fuse where the tuner
+    /// measured it to win; `On`/`Off` force the decision plan-wide.
+    pub fuse: FusePolicy,
     /// Persistent worker-pool handle. Defaults to the process-wide pool;
     /// the serving coordinator injects one shared handle per `Service` so
     /// every model lane and request reuses the same workers.
@@ -98,6 +122,7 @@ impl Schedules {
             maxpool_threads: 1,
             plan_threads: 0,
             isa_override: None,
+            fuse: FusePolicy::Auto,
             pool: threadpool::global().clone(),
             records: None,
         }
@@ -114,6 +139,7 @@ impl Schedules {
             maxpool_threads: 1,
             plan_threads: 0,
             isa_override: None,
+            fuse: FusePolicy::Auto,
             pool: threadpool::global().clone(),
             records: None,
         }
@@ -138,6 +164,23 @@ impl Schedules {
     pub fn with_isa_override(mut self, isa: Option<Isa>) -> Self {
         self.isa_override = isa;
         self
+    }
+
+    /// Set the fusion policy (see [`FusePolicy`]).
+    pub fn with_fuse(mut self, fuse: FusePolicy) -> Self {
+        self.fuse = fuse;
+        self
+    }
+
+    /// Whether a compute step bound to `sched` should absorb a following
+    /// elementwise chain: the plan-wide policy, with `Auto` deferring to
+    /// the schedule's own (tuner-searched) `fuse` knob.
+    pub fn step_fuses(&self, sched: &Schedule) -> bool {
+        match self.fuse {
+            FusePolicy::Off => false,
+            FusePolicy::On => true,
+            FusePolicy::Auto => sched.fuse,
+        }
     }
 
     /// The ISA the elementwise moment-matching kernels (ReLU, vectorized
@@ -261,6 +304,7 @@ pub struct SchedulesBuilder {
     pool: Option<Arc<ThreadPool>>,
     plan_threads: usize,
     isa_override: Option<Isa>,
+    fuse: FusePolicy,
     records: Option<Arc<crate::tuner::TuningRecords>>,
     vectorized_pool: Option<bool>,
 }
@@ -274,6 +318,7 @@ impl SchedulesBuilder {
             pool: None,
             plan_threads: 0,
             isa_override: None,
+            fuse: FusePolicy::Auto,
             records: None,
             vectorized_pool: None,
         }
@@ -299,6 +344,13 @@ impl SchedulesBuilder {
     /// ISA policy override (plan-time; `None` lets each schedule decide).
     pub fn isa_override(mut self, isa: Option<Isa>) -> Self {
         self.isa_override = isa;
+        self
+    }
+
+    /// Fusion policy (plan-time; `Auto` lets each schedule's `fuse` knob
+    /// decide — see [`FusePolicy`]).
+    pub fn fuse(mut self, fuse: FusePolicy) -> Self {
+        self.fuse = fuse;
         self
     }
 
@@ -328,6 +380,7 @@ impl SchedulesBuilder {
         }
         s.plan_threads = self.plan_threads;
         s.isa_override = self.isa_override;
+        s.fuse = self.fuse;
         if let Some(v) = self.vectorized_pool {
             s.vectorized_pool = v;
         }

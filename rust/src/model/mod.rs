@@ -10,7 +10,7 @@ pub mod npz;
 pub mod weights;
 
 pub use executor::{
-    DetExecutor, Executor, PfpExecutor, Schedules, SchedulesBuilder, SviExecutor,
+    DetExecutor, Executor, FusePolicy, PfpExecutor, Schedules, SchedulesBuilder, SviExecutor,
 };
 pub use weights::{LayerWeights, LoadedWeights, PosteriorWeights};
 

@@ -18,6 +18,7 @@ use crate::util::threadpool::{self, DisjointMut, ThreadPool};
 use super::dense::{
     dense_kernel_into, dense_rows_into, Accum, DenseSlices, FirstLayer, JointEq12,
 };
+use super::relu::Epilogue;
 use super::schedule::Schedule;
 
 /// Static conv workload description (NCHW input, OIHW weights, VALID
@@ -241,6 +242,11 @@ pub fn conv_kernel_into<A: Accum>(
 /// `threads = 1` schedule at any tile count. `x_aux = None` is the Eq. 13
 /// first layer (aux patches alias the mean patches), as in
 /// [`conv_kernel_into`].
+///
+/// A fused epilogue (`ep`, PR 8) is applied by [`dense_rows_into`] on
+/// each tile's pre-scatter `[len, O]` chunk while it is cache-hot:
+/// moment-matched ReLU(+convert) is elementwise, so it commutes with the
+/// col2im plane permutation of phase 2.
 #[allow(clippy::too_many_arguments)]
 pub fn conv_kernel_tiled_into<A: Accum>(
     pool: &ThreadPool,
@@ -252,6 +258,7 @@ pub fn conv_kernel_tiled_into<A: Accum>(
     b_mu: Option<&[f32]>,
     b_var: Option<&[f32]>,
     sched: &Schedule,
+    ep: Epilogue,
     tiles: &[std::ops::Range<usize>],
     scatter_tiles: &[std::ops::Range<usize>],
     scratch: &mut [f32],
@@ -313,7 +320,7 @@ pub fn conv_kernel_tiled_into<A: Accum>(
             b_mu,
             b_var,
         };
-        dense_rows_into::<A>(&args, &serial, 0..len, cm_chunk, cv_chunk);
+        dense_rows_into::<A>(&args, &serial, ep, 0..len, cm_chunk, cv_chunk);
     };
     if tiles.len() <= 1 {
         run_tile(0..rows);
@@ -622,6 +629,7 @@ mod tests {
                     None,
                     None,
                     &sched,
+                    Epilogue::None,
                     &tiles,
                     &scatter,
                     &mut scratch2,
@@ -630,6 +638,84 @@ mod tests {
                 );
                 assert_eq!(mu, want_mu, "tasks={tasks} mu");
                 assert_eq!(var, want_var, "tasks={tasks} var");
+            }
+        });
+    }
+
+    #[test]
+    fn fused_relu_epilogue_commutes_with_scatter() {
+        // fused conv+relu applies the epilogue on the pre-scatter [rows, O]
+        // chunks; the unfused reference applies it on the NCHW output. The
+        // elementwise kernels are position-independent (tails run through
+        // padded lanes of the same code), so the two orderings must agree
+        // bit for bit — per ISA, at any tile count.
+        use crate::ops::relu::pfp_relu_rows_into;
+        use crate::ops::simd::Isa;
+        use crate::util::threadpool::{split_ranges, ThreadPool};
+        let pool = ThreadPool::new(3);
+        check(4, |g| {
+            let (x, w_mu, w_var, n, _c, o, _k, _hw) = rand_conv_case(g);
+            let w_e2 = w_mu.zip(&w_var, |m, v| m * m + v).unwrap();
+            let xs = x.shape();
+            let ws = w_mu.shape();
+            let sh = ConvShape {
+                n: xs[0],
+                c: xs[1],
+                h: xs[2],
+                w: xs[3],
+                o: ws[0],
+                kh: ws[2],
+                kw: ws[3],
+            };
+            for isa in [Isa::Scalar, Isa::Native] {
+                let sched = Schedule::tuned(1).with_isa(isa);
+                let out_len = sh.out_len();
+                let mut scratch = vec![0.0f32; sh.scratch_len(false)];
+                let mut conv_mu = vec![0.0f32; out_len];
+                let mut conv_var = vec![0.0f32; out_len];
+                conv_kernel_into::<JointEq12>(
+                    &pool,
+                    &sh,
+                    x.mu.data(),
+                    Some(x.aux.data()),
+                    w_mu.data(),
+                    w_e2.data(),
+                    None,
+                    None,
+                    &sched,
+                    &mut scratch,
+                    &mut conv_mu,
+                    &mut conv_var,
+                );
+                let mut want_mu = vec![0.0f32; out_len];
+                let mut want_e2 = vec![0.0f32; out_len];
+                pfp_relu_rows_into(isa, &conv_mu, &conv_var, 0..out_len, &mut want_mu, &mut want_e2);
+                for tasks in [1usize, 3, 7] {
+                    let tiles = split_ranges(sh.rows(), tasks);
+                    let scatter = split_ranges(n * o, tasks);
+                    let mut mu = vec![0.0f32; out_len];
+                    let mut e2 = vec![0.0f32; out_len];
+                    let mut scratch2 = vec![0.0f32; sh.scratch_len(false)];
+                    conv_kernel_tiled_into::<JointEq12>(
+                        &pool,
+                        &sh,
+                        x.mu.data(),
+                        Some(x.aux.data()),
+                        w_mu.data(),
+                        w_e2.data(),
+                        None,
+                        None,
+                        &sched,
+                        Epilogue::Relu,
+                        &tiles,
+                        &scatter,
+                        &mut scratch2,
+                        &mut mu,
+                        &mut e2,
+                    );
+                    assert_eq!(mu, want_mu, "{isa:?} tasks={tasks} fused mu");
+                    assert_eq!(e2, want_e2, "{isa:?} tasks={tasks} fused e2");
+                }
             }
         });
     }

@@ -30,6 +30,7 @@
 use crate::tensor::Tensor;
 use crate::util::threadpool::{self, split_ranges, DisjointMut, ThreadPool};
 
+use super::relu::{apply_epilogue, Epilogue};
 use super::schedule::{LoopOrder, Schedule};
 use super::simd::{self, Backend};
 
@@ -535,16 +536,20 @@ fn run_rows<A: Accum>(
 /// Run kernel `A` serially over output rows `rows` of the full workload
 /// described by `args`, writing the `[rows.len(), N]` chunk
 /// (chunk-relative row indexing) including the bias/clamp epilogue for
-/// those rows. This is one planned *tile*: the compiled plan partitions
-/// rows over the pool and gang-dispatches this per tile. Partitioning
-/// over rows never touches the per-row reduction order, and the epilogue
-/// is elementwise — so **any** row partition is bit-identical to the
-/// serial whole-matrix pass. Allocation-free for `Mnk` schedules (tiled
-/// or not); the deliberately naive `Mkn` baseline allocates its per-row
-/// accumulator vector.
+/// those rows — and, when `ep` is not [`Epilogue::None`], the fused
+/// moment-matched ReLU(+convert) epilogue on the same cache-hot chunk
+/// (the PR 8 fusion hook: the chunk is never written back and re-read by
+/// a standalone relu/convert step). This is one planned *tile*: the
+/// compiled plan partitions rows over the pool and gang-dispatches this
+/// per tile. Partitioning over rows never touches the per-row reduction
+/// order, and both epilogues are elementwise — so **any** row partition
+/// is bit-identical to the serial whole-matrix pass. Allocation-free for
+/// `Mnk` schedules (tiled or not); the deliberately naive `Mkn` baseline
+/// allocates its per-row accumulator vector.
 pub fn dense_rows_into<A: Accum>(
     args: &DenseSlices<'_>,
     sched: &Schedule,
+    ep: Epilogue,
     rows: std::ops::Range<usize>,
     out_mu: &mut [f32],
     out_var: &mut [f32],
@@ -575,6 +580,8 @@ pub fn dense_rows_into<A: Accum>(
             }
         }
     }
+    // fused elementwise chain (relu / relu+convert) on the hot chunk
+    apply_epilogue(ep, sched.isa, out_mu, out_var);
 }
 
 /// Execute kernel `A` with schedule `sched` on `pool`, writing the
@@ -599,7 +606,7 @@ pub fn dense_kernel_into<A: Accum>(
 
     let threads = sched.threads.max(1).min(m.max(1));
     if threads <= 1 {
-        dense_rows_into::<A>(args, sched, 0..m, out_mu, out_var);
+        dense_rows_into::<A>(args, sched, Epilogue::None, 0..m, out_mu, out_var);
         return;
     }
     let ranges = split_ranges(m, threads);
@@ -617,7 +624,9 @@ pub fn dense_kernel_into<A: Accum>(
     }
     pool.scope(|s| {
         for (r, mu_chunk, var_chunk) in chunks {
-            s.spawn(move || dense_rows_into::<A>(args, sched, r, mu_chunk, var_chunk));
+            s.spawn(move || {
+                dense_rows_into::<A>(args, sched, Epilogue::None, r, mu_chunk, var_chunk)
+            });
         }
     });
 }
@@ -635,13 +644,14 @@ pub fn dense_kernel_tiled_into<A: Accum>(
     pool: &ThreadPool,
     args: &DenseSlices<'_>,
     sched: &Schedule,
+    ep: Epilogue,
     tiles: &[std::ops::Range<usize>],
     out_mu: &mut [f32],
     out_var: &mut [f32],
 ) {
     let serial = sched.with_threads(1);
     if tiles.len() <= 1 {
-        dense_rows_into::<A>(args, &serial, 0..args.m, out_mu, out_var);
+        dense_rows_into::<A>(args, &serial, ep, 0..args.m, out_mu, out_var);
         return;
     }
     let n = args.n;
@@ -654,7 +664,7 @@ pub fn dense_kernel_tiled_into<A: Accum>(
             // SAFETY: tiles are disjoint row ranges, so the chunks never
             // overlap, and run_tasks blocks until every tile completes.
             unsafe { (mu.slice(r.start * n, len), var.slice(r.start * n, len)) };
-        dense_rows_into::<A>(args, &serial, r, mu_chunk, var_chunk);
+        dense_rows_into::<A>(args, &serial, ep, r, mu_chunk, var_chunk);
     });
 }
 
@@ -1013,18 +1023,22 @@ mod tests {
             b_var: Some(&b_var),
         };
         for sched in [Schedule::tuned(1), Schedule::tiled(16, 32)] {
-            let mut want_mu = vec![0.0f32; m * n];
-            let mut want_var = vec![0.0f32; m * n];
-            dense_rows_into::<JointEq12>(&slices, &sched, 0..m, &mut want_mu, &mut want_var);
-            for tasks in [2usize, 3, 5, 13] {
-                let tiles = split_ranges(m, tasks);
-                let mut mu = vec![0.0f32; m * n];
-                let mut var = vec![0.0f32; m * n];
-                dense_kernel_tiled_into::<JointEq12>(
-                    &pool, &slices, &sched, &tiles, &mut mu, &mut var,
-                );
-                assert_eq!(mu, want_mu, "{} tasks={tasks} mu", sched.tag());
-                assert_eq!(var, want_var, "{} tasks={tasks} var", sched.tag());
+            // with and without the fused relu epilogue: elementwise, so
+            // the row partition stays bit-identical either way
+            for ep in [Epilogue::None, Epilogue::Relu, Epilogue::ReluToVar] {
+                let mut want_mu = vec![0.0f32; m * n];
+                let mut want_var = vec![0.0f32; m * n];
+                dense_rows_into::<JointEq12>(&slices, &sched, ep, 0..m, &mut want_mu, &mut want_var);
+                for tasks in [2usize, 3, 5, 13] {
+                    let tiles = split_ranges(m, tasks);
+                    let mut mu = vec![0.0f32; m * n];
+                    let mut var = vec![0.0f32; m * n];
+                    dense_kernel_tiled_into::<JointEq12>(
+                        &pool, &slices, &sched, ep, &tiles, &mut mu, &mut var,
+                    );
+                    assert_eq!(mu, want_mu, "{} {ep:?} tasks={tasks} mu", sched.tag());
+                    assert_eq!(var, want_var, "{} {ep:?} tasks={tasks} var", sched.tag());
+                }
             }
         }
     }

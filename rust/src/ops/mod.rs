@@ -26,5 +26,6 @@ pub mod schedule;
 pub mod simd;
 pub mod svi;
 
+pub use relu::Epilogue;
 pub use schedule::{LoopOrder, Schedule};
 pub use simd::Isa;

@@ -44,6 +44,76 @@ pub fn pfp_relu(input: ProbTensor, threads: usize, isa: Isa) -> ProbTensor {
     pfp_relu_in(threadpool::global(), input, threads, isa)
 }
 
+/// Fused elementwise epilogue applied by the dense/conv microkernels on
+/// their freshly-computed (mu, var) output tile, while it is still
+/// cache-hot — the plan's fusion lowering (PR 8) collapses a
+/// `compute → pfp_relu (→ Convert)` chain into a single step carrying one
+/// of these.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Epilogue {
+    /// Plain compute step — no fused elementwise chain.
+    #[default]
+    None,
+    /// Moment-matched ReLU (Eqs. 8/9): the tile's aux plane changes
+    /// meaning from variance to **E\[x'^2\]**, exactly like a standalone
+    /// `pfp_relu` step.
+    Relu,
+    /// ReLU plus the E2→Var conversion the next consumer (max-pool or the
+    /// network output) would otherwise need as a separate `Convert@…`
+    /// step: the aux plane stays a **variance**.
+    ReluToVar,
+}
+
+/// Fixed stack-buffer chunk for the in-place SIMD epilogue.
+/// A multiple of every vector width (8 for AVX2, 4 for NEON), so chunking
+/// never moves an element between a full lane and the kernel's tail path —
+/// per element the fused epilogue is bit-identical to the standalone
+/// `pfp_relu_rows_into` pass on the same ISA.
+const EPILOGUE_CHUNK: usize = 64;
+
+/// Apply `ep` in place on one output tile: `mu`/`aux` hold the compute
+/// step's (mean, variance) planes and are overwritten with the ReLU'd
+/// moments (`aux` becomes E\[x'^2\], or stays a variance for
+/// [`Epilogue::ReluToVar`]). Allocation-free: the SIMD kernels take
+/// separate in/out slices, so the in-place form round-trips through
+/// fixed-size stack chunks.
+pub fn apply_epilogue(ep: Epilogue, isa: Isa, mu: &mut [f32], aux: &mut [f32]) {
+    if ep == Epilogue::None {
+        return;
+    }
+    debug_assert_eq!(mu.len(), aux.len());
+    let to_var = ep == Epilogue::ReluToVar;
+    let b = simd::resolve(isa);
+    if b == Backend::Scalar {
+        for (m, a) in mu.iter_mut().zip(aux.iter_mut()) {
+            let (rm, re2) = relu_moments(*m, *a);
+            *m = rm;
+            // E2→Var fold: same arithmetic as `convert_in_place` on the
+            // unfused path, so scalar fused == scalar unfused bit for bit
+            *a = if to_var { (re2 - rm * rm).max(0.0) } else { re2 };
+        }
+    } else {
+        let mut tm = [0.0f32; EPILOGUE_CHUNK];
+        let mut te = [0.0f32; EPILOGUE_CHUNK];
+        let n = mu.len();
+        let mut i = 0;
+        while i < n {
+            let end = (i + EPILOGUE_CHUNK).min(n);
+            let len = end - i;
+            simd::relu_moments_into(b, &mu[i..end], &aux[i..end], &mut tm[..len], &mut te[..len]);
+            mu[i..end].copy_from_slice(&tm[..len]);
+            if to_var {
+                for j in 0..len {
+                    aux[i + j] = (te[j] - tm[j] * tm[j]).max(0.0);
+                }
+            } else {
+                aux[i..end].copy_from_slice(&te[..len]);
+            }
+            i = end;
+        }
+    }
+}
+
 /// One tile of the moment-matched ReLU: elements `r` of the input, into
 /// chunk-relative output slices. Elementwise, so any partition is
 /// bit-identical to the serial pass (within one ISA). Allocation-free.
@@ -277,6 +347,50 @@ mod tests {
                 s_e2[i]
             );
         }
+    }
+
+    #[test]
+    fn epilogue_matches_standalone_relu_then_convert_per_isa() {
+        // the fused in-place epilogue must reproduce the unfused
+        // relu(+convert) chain exactly, per ISA: the 64-element chunking
+        // is lane-aligned so no element changes code path (odd length
+        // exercises the final partial chunk)
+        let mut g = crate::util::prop::Gen::new(31);
+        let n = 501;
+        let mu: Vec<f32> = g.normal_vec(n, 2.0);
+        let var: Vec<f32> = g.var_vec(n, 1.0);
+        for isa in [Isa::Scalar, Isa::Native] {
+            let mut want_mu = vec![0.0f32; n];
+            let mut want_e2 = vec![0.0f32; n];
+            pfp_relu_rows_into(isa, &mu, &var, 0..n, &mut want_mu, &mut want_e2);
+            let mut got_mu = mu.clone();
+            let mut got_e2 = var.clone();
+            apply_epilogue(Epilogue::Relu, isa, &mut got_mu, &mut got_e2);
+            assert_eq!(got_mu, want_mu, "{isa:?} fused relu mu");
+            assert_eq!(got_e2, want_e2, "{isa:?} fused relu e2");
+
+            // ReluToVar additionally folds the E2→Var conversion the
+            // executor's convert step would apply on the relu'd moments
+            let want_var: Vec<f32> = want_e2
+                .iter()
+                .zip(&want_mu)
+                .map(|(&e2, &m)| (e2 - m * m).max(0.0))
+                .collect();
+            let mut got_mu = mu.clone();
+            let mut got_var = var.clone();
+            apply_epilogue(Epilogue::ReluToVar, isa, &mut got_mu, &mut got_var);
+            assert_eq!(got_mu, want_mu, "{isa:?} fused relu+convert mu");
+            assert_eq!(got_var, want_var, "{isa:?} fused relu+convert var");
+        }
+    }
+
+    #[test]
+    fn none_epilogue_is_identity() {
+        let mut mu = vec![1.0f32, -2.0, 3.0];
+        let mut aux = vec![0.5f32, 0.25, 4.0];
+        apply_epilogue(Epilogue::None, Isa::Native, &mut mu, &mut aux);
+        assert_eq!(mu, vec![1.0, -2.0, 3.0]);
+        assert_eq!(aux, vec![0.5, 0.25, 4.0]);
     }
 
     #[test]

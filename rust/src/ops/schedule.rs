@@ -64,6 +64,15 @@ pub struct Schedule {
     /// the elementwise moment-matching ops bound with this schedule) to
     /// the runtime-detected ISA backend.
     pub isa: Isa,
+    /// Fused-epilogue eligibility (PR 8): when plan lowering runs under
+    /// `FusePolicy::Auto`, a compute step whose bound schedule carries
+    /// `fuse: true` absorbs a directly-following moment-matched ReLU (and
+    /// an absorbable `Convert`) into its kernel epilogue, skipping the
+    /// intermediate ping-pong buffer round trips. The knob only marks
+    /// *eligibility* — which epilogue actually applies (ReLU vs
+    /// ReLU+E2→Var vs none on a last layer) is decided by the plan's
+    /// pattern matcher.
+    pub fuse: bool,
 }
 
 impl Default for Schedule {
@@ -83,12 +92,16 @@ impl Schedule {
             vectorize: false,
             threads: 1,
             isa: Isa::Scalar,
+            fuse: false,
         }
     }
 
     /// The hand-tuned schedule that Table 2's "All Optimizations (no
     /// tiling) + stochastic tuning" row converges to — explicit SIMD
-    /// included (runtime-detected, scalar where unsupported).
+    /// included (runtime-detected, scalar where unsupported). `fuse`
+    /// stays off: the bitwise plan==interpreter contract is anchored on
+    /// this schedule, and fusion is an opt-in policy (see
+    /// `model::FusePolicy`).
     pub fn tuned(threads: usize) -> Self {
         Self {
             loop_order: LoopOrder::Mnk,
@@ -98,6 +111,7 @@ impl Schedule {
             vectorize: true,
             threads,
             isa: Isa::Native,
+            fuse: false,
         }
     }
 
@@ -111,6 +125,7 @@ impl Schedule {
             vectorize: false,
             threads: 1,
             isa: Isa::Scalar,
+            fuse: false,
         }
     }
 
@@ -145,10 +160,15 @@ impl Schedule {
         self
     }
 
+    pub fn with_fuse(mut self, fuse: bool) -> Self {
+        self.fuse = fuse;
+        self
+    }
+
     /// Short human tag, used in bench output and tuning records.
     pub fn tag(&self) -> String {
         format!(
-            "{:?}{}{}{}{}{}",
+            "{:?}{}{}{}{}{}{}",
             self.loop_order,
             if self.tile_n > 0 || self.tile_k > 0 {
                 format!("+tile{}x{}", self.tile_n, self.tile_k)
@@ -158,6 +178,7 @@ impl Schedule {
             if self.unroll > 1 { format!("+u{}", self.unroll) } else { String::new() },
             if self.vectorize { "+vec" } else { "" },
             if self.isa == Isa::Native { "+simd" } else { "" },
+            if self.fuse { "+fuse" } else { "" },
             if self.threads > 1 { format!("+t{}", self.threads) } else { String::new() },
         )
     }
@@ -176,6 +197,7 @@ impl Schedule {
             ("vectorize", Json::Bool(self.vectorize)),
             ("threads", Json::Num(self.threads as f64)),
             ("isa", Json::Str(self.isa.as_str().to_string())),
+            ("fuse", Json::Bool(self.fuse)),
         ])
     }
 
@@ -200,6 +222,11 @@ impl Schedule {
                 .and_then(|s| s.as_str())
                 .and_then(Isa::parse)
                 .unwrap_or(Isa::Scalar),
+            // absent in pre-fusion records: those schedules were measured
+            // on the unfused kernels, so they keep describing them (the
+            // records-file version gate in `tuner::records` warns and
+            // drops whole pre-v4 files before this fallback is ever hit)
+            fuse: v.get("fuse").and_then(|b| b.as_bool()).unwrap_or(false),
         })
     }
 }
@@ -210,7 +237,7 @@ mod tests {
 
     #[test]
     fn json_roundtrip() {
-        let s = Schedule::tuned(4).with_tiles(16, 64);
+        let s = Schedule::tuned(4).with_tiles(16, 64).with_fuse(true);
         let j = s.to_json();
         let back = Schedule::from_json(&j).unwrap();
         assert_eq!(s, back);
@@ -225,6 +252,11 @@ mod tests {
             Schedule::tuned(1).tag(),
             Schedule::tuned(1).with_isa(Isa::Scalar).tag()
         );
+        // so is the fuse knob
+        assert_ne!(
+            Schedule::tuned(1).tag(),
+            Schedule::tuned(1).with_fuse(true).tag()
+        );
     }
 
     #[test]
@@ -238,5 +270,19 @@ mod tests {
         let back = Schedule::from_json(&j).unwrap();
         assert_eq!(back.isa, Isa::Scalar);
         assert_eq!(back.unroll, 8);
+    }
+
+    #[test]
+    fn missing_fuse_field_parses_as_off() {
+        // pre-fusion-era schedule JSON (schema v3 and earlier): those
+        // schedules were measured on the unfused kernels, so they must
+        // keep describing the unfused path
+        let mut j = Schedule::tuned(2).with_fuse(true).to_json();
+        if let crate::util::json::Json::Obj(obj) = &mut j {
+            obj.remove("fuse");
+        }
+        let back = Schedule::from_json(&j).unwrap();
+        assert!(!back.fuse);
+        assert_eq!(back.isa, Isa::Native);
     }
 }

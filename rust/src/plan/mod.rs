@@ -27,6 +27,23 @@
 //!   ISA, and the one-time runtime detector resolves `Native` to
 //!   AVX2+FMA / NEON / scalar at execution (`PFP_FORCE_SCALAR=1` forces
 //!   the fallback);
+//! * **fused epilogues** (PR 8): under the plan's fusion policy
+//!   ([`FusePolicy`](crate::model::FusePolicy)), a dense/conv step
+//!   directly followed by the moment-matched ReLU absorbs it — and, when
+//!   the ReLU's E2 output would immediately be converted back to a
+//!   variance for the next consumer (max-pool or the network output),
+//!   the conversion too — into a single step whose kernel applies the
+//!   elementwise chain on each cache-hot output tile
+//!   ([`Epilogue`](crate::ops::Epilogue)). This removes the 2–3
+//!   full-tensor ping-pong round trips per layer that standalone
+//!   relu/convert steps cost; the buffer high-water mark is recomputed
+//!   over the fused step list (same value — the absorbed ops are
+//!   same-length — but fused layers skip a buffer generation). Fused
+//!   steps keep the producing layer's Table-4 label and op type, and
+//!   within one ISA they are bit-identical to the unfused lowering (the
+//!   elementwise kernels are position-independent); the serve/tune
+//!   `--fuse on|off|auto` flag drives the policy, default off for the
+//!   stock schedules so plan == interpreter stays bitwise;
 //! * the step's **work partition** resolved at plan time: each parallel
 //!   step carries a pre-bound list of disjoint tile tasks (row ranges for
 //!   dense, patch-row + output-plane ranges for conv's im2col lowering,
@@ -57,7 +74,7 @@ use crate::ops::maxpool::{
     det_maxpool2_tiled_into, pfp_maxpool2_tiled_into, pfp_maxpool_generic_into,
 };
 use crate::ops::relu::pfp_relu_tiled_into;
-use crate::ops::Schedule;
+use crate::ops::{Epilogue, Schedule};
 use crate::profiling::Profiler;
 use crate::tensor::{convert_in_place, Rep};
 use crate::util::threadpool::{split_ranges, DisjointMut, ThreadPool};
@@ -100,6 +117,10 @@ struct Step {
     /// Profiler label: the layer's Table-4 name, or `Convert@<layer>`.
     label: String,
     op_type: &'static str,
+    /// Fused elementwise chain (dense/conv steps only): the kernel
+    /// applies it per cache-hot output tile, replacing the standalone
+    /// relu (and possibly convert) steps the pattern matcher absorbed.
+    epilogue: Epilogue,
     in_len: usize,
     out_len: usize,
 }
@@ -138,6 +159,11 @@ pub struct DenseWorkload {
     pub m: usize,
     pub k: usize,
     pub n: usize,
+    /// The elementwise chain this plan fused into the step
+    /// ([`Epilogue::None`] when lowered unfused). The tuner measures
+    /// fused candidates with exactly this epilogue so the record
+    /// describes the kernel that would actually run.
+    pub ep: Epilogue,
 }
 
 /// A network lowered to a flat step sequence for one batch size.
@@ -238,6 +264,7 @@ impl CompiledPlan {
                         sched: sched.with_threads(1),
                         label: labels[li].clone(),
                         op_type: "dense",
+                        epilogue: Epilogue::None,
                         in_len: cur_len,
                         out_len,
                     });
@@ -304,6 +331,7 @@ impl CompiledPlan {
                         sched: sched.with_threads(1),
                         label: labels[li].clone(),
                         op_type: "conv2d",
+                        epilogue: Epilogue::None,
                         in_len: cur_len,
                         out_len,
                     });
@@ -320,7 +348,7 @@ impl CompiledPlan {
                         )));
                     }
                     if pfp {
-                        if rep != Some(Rep::Var) {
+                        if rep != Some(Rep::Var) && !absorb_var_convert(&mut steps) {
                             steps.push(convert_step(
                                 rep.unwrap(),
                                 Rep::Var,
@@ -328,19 +356,46 @@ impl CompiledPlan {
                                 &labels[li],
                             ));
                         }
-                        steps.push(Step {
-                            kind: StepKind::Relu,
-                            // the elementwise moment-matching kernels bind
-                            // the plan-wide ISA policy (Native unless
-                            // overridden — erf/exp dominate this step)
-                            sched: Schedule::baseline()
-                                .with_isa(schedules.elementwise_isa()),
-                            tiles: tile_ranges(cur_len, step_tasks(schedules.relu_threads)),
-                            label: labels[li].clone(),
-                            op_type: "relu",
-                            in_len: cur_len,
-                            out_len: cur_len,
+                        // PR 8 pattern match: a moment-matched ReLU whose
+                        // variance input is the directly preceding
+                        // dense/conv output (no convert in between) folds
+                        // into that step's kernel epilogue when the
+                        // fusion policy allows it — no standalone relu
+                        // step, no ping-pong round trip.
+                        let fusable = steps.last().is_some_and(|s| {
+                            matches!(
+                                s.kind,
+                                StepKind::Dense { .. } | StepKind::Conv { .. }
+                            ) && s.epilogue == Epilogue::None
+                                && schedules.step_fuses(&s.sched)
                         });
+                        if fusable {
+                            let last = steps.last_mut().unwrap();
+                            last.epilogue = Epilogue::Relu;
+                            // reflect fusion in the bound schedule so the
+                            // step's tag() reads `+fuse` whichever policy
+                            // (On vs Auto+knob) enabled it
+                            last.sched.fuse = true;
+                        } else {
+                            steps.push(Step {
+                                kind: StepKind::Relu,
+                                // the elementwise moment-matching kernels
+                                // bind the plan-wide ISA policy (Native
+                                // unless overridden — erf/exp dominate
+                                // this step)
+                                sched: Schedule::baseline()
+                                    .with_isa(schedules.elementwise_isa()),
+                                tiles: tile_ranges(
+                                    cur_len,
+                                    step_tasks(schedules.relu_threads),
+                                ),
+                                label: labels[li].clone(),
+                                op_type: "relu",
+                                epilogue: Epilogue::None,
+                                in_len: cur_len,
+                                out_len: cur_len,
+                            });
+                        }
                         rep = Some(Rep::E2);
                     } else {
                         steps.push(Step {
@@ -349,6 +404,7 @@ impl CompiledPlan {
                             tiles: tile_ranges(cur_len, step_tasks(schedules.relu_threads)),
                             label: labels[li].clone(),
                             op_type: "relu",
+                            epilogue: Epilogue::None,
                             in_len: cur_len,
                             out_len: cur_len,
                         });
@@ -364,7 +420,7 @@ impl CompiledPlan {
                     let (c, h, w) = (shape[0], shape[1], shape[2]);
                     let out_len = batch * c * (h / 2) * (w / 2);
                     if pfp {
-                        if rep != Some(Rep::Var) {
+                        if rep != Some(Rep::Var) && !absorb_var_convert(&mut steps) {
                             steps.push(convert_step(
                                 rep.unwrap(),
                                 Rep::Var,
@@ -392,6 +448,7 @@ impl CompiledPlan {
                             tiles: pool_tiles,
                             label: labels[li].clone(),
                             op_type: "maxpool",
+                            epilogue: Epilogue::None,
                             in_len: cur_len,
                             out_len,
                         });
@@ -406,6 +463,7 @@ impl CompiledPlan {
                             ),
                             label: labels[li].clone(),
                             op_type: "maxpool",
+                            epilogue: Epilogue::None,
                             in_len: cur_len,
                             out_len,
                         });
@@ -429,7 +487,7 @@ impl CompiledPlan {
             )));
         }
         // the executor contract returns (mean, variance) moments
-        if pfp && rep != Some(Rep::Var) {
+        if pfp && rep != Some(Rep::Var) && !absorb_var_convert(&mut steps) {
             steps.push(convert_step(rep.unwrap(), Rep::Var, cur_len, "output"));
         }
 
@@ -479,6 +537,13 @@ impl CompiledPlan {
         self.steps.iter().filter(|s| s.tiles.len() > 1).count()
     }
 
+    /// Compute steps that absorbed a following elementwise chain (PR 8
+    /// fusion). Zero when the fusion policy resolved to off for every
+    /// step, or the program had no fusable pattern.
+    pub fn num_fused_steps(&self) -> usize {
+        self.steps.iter().filter(|s| s.epilogue != Epilogue::None).count()
+    }
+
     /// The dense-kernel workload of every compute step (conv steps report
     /// their im2col'd dims) — the tuner's per-layer search targets.
     pub fn dense_workloads(&self) -> Vec<DenseWorkload> {
@@ -492,6 +557,7 @@ impl CompiledPlan {
                     m: *m,
                     k: *k,
                     n: *n,
+                    ep: s.epilogue,
                 }),
                 StepKind::Conv { w, shape, .. } => Some(DenseWorkload {
                     compute_idx: *w,
@@ -500,6 +566,7 @@ impl CompiledPlan {
                     m: shape.rows(),
                     k: shape.kk(),
                     n: shape.o,
+                    ep: s.epilogue,
                 }),
                 _ => None,
             })
@@ -602,13 +669,16 @@ impl CompiledPlan {
                     let out_var = &mut dst.aux[..step.out_len];
                     profiler.record(&step.label, step.op_type, || match (self.mode, *first) {
                         (PlanMode::Det, _) => dense_kernel_tiled_into::<MeanOnly>(
-                            pool, &args, &step.sched, &step.tiles, out_mu, out_var,
+                            pool, &args, &step.sched, step.epilogue, &step.tiles, out_mu,
+                            out_var,
                         ),
                         (PlanMode::Pfp, true) => dense_kernel_tiled_into::<FirstLayer>(
-                            pool, &args, &step.sched, &step.tiles, out_mu, out_var,
+                            pool, &args, &step.sched, step.epilogue, &step.tiles, out_mu,
+                            out_var,
                         ),
                         (PlanMode::Pfp, false) => dense_kernel_tiled_into::<JointEq12>(
-                            pool, &args, &step.sched, &step.tiles, out_mu, out_var,
+                            pool, &args, &step.sched, step.epilogue, &step.tiles, out_mu,
+                            out_var,
                         ),
                     });
                     cur_a = dst_is_a;
@@ -645,6 +715,7 @@ impl CompiledPlan {
                             Some(lw.b_mu.data()),
                             b_var,
                             &step.sched,
+                            step.epilogue,
                             &step.tiles,
                             scatter,
                             scratch,
@@ -661,6 +732,7 @@ impl CompiledPlan {
                             Some(lw.b_mu.data()),
                             b_var,
                             &step.sched,
+                            step.epilogue,
                             &step.tiles,
                             scatter,
                             scratch,
@@ -677,6 +749,7 @@ impl CompiledPlan {
                             Some(lw.b_mu.data()),
                             b_var,
                             &step.sched,
+                            step.epilogue,
                             &step.tiles,
                             scatter,
                             scratch,
@@ -746,8 +819,30 @@ fn convert_step(from: Rep, to: Rep, len: usize, at: &str) -> Step {
         tiles: Vec::new(),
         label: format!("Convert@{at}"),
         op_type: "convert",
+        epilogue: Epilogue::None,
         in_len: len,
         out_len: len,
+    }
+}
+
+/// PR 8 convert absorption: when the pending E2→Var conversion's input is
+/// the output of a step that already fused the ReLU, upgrade that step's
+/// epilogue to [`Epilogue::ReluToVar`] instead of emitting a standalone
+/// `Convert@<layer>` step — the subtraction happens on the same cache-hot
+/// tile as the ReLU moments. Returns whether the conversion was absorbed.
+/// Converts whose producer is a pool step (LeNet's `Convert@Conv2d 2` /
+/// `Convert@Dense 1`) are not absorbable and still lower to explicit
+/// steps.
+fn absorb_var_convert(steps: &mut [Step]) -> bool {
+    match steps.last_mut() {
+        Some(s)
+            if matches!(s.kind, StepKind::Dense { .. } | StepKind::Conv { .. })
+                && s.epilogue == Epilogue::Relu =>
+        {
+            s.epilogue = Epilogue::ReluToVar;
+            true
+        }
+        _ => false,
     }
 }
 
@@ -944,6 +1039,202 @@ mod tests {
                 assert_eq!(want_mu.as_slice(), mu, "{} t={t} mu", arch.name);
                 assert_eq!(want_var.as_slice(), var, "{} t={t} var", arch.name);
             }
+        }
+    }
+
+    fn compile_pfp_fused(arch: &Arch, batch: usize) -> (CompiledPlan, Workspace) {
+        use crate::model::FusePolicy;
+        let w = Arc::new(PosteriorWeights::synthetic(arch, 9));
+        let plan = CompiledPlan::compile(
+            arch,
+            w,
+            &Schedules::tuned(1).with_fuse(FusePolicy::On),
+            batch,
+            PlanMode::Pfp,
+        )
+        .unwrap();
+        let ws = plan.workspace();
+        (plan, ws)
+    }
+
+    #[test]
+    fn fused_mlp_absorbs_every_relu() {
+        // MLP: dense -> relu -> dense -> relu -> dense. Both ReLUs follow
+        // a dense producer, so fusion leaves only the 3 compute steps.
+        let (plan, _) = compile_pfp_fused(&Arch::mlp(), 4);
+        assert_eq!(plan.num_steps(), 3, "3 fused dense steps, nothing else");
+        assert_eq!(plan.num_fused_steps(), 2, "classifier head has no relu");
+        assert!(plan.step_labels().iter().all(|(_, t)| *t == "dense"));
+    }
+
+    #[test]
+    fn fused_lenet_absorbs_relu_and_adjacent_converts() {
+        // Each conv's relu + the E2->Var convert feeding the pool fold
+        // into the conv step (ReluToVar); each hidden dense's relu folds
+        // as Relu (next dense wants E2, so no convert exists). The two
+        // converts after pool steps have no fusable producer and stay.
+        let (plan, _) = compile_pfp_fused(&Arch::lenet(), 2);
+        let labels = plan.step_labels();
+        assert!(
+            labels.iter().all(|(_, t)| *t != "relu"),
+            "no standalone relu after a dense/conv producer: {labels:?}"
+        );
+        let converts: Vec<&str> = labels
+            .iter()
+            .filter(|(_, t)| *t == "convert")
+            .map(|(l, _)| l.as_str())
+            .collect();
+        assert_eq!(converts, ["Convert@Conv2d 2", "Convert@Dense 1"]);
+        // 5 compute (4 fused) + 2 pool + 2 post-pool converts
+        assert_eq!(plan.num_steps(), 9);
+        assert_eq!(plan.num_fused_steps(), 4);
+        // workloads advertise the fused epilogues for the tuner
+        let eps: Vec<Epilogue> =
+            plan.dense_workloads().iter().map(|w| w.ep).collect();
+        use Epilogue::*;
+        assert_eq!(eps, [ReluToVar, ReluToVar, Relu, Relu, None]);
+    }
+
+    #[test]
+    fn auto_policy_defers_to_schedule_knob() {
+        use crate::model::FusePolicy;
+        let arch = Arch::mlp();
+        let w = Arc::new(PosteriorWeights::synthetic(&arch, 9));
+        // stock schedules carry fuse: false -> Auto lowers unfused
+        let auto = CompiledPlan::compile(
+            &arch,
+            Arc::clone(&w),
+            &Schedules::tuned(1),
+            2,
+            PlanMode::Pfp,
+        )
+        .unwrap();
+        assert_eq!(auto.num_fused_steps(), 0, "Auto + stock knobs = unfused");
+        // a per-layer schedule with the tuner-searched knob on fuses just
+        // that layer
+        let knob = CompiledPlan::compile(
+            &arch,
+            Arc::clone(&w),
+            &Schedules::tuned(1)
+                .with_layer_schedule(0, Schedule::tuned(1).with_fuse(true)),
+            2,
+            PlanMode::Pfp,
+        )
+        .unwrap();
+        assert_eq!(knob.num_fused_steps(), 1, "only the knobbed layer fuses");
+        // Off overrides even explicit knobs
+        let off = CompiledPlan::compile(
+            &arch,
+            w,
+            &Schedules::tuned(1)
+                .with_layer_schedule(0, Schedule::tuned(1).with_fuse(true))
+                .with_fuse(FusePolicy::Off),
+            2,
+            PlanMode::Pfp,
+        )
+        .unwrap();
+        assert_eq!(off.num_fused_steps(), 0);
+    }
+
+    #[test]
+    fn fused_execute_bit_identical_to_unfused() {
+        // The correctness contract: within one ISA, the fused epilogue
+        // runs the same position-independent elementwise kernels on the
+        // same values, so fused == unfused bit for bit — serial and at
+        // every plan-thread count.
+        use crate::model::FusePolicy;
+        for arch in [Arch::mlp(), Arch::lenet()] {
+            let w = Arc::new(PosteriorWeights::synthetic(&arch, 17));
+            let x = input(&arch, 4, 23);
+            let mut prof = Profiler::new(false);
+            let unfused = CompiledPlan::compile(
+                &arch,
+                Arc::clone(&w),
+                &Schedules::tuned(1),
+                4,
+                PlanMode::Pfp,
+            )
+            .unwrap();
+            let mut ws = unfused.workspace();
+            let (want_mu, want_var) = {
+                let (m, v) = unfused.execute(x.data(), &mut ws, &mut prof);
+                (m.to_vec(), v.to_vec())
+            };
+            for t in [1usize, 2, 4] {
+                let fused = CompiledPlan::compile(
+                    &arch,
+                    Arc::clone(&w),
+                    &Schedules::tuned(1)
+                        .with_fuse(FusePolicy::On)
+                        .with_plan_threads(t),
+                    4,
+                    PlanMode::Pfp,
+                )
+                .unwrap();
+                assert!(fused.num_fused_steps() > 0, "{}", arch.name);
+                let mut ws = fused.workspace();
+                let (mu, var) = fused.execute(x.data(), &mut ws, &mut prof);
+                assert_eq!(want_mu.as_slice(), mu, "{} t={t} mu", arch.name);
+                assert_eq!(want_var.as_slice(), var, "{} t={t} var", arch.name);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_profiling_attributes_absorbed_work_to_producer_rows() {
+        // the fused-step accounting contract (see profiling/mod.rs):
+        // absorbed relu/convert work files under the producing layer's
+        // Table-4 row with the compute op type; only the standalone
+        // post-pool converts keep "convert" samples
+        let arch = Arch::lenet();
+        let (plan, mut ws) = compile_pfp_fused(&arch, 2);
+        let x = input(&arch, 2, 13);
+        let mut prof = Profiler::new(true);
+        prof.begin_pass();
+        let _ = plan.execute(x.data(), &mut ws, &mut prof);
+        let profile = prof.take();
+        assert_eq!(profile.samples.len(), plan.num_steps(), "one sample per step");
+        assert!(
+            profile.samples.iter().all(|s| s.op_type != "relu"),
+            "absorbed relus must not record their own samples"
+        );
+        let convert_rows: Vec<&str> = profile
+            .samples
+            .iter()
+            .filter(|s| s.op_type == "convert")
+            .map(|s| s.label.as_str())
+            .collect();
+        assert_eq!(convert_rows, ["Convert@Conv2d 2", "Convert@Dense 1"]);
+        // every compute layer still owns exactly one Table-4 row, under
+        // its own label and compute op type
+        let compute: Vec<(&str, &str)> = profile
+            .samples
+            .iter()
+            .filter(|s| s.op_type == "conv2d" || s.op_type == "dense")
+            .map(|s| (s.label.as_str(), s.op_type.as_str()))
+            .collect();
+        assert_eq!(compute.len(), 5, "5 compute layers, one row each");
+        // Fig. 6 aggregate: the convert share now covers only the two
+        // standalone steps; no relu row exists at all
+        let types = profile.by_op_type();
+        assert!(types.iter().any(|r| r.label == "convert"));
+        assert!(types.iter().all(|r| r.label != "relu"));
+    }
+
+    #[test]
+    fn fused_workspace_high_water_mark_unchanged() {
+        // absorbed ops are same-length elementwise passes: recomputing the
+        // hwm over the shorter step list lands on the same arena size
+        for arch in [Arch::mlp(), Arch::lenet()] {
+            let (_, unfused_ws) = compile_pfp(&arch, 2);
+            let (_, fused_ws) = compile_pfp_fused(&arch, 2);
+            assert_eq!(unfused_ws.capacity(), fused_ws.capacity(), "{}", arch.name);
+            assert_eq!(
+                unfused_ws.scratch_capacity(),
+                fused_ws.scratch_capacity(),
+                "{}",
+                arch.name
+            );
         }
     }
 

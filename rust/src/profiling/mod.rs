@@ -5,6 +5,32 @@
 //! [`Profile::by_op_type`] Fig. 6's per-operator-type shares (including
 //! the representation-conversion overhead the paper files under
 //! "tooling").
+//!
+//! ## Fused-step accounting (PR 8)
+//!
+//! Epilogue fusion collapses a `dense/conv → pfp_relu (→ Convert)` chain
+//! into a single plan step, so the absorbed ReLU/convert work no longer
+//! records its own sample. The accounting contract:
+//!
+//! * a fused step records **once**, under the producing layer's Table-4
+//!   label (`"Dense 1"`, `"Conv2d 1"`, …) with the compute op type
+//!   (`"dense"` / `"conv2d"`) — the absorbed elementwise time is folded
+//!   into the producer's row, never dropped, so `total_per_pass_ms` and
+//!   the per-layer sums stay comparable pre/post fusion (the same layer's
+//!   work moves between its own rows, it does not leave the layer);
+//! * the aggregate `"relu"` and `"convert"` rows of [`by_op_type`]
+//!   (Fig. 6) therefore shrink to the **standalone** steps that remain
+//!   (e.g. the post-pool `Convert@<layer>` steps, which are never
+//!   fusable) — a fused plan legitimately reports a smaller conversion-
+//!   overhead share, because that overhead genuinely no longer exists as
+//!   separate memory passes;
+//! * `Convert@<layer>` rows for absorbed conversions disappear from
+//!   Table 4 rather than reporting 0 ms, mirroring the compiled plan's
+//!   actual step list ([`by_layer`] reads what ran, not the pre-fusion
+//!   lowering).
+//!
+//! [`by_layer`]: Profile::by_layer
+//! [`by_op_type`]: Profile::by_op_type
 
 use std::time::{Duration, Instant};
 

@@ -18,9 +18,9 @@ pub use space::SearchSpace;
 
 use std::sync::Arc;
 
-use crate::model::{Arch, PosteriorWeights, Schedules};
+use crate::model::{Arch, FusePolicy, PosteriorWeights, Schedules};
 use crate::ops::dense::{dense_kernel_tiled_into, DenseSlices, JointEq12};
-use crate::ops::Schedule;
+use crate::ops::{Epilogue, Schedule};
 use crate::plan::{tile_ranges, CompiledPlan, DenseWorkload, PlanMode};
 use crate::tensor::Tensor;
 use crate::util::rng::SplitMix64;
@@ -158,11 +158,14 @@ pub struct LayerTuneResult {
 /// pre-partitioned row-tile set the compiled plan would bind
 /// ([`tile_ranges`]), gang-dispatched onto the process pool into reused
 /// output buffers ([`dense_kernel_tiled_into`]) — so a persisted record
-/// describes exactly the code path that serves it, parallel, tiled, and
-/// explicit-SIMD (`isa`) candidates included (the candidate's ISA knob
-/// resolves through the same runtime detector serving uses). Inputs are the posterior's real weight tensors
-/// (flattened to `[N, K]` — identical memory layout) and synthetic
-/// activations of the layer's true shape.
+/// describes exactly the code path that serves it, parallel, tiled,
+/// explicit-SIMD (`isa`), and fused-epilogue (`fuse`) candidates included
+/// (the candidate's ISA knob resolves through the same runtime detector
+/// serving uses, and `fuse: true` candidates run the epilogue the plan
+/// would actually fuse into this layer — [`DenseWorkload::ep`], resolved
+/// by lowering the probe plan with [`FusePolicy::On`]). Inputs are the
+/// posterior's real weight tensors (flattened to `[N, K]` — identical
+/// memory layout) and synthetic activations of the layer's true shape.
 pub fn tune_per_layer(
     arch: &Arch,
     weights: &PosteriorWeights,
@@ -170,11 +173,13 @@ pub fn tune_per_layer(
     opts: TuneOpts,
     space: &SearchSpace,
 ) -> Vec<LayerTuneResult> {
-    // a throwaway plan lowering resolves every layer's concrete dims
+    // a throwaway plan lowering resolves every layer's concrete dims and
+    // fusable epilogues (policy On so `DenseWorkload::ep` reports what a
+    // fused plan would run; the knob-off measurement path ignores it)
     let plan = CompiledPlan::compile(
         arch,
         Arc::new(weights.clone()),
-        &Schedules::baseline(),
+        &Schedules::baseline().with_fuse(FusePolicy::On),
         batch,
         PlanMode::Pfp,
     )
@@ -205,12 +210,18 @@ pub fn tune_per_layer(
                 b_mu: Some(lw.b_mu.data()),
                 b_var: Some(lw.b_var.data()),
             };
+            let fused_ep = wl.ep;
             let result = tune(space, opts, |s| {
                 let tiles = tile_ranges(wl.m, s.threads);
+                // a `fuse: on` candidate is measured with the epilogue
+                // the plan would fuse here; `fuse: off` measures the bare
+                // kernel the unfused plan binds
+                let ep = if s.fuse { fused_ep } else { Epilogue::None };
                 dense_kernel_tiled_into::<JointEq12>(
                     pool,
                     &slices,
                     s,
+                    ep,
                     &tiles,
                     &mut out_mu,
                     &mut out_var,

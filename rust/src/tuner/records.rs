@@ -28,7 +28,12 @@ use crate::util::json::Json;
 ///   against scalar-only kernels on a different search space) are
 ///   ignored so a stale scalar best can't silently outrank the SIMD
 ///   microkernels.
-pub const SCHEMA_VERSION: u64 = 3;
+/// * 4 — PR 8: schedules carry the fused-epilogue `fuse` knob and were
+///   measured with the epilogue the plan would fuse into the layer; v3
+///   records (no `fuse` field — measured on the bare kernel only) would
+///   silently bind `fuse: off` against a fused-capable plan, so they are
+///   ignored the same way v2 was at the `isa` bump.
+pub const SCHEMA_VERSION: u64 = 4;
 
 /// Key -> (schedule, measured median ms).
 #[derive(Clone, Debug)]
@@ -268,6 +273,26 @@ mod tests {
         assert!(back.records.is_empty(), "stale records must not bind");
         assert_eq!(back.version, SCHEMA_VERSION, "fallback is a current empty table");
         // lookups on the ignored table fall back to the default schedule
+        assert_eq!(
+            back.lookup("dense", "mlp", 10, Schedule::baseline()),
+            Schedule::baseline()
+        );
+    }
+
+    #[test]
+    fn v3_records_without_fuse_field_are_ignored() {
+        // a PR-5-era (v3) file: has the `isa` knob but predates the
+        // fused-epilogue dimension. Binding it would silently default
+        // every layer to `fuse: off` against a fused-capable plan, so it
+        // must be warned about and dropped, not loaded.
+        let text = r#"{"__version__":3,
+            "dense/mlp/b10":{"schedule":{"loop_order":"Mnk",
+            "tile_n":0,"tile_k":0,"unroll":8,"vectorize":true,"threads":2,
+            "isa":"native"},
+            "median_ms":0.5}}"#;
+        let back = TuningRecords::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert!(back.records.is_empty(), "v3 records must not bind");
+        assert_eq!(back.version, SCHEMA_VERSION);
         assert_eq!(
             back.lookup("dense", "mlp", 10, Schedule::baseline()),
             Schedule::baseline()

@@ -15,6 +15,10 @@ pub struct SearchSpace {
     /// ISA candidates (the explicit-SIMD dimension). Defaults to both;
     /// `pfp tune --isa scalar|native` narrows it to one.
     pub isas: Vec<Isa>,
+    /// Fused-epilogue candidates. Defaults to both, so the search decides
+    /// per layer whether fusing the elementwise chain into the compute
+    /// kernel pays; `pfp tune --fuse on|off` narrows it to one.
+    pub fuses: Vec<bool>,
     /// probability of sampling a tiled candidate at all
     pub tile_prob: f64,
 }
@@ -29,6 +33,7 @@ impl SearchSpace {
             tile_ks: vec![0, 32, 64, 128],
             max_threads: max_threads.max(1),
             isas: vec![Isa::Scalar, Isa::Native],
+            fuses: vec![false, true],
             tile_prob: 0.25,
         }
     }
@@ -56,6 +61,7 @@ impl SearchSpace {
             vectorize: rng.randint(2) == 0,
             threads: 1 + rng.randint(self.max_threads as u64) as usize,
             isa: *self.pick(&self.isas, rng),
+            fuse: *self.pick(&self.fuses, rng),
         }
     }
 
@@ -64,11 +70,12 @@ impl SearchSpace {
     /// the stochastic search).
     pub fn mutate(&self, parent: &Schedule, rng: &mut SplitMix64) -> Schedule {
         let mut s = *parent;
-        match rng.randint(5) {
+        match rng.randint(6) {
             0 => s.loop_order = *self.pick(&self.orders, rng),
             1 => s.unroll = *self.pick(&self.unrolls, rng),
             2 => s.vectorize = !s.vectorize,
             3 => s.isa = *self.pick(&self.isas, rng),
+            4 => s.fuse = *self.pick(&self.fuses, rng),
             _ => s.threads = 1 + rng.randint(self.max_threads as u64) as usize,
         }
         s
@@ -85,6 +92,8 @@ mod tests {
         let mut rng = SplitMix64::new(1);
         let mut saw_native = false;
         let mut saw_scalar = false;
+        let mut saw_fused = false;
+        let mut saw_unfused = false;
         for _ in 0..200 {
             let s = space.sample(&mut rng);
             assert!(space.unrolls.contains(&s.unroll));
@@ -92,12 +101,15 @@ mod tests {
             assert!(space.isas.contains(&s.isa));
             saw_native |= s.isa == Isa::Native;
             saw_scalar |= s.isa == Isa::Scalar;
+            saw_fused |= s.fuse;
+            saw_unfused |= !s.fuse;
             if s.tile_n > 0 {
                 assert!(space.tile_ns.contains(&s.tile_n));
                 assert!(s.tile_k > 0);
             }
         }
         assert!(saw_native && saw_scalar, "sampling must cover the ISA dimension");
+        assert!(saw_fused && saw_unfused, "sampling must cover the fuse dimension");
     }
 
     #[test]
@@ -109,6 +121,20 @@ mod tests {
             assert_eq!(space.sample(&mut rng).isa, Isa::Scalar);
             let child = space.mutate(&Schedule::tuned(1).with_isa(Isa::Scalar), &mut rng);
             assert_eq!(child.isa, Isa::Scalar);
+        }
+    }
+
+    #[test]
+    fn restricted_fuse_space_samples_only_that_setting() {
+        // `pfp tune --fuse off` pins the dimension: no fused candidate may
+        // be sampled or mutated into existence
+        let mut space = SearchSpace::dense_default(2);
+        space.fuses = vec![false];
+        let mut rng = SplitMix64::new(9);
+        for _ in 0..50 {
+            assert!(!space.sample(&mut rng).fuse);
+            let child = space.mutate(&Schedule::tuned(1), &mut rng);
+            assert!(!child.fuse);
         }
     }
 
@@ -126,6 +152,7 @@ mod tests {
                 child.unroll != parent.unroll,
                 child.vectorize != parent.vectorize,
                 child.isa != parent.isa,
+                child.fuse != parent.fuse,
                 child.threads != parent.threads,
             ]
             .iter()

@@ -91,6 +91,10 @@ impl Gen {
             vectorize: self.bool(),
             threads: 1,
             isa: self.isa(),
+            // the kernels take the fused epilogue as an explicit argument,
+            // so differential tests drive fusion directly rather than
+            // through this eligibility knob
+            fuse: false,
         }
     }
 }

@@ -313,7 +313,7 @@ pub const HOT_PATHS: &[(&str, &[&str])] = &[
     ("plan/workspace.rs", &["ensure"]),
     ("ops/dense.rs", &["dense_rows_into", "dense_kernel_tiled_into"]),
     ("ops/conv.rs", &["im2col_rows_into", "col2im_planes_into", "conv_kernel_tiled_into"]),
-    ("ops/relu.rs", &["pfp_relu_rows_into", "pfp_relu_tiled_into"]),
+    ("ops/relu.rs", &["pfp_relu_rows_into", "pfp_relu_tiled_into", "apply_epilogue"]),
     (
         "ops/maxpool.rs",
         &[

@@ -23,7 +23,7 @@
 //!   not by the ISA choice).
 
 use pfp::model::npz::Npz;
-use pfp::model::{Arch, DetExecutor, PfpExecutor, PosteriorWeights, Schedules};
+use pfp::model::{Arch, DetExecutor, FusePolicy, PfpExecutor, PosteriorWeights, Schedules};
 use pfp::ops::simd::Isa;
 use pfp::runtime::Manifest;
 use pfp::tensor::Tensor;
@@ -58,26 +58,32 @@ fn check_pfp(arch_name: &str, batch: usize, atol: f32) {
     let want_var = goldens.tensor(&format!("{key}_var")).unwrap();
 
     let x2d = x.clone().flatten_2d();
-    // both dispatch paths must sit inside the golden envelope (see the
-    // tolerance policy in the file header)
+    // both dispatch paths must sit inside the golden envelope, with
+    // epilogue fusion forced off AND on (fused == unfused bit for bit at
+    // one ISA, so both land identically — asserted rather than assumed;
+    // see the tolerance policy in the file header)
     for isa_override in [None, Some(Isa::Scalar)] {
-        let schedules = Schedules::tuned(1).with_isa_override(isa_override);
-        let mut exec = PfpExecutor::new(arch.clone(), weights.clone(), schedules);
-        let (mu, var) = exec.forward(&x2d);
-        let isa_tag = match isa_override {
-            None => "native",
-            Some(_) => "scalar",
-        };
-        assert!(
-            mu.allclose(&want_mu.clone().flatten_2d(), atol, 1e-3),
-            "{key} [{isa_tag}]: mu deviates from JAX golden (max {:.2e})",
-            mu.max_abs_diff(&want_mu.clone().flatten_2d())
-        );
-        assert!(
-            var.allclose(&want_var.clone().flatten_2d(), atol * 2.0, 5e-3),
-            "{key} [{isa_tag}]: var deviates from JAX golden (max {:.2e})",
-            var.max_abs_diff(&want_var.clone().flatten_2d())
-        );
+        for fuse in [FusePolicy::Off, FusePolicy::On] {
+            let schedules = Schedules::tuned(1)
+                .with_isa_override(isa_override)
+                .with_fuse(fuse);
+            let mut exec = PfpExecutor::new(arch.clone(), weights.clone(), schedules);
+            let (mu, var) = exec.forward(&x2d);
+            let isa_tag = match isa_override {
+                None => "native",
+                Some(_) => "scalar",
+            };
+            assert!(
+                mu.allclose(&want_mu.clone().flatten_2d(), atol, 1e-3),
+                "{key} [{isa_tag} {fuse:?}]: mu deviates from JAX golden (max {:.2e})",
+                mu.max_abs_diff(&want_mu.clone().flatten_2d())
+            );
+            assert!(
+                var.allclose(&want_var.clone().flatten_2d(), atol * 2.0, 5e-3),
+                "{key} [{isa_tag} {fuse:?}]: var deviates from JAX golden (max {:.2e})",
+                var.max_abs_diff(&want_var.clone().flatten_2d())
+            );
+        }
     }
 }
 

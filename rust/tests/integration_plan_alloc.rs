@@ -30,12 +30,18 @@
 //! in registers and fixed-size stack lane buffers, so the zero-allocation
 //! guarantee holds on every dispatch path (the CI matrix also runs this
 //! test with SIMD force-disabled).
+//!
+//! PR 8: the window is re-asserted with **epilogue fusion forced on**
+//! (`FusePolicy::On`) — the fused ReLU(+convert) epilogue works in place
+//! on the output tile through fixed-size stack chunk buffers
+//! (`EPILOGUE_CHUNK`), so a fused plan allocates exactly as little as an
+//! unfused one.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use pfp::model::{Arch, PosteriorWeights, Schedules};
+use pfp::model::{Arch, FusePolicy, PosteriorWeights, Schedules};
 use pfp::ops::Schedule;
 use pfp::plan::{CompiledPlan, PlanMode};
 use pfp::profiling::Profiler;
@@ -116,6 +122,7 @@ fn steady_state_execute_performs_zero_heap_allocation() {
             maxpool_threads: 1,
             plan_threads: 0,
             isa_override: None, // tuned schedules bind the native ISA
+            fuse: FusePolicy::Auto,
             pool: Arc::new(ThreadPool::new_lazy(1)),
             records: None,
         };
@@ -147,6 +154,7 @@ fn steady_state_execute_performs_zero_heap_allocation() {
             maxpool_threads: 1,
             plan_threads: 3,
             isa_override: None, // tuned schedules bind the native ISA
+            fuse: FusePolicy::Auto,
             pool,
             records: None,
         };
@@ -164,5 +172,50 @@ fn steady_state_execute_performs_zero_heap_allocation() {
             (0..n).map(|_| g.f32_in(0.0, 1.0)).collect()
         };
         assert_zero_alloc_window(&format!("{} parallel", arch.name), &plan, &mut ws, &x);
+    }
+
+    // --- fused: fusion forced on, serial and parallel — the fused
+    // ReLU(+convert) epilogues must keep the window at zero too ---
+    for arch in [Arch::mlp(), Arch::lenet()] {
+        for plan_threads in [0usize, 3] {
+            let weights = Arc::new(PosteriorWeights::synthetic(&arch, 9));
+            let pool: Arc<ThreadPool> = if plan_threads > 1 {
+                Arc::new(ThreadPool::new(3))
+            } else {
+                Arc::new(ThreadPool::new_lazy(1))
+            };
+            let schedules = Schedules {
+                dense: Schedule::tuned(1),
+                conv: Schedule::tuned(1),
+                per_layer: Vec::new(),
+                vectorized_pool: true,
+                relu_threads: 1,
+                maxpool_threads: 1,
+                plan_threads,
+                isa_override: None,
+                fuse: FusePolicy::On,
+                pool,
+                records: None,
+            };
+            let plan =
+                CompiledPlan::compile(&arch, weights, &schedules, 2, PlanMode::Pfp).unwrap();
+            assert!(
+                plan.num_fused_steps() > 0,
+                "{}: fusion forced on must produce fused steps",
+                arch.name
+            );
+            let mut ws = plan.workspace();
+            let n = 2 * arch.input_len();
+            let x: Vec<f32> = {
+                let mut g = Gen::new(11);
+                (0..n).map(|_| g.f32_in(0.0, 1.0)).collect()
+            };
+            assert_zero_alloc_window(
+                &format!("{} fused t{plan_threads}", arch.name),
+                &plan,
+                &mut ws,
+                &x,
+            );
+        }
     }
 }

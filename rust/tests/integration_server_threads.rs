@@ -48,6 +48,7 @@ fn idle_server_owns_no_connection_threads() {
         maxpool_threads: 1,
         plan_threads: 0,
         isa_override: None,
+        fuse: pfp::model::FusePolicy::Auto,
         pool: svc.pool().clone(),
         records: None,
     };

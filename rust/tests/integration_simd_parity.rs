@@ -13,18 +13,25 @@
 //!   the CI dispatch matrix runs both branches);
 //! * planned and interpreted execution agree bit for bit at the same ISA.
 //!
+//! The fused-epilogue contract (PR 8) is policed here too: a fused
+//! dense/conv step (ReLU, or ReLU + E2→Var convert, applied on the
+//! register/cache-resident output tile) is **bit-identical to the unfused
+//! chain at the same ISA**, kernel-level and whole-network, across random
+//! schedules, batches, and thread counts.
+//!
 //! Shapes, schedules (every knob, ISA included), and inputs are drawn
 //! from the seeded [`prop::check`] harness, which prints the failing case
 //! seed (`PFP_PROP_SEED=<base>, case seed <s>`) so any failure replays
 //! exactly.
 
-use pfp::model::{Arch, PfpExecutor, PosteriorWeights, Schedules};
+use pfp::model::{Arch, FusePolicy, PfpExecutor, PosteriorWeights, Schedules};
 use pfp::ops::dense::{
     dense_kernel_tiled_into, dense_rows_into, DenseSlices, FirstLayer, JointEq12,
 };
 use pfp::ops::maxpool::pfp_maxpool2_planes_into;
-use pfp::ops::relu::pfp_relu_tiled_into;
+use pfp::ops::relu::{pfp_relu_rows_into, pfp_relu_tiled_into};
 use pfp::ops::simd::Isa;
+use pfp::ops::Epilogue;
 use pfp::plan::tile_ranges;
 use pfp::tensor::Tensor;
 use pfp::util::prop::{check, Gen};
@@ -82,14 +89,16 @@ fn dense_randomized_cross_isa_and_tile_parity() {
             // serial reference for this ISA
             let mut want_mu = vec![0.0f32; m * n];
             let mut want_var = vec![0.0f32; m * n];
-            dense_rows_into::<JointEq12>(&slices, &s, 0..m, &mut want_mu, &mut want_var);
+            dense_rows_into::<JointEq12>(
+                &slices, &s, Epilogue::None, 0..m, &mut want_mu, &mut want_var,
+            );
             // thread/tile counts {1, 2, 4}: bit-identical within the ISA
             for tasks in [1usize, 2, 4] {
                 let tiles = tile_ranges(m, tasks);
                 let mut mu = vec![0.0f32; m * n];
                 let mut var = vec![0.0f32; m * n];
                 dense_kernel_tiled_into::<JointEq12>(
-                    &pool, &slices, &s, &tiles, &mut mu, &mut var,
+                    &pool, &slices, &s, Epilogue::None, &tiles, &mut mu, &mut var,
                 );
                 assert_eq!(mu, want_mu, "{} [{m},{k},{n}] tasks={tasks} mu", s.tag());
                 assert_eq!(var, want_var, "{} [{m},{k},{n}] tasks={tasks} var", s.tag());
@@ -130,6 +139,7 @@ fn first_layer_randomized_cross_isa_parity() {
         dense_rows_into::<FirstLayer>(
             &slices,
             &sched.with_isa(Isa::Scalar),
+            Epilogue::None,
             0..m,
             &mut mu_s,
             &mut var_s,
@@ -137,6 +147,7 @@ fn first_layer_randomized_cross_isa_parity() {
         dense_rows_into::<FirstLayer>(
             &slices,
             &sched.with_isa(Isa::Native),
+            Epilogue::None,
             0..m,
             &mut mu_n,
             &mut var_n,
@@ -242,6 +253,109 @@ fn network_planned_interpreted_and_cross_isa_parity() {
             let tag = format!("{} b{batch} native-vs-scalar", arch.name);
             assert_close(&format!("{tag} mu"), mu_p.data(), mu_s.data(), 1e-4, 1e-4);
             assert_close(&format!("{tag} var"), var_p.data(), var_s.data(), 1e-3, 1e-4);
+        });
+    }
+}
+
+#[test]
+fn dense_fused_epilogue_randomized_parity() {
+    // kernel-level fusion contract, over random shapes x schedules x
+    // tile counts x ISAs: a dense kernel run with a fused epilogue is
+    // bit-identical to the bare kernel followed by the standalone
+    // relu(+convert) chain it replaces.
+    let pool = ThreadPool::new(4);
+    check(16, |g| {
+        let (m, k, n) = g.dense_shape(8, 100, 32);
+        let sched = g.schedule();
+        let (x_mu, x_e2, w_mu, w_e2, b_mu, b_var) = rand_dense_case(g, m, k, n);
+        let slices = DenseSlices {
+            m,
+            k,
+            n,
+            x_mu: &x_mu,
+            x_aux: &x_e2,
+            w_mu: &w_mu,
+            w_aux: &w_e2,
+            b_mu: Some(&b_mu),
+            b_var: Some(&b_var),
+        };
+        for isa in [Isa::Scalar, Isa::Native] {
+            let s = sched.with_isa(isa);
+            // unfused reference: bare kernel, then standalone ReLU, then
+            // the E2→Var conversion the executor's convert step applies
+            let mut mu_u = vec![0.0f32; m * n];
+            let mut var_u = vec![0.0f32; m * n];
+            dense_rows_into::<JointEq12>(&slices, &s, Epilogue::None, 0..m, &mut mu_u, &mut var_u);
+            let mut rm = vec![0.0f32; m * n];
+            let mut re2 = vec![0.0f32; m * n];
+            pfp_relu_rows_into(isa, &mu_u, &var_u, 0..m * n, &mut rm, &mut re2);
+            let rvar: Vec<f32> = re2
+                .iter()
+                .zip(&rm)
+                .map(|(&e2, &mv)| (e2 - mv * mv).max(0.0))
+                .collect();
+            let tag = format!("{} [{m},{k},{n}] {isa:?}", s.tag());
+            for tasks in [1usize, 2, 4] {
+                let tiles = tile_ranges(m, tasks);
+                let mut mu_f = vec![0.0f32; m * n];
+                let mut aux_f = vec![0.0f32; m * n];
+                dense_kernel_tiled_into::<JointEq12>(
+                    &pool, &slices, &s, Epilogue::Relu, &tiles, &mut mu_f, &mut aux_f,
+                );
+                assert_eq!(mu_f, rm, "{tag} tasks={tasks} fused relu mu");
+                assert_eq!(aux_f, re2, "{tag} tasks={tasks} fused relu e2");
+                dense_kernel_tiled_into::<JointEq12>(
+                    &pool, &slices, &s, Epilogue::ReluToVar, &tiles, &mut mu_f, &mut aux_f,
+                );
+                assert_eq!(mu_f, rm, "{tag} tasks={tasks} fused relu+convert mu");
+                assert_eq!(aux_f, rvar, "{tag} tasks={tasks} fused relu+convert var");
+            }
+        }
+    });
+}
+
+#[test]
+fn fused_vs_unfused_randomized_network_parity() {
+    // whole-network fusion contract: a plan compiled with every fusable
+    // pattern fused (`FusePolicy::On`) matches the fully unfused plan
+    // (`FusePolicy::Off`) BIT-IDENTICALLY at the same ISA — the fused
+    // epilogue runs the same kernels on the same values, it only skips
+    // the intermediate buffer round trip — across random batches, both
+    // archs, both ISAs, and plan thread counts {1, 2, 4}.
+    for arch in [Arch::mlp(), Arch::lenet()] {
+        let weights = PosteriorWeights::synthetic(&arch, 77);
+        check(3, |g| {
+            let batch = g.usize_in(1, 5);
+            let n = batch * arch.input_len();
+            let x = Tensor::new(
+                vec![batch, arch.input_len()],
+                (0..n).map(|_| g.f32_in(0.0, 1.0)).collect(),
+            )
+            .unwrap();
+            for isa in [None, Some(Isa::Scalar)] {
+                let (mu_u, var_u) = PfpExecutor::new(
+                    arch.clone(),
+                    weights.clone(),
+                    Schedules::tuned(1)
+                        .with_isa_override(isa)
+                        .with_fuse(FusePolicy::Off),
+                )
+                .forward(&x);
+                for t in [1usize, 2, 4] {
+                    let (mu_f, var_f) = PfpExecutor::new(
+                        arch.clone(),
+                        weights.clone(),
+                        Schedules::tuned(1)
+                            .with_isa_override(isa)
+                            .with_fuse(FusePolicy::On)
+                            .with_plan_threads(t),
+                    )
+                    .forward(&x);
+                    let tag = format!("{} b{batch} {isa:?} t{t} fused-vs-unfused", arch.name);
+                    assert_eq!(mu_u.data(), mu_f.data(), "{tag} mu");
+                    assert_eq!(var_u.data(), var_f.data(), "{tag} var");
+                }
+            }
         });
     }
 }

@@ -14,11 +14,16 @@
 //!   (`FusePolicy::On`): dense/conv → ReLU (→ convert) chains run as
 //!   single register-resident steps, no intermediate buffer round trips.
 //!
+//! * **plan-f16 / plan-bf16** — plan-raw with the storage-precision knob
+//!   forced: weights packed to 16-bit at compile, inter-layer activations
+//!   round-tripped through u16 staging, all accumulation f32.
+//!
 //! Batches 1 and 64 bracket the paper's serving regime (single-request
 //! latency vs a full batcher bucket). Emits the usual bench table/JSON
 //! lines plus a `BENCH_plan.json` summary (interpreted vs planned vs
-//! fused ns/row, and the fused-over-unfused `fuse_speedup`) so future PRs
-//! can track the trajectory.
+//! fused ns/row, the fused-over-unfused `fuse_speedup`, and per-precision
+//! `{arch}_b{batch}_{f16,bf16}_ns_row` + `..._speedup_vs_f32` columns) so
+//! future PRs can track the trajectory.
 
 use std::sync::Arc;
 
@@ -27,6 +32,7 @@ use pfp::plan::{CompiledPlan, PlanMode};
 use pfp::profiling::Profiler;
 use pfp::tensor::Tensor;
 use pfp::util::bench::{bench, black_box, report, BenchOpts};
+use pfp::util::half::Precision;
 use pfp::util::json::Json;
 use pfp::util::prop::Gen;
 
@@ -81,6 +87,32 @@ fn main() {
                 black_box((mu[0], var[0]));
             });
 
+            // mixed-precision legs: the same plan with f16/bf16 moment
+            // storage (packed weights + u16 activation staging), per the
+            // acceptance criteria: ns/row and speedup-vs-f32 per precision
+            let mut prec_runs = Vec::new();
+            for prec in [Precision::F16, Precision::Bf16] {
+                let pplan = CompiledPlan::compile(
+                    &arch,
+                    Arc::new(weights.clone()),
+                    &Schedules::tuned(1).with_precision_override(Some(prec)),
+                    batch,
+                    PlanMode::Pfp,
+                )
+                .unwrap();
+                assert!(pplan.num_packed_steps() > 0);
+                let mut pws = pplan.workspace();
+                let r = bench(
+                    &format!("{} b{batch} plan-{prec}", arch.name),
+                    opts,
+                    || {
+                        let (mu, var) = pplan.execute(x.data(), &mut pws, &mut off);
+                        black_box((mu[0], var[0]));
+                    },
+                );
+                prec_runs.push((prec, r));
+            }
+
             let fused_plan = CompiledPlan::compile(
                 &arch,
                 Arc::new(weights.clone()),
@@ -130,11 +162,26 @@ fn main() {
                     0.0
                 }),
             ));
+            for (prec, r) in &prec_runs {
+                summary.push((
+                    format!("{}_b{batch}_{prec}_ns_row", arch.name),
+                    Json::Num(ns_row(r.median_s)),
+                ));
+                summary.push((
+                    format!("{}_b{batch}_{prec}_speedup_vs_f32", arch.name),
+                    Json::Num(if r.median_s > 0.0 {
+                        r_raw.median_s / r.median_s
+                    } else {
+                        0.0
+                    }),
+                ));
+            }
 
             results.push(r_interp);
             results.push(r_planned);
             results.push(r_raw);
             results.push(r_fused);
+            results.extend(prec_runs.into_iter().map(|(_, r)| r));
         }
     }
 

@@ -9,17 +9,23 @@
 //!
 //! Each case asserts scalar↔SIMD parity (the 1e-4 cross-ISA contract)
 //! before timing, so a broken backend can't post a fast-but-wrong number.
-//! Emits `BENCH_simd.json` (scalar/simd ns per batch row + speedup per
-//! shape); the CI bench gate compiles this target on every push and the
-//! perf job uploads the JSON artifact. The acceptance bar for the SIMD
-//! layer: `dense1_b64_speedup > 1` on AVX2/NEON hosts (the batch-64
-//! Table-2 shape; trivially ~1 when detection reports scalar).
+//! Emits `BENCH_simd.json`: scalar/simd/f16-packed ns per batch row,
+//! effective GB/s per leg (unique-bytes traffic model — activations,
+//! weights, biases read once, both moment outputs written once; the f16
+//! leg counts its weight operands at 2 bytes), and speedups per shape.
+//! The CI bench gate compiles this target on every push and the perf job
+//! uploads the JSON artifact. The acceptance bar for the SIMD layer:
+//! `dense1_b64_speedup > 1` on AVX2/NEON hosts (the batch-64 Table-2
+//! shape; trivially ~1 when detection reports scalar).
 
-use pfp::ops::dense::{dense_rows_into, DenseSlices, JointEq12};
+use pfp::ops::dense::{
+    dense_rows_into, dense_rows_packed_into, DenseSlices, JointEq12, PackedDenseSlices,
+};
 use pfp::ops::relu::pfp_relu_rows_into;
-use pfp::ops::simd::{self, Isa};
+use pfp::ops::simd::{self, Isa, PackedSlice};
 use pfp::ops::{Epilogue, Schedule};
 use pfp::util::bench::{bench, black_box, report, BenchOpts};
+use pfp::util::half::{narrow, Precision};
 use pfp::util::json::Json;
 use pfp::util::prop::Gen;
 
@@ -110,6 +116,39 @@ fn main() {
                 },
             );
 
+            // mixed-precision leg: the same workload with f16 weight
+            // storage through the packed-operand kernel (activations stay
+            // f32 here — the kernel-level packing is the weight traffic)
+            let wm_bits: Vec<u16> =
+                w_mu.iter().map(|&v| narrow(Precision::F16, v)).collect();
+            let wa_bits: Vec<u16> =
+                w_e2.iter().map(|&v| narrow(Precision::F16, v)).collect();
+            let pslices = PackedDenseSlices {
+                m,
+                k,
+                n,
+                x_mu: &x_mu,
+                x_aux: &x_e2,
+                w_mu: PackedSlice::U16(Precision::F16, &wm_bits),
+                w_aux: PackedSlice::U16(Precision::F16, &wa_bits),
+                b_mu: Some(&b_mu),
+                b_var: Some(&b_var),
+            };
+            let r_f16 = bench(&format!("{} b{batch} f16 {}", case.name, backend.name()), opts, || {
+                dense_rows_packed_into::<JointEq12>(
+                    &pslices, &native, Epilogue::None, 0..m, &mut mu_n, &mut var_n,
+                );
+                black_box(mu_n[0]);
+            });
+
+            // unique-bytes traffic model for the effective-bandwidth
+            // column: both activation operands + both weight operands +
+            // biases read once, both moment outputs written once
+            let f32_bytes = 4 * (2 * m * k + 2 * n * k + 2 * n + 2 * m * n);
+            let f16_bytes = 4 * (2 * m * k + 2 * n + 2 * m * n) + 2 * (2 * n * k);
+            let gbs = |bytes: usize, median_s: f64| {
+                if median_s > 0.0 { bytes as f64 / median_s / 1e9 } else { 0.0 }
+            };
             let ns_row = |median_s: f64| median_s * 1e9 / batch as f64;
             summary.push((
                 format!("{}_b{batch}_scalar_ns_row", case.name),
@@ -120,6 +159,22 @@ fn main() {
                 Json::Num(ns_row(r_simd.median_s)),
             ));
             summary.push((
+                format!("{}_b{batch}_f16_ns_row", case.name),
+                Json::Num(ns_row(r_f16.median_s)),
+            ));
+            summary.push((
+                format!("{}_b{batch}_scalar_gbs", case.name),
+                Json::Num(gbs(f32_bytes, r_scalar.median_s)),
+            ));
+            summary.push((
+                format!("{}_b{batch}_simd_gbs", case.name),
+                Json::Num(gbs(f32_bytes, r_simd.median_s)),
+            ));
+            summary.push((
+                format!("{}_b{batch}_f16_gbs", case.name),
+                Json::Num(gbs(f16_bytes, r_f16.median_s)),
+            ));
+            summary.push((
                 format!("{}_b{batch}_speedup", case.name),
                 Json::Num(if r_simd.median_s > 0.0 {
                     r_scalar.median_s / r_simd.median_s
@@ -127,8 +182,17 @@ fn main() {
                     0.0
                 }),
             ));
+            summary.push((
+                format!("{}_b{batch}_f16_speedup_vs_f32", case.name),
+                Json::Num(if r_f16.median_s > 0.0 {
+                    r_simd.median_s / r_f16.median_s
+                } else {
+                    0.0
+                }),
+            ));
             results.push(r_scalar);
             results.push(r_simd);
+            results.push(r_f16);
         }
     }
 
@@ -156,6 +220,13 @@ fn main() {
             "relu_b64_simd_ns_row".into(),
             Json::Num(r_simd.median_s * 1e9 / 64.0),
         ));
+        // 2 operands in + 2 moments out, 4 bytes each
+        let relu_bytes = 16 * n;
+        let gbs = |median_s: f64| {
+            if median_s > 0.0 { relu_bytes as f64 / median_s / 1e9 } else { 0.0 }
+        };
+        summary.push(("relu_b64_scalar_gbs".into(), Json::Num(gbs(r_scalar.median_s))));
+        summary.push(("relu_b64_simd_gbs".into(), Json::Num(gbs(r_simd.median_s))));
         summary.push((
             "relu_b64_speedup".into(),
             Json::Num(if r_simd.median_s > 0.0 {

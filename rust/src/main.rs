@@ -56,7 +56,7 @@ fn print_help() {
            serve   [--arch mlp] [--backend native|xla|svi] [--addr 127.0.0.1:7878]\n\
                    [--threads 1] [--plan-threads 0] [--pool-threads 0] [--max-batch 10]\n\
                    [--max-connections 64] [--pipeline-depth 0 (= max-batch)]\n\
-                   [--isa scalar|native] [--fuse on|off|auto]\n\
+                   [--isa scalar|native] [--fuse on|off|auto] [--precision f32|f16|bf16]\n\
                    [--models <dir>] [--memory-budget <MB>] [--no-mmap] [--calib 1.0]\n\
                    (--plan-threads N partitions the compiled-plan compute/\n\
                     relu/vectorized-pool steps into N tile tasks;\n\
@@ -67,6 +67,9 @@ fn print_help() {
                     (-> convert) chains into one plan step: on fuses every\n\
                     fusable pattern, off never fuses, auto (default)\n\
                     defers to each layer's tuned `fuse` knob.\n\
+                    --precision forces f16/bf16 moment storage on every\n\
+                    layer (accumulation stays f32); default: each tuned\n\
+                    schedule's own precision knob, f32 when untuned.\n\
                     native backend serves through the model registry:\n\
                     --models preloads every weights_<arch>.npz in <dir>,\n\
                     weights are mmap'd zero-copy (--no-mmap forces the\n\
@@ -77,11 +80,13 @@ fn print_help() {
            eval    [--arch mlp] [--samples 30]\n\
            profile [--arch mlp] [--batch 10] [--passes 20] [--schedules tuned|baseline]\n\
            tune    [--arch mlp] [--batch 10] [--trials 24] [--plan-threads nproc]\n\
-                   [--isa scalar|native] [--fuse on|off|auto]\n\
+                   [--isa scalar|native] [--fuse on|off|auto] [--precision f32|f16|bf16]\n\
                    (per-layer workload search over parallel x tile-size x\n\
-                    ISA x fused-epilogue candidates, measured on the\n\
-                    planned tile executor; --isa narrows the ISA dimension\n\
-                    to one backend, --fuse on|off pins the fusion knob)\n"
+                    ISA x fused-epilogue x storage-precision candidates,\n\
+                    measured on the planned tile executor; --isa narrows\n\
+                    the ISA dimension to one backend, --fuse on|off pins\n\
+                    the fusion knob, --precision pins moment storage to\n\
+                    one format)\n"
     );
 }
 
@@ -119,6 +124,21 @@ fn opt_fuse(opts: &HashMap<String, String>) -> pfp::Result<FusePolicy> {
         Some(s) => Err(pfp::Error::Config(format!(
             "unknown --fuse '{s}' (expected on|off|auto)"
         ))),
+    }
+}
+
+/// Parse the optional `--precision f32|f16|bf16` flag; absent = None
+/// (each bound schedule's own tuner-searched precision knob decides).
+fn opt_precision(
+    opts: &HashMap<String, String>,
+) -> pfp::Result<Option<pfp::util::half::Precision>> {
+    match opts.get("precision").map(|s| s.as_str()) {
+        None => Ok(None),
+        Some(s) => pfp::util::half::Precision::parse(s).map(Some).ok_or_else(|| {
+            pfp::Error::Config(format!(
+                "unknown --precision '{s}' (expected f32|f16|bf16)"
+            ))
+        }),
     }
 }
 
@@ -192,6 +212,7 @@ fn cmd_serve(opts: &HashMap<String, String>) -> pfp::Result<()> {
         .pool(svc.pool().clone())
         .plan_threads(opt_usize(opts, "plan-threads", 0))
         .isa_override(opt_isa(opts)?)
+        .precision_override(opt_precision(opts)?)
         .fuse(opt_fuse(opts)?)
         .records(Some(records));
 
@@ -390,6 +411,12 @@ fn cmd_tune(opts: &HashMap<String, String>) -> pfp::Result<()> {
         FusePolicy::On => space.fuses = vec![true],
         FusePolicy::Off => space.fuses = vec![false],
         FusePolicy::Auto => {}
+    }
+    // --precision pins the storage-precision dimension to one format;
+    // absent keeps all three so the search decides per layer whether
+    // halved moment storage pays on this host
+    if let Some(p) = opt_precision(opts)? {
+        space.precisions = vec![p];
     }
     let topts = tuner::TuneOpts { random_trials: trials, ..Default::default() };
     println!(

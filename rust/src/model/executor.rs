@@ -26,6 +26,7 @@ use crate::ops::relu::pfp_relu_in;
 use crate::ops::simd::Isa;
 use crate::ops::svi::sample_tensor;
 use crate::ops::Schedule;
+use crate::util::half::Precision;
 use crate::profiling::Profiler;
 use crate::tensor::{ProbTensor, Rep, Tensor};
 use crate::util::rng::SplitMix64;
@@ -93,6 +94,21 @@ pub struct Schedules {
     /// `PFP_FORCE_SCALAR=1` caps everything at the detector level
     /// regardless).
     pub isa_override: Option<Isa>,
+    /// Storage-precision policy override (the serve/tune `--precision
+    /// f32|f16|bf16` flag): `Some(p)` forces every bound schedule's
+    /// `precision` knob — posterior weights and inter-layer activations
+    /// store at `p`, with all accumulation staying in f32; `None`
+    /// (default) lets each schedule's own (tuner-searched) knob decide.
+    /// Only the compiled-plan path implements packed storage; the
+    /// interpreted walk ignores the knob and always runs f32 (it is the
+    /// bit-exact reference).
+    pub precision_override: Option<Precision>,
+    /// Independent storage precision for the *variance path* (the Eq.
+    /// 12/13 aux weight operand and the aux activation buffer): `Some(p)`
+    /// splits the roles so the certification harness can localize which
+    /// moment breaks the uncertainty budget first; `None` (default) makes
+    /// the variance path follow the mean path's precision.
+    pub var_precision: Option<Precision>,
     /// Elementwise-chain fusion policy for plan lowering (see
     /// [`FusePolicy`]). `Auto` (the constructor default) defers to each
     /// bound schedule's `fuse` knob, so plans only fuse where the tuner
@@ -122,6 +138,8 @@ impl Schedules {
             maxpool_threads: 1,
             plan_threads: 0,
             isa_override: None,
+            precision_override: None,
+            var_precision: None,
             fuse: FusePolicy::Auto,
             pool: threadpool::global().clone(),
             records: None,
@@ -139,6 +157,8 @@ impl Schedules {
             maxpool_threads: 1,
             plan_threads: 0,
             isa_override: None,
+            precision_override: None,
+            var_precision: None,
             fuse: FusePolicy::Auto,
             pool: threadpool::global().clone(),
             records: None,
@@ -163,6 +183,20 @@ impl Schedules {
     /// [`Schedules::isa_override`]).
     pub fn with_isa_override(mut self, isa: Option<Isa>) -> Self {
         self.isa_override = isa;
+        self
+    }
+
+    /// Set (or clear) the storage-precision policy override (see
+    /// [`Schedules::precision_override`]).
+    pub fn with_precision_override(mut self, p: Option<Precision>) -> Self {
+        self.precision_override = p;
+        self
+    }
+
+    /// Set (or clear) the independent variance-path storage precision
+    /// (see [`Schedules::var_precision`]).
+    pub fn with_var_precision(mut self, p: Option<Precision>) -> Self {
+        self.var_precision = p;
         self
     }
 
@@ -211,8 +245,12 @@ impl Schedules {
             .copied()
             .flatten()
             .unwrap_or_else(|| self.class_schedule(spec));
-        match self.isa_override {
+        let s = match self.isa_override {
             Some(isa) => s.with_isa(isa),
+            None => s,
+        };
+        match self.precision_override {
+            Some(p) => s.with_precision(p),
             None => s,
         }
     }
@@ -304,6 +342,8 @@ pub struct SchedulesBuilder {
     pool: Option<Arc<ThreadPool>>,
     plan_threads: usize,
     isa_override: Option<Isa>,
+    precision_override: Option<Precision>,
+    var_precision: Option<Precision>,
     fuse: FusePolicy,
     records: Option<Arc<crate::tuner::TuningRecords>>,
     vectorized_pool: Option<bool>,
@@ -318,6 +358,8 @@ impl SchedulesBuilder {
             pool: None,
             plan_threads: 0,
             isa_override: None,
+            precision_override: None,
+            var_precision: None,
             fuse: FusePolicy::Auto,
             records: None,
             vectorized_pool: None,
@@ -344,6 +386,20 @@ impl SchedulesBuilder {
     /// ISA policy override (plan-time; `None` lets each schedule decide).
     pub fn isa_override(mut self, isa: Option<Isa>) -> Self {
         self.isa_override = isa;
+        self
+    }
+
+    /// Storage-precision policy override (plan-time; `None` lets each
+    /// schedule's tuner-searched `precision` knob decide).
+    pub fn precision_override(mut self, p: Option<Precision>) -> Self {
+        self.precision_override = p;
+        self
+    }
+
+    /// Independent variance-path storage precision (plan-time; `None`
+    /// makes the variance path follow the mean path).
+    pub fn var_precision(mut self, p: Option<Precision>) -> Self {
+        self.var_precision = p;
         self
     }
 
@@ -380,6 +436,8 @@ impl SchedulesBuilder {
         }
         s.plan_threads = self.plan_threads;
         s.isa_override = self.isa_override;
+        s.precision_override = self.precision_override;
+        s.var_precision = self.var_precision;
         s.fuse = self.fuse;
         if let Some(v) = self.vectorized_pool {
             s.vectorized_pool = v;
@@ -481,6 +539,13 @@ impl PlanCache {
         self.map.values().map(|e| e.ws.total_floats() * 4).sum()
     }
 
+    /// Packed (u16-storage) weight tensors across every resident plan —
+    /// the registry's mixed-precision metadata column. Zero for all-f32
+    /// plans.
+    fn packed_tensors(&self) -> usize {
+        self.map.values().map(|e| e.plan.packed_tensors()).sum()
+    }
+
     /// The least-recently-used entry as `(batch, last_used)` — the
     /// registry compares these stamps across models (they share
     /// [`PLAN_CLOCK`]).
@@ -526,6 +591,9 @@ pub trait Executor: Send {
     fn cached_batches(&self) -> Vec<usize>;
     /// Resident plan-cache footprint in bytes (workspace arenas).
     fn plan_bytes(&self) -> usize;
+    /// Weight tensors the resident plans converted to packed u16 storage
+    /// (f16/bf16 mixed precision); zero when everything stores f32.
+    fn packed_weight_tensors(&self) -> usize;
     /// Least-recently-used resident plan as `(batch, global LRU stamp)`.
     fn lru_plan(&self) -> Option<(usize, u64)>;
     /// Drop the plan for `batch`; returns whether one was resident.
@@ -780,6 +848,10 @@ impl Executor for PfpExecutor {
         self.plans.bytes()
     }
 
+    fn packed_weight_tensors(&self) -> usize {
+        self.plans.packed_tensors()
+    }
+
     fn lru_plan(&self) -> Option<(usize, u64)> {
         self.plans.lru()
     }
@@ -887,6 +959,10 @@ impl Executor for DetExecutor {
 
     fn plan_bytes(&self) -> usize {
         self.plans.lock().unwrap().bytes()
+    }
+
+    fn packed_weight_tensors(&self) -> usize {
+        self.plans.lock().unwrap().packed_tensors()
     }
 
     fn lru_plan(&self) -> Option<(usize, u64)> {
@@ -1126,6 +1202,71 @@ mod tests {
         let plain = Schedules::tuned(1);
         assert_eq!(plain.layer_schedule(0, arch.compute_layers()[0]).isa, Isa::Native);
         assert_eq!(plain.elementwise_isa(), Isa::Native);
+    }
+
+    #[test]
+    fn precision_override_rebinds_every_schedule() {
+        // the serve/tune --precision flag: like the ISA override, it must
+        // win over every bound schedule, per-layer overrides included
+        let arch = Arch::mlp();
+        let s = Schedules::tuned(1).with_precision_override(Some(Precision::F16));
+        for (i, spec) in arch.compute_layers().iter().enumerate() {
+            assert_eq!(s.layer_schedule(i, spec).precision, Precision::F16);
+        }
+        let s = s.with_layer_schedule(0, Schedule::tuned(1));
+        assert_eq!(s.layer_schedule(0, arch.compute_layers()[0]).precision, Precision::F16);
+        // no override: schedules keep their own knob (stock = f32)
+        let plain = Schedules::tuned(1);
+        assert_eq!(
+            plain.layer_schedule(0, arch.compute_layers()[0]).precision,
+            Precision::F32
+        );
+        // builder carries both precision knobs
+        let b = SchedulesBuilder::tuned(1)
+            .precision_override(Some(Precision::Bf16))
+            .var_precision(Some(Precision::F32))
+            .build();
+        assert_eq!(b.precision_override, Some(Precision::Bf16));
+        assert_eq!(b.var_precision, Some(Precision::F32));
+    }
+
+    #[test]
+    fn packed_forward_is_finite_and_tracks_f32() {
+        // end-to-end through the executor: a packed (f16/bf16) forward
+        // pass stays finite, keeps variances non-negative, counts its
+        // packed tensors, and lands close to the f32 reference — the
+        // metric-level budget is integration_precision_cert's job.
+        for arch in [Arch::mlp(), Arch::lenet()] {
+            let w = PosteriorWeights::synthetic(&arch, 33);
+            let x = input(&arch, 2, 23);
+            let mut f32_ex = PfpExecutor::new(arch.clone(), w.clone(), Schedules::tuned(1));
+            let (mu_f, var_f) = f32_ex.forward(&x);
+            assert_eq!(Executor::packed_weight_tensors(&f32_ex), 0, "f32 packs nothing");
+            for p in [Precision::F16, Precision::Bf16] {
+                let mut ex = PfpExecutor::new(
+                    arch.clone(),
+                    w.clone(),
+                    Schedules::tuned(1).with_precision_override(Some(p)),
+                );
+                let (mu, var) = ex.forward(&x);
+                assert!(
+                    Executor::packed_weight_tensors(&ex) > 0,
+                    "{} {p} must pack weight tensors",
+                    arch.name
+                );
+                assert!(mu.data().iter().all(|v| v.is_finite()), "{} {p}", arch.name);
+                assert!(var.data().iter().all(|&v| v >= 0.0 && v.is_finite()));
+                // storage quantization is a small perturbation, not a
+                // rewrite: logits stay within a coarse envelope of f32
+                assert!(
+                    mu.max_abs_diff(&mu_f) < 0.5,
+                    "{} {p} mu drifted {}",
+                    arch.name,
+                    mu.max_abs_diff(&mu_f)
+                );
+                assert!(var.max_abs_diff(&var_f) < 0.5, "{} {p} var", arch.name);
+            }
+        }
     }
 
     #[test]

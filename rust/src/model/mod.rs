@@ -12,7 +12,7 @@ pub mod weights;
 pub use executor::{
     DetExecutor, Executor, FusePolicy, PfpExecutor, Schedules, SchedulesBuilder, SviExecutor,
 };
-pub use weights::{LayerWeights, LoadedWeights, PosteriorWeights};
+pub use weights::{pack_tensor, LayerWeights, LoadedWeights, PosteriorWeights};
 
 use crate::error::{Error, Result};
 

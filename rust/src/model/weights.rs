@@ -50,6 +50,26 @@ impl LayerWeights {
     }
 }
 
+/// Quantize one weight tensor to `prec` storage bits (round-to-nearest-
+/// even, matching the F16C/AVX2 hardware narrowing bit for bit). This is
+/// the mixed-precision conversion applied **once** when a plan binds a
+/// non-f32 schedule — the mmap'd f32 NPZ members stay untouched; the
+/// packed copy lives in the compiled plan (and is counted in the registry
+/// metadata as `packed_tensors`). Returns `None` for f32: the plan keeps
+/// borrowing the original tensor and no copy exists at all.
+pub fn pack_tensor(
+    t: &Tensor,
+    prec: crate::util::half::Precision,
+) -> Option<std::sync::Arc<Vec<u16>>> {
+    use crate::util::half::{narrow, Precision};
+    if prec == Precision::F32 {
+        return None;
+    }
+    Some(std::sync::Arc::new(
+        t.data().iter().map(|&x| narrow(prec, x)).collect(),
+    ))
+}
+
 /// All compute-layer weights of one architecture.
 #[derive(Clone, Debug)]
 pub struct PosteriorWeights {
@@ -230,6 +250,25 @@ mod tests {
         assert_eq!(w.layers[0].w_mu.shape(), &[6, 1, 5, 5]);
         assert_eq!(w.layers[4].w_mu.shape(), &[10, 84]);
         assert!(w.n_params() > 60_000 / 2);
+    }
+
+    #[test]
+    fn pack_tensor_is_elementwise_narrow() {
+        use crate::util::half::{quantize, widen, Precision};
+        let arch = Arch::mlp();
+        let w = PosteriorWeights::synthetic(&arch, 5);
+        let t = &w.layers[0].w_mu;
+        assert!(pack_tensor(t, Precision::F32).is_none(), "f32 never copies");
+        for prec in [Precision::F16, Precision::Bf16] {
+            let packed = pack_tensor(t, prec).unwrap();
+            assert_eq!(packed.len(), t.len());
+            for (bits, &x) in packed.iter().zip(t.data()) {
+                // bit-exact vs the scalar reference conversion, and the
+                // widened value is exactly the quantized weight the
+                // packed kernels accumulate
+                assert_eq!(widen(prec, *bits), quantize(prec, x));
+            }
+        }
     }
 
     #[test]

@@ -16,10 +16,12 @@ use crate::tensor::{ProbTensor, Rep, Tensor};
 use crate::util::threadpool::{self, DisjointMut, ThreadPool};
 
 use super::dense::{
-    dense_kernel_into, dense_rows_into, Accum, DenseSlices, FirstLayer, JointEq12,
+    dense_kernel_into, dense_rows_into, dense_rows_packed_into, Accum, DenseSlices, FirstLayer,
+    JointEq12, PackedDenseSlices,
 };
 use super::relu::Epilogue;
 use super::schedule::Schedule;
+use super::simd::PackedSlice;
 
 /// Static conv workload description (NCHW input, OIHW weights, VALID
 /// padding, stride 1). The compiled plan resolves one of these per conv
@@ -354,6 +356,118 @@ pub fn conv_kernel_tiled_into<A: Accum>(
     }
 }
 
+/// [`conv_kernel_tiled_into`] with packed weight operands — the compiled
+/// plan's mixed-precision conv step. Only the per-patch reductions of
+/// phase 1 touch the weights, so the packed twin swaps
+/// [`dense_rows_into`] for [`dense_rows_packed_into`] and leaves the
+/// im2col gather and col2im scatter (pure f32 memory moves) untouched.
+/// The packed dense kernel is bitwise its f32 twin on pre-widened weight
+/// copies, so this whole lowering inherits that contract.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_kernel_packed_tiled_into<A: Accum>(
+    pool: &ThreadPool,
+    sh: &ConvShape,
+    x_mu: &[f32],
+    x_aux: Option<&[f32]>,
+    w_mu: PackedSlice<'_>,
+    w_aux: PackedSlice<'_>,
+    b_mu: Option<&[f32]>,
+    b_var: Option<&[f32]>,
+    sched: &Schedule,
+    ep: Epilogue,
+    tiles: &[std::ops::Range<usize>],
+    scatter_tiles: &[std::ops::Range<usize>],
+    scratch: &mut [f32],
+    out_mu: &mut [f32],
+    out_var: &mut [f32],
+) {
+    let rows = sh.rows();
+    let kk = sh.kk();
+    let o = sh.o;
+    let (oh, ow) = (sh.oh(), sh.ow());
+    let serial = sched.with_threads(1);
+    debug_assert!(scratch.len() >= sh.scratch_len(x_aux.is_none()));
+    let (pm, rest) = scratch.split_at_mut(rows * kk);
+    let (pa, rest) = match x_aux {
+        Some(_) => {
+            let (pa, rest) = rest.split_at_mut(rows * kk);
+            (Some(pa), rest)
+        }
+        None => (None, rest),
+    };
+    let (cm, rest) = rest.split_at_mut(rows * o);
+    let (cv, _) = rest.split_at_mut(rows * o);
+
+    // phase 1: gather + packed reduce, partitioned by patch row
+    let pm_parts = DisjointMut::new(pm);
+    let pa_parts = pa.map(DisjointMut::new);
+    let cm_parts = DisjointMut::new(cm);
+    let cv_parts = DisjointMut::new(cv);
+    let run_tile = |r: std::ops::Range<usize>| {
+        let len = r.end - r.start;
+        // SAFETY: patch-row tiles are disjoint, so every chunk below is
+        // touched by exactly one tile; run_tasks blocks until all finish.
+        let pm_chunk = unsafe { pm_parts.slice(r.start * kk, len * kk) };
+        im2col_rows_into(x_mu, sh, r.clone(), pm_chunk);
+        let pm_chunk: &[f32] = pm_chunk;
+        let pa_chunk: &[f32] = match (x_aux, &pa_parts) {
+            (Some(aux), Some(p)) => {
+                // SAFETY: same disjoint patch-row tiles as `pm_chunk`.
+                let chunk = unsafe { p.slice(r.start * kk, len * kk) };
+                im2col_rows_into(aux, sh, r.clone(), chunk);
+                chunk
+            }
+            _ => pm_chunk,
+        };
+        // SAFETY: per-tile output rows are disjoint (same tiles as above).
+        let cm_chunk = unsafe { cm_parts.slice(r.start * o, len * o) };
+        // SAFETY: per-tile output rows are disjoint (same tiles as above).
+        let cv_chunk = unsafe { cv_parts.slice(r.start * o, len * o) };
+        let args = PackedDenseSlices {
+            m: len,
+            k: kk,
+            n: o,
+            x_mu: pm_chunk,
+            x_aux: pa_chunk,
+            w_mu,
+            w_aux,
+            b_mu,
+            b_var,
+        };
+        dense_rows_packed_into::<A>(&args, &serial, ep, 0..len, cm_chunk, cv_chunk);
+    };
+    if tiles.len() <= 1 {
+        run_tile(0..rows);
+    } else {
+        pool.run_tasks(tiles.len(), &|ti| run_tile(tiles[ti].clone()));
+    }
+
+    // phase 2: scatter back to NCHW, partitioned by output plane
+    if scatter_tiles.len() <= 1 {
+        col2im_planes_into(cm, oh, ow, o, 0..sh.n * o, out_mu);
+        col2im_planes_into(cv, oh, ow, o, 0..sh.n * o, out_var);
+    } else {
+        let plane_out = oh * ow;
+        let mu_parts = DisjointMut::new(out_mu);
+        let var_parts = DisjointMut::new(out_var);
+        let cm_ref: &[f32] = cm;
+        let cv_ref: &[f32] = cv;
+        pool.run_tasks(scatter_tiles.len(), &|ti| {
+            let p = scatter_tiles[ti].clone();
+            let len = (p.end - p.start) * plane_out;
+            // SAFETY: plane tiles are disjoint contiguous output chunks.
+            let (mu_chunk, var_chunk) = unsafe {
+                (
+                    mu_parts.slice(p.start * plane_out, len),
+                    var_parts.slice(p.start * plane_out, len),
+                )
+            };
+            col2im_planes_into(cm_ref, oh, ow, o, p.clone(), mu_chunk);
+            col2im_planes_into(cv_ref, oh, ow, o, p, var_chunk);
+        });
+    }
+}
+
 /// Conv arguments: weights OIHW; aux follows the kernel's formulation
 /// (E[w^2] for Eq. 12, weight variance for Eq. 13).
 pub struct ConvArgs<'a> {
@@ -638,6 +752,101 @@ mod tests {
                 );
                 assert_eq!(mu, want_mu, "tasks={tasks} mu");
                 assert_eq!(var, want_var, "tasks={tasks} var");
+            }
+        });
+    }
+
+    #[test]
+    fn packed_conv_is_bitwise_widen_then_f32() {
+        // mixed-precision conv inherits the dense bit-parity contract:
+        // packed weights must reproduce exactly the bits of the f32 tiled
+        // kernel run on pre-widened weight copies, at any tile count and
+        // with the fused epilogue on
+        use crate::util::half::{narrow, quantize, Precision};
+        use crate::util::threadpool::{split_ranges, ThreadPool};
+        let pool = ThreadPool::new(3);
+        check(4, |g| {
+            let (x, w_mu, w_var, n, _c, o, _k, _hw) = rand_conv_case(g);
+            let w_e2 = w_mu.zip(&w_var, |m, v| m * m + v).unwrap();
+            let xs = x.shape();
+            let ws = w_mu.shape();
+            let sh = ConvShape {
+                n: xs[0],
+                c: xs[1],
+                h: xs[2],
+                w: xs[3],
+                o: ws[0],
+                kh: ws[2],
+                kw: ws[3],
+            };
+            let sched = Schedule::tuned(1);
+            for (pm, pa) in [
+                (Precision::F16, Precision::F16),
+                (Precision::Bf16, Precision::F32),
+                (Precision::F32, Precision::Bf16),
+            ] {
+                let wm_q: Vec<f32> = w_mu.data().iter().map(|&v| quantize(pm, v)).collect();
+                let wa_q: Vec<f32> = w_e2.data().iter().map(|&v| quantize(pa, v)).collect();
+                let wm_bits: Vec<u16> = w_mu.data().iter().map(|&v| narrow(pm, v)).collect();
+                let wa_bits: Vec<u16> = w_e2.data().iter().map(|&v| narrow(pa, v)).collect();
+                let wm_packed = if pm.is_f32() {
+                    PackedSlice::F32(&wm_q)
+                } else {
+                    PackedSlice::U16(pm, &wm_bits)
+                };
+                let wa_packed = if pa.is_f32() {
+                    PackedSlice::F32(&wa_q)
+                } else {
+                    PackedSlice::U16(pa, &wa_bits)
+                };
+                for tasks in [1usize, 3] {
+                    let tiles = split_ranges(sh.rows(), tasks);
+                    let scatter = split_ranges(n * o, tasks);
+                    for ep in [Epilogue::None, Epilogue::Relu] {
+                        let mut scratch = vec![0.0f32; sh.scratch_len(false)];
+                        let mut want_mu = vec![0.0f32; sh.out_len()];
+                        let mut want_var = vec![0.0f32; sh.out_len()];
+                        conv_kernel_tiled_into::<JointEq12>(
+                            &pool,
+                            &sh,
+                            x.mu.data(),
+                            Some(x.aux.data()),
+                            &wm_q,
+                            &wa_q,
+                            None,
+                            None,
+                            &sched,
+                            ep,
+                            &tiles,
+                            &scatter,
+                            &mut scratch,
+                            &mut want_mu,
+                            &mut want_var,
+                        );
+                        let mut scratch2 = vec![0.0f32; sh.scratch_len(false)];
+                        let mut mu = vec![0.0f32; sh.out_len()];
+                        let mut var = vec![0.0f32; sh.out_len()];
+                        conv_kernel_packed_tiled_into::<JointEq12>(
+                            &pool,
+                            &sh,
+                            x.mu.data(),
+                            Some(x.aux.data()),
+                            wm_packed,
+                            wa_packed,
+                            None,
+                            None,
+                            &sched,
+                            ep,
+                            &tiles,
+                            &scatter,
+                            &mut scratch2,
+                            &mut mu,
+                            &mut var,
+                        );
+                        assert_eq!(mu, want_mu, "{pm:?}/{pa:?} tasks={tasks} {ep:?} mu");
+                        assert_eq!(var, want_var, "{pm:?}/{pa:?} tasks={tasks} {ep:?} var");
+                    }
+                }
             }
         });
     }

@@ -32,7 +32,7 @@ use crate::util::threadpool::{self, split_ranges, DisjointMut, ThreadPool};
 
 use super::relu::{apply_epilogue, Epilogue};
 use super::schedule::{LoopOrder, Schedule};
-use super::simd::{self, Backend};
+use super::simd::{self, Backend, PackedSlice};
 
 /// Upper bound on the `tile_n` accumulator block: the cache-blocked loop
 /// body keeps its per-block accumulators in a fixed-size stack array so it
@@ -69,6 +69,25 @@ pub trait Accum: Copy + Default {
         _xa: &[f32],
         _wm: &[f32],
         _wa: &[f32],
+    ) -> Option<Self> {
+        None
+    }
+
+    /// Packed-weight twin of [`Accum::reduce_simd`]: the weight operands
+    /// are [`PackedSlice`]s (f16/bf16 bits, or plain f32 — each moment
+    /// path carries its own precision) widened to f32 registers inside
+    /// the microkernel, with f32 accumulation throughout. Implemented for
+    /// the same three planned formulations; `None` falls back to the
+    /// packed lane machinery, which widens per element with the scalar
+    /// reference — bitwise the same contract either way: a packed
+    /// reduction equals the f32 reduction over pre-widened weights.
+    #[inline(always)]
+    fn reduce_simd_packed(
+        _b: Backend,
+        _xm: &[f32],
+        _xa: &[f32],
+        _wm: PackedSlice<'_>,
+        _wa: PackedSlice<'_>,
     ) -> Option<Self> {
         None
     }
@@ -114,6 +133,21 @@ impl Accum for JointEq12 {
             return None;
         }
         let (mu, var) = simd::dot_joint_eq12(b, xm, xa, wm, wa);
+        Some(Self { mu, var })
+    }
+
+    #[inline(always)]
+    fn reduce_simd_packed(
+        b: Backend,
+        xm: &[f32],
+        xa: &[f32],
+        wm: PackedSlice<'_>,
+        wa: PackedSlice<'_>,
+    ) -> Option<Self> {
+        if b == Backend::Scalar {
+            return None;
+        }
+        let (mu, var) = simd::dot_joint_eq12_packed(b, xm, xa, wm, wa);
         Some(Self { mu, var })
     }
 }
@@ -208,6 +242,21 @@ impl Accum for FirstLayer {
         let (mu, var) = simd::dot_first_layer(b, xm, wm, wa);
         Some(Self { mu, var })
     }
+
+    #[inline(always)]
+    fn reduce_simd_packed(
+        b: Backend,
+        xm: &[f32],
+        _xa: &[f32],
+        wm: PackedSlice<'_>,
+        wa: PackedSlice<'_>,
+    ) -> Option<Self> {
+        if b == Backend::Scalar {
+            return None;
+        }
+        let (mu, var) = simd::dot_first_layer_packed(b, xm, wm, wa);
+        Some(Self { mu, var })
+    }
 }
 
 /// Mean-only pass (the "separate operators" split, Fig. 5).
@@ -238,6 +287,20 @@ impl Accum for MeanOnly {
             return None;
         }
         Some(Self { mu: simd::dot_mean(b, xm, wm) })
+    }
+
+    #[inline(always)]
+    fn reduce_simd_packed(
+        b: Backend,
+        xm: &[f32],
+        _xa: &[f32],
+        wm: PackedSlice<'_>,
+        _wa: PackedSlice<'_>,
+    ) -> Option<Self> {
+        if b == Backend::Scalar {
+            return None;
+        }
+        Some(Self { mu: simd::dot_mean_packed(b, xm, wm) })
     }
 }
 
@@ -668,6 +731,293 @@ pub fn dense_kernel_tiled_into<A: Accum>(
     });
 }
 
+// ---------------------------------------------------------------------------
+// mixed-precision (packed-weight) twins of the loop nest
+// ---------------------------------------------------------------------------
+//
+// Same schedule machinery, same bias/clamp/fused-epilogue tail, but the
+// weight operands are [`PackedSlice`]s: f16/bf16 bits widened to f32
+// registers inside the reduction (or plain f32 — mean and variance
+// precision are independent), with **all accumulation in f32**. Every
+// path mirrors its f32 twin's loop/lane structure exactly, so a packed
+// kernel is bitwise the f32 kernel run on pre-widened weight copies —
+// the invariant the differential harness pins per backend.
+
+/// [`reduce_lanes`] with packed weight operands (per-element widen via
+/// the scalar reference — exact, so lane structure decides the bits).
+#[inline(always)]
+fn reduce_lanes_packed<A: Accum, const LANES: usize>(
+    xm: &[f32],
+    xa: &[f32],
+    wm: PackedSlice<'_>,
+    wa: PackedSlice<'_>,
+) -> A {
+    let k = xm.len();
+    let mut lanes = [A::default(); LANES];
+    let chunks = k / LANES;
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            let i = base + l;
+            lanes[l].step(xm[i], xa[i], wm.get(i), wa.get(i));
+        }
+    }
+    let mut acc = lanes[0];
+    for lane in lanes.iter().skip(1) {
+        acc.merge(*lane);
+    }
+    for i in chunks * LANES..k {
+        acc.step(xm[i], xa[i], wm.get(i), wa.get(i));
+    }
+    acc
+}
+
+/// [`reduce`] with packed weight operands: identical lane-count
+/// legalization, so the packed scalar path matches widen-then-f32 at any
+/// unroll/vectorize setting.
+#[inline(always)]
+fn reduce_packed<A: Accum>(
+    sched: &Schedule,
+    xm: &[f32],
+    xa: &[f32],
+    wm: PackedSlice<'_>,
+    wa: PackedSlice<'_>,
+) -> A {
+    let mut lanes = if sched.vectorize { 8 } else { 1 } * sched.unroll.max(1);
+    if !lanes.is_power_of_two() {
+        lanes = lanes.next_power_of_two() / 2;
+    }
+    while lanes > 1 && lanes > xm.len() {
+        lanes /= 2;
+    }
+    match lanes {
+        1 => reduce_lanes_packed::<A, 1>(xm, xa, wm, wa),
+        2 => reduce_lanes_packed::<A, 2>(xm, xa, wm, wa),
+        4 => reduce_lanes_packed::<A, 4>(xm, xa, wm, wa),
+        8 => reduce_lanes_packed::<A, 8>(xm, xa, wm, wa),
+        16 => reduce_lanes_packed::<A, 16>(xm, xa, wm, wa),
+        32 => reduce_lanes_packed::<A, 32>(xm, xa, wm, wa),
+        _ => reduce_lanes_packed::<A, 64>(xm, xa, wm, wa),
+    }
+}
+
+/// [`DenseSlices`] with packed weight operands. Activations stay f32 —
+/// reduced-precision *activation* storage happens between steps (the
+/// plan narrows a step's output through the workspace's packed buffer),
+/// so the kernel always streams f32 activation rows.
+#[derive(Clone, Copy)]
+pub struct PackedDenseSlices<'a> {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// `[M, K]` row-major activation means.
+    pub x_mu: &'a [f32],
+    /// `[M, K]` activation aux (E\[x^2\] / variance per the formulation).
+    pub x_aux: &'a [f32],
+    /// `[N, K]` row-major weight means, possibly packed.
+    pub w_mu: PackedSlice<'a>,
+    /// `[N, K]` weight aux, possibly packed (independent precision).
+    pub w_aux: PackedSlice<'a>,
+    pub b_mu: Option<&'a [f32]>,
+    pub b_var: Option<&'a [f32]>,
+}
+
+/// [`run_rows`] with packed weight operands — all three loop orders, so
+/// the packed/f32 bit-parity holds across the whole schedule space.
+fn run_rows_packed<A: Accum>(
+    args: &PackedDenseSlices<'_>,
+    sched: &Schedule,
+    rows: std::ops::Range<usize>,
+    out_mu: &mut [f32],
+    out_var: &mut [f32],
+) {
+    let (k, n) = (args.k, args.n);
+    let xm_all = args.x_mu;
+    let xa_all = args.x_aux;
+    let wm_all = args.w_mu;
+    let wa_all = args.w_aux;
+    let be = simd::resolve(sched.isa);
+
+    match sched.loop_order {
+        LoopOrder::Mnk if sched.tile_n == 0 && sched.tile_k == 0 => {
+            for (local, m) in rows.enumerate() {
+                let xm = &xm_all[m * k..(m + 1) * k];
+                let xa = &xa_all[m * k..(m + 1) * k];
+                for nn in 0..n {
+                    let wm = wm_all.slice(nn * k..(nn + 1) * k);
+                    let wa = wa_all.slice(nn * k..(nn + 1) * k);
+                    let acc: A = match A::reduce_simd_packed(be, xm, xa, wm, wa) {
+                        Some(acc) => acc,
+                        None => reduce_packed(sched, xm, xa, wm, wa),
+                    };
+                    let (mu, var) = acc.finish();
+                    out_mu[local * n + nn] = mu;
+                    out_var[local * n + nn] = var;
+                }
+            }
+        }
+        LoopOrder::Mnk => {
+            let tn = (if sched.tile_n == 0 { n } else { sched.tile_n })
+                .max(1)
+                .min(MAX_TILE_N);
+            let tk = (if sched.tile_k == 0 { k } else { sched.tile_k }).max(1);
+            for (local, m) in rows.enumerate() {
+                let xm = &xm_all[m * k..(m + 1) * k];
+                let xa = &xa_all[m * k..(m + 1) * k];
+                let mut n0 = 0;
+                while n0 < n {
+                    let n1 = (n0 + tn).min(n);
+                    let mut accs = [A::default(); MAX_TILE_N];
+                    let mut k0 = 0;
+                    while k0 < k {
+                        let k1 = (k0 + tk).min(k);
+                        for (ai, nn) in (n0..n1).enumerate() {
+                            let wm = wm_all.slice(nn * k + k0..nn * k + k1);
+                            let wa = wa_all.slice(nn * k + k0..nn * k + k1);
+                            let mut part: A = match A::reduce_simd_packed(
+                                be,
+                                &xm[k0..k1],
+                                &xa[k0..k1],
+                                wm,
+                                wa,
+                            ) {
+                                Some(acc) => acc,
+                                None => {
+                                    reduce_packed(sched, &xm[k0..k1], &xa[k0..k1], wm, wa)
+                                }
+                            };
+                            part.merge(accs[ai]);
+                            accs[ai] = part;
+                        }
+                        k0 = k1;
+                    }
+                    for (ai, nn) in (n0..n1).enumerate() {
+                        let (mu, var) = accs[ai].finish();
+                        out_mu[local * n + nn] = mu;
+                        out_var[local * n + nn] = var;
+                    }
+                    n0 = n1;
+                }
+            }
+        }
+        LoopOrder::Mkn => {
+            // naive baseline, packed: per-element widen in the strided
+            // inner loop (never planned for hot serving, kept for the
+            // schedule-space parity contract).
+            for (local, m) in rows.enumerate() {
+                let mut accs: Vec<A> = vec![A::default(); n];
+                for kk in 0..k {
+                    let xm = xm_all[m * k + kk];
+                    let xa = xa_all[m * k + kk];
+                    if sched.vectorize {
+                        let mut nn = 0;
+                        while nn + 8 <= n {
+                            let mut wm_l = [0.0f32; 8];
+                            let mut wa_l = [0.0f32; 8];
+                            for l in 0..8 {
+                                wm_l[l] = wm_all.get((nn + l) * k + kk);
+                                wa_l[l] = wa_all.get((nn + l) * k + kk);
+                            }
+                            for l in 0..8 {
+                                accs[nn + l].step(xm, xa, wm_l[l], wa_l[l]);
+                            }
+                            nn += 8;
+                        }
+                        for nn2 in nn..n {
+                            accs[nn2].step(
+                                xm,
+                                xa,
+                                wm_all.get(nn2 * k + kk),
+                                wa_all.get(nn2 * k + kk),
+                            );
+                        }
+                    } else {
+                        for (nn, acc) in accs.iter_mut().enumerate() {
+                            acc.step(xm, xa, wm_all.get(nn * k + kk), wa_all.get(nn * k + kk));
+                        }
+                    }
+                }
+                for (nn, acc) in accs.into_iter().enumerate() {
+                    let (mu, var) = acc.finish();
+                    out_mu[local * n + nn] = mu;
+                    out_var[local * n + nn] = var;
+                }
+            }
+        }
+    }
+}
+
+/// [`dense_rows_into`] with packed weight operands: same bias/clamp tail
+/// and fused epilogue on the cache-hot chunk. Allocation-free for `Mnk`
+/// schedules — the widen/narrow helpers use registers and stack buffers
+/// only (policed by pfp-lint's hot-path allocation ban).
+pub fn dense_rows_packed_into<A: Accum>(
+    args: &PackedDenseSlices<'_>,
+    sched: &Schedule,
+    ep: Epilogue,
+    rows: std::ops::Range<usize>,
+    out_mu: &mut [f32],
+    out_var: &mut [f32],
+) {
+    let n = args.n;
+    debug_assert_eq!(out_mu.len(), (rows.end - rows.start) * n);
+    debug_assert_eq!(out_var.len(), (rows.end - rows.start) * n);
+    run_rows_packed::<A>(args, sched, rows, out_mu, out_var);
+    if let Some(b) = args.b_mu {
+        for row in out_mu.chunks_mut(n) {
+            for (o, bv) in row.iter_mut().zip(b) {
+                *o += bv;
+            }
+        }
+    }
+    match args.b_var {
+        Some(b) => {
+            for row in out_var.chunks_mut(n) {
+                for (o, bv) in row.iter_mut().zip(b) {
+                    *o = (*o + bv).max(0.0);
+                }
+            }
+        }
+        None => {
+            for o in out_var.iter_mut() {
+                *o = o.max(0.0);
+            }
+        }
+    }
+    apply_epilogue(ep, sched.isa, out_mu, out_var);
+}
+
+/// [`dense_kernel_tiled_into`] with packed weight operands: the compiled
+/// plan's packed dense step — pre-partitioned tiles, gang dispatch, zero
+/// heap allocation, bit-identical at any tile count.
+pub fn dense_kernel_packed_tiled_into<A: Accum>(
+    pool: &ThreadPool,
+    args: &PackedDenseSlices<'_>,
+    sched: &Schedule,
+    ep: Epilogue,
+    tiles: &[std::ops::Range<usize>],
+    out_mu: &mut [f32],
+    out_var: &mut [f32],
+) {
+    let serial = sched.with_threads(1);
+    if tiles.len() <= 1 {
+        dense_rows_packed_into::<A>(args, &serial, ep, 0..args.m, out_mu, out_var);
+        return;
+    }
+    let n = args.n;
+    let mu = DisjointMut::new(out_mu);
+    let var = DisjointMut::new(out_var);
+    pool.run_tasks(tiles.len(), &|ti| {
+        let r = tiles[ti].clone();
+        let len = (r.end - r.start) * n;
+        let (mu_chunk, var_chunk) =
+            // SAFETY: tiles are disjoint row ranges, so the chunks never
+            // overlap, and run_tasks blocks until every tile completes.
+            unsafe { (mu.slice(r.start * n, len), var.slice(r.start * n, len)) };
+        dense_rows_packed_into::<A>(args, &serial, ep, r, mu_chunk, var_chunk);
+    });
+}
+
 /// Execute kernel `A` with schedule `sched` on `pool`
 /// -> (mu `[M,N]`, var `[M,N]`).
 pub fn dense_kernel_in<A: Accum>(
@@ -1041,6 +1391,184 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn packed_dense_is_bitwise_widen_then_f32() {
+        // the mixed-precision contract: a packed kernel produces exactly
+        // the bits of the f32 kernel run on pre-widened weight copies,
+        // for every mean/variance precision pair, schedule shape,
+        // epilogue, and tile count (widening is exact, loop structure is
+        // mirrored, accumulation is f32 throughout)
+        use crate::util::half::{quantize, Precision};
+        let pool = crate::util::threadpool::ThreadPool::new(3);
+        let precisions = [Precision::F32, Precision::F16, Precision::Bf16];
+        let schedules = [
+            Schedule::tuned(1),
+            Schedule::tiled(16, 32),
+            Schedule::baseline().with_vectorize(true),
+            Schedule::baseline().with_order(LoopOrder::Mkn).with_vectorize(true),
+        ];
+        check(6, |g| {
+            let m = g.usize_in(1, 9);
+            let k = g.usize_in(1, 130);
+            let n = g.usize_in(1, 24);
+            let (x_mu, x_var, w_mu, w_var) = rand_dense(g, m, k, n);
+            let x_e2 = e2_of(&x_mu, &x_var);
+            let w_e2 = e2_of(&w_mu, &w_var);
+            let b_mu: Vec<f32> = g.normal_vec(n, 0.5);
+            let b_var: Vec<f32> = g.var_vec(n, 0.1);
+            for &pm in &precisions {
+                for &pa in &precisions {
+                    // quantize to the storage grid, then build both views
+                    // of the same values: widened f32 and packed u16
+                    let wm_q: Vec<f32> =
+                        w_mu.data().iter().map(|&v| quantize(pm, v)).collect();
+                    let wa_q: Vec<f32> =
+                        w_e2.data().iter().map(|&v| quantize(pa, v)).collect();
+                    let wm_bits: Vec<u16> = w_mu
+                        .data()
+                        .iter()
+                        .map(|&v| crate::util::half::narrow(pm, v))
+                        .collect();
+                    let wa_bits: Vec<u16> = w_e2
+                        .data()
+                        .iter()
+                        .map(|&v| crate::util::half::narrow(pa, v))
+                        .collect();
+                    let wm_packed = if pm.is_f32() {
+                        PackedSlice::F32(&wm_q)
+                    } else {
+                        PackedSlice::U16(pm, &wm_bits)
+                    };
+                    let wa_packed = if pa.is_f32() {
+                        PackedSlice::F32(&wa_q)
+                    } else {
+                        PackedSlice::U16(pa, &wa_bits)
+                    };
+                    let f32_slices = DenseSlices {
+                        m,
+                        k,
+                        n,
+                        x_mu: x_mu.data(),
+                        x_aux: x_e2.data(),
+                        w_mu: &wm_q,
+                        w_aux: &wa_q,
+                        b_mu: Some(&b_mu),
+                        b_var: Some(&b_var),
+                    };
+                    let packed_slices = PackedDenseSlices {
+                        m,
+                        k,
+                        n,
+                        x_mu: x_mu.data(),
+                        x_aux: x_e2.data(),
+                        w_mu: wm_packed,
+                        w_aux: wa_packed,
+                        b_mu: Some(&b_mu),
+                        b_var: Some(&b_var),
+                    };
+                    for sched in &schedules {
+                        for ep in [Epilogue::None, Epilogue::Relu] {
+                            let mut want_mu = vec![0.0f32; m * n];
+                            let mut want_var = vec![0.0f32; m * n];
+                            dense_rows_into::<JointEq12>(
+                                &f32_slices, sched, ep, 0..m, &mut want_mu, &mut want_var,
+                            );
+                            let mut mu = vec![0.0f32; m * n];
+                            let mut var = vec![0.0f32; m * n];
+                            dense_rows_packed_into::<JointEq12>(
+                                &packed_slices, sched, ep, 0..m, &mut mu, &mut var,
+                            );
+                            assert_eq!(
+                                mu, want_mu,
+                                "{} {ep:?} {pm:?}/{pa:?} mu",
+                                sched.tag()
+                            );
+                            assert_eq!(
+                                var, want_var,
+                                "{} {ep:?} {pm:?}/{pa:?} var",
+                                sched.tag()
+                            );
+                            // gang dispatch over the packed kernel must
+                            // stay bit-identical to its own serial run
+                            let tiles = split_ranges(m, 3);
+                            let mut tmu = vec![0.0f32; m * n];
+                            let mut tvar = vec![0.0f32; m * n];
+                            dense_kernel_packed_tiled_into::<JointEq12>(
+                                &pool, &packed_slices, sched, ep, &tiles, &mut tmu, &mut tvar,
+                            );
+                            assert_eq!(tmu, mu, "{} tiled mu", sched.tag());
+                            assert_eq!(tvar, var, "{} tiled var", sched.tag());
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn packed_first_and_mean_match_their_f32_twins() {
+        // same bit-parity contract for the Eq. 13 first-layer and
+        // mean-only formulations the plan actually dispatches packed
+        use crate::util::half::{narrow, quantize, Precision};
+        check(6, |g| {
+            let m = g.usize_in(1, 6);
+            let k = g.usize_in(1, 96);
+            let n = g.usize_in(1, 16);
+            let x = Tensor::new(vec![m, k], g.normal_vec(m * k, 1.0)).unwrap();
+            let x_sq = x.squared();
+            let w_mu = Tensor::new(vec![n, k], g.normal_vec(n * k, 0.2)).unwrap();
+            let w_var = Tensor::new(vec![n, k], g.var_vec(n * k, 0.02)).unwrap();
+            for prec in [Precision::F16, Precision::Bf16] {
+                let wm_q: Vec<f32> = w_mu.data().iter().map(|&v| quantize(prec, v)).collect();
+                let wv_q: Vec<f32> = w_var.data().iter().map(|&v| quantize(prec, v)).collect();
+                let wm_bits: Vec<u16> = w_mu.data().iter().map(|&v| narrow(prec, v)).collect();
+                let wv_bits: Vec<u16> = w_var.data().iter().map(|&v| narrow(prec, v)).collect();
+                let sched = Schedule::tuned(1);
+                let f32_slices = DenseSlices {
+                    m,
+                    k,
+                    n,
+                    x_mu: x.data(),
+                    x_aux: x_sq.data(),
+                    w_mu: &wm_q,
+                    w_aux: &wv_q,
+                    b_mu: None,
+                    b_var: None,
+                };
+                let packed_slices = PackedDenseSlices {
+                    m,
+                    k,
+                    n,
+                    x_mu: x.data(),
+                    x_aux: x_sq.data(),
+                    w_mu: PackedSlice::U16(prec, &wm_bits),
+                    w_aux: PackedSlice::U16(prec, &wv_bits),
+                    b_mu: None,
+                    b_var: None,
+                };
+                let mut want_mu = vec![0.0f32; m * n];
+                let mut want_var = vec![0.0f32; m * n];
+                let mut mu = vec![0.0f32; m * n];
+                let mut var = vec![0.0f32; m * n];
+                dense_rows_into::<FirstLayer>(
+                    &f32_slices, &sched, Epilogue::None, 0..m, &mut want_mu, &mut want_var,
+                );
+                dense_rows_packed_into::<FirstLayer>(
+                    &packed_slices, &sched, Epilogue::None, 0..m, &mut mu, &mut var,
+                );
+                assert_eq!(mu, want_mu, "{prec:?} first mu");
+                assert_eq!(var, want_var, "{prec:?} first var");
+                dense_rows_into::<MeanOnly>(
+                    &f32_slices, &sched, Epilogue::None, 0..m, &mut want_mu, &mut want_var,
+                );
+                dense_rows_packed_into::<MeanOnly>(
+                    &packed_slices, &sched, Epilogue::None, 0..m, &mut mu, &mut var,
+                );
+                assert_eq!(mu, want_mu, "{prec:?} mean mu");
+            }
+        });
     }
 
     #[test]

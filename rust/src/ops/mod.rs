@@ -29,3 +29,6 @@ pub mod svi;
 pub use relu::Epilogue;
 pub use schedule::{LoopOrder, Schedule};
 pub use simd::Isa;
+// storage-precision knob lives in util::half; re-exported here because it
+// is a Schedule dimension like `Isa`
+pub use crate::util::half::Precision;

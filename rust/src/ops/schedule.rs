@@ -33,6 +33,7 @@
 //! per step like every other knob.
 
 use super::simd::Isa;
+use crate::util::half::Precision;
 
 /// Loop nest order for the dense/conv matmul core.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -73,6 +74,15 @@ pub struct Schedule {
     /// ReLU+E2→Var vs none on a last layer) is decided by the plan's
     /// pattern matcher.
     pub fuse: bool,
+    /// Storage precision for this step's posterior weights and its
+    /// output activations (mixed-precision PR): `F32` is the stock
+    /// format; `F16`/`Bf16` store weight matrices packed as u16 bits and
+    /// narrow the step's output through the workspace's packed buffer,
+    /// with **all accumulation staying in f32**. Mean vs variance
+    /// precision can additionally be split model-wide via the executor's
+    /// `var_precision` override; this knob is the per-step default for
+    /// both operand roles.
+    pub precision: Precision,
 }
 
 impl Default for Schedule {
@@ -93,6 +103,7 @@ impl Schedule {
             threads: 1,
             isa: Isa::Scalar,
             fuse: false,
+            precision: Precision::F32,
         }
     }
 
@@ -112,6 +123,7 @@ impl Schedule {
             threads,
             isa: Isa::Native,
             fuse: false,
+            precision: Precision::F32,
         }
     }
 
@@ -126,6 +138,7 @@ impl Schedule {
             threads: 1,
             isa: Isa::Scalar,
             fuse: false,
+            precision: Precision::F32,
         }
     }
 
@@ -165,10 +178,15 @@ impl Schedule {
         self
     }
 
+    pub fn with_precision(mut self, p: Precision) -> Self {
+        self.precision = p;
+        self
+    }
+
     /// Short human tag, used in bench output and tuning records.
     pub fn tag(&self) -> String {
         format!(
-            "{:?}{}{}{}{}{}{}",
+            "{:?}{}{}{}{}{}{}{}",
             self.loop_order,
             if self.tile_n > 0 || self.tile_k > 0 {
                 format!("+tile{}x{}", self.tile_n, self.tile_k)
@@ -179,6 +197,11 @@ impl Schedule {
             if self.vectorize { "+vec" } else { "" },
             if self.isa == Isa::Native { "+simd" } else { "" },
             if self.fuse { "+fuse" } else { "" },
+            if self.precision.is_f32() {
+                String::new()
+            } else {
+                format!("+{}", self.precision.as_str())
+            },
             if self.threads > 1 { format!("+t{}", self.threads) } else { String::new() },
         )
     }
@@ -198,6 +221,10 @@ impl Schedule {
             ("threads", Json::Num(self.threads as f64)),
             ("isa", Json::Str(self.isa.as_str().to_string())),
             ("fuse", Json::Bool(self.fuse)),
+            (
+                "precision",
+                Json::Str(self.precision.as_str().to_string()),
+            ),
         ])
     }
 
@@ -227,6 +254,13 @@ impl Schedule {
             // records-file version gate in `tuner::records` warns and
             // drops whole pre-v4 files before this fallback is ever hit)
             fuse: v.get("fuse").and_then(|b| b.as_bool()).unwrap_or(false),
+            // absent in pre-mixed-precision records (schema v4 and
+            // earlier): those schedules were measured on f32 storage
+            precision: v
+                .get("precision")
+                .and_then(|s| s.as_str())
+                .and_then(Precision::parse)
+                .unwrap_or(Precision::F32),
         })
     }
 }
@@ -257,6 +291,30 @@ mod tests {
             Schedule::tuned(1).tag(),
             Schedule::tuned(1).with_fuse(true).tag()
         );
+        // and the precision knob (f32 is the unmarked default)
+        let f16 = Schedule::tuned(1).with_precision(Precision::F16).tag();
+        let bf16 = Schedule::tuned(1).with_precision(Precision::Bf16).tag();
+        assert_ne!(Schedule::tuned(1).tag(), f16);
+        assert_ne!(f16, bf16);
+        assert!(f16.contains("+f16"), "{f16}");
+        assert!(bf16.contains("+bf16"), "{bf16}");
+    }
+
+    #[test]
+    fn precision_json_roundtrip_and_back_compat() {
+        // the knob serializes with the record and round-trips
+        let s = Schedule::tuned(2).with_precision(Precision::Bf16);
+        let back = Schedule::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        // pre-mixed-precision (schema ≤ v4) schedule JSON: those
+        // schedules were measured on f32 storage, so that is what they
+        // must keep describing
+        let mut j = Schedule::tuned(2).with_precision(Precision::F16).to_json();
+        if let crate::util::json::Json::Obj(obj) = &mut j {
+            obj.remove("precision");
+        }
+        let back = Schedule::from_json(&j).unwrap();
+        assert_eq!(back.precision, Precision::F32);
     }
 
     #[test]

@@ -39,6 +39,7 @@
 use std::sync::OnceLock;
 
 use super::erf::{ERF_A1, ERF_A2, ERF_A3, ERF_A4, ERF_A5, ERF_P, FRAC_1_SQRT_2, INV_SQRT_2PI};
+use crate::util::half::{self, Precision};
 
 /// Variance floor shared with the scalar moment-matching ops.
 const EPS: f32 = 1e-12;
@@ -140,6 +141,33 @@ pub fn resolve(isa: Isa) -> Backend {
         Isa::Scalar => Backend::Scalar,
         Isa::Native => detect(),
     }
+}
+
+static F16C: OnceLock<bool> = OnceLock::new();
+
+/// Whether the x86 `F16C` conversion extension is available. F16C is a
+/// separate CPUID bit from AVX2+FMA, so the f16 widen/narrow paths gate
+/// on it independently of [`detect`]; without it the AVX2 kernels widen
+/// f16 through the scalar reference (bitwise the same values — widening
+/// is exact — just slower). Detected once and cached like [`detect`].
+/// `PFP_FORCE_SCALAR=1` or `PFP_FORCE_NO_F16C=1` force the fallback,
+/// which is how CI asserts the no-F16C dispatch path on capable hosts.
+pub fn f16c_available() -> bool {
+    *F16C.get_or_init(detect_f16c)
+}
+
+#[allow(unreachable_code)]
+fn detect_f16c() -> bool {
+    if std::env::var("PFP_FORCE_SCALAR").as_deref() == Ok("1")
+        || std::env::var("PFP_FORCE_NO_F16C").as_deref() == Ok("1")
+    {
+        return false;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        return std::is_x86_feature_detected!("f16c");
+    }
+    false
 }
 
 // ---------------------------------------------------------------------------
@@ -367,6 +395,208 @@ pub fn dot_mean(b: Backend, xm: &[f32], wm: &[f32]) -> f32 {
 }
 
 // ---------------------------------------------------------------------------
+// packed-storage conversions + packed-operand dot kernels (mixed precision)
+// ---------------------------------------------------------------------------
+
+/// A borrowed moment operand: plain f32, or reduced-precision bits packed
+/// as `u16`. Each operand carries its **own** precision, so the mean and
+/// variance paths of one layer mix freely (the ROADMAP's open question is
+/// how little precision the variance path tolerates given the Eq. 12/13
+/// cancellation — the certification harness sweeps the combinations).
+///
+/// Widening is exact, so a packed kernel fed `U16` operands is **bitwise
+/// identical** to the corresponding f32 kernel fed pre-widened copies of
+/// the same data, per backend — the invariant the differential harness
+/// pins.
+#[derive(Clone, Copy, Debug)]
+pub enum PackedSlice<'a> {
+    F32(&'a [f32]),
+    /// Packed f16/bf16 bit patterns. `Precision::F32` is invalid here —
+    /// f32 data always uses the `F32` variant.
+    U16(Precision, &'a [u16]),
+}
+
+impl<'a> PackedSlice<'a> {
+    pub fn len(&self) -> usize {
+        match self {
+            PackedSlice::F32(s) => s.len(),
+            PackedSlice::U16(_, s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Widen one element to f32 (exact: widening never rounds).
+    #[inline]
+    pub fn get(&self, i: usize) -> f32 {
+        match self {
+            PackedSlice::F32(s) => s[i],
+            PackedSlice::U16(p, s) => half::widen(*p, s[i]),
+        }
+    }
+
+    /// Reborrow a sub-range (element indexing is layout-independent).
+    #[inline]
+    pub fn slice(&self, r: std::ops::Range<usize>) -> PackedSlice<'a> {
+        match self {
+            PackedSlice::F32(s) => PackedSlice::F32(&s[r]),
+            PackedSlice::U16(p, s) => PackedSlice::U16(*p, &s[r]),
+        }
+    }
+}
+
+/// Widen a packed f16/bf16 slice to f32. Vectorized on AVX2 (`F16C`
+/// hardware conversion when present, integer shifts for bf16) and NEON
+/// (bf16); everything else goes through the bit-exact scalar reference in
+/// [`util::half`](crate::util::half). No allocation — hot-path safe.
+pub fn widen_into(b: Backend, prec: Precision, src: &[u16], out: &mut [f32]) {
+    debug_assert_eq!(src.len(), out.len());
+    debug_assert!(prec != Precision::F32, "f32 has no packed representation");
+    match (b, prec) {
+        #[cfg(target_arch = "x86_64")]
+        (Backend::Avx2, Precision::F16) if f16c_available() => unsafe {
+            // SAFETY: `b == Avx2` only comes from [`detect`] (avx2+fma
+            // verified at runtime) and the guard verified `f16c`; the
+            // kernel handles any slice length with a scalar tail.
+            avx2::widen_f16_into(src, out)
+        },
+        #[cfg(target_arch = "x86_64")]
+        (Backend::Avx2, Precision::Bf16) => unsafe {
+            // SAFETY: `b == Avx2` only comes from [`detect`] (avx2+fma
+            // verified at runtime); integer ops only, any length is safe.
+            avx2::widen_bf16_into(src, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        (Backend::Neon, Precision::Bf16) => unsafe {
+            // SAFETY: `b == Neon` only comes from [`detect`] (neon is
+            // baseline on aarch64); integer ops only, any length is safe.
+            neon::widen_bf16_into(src, out)
+        },
+        // Scalar backend, f16 without F16C, and f16 on NEON (stable
+        // `std::arch` has no aarch64 fp16 vector conversions yet) all
+        // take the scalar reference — bitwise identical, widening is
+        // exact.
+        _ => {
+            for (o, &h) in out.iter_mut().zip(src) {
+                *o = half::widen(prec, h);
+            }
+        }
+    }
+}
+
+/// Narrow an f32 slice to packed f16/bf16 bits with round-to-nearest-even,
+/// bitwise identical to the scalar reference on every backend (the f16
+/// hardware path is `vcvtps2ph` with RN rounding — the mode the scalar
+/// conversion replicates). No allocation — hot-path safe.
+pub fn narrow_into(b: Backend, prec: Precision, src: &[f32], out: &mut [u16]) {
+    debug_assert_eq!(src.len(), out.len());
+    debug_assert!(prec != Precision::F32, "f32 has no packed representation");
+    match (b, prec) {
+        #[cfg(target_arch = "x86_64")]
+        (Backend::Avx2, Precision::F16) if f16c_available() => unsafe {
+            // SAFETY: `b == Avx2` only comes from [`detect`] (avx2+fma
+            // verified at runtime) and the guard verified `f16c`; the
+            // kernel handles any slice length with a scalar tail.
+            avx2::narrow_f16_into(src, out)
+        },
+        #[cfg(target_arch = "x86_64")]
+        (Backend::Avx2, Precision::Bf16) => unsafe {
+            // SAFETY: `b == Avx2` only comes from [`detect`] (avx2+fma
+            // verified at runtime); integer ops only, any length is safe.
+            avx2::narrow_bf16_into(src, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        (Backend::Neon, Precision::Bf16) => unsafe {
+            // SAFETY: `b == Neon` only comes from [`detect`] (neon is
+            // baseline on aarch64); integer ops only, any length is safe.
+            neon::narrow_bf16_into(src, out)
+        },
+        _ => {
+            for (o, &x) in out.iter_mut().zip(src) {
+                *o = half::narrow(prec, x);
+            }
+        }
+    }
+}
+
+/// [`dot_joint_eq12`] with packed weight operands: widen tiles to f32
+/// registers, accumulate in f32, identical loop/lane/h-sum structure —
+/// bitwise the widen-then-f32 kernel, per backend.
+pub fn dot_joint_eq12_packed(
+    b: Backend,
+    xm: &[f32],
+    xa: &[f32],
+    wm: PackedSlice<'_>,
+    wa: PackedSlice<'_>,
+) -> (f32, f32) {
+    debug_assert_eq!(xm.len(), wm.len());
+    debug_assert_eq!(xm.len(), xa.len());
+    debug_assert_eq!(xm.len(), wa.len());
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::dot_joint_eq12_packed(xm, xa, wm, wa, f16c_available()) }, // SAFETY: `b == Avx2` only comes from [`detect`] (avx2+fma was verified at runtime); the kernels accept any slice length.
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::dot_joint_eq12_packed(xm, xa, wm, wa) }, // SAFETY: `b == Neon` only comes from [`detect`] (neon is baseline on aarch64); the kernels accept any slice length.
+        _ => {
+            let (mut mu, mut var) = (0.0f32, 0.0f32);
+            for i in 0..xm.len() {
+                let t = xm[i] * wm.get(i);
+                mu += t;
+                var += xa[i] * wa.get(i) - t * t;
+            }
+            (mu, var)
+        }
+    }
+}
+
+/// [`dot_first_layer`] with packed weight operands (see
+/// [`dot_joint_eq12_packed`] for the bit-parity contract).
+pub fn dot_first_layer_packed(
+    b: Backend,
+    xm: &[f32],
+    wm: PackedSlice<'_>,
+    wa: PackedSlice<'_>,
+) -> (f32, f32) {
+    debug_assert_eq!(xm.len(), wm.len());
+    debug_assert_eq!(xm.len(), wa.len());
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::dot_first_layer_packed(xm, wm, wa, f16c_available()) }, // SAFETY: `b == Avx2` only comes from [`detect`] (avx2+fma was verified at runtime); the kernels accept any slice length.
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::dot_first_layer_packed(xm, wm, wa) }, // SAFETY: `b == Neon` only comes from [`detect`] (neon is baseline on aarch64); the kernels accept any slice length.
+        _ => {
+            let (mut mu, mut var) = (0.0f32, 0.0f32);
+            for i in 0..xm.len() {
+                mu += xm[i] * wm.get(i);
+                var += xm[i] * xm[i] * wa.get(i);
+            }
+            (mu, var)
+        }
+    }
+}
+
+/// [`dot_mean`] with a packed weight operand (see
+/// [`dot_joint_eq12_packed`] for the bit-parity contract).
+pub fn dot_mean_packed(b: Backend, xm: &[f32], wm: PackedSlice<'_>) -> f32 {
+    debug_assert_eq!(xm.len(), wm.len());
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::dot_mean_packed(xm, wm, f16c_available()) }, // SAFETY: `b == Avx2` only comes from [`detect`] (avx2+fma was verified at runtime); the kernels accept any slice length.
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::dot_mean_packed(xm, wm) }, // SAFETY: `b == Neon` only comes from [`detect`] (neon is baseline on aarch64); the kernels accept any slice length.
+        _ => {
+            let mut mu = 0.0f32;
+            for i in 0..xm.len() {
+                mu += xm[i] * wm.get(i);
+            }
+            mu
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // AVX2 + FMA backend (x86_64, 8 f32 lanes)
 // ---------------------------------------------------------------------------
 
@@ -383,6 +613,8 @@ mod avx2 {
         EPS, ERF_A1, ERF_A2, ERF_A3, ERF_A4, ERF_A5, ERF_P, EXP_C1, EXP_C2, EXP_HI, EXP_LO,
         EXP_P0, EXP_P1, EXP_P2, EXP_P3, EXP_P4, EXP_P5, FRAC_1_SQRT_2, INV_SQRT_2PI, LOG2EF,
     };
+    use super::PackedSlice;
+    use crate::util::half::{self, Precision};
 
     /// exp(x) as 2^k * P(r): Cody-Waite reduction, degree-6 polynomial,
     /// exponent built by integer bit manipulation.
@@ -746,6 +978,252 @@ mod avx2 {
         }
         mu_s
     }
+
+    // -- mixed-precision conversions + packed-operand dots ------------------
+
+    /// Widen 8 packed f16 via the `F16C` hardware conversion (exact).
+    #[inline]
+    #[target_feature(enable = "avx2,fma,f16c")]
+    // SAFETY: requires f16c on top of avx2+fma — every caller guards on
+    // `f16c_available()` before taking this path; reads exactly 16 bytes
+    // at `p`, which callers guarantee are in bounds.
+    unsafe fn widen8_f16c(p: *const u16) -> __m256 {
+        _mm256_cvtph_ps(_mm_loadu_si128(p as *const __m128i))
+    }
+
+    /// Widen 8 packed bf16 by zero-extend + 16-bit left shift (exact —
+    /// bf16 is a truncated f32).
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    // SAFETY: integer ops only; requires avx2, which every caller
+    // (itself a target_feature fn reached via detect-gated dispatch) has;
+    // reads exactly 16 bytes at `p`, in bounds per caller.
+    unsafe fn widen8_bf16(p: *const u16) -> __m256 {
+        let h = _mm_loadu_si128(p as *const __m128i);
+        _mm256_castsi256_ps(_mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(h)))
+    }
+
+    /// Load 8 lanes of a packed operand as f32. The f16-without-F16C path
+    /// widens through the scalar reference into a stack buffer — the same
+    /// bits (widening is exact), just slower; this is the asserted CI
+    /// fallback on hosts without F16C.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    // SAFETY: requires avx2+fma (guaranteed by detect-gated callers);
+    // all memory access is 8 in-bounds lanes at element offset `i`
+    // (callers keep `i + 8 <= len`) or a padded stack buffer.
+    unsafe fn load8(s: PackedSlice<'_>, i: usize, has_f16c: bool) -> __m256 {
+        match s {
+            PackedSlice::F32(v) => _mm256_loadu_ps(v.as_ptr().add(i)),
+            PackedSlice::U16(Precision::F16, v) if has_f16c => {
+                widen8_f16c(v.as_ptr().add(i))
+            }
+            PackedSlice::U16(Precision::Bf16, v) => widen8_bf16(v.as_ptr().add(i)),
+            PackedSlice::U16(p, v) => {
+                let mut buf = [0.0f32; 8];
+                for (l, b) in buf.iter_mut().enumerate() {
+                    *b = half::widen(p, *v.get_unchecked(i + l));
+                }
+                _mm256_loadu_ps(buf.as_ptr())
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma,f16c")]
+    // SAFETY: callable only with avx2+fma+f16c available — guaranteed by
+    // the `f16c_available()`-guarded dispatch above. Unaligned 8-lane
+    // loads/stores plus a scalar tail keep every slice length in bounds.
+    pub unsafe fn widen_f16_into(src: &[u16], out: &mut [f32]) {
+        let n = src.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), widen8_f16c(src.as_ptr().add(i)));
+            i += 8;
+        }
+        while i < n {
+            out[i] = half::f16_bits_to_f32(src[i]);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma,f16c")]
+    // SAFETY: callable only with avx2+fma+f16c available — guaranteed by
+    // the `f16c_available()`-guarded dispatch above. Unaligned 8-lane
+    // loads/stores plus a scalar tail keep every slice length in bounds.
+    pub unsafe fn narrow_f16_into(src: &[f32], out: &mut [u16]) {
+        let n = src.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            // RN rounding control: the mode the scalar reference matches.
+            let h = _mm256_cvtps_ph::<_MM_FROUND_TO_NEAREST_INT>(
+                _mm256_loadu_ps(src.as_ptr().add(i)),
+            );
+            _mm_storeu_si128(out.as_mut_ptr().add(i) as *mut __m128i, h);
+            i += 8;
+        }
+        while i < n {
+            out[i] = half::f32_to_f16_bits(src[i]);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    // SAFETY: callable only with avx2+fma available — guaranteed by the
+    // detect-gated dispatch above. Unaligned 8-lane loads/stores plus a
+    // scalar tail keep every slice length in bounds.
+    pub unsafe fn widen_bf16_into(src: &[u16], out: &mut [f32]) {
+        let n = src.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), widen8_bf16(src.as_ptr().add(i)));
+            i += 8;
+        }
+        while i < n {
+            out[i] = half::bf16_bits_to_f32(src[i]);
+            i += 1;
+        }
+    }
+
+    /// Narrow 8 f32 lanes to bf16 bits with round-to-nearest-even, NaNs
+    /// truncated with the quiet bit forced — bitwise the scalar reference.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    // SAFETY: register-only math; requires avx2, which every caller
+    // (itself a target_feature fn reached via detect-gated dispatch) has.
+    unsafe fn narrow8_bf16(v: __m256) -> __m128i {
+        let bits = _mm256_castps_si256(v);
+        let lsb = _mm256_and_si256(_mm256_srli_epi32::<16>(bits), _mm256_set1_epi32(1));
+        let bias = _mm256_add_epi32(_mm256_set1_epi32(0x7fff), lsb);
+        let rounded = _mm256_srli_epi32::<16>(_mm256_add_epi32(bits, bias));
+        // NaN lanes truncate + force the quiet bit (rounding a NaN could
+        // carry the payload into the infinity encoding).
+        let qnan = _mm256_or_si256(
+            _mm256_srli_epi32::<16>(bits),
+            _mm256_set1_epi32(0x0040),
+        );
+        let nan = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_UNORD_Q>(v, v));
+        let r32 = _mm256_blendv_epi8(rounded, qnan, nan);
+        // Every 32-bit lane now holds a u16 value (<= 0xffff, so the
+        // signed-saturating pack is exact); pack the halves and restore
+        // lane order across the 128-bit boundary.
+        let packed = _mm256_packus_epi32(r32, r32);
+        _mm256_castsi256_si128(_mm256_permute4x64_epi64::<0b00_00_10_00>(packed))
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    // SAFETY: callable only with avx2+fma available — guaranteed by the
+    // detect-gated dispatch above. Unaligned 8-lane loads/stores plus a
+    // scalar tail keep every slice length in bounds.
+    pub unsafe fn narrow_bf16_into(src: &[f32], out: &mut [u16]) {
+        let n = src.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            let h = narrow8_bf16(_mm256_loadu_ps(src.as_ptr().add(i)));
+            _mm_storeu_si128(out.as_mut_ptr().add(i) as *mut __m128i, h);
+            i += 8;
+        }
+        while i < n {
+            out[i] = half::f32_to_bf16_bits(src[i]);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    // SAFETY: callable only with avx2+fma available — guaranteed by the
+    // detect-gated dispatch above. Memory access is unaligned loads/stores
+    // over the argument slices plus padded stack tail buffers, so every
+    // slice length stays in bounds.
+    pub unsafe fn dot_joint_eq12_packed(
+        xm: &[f32],
+        xa: &[f32],
+        wm: PackedSlice<'_>,
+        wa: PackedSlice<'_>,
+        has_f16c: bool,
+    ) -> (f32, f32) {
+        let k = xm.len();
+        let mut mu = _mm256_setzero_ps();
+        let mut var = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= k {
+            let xmv = _mm256_loadu_ps(xm.as_ptr().add(i));
+            let wmv = load8(wm, i, has_f16c);
+            let xav = _mm256_loadu_ps(xa.as_ptr().add(i));
+            let wav = load8(wa, i, has_f16c);
+            let t = _mm256_mul_ps(xmv, wmv);
+            mu = _mm256_add_ps(mu, t);
+            // identical accumulation structure to the f32 kernel — the
+            // packed kernel IS the widen-then-f32 kernel, bitwise
+            var = _mm256_add_ps(var, _mm256_fnmadd_ps(t, t, _mm256_mul_ps(xav, wav)));
+            i += 8;
+        }
+        let mut mu_s = hsum(mu);
+        let mut var_s = hsum(var);
+        while i < k {
+            let t = xm[i] * wm.get(i);
+            mu_s += t;
+            var_s += xa[i] * wa.get(i) - t * t;
+            i += 1;
+        }
+        (mu_s, var_s)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    // SAFETY: callable only with avx2+fma available — guaranteed by the
+    // detect-gated dispatch above. Memory access is unaligned loads/stores
+    // over the argument slices plus padded stack tail buffers, so every
+    // slice length stays in bounds.
+    pub unsafe fn dot_first_layer_packed(
+        xm: &[f32],
+        wm: PackedSlice<'_>,
+        wa: PackedSlice<'_>,
+        has_f16c: bool,
+    ) -> (f32, f32) {
+        let k = xm.len();
+        let mut mu = _mm256_setzero_ps();
+        let mut var = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= k {
+            let xmv = _mm256_loadu_ps(xm.as_ptr().add(i));
+            let wmv = load8(wm, i, has_f16c);
+            let wav = load8(wa, i, has_f16c);
+            mu = _mm256_fmadd_ps(xmv, wmv, mu);
+            var = _mm256_fmadd_ps(_mm256_mul_ps(xmv, xmv), wav, var);
+            i += 8;
+        }
+        let mut mu_s = hsum(mu);
+        let mut var_s = hsum(var);
+        while i < k {
+            mu_s += xm[i] * wm.get(i);
+            var_s += xm[i] * xm[i] * wa.get(i);
+            i += 1;
+        }
+        (mu_s, var_s)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    // SAFETY: callable only with avx2+fma available — guaranteed by the
+    // detect-gated dispatch above. Memory access is unaligned loads/stores
+    // over the argument slices plus padded stack tail buffers, so every
+    // slice length stays in bounds.
+    pub unsafe fn dot_mean_packed(xm: &[f32], wm: PackedSlice<'_>, has_f16c: bool) -> f32 {
+        let k = xm.len();
+        let mut mu = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= k {
+            mu = _mm256_fmadd_ps(
+                _mm256_loadu_ps(xm.as_ptr().add(i)),
+                load8(wm, i, has_f16c),
+                mu,
+            );
+            i += 8;
+        }
+        let mut mu_s = hsum(mu);
+        while i < k {
+            mu_s += xm[i] * wm.get(i);
+            i += 1;
+        }
+        mu_s
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -762,6 +1240,8 @@ mod neon {
         EPS, ERF_A1, ERF_A2, ERF_A3, ERF_A4, ERF_A5, ERF_P, EXP_C1, EXP_C2, EXP_HI, EXP_LO,
         EXP_P0, EXP_P1, EXP_P2, EXP_P3, EXP_P4, EXP_P5, FRAC_1_SQRT_2, INV_SQRT_2PI, LOG2EF,
     };
+    use super::PackedSlice;
+    use crate::util::half::{self, Precision};
 
     #[inline]
     #[target_feature(enable = "neon")]
@@ -1082,6 +1562,187 @@ mod neon {
         }
         mu_s
     }
+
+    // -- mixed-precision conversions + packed-operand dots ------------------
+
+    /// Widen 4 packed bf16 by zero-extend + 16-bit left shift (exact).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    // SAFETY: integer ops only; requires neon (baseline on aarch64,
+    // guaranteed by detect-gated callers); reads exactly 8 bytes at `p`,
+    // which callers guarantee are in bounds.
+    unsafe fn widen4_bf16(p: *const u16) -> float32x4_t {
+        vreinterpretq_f32_u32(vshlq_n_u32::<16>(vmovl_u16(vld1_u16(p))))
+    }
+
+    /// Load 4 lanes of a packed operand as f32. Stable `std::arch` has no
+    /// aarch64 fp16 vector conversions yet, so the f16 path widens through
+    /// the scalar reference into a stack buffer — the same bits (widening
+    /// is exact), just slower.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    // SAFETY: requires neon (guaranteed by detect-gated callers); all
+    // memory access is 4 in-bounds lanes at element offset `i` (callers
+    // keep `i + 4 <= len`) or a padded stack buffer.
+    unsafe fn load4(s: PackedSlice<'_>, i: usize) -> float32x4_t {
+        match s {
+            PackedSlice::F32(v) => vld1q_f32(v.as_ptr().add(i)),
+            PackedSlice::U16(Precision::Bf16, v) => widen4_bf16(v.as_ptr().add(i)),
+            PackedSlice::U16(p, v) => {
+                let mut buf = [0.0f32; 4];
+                for (l, b) in buf.iter_mut().enumerate() {
+                    *b = half::widen(p, *v.get_unchecked(i + l));
+                }
+                vld1q_f32(buf.as_ptr())
+            }
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    // SAFETY: callable only with neon available — guaranteed by the
+    // detect-gated dispatch above. Unaligned 4-lane loads/stores plus a
+    // scalar tail keep every slice length in bounds.
+    pub unsafe fn widen_bf16_into(src: &[u16], out: &mut [f32]) {
+        let n = src.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            vst1q_f32(out.as_mut_ptr().add(i), widen4_bf16(src.as_ptr().add(i)));
+            i += 4;
+        }
+        while i < n {
+            out[i] = half::bf16_bits_to_f32(src[i]);
+            i += 1;
+        }
+    }
+
+    /// Narrow 4 f32 lanes to bf16 bits with round-to-nearest-even, NaNs
+    /// truncated with the quiet bit forced — bitwise the scalar reference.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    // SAFETY: register-only math; requires neon, which every caller
+    // (itself a target_feature fn reached via detect-gated dispatch) has.
+    unsafe fn narrow4_bf16(v: float32x4_t) -> uint16x4_t {
+        let bits = vreinterpretq_u32_f32(v);
+        let lsb = vandq_u32(vshrq_n_u32::<16>(bits), vdupq_n_u32(1));
+        let bias = vaddq_u32(vdupq_n_u32(0x7fff), lsb);
+        let rounded = vshrq_n_u32::<16>(vaddq_u32(bits, bias));
+        // NaN lanes truncate + force the quiet bit (rounding a NaN could
+        // carry the payload into the infinity encoding).
+        let qnan = vorrq_u32(vshrq_n_u32::<16>(bits), vdupq_n_u32(0x0040));
+        let is_num = vceqq_f32(v, v); // all-ones on non-NaN lanes
+        vmovn_u32(vbslq_u32(is_num, rounded, qnan))
+    }
+
+    #[target_feature(enable = "neon")]
+    // SAFETY: callable only with neon available — guaranteed by the
+    // detect-gated dispatch above. Unaligned 4-lane loads/stores plus a
+    // scalar tail keep every slice length in bounds.
+    pub unsafe fn narrow_bf16_into(src: &[f32], out: &mut [u16]) {
+        let n = src.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            vst1_u16(
+                out.as_mut_ptr().add(i),
+                narrow4_bf16(vld1q_f32(src.as_ptr().add(i))),
+            );
+            i += 4;
+        }
+        while i < n {
+            out[i] = half::f32_to_bf16_bits(src[i]);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    // SAFETY: callable only with neon available — guaranteed by the
+    // detect-gated dispatch above. Memory access is unaligned loads/stores
+    // over the argument slices plus padded stack tail buffers, so every
+    // slice length stays in bounds.
+    pub unsafe fn dot_joint_eq12_packed(
+        xm: &[f32],
+        xa: &[f32],
+        wm: PackedSlice<'_>,
+        wa: PackedSlice<'_>,
+    ) -> (f32, f32) {
+        let k = xm.len();
+        let mut mu = vdupq_n_f32(0.0);
+        let mut var = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 4 <= k {
+            let xmv = vld1q_f32(xm.as_ptr().add(i));
+            let wmv = load4(wm, i);
+            let xav = vld1q_f32(xa.as_ptr().add(i));
+            let wav = load4(wa, i);
+            let t = vmulq_f32(xmv, wmv);
+            mu = vaddq_f32(mu, t);
+            // identical accumulation structure to the f32 kernel — the
+            // packed kernel IS the widen-then-f32 kernel, bitwise
+            var = vaddq_f32(var, vfmsq_f32(vmulq_f32(xav, wav), t, t));
+            i += 4;
+        }
+        let mut mu_s = vaddvq_f32(mu);
+        let mut var_s = vaddvq_f32(var);
+        while i < k {
+            let t = xm[i] * wm.get(i);
+            mu_s += t;
+            var_s += xa[i] * wa.get(i) - t * t;
+            i += 1;
+        }
+        (mu_s, var_s)
+    }
+
+    #[target_feature(enable = "neon")]
+    // SAFETY: callable only with neon available — guaranteed by the
+    // detect-gated dispatch above. Memory access is unaligned loads/stores
+    // over the argument slices plus padded stack tail buffers, so every
+    // slice length stays in bounds.
+    pub unsafe fn dot_first_layer_packed(
+        xm: &[f32],
+        wm: PackedSlice<'_>,
+        wa: PackedSlice<'_>,
+    ) -> (f32, f32) {
+        let k = xm.len();
+        let mut mu = vdupq_n_f32(0.0);
+        let mut var = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 4 <= k {
+            let xmv = vld1q_f32(xm.as_ptr().add(i));
+            let wmv = load4(wm, i);
+            let wav = load4(wa, i);
+            mu = vfmaq_f32(mu, xmv, wmv);
+            var = vfmaq_f32(var, vmulq_f32(xmv, xmv), wav);
+            i += 4;
+        }
+        let mut mu_s = vaddvq_f32(mu);
+        let mut var_s = vaddvq_f32(var);
+        while i < k {
+            mu_s += xm[i] * wm.get(i);
+            var_s += xm[i] * xm[i] * wa.get(i);
+            i += 1;
+        }
+        (mu_s, var_s)
+    }
+
+    #[target_feature(enable = "neon")]
+    // SAFETY: callable only with neon available — guaranteed by the
+    // detect-gated dispatch above. Memory access is unaligned loads/stores
+    // over the argument slices plus padded stack tail buffers, so every
+    // slice length stays in bounds.
+    pub unsafe fn dot_mean_packed(xm: &[f32], wm: PackedSlice<'_>) -> f32 {
+        let k = xm.len();
+        let mut mu = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 4 <= k {
+            mu = vfmaq_f32(mu, vld1q_f32(xm.as_ptr().add(i)), load4(wm, i));
+            i += 4;
+        }
+        let mut mu_s = vaddvq_f32(mu);
+        while i < k {
+            mu_s += xm[i] * wm.get(i);
+            i += 1;
+        }
+        mu_s
+    }
 }
 
 #[cfg(test)]
@@ -1239,5 +1900,147 @@ mod tests {
         for i in 0..n {
             assert_eq!(out[i].to_bits(), crate::ops::erf::erf(mu[i]).to_bits());
         }
+    }
+
+    #[test]
+    fn simd_conversions_bit_match_scalar_reference() {
+        // narrow/widen on the detected backend must be bitwise the scalar
+        // reference in util::half, for every slice length (odd lengths
+        // exercise the scalar tails) — seeds printed for replay.
+        let b = detect();
+        check(12, |g| {
+            let n = g.usize_in(1, 67);
+            let mut xs: Vec<f32> = g.normal_vec(n, 100.0);
+            // salt in values the rounding edge cases care about
+            if n > 2 {
+                xs[0] = 2.0f32.powi(-25) * 1.5; // f16 subnormal range
+                xs[1] = 65520.0; // f16 overflow-by-rounding boundary
+                xs[2] = f32::from_bits(0x3f80_0000 | (1 << 12)); // RNE tie
+            }
+            for prec in [Precision::F16, Precision::Bf16] {
+                let mut packed = vec![0u16; n];
+                narrow_into(b, prec, &xs, &mut packed);
+                for i in 0..n {
+                    assert_eq!(
+                        packed[i],
+                        half::narrow(prec, xs[i]),
+                        "{} narrow lane {i} of {n} ({prec})",
+                        b.name()
+                    );
+                }
+                let mut widened = vec![0.0f32; n];
+                widen_into(b, prec, &packed, &mut widened);
+                for i in 0..n {
+                    assert_eq!(
+                        widened[i].to_bits(),
+                        half::widen(prec, packed[i]).to_bits(),
+                        "{} widen lane {i} of {n} ({prec})",
+                        b.name()
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn simd_conversions_handle_specials_bitwise() {
+        let b = detect();
+        let xs = [
+            0.0f32,
+            -0.0,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            f32::MAX,
+            f32::MIN_POSITIVE,
+            2.0f32.powi(-25),
+            -2.0f32.powi(-24),
+            65504.0,
+            65520.0,
+        ];
+        for prec in [Precision::F16, Precision::Bf16] {
+            let mut packed = vec![0u16; xs.len()];
+            narrow_into(b, prec, &xs, &mut packed);
+            for (i, &x) in xs.iter().enumerate() {
+                assert_eq!(packed[i], half::narrow(prec, x), "special {x} ({prec})");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_dots_are_bitwise_widen_then_f32() {
+        // The packed-operand kernels must equal the f32 kernels run on
+        // pre-widened weight copies, bit for bit, on every backend and
+        // for every mean/var precision combination (f32 allowed in either
+        // slot).
+        let precisions = [Precision::F32, Precision::F16, Precision::Bf16];
+        for b in [Backend::Scalar, detect()] {
+            check(6, |g| {
+                let k = g.usize_in(1, 130);
+                let xm: Vec<f32> = g.normal_vec(k, 1.0);
+                let xa: Vec<f32> = g.var_vec(k, 1.0);
+                let wm: Vec<f32> = g.normal_vec(k, 0.3);
+                let wa: Vec<f32> = g.var_vec(k, 0.1);
+                for pm in precisions {
+                    for pa in precisions {
+                        // quantize to the storage precision, then compare
+                        // packed kernel vs f32 kernel on the widened copy
+                        let (wm_q, wm_packed): (Vec<f32>, Vec<u16>) = match pm {
+                            Precision::F32 => (wm.clone(), Vec::new()),
+                            p => {
+                                let packed: Vec<u16> =
+                                    wm.iter().map(|&x| half::narrow(p, x)).collect();
+                                (packed.iter().map(|&h| half::widen(p, h)).collect(), packed)
+                            }
+                        };
+                        let (wa_q, wa_packed): (Vec<f32>, Vec<u16>) = match pa {
+                            Precision::F32 => (wa.clone(), Vec::new()),
+                            p => {
+                                let packed: Vec<u16> =
+                                    wa.iter().map(|&x| half::narrow(p, x)).collect();
+                                (packed.iter().map(|&h| half::widen(p, h)).collect(), packed)
+                            }
+                        };
+                        let pm_s = match pm {
+                            Precision::F32 => PackedSlice::F32(&wm_q),
+                            p => PackedSlice::U16(p, &wm_packed),
+                        };
+                        let pa_s = match pa {
+                            Precision::F32 => PackedSlice::F32(&wa_q),
+                            p => PackedSlice::U16(p, &wa_packed),
+                        };
+
+                        let (m0, v0) = dot_joint_eq12(b, &xm, &xa, &wm_q, &wa_q);
+                        let (m1, v1) = dot_joint_eq12_packed(b, &xm, &xa, pm_s, pa_s);
+                        assert_eq!(m0.to_bits(), m1.to_bits(), "{} eq12 mu {pm}/{pa}", b.name());
+                        assert_eq!(v0.to_bits(), v1.to_bits(), "{} eq12 var {pm}/{pa}", b.name());
+
+                        let (fm0, fv0) = dot_first_layer(b, &xm, &wm_q, &wa_q);
+                        let (fm1, fv1) = dot_first_layer_packed(b, &xm, pm_s, pa_s);
+                        assert_eq!(fm0.to_bits(), fm1.to_bits(), "{} eq13 mu {pm}/{pa}", b.name());
+                        assert_eq!(fv0.to_bits(), fv1.to_bits(), "{} eq13 var {pm}/{pa}", b.name());
+
+                        let d0 = dot_mean(b, &xm, &wm_q);
+                        let d1 = dot_mean_packed(b, &xm, pm_s);
+                        assert_eq!(d0.to_bits(), d1.to_bits(), "{} mean {pm}", b.name());
+                    }
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn packed_slice_accessors() {
+        let f = [1.0f32, 2.0, 3.0];
+        let s = PackedSlice::F32(&f);
+        assert_eq!(s.len(), 3);
+        assert!(!s.is_empty());
+        assert_eq!(s.get(1), 2.0);
+        assert_eq!(s.slice(1..3).get(0), 2.0);
+        let packed: Vec<u16> = f.iter().map(|&x| half::f32_to_f16_bits(x)).collect();
+        let p = PackedSlice::U16(Precision::F16, &packed);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.get(2), 3.0); // small integers are exact in f16
+        assert_eq!(p.slice(0..2).len(), 2);
     }
 }

@@ -67,16 +67,21 @@ pub use workspace::Workspace;
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
-use crate::model::{Arch, LayerSpec, PosteriorWeights, Schedules};
-use crate::ops::conv::{conv_kernel_tiled_into, ConvShape};
-use crate::ops::dense::{dense_kernel_tiled_into, DenseSlices, FirstLayer, JointEq12, MeanOnly};
+use crate::model::{pack_tensor, Arch, LayerSpec, PosteriorWeights, Schedules};
+use crate::ops::conv::{conv_kernel_packed_tiled_into, conv_kernel_tiled_into, ConvShape};
+use crate::ops::dense::{
+    dense_kernel_packed_tiled_into, dense_kernel_tiled_into, DenseSlices, FirstLayer, JointEq12,
+    MeanOnly, PackedDenseSlices,
+};
 use crate::ops::maxpool::{
     det_maxpool2_tiled_into, pfp_maxpool2_tiled_into, pfp_maxpool_generic_into,
 };
 use crate::ops::relu::pfp_relu_tiled_into;
+use crate::ops::simd::{self, PackedSlice};
 use crate::ops::{Epilogue, Schedule};
 use crate::profiling::Profiler;
 use crate::tensor::{convert_in_place, Rep};
+use crate::util::half::Precision;
 use crate::util::threadpool::{split_ranges, DisjointMut, ThreadPool};
 
 use self::workspace::BufPair;
@@ -123,6 +128,18 @@ struct Step {
     epilogue: Epilogue,
     in_len: usize,
     out_len: usize,
+    /// Resolved storage precision of the mean path (mu weight operand +
+    /// mu output activations) and the variance path (aux weight operand +
+    /// aux output activations) — the tentpole mixed-precision knobs. Both
+    /// `F32` on non-compute steps and under stock schedules, which lower
+    /// and execute exactly as before this knob existed.
+    mean_prec: Precision,
+    var_prec: Precision,
+    /// Packed (u16) weight copies, converted once at compile time by
+    /// [`pack_tensor`]: mu weights at `mean_prec`, aux weights at
+    /// `var_prec`. `None` = the step borrows the f32 tensor directly.
+    packed_wm: Option<Arc<Vec<u16>>>,
+    packed_wa: Option<Arc<Vec<u16>>>,
 }
 
 #[derive(Clone, Debug)]
@@ -184,6 +201,9 @@ pub struct CompiledPlan {
     hwm: usize,
     /// Conv im2col scratch requirement (floats).
     scratch_len: usize,
+    /// Mixed-precision activation staging requirement (u16 words); 0 for
+    /// all-f32 plans.
+    packed_len: usize,
 }
 
 impl CompiledPlan {
@@ -217,6 +237,9 @@ impl CompiledPlan {
         let mut cur_len = batch * arch.input_len();
         let mut hwm = 0usize;
         let mut scratch_len = 0usize;
+        // u16 staging high-water mark for mixed-precision activation
+        // storage; stays 0 (no buffer at all) when every step is f32
+        let mut packed_hwm = 0usize;
         let pfp = mode == PlanMode::Pfp;
         // Effective worker count per step: the plan-wide override when
         // set, else the knob the step's schedule (or Schedules field)
@@ -252,6 +275,19 @@ impl CompiledPlan {
                     }
                     let out_len = batch * d_out;
                     let sched = schedules.layer_schedule(compute_idx, layer);
+                    let (mean_prec, var_prec) = step_precisions(&sched, schedules, pfp);
+                    let wa_tensor = if !pfp {
+                        &lw.w_mu
+                    } else if first {
+                        &lw.w_var
+                    } else {
+                        &lw.w_e2
+                    };
+                    let packed_wm = pack_tensor(&lw.w_mu, mean_prec);
+                    let packed_wa = pack_tensor(wa_tensor, var_prec);
+                    if !mean_prec.is_f32() || !var_prec.is_f32() {
+                        packed_hwm = packed_hwm.max(out_len);
+                    }
                     steps.push(Step {
                         kind: StepKind::Dense {
                             w: compute_idx,
@@ -267,6 +303,10 @@ impl CompiledPlan {
                         epilogue: Epilogue::None,
                         in_len: cur_len,
                         out_len,
+                        mean_prec,
+                        var_prec,
+                        packed_wm,
+                        packed_wa,
                     });
                     shape = vec![*d_out];
                     rep = Some(Rep::Var);
@@ -320,6 +360,19 @@ impl CompiledPlan {
                     let out_len = cs.out_len();
                     let sched = schedules.layer_schedule(compute_idx, layer);
                     let tasks = step_tasks(sched.threads);
+                    let (mean_prec, var_prec) = step_precisions(&sched, schedules, pfp);
+                    let wa_tensor = if !pfp {
+                        &lw.w_mu
+                    } else if first {
+                        &lw.w_var
+                    } else {
+                        &lw.w_e2
+                    };
+                    let packed_wm = pack_tensor(&lw.w_mu, mean_prec);
+                    let packed_wa = pack_tensor(wa_tensor, var_prec);
+                    if !mean_prec.is_f32() || !var_prec.is_f32() {
+                        packed_hwm = packed_hwm.max(out_len);
+                    }
                     steps.push(Step {
                         kind: StepKind::Conv {
                             w: compute_idx,
@@ -334,6 +387,10 @@ impl CompiledPlan {
                         epilogue: Epilogue::None,
                         in_len: cur_len,
                         out_len,
+                        mean_prec,
+                        var_prec,
+                        packed_wm,
+                        packed_wa,
                     });
                     shape = vec![*out_ch, cs.oh(), cs.ow()];
                     rep = Some(Rep::Var);
@@ -394,6 +451,10 @@ impl CompiledPlan {
                                 epilogue: Epilogue::None,
                                 in_len: cur_len,
                                 out_len: cur_len,
+                                mean_prec: Precision::F32,
+                                var_prec: Precision::F32,
+                                packed_wm: None,
+                                packed_wa: None,
                             });
                         }
                         rep = Some(Rep::E2);
@@ -407,6 +468,10 @@ impl CompiledPlan {
                             epilogue: Epilogue::None,
                             in_len: cur_len,
                             out_len: cur_len,
+                            mean_prec: Precision::F32,
+                            var_prec: Precision::F32,
+                            packed_wm: None,
+                            packed_wa: None,
                         });
                     }
                 }
@@ -451,6 +516,10 @@ impl CompiledPlan {
                             epilogue: Epilogue::None,
                             in_len: cur_len,
                             out_len,
+                            mean_prec: Precision::F32,
+                            var_prec: Precision::F32,
+                            packed_wm: None,
+                            packed_wa: None,
                         });
                         rep = Some(Rep::Var);
                     } else {
@@ -466,6 +535,10 @@ impl CompiledPlan {
                             epilogue: Epilogue::None,
                             in_len: cur_len,
                             out_len,
+                            mean_prec: Precision::F32,
+                            var_prec: Precision::F32,
+                            packed_wm: None,
+                            packed_wa: None,
                         });
                     }
                     shape = vec![c, h / 2, w / 2];
@@ -504,12 +577,13 @@ impl CompiledPlan {
             out_len: cur_len,
             hwm,
             scratch_len,
+            packed_len: packed_hwm,
         })
     }
 
     /// A workspace sized exactly for this plan.
     pub fn workspace(&self) -> Workspace {
-        Workspace::with_capacity(self.hwm, self.scratch_len)
+        Workspace::with_capacity(self.hwm, self.scratch_len, self.packed_len)
     }
 
     /// Output geometry: `[batch, classes]`.
@@ -542,6 +616,26 @@ impl CompiledPlan {
     /// step, or the program had no fusable pattern.
     pub fn num_fused_steps(&self) -> usize {
         self.steps.iter().filter(|s| s.epilogue != Epilogue::None).count()
+    }
+
+    /// Compute steps lowered with mixed-precision (f16/bf16) storage on
+    /// at least one moment path. Zero under stock schedules — those plans
+    /// carry no packed weights and no staging buffer at all.
+    pub fn num_packed_steps(&self) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| !s.mean_prec.is_f32() || !s.var_prec.is_f32())
+            .count()
+    }
+
+    /// Weight tensors converted to packed u16 storage at compile time —
+    /// the registry's `packed_tensors` metadata column counts these
+    /// across resident plans.
+    pub fn packed_tensors(&self) -> usize {
+        self.steps
+            .iter()
+            .map(|s| s.packed_wm.is_some() as usize + s.packed_wa.is_some() as usize)
+            .sum()
     }
 
     /// The dense-kernel workload of every compute step (conv steps report
@@ -598,8 +692,8 @@ impl CompiledPlan {
             self.batch,
             self.in_len
         );
-        ws.ensure(self.hwm, self.scratch_len);
-        let Workspace { a, b, scratch } = ws;
+        ws.ensure(self.hwm, self.scratch_len, self.packed_len);
+        let Workspace { a, b, scratch, packed } = ws;
         let pool = &self.pool;
         // Ping-pong state: until the first compute step the state is the
         // caller's `x`; afterwards it lives in buffer A or B.
@@ -667,20 +761,74 @@ impl CompiledPlan {
                     };
                     let out_mu = &mut dst.mu[..step.out_len];
                     let out_var = &mut dst.aux[..step.out_len];
-                    profiler.record(&step.label, step.op_type, || match (self.mode, *first) {
-                        (PlanMode::Det, _) => dense_kernel_tiled_into::<MeanOnly>(
-                            pool, &args, &step.sched, step.epilogue, &step.tiles, out_mu,
-                            out_var,
-                        ),
-                        (PlanMode::Pfp, true) => dense_kernel_tiled_into::<FirstLayer>(
-                            pool, &args, &step.sched, step.epilogue, &step.tiles, out_mu,
-                            out_var,
-                        ),
-                        (PlanMode::Pfp, false) => dense_kernel_tiled_into::<JointEq12>(
-                            pool, &args, &step.sched, step.epilogue, &step.tiles, out_mu,
-                            out_var,
-                        ),
-                    });
+                    if step.mean_prec.is_f32() && step.var_prec.is_f32() {
+                        // all-f32 step: the pre-mixed-precision lowering,
+                        // bit for bit
+                        profiler.record(&step.label, step.op_type, || {
+                            match (self.mode, *first) {
+                                (PlanMode::Det, _) => dense_kernel_tiled_into::<MeanOnly>(
+                                    pool, &args, &step.sched, step.epilogue, &step.tiles,
+                                    out_mu, out_var,
+                                ),
+                                (PlanMode::Pfp, true) => dense_kernel_tiled_into::<FirstLayer>(
+                                    pool, &args, &step.sched, step.epilogue, &step.tiles,
+                                    out_mu, out_var,
+                                ),
+                                (PlanMode::Pfp, false) => dense_kernel_tiled_into::<JointEq12>(
+                                    pool, &args, &step.sched, step.epilogue, &step.tiles,
+                                    out_mu, out_var,
+                                ),
+                            }
+                        });
+                    } else {
+                        // packed step: u16 weight operands widen to f32
+                        // registers inside the kernel (accumulation stays
+                        // f32), then the output activations round-trip
+                        // through u16 storage per moment path
+                        let pargs = PackedDenseSlices {
+                            m: args.m,
+                            k: args.k,
+                            n: args.n,
+                            x_mu: args.x_mu,
+                            x_aux: args.x_aux,
+                            w_mu: match &step.packed_wm {
+                                Some(p) => PackedSlice::U16(step.mean_prec, p.as_slice()),
+                                None => PackedSlice::F32(args.w_mu),
+                            },
+                            w_aux: match &step.packed_wa {
+                                Some(p) => PackedSlice::U16(step.var_prec, p.as_slice()),
+                                None => PackedSlice::F32(args.w_aux),
+                            },
+                            b_mu: args.b_mu,
+                            b_var: args.b_var,
+                        };
+                        let be = simd::resolve(step.sched.isa);
+                        let packed = &mut packed[..];
+                        profiler.record(&step.label, step.op_type, || {
+                            match (self.mode, *first) {
+                                (PlanMode::Det, _) => dense_kernel_packed_tiled_into::<MeanOnly>(
+                                    pool, &pargs, &step.sched, step.epilogue, &step.tiles,
+                                    out_mu, out_var,
+                                ),
+                                (PlanMode::Pfp, true) => {
+                                    dense_kernel_packed_tiled_into::<FirstLayer>(
+                                        pool, &pargs, &step.sched, step.epilogue, &step.tiles,
+                                        out_mu, out_var,
+                                    )
+                                }
+                                (PlanMode::Pfp, false) => {
+                                    dense_kernel_packed_tiled_into::<JointEq12>(
+                                        pool, &pargs, &step.sched, step.epilogue, &step.tiles,
+                                        out_mu, out_var,
+                                    )
+                                }
+                            }
+                            store_activations(be, step.mean_prec, out_mu, packed);
+                            if self.mode == PlanMode::Pfp {
+                                store_activations(be, step.var_prec, out_var, packed);
+                            }
+                        });
+                    }
                     cur_a = dst_is_a;
                     first_done = true;
                 }
@@ -704,59 +852,142 @@ impl CompiledPlan {
                     let out_mu = &mut dst.mu[..step.out_len];
                     let out_var = &mut dst.aux[..step.out_len];
                     let scratch = &mut scratch[..];
-                    profiler.record(&step.label, step.op_type, || match (self.mode, *first) {
-                        (PlanMode::Det, _) => conv_kernel_tiled_into::<MeanOnly>(
-                            pool,
-                            shape,
-                            x_mu,
-                            x_aux,
-                            lw.w_mu.data(),
-                            w_aux,
-                            Some(lw.b_mu.data()),
-                            b_var,
-                            &step.sched,
-                            step.epilogue,
-                            &step.tiles,
-                            scatter,
-                            scratch,
-                            out_mu,
-                            out_var,
-                        ),
-                        (PlanMode::Pfp, true) => conv_kernel_tiled_into::<FirstLayer>(
-                            pool,
-                            shape,
-                            x_mu,
-                            x_aux,
-                            lw.w_mu.data(),
-                            w_aux,
-                            Some(lw.b_mu.data()),
-                            b_var,
-                            &step.sched,
-                            step.epilogue,
-                            &step.tiles,
-                            scatter,
-                            scratch,
-                            out_mu,
-                            out_var,
-                        ),
-                        (PlanMode::Pfp, false) => conv_kernel_tiled_into::<JointEq12>(
-                            pool,
-                            shape,
-                            x_mu,
-                            x_aux,
-                            lw.w_mu.data(),
-                            w_aux,
-                            Some(lw.b_mu.data()),
-                            b_var,
-                            &step.sched,
-                            step.epilogue,
-                            &step.tiles,
-                            scatter,
-                            scratch,
-                            out_mu,
-                            out_var,
-                        ),
-                    });
+                    if step.mean_prec.is_f32() && step.var_prec.is_f32() {
+                        // all-f32 step: the pre-mixed-precision lowering,
+                        // bit for bit
+                        profiler.record(&step.label, step.op_type, || {
+                            match (self.mode, *first) {
+                                (PlanMode::Det, _) => conv_kernel_tiled_into::<MeanOnly>(
+                                    pool,
+                                    shape,
+                                    x_mu,
+                                    x_aux,
+                                    lw.w_mu.data(),
+                                    w_aux,
+                                    Some(lw.b_mu.data()),
+                                    b_var,
+                                    &step.sched,
+                                    step.epilogue,
+                                    &step.tiles,
+                                    scatter,
+                                    scratch,
+                                    out_mu,
+                                    out_var,
+                                ),
+                                (PlanMode::Pfp, true) => conv_kernel_tiled_into::<FirstLayer>(
+                                    pool,
+                                    shape,
+                                    x_mu,
+                                    x_aux,
+                                    lw.w_mu.data(),
+                                    w_aux,
+                                    Some(lw.b_mu.data()),
+                                    b_var,
+                                    &step.sched,
+                                    step.epilogue,
+                                    &step.tiles,
+                                    scatter,
+                                    scratch,
+                                    out_mu,
+                                    out_var,
+                                ),
+                                (PlanMode::Pfp, false) => conv_kernel_tiled_into::<JointEq12>(
+                                    pool,
+                                    shape,
+                                    x_mu,
+                                    x_aux,
+                                    lw.w_mu.data(),
+                                    w_aux,
+                                    Some(lw.b_mu.data()),
+                                    b_var,
+                                    &step.sched,
+                                    step.epilogue,
+                                    &step.tiles,
+                                    scatter,
+                                    scratch,
+                                    out_mu,
+                                    out_var,
+                                ),
+                            }
+                        });
+                    } else {
+                        // packed step: the fused im2col+dense phase widens
+                        // the u16 weight tiles in registers; outputs then
+                        // round-trip through u16 activation storage
+                        let wm = match &step.packed_wm {
+                            Some(p) => PackedSlice::U16(step.mean_prec, p.as_slice()),
+                            None => PackedSlice::F32(lw.w_mu.data()),
+                        };
+                        let wa = match &step.packed_wa {
+                            Some(p) => PackedSlice::U16(step.var_prec, p.as_slice()),
+                            None => PackedSlice::F32(w_aux),
+                        };
+                        let be = simd::resolve(step.sched.isa);
+                        let packed = &mut packed[..];
+                        profiler.record(&step.label, step.op_type, || {
+                            match (self.mode, *first) {
+                                (PlanMode::Det, _) => conv_kernel_packed_tiled_into::<MeanOnly>(
+                                    pool,
+                                    shape,
+                                    x_mu,
+                                    x_aux,
+                                    wm,
+                                    wa,
+                                    Some(lw.b_mu.data()),
+                                    b_var,
+                                    &step.sched,
+                                    step.epilogue,
+                                    &step.tiles,
+                                    scatter,
+                                    scratch,
+                                    out_mu,
+                                    out_var,
+                                ),
+                                (PlanMode::Pfp, true) => {
+                                    conv_kernel_packed_tiled_into::<FirstLayer>(
+                                        pool,
+                                        shape,
+                                        x_mu,
+                                        x_aux,
+                                        wm,
+                                        wa,
+                                        Some(lw.b_mu.data()),
+                                        b_var,
+                                        &step.sched,
+                                        step.epilogue,
+                                        &step.tiles,
+                                        scatter,
+                                        scratch,
+                                        out_mu,
+                                        out_var,
+                                    )
+                                }
+                                (PlanMode::Pfp, false) => {
+                                    conv_kernel_packed_tiled_into::<JointEq12>(
+                                        pool,
+                                        shape,
+                                        x_mu,
+                                        x_aux,
+                                        wm,
+                                        wa,
+                                        Some(lw.b_mu.data()),
+                                        b_var,
+                                        &step.sched,
+                                        step.epilogue,
+                                        &step.tiles,
+                                        scatter,
+                                        scratch,
+                                        out_mu,
+                                        out_var,
+                                    )
+                                }
+                            }
+                            store_activations(be, step.mean_prec, out_mu, packed);
+                            if self.mode == PlanMode::Pfp {
+                                store_activations(be, step.var_prec, out_var, packed);
+                            }
+                        });
+                    }
                     cur_a = dst_is_a;
                     first_done = true;
                 }
@@ -822,7 +1053,41 @@ fn convert_step(from: Rep, to: Rep, len: usize, at: &str) -> Step {
         epilogue: Epilogue::None,
         in_len: len,
         out_len: len,
+        mean_prec: Precision::F32,
+        var_prec: Precision::F32,
+        packed_wm: None,
+        packed_wa: None,
     }
+}
+
+/// Resolve one compute step's storage precisions from its bound schedule
+/// (which [`Schedules::layer_schedule`] already subjected to the
+/// `--precision` override): the mean path carries the schedule's knob,
+/// the variance path follows it unless [`Schedules::var_precision`]
+/// splits the roles. Det plans have no variance path — it pins to f32 so
+/// a det lowering never packs aux weights.
+fn step_precisions(sched: &Schedule, schedules: &Schedules, pfp: bool) -> (Precision, Precision) {
+    let mean_prec = sched.precision;
+    let var_prec = if pfp {
+        schedules.var_precision.unwrap_or(mean_prec)
+    } else {
+        Precision::F32
+    };
+    (mean_prec, var_prec)
+}
+
+/// Inter-layer activation storage at `prec`: narrow the f32 values into
+/// the workspace's u16 staging buffer and widen back in place — after
+/// this, `vals` holds exactly the values a `prec`-storage buffer would
+/// hand the next consumer (the widening is exact), while downstream
+/// kernels keep reading f32. No-op (and untouched buffers) for f32.
+fn store_activations(be: simd::Backend, prec: Precision, vals: &mut [f32], bits: &mut [u16]) {
+    if prec.is_f32() {
+        return;
+    }
+    let bits = &mut bits[..vals.len()];
+    simd::narrow_into(be, prec, vals, bits);
+    simd::widen_into(be, prec, bits, vals);
 }
 
 /// PR 8 convert absorption: when the pending E2→Var conversion's input is
@@ -1236,6 +1501,118 @@ mod tests {
                 arch.name
             );
         }
+    }
+
+    #[test]
+    fn stock_f32_plans_carry_no_packed_state() {
+        // the back-compat contract: stock schedules default to f32, so
+        // existing plans lower with zero packed weights, zero staging
+        // buffer, and take the pre-mixed-precision execute path bit for
+        // bit (covered by plan_forward_matches_interpreter_bitwise)
+        for arch in [Arch::mlp(), Arch::lenet()] {
+            let (plan, ws) = compile_pfp(&arch, 2);
+            assert_eq!(plan.num_packed_steps(), 0, "{}", arch.name);
+            assert_eq!(plan.packed_tensors(), 0);
+            assert_eq!(ws.packed_capacity(), 0, "f32 plans allocate no staging");
+        }
+    }
+
+    #[test]
+    fn packed_plans_execute_finite_and_deterministic() {
+        use crate::model::FusePolicy;
+        for arch in [Arch::mlp(), Arch::lenet()] {
+            let w = Arc::new(PosteriorWeights::synthetic(&arch, 19));
+            let x = input(&arch, 3, 29);
+            let mut prof = Profiler::new(false);
+            for p in [Precision::F16, Precision::Bf16] {
+                let sched = Schedules::tuned(1).with_precision_override(Some(p));
+                let plan =
+                    CompiledPlan::compile(&arch, Arc::clone(&w), &sched, 3, PlanMode::Pfp)
+                        .unwrap();
+                assert_eq!(plan.num_packed_steps(), arch.compute_layers().len());
+                assert_eq!(
+                    plan.packed_tensors(),
+                    2 * arch.compute_layers().len(),
+                    "mu + aux weights pack per compute step"
+                );
+                let mut ws = plan.workspace();
+                assert!(ws.packed_capacity() > 0, "staging buffer sized at compile");
+                let (mu1, var1) = {
+                    let (m, v) = plan.execute(x.data(), &mut ws, &mut prof);
+                    (m.to_vec(), v.to_vec())
+                };
+                assert!(mu1.iter().all(|v| v.is_finite()), "{} {p}", arch.name);
+                assert!(var1.iter().all(|&v| v >= 0.0 && v.is_finite()));
+                // workspace reuse leaks no state across calls
+                let (mu2, var2) = plan.execute(x.data(), &mut ws, &mut prof);
+                assert_eq!(mu1.as_slice(), mu2);
+                assert_eq!(var1.as_slice(), var2);
+                // row-partitioned packed steps stay bit-identical to
+                // serial — the determinism guarantee extends to packed
+                for t in [2usize, 4] {
+                    let par = CompiledPlan::compile(
+                        &arch,
+                        Arc::clone(&w),
+                        &sched.clone().with_plan_threads(t),
+                        3,
+                        PlanMode::Pfp,
+                    )
+                    .unwrap();
+                    let mut pws = par.workspace();
+                    let (pm, pv) = par.execute(x.data(), &mut pws, &mut prof);
+                    assert_eq!(mu1.as_slice(), pm, "{} {p} t={t} mu", arch.name);
+                    assert_eq!(var1.as_slice(), pv, "{} {p} t={t} var", arch.name);
+                }
+                // fused + packed compose: the epilogue runs in-register
+                // first, then the (post-relu) outputs hit u16 storage
+                let fused = CompiledPlan::compile(
+                    &arch,
+                    Arc::clone(&w),
+                    &sched.clone().with_fuse(FusePolicy::On),
+                    3,
+                    PlanMode::Pfp,
+                )
+                .unwrap();
+                assert!(fused.num_fused_steps() > 0);
+                assert!(fused.num_packed_steps() > 0);
+                let mut fws = fused.workspace();
+                let (fm, fv) = fused.execute(x.data(), &mut fws, &mut prof);
+                assert!(fm.iter().all(|v| v.is_finite()));
+                assert!(fv.iter().all(|&v| v >= 0.0 && v.is_finite()));
+            }
+        }
+    }
+
+    #[test]
+    fn var_precision_splits_moment_roles() {
+        // mean and variance storage precision are independently settable;
+        // det plans have no variance path and never pack aux weights
+        let arch = Arch::mlp();
+        let w = Arc::new(PosteriorWeights::synthetic(&arch, 23));
+        let x = input(&arch, 2, 31);
+        let mut prof = Profiler::new(false);
+        // mean f32, variance bf16: only the aux tensors pack
+        let s = Schedules::tuned(1).with_var_precision(Some(Precision::Bf16));
+        let plan = CompiledPlan::compile(&arch, Arc::clone(&w), &s, 2, PlanMode::Pfp).unwrap();
+        assert_eq!(plan.num_packed_steps(), 3);
+        assert_eq!(plan.packed_tensors(), 3, "one aux tensor per dense layer");
+        let mut ws = plan.workspace();
+        let (mu, var) = plan.execute(x.data(), &mut ws, &mut prof);
+        assert!(mu.iter().all(|v| v.is_finite()));
+        assert!(var.iter().all(|&v| v >= 0.0));
+        // mean bf16, variance pinned back to f32: only mu tensors pack
+        let s = Schedules::tuned(1)
+            .with_precision_override(Some(Precision::Bf16))
+            .with_var_precision(Some(Precision::F32));
+        let plan = CompiledPlan::compile(&arch, Arc::clone(&w), &s, 2, PlanMode::Pfp).unwrap();
+        assert_eq!(plan.packed_tensors(), 3, "one mu tensor per dense layer");
+        // det mode: f16 means, no aux packing at all
+        let s = Schedules::tuned(1).with_precision_override(Some(Precision::F16));
+        let det = CompiledPlan::compile(&arch, Arc::clone(&w), &s, 2, PlanMode::Det).unwrap();
+        assert_eq!(det.packed_tensors(), 3, "det packs only mu");
+        let mut dws = det.workspace();
+        let (dmu, _) = det.execute(x.data(), &mut dws, &mut prof);
+        assert!(dmu.iter().all(|v| v.is_finite()));
     }
 
     #[test]

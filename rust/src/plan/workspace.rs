@@ -35,33 +35,43 @@ impl BufPair {
     }
 }
 
-/// Plan execution arena: ping-pong activation buffers + conv scratch.
+/// Plan execution arena: ping-pong activation buffers + conv scratch +
+/// the packed (u16) staging buffer mixed-precision plans narrow their
+/// inter-layer activations through (f16/bf16 storage bits; empty for
+/// all-f32 plans, which never touch it).
 #[derive(Debug, Default)]
 pub struct Workspace {
     pub(crate) a: BufPair,
     pub(crate) b: BufPair,
     pub(crate) scratch: Vec<f32>,
+    pub(crate) packed: Vec<u16>,
 }
 
 impl Workspace {
-    /// Arena with `hwm` floats per moment buffer and `scratch_len` floats
-    /// of conv scratch.
-    pub fn with_capacity(hwm: usize, scratch_len: usize) -> Self {
+    /// Arena with `hwm` floats per moment buffer, `scratch_len` floats
+    /// of conv scratch, and `packed_len` u16s of mixed-precision
+    /// activation staging (0 for all-f32 plans).
+    pub fn with_capacity(hwm: usize, scratch_len: usize, packed_len: usize) -> Self {
         Self {
             a: BufPair::with_len(hwm),
             b: BufPair::with_len(hwm),
             scratch: vec![0.0; scratch_len],
+            packed: vec![0; packed_len],
         }
     }
 
     /// Grow to at least the requested sizes. No-op (and allocation-free)
     /// when already large enough — the steady-state path.
-    pub(crate) fn ensure(&mut self, hwm: usize, scratch_len: usize) {
+    pub(crate) fn ensure(&mut self, hwm: usize, scratch_len: usize, packed_len: usize) {
         self.a.ensure(hwm);
         self.b.ensure(hwm);
         if self.scratch.len() < scratch_len {
             // lint: allow(alloc) — cold growth path, same rationale as BufPair.
             self.scratch.resize(scratch_len, 0.0);
+        }
+        if self.packed.len() < packed_len {
+            // lint: allow(alloc) — cold growth path, same rationale as BufPair.
+            self.packed.resize(packed_len, 0);
         }
     }
 
@@ -76,9 +86,16 @@ impl Workspace {
         self.scratch.len()
     }
 
-    /// Total owned floats (both ping-pong pairs + scratch) — the plan's
-    /// entire steady-state memory footprint.
+    /// Mixed-precision activation staging capacity in u16 storage words
+    /// (0 for all-f32 plans).
+    pub fn packed_capacity(&self) -> usize {
+        self.packed.len()
+    }
+
+    /// Total owned floats (both ping-pong pairs + scratch + the packed
+    /// staging buffer at two u16 words per float) — the plan's entire
+    /// steady-state memory footprint.
     pub fn total_floats(&self) -> usize {
-        4 * self.a.mu.len() + self.scratch.len()
+        4 * self.a.mu.len() + self.scratch.len() + self.packed.len().div_ceil(2)
     }
 }

@@ -110,6 +110,12 @@ impl ModelVersion {
         self.exec.lock().unwrap().plan_bytes()
     }
 
+    /// Weight tensors this version's cached plans hold as packed
+    /// (f16/bf16) copies — 0 whenever serving at the default f32.
+    pub fn packed_weight_tensors(&self) -> usize {
+        self.exec.lock().unwrap().packed_weight_tensors()
+    }
+
     pub fn cached_batches(&self) -> Vec<usize> {
         self.exec.lock().unwrap().cached_batches()
     }
@@ -144,6 +150,10 @@ impl ModelVersion {
             ("plan_compiles", Json::Num(self.plan_compiles() as f64)),
             ("plan_evictions", Json::Num(self.plan_evictions() as f64)),
             ("plan_bytes", Json::Num(self.plan_bytes() as f64)),
+            (
+                "packed_weight_tensors",
+                Json::Num(self.packed_weight_tensors() as f64),
+            ),
             (
                 "cached_batches",
                 Json::Arr(
@@ -548,11 +558,36 @@ mod tests {
         assert_eq!(var.shape(), &[2, 10]);
         assert_eq!(delta.compiles, 1, "first batch size is a cold compile");
         assert_eq!(v.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(v.packed_weight_tensors(), 0, "f32 serving packs nothing");
 
         assert_eq!(reg.names(), vec!["m"]);
         reg.unload("m").unwrap();
         assert!(reg.get("m").is_none());
         assert!(reg.unload("m").is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn packed_precision_serving_reports_packed_tensors() {
+        // a registry built with --precision f16 packs every compiled
+        // plan's weights and surfaces the count in the admin metadata
+        use crate::util::half::Precision;
+        let reg = Registry::new(
+            None,
+            true,
+            SchedulesBuilder::tuned(1).precision_override(Some(Precision::F16)),
+        );
+        let (spec, path) = write_model("m16", 43);
+        let v = reg.load(&spec).unwrap();
+        assert_eq!(v.packed_weight_tensors(), 0, "no plan compiled yet");
+        let (mu, var, _) = v.infer(&input(2)).unwrap();
+        assert!(mu.data().iter().all(|x| x.is_finite()));
+        assert!(var.data().iter().all(|&x| x >= 0.0));
+        assert_eq!(v.packed_weight_tensors(), 6, "mu + aux per dense layer");
+        assert_eq!(
+            v.describe().num_field("packed_weight_tensors"),
+            Some(6.0)
+        );
         std::fs::remove_file(&path).ok();
     }
 

@@ -18,11 +18,16 @@ pub use space::SearchSpace;
 
 use std::sync::Arc;
 
-use crate::model::{Arch, FusePolicy, PosteriorWeights, Schedules};
-use crate::ops::dense::{dense_kernel_tiled_into, DenseSlices, JointEq12};
+use crate::model::{pack_tensor, Arch, FusePolicy, PosteriorWeights, Schedules};
+use crate::ops::dense::{
+    dense_kernel_packed_tiled_into, dense_kernel_tiled_into, DenseSlices, JointEq12,
+    PackedDenseSlices,
+};
+use crate::ops::simd::PackedSlice;
 use crate::ops::{Epilogue, Schedule};
 use crate::plan::{tile_ranges, CompiledPlan, DenseWorkload, PlanMode};
 use crate::tensor::Tensor;
+use crate::util::half::Precision;
 use crate::util::rng::SplitMix64;
 use crate::util::threadpool;
 
@@ -211,21 +216,63 @@ pub fn tune_per_layer(
                 b_var: Some(lw.b_var.data()),
             };
             let fused_ep = wl.ep;
+            // packed weight copies for the precision dimension, converted
+            // once per layer (like plan compile) so the search loop only
+            // pays the kernel, not the conversion
+            let packs: Vec<(Precision, _, _)> = space
+                .precisions
+                .iter()
+                .filter(|p| !p.is_f32())
+                .map(|&p| {
+                    (
+                        p,
+                        pack_tensor(&w_mu, p).expect("non-f32 precision packs"),
+                        pack_tensor(&w_e2, p).expect("non-f32 precision packs"),
+                    )
+                })
+                .collect();
             let result = tune(space, opts, |s| {
                 let tiles = tile_ranges(wl.m, s.threads);
                 // a `fuse: on` candidate is measured with the epilogue
                 // the plan would fuse here; `fuse: off` measures the bare
                 // kernel the unfused plan binds
                 let ep = if s.fuse { fused_ep } else { Epilogue::None };
-                dense_kernel_tiled_into::<JointEq12>(
-                    pool,
-                    &slices,
-                    s,
-                    ep,
-                    &tiles,
-                    &mut out_mu,
-                    &mut out_var,
-                );
+                if s.precision.is_f32() {
+                    dense_kernel_tiled_into::<JointEq12>(
+                        pool,
+                        &slices,
+                        s,
+                        ep,
+                        &tiles,
+                        &mut out_mu,
+                        &mut out_var,
+                    );
+                } else {
+                    // a packed candidate is measured through the same
+                    // packed-operand kernel a mixed-precision plan binds
+                    let (_, pm, pa) =
+                        packs.iter().find(|(p, ..)| *p == s.precision).unwrap();
+                    let pslices = PackedDenseSlices {
+                        m: wl.m,
+                        k: wl.k,
+                        n: wl.n,
+                        x_mu: x_mu.data(),
+                        x_aux: x_e2.data(),
+                        w_mu: PackedSlice::U16(s.precision, pm.as_slice()),
+                        w_aux: PackedSlice::U16(s.precision, pa.as_slice()),
+                        b_mu: Some(lw.b_mu.data()),
+                        b_var: Some(lw.b_var.data()),
+                    };
+                    dense_kernel_packed_tiled_into::<JointEq12>(
+                        pool,
+                        &pslices,
+                        s,
+                        ep,
+                        &tiles,
+                        &mut out_mu,
+                        &mut out_var,
+                    );
+                }
             });
             LayerTuneResult { workload: wl, result }
         })
@@ -308,6 +355,31 @@ mod tests {
         assert!(
             trials.iter().any(|t| t.schedule.tile_n > 0),
             "no tiled candidate was measured"
+        );
+        assert!(trials.iter().all(|t| t.median_ms > 0.0));
+    }
+
+    #[test]
+    fn per_layer_tuning_measures_packed_candidates() {
+        // the default space carries the precision dimension; non-f32
+        // candidates must route through the packed-operand kernel and
+        // produce usable timings
+        let arch = Arch::mlp();
+        let w = PosteriorWeights::synthetic(&arch, 9);
+        let space = SearchSpace::dense_default(1);
+        let opts = TuneOpts {
+            random_trials: 10,
+            generations: 0,
+            population: 2,
+            reps: 1,
+            seed: 11,
+        };
+        let res = tune_per_layer(&arch, &w, 2, opts, &space);
+        let trials: Vec<&Trial> =
+            res.iter().flat_map(|r| r.result.trials.iter()).collect();
+        assert!(
+            trials.iter().any(|t| !t.schedule.precision.is_f32()),
+            "no packed candidate was measured"
         );
         assert!(trials.iter().all(|t| t.median_ms > 0.0));
     }

@@ -33,7 +33,14 @@ use crate::util::json::Json;
 ///   records (no `fuse` field — measured on the bare kernel only) would
 ///   silently bind `fuse: off` against a fused-capable plan, so they are
 ///   ignored the same way v2 was at the `isa` bump.
-pub const SCHEMA_VERSION: u64 = 4;
+/// * 5 — PR 9: schedules carry the mixed-precision `precision` knob and
+///   were measured on the storage format they name (packed weights +
+///   activation narrow/widen traffic included); v4 records (no
+///   `precision` field — measured on f32 storage against a 6-knob search
+///   space) would silently bind `precision: f32` as if the search had
+///   rejected the packed formats, so they are ignored the same way v3
+///   was at the `fuse` bump.
+pub const SCHEMA_VERSION: u64 = 5;
 
 /// Key -> (schedule, measured median ms).
 #[derive(Clone, Debug)]
@@ -292,6 +299,27 @@ mod tests {
             "median_ms":0.5}}"#;
         let back = TuningRecords::from_json(&Json::parse(text).unwrap()).unwrap();
         assert!(back.records.is_empty(), "v3 records must not bind");
+        assert_eq!(back.version, SCHEMA_VERSION);
+        assert_eq!(
+            back.lookup("dense", "mlp", 10, Schedule::baseline()),
+            Schedule::baseline()
+        );
+    }
+
+    #[test]
+    fn v4_records_without_precision_field_are_ignored() {
+        // a PR-8-era (v4) file: has the `fuse` knob but predates the
+        // mixed-precision dimension. Binding it would silently pin every
+        // layer to f32 storage as if the tuner had searched the packed
+        // formats and rejected them, so it must be warned about and
+        // dropped, not loaded.
+        let text = r#"{"__version__":4,
+            "dense/mlp/b10":{"schedule":{"loop_order":"Mnk",
+            "tile_n":0,"tile_k":0,"unroll":8,"vectorize":true,"threads":2,
+            "isa":"native","fuse":true},
+            "median_ms":0.5}}"#;
+        let back = TuningRecords::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert!(back.records.is_empty(), "v4 records must not bind");
         assert_eq!(back.version, SCHEMA_VERSION);
         assert_eq!(
             back.lookup("dense", "mlp", 10, Schedule::baseline()),

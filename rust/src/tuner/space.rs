@@ -2,6 +2,7 @@
 
 use crate::ops::simd::Isa;
 use crate::ops::{LoopOrder, Schedule};
+use crate::util::half::Precision;
 use crate::util::rng::SplitMix64;
 
 /// Bounds of the schedule search.
@@ -19,6 +20,11 @@ pub struct SearchSpace {
     /// per layer whether fusing the elementwise chain into the compute
     /// kernel pays; `pfp tune --fuse on|off` narrows it to one.
     pub fuses: Vec<bool>,
+    /// Storage-precision candidates (the mixed-precision dimension).
+    /// Defaults to all three formats so the search decides per layer
+    /// whether halved weight/activation traffic beats the widen cost;
+    /// `pfp tune --precision f32|f16|bf16` narrows it to one.
+    pub precisions: Vec<Precision>,
     /// probability of sampling a tiled candidate at all
     pub tile_prob: f64,
 }
@@ -34,6 +40,7 @@ impl SearchSpace {
             max_threads: max_threads.max(1),
             isas: vec![Isa::Scalar, Isa::Native],
             fuses: vec![false, true],
+            precisions: vec![Precision::F32, Precision::F16, Precision::Bf16],
             tile_prob: 0.25,
         }
     }
@@ -62,6 +69,7 @@ impl SearchSpace {
             threads: 1 + rng.randint(self.max_threads as u64) as usize,
             isa: *self.pick(&self.isas, rng),
             fuse: *self.pick(&self.fuses, rng),
+            precision: *self.pick(&self.precisions, rng),
         }
     }
 
@@ -70,12 +78,13 @@ impl SearchSpace {
     /// the stochastic search).
     pub fn mutate(&self, parent: &Schedule, rng: &mut SplitMix64) -> Schedule {
         let mut s = *parent;
-        match rng.randint(6) {
+        match rng.randint(7) {
             0 => s.loop_order = *self.pick(&self.orders, rng),
             1 => s.unroll = *self.pick(&self.unrolls, rng),
             2 => s.vectorize = !s.vectorize,
             3 => s.isa = *self.pick(&self.isas, rng),
             4 => s.fuse = *self.pick(&self.fuses, rng),
+            5 => s.precision = *self.pick(&self.precisions, rng),
             _ => s.threads = 1 + rng.randint(self.max_threads as u64) as usize,
         }
         s
@@ -94,6 +103,8 @@ mod tests {
         let mut saw_scalar = false;
         let mut saw_fused = false;
         let mut saw_unfused = false;
+        let mut saw_packed = false;
+        let mut saw_f32 = false;
         for _ in 0..200 {
             let s = space.sample(&mut rng);
             assert!(space.unrolls.contains(&s.unroll));
@@ -103,6 +114,9 @@ mod tests {
             saw_scalar |= s.isa == Isa::Scalar;
             saw_fused |= s.fuse;
             saw_unfused |= !s.fuse;
+            assert!(space.precisions.contains(&s.precision));
+            saw_packed |= !s.precision.is_f32();
+            saw_f32 |= s.precision.is_f32();
             if s.tile_n > 0 {
                 assert!(space.tile_ns.contains(&s.tile_n));
                 assert!(s.tile_k > 0);
@@ -110,6 +124,7 @@ mod tests {
         }
         assert!(saw_native && saw_scalar, "sampling must cover the ISA dimension");
         assert!(saw_fused && saw_unfused, "sampling must cover the fuse dimension");
+        assert!(saw_packed && saw_f32, "sampling must cover the precision dimension");
     }
 
     #[test]
@@ -139,6 +154,20 @@ mod tests {
     }
 
     #[test]
+    fn restricted_precision_space_samples_only_that_format() {
+        // `pfp tune --precision f32` pins the dimension: no packed
+        // candidate may be sampled or mutated into existence
+        let mut space = SearchSpace::dense_default(2);
+        space.precisions = vec![Precision::F32];
+        let mut rng = SplitMix64::new(11);
+        for _ in 0..50 {
+            assert!(space.sample(&mut rng).precision.is_f32());
+            let child = space.mutate(&Schedule::tuned(1), &mut rng);
+            assert!(child.precision.is_f32());
+        }
+    }
+
+    #[test]
     fn mutation_changes_one_knob_and_never_adds_tiles() {
         let space = SearchSpace::dense_default(4);
         let mut rng = SplitMix64::new(2);
@@ -153,6 +182,7 @@ mod tests {
                 child.vectorize != parent.vectorize,
                 child.isa != parent.isa,
                 child.fuse != parent.fuse,
+                child.precision != parent.precision,
                 child.threads != parent.threads,
             ]
             .iter()

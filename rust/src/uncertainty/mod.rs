@@ -136,6 +136,42 @@ pub fn accuracy(mean_p: &[f32], k: usize, labels: &[i32]) -> f64 {
     correct as f64 / n as f64
 }
 
+/// Expected Calibration Error of a mean predictive `[N, K]` vs labels:
+/// confidence (max class probability) is bucketed into `bins` equal-width
+/// bins and ECE is the confidence-vs-accuracy gap weighted by bin mass.
+/// Used by the mixed-precision certification tests to bound how much
+/// f16/bf16 moment storage may move calibration relative to f32.
+pub fn ece(mean_p: &[f32], k: usize, labels: &[i32], bins: usize) -> f64 {
+    assert!(bins > 0, "ece needs at least one bin");
+    let n = labels.len();
+    assert_eq!(mean_p.len(), n * k);
+    let mut bin_conf = vec![0.0f64; bins];
+    let mut bin_acc = vec![0.0f64; bins];
+    let mut bin_count = vec![0usize; bins];
+    for i in 0..n {
+        let row = &mean_p[i * k..(i + 1) * k];
+        let (pred, &conf) = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        // confidence 1.0 lands in the last bin, not one past it
+        let b = (((conf as f64) * bins as f64) as usize).min(bins - 1);
+        bin_conf[b] += conf as f64;
+        bin_acc[b] += (pred as i32 == labels[i]) as u8 as f64;
+        bin_count[b] += 1;
+    }
+    let mut e = 0.0f64;
+    for b in 0..bins {
+        if bin_count[b] == 0 {
+            continue;
+        }
+        let c = bin_count[b] as f64;
+        e += (c / n as f64) * (bin_conf[b] / c - bin_acc[b] / c).abs();
+    }
+    e
+}
+
 /// Rank-based AUROC (Mann-Whitney U, ties at 0.5) for separating
 /// positives (OOD, high scores) from negatives (in-domain).
 pub fn auroc(pos: &[f64], neg: &[f64]) -> f64 {
@@ -257,6 +293,21 @@ mod tests {
         let p = vec![0.9, 0.1, 0.2, 0.8];
         assert_eq!(accuracy(&p, 2, &[0, 1]), 1.0);
         assert_eq!(accuracy(&p, 2, &[1, 1]), 0.5);
+    }
+
+    #[test]
+    fn ece_perfect_and_overconfident() {
+        // perfectly calibrated at confidence 1.0 and always right: ECE 0
+        let p = vec![1.0, 0.0, 0.0, 1.0];
+        assert!(ece(&p, 2, &[0, 1], 10) < 1e-9);
+        // fully confident and always wrong: ECE 1
+        assert!((ece(&p, 2, &[1, 0], 10) - 1.0).abs() < 1e-9);
+        // confidence 0.6, half right: gap |0.6 - 0.5| weighted by all mass
+        let p = vec![0.6, 0.4, 0.6, 0.4];
+        let e = ece(&p, 2, &[0, 1], 10);
+        assert!((e - 0.1).abs() < 1e-6, "got {e}");
+        // top-bin edge case: confidence exactly 1.0 must not overflow bins
+        let _ = ece(&[1.0, 0.0], 2, &[0], 1);
     }
 
     #[test]

@@ -1,0 +1,370 @@
+//! Dependency-free half-precision storage formats for the mixed-precision
+//! PFP path: IEEE 754 binary16 (`f16`) and bfloat16 (`bf16`).
+//!
+//! These are *storage* formats only. Every kernel widens packed operands
+//! to f32 registers and accumulates in f32; the only rounding happens on
+//! the narrow-on-store edge. The scalar conversions here are the bitwise
+//! reference the vectorized paths in `ops::simd` must match exactly:
+//!
+//! * narrowing uses round-to-nearest-even (the same mode x86 `F16C`
+//!   hardware uses for `vcvtps2ph` with rounding control 0), including
+//!   for values that land in the f16 subnormal range;
+//! * widening is exact (every f16/bf16 value is representable in f32);
+//! * NaNs narrow to quiet NaNs with the top mantissa payload bits kept
+//!   (f16) or the quiet bit forced (bf16), matching hardware behaviour;
+//!   signalling NaNs therefore do not round-trip bit-exactly, by design.
+
+/// Storage precision for posterior moments and inter-layer activations.
+///
+/// `F32` is the default everywhere and keeps the pre-existing kernels
+/// byte-for-byte untouched; `F16`/`Bf16` store tensors as packed `u16`
+/// and widen to f32 inside the kernels (f32 accumulation contract).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    #[default]
+    F32,
+    F16,
+    Bf16,
+}
+
+impl Precision {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F16 => "f16",
+            Precision::Bf16 => "bf16",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f32" => Some(Precision::F32),
+            "f16" => Some(Precision::F16),
+            "bf16" => Some(Precision::Bf16),
+            _ => None,
+        }
+    }
+
+    /// Bytes per stored element.
+    pub fn bytes(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::F16 | Precision::Bf16 => 2,
+        }
+    }
+
+    pub fn is_f32(self) -> bool {
+        self == Precision::F32
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Narrow an f32 to IEEE binary16 bits with round-to-nearest-even,
+/// matching x86 `vcvtps2ph` (rounding control 0) bit-for-bit: gradual
+/// underflow to subnormals, overflow to infinity, NaN payload truncated
+/// to the top 10 mantissa bits with the quiet bit forced.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN. Keep the top payload bits, force the quiet bit so
+        // a NaN never collapses to the infinity encoding.
+        return if man == 0 {
+            sign | 0x7c00
+        } else {
+            sign | 0x7e00 | ((man >> 13) as u16 & 0x01ff)
+        };
+    }
+
+    // Unbiased exponent of the f32 value (normals; f32 subnormals are
+    // far below the f16 subnormal range and flush to zero through the
+    // shift path below).
+    let unbiased = exp - 127;
+    if unbiased >= 16 {
+        // Too large for f16 (max finite is 65504, exponent 15): RNE on
+        // the boundary already rounds 65520+ to infinity, and anything
+        // with unbiased >= 16 is past that.
+        return sign | 0x7c00;
+    }
+    if unbiased >= -14 {
+        // Normal f16 range. 13 dropped mantissa bits; round half to even.
+        let man16 = (man >> 13) as u16;
+        let rest = man & 0x1fff;
+        let half = 0x1000;
+        let mut out = sign | (((unbiased + 15) as u16) << 10) | man16;
+        if rest > half || (rest == half && (man16 & 1) == 1) {
+            // Mantissa carry naturally increments the exponent, and a
+            // carry out of exponent 30 lands exactly on the infinity
+            // encoding — both correct under RNE.
+            out += 1;
+        }
+        return out;
+    }
+    if unbiased >= -25 {
+        // Subnormal f16 range: make the implicit bit explicit, then
+        // shift right by the underflow amount with RNE on what falls off.
+        // value = 1.man * 2^unbiased; the f16 subnormal unit is 2^-24, so
+        // the 24-bit significand moves right (−14 − unbiased) places past
+        // the normal 13-bit drop.
+        let full = man | 0x0080_0000; // 24-bit significand
+        let total = (13 + (-14 - unbiased)) as u32; // 14..=24
+        let man16 = (full >> total) as u16;
+        let rest = full & ((1u32 << total) - 1);
+        let half = 1u32 << (total - 1);
+        let mut out = sign | man16;
+        if rest > half || (rest == half && (man16 & 1) == 1) {
+            out += 1; // carry into the smallest normal is again correct
+        }
+        return out;
+    }
+    // Below half the smallest subnormal: signed zero.
+    sign
+}
+
+/// Widen IEEE binary16 bits to f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign); // signed zero
+        }
+        // Subnormal: value = man * 2^-24. Exact in f32.
+        let mag = (man as f32) * f32::from_bits(0x3380_0000); // 2^-24
+        return if sign != 0 { -mag } else { mag };
+    }
+    if exp == 0x1f {
+        // Inf / NaN: widen payload into the top f32 mantissa bits.
+        return f32::from_bits(sign | 0x7f80_0000 | (man << 13));
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
+}
+
+/// Narrow an f32 to bfloat16 bits with round-to-nearest-even. bf16 keeps
+/// the f32 exponent, so there is no overflow/underflow handling beyond
+/// the rounding itself; NaNs get the quiet bit forced so the payload
+/// truncation can never produce an infinity.
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // RNE: add 0x7fff plus the LSB of the kept part (round half to even).
+    (((bits).wrapping_add(0x7fff + ((bits >> 16) & 1))) >> 16) as u16
+}
+
+/// Widen bfloat16 bits to f32 (exact: bf16 is a truncated f32).
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Narrow one f32 to the given storage precision's bit pattern. For
+/// `F32` this is a plain transmute of the low half — callers never store
+/// f32 through this path, but keeping the arm total keeps match sites
+/// simple; debug builds assert it is unreachable in kernels.
+pub fn narrow(prec: Precision, x: f32) -> u16 {
+    match prec {
+        Precision::F32 => {
+            debug_assert!(false, "narrow(F32) has no packed representation");
+            0
+        }
+        Precision::F16 => f32_to_f16_bits(x),
+        Precision::Bf16 => f32_to_bf16_bits(x),
+    }
+}
+
+/// Widen one packed bit pattern of the given precision to f32.
+pub fn widen(prec: Precision, h: u16) -> f32 {
+    match prec {
+        Precision::F32 => {
+            debug_assert!(false, "widen(F32) has no packed representation");
+            0.0
+        }
+        Precision::F16 => f16_bits_to_f32(h),
+        Precision::Bf16 => bf16_bits_to_f32(h),
+    }
+}
+
+/// Quantize an f32 value through a storage precision and back: the exact
+/// value a kernel sees after a narrow-on-store / widen-on-load round
+/// trip. Identity for `F32`.
+pub fn quantize(prec: Precision, x: f32) -> f32 {
+    match prec {
+        Precision::F32 => x,
+        Precision::F16 => f16_bits_to_f32(f32_to_f16_bits(x)),
+        Precision::Bf16 => bf16_bits_to_f32(f32_to_bf16_bits(x)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn precision_parse_roundtrip() {
+        for p in [Precision::F32, Precision::F16, Precision::Bf16] {
+            assert_eq!(Precision::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(Precision::parse("f64"), None);
+        assert_eq!(Precision::default(), Precision::F32);
+        assert_eq!(Precision::F16.bytes(), 2);
+        assert_eq!(Precision::F32.bytes(), 4);
+    }
+
+    #[test]
+    fn f16_widen_narrow_is_identity_for_all_65536_patterns() {
+        // Every f16 bit pattern widens exactly and must narrow back to
+        // itself — except signalling NaNs, which quieten (hardware
+        // semantics). Exhaustive: 65536 cases.
+        for h in 0..=u16::MAX {
+            let x = f16_bits_to_f32(h);
+            let back = f32_to_f16_bits(x);
+            let exp = (h >> 10) & 0x1f;
+            let man = h & 0x3ff;
+            if exp == 0x1f && man != 0 {
+                // NaN: must stay NaN with the sign and payload top bits;
+                // the quiet bit is forced.
+                assert!(x.is_nan());
+                assert_eq!(back & 0x8000, h & 0x8000, "sign lost for {h:#06x}");
+                assert_eq!(back & 0x7c00, 0x7c00, "NaN collapsed for {h:#06x}");
+                assert_ne!(back & 0x03ff, 0, "NaN became inf for {h:#06x}");
+            } else {
+                assert_eq!(back, h, "round-trip failed for {h:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_widen_narrow_is_identity_for_all_65536_patterns() {
+        for h in 0..=u16::MAX {
+            let x = bf16_bits_to_f32(h);
+            let back = f32_to_bf16_bits(x);
+            let exp = (h >> 7) & 0xff;
+            let man = h & 0x7f;
+            if exp == 0xff && man != 0 {
+                assert!(x.is_nan());
+                assert_eq!(back & 0x8000, h & 0x8000);
+                assert_eq!(back & 0x7f80, 0x7f80);
+                assert_ne!(back & 0x007f, 0);
+            } else {
+                assert_eq!(back, h, "round-trip failed for {h:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn f16_known_values() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff); // max finite
+        assert_eq!(f32_to_f16_bits(65536.0), 0x7c00); // overflow → inf
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        // Smallest f16 normal and subnormal.
+        assert_eq!(f32_to_f16_bits(6.103_515_6e-5), 0x0400); // 2^-14
+        assert_eq!(f32_to_f16_bits(5.960_464_5e-8), 0x0001); // 2^-24
+        let q = f32_to_f16_bits(f32::NAN);
+        assert_eq!(q & 0x7c00, 0x7c00);
+        assert_ne!(q & 0x03ff, 0);
+    }
+
+    #[test]
+    fn f16_rne_ties_round_to_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 (even mantissa) and
+        // 1 + 2^-10 (odd): must round down to the even one.
+        let tie_down = f32::from_bits(0x3f80_0000 | (1 << 12));
+        assert_eq!(f32_to_f16_bits(tie_down), 0x3c00);
+        // (1 + 2^-10) + 2^-11 is halfway between odd 0x3c01 and even
+        // 0x3c02: must round up to the even one.
+        let tie_up = f32::from_bits(0x3f80_0000 | (1 << 13) | (1 << 12));
+        assert_eq!(f32_to_f16_bits(tie_up), 0x3c02);
+        // Just below / above the tie break the obvious way.
+        let below = f32::from_bits(0x3f80_0000 | ((1 << 12) - 1));
+        assert_eq!(f32_to_f16_bits(below), 0x3c00);
+        let above = f32::from_bits(0x3f80_0000 | ((1 << 12) + 1));
+        assert_eq!(f32_to_f16_bits(above), 0x3c01);
+    }
+
+    #[test]
+    fn f16_subnormal_rounding_and_flush() {
+        // Halfway between 0 and the smallest subnormal flushes to zero
+        // (even side), just above rounds to the subnormal.
+        let half_min = 2.0f32.powi(-25);
+        assert_eq!(f32_to_f16_bits(half_min), 0x0000);
+        assert_eq!(f32_to_f16_bits(half_min * 1.0001), 0x0001);
+        assert_eq!(f32_to_f16_bits(-half_min), 0x8000);
+        // 1.5 * 2^-24 is halfway between subnormals 1 and 2: rounds to 2.
+        assert_eq!(f32_to_f16_bits(1.5 * 2.0f32.powi(-24)), 0x0002);
+        // 2.5 * 2^-24 is halfway between 2 and 3: rounds to even 2.
+        assert_eq!(f32_to_f16_bits(2.5 * 2.0f32.powi(-24)), 0x0002);
+        // Largest subnormal rounds up into the smallest normal when the
+        // dropped bits say so: (1023.75) * 2^-24 → 0x0400.
+        assert_eq!(f32_to_f16_bits(1023.75 * 2.0f32.powi(-24)), 0x0400);
+        // Below half the smallest subnormal: zero.
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-26)), 0x0000);
+    }
+
+    #[test]
+    fn bf16_known_values_and_ties() {
+        assert_eq!(f32_to_bf16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_bf16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_bf16_bits(1.0), 0x3f80);
+        assert_eq!(f32_to_bf16_bits(f32::INFINITY), 0x7f80);
+        // Tie at 1 + 2^-8: halfway between 0x3f80 (even) and 0x3f81 —
+        // rounds to even (down).
+        let tie_down = f32::from_bits(0x3f80_0000 | (1 << 15));
+        assert_eq!(f32_to_bf16_bits(tie_down), 0x3f80);
+        // Tie one ulp higher lands between odd 0x3f81 and even 0x3f82.
+        let tie_up = f32::from_bits(0x3f80_0000 | (1 << 16) | (1 << 15));
+        assert_eq!(f32_to_bf16_bits(tie_up), 0x3f82);
+        // Overflow via rounding: largest f32 < inf rounds to bf16 inf.
+        assert_eq!(f32_to_bf16_bits(f32::MAX), 0x7f80);
+        let q = f32_to_bf16_bits(f32::NAN);
+        assert_eq!(q & 0x7f80, 0x7f80);
+        assert_ne!(q & 0x007f, 0);
+    }
+
+    #[test]
+    fn quantize_error_is_bounded_for_random_values() {
+        // Relative quantization error is ≤ 2^-11 for f16 normals and
+        // ≤ 2^-8 for bf16 — the per-element bounds the differential
+        // harness builds on. Property-tested with replayable seeds.
+        check(200, |g| {
+            let x = g.f32_in(-1000.0, 1000.0);
+            if x.abs() > 6.2e-5 {
+                let rel16 = ((quantize(Precision::F16, x) - x) / x).abs();
+                assert!(rel16 <= 4.9e-4, "f16 rel err {rel16} for {x}");
+            }
+            if x != 0.0 {
+                let relb = ((quantize(Precision::Bf16, x) - x) / x).abs();
+                assert!(relb <= 4.0e-3, "bf16 rel err {relb} for {x}");
+            }
+            assert_eq!(quantize(Precision::F32, x), x);
+        });
+    }
+
+    #[test]
+    fn narrow_widen_dispatch_matches_direct_calls() {
+        check(100, |g| {
+            let x = g.f32_in(-100.0, 100.0);
+            assert_eq!(narrow(Precision::F16, x), f32_to_f16_bits(x));
+            assert_eq!(narrow(Precision::Bf16, x), f32_to_bf16_bits(x));
+            let h = narrow(Precision::F16, x);
+            assert_eq!(widen(Precision::F16, h).to_bits(), f16_bits_to_f32(h).to_bits());
+            let b = narrow(Precision::Bf16, x);
+            assert_eq!(widen(Precision::Bf16, b).to_bits(), bf16_bits_to_f32(b).to_bits());
+        });
+    }
+}

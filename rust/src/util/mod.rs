@@ -4,6 +4,7 @@
 //! and unit-tested in place.
 
 pub mod bench;
+pub mod half;
 pub mod json;
 pub mod mmap;
 pub mod prop;

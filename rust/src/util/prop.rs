@@ -62,6 +62,13 @@ impl Gen {
         }
     }
 
+    /// Random storage precision (the mixed-precision knob), covering all
+    /// three formats.
+    pub fn precision(&mut self) -> crate::util::half::Precision {
+        use crate::util::half::Precision;
+        *self.pick(&[Precision::F32, Precision::F16, Precision::Bf16])
+    }
+
     /// Random dense workload shape `(m, k, n)` within the given caps
     /// (inclusive, each at least 1).
     pub fn dense_shape(&mut self, m_max: usize, k_max: usize, n_max: usize) -> (usize, usize, usize) {
@@ -95,6 +102,10 @@ impl Gen {
             // so differential tests drive fusion directly rather than
             // through this eligibility knob
             fuse: false,
+            // likewise, the packed kernels take the weight precision as
+            // explicit PackedSlice operands; the plan-level tests that
+            // exercise this knob set it deliberately
+            precision: crate::util::half::Precision::F32,
         }
     }
 }

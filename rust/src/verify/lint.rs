@@ -309,10 +309,31 @@ pub fn lint_safety(relpath: &str, content: &str) -> Vec<Finding> {
 /// are deliberately absent — this list is the contract for what runs
 /// per-request after warmup.
 pub const HOT_PATHS: &[(&str, &[&str])] = &[
-    ("plan/mod.rs", &["execute"]),
+    ("plan/mod.rs", &["execute", "store_activations"]),
     ("plan/workspace.rs", &["ensure"]),
-    ("ops/dense.rs", &["dense_rows_into", "dense_kernel_tiled_into"]),
-    ("ops/conv.rs", &["im2col_rows_into", "col2im_planes_into", "conv_kernel_tiled_into"]),
+    (
+        "ops/dense.rs",
+        &[
+            "dense_rows_into",
+            "dense_kernel_tiled_into",
+            "dense_rows_packed_into",
+            "dense_kernel_packed_tiled_into",
+        ],
+    ),
+    (
+        "ops/conv.rs",
+        &[
+            "im2col_rows_into",
+            "col2im_planes_into",
+            "conv_kernel_tiled_into",
+            "conv_kernel_packed_tiled_into",
+        ],
+    ),
+    // the mixed-precision conversion kernels run per step on the packed
+    // execute path: widen/narrow must stay allocation-free like the
+    // compute kernels they feed
+    ("ops/simd.rs", &["widen_into", "narrow_into"]),
+    ("util/half.rs", &["widen", "narrow"]),
     ("ops/relu.rs", &["pfp_relu_rows_into", "pfp_relu_tiled_into", "apply_epilogue"]),
     (
         "ops/maxpool.rs",

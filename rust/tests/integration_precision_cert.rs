@@ -1,0 +1,196 @@
+//! End-to-end mixed-precision certification: f16/bf16 moment storage may
+//! buy bandwidth, but it must not buy it with the network's calibration
+//! or its OOD detection. This is the tier-2 uncertainty budget on top of
+//! the bitwise kernel contracts in `integration_simd_parity.rs`.
+//!
+//! For every (mean precision, variance precision) combination the knobs
+//! expose, the harness runs the full serving pipeline — packed compiled
+//! plan, Gaussian logit sampling (fixed seed, so the Monte-Carlo noise
+//! cancels between combinations), softmax moments — and bounds the drift
+//! against the all-f32 reference:
+//!
+//! * |ECE_packed - ECE_f32| <= 0.05 on the in-domain split,
+//! * |AUROC_packed - AUROC_f32| <= 0.05 for MI-based OOD separation,
+//! * in-domain accuracy drops by no more than 2 percentage points.
+//!
+//! Combinations are swept finest-to-coarsest and every violation is
+//! reported with the **first breaking combination named** — so when a
+//! future kernel change degrades e.g. bf16 variance storage, the failure
+//! says exactly which knob setting broke, not just "a test failed".
+//!
+//! The always-run path certifies on the synthetic Dirty-MNIST generator
+//! and synthetic posteriors (self-contained, no artifacts); a second,
+//! artifacts-gated path re-certifies on the trained posterior and real
+//! exported splits with the same budgets. The f32 override route is also
+//! pinned bit-identical to the plain f32 path here: `--precision f32` is
+//! a no-op by construction, not by luck.
+
+use pfp::data::DirtyMnist;
+use pfp::model::{Arch, PfpExecutor, PosteriorWeights, Schedules};
+use pfp::runtime::Manifest;
+use pfp::tensor::Tensor;
+use pfp::uncertainty;
+use pfp::util::half::Precision;
+
+const ECE_BUDGET: f64 = 0.05;
+const AUROC_BUDGET: f64 = 0.05;
+const ACC_BUDGET: f64 = 0.02;
+const SAMPLES: usize = 20;
+const SAMPLE_SEED: u64 = 42;
+const ECE_BINS: usize = 10;
+
+/// Finest-to-coarsest sweep of every non-reference (mean, var) storage
+/// combination the Schedule knobs expose.
+const GRID: [(Precision, Precision); 8] = [
+    (Precision::F32, Precision::F16),
+    (Precision::F16, Precision::F32),
+    (Precision::F16, Precision::F16),
+    (Precision::F32, Precision::Bf16),
+    (Precision::Bf16, Precision::F32),
+    (Precision::F16, Precision::Bf16),
+    (Precision::Bf16, Precision::F16),
+    (Precision::Bf16, Precision::Bf16),
+];
+
+struct Metrics {
+    acc: f64,
+    ece: f64,
+    auroc: f64,
+}
+
+/// Full pipeline at one precision setting: packed plan forward on every
+/// split, fixed-seed logit sampling, ECE/accuracy in-domain, MI-AUROC
+/// for dirty-vs-OOD.
+fn eval_at(
+    arch: &Arch,
+    weights: &PosteriorWeights,
+    data: &DirtyMnist,
+    mean_p: Precision,
+    var_p: Precision,
+) -> Metrics {
+    let sched = Schedules::tuned(1)
+        .with_precision_override(Some(mean_p))
+        .with_var_precision(Some(var_p));
+    let mut exec = PfpExecutor::new(arch.clone(), weights.clone(), sched);
+    let k = arch.num_classes();
+    let mut uncert = |x: &Tensor| {
+        let (mu, var) = exec.forward(x);
+        uncertainty::pfp_uncertainty(&mu, &var, SAMPLES, SAMPLE_SEED)
+    };
+    let u_in = uncert(&data.test_mnist.x);
+    let u_amb = uncert(&data.test_ambiguous.x);
+    let u_ood = uncert(&data.test_ood.x);
+    let in_mi: Vec<f64> = u_in.mi.iter().chain(&u_amb.mi).cloned().collect();
+    Metrics {
+        acc: uncertainty::accuracy(&u_in.mean_p, k, &data.test_mnist.y),
+        ece: uncertainty::ece(&u_in.mean_p, k, &data.test_mnist.y, ECE_BINS),
+        auroc: uncertainty::auroc(&u_ood.mi, &in_mi),
+    }
+}
+
+/// Sweep the grid against the f32 reference; panic naming the first
+/// combination that exceeds any budget.
+fn certify(tag: &str, arch: &Arch, weights: &PosteriorWeights, data: &DirtyMnist) {
+    let reference = eval_at(arch, weights, data, Precision::F32, Precision::F32);
+    eprintln!(
+        "[{tag}] f32 reference: acc={:.3} ece={:.3} auroc={:.3}",
+        reference.acc, reference.ece, reference.auroc
+    );
+    let mut first_break: Option<String> = None;
+    for (mean_p, var_p) in GRID {
+        let m = eval_at(arch, weights, data, mean_p, var_p);
+        let d_ece = (m.ece - reference.ece).abs();
+        let d_auroc = (m.auroc - reference.auroc).abs();
+        let d_acc = reference.acc - m.acc; // only degradation counts
+        eprintln!(
+            "[{tag}] mean={mean_p} var={var_p}: acc={:.3} (Δ{:+.3}) \
+             ece={:.3} (Δ{:.3}) auroc={:.3} (Δ{:.3})",
+            m.acc, -d_acc, m.ece, d_ece, m.auroc, d_auroc
+        );
+        if first_break.is_none()
+            && (d_ece > ECE_BUDGET || d_auroc > AUROC_BUDGET || d_acc > ACC_BUDGET)
+        {
+            first_break = Some(format!(
+                "mean={mean_p} var={var_p} (Δece={d_ece:.4} Δauroc={d_auroc:.4} \
+                 Δacc={d_acc:.4})"
+            ));
+        }
+    }
+    if let Some(combo) = first_break {
+        panic!("[{tag}] first combination over budget: {combo}");
+    }
+}
+
+#[test]
+fn synthetic_certification_mlp_full_grid() {
+    let arch = Arch::mlp();
+    let weights = PosteriorWeights::synthetic(&arch, 7);
+    let data = DirtyMnist::generate(2025, 96);
+    certify("synthetic mlp", &arch, &weights, &data);
+}
+
+#[test]
+fn synthetic_certification_lenet_smoke() {
+    // lenet exercises the packed conv + pool path; one coarse combination
+    // keeps the debug-build runtime reasonable while the full grid runs
+    // on the (cheap) mlp above
+    let arch = Arch::lenet();
+    let weights = PosteriorWeights::synthetic(&arch, 7);
+    let data = DirtyMnist::generate(2025, 24);
+    let reference = eval_at(&arch, &weights, &data, Precision::F32, Precision::F32);
+    let m = eval_at(&arch, &weights, &data, Precision::F16, Precision::F16);
+    assert!(
+        (m.ece - reference.ece).abs() <= ECE_BUDGET,
+        "lenet f16 ECE drift {:.4} over budget",
+        (m.ece - reference.ece).abs()
+    );
+    assert!(
+        (m.auroc - reference.auroc).abs() <= AUROC_BUDGET,
+        "lenet f16 AUROC drift {:.4} over budget",
+        (m.auroc - reference.auroc).abs()
+    );
+}
+
+#[test]
+fn f32_override_is_bit_identical_to_plain_f32() {
+    // `--precision f32` must be a pure no-op: same plan, same bits
+    for arch in [Arch::mlp(), Arch::lenet()] {
+        let weights = PosteriorWeights::synthetic(&arch, 11);
+        let x = Tensor::new(
+            vec![3, arch.input_len()],
+            (0..3 * arch.input_len())
+                .map(|i| (i % 97) as f32 / 97.0)
+                .collect(),
+        )
+        .unwrap();
+        let (mu_a, var_a) =
+            PfpExecutor::new(arch.clone(), weights.clone(), Schedules::tuned(1)).forward(&x);
+        let (mu_b, var_b) = PfpExecutor::new(
+            arch.clone(),
+            weights.clone(),
+            Schedules::tuned(1)
+                .with_precision_override(Some(Precision::F32))
+                .with_var_precision(Some(Precision::F32)),
+        )
+        .forward(&x);
+        assert_eq!(mu_a.data(), mu_b.data(), "{} mu", arch.name);
+        assert_eq!(var_a.data(), var_b.data(), "{} var", arch.name);
+    }
+}
+
+#[test]
+fn trained_posterior_certification_when_artifacts_present() {
+    // golden-path re-certification on the trained posterior and the real
+    // exported splits; same budgets as the synthetic path
+    let dir = pfp::artifacts_dir();
+    if !dir.join("data.npz").exists() || !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let arch = Arch::mlp();
+    let manifest = Manifest::load(&dir.join("manifest.json")).unwrap();
+    let calib = manifest.calibration_factor(&arch.name);
+    let weights = PosteriorWeights::load(&dir, &arch, calib).unwrap();
+    let data = DirtyMnist::load(&dir).unwrap();
+    certify("trained mlp", &arch, &weights, &data);
+}

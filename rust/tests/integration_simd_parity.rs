@@ -19,6 +19,19 @@
 //! chain at the same ISA**, kernel-level and whole-network, across random
 //! schedules, batches, and thread counts.
 //!
+//! The mixed-precision contract (PR 9) is policed here too, at two
+//! tiers. Tier 1, exact: a packed-operand kernel (f16/bf16 weight
+//! storage, f32 accumulation) is **bit-identical, per ISA and tile
+//! count, to the plain f32 kernel run on weights widened from the same
+//! u16 storage bits** — packing only moves where the bits live, every
+//! arithmetic op stays f32, so the tolerance is zero. Tier 2, bounded:
+//! a whole network served packed tracks the f32 network within a coarse
+//! envelope (rtol 0.15 / atol 0.1 on the logit moments — the RNE
+//! quantization error of <=0.4% per bf16 value compounds through the
+//! layers but stays far inside this bound in practice); the statistically
+//! meaningful accuracy/ECE/AUROC budget lives in
+//! `integration_precision_cert.rs`.
+//!
 //! Shapes, schedules (every knob, ISA included), and inputs are drawn
 //! from the seeded [`prop::check`] harness, which prints the failing case
 //! seed (`PFP_PROP_SEED=<base>, case seed <s>`) so any failure replays
@@ -26,8 +39,11 @@
 
 use pfp::model::{Arch, FusePolicy, PfpExecutor, PosteriorWeights, Schedules};
 use pfp::ops::dense::{
-    dense_kernel_tiled_into, dense_rows_into, DenseSlices, FirstLayer, JointEq12,
+    dense_kernel_packed_tiled_into, dense_kernel_tiled_into, dense_rows_into, DenseSlices,
+    FirstLayer, JointEq12, PackedDenseSlices,
 };
+use pfp::ops::simd::PackedSlice;
+use pfp::util::half::{narrow, widen, Precision};
 use pfp::ops::maxpool::pfp_maxpool2_planes_into;
 use pfp::ops::relu::{pfp_relu_rows_into, pfp_relu_tiled_into};
 use pfp::ops::simd::Isa;
@@ -312,6 +328,218 @@ fn dense_fused_epilogue_randomized_parity() {
             }
         }
     });
+}
+
+#[test]
+fn dense_packed_randomized_bit_parity_with_widened_reference() {
+    // tier-1 mixed-precision contract: the packed kernel must equal the
+    // plain f32 kernel run on weights widened from the same storage
+    // bits, bit for bit, per ISA, across tile counts and epilogues —
+    // including the split case where only one operand is packed
+    // (independent mean/variance precision).
+    let pool = ThreadPool::new(4);
+    check(16, |g| {
+        let (m, k, n) = g.dense_shape(8, 100, 32);
+        let sched = g.schedule();
+        let prec = if g.usize_in(0, 1) == 0 { Precision::F16 } else { Precision::Bf16 };
+        let (x_mu, x_e2, w_mu, w_e2, b_mu, b_var) = rand_dense_case(g, m, k, n);
+        let wm_bits: Vec<u16> = w_mu.iter().map(|&v| narrow(prec, v)).collect();
+        let wa_bits: Vec<u16> = w_e2.iter().map(|&v| narrow(prec, v)).collect();
+        let wm_wide: Vec<f32> = wm_bits.iter().map(|&b| widen(prec, b)).collect();
+        let wa_wide: Vec<f32> = wa_bits.iter().map(|&b| widen(prec, b)).collect();
+        for isa in [Isa::Scalar, Isa::Native] {
+            let s = sched.with_isa(isa);
+            for ep in [Epilogue::None, Epilogue::Relu, Epilogue::ReluToVar] {
+                let tag = format!("{} [{m},{k},{n}] {prec} {isa:?} {ep:?}", s.tag());
+                // f32 reference on widened copies of the stored bits
+                let ref_slices = DenseSlices {
+                    m,
+                    k,
+                    n,
+                    x_mu: &x_mu,
+                    x_aux: &x_e2,
+                    w_mu: &wm_wide,
+                    w_aux: &wa_wide,
+                    b_mu: Some(&b_mu),
+                    b_var: Some(&b_var),
+                };
+                let mut want_mu = vec![0.0f32; m * n];
+                let mut want_var = vec![0.0f32; m * n];
+                dense_rows_into::<JointEq12>(
+                    &ref_slices, &s, ep, 0..m, &mut want_mu, &mut want_var,
+                );
+                let pslices = PackedDenseSlices {
+                    m,
+                    k,
+                    n,
+                    x_mu: &x_mu,
+                    x_aux: &x_e2,
+                    w_mu: PackedSlice::U16(prec, &wm_bits),
+                    w_aux: PackedSlice::U16(prec, &wa_bits),
+                    b_mu: Some(&b_mu),
+                    b_var: Some(&b_var),
+                };
+                for tasks in [1usize, 2, 4] {
+                    let tiles = tile_ranges(m, tasks);
+                    let mut mu = vec![0.0f32; m * n];
+                    let mut var = vec![0.0f32; m * n];
+                    dense_kernel_packed_tiled_into::<JointEq12>(
+                        &pool, &pslices, &s, ep, &tiles, &mut mu, &mut var,
+                    );
+                    assert_eq!(mu, want_mu, "{tag} tasks={tasks} mu");
+                    assert_eq!(var, want_var, "{tag} tasks={tasks} var");
+                }
+            }
+            // split precision (mean packed, variance kept f32): the F32
+            // operand variant must match the plain kernel on
+            // (widened mu, original aux) exactly
+            let mixed_ref = DenseSlices {
+                m,
+                k,
+                n,
+                x_mu: &x_mu,
+                x_aux: &x_e2,
+                w_mu: &wm_wide,
+                w_aux: &w_e2,
+                b_mu: Some(&b_mu),
+                b_var: Some(&b_var),
+            };
+            let mut want_mu = vec![0.0f32; m * n];
+            let mut want_var = vec![0.0f32; m * n];
+            dense_rows_into::<JointEq12>(
+                &mixed_ref, &s, Epilogue::None, 0..m, &mut want_mu, &mut want_var,
+            );
+            let pslices = PackedDenseSlices {
+                m,
+                k,
+                n,
+                x_mu: &x_mu,
+                x_aux: &x_e2,
+                w_mu: PackedSlice::U16(prec, &wm_bits),
+                w_aux: PackedSlice::F32(&w_e2),
+                b_mu: Some(&b_mu),
+                b_var: Some(&b_var),
+            };
+            let tiles = tile_ranges(m, 2);
+            let mut mu = vec![0.0f32; m * n];
+            let mut var = vec![0.0f32; m * n];
+            dense_kernel_packed_tiled_into::<JointEq12>(
+                &pool, &pslices, &s, Epilogue::None, &tiles, &mut mu, &mut var,
+            );
+            let tag = format!("{} [{m},{k},{n}] {prec} {isa:?} split", s.tag());
+            assert_eq!(mu, want_mu, "{tag} mu");
+            assert_eq!(var, want_var, "{tag} var");
+        }
+    });
+}
+
+#[test]
+fn first_layer_packed_randomized_bit_parity() {
+    // same zero-tolerance contract for the Eq. 13 first-layer kernel
+    // (x · mu_w / x² · var_w), which the packed plan binds for layer 0
+    let pool = ThreadPool::new(2);
+    check(10, |g| {
+        let (m, k, n) = g.dense_shape(6, 100, 24);
+        let sched = g.schedule();
+        let prec = if g.usize_in(0, 1) == 0 { Precision::F16 } else { Precision::Bf16 };
+        let x = g.normal_vec(m * k, 1.0);
+        let x_sq: Vec<f32> = x.iter().map(|&v| v * v).collect();
+        let w_mu = g.normal_vec(n * k, 0.2);
+        let w_var = g.var_vec(n * k, 0.02);
+        let wm_bits: Vec<u16> = w_mu.iter().map(|&v| narrow(prec, v)).collect();
+        let wv_bits: Vec<u16> = w_var.iter().map(|&v| narrow(prec, v)).collect();
+        let wm_wide: Vec<f32> = wm_bits.iter().map(|&b| widen(prec, b)).collect();
+        let wv_wide: Vec<f32> = wv_bits.iter().map(|&b| widen(prec, b)).collect();
+        for isa in [Isa::Scalar, Isa::Native] {
+            let s = sched.with_isa(isa);
+            let ref_slices = DenseSlices {
+                m,
+                k,
+                n,
+                x_mu: &x,
+                x_aux: &x_sq,
+                w_mu: &wm_wide,
+                w_aux: &wv_wide,
+                b_mu: None,
+                b_var: None,
+            };
+            let mut want_mu = vec![0.0f32; m * n];
+            let mut want_var = vec![0.0f32; m * n];
+            dense_rows_into::<FirstLayer>(
+                &ref_slices, &s, Epilogue::None, 0..m, &mut want_mu, &mut want_var,
+            );
+            let pslices = PackedDenseSlices {
+                m,
+                k,
+                n,
+                x_mu: &x,
+                x_aux: &x_sq,
+                w_mu: PackedSlice::U16(prec, &wm_bits),
+                w_aux: PackedSlice::U16(prec, &wv_bits),
+                b_mu: None,
+                b_var: None,
+            };
+            for tasks in [1usize, 2] {
+                let tiles = tile_ranges(m, tasks);
+                let mut mu = vec![0.0f32; m * n];
+                let mut var = vec![0.0f32; m * n];
+                dense_kernel_packed_tiled_into::<FirstLayer>(
+                    &pool, &pslices, &s, Epilogue::None, &tiles, &mut mu, &mut var,
+                );
+                let tag = format!("first {} [{m},{k},{n}] {prec} {isa:?}", s.tag());
+                assert_eq!(mu, want_mu, "{tag} tasks={tasks} mu");
+                assert_eq!(var, want_var, "{tag} tasks={tasks} var");
+            }
+        }
+    });
+}
+
+#[test]
+fn network_packed_randomized_parity() {
+    // tier-2 whole-network contract: a packed plan (weights AND
+    // inter-layer activations stored f16/bf16) is deterministic across
+    // plan thread counts and tracks the f32 network within the coarse
+    // envelope documented in the module header. Covers both archs, so
+    // the conv packed kernel and the maxpool/relu round-trips are in.
+    for arch in [Arch::mlp(), Arch::lenet()] {
+        let weights = PosteriorWeights::synthetic(&arch, 53);
+        check(2, |g| {
+            let batch = g.usize_in(1, 4);
+            let n = batch * arch.input_len();
+            let x = Tensor::new(
+                vec![batch, arch.input_len()],
+                (0..n).map(|_| g.f32_in(0.0, 1.0)).collect(),
+            )
+            .unwrap();
+            let (mu_32, var_32) =
+                PfpExecutor::new(arch.clone(), weights.clone(), Schedules::tuned(1))
+                    .forward(&x);
+            for prec in [Precision::F16, Precision::Bf16] {
+                let (mu_p, var_p) = PfpExecutor::new(
+                    arch.clone(),
+                    weights.clone(),
+                    Schedules::tuned(1).with_precision_override(Some(prec)),
+                )
+                .forward(&x);
+                for t in [2usize, 4] {
+                    let (mu_t, var_t) = PfpExecutor::new(
+                        arch.clone(),
+                        weights.clone(),
+                        Schedules::tuned(1)
+                            .with_precision_override(Some(prec))
+                            .with_plan_threads(t),
+                    )
+                    .forward(&x);
+                    let tag = format!("{} b{batch} {prec} t{t}", arch.name);
+                    assert_eq!(mu_p.data(), mu_t.data(), "{tag} mu");
+                    assert_eq!(var_p.data(), var_t.data(), "{tag} var");
+                }
+                let tag = format!("{} b{batch} {prec} packed-vs-f32", arch.name);
+                assert_close(&format!("{tag} mu"), mu_p.data(), mu_32.data(), 0.15, 0.1);
+                assert_close(&format!("{tag} var"), var_p.data(), var_32.data(), 0.15, 0.1);
+            }
+        });
+    }
 }
 
 #[test]

@@ -15,6 +15,7 @@ verify:
 	cargo bench --no-run --bench plan_parallel_scaling
 	cargo bench --no-run --bench simd_kernels
 	cargo bench --no-run --bench registry_churn
+	cargo bench --no-run --bench connection_scaling
 	$(MAKE) lint
 	$(MAKE) model-check
 

@@ -1,0 +1,346 @@
+//! Connection-scaling bench for the event-driven front end.
+//!
+//! The reactor's operational claim is that connections are cheap: a small
+//! fixed set of IO threads (here 4) owns every socket, so thousands of
+//! idle connections cost file descriptors and a few KB of buffers — not
+//! two OS threads each — while hundreds of active pipelined connections
+//! share the same event loops at low tail latency. This bench measures
+//! that claim directly, with a synthetic stub backend (no artifacts):
+//!
+//! * **idle fleet** — open ~5000 connections (scaled down if the fd
+//!   rlimit cannot be raised far enough), roundtrip a ping on each, and
+//!   record process thread count + RSS growth: both must stay flat;
+//! * **active fleet** — 200 pipelined connections driven by 8 client
+//!   threads, a fixed request count each, per-request latency recorded
+//!   by id; asserts zero errors and reports p50/p99/p99.9;
+//! * emits `BENCH_conn.json` (committed into `bench/` by CI's bench-perf
+//!   job as part of the perf trajectory).
+//!
+//! Fast mode (`PFP_BENCH_FAST=1`): 256 idle / 16 active connections.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pfp::coordinator::{protocol, Backend, BatcherConfig, Server, ServerConfig, Service};
+use pfp::tensor::Tensor;
+use pfp::util::json::Json;
+use pfp::util::stats;
+
+/// Raise the soft fd limit toward `want`; returns the resulting soft
+/// limit. Best effort — the bench scales its idle fleet to whatever it
+/// gets.
+#[cfg(unix)]
+fn raise_nofile(want: u64) -> u64 {
+    #[repr(C)]
+    struct Rlimit {
+        cur: u64,
+        max: u64,
+    }
+    #[cfg(target_os = "linux")]
+    const RLIMIT_NOFILE: i32 = 7;
+    #[cfg(not(target_os = "linux"))]
+    const RLIMIT_NOFILE: i32 = 8;
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+    }
+    let mut r = Rlimit { cur: 0, max: 0 };
+    // SAFETY: getrlimit writes through a valid, properly aligned pointer
+    // to a #[repr(C)] struct matching the libc layout (rlim_t is u64 on
+    // every supported unix); the return value is checked.
+    if unsafe { getrlimit(RLIMIT_NOFILE, &mut r) } != 0 {
+        return 1024; // conservative guess; the bench scales down
+    }
+    if r.cur >= want {
+        return r.cur;
+    }
+    // try the target, then macOS's OPEN_MAX fallback, capped at the hard
+    // limit in both cases
+    for cur in [want.min(r.max), 10240.min(r.max)] {
+        let attempt = Rlimit { cur, max: r.max };
+        // SAFETY: setrlimit reads through a valid pointer to the same
+        // #[repr(C)] struct; cur <= max so the call is well-formed, and
+        // the return value is checked (failure falls through).
+        if unsafe { setrlimit(RLIMIT_NOFILE, &attempt) } == 0 {
+            return cur;
+        }
+    }
+    r.cur
+}
+
+#[cfg(not(unix))]
+fn raise_nofile(_want: u64) -> u64 {
+    1024
+}
+
+/// Resident set size in KB from /proc/self/status (Linux); None elsewhere.
+fn rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmRSS:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+/// OS threads in this process (Linux); None elsewhere.
+fn process_threads() -> Option<usize> {
+    std::fs::read_dir("/proc/self/task").ok().map(|d| d.count())
+}
+
+/// Stub backend: fixed moments, no compute — the bench isolates the
+/// connection layer, not the forward pass.
+struct StubBackend;
+
+impl Backend for StubBackend {
+    fn infer(&mut self, x: &Tensor) -> pfp::Result<(Tensor, Tensor)> {
+        let b = x.dim(0);
+        Ok((Tensor::full(vec![b, 4], 0.5), Tensor::full(vec![b, 4], 1e-3)))
+    }
+
+    fn name(&self) -> String {
+        "stub".into()
+    }
+}
+
+/// One ping roundtrip on a bare (un-cloned) stream: a connection costs
+/// exactly two fds here — the client socket and the server's accepted
+/// socket.
+fn ping(stream: &TcpStream) -> bool {
+    if (&*stream).write_all(b"{\"cmd\":\"ping\"}\n").is_err() {
+        return false;
+    }
+    let mut buf = [0u8; 256];
+    let mut seen = Vec::new();
+    loop {
+        match (&*stream).read(&mut buf) {
+            Ok(0) | Err(_) => return false,
+            Ok(n) => {
+                seen.extend_from_slice(&buf[..n]);
+                if seen.contains(&b'\n') {
+                    return std::str::from_utf8(&seen)
+                        .map(|s| s.contains("pong"))
+                        .unwrap_or(false);
+                }
+            }
+        }
+    }
+}
+
+/// Drive one pipelined connection: `n_reqs` requests with up to `window`
+/// in flight, per-request latency matched by response id. Returns
+/// (latencies_us, errors).
+fn drive_conn(addr: SocketAddr, n_reqs: usize, window: usize) -> (Vec<f64>, usize) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut wire = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    writeln!(wire, r#"{{"cmd":"hello","pipeline":true}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"hello\":true"), "handshake failed: {line}");
+
+    let input = [0.5f32; 4];
+    let mut sent_at: HashMap<u64, Instant> = HashMap::new();
+    let mut latencies = Vec::with_capacity(n_reqs);
+    let mut errors = 0usize;
+    let (mut sent, mut received) = (0u64, 0usize);
+    while received < n_reqs {
+        while (sent as usize) < n_reqs && sent_at.len() < window {
+            sent_at.insert(sent, Instant::now());
+            writeln!(wire, "{}", protocol::request_json(sent, "stub", &input)).unwrap();
+            sent += 1;
+        }
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let resp = protocol::Response::parse(line.trim()).unwrap();
+        if let Some(t0) = sent_at.remove(&resp.id) {
+            latencies.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        if resp.result.is_err() {
+            errors += 1;
+        }
+        received += 1;
+    }
+    (latencies, errors)
+}
+
+fn main() {
+    let fast = std::env::var("PFP_BENCH_FAST").as_deref() == Ok("1");
+    let idle_target: usize = if fast { 256 } else { 5000 };
+    let active: usize = if fast { 16 } else { 200 };
+    let reqs_per_conn: usize = if fast { 30 } else { 50 };
+    let drivers: usize = 8;
+    let window: usize = 4;
+    let io_threads: usize = 4;
+
+    // 2 fds per idle conn (client + accepted) + 3 per active conn (the
+    // driver clones its stream) + headroom for the process itself
+    let want = (2 * idle_target + 3 * active + 128) as u64;
+    let got = raise_nofile(want);
+    let idle = if got >= want {
+        idle_target
+    } else {
+        let spare = (got as usize).saturating_sub(3 * active + 128);
+        let scaled = (spare / 2).min(idle_target);
+        println!(
+            "fd limit {got} < {want}: scaling idle fleet {idle_target} -> {scaled}"
+        );
+        scaled
+    };
+
+    let mut cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        pipeline_depth: 32,
+        io_threads,
+        max_connections: idle + active + 8,
+        pool_threads: 2,
+        ..Default::default()
+    };
+    cfg.batcher = BatcherConfig {
+        max_batch: 64,
+        max_wait: Duration::from_millis(1),
+        capacity: 8192,
+    };
+    let mut svc = Service::new(cfg);
+    svc.register("stub", 4, Box::new(StubBackend));
+    let svc = Arc::new(svc);
+    let server = Server::bind(svc.clone()).unwrap();
+    let addr = server.addr;
+    let run_handle = std::thread::spawn(move || server.run());
+
+    // warm one connection so every IO thread and lane is up, then baseline
+    let admin = TcpStream::connect(addr).unwrap();
+    admin.set_nodelay(true).unwrap();
+    assert!(ping(&admin), "warm-up ping failed");
+    let threads_baseline = process_threads();
+    let rss_baseline = rss_kb();
+
+    // ---- idle fleet -------------------------------------------------------
+    let t0 = Instant::now();
+    let mut idle_conns = Vec::with_capacity(idle);
+    for i in 0..idle {
+        let s = TcpStream::connect(addr)
+            .unwrap_or_else(|e| panic!("idle conn {i}/{idle} failed: {e}"));
+        s.set_nodelay(true).unwrap();
+        idle_conns.push(s);
+    }
+    for (i, s) in idle_conns.iter().enumerate() {
+        assert!(ping(s), "idle conn {i} not serviced");
+    }
+    let idle_setup = t0.elapsed();
+    let threads_idle = process_threads();
+    let rss_idle = rss_kb();
+    if let (Some(b), Some(a)) = (threads_baseline, threads_idle) {
+        assert!(
+            a.saturating_sub(b) < 16,
+            "{idle} idle conns grew threads {b} -> {a}: per-connection threads are back"
+        );
+    }
+    if let (Some(b), Some(a)) = (rss_baseline, rss_idle) {
+        assert!(
+            a.saturating_sub(b) < 100 * 1024,
+            "{idle} idle conns grew RSS {b}KB -> {a}KB"
+        );
+    }
+
+    // ---- active fleet -----------------------------------------------------
+    let t1 = Instant::now();
+    let mut handles = Vec::new();
+    for d in 0..drivers {
+        let mine = (active + drivers - 1 - d) / drivers; // spread remainder
+        handles.push(std::thread::spawn(move || {
+            let mut lat = Vec::new();
+            let mut errs = 0usize;
+            for _ in 0..mine {
+                let (l, e) = drive_conn(addr, reqs_per_conn, window);
+                lat.extend(l);
+                errs += e;
+            }
+            (lat, errs)
+        }));
+    }
+    let mut latencies = Vec::with_capacity(active * reqs_per_conn);
+    let mut errors = 0usize;
+    for h in handles {
+        let (l, e) = h.join().expect("driver thread panicked");
+        latencies.extend(l);
+        errors += e;
+    }
+    let active_wall = t1.elapsed().as_secs_f64();
+    let total_reqs = latencies.len();
+    assert_eq!(errors, 0, "active fleet saw {errors} error responses");
+    assert_eq!(total_reqs, active * reqs_per_conn);
+
+    let threads_after = process_threads();
+    let rss_after = rss_kb();
+    if let (Some(b), Some(a)) = (threads_baseline, threads_after) {
+        assert!(
+            a.saturating_sub(b) < 16,
+            "active fleet grew threads {b} -> {a}"
+        );
+    }
+
+    let p50 = stats::percentile(&latencies, 50.0);
+    let p99 = stats::percentile(&latencies, 99.0);
+    let p999 = stats::percentile(&latencies, 99.9);
+    let rps = total_reqs as f64 / active_wall;
+
+    println!(
+        "idle fleet:   {idle} conns up+pinged in {:.2}s on {io_threads} IO threads",
+        idle_setup.as_secs_f64()
+    );
+    println!(
+        "active fleet: {active} conns x {reqs_per_conn} reqs (window {window}) \
+         = {total_reqs} reqs in {active_wall:.2}s ({rps:.0} req/s), 0 errors"
+    );
+    println!(
+        "latency us:   p50 {p50:.0}  p99 {p99:.0}  p99.9 {p999:.0}"
+    );
+    println!(
+        "threads:      baseline {:?} idle {:?} after {:?}",
+        threads_baseline, threads_idle, threads_after
+    );
+    println!(
+        "rss kb:       baseline {:?} idle {:?} after {:?}",
+        rss_baseline, rss_idle, rss_after
+    );
+
+    let opt = |v: Option<u64>| Json::Num(v.map(|x| x as f64).unwrap_or(-1.0));
+    let json = Json::obj(vec![
+        ("idle_conns", Json::Num(idle as f64)),
+        ("active_conns", Json::Num(active as f64)),
+        ("io_threads", Json::Num(io_threads as f64)),
+        ("requests", Json::Num(total_reqs as f64)),
+        ("errors", Json::Num(errors as f64)),
+        ("req_per_s", Json::Num(rps)),
+        ("latency_p50_us", Json::Num(p50)),
+        ("latency_p99_us", Json::Num(p99)),
+        ("latency_p999_us", Json::Num(p999)),
+        ("idle_setup_s", Json::Num(idle_setup.as_secs_f64())),
+        ("rss_baseline_kb", opt(rss_baseline)),
+        ("rss_idle_kb", opt(rss_idle)),
+        ("rss_after_kb", opt(rss_after)),
+        (
+            "threads_baseline",
+            Json::Num(threads_baseline.map(|t| t as f64).unwrap_or(-1.0)),
+        ),
+        (
+            "threads_after",
+            Json::Num(threads_after.map(|t| t as f64).unwrap_or(-1.0)),
+        ),
+    ]);
+    println!("\nBENCH_conn.json {}", json.dump());
+    if let Err(e) = std::fs::write("BENCH_conn.json", json.dump()) {
+        eprintln!("could not write BENCH_conn.json: {e}");
+    }
+
+    // clean shutdown: drop the fleet, then stop the server via the warm conn
+    drop(idle_conns);
+    (&admin).write_all(b"{\"cmd\":\"shutdown\"}\n").ok();
+    let mut buf = [0u8; 256];
+    let _ = (&admin).read(&mut buf);
+    drop(admin);
+    let _ = run_handle.join();
+}

@@ -19,25 +19,32 @@
 //! unbounded latency).
 
 use std::collections::VecDeque;
-use std::sync::mpsc::Sender;
+use std::sync::atomic::AtomicUsize;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::protocol::{ProtoVersion, Response};
+use crate::coordinator::protocol::ProtoVersion;
+use crate::coordinator::server::Reply;
 use crate::registry::ModelVersion;
 
-/// A queued unit of work: one request row + its response channel.
+/// A queued unit of work: one request row + its response sink.
 pub struct WorkItem {
     pub id: u64,
     pub input: Vec<f32>,
     pub enqueued: Instant,
-    pub reply: Sender<Response>,
+    /// Where the response goes: an mpsc channel (in-process callers) or
+    /// a reactor connection's bounded output buffer (TCP callers).
+    pub reply: Reply,
     /// Protocol generation the request arrived under (its response is
     /// serialized in kind).
     pub proto: ProtoVersion,
     /// Registry lanes: the model version pinned at submit time. `None` on
     /// legacy `register()`ed lanes.
     pub model: Option<Arc<ModelVersion>>,
+    /// The owning lane's in-flight gauge (per-tenant admission control);
+    /// decremented by whoever delivers this item's response. `None` when
+    /// the submit path predates the lane gauge (tests).
+    pub lane_inflight: Option<Arc<AtomicUsize>>,
 }
 
 impl WorkItem {
@@ -196,6 +203,7 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::protocol::Response;
     use crate::registry;
     use std::sync::mpsc::channel;
 
@@ -206,9 +214,10 @@ mod tests {
                 id,
                 input: vec![0.0; 4],
                 enqueued: Instant::now(),
-                reply: tx,
+                reply: Reply::Channel(tx),
                 proto: ProtoVersion::V0,
                 model: None,
+                lane_inflight: None,
             },
             rx,
         )

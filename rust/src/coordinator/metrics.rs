@@ -1,11 +1,123 @@
-//! Serving metrics: counters + latency histogram, queryable in-band via
+//! Serving metrics: counters + latency histograms, queryable in-band via
 //! `{"cmd":"metrics"}`.
+//!
+//! Latency and pipelining-depth distributions are tracked by a
+//! lock-free [`Histogram`] (fixed log-linear buckets of atomics) rather
+//! than the old `Mutex<Vec<f64>>` reservoir: recording is a few relaxed
+//! atomic ops with no lock, no allocation, and no 100k-sample cap, so
+//! the IO threads and lane workers can record from any context — and
+//! tail quantiles (p99, p99.9) are exact to bucket resolution instead
+//! of being at the mercy of reservoir eviction.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 
 use crate::util::json::Json;
-use crate::util::stats;
+
+/// Linear buckets below this value record integers exactly.
+const LINEAR: usize = 64;
+/// 64 linear buckets + 8 sub-buckets per power of two for msb 6..=63.
+const BUCKETS: usize = LINEAR + (64 - 6) * 8;
+
+/// Lock-free log-linear histogram of non-negative values.
+///
+/// Values below [`LINEAR`] land in exact unit-width buckets; above
+/// that, each power of two is split into 8 sub-buckets, bounding the
+/// relative quantile error at 1/16 (6.25%) while keeping the whole
+/// table at 528 counters. Bucket representatives are chosen so common
+/// exact values round-trip (e.g. 100, 200 report as 100, 200).
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+fn bucket_index(v: u64) -> usize {
+    if v < LINEAR as u64 {
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros() as usize; // >= 6
+        let sub = ((v >> (msb - 3)) & 7) as usize;
+        LINEAR + (msb - 6) * 8 + sub
+    }
+}
+
+/// Midpoint of the bucket's value range (its reported quantile value).
+fn representative(idx: usize) -> f64 {
+    if idx < LINEAR {
+        idx as f64
+    } else {
+        let rel = idx - LINEAR;
+        let msb = rel / 8 + 6;
+        let sub = rel % 8;
+        let lower = ((8 + sub) as u64) << (msb - 3);
+        let width = 1u64 << (msb - 3);
+        (lower + width / 2) as f64
+    }
+}
+
+impl Histogram {
+    /// Record one observation. Negative/NaN inputs clamp to 0.
+    pub fn record(&self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v as u64 } else { 0 };
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max.load(Ordering::Relaxed) as f64
+    }
+
+    /// Quantile by cumulative bucket walk; `p` in [0, 100]. Empty
+    /// histograms report 0. `p >= 100` reports the exact maximum.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        if p >= 100.0 {
+            return self.max();
+        }
+        let mut rank = ((p / 100.0) * total as f64).ceil() as u64;
+        rank = rank.clamp(1, total);
+        let mut seen = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return representative(idx);
+            }
+        }
+        // Racing writers can make `count` momentarily exceed the bucket
+        // sums; the max is the only honest answer then.
+        self.max()
+    }
+}
 
 #[derive(Default)]
 pub struct Metrics {
@@ -23,6 +135,19 @@ pub struct Metrics {
     pub connections: AtomicU64,
     /// Connections turned away at accept time (admission limit).
     pub conns_rejected: AtomicU64,
+    /// Connections dropped because the peer stopped draining responses:
+    /// the bounded output buffer overflowed, or a writability stall
+    /// outlived the configured deadline. The slow-client kill switch.
+    pub conns_dropped_slow: AtomicU64,
+    /// Connections closed because a socket option (nonblocking mode,
+    /// TCP_NODELAY) could not be applied at accept time — serving on a
+    /// half-configured socket is worse than a counted, logged reject.
+    pub conns_setup_failed: AtomicU64,
+    /// Requests shed by per-tenant (per-model) admission control before
+    /// reaching a lane queue.
+    pub tenant_rejected: AtomicU64,
+    /// Protocol lines rejected for exceeding the line-length cap.
+    pub lines_oversized: AtomicU64,
     /// Cold plan compiles: a backend lowered the network for a batch
     /// size it had not served yet. Steady state this stops moving — every
     /// batcher bucket is served from a cached compiled plan.
@@ -32,8 +157,8 @@ pub struct Metrics {
     /// exceeds the cache cap and buckets keep recompiling (cache thrash
     /// that was previously invisible).
     pub plan_cache_evictions: AtomicU64,
-    latencies_us: Mutex<Vec<f64>>, // end-to-end per request
-    conn_depth: Mutex<Vec<f64>>,   // per-connection in-flight depth at submit
+    latencies_us: Histogram, // end-to-end per request
+    conn_depth: Histogram,   // per-connection in-flight depth at submit
 }
 
 impl Metrics {
@@ -42,22 +167,13 @@ impl Metrics {
     }
 
     pub fn record_latency_us(&self, us: f64) {
-        let mut l = self.latencies_us.lock().unwrap();
-        // bounded reservoir: keep the most recent 100k
-        if l.len() >= 100_000 {
-            l.drain(..50_000);
-        }
-        l.push(us);
+        self.latencies_us.record(us);
     }
 
     /// Record the connection's in-flight depth observed when a request was
     /// admitted (the pipelining occupancy histogram).
     pub fn record_conn_depth(&self, depth: f64) {
-        let mut d = self.conn_depth.lock().unwrap();
-        if d.len() >= 100_000 {
-            d.drain(..50_000);
-        }
-        d.push(depth);
+        self.conn_depth.record(depth);
     }
 
     pub fn inc(counter: &AtomicU64) {
@@ -86,8 +202,8 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> Json {
-        let l = self.latencies_us.lock().unwrap();
-        let d = self.conn_depth.lock().unwrap();
+        let l = &self.latencies_us;
+        let d = &self.conn_depth;
         Json::obj(vec![
             ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
             ("responses", Json::Num(self.responses.load(Ordering::Relaxed) as f64)),
@@ -106,6 +222,22 @@ impl Metrics {
                 Json::Num(self.conns_rejected.load(Ordering::Relaxed) as f64),
             ),
             (
+                "conns_dropped_slow",
+                Json::Num(self.conns_dropped_slow.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "conns_setup_failed",
+                Json::Num(self.conns_setup_failed.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "tenant_rejected",
+                Json::Num(self.tenant_rejected.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "lines_oversized",
+                Json::Num(self.lines_oversized.load(Ordering::Relaxed) as f64),
+            ),
+            (
                 "plan_compiles",
                 Json::Num(self.plan_compiles.load(Ordering::Relaxed) as f64),
             ),
@@ -113,13 +245,14 @@ impl Metrics {
                 "plan_cache_evictions",
                 Json::Num(self.plan_cache_evictions.load(Ordering::Relaxed) as f64),
             ),
-            ("conn_depth_p50", Json::Num(stats::percentile(&d, 50.0))),
-            ("conn_depth_p95", Json::Num(stats::percentile(&d, 95.0))),
-            ("conn_depth_max", Json::Num(stats::percentile(&d, 100.0))),
-            ("latency_p50_us", Json::Num(stats::percentile(&l, 50.0))),
-            ("latency_p95_us", Json::Num(stats::percentile(&l, 95.0))),
-            ("latency_p99_us", Json::Num(stats::percentile(&l, 99.0))),
-            ("latency_mean_us", Json::Num(stats::mean(&l))),
+            ("conn_depth_p50", Json::Num(d.percentile(50.0))),
+            ("conn_depth_p95", Json::Num(d.percentile(95.0))),
+            ("conn_depth_max", Json::Num(d.max())),
+            ("latency_p50_us", Json::Num(l.percentile(50.0))),
+            ("latency_p95_us", Json::Num(l.percentile(95.0))),
+            ("latency_p99_us", Json::Num(l.percentile(99.0))),
+            ("latency_p999_us", Json::Num(l.percentile(99.9))),
+            ("latency_mean_us", Json::Num(l.mean())),
         ])
     }
 }
@@ -174,12 +307,99 @@ mod tests {
     }
 
     #[test]
-    fn reservoir_bounded() {
+    fn reactor_counters_surface_in_snapshot() {
+        let m = Metrics::new();
+        Metrics::inc(&m.conns_dropped_slow);
+        Metrics::add(&m.conns_setup_failed, 2);
+        Metrics::add(&m.tenant_rejected, 3);
+        Metrics::add(&m.lines_oversized, 4);
+        let snap = m.snapshot();
+        assert_eq!(snap.num_field("conns_dropped_slow").unwrap(), 1.0);
+        assert_eq!(snap.num_field("conns_setup_failed").unwrap(), 2.0);
+        assert_eq!(snap.num_field("tenant_rejected").unwrap(), 3.0);
+        assert_eq!(snap.num_field("lines_oversized").unwrap(), 4.0);
+    }
+
+    #[test]
+    fn histogram_small_values_are_exact() {
+        let h = Histogram::default();
+        for v in 0..LINEAR as u64 {
+            h.record(v as f64);
+        }
+        // Each recorded integer < LINEAR must round-trip exactly.
+        for v in 0..LINEAR as u64 {
+            let p = ((v + 1) as f64 / LINEAR as f64) * 100.0;
+            assert_eq!(h.percentile(p), v as f64, "p{p} of 0..{LINEAR}");
+        }
+        assert_eq!(h.max(), (LINEAR - 1) as f64);
+    }
+
+    #[test]
+    fn histogram_large_values_bounded_relative_error() {
+        let h = Histogram::default();
+        let vals = [
+            1_000.0,
+            10_000.0,
+            123_456.0,
+            5_000_000.0,
+            987_654_321.0,
+        ];
+        for &v in &vals {
+            let h1 = Histogram::default();
+            h1.record(v);
+            let got = h1.percentile(50.0);
+            let rel = (got - v).abs() / v;
+            assert!(rel <= 1.0 / 16.0, "value {v} reported as {got} (rel err {rel})");
+        }
+        for &v in &vals {
+            h.record(v);
+        }
+        assert_eq!(h.max(), 987_654_321.0, "max is tracked exactly");
+    }
+
+    #[test]
+    fn histogram_tail_quantiles_separate() {
+        let h = Histogram::default();
+        // 997 fast + 2 medium + 1 catastrophically slow request.
+        for _ in 0..997 {
+            h.record(100.0);
+        }
+        h.record(10_000.0);
+        h.record(10_000.0);
+        h.record(1_000_000.0);
+        assert_eq!(h.percentile(50.0), 100.0);
+        assert_eq!(h.percentile(99.0), 100.0);
+        let p999 = h.percentile(99.9);
+        assert!(
+            (9_000.0..=11_000.0).contains(&p999),
+            "p99.9 must surface the medium outliers, got {p999}"
+        );
+        assert_eq!(h.percentile(100.0), 1_000_000.0);
+    }
+
+    #[test]
+    fn histogram_unbounded_volume_stays_fixed_size() {
         let m = Metrics::new();
         for i in 0..120_000 {
             m.record_latency_us(i as f64);
         }
-        // must not grow unboundedly
-        assert!(m.latencies_us.lock().unwrap().len() <= 100_000);
+        // The histogram has no reservoir to overflow: every sample
+        // counts, storage is a fixed bucket table.
+        assert_eq!(m.latencies_us.count(), 120_000);
+        let p50 = m.latencies_us.percentile(50.0);
+        let rel = (p50 - 60_000.0).abs() / 60_000.0;
+        assert!(rel <= 1.0 / 16.0, "p50 of 0..120k was {p50}");
+    }
+
+    #[test]
+    fn histogram_handles_junk_input() {
+        let h = Histogram::default();
+        h.record(f64::NAN);
+        h.record(-5.0);
+        h.record(f64::INFINITY);
+        assert_eq!(h.count(), 3);
+        // NaN and negatives clamp to 0; +inf clamps to 0 too (not
+        // finite) rather than poisoning the max.
+        assert_eq!(h.max(), 0.0);
     }
 }

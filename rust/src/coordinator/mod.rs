@@ -13,11 +13,14 @@
 //! * [`metrics`] — latency histograms + counters (including an in-flight
 //!   gauge and a per-connection pipeline-depth histogram), queryable
 //!   in-band;
-//! * [`server`] — std::net TCP front end over a bounded connection-worker
-//!   pool; each connection is split into a non-blocking reader and a
-//!   channel-fed writer so one client can keep `pipeline_depth` requests
-//!   in flight and receive responses out of order (tagged by `id`), plus
-//!   a worker thread per model;
+//! * [`server`] — event-driven TCP front end: a small fixed set of IO
+//!   threads own every socket through a dependency-free epoll/kqueue
+//!   [`reactor`], inbound bytes are framed by an incremental [`codec`],
+//!   and responses flush through bounded per-connection output buffers
+//!   driven by writability events (slow clients are back-pressured, then
+//!   disconnected) — one client can keep `pipeline_depth` requests in
+//!   flight and receive responses out of order (tagged by `id`), plus a
+//!   worker thread per model;
 //! * backends — native PFP operators or PJRT-compiled AOT artifacts, plus
 //!   an SVI backend (N sampled passes) for baseline comparisons.
 //!
@@ -26,14 +29,16 @@
 //! and OOD flagging against a calibrated MI threshold.
 
 pub mod batcher;
+pub mod codec;
 pub mod metrics;
 pub mod protocol;
+pub mod reactor;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::Metrics;
 pub use protocol::{Envelope, ProtoVersion, Request, Response, PROTOCOL_VERSION};
-pub use server::{Server, ServerConfig, Service};
+pub use server::{Reply, Server, ServerConfig, Service};
 
 use std::sync::Arc;
 

@@ -227,6 +227,19 @@ pub struct Response {
 }
 
 impl Response {
+    /// A front-end-generated error response (depth overrun, load shed,
+    /// submit failure) carrying no timing and no model version.
+    pub fn error(id: u64, msg: impl Into<String>, proto: ProtoVersion) -> Self {
+        Self {
+            id,
+            result: Err(msg.into()),
+            queue_us: 0,
+            infer_us: 0,
+            proto,
+            model_version: 0,
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         let body = match &self.result {
             Ok(p) => {

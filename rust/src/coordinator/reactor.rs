@@ -1,0 +1,792 @@
+//! Dependency-free readiness polling for the connection reactor.
+//!
+//! `mio` is not in the offline crate set, so this module declares the
+//! handful of syscalls the event loop needs directly, the same way
+//! `util/mmap.rs` declares `mmap`: on unix targets `std` already links
+//! libc, so `extern "C"` declarations resolve without any build-time
+//! dependency. Three small types are exported:
+//!
+//! * [`Poller`] — an epoll (Linux) / kqueue (macOS, iOS) instance.
+//!   Level-triggered on both backends: a readiness bit stays set until
+//!   the condition is drained, so a short read never loses data and the
+//!   loop never needs edge-triggered bookkeeping.
+//! * [`Events`] — a reusable, pre-sized event buffer so the steady-state
+//!   [`Poller::wait`] call allocates nothing.
+//! * [`Waker`] — a nonblocking self-pipe registered with the poller;
+//!   any thread can [`Waker::wake`] a blocked `wait` call (used for
+//!   cross-thread reply delivery, new-connection handoff, and prompt
+//!   shutdown — this is what retires the old 200ms read-timeout tick).
+//!
+//! Other unix flavors compile but report the server as unsupported at
+//! [`Poller::new`] (the FreeBSD `kevent` layout differs from Apple's;
+//! gating beats silently declaring the wrong struct). Non-unix targets
+//! get the same stub.
+
+#![allow(clippy::new_without_default)]
+
+use std::io;
+use std::time::Duration;
+
+/// One readiness notification, translated out of the OS-specific event
+/// struct. Error/hangup conditions are folded into `readable` so the
+/// subsequent read observes the EOF/error — the loop has no separate
+/// error path to forget.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// Reusable event buffer: sized once, filled by every [`Poller::wait`].
+pub struct Events {
+    /// Translated events, rebuilt in place each `wait`.
+    list: Vec<Event>,
+    /// OS-native scratch, written by the kernel.
+    #[cfg(any(target_os = "linux", target_os = "macos", target_os = "ios"))]
+    raw: Vec<sys::RawEvent>,
+    #[cfg(not(any(target_os = "linux", target_os = "macos", target_os = "ios")))]
+    _cap: usize,
+}
+
+impl Events {
+    pub fn with_capacity(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self {
+            list: Vec::with_capacity(cap),
+            #[cfg(any(target_os = "linux", target_os = "macos", target_os = "ios"))]
+            raw: vec![sys::RawEvent::default(); cap],
+            #[cfg(not(any(target_os = "linux", target_os = "macos", target_os = "ios")))]
+            _cap: cap,
+        }
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, Event> {
+        self.list.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.list.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.list.is_empty()
+    }
+}
+
+impl<'a> IntoIterator for &'a Events {
+    type Item = &'a Event;
+    type IntoIter = std::slice::Iter<'a, Event>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.list.iter()
+    }
+}
+
+/// Clamp an optional timeout to whole milliseconds, rounding up so a
+/// 100µs deadline polls after 1ms rather than spinning at 0ms.
+#[cfg(any(target_os = "linux", target_os = "macos", target_os = "ios"))]
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        Some(d) => {
+            let mut ms = d.as_millis();
+            if d.subsec_nanos() % 1_000_000 != 0 {
+                ms += 1;
+            }
+            if ms > i32::MAX as u128 {
+                i32::MAX
+            } else {
+                ms as i32
+            }
+        }
+    }
+}
+
+const EINTR: i32 = 4;
+
+fn last_errno() -> i32 {
+    io::Error::last_os_error().raw_os_error().unwrap_or(0)
+}
+
+// ---------------------------------------------------------------------------
+// Linux: epoll
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use std::ffi::c_void;
+
+    pub const EPOLL_CLOEXEC: i32 = 0x80000;
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_DEL: i32 = 2;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    pub const O_NONBLOCK: i32 = 0o4000;
+    pub const O_CLOEXEC: i32 = 0o2000000;
+
+    /// Kernel UAPI `struct epoll_event`: packed on x86_64 only (the
+    /// 32-bit-era layout the kernel kept for compatibility); natural
+    /// alignment everywhere else.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy, Default)]
+    pub struct RawEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: i32) -> i32;
+        pub fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut RawEvent) -> i32;
+        pub fn epoll_wait(epfd: i32, events: *mut RawEvent, maxevents: i32, timeout: i32) -> i32;
+        pub fn pipe2(fds: *mut i32, flags: i32) -> i32;
+        pub fn read(fd: i32, buf: *mut c_void, count: usize) -> isize;
+        pub fn write(fd: i32, buf: *const c_void, count: usize) -> isize;
+        pub fn close(fd: i32) -> i32;
+    }
+}
+
+/// epoll-backed poller. One instance per IO thread; each fd belongs to
+/// exactly one poller.
+#[cfg(target_os = "linux")]
+pub struct Poller {
+    epfd: i32,
+}
+
+// SAFETY: the wrapped epoll fd is a kernel object; `epoll_ctl` and
+// `epoll_wait` are documented thread-safe on the same epfd, and the fd
+// is closed exactly once, in Drop. No interior pointers.
+#[cfg(target_os = "linux")]
+unsafe impl Send for Poller {}
+// SAFETY: see Send — all methods take `&self` and go straight to
+// thread-safe syscalls on an fd that outlives every borrow.
+#[cfg(target_os = "linux")]
+unsafe impl Sync for Poller {}
+
+#[cfg(target_os = "linux")]
+impl Poller {
+    pub fn new() -> io::Result<Self> {
+        // SAFETY: plain FFI call with a valid flag; the result is
+        // checked for the error sentinel before use.
+        let epfd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Self { epfd })
+    }
+
+    fn interest_mask(readable: bool, writable: bool) -> u32 {
+        // ERR/HUP are always delivered regardless of the mask; RDHUP is
+        // requested explicitly so half-closed peers wake the read path.
+        let mut mask = sys::EPOLLRDHUP;
+        if readable {
+            mask |= sys::EPOLLIN;
+        }
+        if writable {
+            mask |= sys::EPOLLOUT;
+        }
+        mask
+    }
+
+    fn ctl(&self, op: i32, fd: i32, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        let mut ev = sys::RawEvent { events: Self::interest_mask(readable, writable), data: token };
+        // SAFETY: `ev` is a live, properly initialized RawEvent for the
+        // duration of the call; `fd` is owned by the caller. Return
+        // value is checked.
+        let rc = unsafe { sys::epoll_ctl(self.epfd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Register `fd` under `token` with the given interest set.
+    pub fn add(&self, fd: i32, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, token, readable, writable)
+    }
+
+    /// Replace the interest set of an already-registered fd.
+    pub fn modify(&self, fd: i32, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, token, readable, writable)
+    }
+
+    /// Deregister `fd`. Must be called before the fd is closed.
+    pub fn delete(&self, fd: i32) -> io::Result<()> {
+        let mut ev = sys::RawEvent::default();
+        // SAFETY: pre-2.6.9 kernels required a non-null event pointer
+        // for EPOLL_CTL_DEL; passing a live dummy satisfies both eras.
+        // Return value is checked.
+        let rc = unsafe { sys::epoll_ctl(self.epfd, sys::EPOLL_CTL_DEL, fd, &mut ev) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Block until at least one event, the timeout, or a wakeup.
+    /// `None` blocks indefinitely. EINTR is surfaced as an empty set.
+    pub fn wait(&self, events: &mut Events, timeout: Option<Duration>) -> io::Result<()> {
+        events.list.clear();
+        let ms = timeout_ms(timeout);
+        // SAFETY: `raw` is a live, len ≥ 1 buffer for the duration of
+        // the call and the kernel writes at most `capacity` entries;
+        // the return count is checked before the buffer is read.
+        let n = unsafe {
+            sys::epoll_wait(self.epfd, events.raw.as_mut_ptr(), events.raw.len() as i32, ms)
+        };
+        if n < 0 {
+            if last_errno() == EINTR {
+                return Ok(());
+            }
+            return Err(io::Error::last_os_error());
+        }
+        for i in 0..n as usize {
+            let raw = events.raw[i];
+            let bits = raw.events;
+            events.list.push(Event {
+                token: raw.data,
+                readable: bits & (sys::EPOLLIN | sys::EPOLLERR | sys::EPOLLHUP | sys::EPOLLRDHUP)
+                    != 0,
+                writable: bits & (sys::EPOLLOUT | sys::EPOLLERR | sys::EPOLLHUP) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for Poller {
+    fn drop(&mut self) {
+        // SAFETY: closing an fd this struct exclusively owns; nothing
+        // uses it after Drop.
+        unsafe { sys::close(self.epfd) };
+    }
+}
+
+// ---------------------------------------------------------------------------
+// macOS / iOS: kqueue
+// ---------------------------------------------------------------------------
+
+#[cfg(any(target_os = "macos", target_os = "ios"))]
+mod sys {
+    use std::ffi::c_void;
+
+    pub const EVFILT_READ: i16 = -1;
+    pub const EVFILT_WRITE: i16 = -2;
+    pub const EV_ADD: u16 = 0x1;
+    pub const EV_DELETE: u16 = 0x2;
+    pub const EV_ENABLE: u16 = 0x4;
+    pub const EV_DISABLE: u16 = 0x8;
+    pub const EV_EOF: u16 = 0x8000;
+
+    pub const F_SETFD: i32 = 2;
+    pub const F_SETFL: i32 = 4;
+    pub const FD_CLOEXEC: i32 = 1;
+    pub const O_NONBLOCK: i32 = 0x4;
+
+    /// Apple's `struct kevent` (differs from FreeBSD's — which is why
+    /// other BSDs are gated off rather than guessed at).
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct RawEvent {
+        pub ident: usize,
+        pub filter: i16,
+        pub flags: u16,
+        pub fflags: u32,
+        pub data: isize,
+        pub udata: *mut c_void,
+    }
+
+    impl Default for RawEvent {
+        fn default() -> Self {
+            Self {
+                ident: 0,
+                filter: 0,
+                flags: 0,
+                fflags: 0,
+                data: 0,
+                udata: std::ptr::null_mut(),
+            }
+        }
+    }
+
+    // SAFETY: `udata` is a token smuggled as a pointer-sized integer,
+    // never dereferenced; RawEvent is plain data.
+    unsafe impl Send for RawEvent {}
+    // SAFETY: see Send.
+    unsafe impl Sync for RawEvent {}
+
+    #[repr(C)]
+    pub struct Timespec {
+        pub tv_sec: i64,
+        pub tv_nsec: i64,
+    }
+
+    extern "C" {
+        pub fn kqueue() -> i32;
+        pub fn kevent(
+            kq: i32,
+            changelist: *const RawEvent,
+            nchanges: i32,
+            eventlist: *mut RawEvent,
+            nevents: i32,
+            timeout: *const Timespec,
+        ) -> i32;
+        pub fn pipe(fds: *mut i32) -> i32;
+        pub fn fcntl(fd: i32, cmd: i32, arg: i32) -> i32;
+        pub fn read(fd: i32, buf: *mut c_void, count: usize) -> isize;
+        pub fn write(fd: i32, buf: *const c_void, count: usize) -> isize;
+        pub fn close(fd: i32) -> i32;
+    }
+}
+
+/// kqueue-backed poller. Read and write filters are registered together
+/// (enabled or disabled per the interest set) so `modify` is a pure
+/// enable/disable toggle.
+#[cfg(any(target_os = "macos", target_os = "ios"))]
+pub struct Poller {
+    kq: i32,
+}
+
+// SAFETY: the wrapped kqueue fd is a kernel object; `kevent` is
+// thread-safe on the same kq, and the fd is closed exactly once, in
+// Drop. No interior pointers.
+#[cfg(any(target_os = "macos", target_os = "ios"))]
+unsafe impl Send for Poller {}
+// SAFETY: see Send — all methods take `&self` and go straight to
+// thread-safe syscalls on an fd that outlives every borrow.
+#[cfg(any(target_os = "macos", target_os = "ios"))]
+unsafe impl Sync for Poller {}
+
+#[cfg(any(target_os = "macos", target_os = "ios"))]
+impl Poller {
+    pub fn new() -> io::Result<Self> {
+        // SAFETY: plain FFI call, result checked before use.
+        let kq = unsafe { sys::kqueue() };
+        if kq < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Self { kq })
+    }
+
+    fn submit(&self, changes: &[sys::RawEvent]) -> io::Result<()> {
+        // SAFETY: `changes` is a live slice for the duration of the
+        // call; no eventlist is passed (nevents = 0). Return checked.
+        let rc = unsafe {
+            sys::kevent(
+                self.kq,
+                changes.as_ptr(),
+                changes.len() as i32,
+                std::ptr::null_mut(),
+                0,
+                std::ptr::null(),
+            )
+        };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    fn interest(fd: i32, token: u64, readable: bool, writable: bool) -> [sys::RawEvent; 2] {
+        let ev = |filter: i16, on: bool| sys::RawEvent {
+            ident: fd as usize,
+            filter,
+            flags: sys::EV_ADD | if on { sys::EV_ENABLE } else { sys::EV_DISABLE },
+            fflags: 0,
+            data: 0,
+            udata: token as *mut std::ffi::c_void,
+        };
+        [ev(sys::EVFILT_READ, readable), ev(sys::EVFILT_WRITE, writable)]
+    }
+
+    pub fn add(&self, fd: i32, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        self.submit(&Self::interest(fd, token, readable, writable))
+    }
+
+    pub fn modify(&self, fd: i32, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        self.submit(&Self::interest(fd, token, readable, writable))
+    }
+
+    pub fn delete(&self, fd: i32) -> io::Result<()> {
+        let mk = |filter: i16| sys::RawEvent {
+            ident: fd as usize,
+            filter,
+            flags: sys::EV_DELETE,
+            fflags: 0,
+            data: 0,
+            udata: std::ptr::null_mut(),
+        };
+        // A filter that was never activated reports ENOENT on delete;
+        // deregistering per-filter and ignoring errors keeps `delete`
+        // idempotent like the epoll path.
+        let _ = self.submit(&[mk(sys::EVFILT_READ)]);
+        let _ = self.submit(&[mk(sys::EVFILT_WRITE)]);
+        Ok(())
+    }
+
+    pub fn wait(&self, events: &mut Events, timeout: Option<Duration>) -> io::Result<()> {
+        events.list.clear();
+        let ts;
+        let ts_ptr = match timeout {
+            None => std::ptr::null(),
+            Some(d) => {
+                ts = sys::Timespec {
+                    tv_sec: d.as_secs() as i64,
+                    tv_nsec: d.subsec_nanos() as i64,
+                };
+                &ts as *const sys::Timespec
+            }
+        };
+        // SAFETY: `raw` is a live, len ≥ 1 buffer for the duration of
+        // the call and the kernel writes at most `nevents` entries; the
+        // return count is checked before the buffer is read. `ts`
+        // outlives the call when non-null.
+        let n = unsafe {
+            sys::kevent(
+                self.kq,
+                std::ptr::null(),
+                0,
+                events.raw.as_mut_ptr(),
+                events.raw.len() as i32,
+                ts_ptr,
+            )
+        };
+        if n < 0 {
+            if last_errno() == EINTR {
+                return Ok(());
+            }
+            return Err(io::Error::last_os_error());
+        }
+        for i in 0..n as usize {
+            let raw = events.raw[i];
+            let eof = raw.flags & sys::EV_EOF != 0;
+            events.list.push(Event {
+                token: raw.udata as u64,
+                readable: raw.filter == sys::EVFILT_READ || eof,
+                writable: raw.filter == sys::EVFILT_WRITE,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(any(target_os = "macos", target_os = "ios"))]
+impl Drop for Poller {
+    fn drop(&mut self) {
+        // SAFETY: closing an fd this struct exclusively owns; nothing
+        // uses it after Drop.
+        unsafe { sys::close(self.kq) };
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Waker: nonblocking self-pipe (both supported platforms)
+// ---------------------------------------------------------------------------
+
+/// Cross-thread wakeup for a blocked [`Poller::wait`].
+///
+/// The read end is registered with the poller (level-triggered: a
+/// buffered byte keeps the poller hot until drained, so a wake posted
+/// between `wait` calls is never lost); any thread writes to the write
+/// end to interrupt the wait. Both ends are nonblocking — a full pipe
+/// just means a wakeup is already pending, which is exactly the
+/// semantic `wake` wants.
+#[cfg(any(target_os = "linux", target_os = "macos", target_os = "ios"))]
+pub struct Waker {
+    read_fd: i32,
+    write_fd: i32,
+}
+
+// SAFETY: the two pipe fds are kernel objects; `read`/`write` on
+// distinct (or even the same) fds are thread-safe, and each fd is
+// closed exactly once, in Drop.
+#[cfg(any(target_os = "linux", target_os = "macos", target_os = "ios"))]
+unsafe impl Send for Waker {}
+// SAFETY: see Send — `wake`/`drain` take `&self` and are single
+// syscalls on fds that outlive every borrow.
+#[cfg(any(target_os = "linux", target_os = "macos", target_os = "ios"))]
+unsafe impl Sync for Waker {}
+
+#[cfg(any(target_os = "linux", target_os = "macos", target_os = "ios"))]
+impl Waker {
+    #[cfg(target_os = "linux")]
+    pub fn new() -> io::Result<Self> {
+        let mut fds = [-1i32; 2];
+        // SAFETY: `fds` is a live 2-slot buffer; pipe2 fills both on
+        // success. Return value is checked.
+        let rc = unsafe { sys::pipe2(fds.as_mut_ptr(), sys::O_NONBLOCK | sys::O_CLOEXEC) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Self { read_fd: fds[0], write_fd: fds[1] })
+    }
+
+    #[cfg(any(target_os = "macos", target_os = "ios"))]
+    pub fn new() -> io::Result<Self> {
+        let mut fds = [-1i32; 2];
+        // SAFETY: `fds` is a live 2-slot buffer; pipe fills both on
+        // success. Return value is checked.
+        let rc = unsafe { sys::pipe(fds.as_mut_ptr()) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        for fd in fds {
+            // SAFETY: plain fcntl on fds we just created; macOS has no
+            // pipe2, so nonblocking/cloexec are set after the fact (the
+            // momentary race with exec is acceptable for a server that
+            // never forks). Return values are checked.
+            let rc1 = unsafe { sys::fcntl(fd, sys::F_SETFL, sys::O_NONBLOCK) };
+            // SAFETY: as above.
+            let rc2 = unsafe { sys::fcntl(fd, sys::F_SETFD, sys::FD_CLOEXEC) };
+            if rc1 < 0 || rc2 < 0 {
+                let err = io::Error::last_os_error();
+                // SAFETY: closing fds this constructor exclusively
+                // owns; they escape to no one on the error path.
+                unsafe {
+                    sys::close(fds[0]);
+                    sys::close(fds[1]);
+                }
+                return Err(err);
+            }
+        }
+        Ok(Self { read_fd: fds[0], write_fd: fds[1] })
+    }
+
+    /// The fd to register (readable) with the owning poller.
+    pub fn read_fd(&self) -> i32 {
+        self.read_fd
+    }
+
+    /// Interrupt the owning poller's `wait`. Callable from any thread;
+    /// never blocks. A full pipe (EAGAIN) means a wakeup is already
+    /// pending, so the error is deliberately ignored.
+    pub fn wake(&self) {
+        let byte = [1u8];
+        // SAFETY: 1-byte write from a live stack buffer to a
+        // nonblocking fd; the result needs no check (see doc above).
+        unsafe { sys::write(self.write_fd, byte.as_ptr() as *const std::ffi::c_void, 1) };
+    }
+
+    /// Drain pending wakeup bytes after the poller reported the read
+    /// end readable. Level-triggered pollers re-fire until this runs.
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        loop {
+            // SAFETY: read into a live stack buffer of the stated
+            // length on a nonblocking fd; the return value terminates
+            // the loop on EAGAIN (-1), EOF (0), or a short read.
+            let n = unsafe {
+                sys::read(self.read_fd, buf.as_mut_ptr() as *mut std::ffi::c_void, buf.len())
+            };
+            if n < buf.len() as isize {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(any(target_os = "linux", target_os = "macos", target_os = "ios"))]
+impl Drop for Waker {
+    fn drop(&mut self) {
+        // SAFETY: closing the two fds this struct exclusively owns;
+        // nothing uses them after Drop.
+        unsafe {
+            sys::close(self.read_fd);
+            sys::close(self.write_fd);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Unsupported platforms: compile, but refuse to start
+// ---------------------------------------------------------------------------
+
+#[cfg(not(any(target_os = "linux", target_os = "macos", target_os = "ios")))]
+pub struct Poller {}
+
+#[cfg(not(any(target_os = "linux", target_os = "macos", target_os = "ios")))]
+impl Poller {
+    pub fn new() -> io::Result<Self> {
+        Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "connection reactor requires epoll (Linux) or kqueue (macOS)",
+        ))
+    }
+    pub fn add(&self, _fd: i32, _token: u64, _r: bool, _w: bool) -> io::Result<()> {
+        unreachable!("Poller::new never succeeds on this platform")
+    }
+    pub fn modify(&self, _fd: i32, _token: u64, _r: bool, _w: bool) -> io::Result<()> {
+        unreachable!("Poller::new never succeeds on this platform")
+    }
+    pub fn delete(&self, _fd: i32) -> io::Result<()> {
+        unreachable!("Poller::new never succeeds on this platform")
+    }
+    pub fn wait(&self, _events: &mut Events, _timeout: Option<Duration>) -> io::Result<()> {
+        unreachable!("Poller::new never succeeds on this platform")
+    }
+}
+
+#[cfg(not(any(target_os = "linux", target_os = "macos", target_os = "ios")))]
+pub struct Waker {}
+
+#[cfg(not(any(target_os = "linux", target_os = "macos", target_os = "ios")))]
+impl Waker {
+    pub fn new() -> io::Result<Self> {
+        Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "connection reactor requires epoll (Linux) or kqueue (macOS)",
+        ))
+    }
+    pub fn read_fd(&self) -> i32 {
+        -1
+    }
+    pub fn wake(&self) {}
+    pub fn drain(&self) {}
+}
+
+#[cfg(all(test, any(target_os = "linux", target_os = "macos", target_os = "ios")))]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+    use std::time::Instant;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (client, server)
+    }
+
+    #[test]
+    fn tcp_data_reports_readable() {
+        let poller = Poller::new().unwrap();
+        let (mut client, server) = pair();
+        poller.add(server.as_raw_fd(), 7, true, false).unwrap();
+        client.write_all(b"hello").unwrap();
+        let mut events = Events::with_capacity(8);
+        // A couple of retries tolerate scheduler lag on loopback.
+        let mut seen = false;
+        for _ in 0..50 {
+            poller.wait(&mut events, Some(Duration::from_millis(100))).unwrap();
+            if events.iter().any(|e| e.token == 7 && e.readable) {
+                seen = true;
+                break;
+            }
+        }
+        assert!(seen, "pending TCP data must surface as a readable event");
+    }
+
+    #[test]
+    fn fresh_stream_reports_writable() {
+        let poller = Poller::new().unwrap();
+        let (client, _server) = pair();
+        poller.add(client.as_raw_fd(), 3, false, true).unwrap();
+        let mut events = Events::with_capacity(8);
+        poller.wait(&mut events, Some(Duration::from_millis(1000))).unwrap();
+        assert!(
+            events.iter().any(|e| e.token == 3 && e.writable),
+            "an empty socket buffer must surface as writable"
+        );
+    }
+
+    #[test]
+    fn modify_disables_and_reenables_read_interest() {
+        let poller = Poller::new().unwrap();
+        let (mut client, server) = pair();
+        poller.add(server.as_raw_fd(), 9, true, false).unwrap();
+        client.write_all(b"x").unwrap();
+        let mut events = Events::with_capacity(8);
+        poller.wait(&mut events, Some(Duration::from_millis(1000))).unwrap();
+        assert!(events.iter().any(|e| e.token == 9 && e.readable));
+        // Interest off: pending data must no longer wake the poller.
+        poller.modify(server.as_raw_fd(), 9, false, false).unwrap();
+        poller.wait(&mut events, Some(Duration::from_millis(50))).unwrap();
+        assert!(
+            !events.iter().any(|e| e.token == 9 && e.readable),
+            "read interest was disabled"
+        );
+        // Interest back on: the still-buffered byte re-fires (level-triggered).
+        poller.modify(server.as_raw_fd(), 9, true, false).unwrap();
+        poller.wait(&mut events, Some(Duration::from_millis(1000))).unwrap();
+        assert!(events.iter().any(|e| e.token == 9 && e.readable));
+    }
+
+    #[test]
+    fn waker_interrupts_blocking_wait() {
+        let poller = Poller::new().unwrap();
+        let waker = std::sync::Arc::new(Waker::new().unwrap());
+        poller.add(waker.read_fd(), 0, true, false).unwrap();
+        let w2 = std::sync::Arc::clone(&waker);
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            w2.wake();
+        });
+        let mut events = Events::with_capacity(8);
+        // No timeout: only the waker can unblock this.
+        poller.wait(&mut events, None).unwrap();
+        assert!(events.iter().any(|e| e.token == 0 && e.readable));
+        waker.drain();
+        // Drained: the next bounded wait must be quiet.
+        poller.wait(&mut events, Some(Duration::from_millis(50))).unwrap();
+        assert!(!events.iter().any(|e| e.token == 0));
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn wakes_are_coalesced_not_lost() {
+        let poller = Poller::new().unwrap();
+        let waker = Waker::new().unwrap();
+        poller.add(waker.read_fd(), 0, true, false).unwrap();
+        // Many wakes before any drain: the pipe coalesces them (and
+        // EAGAIN on a full pipe is fine by contract).
+        for _ in 0..1000 {
+            waker.wake();
+        }
+        let mut events = Events::with_capacity(8);
+        poller.wait(&mut events, Some(Duration::from_millis(1000))).unwrap();
+        assert!(events.iter().any(|e| e.token == 0 && e.readable));
+        waker.drain();
+        poller.wait(&mut events, Some(Duration::from_millis(20))).unwrap();
+        assert!(!events.iter().any(|e| e.token == 0), "drain must clear every pending byte");
+    }
+
+    #[test]
+    fn idle_wait_times_out() {
+        let poller = Poller::new().unwrap();
+        let (_client, server) = pair();
+        poller.add(server.as_raw_fd(), 1, true, false).unwrap();
+        let mut events = Events::with_capacity(8);
+        let t0 = Instant::now();
+        poller.wait(&mut events, Some(Duration::from_millis(120))).unwrap();
+        assert!(events.is_empty(), "no data was sent");
+        assert!(
+            t0.elapsed() >= Duration::from_millis(80),
+            "wait returned after only {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn delete_stops_event_delivery() {
+        let poller = Poller::new().unwrap();
+        let (mut client, server) = pair();
+        poller.add(server.as_raw_fd(), 5, true, false).unwrap();
+        client.write_all(b"x").unwrap();
+        let mut events = Events::with_capacity(8);
+        poller.wait(&mut events, Some(Duration::from_millis(1000))).unwrap();
+        assert!(events.iter().any(|e| e.token == 5));
+        poller.delete(server.as_raw_fd()).unwrap();
+        poller.wait(&mut events, Some(Duration::from_millis(50))).unwrap();
+        assert!(!events.iter().any(|e| e.token == 5), "deleted fd must go quiet");
+    }
+}

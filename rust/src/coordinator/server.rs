@@ -1,26 +1,32 @@
 //! TCP server + model workers.
 //!
-//! Topology: one listener thread accepts connections into a **bounded
-//! connection-worker pool** (reusing [`util::threadpool`]); beyond
-//! `max_connections` concurrent connections, new sockets are rejected at
-//! accept time with an error line (`conns_rejected` counter). Each
-//! admitted connection is split into two pool jobs:
+//! Topology: a small **fixed set of IO threads** (default 2, see
+//! [`ServerConfig::io_threads`]) own every socket through a
+//! level-triggered [`reactor::Poller`] (epoll on Linux, kqueue on
+//! macOS). There are no per-connection threads and no poll ticks:
 //!
-//! * a **reader** that parses line-JSON envelopes (v1, or legacy v0 — see
-//!   [`protocol`]) and `submit()`s requests to the model's [`Batcher`]
-//!   *without blocking* — after the `hello` handshake, up to
-//!   `pipeline_depth` requests per connection may be in flight at once,
-//!   so the dynamic batcher can coalesce a single client's burst into one
+//! * the **listener** is registered with IO thread 0; accepted sockets
+//!   are handed to the least-loaded IO thread via its wakeup pipe;
+//! * each connection's inbound bytes run through an incremental
+//!   [`codec::LineCodec`] (framing only — protocol semantics stay out of
+//!   the event loop), and decoded envelopes (v1, or legacy v0 — see
+//!   [`protocol`]) are `submit()`ed to the model's [`Batcher`] without
+//!   blocking — after the `hello` handshake, up to `pipeline_depth`
+//!   requests per connection may be in flight at once, so the dynamic
+//!   batcher can coalesce a single client's burst into one
 //!   probabilistic forward pass (the paper's Fig. 7 batching advantage,
-//!   reachable from one socket); connections that never send `hello` keep
-//!   the legacy one-at-a-time in-order semantics;
-//! * a **writer** fed by a per-connection response channel that sends
-//!   responses back tagged by `id` in *completion order* (out-of-order
-//!   relative to submission is allowed and expected).
+//!   reachable from one socket); connections that never send `hello`
+//!   keep the legacy one-at-a-time in-order semantics (the engine
+//!   pauses reading at the window instead of blocking a thread);
+//! * responses land in a bounded per-connection [`Outbox`] and are
+//!   flushed by **writability events** — a peer that stops draining is
+//!   back-pressured against its buffer cap and disconnected once it
+//!   stalls past [`ServerConfig::write_stall`] (`conns_dropped_slow`),
+//!   so a slow client can never wedge an IO thread in a blocking write.
 //!
 //! One worker thread per model lane drains its batcher, runs the lane on
 //! the coalesced mini-batch, post-processes uncertainty and fans
-//! responses back out to each request's reply channel. Lanes come in two
+//! responses back out to each request's [`Reply`]. Lanes come in two
 //! kinds:
 //!
 //! * **static lanes** ([`Service::register`]) own a boxed [`Backend`] for
@@ -37,10 +43,18 @@
 //! Also usable in-process (no TCP) through [`Service::submit`] /
 //! [`Service::infer_blocking`] — the integration tests and benches drive
 //! it both ways.
+//!
+//! [`reactor::Poller`]: crate::coordinator::reactor::Poller
+//! [`codec::LineCodec`]: crate::coordinator::codec::LineCodec
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, ErrorKind, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+#[cfg(unix)]
+use std::collections::HashSet;
+#[cfg(unix)]
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::io::AsRawFd;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -48,10 +62,15 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{Batcher, BatcherConfig, WorkItem};
+#[cfg(unix)]
+use crate::coordinator::codec::{Line, LineCodec};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::protocol::{
     self, Command, Envelope, Inbound, ProtoVersion, Response,
 };
+#[cfg(unix)]
+use crate::coordinator::reactor::{Events, Poller};
+use crate::coordinator::reactor::Waker;
 use crate::coordinator::{postprocess, Backend};
 use crate::error::{Error, Result};
 use crate::model::Arch;
@@ -59,18 +78,6 @@ use crate::registry::{ModelSpec, ModelVersion, Registry};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::threadpool::{self, ThreadPool};
-
-/// Tick granularity for blocked connection readers: a reader blocked in
-/// `read_until` re-checks the server-wide stop flag at this interval, so
-/// `Server::run` terminates promptly even with idle clients connected.
-const READ_TICK: Duration = Duration::from_millis(200);
-
-/// Upper bound on one blocking socket write. A peer that sends requests
-/// but never drains responses would otherwise wedge a connection job in
-/// `write_all` forever — and `Server::run` waits for connection jobs, so
-/// a wedged write would turn into a shutdown hang. After a timed-out
-/// write the connection is killed instead.
-const WRITE_TIMEOUT: Duration = Duration::from_secs(2);
 
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -95,6 +102,26 @@ pub struct ServerConfig {
     /// per-request error response; connections that never send `hello`
     /// are served one-at-a-time in order (legacy semantics).
     pub pipeline_depth: usize,
+    /// Number of reactor IO threads that share all sockets (thread 0 also
+    /// owns the listener). Clamped to ≥ 1. Connection counts in the tens
+    /// of thousands are fine on the default of 2.
+    pub io_threads: usize,
+    /// Per-model admission quota: with a nonzero quota, a model lane
+    /// holding this many in-flight requests sheds further submissions
+    /// with an explicit load-shed error (`tenant_rejected` counter)
+    /// instead of queueing without bound behind one noisy tenant.
+    /// 0 disables the check.
+    pub tenant_quota: usize,
+    /// Cap on one connection's buffered outbound bytes. A peer that lets
+    /// responses pile past this cap is counted slow and disconnected.
+    pub max_outbuf_bytes: usize,
+    /// How long one connection's flush may stay blocked on a full kernel
+    /// buffer before the peer is declared slow and disconnected
+    /// (`conns_dropped_slow` counter).
+    pub write_stall: Duration,
+    /// Longest accepted request line; longer lines are discarded without
+    /// buffering and answered with an error (`lines_oversized` counter).
+    pub max_line_bytes: usize,
 }
 
 impl Default for ServerConfig {
@@ -107,9 +134,154 @@ impl Default for ServerConfig {
             pool_threads: 0,
             max_connections: 64,
             pipeline_depth: 0,
+            io_threads: 2,
+            tenant_quota: 0,
+            max_outbuf_bytes: 256 * 1024,
+            write_stall: Duration::from_secs(2),
+            max_line_bytes: 1024 * 1024,
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// Reply plumbing: how a lane worker reaches the requester
+// ---------------------------------------------------------------------------
+
+/// Where a lane worker delivers one request's [`Response`].
+///
+/// In-process callers (tests, benches, [`Service::submit`]) use the
+/// channel form; the TCP front end uses the connection form, which
+/// appends the serialized line to the connection's [`Outbox`] and wakes
+/// the owning IO thread — no blocking writer thread anywhere.
+#[derive(Clone)]
+pub enum Reply {
+    /// Deliver on an mpsc channel (in-process callers).
+    Channel(Sender<Response>),
+    /// Deliver into a reactor connection's outbound buffer.
+    Conn(ConnReply),
+}
+
+impl Reply {
+    pub fn send(&self, resp: Response) {
+        match self {
+            // a dropped receiver just means the caller stopped caring
+            Reply::Channel(tx) => drop(tx.send(resp)),
+            Reply::Conn(c) => c.send(resp),
+        }
+    }
+}
+
+/// Bounded per-connection outbound buffer.
+///
+/// All protocol writers (control acks, inference responses, rejection
+/// lines) append here; only the owning IO thread flushes, and only when
+/// the socket is writable. `cursor` marks how much of `buf` has already
+/// hit the socket; consumed bytes compact away once they pass a
+/// threshold, so steady-state flushing never memmoves.
+struct OutInner {
+    buf: Vec<u8>,
+    cursor: usize,
+    /// Socket failed (or connection closed): drop all future writes.
+    dead: bool,
+    /// The buffer cap was exceeded: the peer is not draining and must be
+    /// disconnected as slow.
+    overflowed: bool,
+    /// When the oldest currently-blocked flush first hit `WouldBlock`;
+    /// cleared only by a FULL drain, so a drip-feeding peer that never
+    /// empties the buffer still trips the stall deadline.
+    stall_since: Option<Instant>,
+}
+
+struct Outbox {
+    cap: usize,
+    inner: Mutex<OutInner>,
+}
+
+impl Outbox {
+    fn new(cap: usize) -> Self {
+        Self {
+            cap: cap.max(1024),
+            inner: Mutex::new(OutInner {
+                buf: Vec::new(),
+                cursor: 0,
+                dead: false,
+                overflowed: false,
+                stall_since: None,
+            }),
+        }
+    }
+
+    /// Append one protocol line (newline added). Marks the connection
+    /// overflowed instead of growing past the cap.
+    fn push_line(&self, line: &str) {
+        let mut o = self.inner.lock().unwrap();
+        if o.dead {
+            return;
+        }
+        if o.buf.len() - o.cursor + line.len() + 1 > self.cap {
+            o.overflowed = true;
+            return;
+        }
+        o.buf.extend_from_slice(line.as_bytes());
+        o.buf.push(b'\n');
+    }
+}
+
+/// What one IO thread shares with the rest of the process: its wakeup
+/// pipe, a mailbox of cross-thread work, and its connection count (for
+/// least-loaded placement of new sockets).
+struct IoShared {
+    waker: Arc<Waker>,
+    inbox: Mutex<IoInbox>,
+    conns_owned: AtomicUsize,
+}
+
+#[derive(Default)]
+struct IoInbox {
+    /// Sockets handed over by the accepting thread.
+    new_conns: Vec<TcpStream>,
+    /// Connection tokens with freshly buffered responses to flush.
+    touched: Vec<u64>,
+}
+
+/// A lane worker's handle back to a reactor connection.
+#[derive(Clone)]
+pub struct ConnReply {
+    token: u64,
+    out: Arc<Outbox>,
+    shared: Arc<IoShared>,
+    /// The connection's pipeline-window gauge.
+    conn_inflight: Arc<AtomicUsize>,
+}
+
+impl ConnReply {
+    fn send(&self, resp: Response) {
+        let line = resp.to_json().dump();
+        {
+            let mut o = self.out.inner.lock().unwrap();
+            // free the pipeline slot in the same critical section that
+            // buffers the response: the depth check and the flush both
+            // run under this lock's happens-before, so a client that
+            // replenishes on receipt can never race into a spurious
+            // depth rejection
+            self.conn_inflight.fetch_sub(1, Ordering::SeqCst);
+            if !o.dead {
+                if o.buf.len() - o.cursor + line.len() + 1 > self.out.cap {
+                    o.overflowed = true;
+                } else {
+                    o.buf.extend_from_slice(line.as_bytes());
+                    o.buf.push(b'\n');
+                }
+            }
+        }
+        self.shared.inbox.lock().unwrap().touched.push(self.token);
+        self.shared.waker.wake();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Service: routing + batching core (transport-agnostic)
+// ---------------------------------------------------------------------------
 
 struct ModelLane {
     batcher: Arc<Batcher>,
@@ -117,6 +289,10 @@ struct ModelLane {
     /// active version at submit (a swap may change the architecture).
     features: usize,
     registry_backed: bool,
+    /// In-flight requests on this lane, for per-tenant admission
+    /// control. Incremented at submit, decremented by whoever delivers
+    /// the response.
+    in_flight: Arc<AtomicUsize>,
 }
 
 /// What a lane worker runs its batches on.
@@ -143,6 +319,11 @@ pub struct Service {
     /// Calibration factor admin `load`/`swap` fall back to when the
     /// command omits `calib`.
     default_calib: f32,
+    /// Wakeup pipes of the running reactor's IO threads, so `shutdown`
+    /// (and the admin shutdown command) can interrupt their blocked
+    /// `wait` calls immediately — this is what retired the old 200ms
+    /// read-timeout tick.
+    wakers: Mutex<Vec<Arc<Waker>>>,
 }
 
 impl Service {
@@ -161,6 +342,7 @@ impl Service {
             pool,
             registry: None,
             default_calib: 1.0,
+            wakers: Mutex::new(Vec::new()),
         }
     }
 
@@ -239,7 +421,12 @@ impl Service {
         self.workers.lock().unwrap().push(handle);
         self.lanes.write().unwrap().insert(
             name.to_string(),
-            ModelLane { batcher, features, registry_backed },
+            ModelLane {
+                batcher,
+                features,
+                registry_backed,
+                in_flight: Arc::new(AtomicUsize::new(0)),
+            },
         );
     }
 
@@ -360,22 +547,33 @@ impl Service {
         }
     }
 
-    /// Route one request into its lane (non-blocking), sending the
-    /// response to the caller-provided channel. This is the pipelining
-    /// primitive: many in-flight requests can share one reply sender, and
-    /// responses arrive on it in completion order. On registry lanes the
-    /// then-active model version is pinned here — the epoch handoff that
-    /// makes `swap` atomic from the request's point of view.
-    pub fn submit_with_proto(
+    /// Route one request into its lane (non-blocking), delivering the
+    /// response to `reply`. This is the pipelining primitive: many
+    /// in-flight requests can share one reply sink, and responses arrive
+    /// on it in completion order. On registry lanes the then-active model
+    /// version is pinned here — the epoch handoff that makes `swap`
+    /// atomic from the request's point of view. Admission control also
+    /// lives here: a lane at its tenant quota, or with a full queue,
+    /// sheds the request with an explicit load-shed error.
+    pub fn submit_with_reply(
         &self,
         req: protocol::Request,
-        reply: Sender<Response>,
+        reply: Reply,
         proto: ProtoVersion,
     ) -> Result<()> {
         let lanes = self.lanes.read().unwrap();
         let lane = lanes
             .get(&req.model)
             .ok_or_else(|| Error::Coordinator(format!("unknown model '{}'", req.model)))?;
+        if self.cfg.tenant_quota > 0
+            && lane.in_flight.load(Ordering::SeqCst) >= self.cfg.tenant_quota
+        {
+            Metrics::inc(&self.metrics.tenant_rejected);
+            return Err(Error::Coordinator(format!(
+                "admission: model '{}' at tenant quota {} (load shed)",
+                req.model, self.cfg.tenant_quota
+            )));
+        }
         let model = if lane.registry_backed {
             Some(
                 self.registry
@@ -398,10 +596,11 @@ impl Service {
             )));
         }
         Metrics::inc(&self.metrics.requests);
-        // gauge up BEFORE the push publishes the item: the lane worker may
-        // pop and decrement immediately, and inc-after-push would let the
-        // unsigned gauge wrap below zero
+        // gauges up BEFORE the push publishes the item: the lane worker
+        // may pop and decrement immediately, and inc-after-push would let
+        // the unsigned gauges wrap below zero
         Metrics::inc(&self.metrics.in_flight);
+        lane.in_flight.fetch_add(1, Ordering::SeqCst);
         let item = WorkItem {
             id: req.id,
             input: req.input,
@@ -409,13 +608,26 @@ impl Service {
             reply,
             proto,
             model,
+            lane_inflight: Some(lane.in_flight.clone()),
         };
         if lane.batcher.push(item).is_err() {
             Metrics::dec(&self.metrics.in_flight);
+            lane.in_flight.fetch_sub(1, Ordering::SeqCst);
             Metrics::inc(&self.metrics.rejected);
-            return Err(Error::Coordinator("queue full".into()));
+            return Err(Error::Coordinator("queue full (load shed)".into()));
         }
         Ok(())
+    }
+
+    /// [`submit_with_reply`](Self::submit_with_reply) onto an mpsc
+    /// channel, tagged with the caller's protocol generation.
+    pub fn submit_with_proto(
+        &self,
+        req: protocol::Request,
+        reply: Sender<Response>,
+        proto: ProtoVersion,
+    ) -> Result<()> {
+        self.submit_with_reply(req, Reply::Channel(reply), proto)
     }
 
     /// [`submit_with_proto`](Self::submit_with_proto) under the legacy
@@ -454,9 +666,23 @@ impl Service {
         }
     }
 
+    /// Register one IO thread's wakeup pipe for stop-flag delivery.
+    fn register_waker(&self, w: Arc<Waker>) {
+        self.wakers.lock().unwrap().push(w);
+    }
+
+    /// Interrupt every IO thread's blocked `wait` so it re-checks the
+    /// stop flag (and its mailbox) immediately.
+    fn wake_all(&self) {
+        for w in self.wakers.lock().unwrap().iter() {
+            w.wake();
+        }
+    }
+
     /// Close all lanes and join workers.
     pub fn shutdown(&mut self) {
         self.stopping.store(true, Ordering::SeqCst);
+        self.wake_all();
         for lane in self.lanes.read().unwrap().values() {
             lane.batcher.close();
         }
@@ -549,7 +775,10 @@ fn lane_worker(
                     metrics.record_latency_us(elapsed as f64);
                     Metrics::inc(&metrics.responses);
                     Metrics::dec(&metrics.in_flight);
-                    let _ = it.reply.send(Response {
+                    if let Some(li) = &it.lane_inflight {
+                        li.fetch_sub(1, Ordering::SeqCst);
+                    }
+                    it.reply.send(Response {
                         id: it.id,
                         result: Ok(p),
                         queue_us,
@@ -572,7 +801,10 @@ fn lane_worker(
 fn fan_errors(batch: Vec<WorkItem>, metrics: &Metrics, msg: &str, model_version: u64) {
     for it in batch {
         Metrics::dec(&metrics.in_flight);
-        let _ = it.reply.send(Response {
+        if let Some(li) = &it.lane_inflight {
+            li.fetch_sub(1, Ordering::SeqCst);
+        }
+        it.reply.send(Response {
             id: it.id,
             result: Err(msg.to_string()),
             queue_us: 0,
@@ -582,6 +814,10 @@ fn fan_errors(batch: Vec<WorkItem>, metrics: &Metrics, msg: &str, model_version:
         });
     }
 }
+
+// ---------------------------------------------------------------------------
+// TCP front end: the connection reactor
+// ---------------------------------------------------------------------------
 
 /// TCP front end over a [`Service`].
 pub struct Server {
@@ -599,408 +835,711 @@ impl Server {
         Ok(Self { service, listener, addr })
     }
 
-    /// Serve until a shutdown command arrives. Connections are handled by
-    /// a bounded worker pool (two jobs per connection: reader + writer);
-    /// past `max_connections` concurrent clients, new sockets get an
-    /// error line and are closed at accept time. Returns once the accept
-    /// loop has stopped and every connection job has finished (readers
-    /// notice the stop flag within [`READ_TICK`]).
+    /// Serve until a shutdown command arrives: `io_threads` reactor
+    /// threads (the caller's thread is thread 0 and also owns the
+    /// listener) share every socket; past `max_connections` concurrent
+    /// clients, new sockets get an error line and are closed at accept
+    /// time. Returns once the stop flag is set and every connection has
+    /// drained its in-flight responses — shutdown is wakeup-pipe-driven,
+    /// with no polling tick anywhere.
+    #[cfg(unix)]
     pub fn run(&self) -> Result<()> {
-        self.listener.set_nonblocking(false)?;
-        let max_conns = self.service.max_connections();
-        // Lazily grown: an idle server owns zero connection threads; each
-        // admitted connection grows the pool by its two jobs (reader +
-        // writer) on demand, up to the 2-per-connection cap. The old
-        // eager sizing burned 2 * max_connections OS threads (128 with
-        // defaults) at bind time — hostile to the embedded target.
-        let conn_pool = ThreadPool::new_lazy(2 * max_conns);
-        let active = AtomicUsize::new(0);
-        let listener_addr = self.addr;
-        conn_pool.scope(|s| {
-            for stream in self.listener.incoming() {
-                if self.service.is_stopping() {
-                    break;
-                }
-                match stream {
-                    Ok(sock) => {
-                        if active.load(Ordering::SeqCst) >= max_conns {
-                            Metrics::inc(&self.service.metrics.conns_rejected);
-                            let mut sock = sock;
-                            let _ = sock.write_all(
-                                b"{\"error\":\"server at max connections\"}\n",
-                            );
-                            continue; // socket dropped: rejected at accept
-                        }
-                        active.fetch_add(1, Ordering::SeqCst);
-                        Metrics::inc(&self.service.metrics.connections);
-                        match ConnectionHalves::split(self.service.clone(), sock) {
-                            Ok((reader, writer)) => {
-                                s.spawn(move || reader.run(listener_addr));
-                                let active = &active;
-                                s.spawn(move || {
-                                    writer.run();
-                                    // the writer outlives its reader (it
-                                    // exits only after the reader drops the
-                                    // reply sender and the channel drains),
-                                    // so the admission slot frees only when
-                                    // BOTH halves are done and both pool
-                                    // workers are truly reusable
-                                    active.fetch_sub(1, Ordering::SeqCst);
-                                });
-                            }
-                            Err(e) => {
-                                active.fetch_sub(1, Ordering::SeqCst);
-                                eprintln!("connection setup error: {e}");
-                            }
-                        }
-                    }
-                    Err(e) => {
-                        eprintln!("accept error: {e}");
-                    }
-                }
-            }
-        });
+        let reactor_err = |e: std::io::Error| Error::Coordinator(format!("reactor: {e}"));
+        self.listener.set_nonblocking(true)?;
+        let n_io = self.service.cfg.io_threads.max(1);
+        // re-runs on the same service re-register from scratch
+        self.service.wakers.lock().unwrap().clear();
+        let mut slots = Vec::with_capacity(n_io);
+        for _ in 0..n_io {
+            let poller = Poller::new().map_err(reactor_err)?;
+            let waker = Arc::new(Waker::new().map_err(reactor_err)?);
+            poller
+                .add(waker.read_fd(), TOKEN_WAKER, true, false)
+                .map_err(reactor_err)?;
+            let shared = Arc::new(IoShared {
+                waker: waker.clone(),
+                inbox: Mutex::new(IoInbox::default()),
+                conns_owned: AtomicUsize::new(0),
+            });
+            self.service.register_waker(waker);
+            slots.push((poller, shared));
+        }
+        let peers: Vec<Arc<IoShared>> = slots.iter().map(|(_, s)| s.clone()).collect();
+        let active = Arc::new(AtomicUsize::new(0));
+        let io_thread = |poller: Poller, shared: Arc<IoShared>| IoThread {
+            svc: self.service.clone(),
+            shared,
+            peers: peers.clone(),
+            poller,
+            conns: HashMap::new(),
+            wet: HashSet::new(),
+            next_token: FIRST_CONN_TOKEN,
+            active: active.clone(),
+            read_buf: vec![0u8; READ_CHUNK],
+        };
+        let mut slots = slots.into_iter();
+        let (p0, s0) = slots.next().expect("io_threads >= 1");
+        let mut handles = Vec::new();
+        for (i, (poller, shared)) in slots.enumerate() {
+            let t = io_thread(poller, shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("pfp-io-{}", i + 1))
+                .spawn(move || t.run(None))
+                .expect("spawn io thread");
+            handles.push(handle);
+        }
+        // thread 0 (this thread) owns the listener
+        io_thread(p0, s0).run(Some(&self.listener));
+        for h in handles {
+            let _ = h.join();
+        }
         Ok(())
     }
-}
 
-/// Write one protocol line atomically (the socket is shared between the
-/// connection's reader — control/rejection replies — and its writer).
-///
-/// The whole line is subject to one [`WRITE_TIMEOUT`] budget: the socket's
-/// `SO_SNDTIMEO` only bounds a *single* `write()` call, so a slow-drip
-/// peer draining a few bytes per timeout could otherwise keep a plain
-/// `write_all` looping forever and wedge the connection job.
-fn send_line(out: &Mutex<TcpStream>, line: &str) -> std::io::Result<()> {
-    let mut buf = Vec::with_capacity(line.len() + 1);
-    buf.extend_from_slice(line.as_bytes());
-    buf.push(b'\n');
-    let deadline = Instant::now() + WRITE_TIMEOUT;
-    let mut w = out.lock().unwrap();
-    let mut written = 0;
-    while written < buf.len() {
-        if Instant::now() >= deadline {
-            return Err(std::io::Error::new(
-                ErrorKind::TimedOut,
-                "write budget exceeded",
-            ));
-        }
-        match w.write(&buf[written..]) {
-            Ok(0) => {
-                return Err(std::io::Error::new(
-                    ErrorKind::WriteZero,
-                    "peer closed",
-                ))
-            }
-            Ok(n) => written += n,
-            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-            Err(e) => return Err(e),
-        }
-    }
-    Ok(())
-}
-
-/// The two pool jobs one admitted connection turns into.
-struct ConnectionHalves;
-
-impl ConnectionHalves {
-    fn split(svc: Arc<Service>, stream: TcpStream) -> Result<(ConnReader, ConnWriter)> {
-        // line-sized request/response pairs: Nagle + delayed-ACK would add
-        // ~40ms per round trip, swamping sub-ms inference.
-        stream.set_nodelay(true).ok();
-        // bounded blocking so the reader can notice a server-wide stop
-        stream.set_read_timeout(Some(READ_TICK)).ok();
-        // and so a never-draining peer cannot wedge a write forever
-        stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
-        let out = Arc::new(Mutex::new(stream.try_clone()?));
-        let in_flight = Arc::new(AtomicUsize::new(0));
-        let (reply_tx, reply_rx) = channel::<Response>();
-        let reader = ConnReader {
-            svc,
-            reader: BufReader::new(stream),
-            out: out.clone(),
-            reply_tx,
-            in_flight: in_flight.clone(),
-        };
-        let writer = ConnWriter { reply_rx, out, in_flight };
-        Ok((reader, writer))
+    /// The reactor needs epoll or kqueue; other targets refuse to serve
+    /// TCP (the in-process [`Service`] API still works everywhere).
+    #[cfg(not(unix))]
+    pub fn run(&self) -> Result<()> {
+        Err(Error::Coordinator(
+            "connection reactor requires epoll (Linux) or kqueue (macOS)".into(),
+        ))
     }
 }
 
-/// Reader half: parses inbound lines and routes them without blocking on
-/// inference, so one client can keep `pipeline_depth` requests in flight.
-struct ConnReader {
-    svc: Arc<Service>,
-    reader: BufReader<TcpStream>,
-    out: Arc<Mutex<TcpStream>>,
-    reply_tx: Sender<Response>,
-    in_flight: Arc<AtomicUsize>,
-}
+/// Reactor token of each IO thread's own wakeup pipe.
+#[cfg(unix)]
+const TOKEN_WAKER: u64 = 0;
+/// Reactor token of the listener (IO thread 0 only).
+#[cfg(unix)]
+const TOKEN_LISTENER: u64 = 1;
+/// First token handed to an accepted connection.
+#[cfg(unix)]
+const FIRST_CONN_TOKEN: u64 = 2;
+/// Kernel events drained per `wait` call.
+#[cfg(unix)]
+const EVENTS_PER_WAIT: usize = 256;
+/// Bytes read per readiness event (one chunk per event keeps a
+/// fire-hosing client from starving its neighbours on the IO thread).
+#[cfg(unix)]
+const READ_CHUNK: usize = 64 * 1024;
+/// Flushed bytes compact out of an outbox once they pass this threshold.
+#[cfg(unix)]
+const OUTBUF_COMPACT_AT: usize = 4096;
 
-/// Per-connection pipelining state, owned by the reader.
+/// Per-connection pipelining state.
+#[cfg(unix)]
 struct ConnState {
     /// Max requests in flight on this connection.
     depth: usize,
     /// True once the client opted in via `{"cmd":"hello","pipeline":true}`.
     /// Pipelined connections get an explicit error response on a depth
-    /// overrun; non-pipelined ones are served with the legacy blocking
-    /// semantics (the reader waits for the window to drain), so clients
-    /// written against the old synchronous server behave identically.
+    /// overrun; non-pipelined ones keep the legacy one-at-a-time in-order
+    /// semantics — the engine simply stops popping (and reading) lines
+    /// while the single-slot window is full, so clients written against
+    /// the old synchronous server behave identically.
     pipelined: bool,
     /// Whether the one-time v0 deprecation warning already went out on
     /// this connection.
     warned_v0: bool,
 }
 
-impl ConnReader {
-    fn run(mut self, listener_addr: SocketAddr) {
-        let configured_depth = self.svc.pipeline_depth();
-        // until the hello handshake opts in, a connection is limited to
-        // one request in flight and served strictly in order — exactly
-        // the old synchronous server's observable behaviour, even for
-        // clients that pipeline their *writes*
-        let mut state = ConnState { depth: 1, pipelined: false, warned_v0: false };
-        // accumulate raw bytes (NOT read_line into a String: on a timeout
-        // error read_line discards the bytes it already consumed from the
-        // socket, corrupting the stream; read_until keeps them appended,
-        // so partial lines survive READ_TICK timeouts until the newline
-        // arrives)
-        let mut acc: Vec<u8> = Vec::new();
+/// One reactor-owned connection.
+#[cfg(unix)]
+struct Conn {
+    stream: TcpStream,
+    fd: i32,
+    codec: LineCodec,
+    state: ConnState,
+    out: Arc<Outbox>,
+    /// Requests currently in flight on this connection (pipeline window).
+    in_flight: Arc<AtomicUsize>,
+    /// The `Reply` handed to every submit from this connection.
+    reply: Reply,
+    /// Peer half-closed its write side (EOF seen).
+    read_closed: bool,
+    /// Stop reading; close once buffered + in-flight work drains.
+    closing: bool,
+    /// Legacy (non-pipelined) window is full: reading is suspended until
+    /// the in-flight response is delivered.
+    paused: bool,
+    /// Interest set currently registered with the poller.
+    reg_read: bool,
+    reg_write: bool,
+}
+
+/// One reactor IO thread: owns a poller, a wakeup pipe, and a share of
+/// the connections.
+#[cfg(unix)]
+struct IoThread {
+    svc: Arc<Service>,
+    shared: Arc<IoShared>,
+    peers: Vec<Arc<IoShared>>,
+    poller: Poller,
+    conns: HashMap<u64, Conn>,
+    /// Tokens with undelivered outbound bytes (stall-deadline watchlist).
+    wet: HashSet<u64>,
+    next_token: u64,
+    /// Process-wide admitted-connection count (accept-time limit).
+    active: Arc<AtomicUsize>,
+    /// Scratch buffer for socket reads, reused across all connections.
+    read_buf: Vec<u8>,
+}
+
+#[cfg(unix)]
+impl IoThread {
+    fn run(mut self, listener: Option<&TcpListener>) {
+        let mut events = Events::with_capacity(EVENTS_PER_WAIT);
+        let mut listener_registered = false;
+        if let Some(l) = listener {
+            if let Err(e) = self.poller.add(l.as_raw_fd(), TOKEN_LISTENER, true, false) {
+                eprintln!("reactor: register listener: {e}");
+                return;
+            }
+            listener_registered = true;
+        }
         loop {
             if self.svc.is_stopping() {
+                if listener_registered {
+                    if let Some(l) = listener {
+                        let _ = self.poller.delete(l.as_raw_fd());
+                    }
+                    listener_registered = false;
+                }
+                self.begin_close_all();
+                if self.conns.is_empty() {
+                    break;
+                }
+            }
+            let timeout = self.sweep_stalls();
+            if let Err(e) = self.poller.wait(&mut events, timeout) {
+                eprintln!("reactor: wait: {e}");
                 break;
             }
-            match self.reader.read_until(b'\n', &mut acc) {
-                Ok(0) => break, // EOF
-                Ok(_) => {
-                    let bytes = std::mem::take(&mut acc);
-                    let line = String::from_utf8_lossy(&bytes);
-                    let line = line.trim();
-                    if line.is_empty() {
-                        continue;
-                    }
-                    if !self.handle_line(line, &mut state, configured_depth, listener_addr) {
-                        break;
-                    }
+            let mut woken = false;
+            let mut accept_ready = false;
+            for ev in events.iter() {
+                match ev.token {
+                    TOKEN_WAKER => woken = true,
+                    TOKEN_LISTENER => accept_ready = true,
+                    t => self.conn_event(t, ev.readable, ev.writable),
                 }
-                Err(e)
-                    if e.kind() == ErrorKind::WouldBlock
-                        || e.kind() == ErrorKind::TimedOut =>
-                {
-                    continue
-                }
-                Err(_) => break,
             }
-        }
-        // dropping reply_tx lets the writer exit once all in-flight
-        // responses have drained
-    }
-
-    /// Take the one-time v0 deprecation warning if this message earns it.
-    fn take_v0_warning(
-        &self,
-        proto: ProtoVersion,
-        state: &mut ConnState,
-    ) -> Option<&'static str> {
-        if proto == ProtoVersion::V0 && !state.warned_v0 {
-            state.warned_v0 = true;
-            Some(protocol::V0_DEPRECATION)
-        } else {
-            None
+            if woken {
+                self.shared.waker.drain();
+            }
+            if accept_ready {
+                if let Some(l) = listener {
+                    self.accept_all(l);
+                }
+            }
+            self.drain_inbox();
         }
     }
 
-    /// Send a control acknowledgement sealed under the request's protocol
-    /// generation (first v0 ack carries the deprecation warning).
-    fn ack(&self, body: Json, proto: ProtoVersion, state: &mut ConnState) {
-        let warning = self.take_v0_warning(proto, state);
-        let _ = send_line(&self.out, &Envelope::seal(body, proto, warning).dump());
+    /// Stop-flag handling: every connection flips to `closing` (reads
+    /// stop, buffered + in-flight responses still drain) and idle ones
+    /// close immediately, so shutdown completes as fast as the lanes do.
+    fn begin_close_all(&mut self) {
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for t in tokens {
+            if let Some(c) = self.conns.get_mut(&t) {
+                c.closing = true;
+            }
+            self.flush_token(t);
+            self.finish_conn(t);
+        }
     }
 
-    /// Handle one parsed line; returns false when the connection is done.
-    fn handle_line(
-        &self,
-        line: &str,
-        state: &mut ConnState,
-        configured_depth: usize,
-        listener_addr: SocketAddr,
-    ) -> bool {
-        let env = match Envelope::parse(line) {
-            Ok(env) => env,
-            Err(e) => {
-                // a malformed or unknown-version line has no trustworthy
-                // generation to answer under: reply bare, like v0 always did
-                let msg = Json::obj(vec![(
-                    "error",
-                    Json::Str(format!("bad request: {e}")),
-                )]);
-                let _ = send_line(&self.out, &msg.dump());
-                return true;
-            }
-        };
-        let proto = env.proto;
-        match env.body {
-            Inbound::Control(Command::Ping) => {
-                self.ack(Json::obj(vec![("pong", Json::Bool(true))]), proto, state);
-            }
-            Inbound::Control(Command::Hello { pipeline }) => {
-                state.pipelined = pipeline;
-                state.depth = if pipeline { configured_depth } else { 1 };
-                let warning = self.take_v0_warning(proto, state);
-                let ack = protocol::hello_json_proto(
-                    pipeline,
-                    state.depth,
-                    self.svc.cfg.batcher.max_batch,
-                    proto,
-                    warning,
-                );
-                let _ = send_line(&self.out, &ack);
-            }
-            Inbound::Control(Command::Metrics) => {
-                self.ack(self.svc.metrics_snapshot(), proto, state);
-            }
-            Inbound::Control(Command::Shutdown) => {
-                self.ack(
-                    Json::obj(vec![("shutting_down", Json::Bool(true))]),
-                    proto,
-                    state,
-                );
-                self.svc.stopping.store(true, Ordering::SeqCst);
-                // wake the accept loop with a dummy connection to the
-                // *listener* address (the accepted socket's own address
-                // is not reliably dialable); a wildcard bind (0.0.0.0 /
-                // ::) is itself not dialable everywhere, so rewrite it to
-                // the matching loopback
-                let mut poke = listener_addr;
-                if poke.ip().is_unspecified() {
-                    poke.set_ip(match poke.ip() {
-                        std::net::IpAddr::V4(_) => {
-                            std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
-                        }
-                        std::net::IpAddr::V6(_) => {
-                            std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
-                        }
-                    });
+    /// One readiness notification for a connection token.
+    fn conn_event(&mut self, token: u64, readable: bool, writable: bool) {
+        if !self.conns.contains_key(&token) {
+            return; // closed earlier in this same event batch
+        }
+        if writable {
+            self.flush_token(token);
+        }
+        if readable {
+            self.read_token(token);
+        }
+        self.process_lines(token);
+        self.flush_token(token);
+        self.finish_conn(token);
+    }
+
+    /// Pull one chunk of inbound bytes into the connection's codec.
+    fn read_token(&mut self, token: u64) {
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        if conn.paused || conn.closing || conn.read_closed {
+            return; // level-triggered: unread data keeps the event hot
+        }
+        loop {
+            match conn.stream.read(&mut self.read_buf) {
+                Ok(0) => {
+                    conn.read_closed = true;
+                    break;
                 }
-                let _ = TcpStream::connect(poke);
-                return false;
-            }
-            Inbound::Control(Command::Load { model, path, arch, calib }) => {
-                let body = self
-                    .svc
-                    .admin_load(&model, &path, arch.as_deref(), calib)
-                    .unwrap_or_else(|e| {
-                        Json::obj(vec![("error", Json::Str(e.to_string()))])
-                    });
-                self.ack(body, proto, state);
-            }
-            Inbound::Control(Command::Swap { model, path, arch, calib }) => {
-                let body = self
-                    .svc
-                    .admin_swap(&model, &path, arch.as_deref(), calib)
-                    .unwrap_or_else(|e| {
-                        Json::obj(vec![("error", Json::Str(e.to_string()))])
-                    });
-                self.ack(body, proto, state);
-            }
-            Inbound::Control(Command::Unload { model }) => {
-                let body = self.svc.admin_unload(&model).unwrap_or_else(|e| {
-                    Json::obj(vec![("error", Json::Str(e.to_string()))])
-                });
-                self.ack(body, proto, state);
-            }
-            Inbound::Control(Command::Models) => {
-                let body = self.svc.admin_models().unwrap_or_else(|e| {
-                    Json::obj(vec![("error", Json::Str(e.to_string()))])
-                });
-                self.ack(body, proto, state);
-            }
-            Inbound::Infer(req) => {
-                let mut current = self.in_flight.load(Ordering::SeqCst);
-                if current >= state.depth {
-                    if state.pipelined {
-                        // explicit per-request error: the client can match
-                        // it by id and retry after draining some responses
-                        Metrics::inc(&self.svc.metrics.depth_rejected);
-                        let resp = Response {
-                            id: req.id,
-                            result: Err(format!(
-                                "pipeline depth {} exceeded",
-                                state.depth
-                            )),
-                            queue_us: 0,
-                            infer_us: 0,
-                            proto,
-                            model_version: 0,
-                        };
-                        let _ = send_line(&self.out, &resp.to_json().dump());
-                        return true;
-                    }
-                    // legacy connection: emulate the old synchronous
-                    // server — apply backpressure by waiting for the
-                    // previous response to go out before admitting more
-                    while current >= state.depth {
-                        if self.svc.is_stopping() {
-                            return false;
-                        }
-                        std::thread::sleep(Duration::from_micros(200));
-                        current = self.in_flight.load(Ordering::SeqCst);
-                    }
+                Ok(n) => {
+                    conn.codec.push(&self.read_buf[..n]);
+                    break; // one chunk per event: fairness across conns
                 }
-                self.svc.metrics.record_conn_depth((current + 1) as f64);
-                self.in_flight.fetch_add(1, Ordering::SeqCst);
-                let id = req.id;
-                if let Err(e) = self.svc.submit_with_proto(req, self.reply_tx.clone(), proto)
-                {
-                    self.in_flight.fetch_sub(1, Ordering::SeqCst);
-                    let resp = Response {
-                        id,
-                        result: Err(e.to_string()),
-                        queue_us: 0,
-                        infer_us: 0,
-                        proto,
-                        model_version: 0,
-                    };
-                    let _ = send_line(&self.out, &resp.to_json().dump());
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(_) => {
+                    conn.out.inner.lock().unwrap().dead = true;
+                    break;
                 }
             }
         }
-        true
     }
-}
 
-/// Writer half: drains the per-connection response channel and sends each
-/// response (tagged by `id`, completion order) back over the socket.
-struct ConnWriter {
-    reply_rx: Receiver<Response>,
-    out: Arc<Mutex<TcpStream>>,
-    in_flight: Arc<AtomicUsize>,
-}
-
-impl ConnWriter {
-    fn run(self) {
-        let ConnWriter { reply_rx, out, in_flight } = self;
-        let mut dead = false;
-        for resp in reply_rx {
-            // free the pipeline slot *before* the response hits the wire,
-            // so a client that replenishes on receipt never races into a
-            // spurious depth rejection
-            in_flight.fetch_sub(1, Ordering::SeqCst);
-            if dead {
-                // keep draining (without writing) so lane replies stay
-                // paired with the in-flight accounting
+    /// Decode and dispatch every complete line buffered on `token`.
+    fn process_lines(&mut self, token: u64) {
+        loop {
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            if conn.closing {
+                return;
+            }
+            if !conn.state.pipelined
+                && conn.in_flight.load(Ordering::SeqCst) >= conn.state.depth
+            {
+                // legacy window full: stop popping (and reading) until
+                // the response is delivered — strict one-at-a-time order
+                conn.paused = true;
+                return;
+            }
+            let line = match conn.codec.next_line() {
+                None => return,
+                Some(Line::Oversized { len }) => {
+                    Metrics::inc(&self.svc.metrics.lines_oversized);
+                    conn.out.push_line(&format!(
+                        "{{\"error\":\"line exceeds {} byte limit ({len} bytes)\"}}",
+                        self.svc.cfg.max_line_bytes
+                    ));
+                    continue;
+                }
+                Some(Line::Full(bytes)) => String::from_utf8_lossy(bytes).into_owned(),
+            };
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
                 continue;
             }
-            if send_line(&out, &resp.to_json().dump()).is_err() {
-                // peer gone or not draining (write timed out): kill the
-                // socket so the reader unblocks too, and stop writing
-                dead = true;
-                if let Ok(s) = out.lock() {
-                    let _ = s.shutdown(std::net::Shutdown::Both);
+            let keep = handle_line(
+                &self.svc,
+                &mut conn.state,
+                &conn.out,
+                &conn.reply,
+                &conn.in_flight,
+                trimmed,
+            );
+            if !keep {
+                conn.closing = true;
+                return;
+            }
+        }
+    }
+
+    /// Write as much buffered output as the kernel will take.
+    fn flush_token(&mut self, token: u64) {
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        let mut o = conn.out.inner.lock().unwrap();
+        if o.dead {
+            return;
+        }
+        while o.cursor < o.buf.len() {
+            match (&conn.stream).write(&o.buf[o.cursor..]) {
+                Ok(0) => {
+                    o.dead = true;
+                    break;
+                }
+                Ok(n) => o.cursor += n,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    // kernel buffer full: the stall clock starts at the
+                    // first blocked write and only a FULL drain clears
+                    // it, so a drip-draining peer still trips the
+                    // deadline
+                    if o.stall_since.is_none() {
+                        o.stall_since = Some(Instant::now());
+                    }
+                    break;
+                }
+                Err(_) => {
+                    o.dead = true;
+                    break;
+                }
+            }
+        }
+        if o.cursor == o.buf.len() {
+            o.buf.clear();
+            o.cursor = 0;
+            o.stall_since = None;
+        } else if o.cursor >= OUTBUF_COMPACT_AT {
+            o.buf.drain(..o.cursor);
+            o.cursor = 0;
+        }
+    }
+
+    /// Decide a connection's fate after an event round: close it, or
+    /// reconcile its poller interest set with what it now needs.
+    fn finish_conn(&mut self, token: u64) {
+        enum Fate {
+            Close { slow: bool },
+            Keep { want_read: bool, want_write: bool },
+        }
+        let fate = {
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            let (dead, overflowed, pending) = {
+                let o = conn.out.inner.lock().unwrap();
+                (o.dead, o.overflowed, o.buf.len() - o.cursor)
+            };
+            // the in-flight read happens under the same outbox lock
+            // discipline as ConnReply::send, so (pending == 0 && idle)
+            // is never observed between a slot-free and its response
+            let idle = conn.in_flight.load(Ordering::SeqCst) == 0;
+            if dead {
+                Fate::Close { slow: false }
+            } else if overflowed {
+                Fate::Close { slow: true }
+            } else if (conn.closing || conn.read_closed) && pending == 0 && idle {
+                Fate::Close { slow: false }
+            } else {
+                Fate::Keep {
+                    want_read: !(conn.paused || conn.closing || conn.read_closed),
+                    want_write: pending > 0,
+                }
+            }
+        };
+        match fate {
+            Fate::Close { slow } => self.close_conn(token, slow),
+            Fate::Keep { want_read, want_write } => {
+                let mut lost = false;
+                if let Some(conn) = self.conns.get_mut(&token) {
+                    if want_read != conn.reg_read || want_write != conn.reg_write {
+                        if self.poller.modify(conn.fd, token, want_read, want_write).is_ok() {
+                            conn.reg_read = want_read;
+                            conn.reg_write = want_write;
+                        } else {
+                            lost = true;
+                        }
+                    }
+                }
+                if lost {
+                    self.close_conn(token, false);
+                } else if want_write {
+                    self.wet.insert(token);
+                } else {
+                    self.wet.remove(&token);
                 }
             }
         }
     }
+
+    fn close_conn(&mut self, token: u64, slow: bool) {
+        let Some(conn) = self.conns.remove(&token) else { return };
+        // deregister before the socket closes on drop
+        let _ = self.poller.delete(conn.fd);
+        {
+            // late lane replies will see `dead` and drop their bytes
+            let mut o = conn.out.inner.lock().unwrap();
+            o.dead = true;
+            o.buf.clear();
+            o.cursor = 0;
+        }
+        self.wet.remove(&token);
+        if slow {
+            Metrics::inc(&self.svc.metrics.conns_dropped_slow);
+        }
+        self.active.fetch_sub(1, Ordering::SeqCst);
+        self.shared.conns_owned.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Accept every pending socket (the listener is level-triggered and
+    /// nonblocking).
+    fn accept_all(&mut self, listener: &TcpListener) {
+        loop {
+            match listener.accept() {
+                Ok((sock, _)) => self.admit(sock),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    eprintln!("accept error: {e}");
+                    break;
+                }
+            }
+        }
+    }
+
+    fn admit(&mut self, mut sock: TcpStream) {
+        if self.active.load(Ordering::SeqCst) >= self.svc.max_connections() {
+            Metrics::inc(&self.svc.metrics.conns_rejected);
+            // best-effort: a fresh socket's send buffer is empty, so
+            // this short line goes out in one write
+            let _ = sock.write_all(b"{\"error\":\"server at max connections\"}\n");
+            return; // socket dropped: rejected at accept
+        }
+        // line-sized request/response pairs: Nagle + delayed-ACK would
+        // add ~40ms per round trip, swamping sub-ms inference. A socket
+        // we cannot configure must not be served in a broken state —
+        // count it, log it, close it.
+        if let Err(e) = sock.set_nonblocking(true).and_then(|_| sock.set_nodelay(true)) {
+            Metrics::inc(&self.svc.metrics.conns_setup_failed);
+            eprintln!("connection setup error: {e}");
+            return;
+        }
+        self.active.fetch_add(1, Ordering::SeqCst);
+        Metrics::inc(&self.svc.metrics.connections);
+        // least-loaded IO thread takes ownership
+        let mut best = 0;
+        let mut best_owned = usize::MAX;
+        for (i, peer) in self.peers.iter().enumerate() {
+            let owned = peer.conns_owned.load(Ordering::SeqCst);
+            if owned < best_owned {
+                best = i;
+                best_owned = owned;
+            }
+        }
+        let peer = self.peers[best].clone();
+        peer.conns_owned.fetch_add(1, Ordering::SeqCst);
+        if Arc::ptr_eq(&peer, &self.shared) {
+            self.register_conn(sock);
+        } else {
+            peer.inbox.lock().unwrap().new_conns.push(sock);
+            peer.waker.wake();
+        }
+    }
+
+    /// Take ownership of an admitted socket on this IO thread.
+    fn register_conn(&mut self, sock: TcpStream) {
+        let fd = sock.as_raw_fd();
+        let token = self.next_token;
+        self.next_token += 1;
+        if let Err(e) = self.poller.add(fd, token, true, false) {
+            Metrics::inc(&self.svc.metrics.conns_setup_failed);
+            eprintln!("connection setup error: {e}");
+            self.active.fetch_sub(1, Ordering::SeqCst);
+            self.shared.conns_owned.fetch_sub(1, Ordering::SeqCst);
+            return;
+        }
+        let out = Arc::new(Outbox::new(self.svc.cfg.max_outbuf_bytes));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let reply = Reply::Conn(ConnReply {
+            token,
+            out: out.clone(),
+            shared: self.shared.clone(),
+            conn_inflight: in_flight.clone(),
+        });
+        self.conns.insert(
+            token,
+            Conn {
+                stream: sock,
+                fd,
+                codec: LineCodec::new(self.svc.cfg.max_line_bytes),
+                // until the hello handshake opts in, a connection is
+                // limited to one request in flight and served strictly
+                // in order — the old synchronous server's observable
+                // behaviour, even for clients that pipeline their writes
+                state: ConnState { depth: 1, pipelined: false, warned_v0: false },
+                out,
+                in_flight,
+                reply,
+                read_closed: false,
+                closing: false,
+                paused: false,
+                reg_read: true,
+                reg_write: false,
+            },
+        );
+    }
+
+    /// Adopt handed-over sockets and revisit connections whose lane
+    /// responses just landed.
+    fn drain_inbox(&mut self) {
+        let (new_conns, touched) = {
+            let mut inbox = self.shared.inbox.lock().unwrap();
+            (
+                std::mem::take(&mut inbox.new_conns),
+                std::mem::take(&mut inbox.touched),
+            )
+        };
+        for sock in new_conns {
+            self.register_conn(sock);
+        }
+        for token in touched {
+            let Some(conn) = self.conns.get_mut(&token) else { continue };
+            if conn.paused && conn.in_flight.load(Ordering::SeqCst) < conn.state.depth {
+                // a response freed the legacy window: resume reading
+                conn.paused = false;
+            }
+            self.process_lines(token);
+            self.flush_token(token);
+            self.finish_conn(token);
+        }
+    }
+
+    /// Disconnect peers stalled past the write deadline; returns how
+    /// long `wait` may block before the next deadline expires (`None`
+    /// blocks until an event or wakeup — there is no idle tick).
+    fn sweep_stalls(&mut self) -> Option<Duration> {
+        if self.wet.is_empty() {
+            return None;
+        }
+        let stall = self.svc.cfg.write_stall;
+        let now = Instant::now();
+        let mut expired: Vec<u64> = Vec::new();
+        let mut next: Option<Duration> = None;
+        for &t in self.wet.iter() {
+            let Some(conn) = self.conns.get(&t) else { continue };
+            let since = conn.out.inner.lock().unwrap().stall_since;
+            if let Some(s) = since {
+                let deadline = s + stall;
+                if deadline <= now {
+                    expired.push(t);
+                } else {
+                    let left = deadline - now;
+                    next = Some(next.map_or(left, |n: Duration| n.min(left)));
+                }
+            }
+        }
+        for t in expired {
+            // the peer stopped draining: cut it loose so its buffered
+            // responses cannot pin memory or delay anyone else
+            self.close_conn(t, true);
+        }
+        next
+    }
+}
+
+/// Take the one-time v0 deprecation warning if this message earns it.
+#[cfg(unix)]
+fn take_v0_warning(proto: ProtoVersion, state: &mut ConnState) -> Option<&'static str> {
+    if proto == ProtoVersion::V0 && !state.warned_v0 {
+        state.warned_v0 = true;
+        Some(protocol::V0_DEPRECATION)
+    } else {
+        None
+    }
+}
+
+/// Buffer a control acknowledgement sealed under the request's protocol
+/// generation (first v0 ack carries the deprecation warning).
+#[cfg(unix)]
+fn conn_ack(out: &Outbox, body: Json, proto: ProtoVersion, state: &mut ConnState) {
+    let warning = take_v0_warning(proto, state);
+    out.push_line(&Envelope::seal(body, proto, warning).dump());
+}
+
+/// Handle one decoded line; returns false when the connection is done.
+/// All replies go through the connection's outbox — nothing here
+/// touches the socket, so protocol work never blocks the event loop.
+#[cfg(unix)]
+fn handle_line(
+    svc: &Service,
+    state: &mut ConnState,
+    out: &Outbox,
+    reply: &Reply,
+    in_flight: &AtomicUsize,
+    line: &str,
+) -> bool {
+    let env = match Envelope::parse(line) {
+        Ok(env) => env,
+        Err(e) => {
+            // a malformed or unknown-version line has no trustworthy
+            // generation to answer under: reply bare, like v0 always did
+            let msg = Json::obj(vec![(
+                "error",
+                Json::Str(format!("bad request: {e}")),
+            )]);
+            out.push_line(&msg.dump());
+            return true;
+        }
+    };
+    let proto = env.proto;
+    match env.body {
+        Inbound::Control(Command::Ping) => {
+            conn_ack(out, Json::obj(vec![("pong", Json::Bool(true))]), proto, state);
+        }
+        Inbound::Control(Command::Hello { pipeline }) => {
+            state.pipelined = pipeline;
+            state.depth = if pipeline { svc.pipeline_depth() } else { 1 };
+            let warning = take_v0_warning(proto, state);
+            let ack = protocol::hello_json_proto(
+                pipeline,
+                state.depth,
+                svc.cfg.batcher.max_batch,
+                proto,
+                warning,
+            );
+            out.push_line(&ack);
+        }
+        Inbound::Control(Command::Metrics) => {
+            conn_ack(out, svc.metrics_snapshot(), proto, state);
+        }
+        Inbound::Control(Command::Shutdown) => {
+            conn_ack(
+                out,
+                Json::obj(vec![("shutting_down", Json::Bool(true))]),
+                proto,
+                state,
+            );
+            svc.stopping.store(true, Ordering::SeqCst);
+            // every IO thread re-checks the stop flag when its wakeup
+            // pipe fires — no TCP self-poke, no tick
+            svc.wake_all();
+            return false;
+        }
+        Inbound::Control(Command::Load { model, path, arch, calib }) => {
+            let body = svc
+                .admin_load(&model, &path, arch.as_deref(), calib)
+                .unwrap_or_else(|e| Json::obj(vec![("error", Json::Str(e.to_string()))]));
+            conn_ack(out, body, proto, state);
+        }
+        Inbound::Control(Command::Swap { model, path, arch, calib }) => {
+            let body = svc
+                .admin_swap(&model, &path, arch.as_deref(), calib)
+                .unwrap_or_else(|e| Json::obj(vec![("error", Json::Str(e.to_string()))]));
+            conn_ack(out, body, proto, state);
+        }
+        Inbound::Control(Command::Unload { model }) => {
+            let body = svc
+                .admin_unload(&model)
+                .unwrap_or_else(|e| Json::obj(vec![("error", Json::Str(e.to_string()))]));
+            conn_ack(out, body, proto, state);
+        }
+        Inbound::Control(Command::Models) => {
+            let body = svc
+                .admin_models()
+                .unwrap_or_else(|e| Json::obj(vec![("error", Json::Str(e.to_string()))]));
+            conn_ack(out, body, proto, state);
+        }
+        Inbound::Infer(req) => {
+            let current = in_flight.load(Ordering::SeqCst);
+            if current >= state.depth {
+                // pipelined overrun -> explicit per-request error the
+                // client can match by id and retry after draining some
+                // responses (legacy connections never reach here: the
+                // engine pauses reads while their window is full)
+                Metrics::inc(&svc.metrics.depth_rejected);
+                out.push_line(
+                    &Response::error(
+                        req.id,
+                        format!("pipeline depth {} exceeded", state.depth),
+                        proto,
+                    )
+                    .to_json()
+                    .dump(),
+                );
+                return true;
+            }
+            svc.metrics.record_conn_depth((current + 1) as f64);
+            in_flight.fetch_add(1, Ordering::SeqCst);
+            let id = req.id;
+            if let Err(e) = svc.submit_with_reply(req, reply.clone(), proto) {
+                in_flight.fetch_sub(1, Ordering::SeqCst);
+                out.push_line(&Response::error(id, e.to_string(), proto).to_json().dump());
+            }
+        }
+    }
+    true
 }
 
 #[cfg(test)]
@@ -1197,5 +1736,86 @@ mod tests {
         std::fs::remove_file(&path).ok();
         let err = svc.admin_unload("mlp").unwrap_err();
         assert!(err.to_string().contains("no model registry"));
+    }
+
+    #[test]
+    fn outbox_buffers_lines_until_capacity() {
+        let out = Outbox::new(4096);
+        out.push_line("{\"a\":1}");
+        out.push_line("{\"b\":2}");
+        let o = out.inner.lock().unwrap();
+        assert_eq!(o.buf, b"{\"a\":1}\n{\"b\":2}\n");
+        assert!(!o.overflowed);
+    }
+
+    #[test]
+    fn outbox_overflow_marks_peer_slow_instead_of_growing() {
+        // cap clamps to 1024; a line that cannot fit flips `overflowed`
+        // and is dropped rather than buffered
+        let out = Outbox::new(0);
+        let big = "x".repeat(2048);
+        out.push_line(&big);
+        let o = out.inner.lock().unwrap();
+        assert!(o.overflowed, "over-cap line must mark the peer slow");
+        assert!(o.buf.is_empty(), "over-cap line must not be buffered");
+    }
+
+    #[test]
+    fn outbox_dead_drops_writes() {
+        let out = Outbox::new(4096);
+        out.inner.lock().unwrap().dead = true;
+        out.push_line("{\"late\":true}");
+        assert!(out.inner.lock().unwrap().buf.is_empty());
+    }
+
+    #[test]
+    fn tenant_quota_sheds_excess_load() {
+        let mut cfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        };
+        cfg.tenant_quota = 1;
+        // single-item batches so the first request parks in flight long
+        // enough for the burst behind it to trip the quota check
+        cfg.batcher.max_batch = 1;
+        let mut svc = Service::new(cfg);
+        let arch = Arch::mlp();
+        let w = PosteriorWeights::synthetic(&arch, 1);
+        svc.register(
+            "mlp",
+            784,
+            Box::new(NativePfpBackend::new(arch, w, Schedules::default())),
+        );
+        let (tx, rx) = channel();
+        let mut shed = 0u64;
+        let mut submitted = 0usize;
+        for i in 0..16u64 {
+            match svc.submit_with(
+                protocol::Request {
+                    id: i,
+                    model: "mlp".into(),
+                    input: vec![0.25; 784],
+                },
+                tx.clone(),
+            ) {
+                Ok(()) => submitted += 1,
+                Err(e) => {
+                    assert!(e.to_string().contains("load shed"), "got: {e}");
+                    shed += 1;
+                }
+            }
+        }
+        drop(tx);
+        let got = rx.iter().count();
+        assert_eq!(got, submitted, "every admitted request must answer");
+        assert_eq!(
+            shed,
+            svc.metrics
+                .tenant_rejected
+                .load(std::sync::atomic::Ordering::Relaxed),
+            "every shed request must be counted"
+        );
+        // a 16-burst against quota 1 cannot all have been admitted
+        assert!(shed > 0, "quota must have shed at least one request");
     }
 }

@@ -56,8 +56,16 @@ fn print_help() {
            serve   [--arch mlp] [--backend native|xla|svi] [--addr 127.0.0.1:7878]\n\
                    [--threads 1] [--plan-threads 0] [--pool-threads 0] [--max-batch 10]\n\
                    [--max-connections 64] [--pipeline-depth 0 (= max-batch)]\n\
+                   [--io-threads 2] [--tenant-quota 0] [--outbuf-kb 256]\n\
+                   [--write-stall-ms 2000]\n\
                    [--isa scalar|native] [--fuse on|off|auto] [--precision f32|f16|bf16]\n\
                    [--models <dir>] [--memory-budget <MB>] [--no-mmap] [--calib 1.0]\n\
+                   (--io-threads sets the fixed reactor thread count that\n\
+                    owns every socket; --tenant-quota sheds requests past\n\
+                    N in flight per model with an explicit error;\n\
+                    --outbuf-kb caps one connection's buffered responses\n\
+                    and --write-stall-ms disconnects a peer that stops\n\
+                    draining them.)\n\
                    (--plan-threads N partitions the compiled-plan compute/\n\
                     relu/vectorized-pool steps into N tile tasks;\n\
                     0 defers to the tuned schedules. --isa forces every\n\
@@ -194,6 +202,17 @@ fn cmd_serve(opts: &HashMap<String, String>) -> pfp::Result<()> {
     // per-connection in-flight window; 0 tracks max-batch so one pipelined
     // client can fill a whole probabilistic forward pass by itself
     cfg.pipeline_depth = opt_usize(opts, "pipeline-depth", 0);
+    // reactor IO threads sharing all sockets (thread 0 owns the listener)
+    cfg.io_threads = opt_usize(opts, "io-threads", cfg.io_threads);
+    // per-model in-flight quota; past it, requests get a load-shed error
+    cfg.tenant_quota = opt_usize(opts, "tenant-quota", cfg.tenant_quota);
+    // slow-client policy: buffered-output cap and write-stall deadline
+    if let Some(kb) = opts.get("outbuf-kb").and_then(|s| s.parse::<usize>().ok()) {
+        cfg.max_outbuf_bytes = kb * 1024;
+    }
+    if let Some(ms) = opts.get("write-stall-ms").and_then(|s| s.parse::<u64>().ok()) {
+        cfg.write_stall = std::time::Duration::from_millis(ms);
+    }
     let max_batch = cfg.batcher.max_batch;
     let mut svc = Service::new(cfg);
     // every lane dispatches onto the service's one persistent pool, so

@@ -345,6 +345,13 @@ pub const HOT_PATHS: &[(&str, &[&str])] = &[
         ],
     ),
     ("util/threadpool.rs", &["run_tasks", "worker_loop"]),
+    // the connection reactor's steady state: every request crosses
+    // `Poller::wait` and the waker, and every inbound line crosses the
+    // codec's scanner — none of them may allocate or read the clock
+    // per event (`Events` is pre-sized at startup; the codec's `push`
+    // owns the amortized buffer growth)
+    ("coordinator/reactor.rs", &["wait", "wake"]),
+    ("coordinator/codec.rs", &["next_line"]),
 ];
 
 /// Tokens that allocate (or read the clock) and are banned from the

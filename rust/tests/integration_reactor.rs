@@ -1,0 +1,409 @@
+//! Reactor front-end regressions: the event-driven connection layer must
+//! survive the failure modes that wedged the old thread-per-connection
+//! server — a stalled reader may not block anyone else (it is
+//! back-pressured into its bounded output buffer and then disconnected),
+//! shutdown must drain through the wakeup pipe with no polling tick,
+//! oversized lines and half-closed sockets must degrade per-connection
+//! rather than per-server, and tenant admission control must shed load
+//! with explicit errors.
+//!
+//! Uses a synthetic stub backend so the suite runs without trained
+//! artifacts. The backend's output width is configurable so tests can
+//! make responses large enough to fill kernel socket buffers.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use pfp::coordinator::{protocol, Backend, BatcherConfig, Server, ServerConfig, Service};
+use pfp::tensor::Tensor;
+
+/// Stub backend: fixed moments with a configurable output width (`out_k`
+/// logits per row — wide outputs make each response line large) and an
+/// optional per-batch delay (to hold requests in flight deterministically).
+struct StubBackend {
+    delay: Duration,
+    out_k: usize,
+}
+
+impl Backend for StubBackend {
+    fn infer(&mut self, x: &Tensor) -> pfp::Result<(Tensor, Tensor)> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        let b = x.dim(0);
+        Ok((
+            Tensor::full(vec![b, self.out_k], 0.5),
+            Tensor::full(vec![b, self.out_k], 1e-3),
+        ))
+    }
+
+    fn name(&self) -> String {
+        "stub".into()
+    }
+}
+
+fn service_with(
+    delay_ms: u64,
+    out_k: usize,
+    tweak: impl FnOnce(&mut ServerConfig),
+) -> Arc<Service> {
+    let mut cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    };
+    cfg.batcher = BatcherConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        capacity: 4096,
+    };
+    tweak(&mut cfg);
+    let mut svc = Service::new(cfg);
+    svc.register(
+        "stub",
+        4,
+        Box::new(StubBackend { delay: Duration::from_millis(delay_ms), out_k }),
+    );
+    Arc::new(svc)
+}
+
+struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        let writer = stream.try_clone().unwrap();
+        Self { writer, reader: BufReader::new(stream) }
+    }
+
+    fn send(&mut self, line: &str) {
+        writeln!(self.writer, "{line}").unwrap();
+    }
+
+    fn recv(&mut self) -> String {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        line.trim().to_string()
+    }
+}
+
+/// Join `run()`'s thread with a timeout so a hung event loop fails the
+/// test instead of wedging the whole suite.
+fn join_within(h: std::thread::JoinHandle<pfp::Result<()>>, timeout: Duration) {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let r = h.join();
+        let _ = tx.send(r.is_ok());
+    });
+    rx.recv_timeout(timeout)
+        .expect("Server::run did not terminate after shutdown");
+}
+
+/// The headline slow-client regression: client A bursts requests with
+/// wide responses and never drains its socket. The old front end wedged
+/// A's writer thread (and with it A's whole request lane) on a blocking
+/// `write`; the reactor must instead fill A's bounded outbox, count it
+/// slow, disconnect it — and client B's lockstep traffic must keep
+/// working throughout.
+#[test]
+fn stalled_reader_is_dropped_and_peers_keep_working() {
+    let svc = service_with(0, 1024, |cfg| {
+        cfg.pipeline_depth = 32;
+        cfg.batcher.max_batch = 64;
+        cfg.max_outbuf_bytes = 64 * 1024;
+        cfg.write_stall = Duration::from_millis(300);
+    });
+    let server = Server::bind(svc.clone()).unwrap();
+    let addr = server.addr;
+    let h = std::thread::spawn(move || server.run());
+
+    // client A: pipelined, reads only the hello ack, then stops draining
+    let mut a = Client::connect(addr);
+    a.send(r#"{"cmd":"hello","pipeline":true}"#);
+    assert!(a.recv().contains("\"pipeline\":true"));
+    // ~2500 requests x ~8KB responses: far more than the kernel's socket
+    // buffers can absorb, so A's outbox must overflow or stall. Writes
+    // start failing once the server disconnects A — that is the success
+    // path, not an error.
+    for i in 0..2500u64 {
+        let line = protocol::request_json(i, "stub", &[0.25; 4]);
+        if writeln!(a.writer, "{line}").is_err() {
+            break;
+        }
+    }
+
+    // client B: legacy lockstep, must see prompt service the whole time
+    let mut b = Client::connect(addr);
+    let deadline = Instant::now() + Duration::from_secs(15);
+    loop {
+        b.send(r#"{"cmd":"ping"}"#);
+        assert!(b.recv().contains("pong"), "peer connection starved");
+        if svc.metrics.conns_dropped_slow.load(Ordering::Relaxed) >= 1 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "stalled reader was never disconnected (conns_dropped_slow still 0)"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+
+    // B still gets full inference service after A's eviction
+    b.send(&protocol::request_json(9000, "stub", &[0.5; 4]));
+    let resp = protocol::Response::parse(&b.recv()).unwrap();
+    assert_eq!(resp.id, 9000);
+    assert!(resp.result.is_ok());
+
+    drop(a);
+    b.send(r#"{"cmd":"shutdown"}"#);
+    assert!(b.recv().contains("shutting_down"));
+    drop(b);
+    join_within(h, Duration::from_secs(10));
+}
+
+/// Shutdown is wakeup-pipe-driven: no 200ms poll tick, no TCP self-poke.
+/// The whole drain — ack the shutdown, flush it, close an *idle* second
+/// connection, join every IO thread — must finish well under the old
+/// tick-bounded latency. (`integration_pipeline.rs` keeps the looser
+/// historical bound; this is the tight one.)
+#[test]
+fn shutdown_drains_promptly_without_poll_tick() {
+    let svc = service_with(0, 4, |cfg| cfg.pipeline_depth = 8);
+    let server = Server::bind(svc).unwrap();
+    let addr = server.addr;
+    let h = std::thread::spawn(move || server.run());
+
+    let mut c = Client::connect(addr);
+    c.send(r#"{"cmd":"hello","pipeline":true}"#);
+    assert!(c.recv().contains("\"hello\":true"));
+    for i in 0..4u64 {
+        c.send(&protocol::request_json(i, "stub", &[0.5; 4]));
+    }
+    for _ in 0..4 {
+        assert!(protocol::Response::parse(&c.recv()).unwrap().result.is_ok());
+    }
+
+    // a second, idle connection: shutdown must close it without waiting
+    // for it to speak (roundtrip first so it is admitted, not in-flight)
+    let mut idle = Client::connect(addr);
+    idle.send(r#"{"cmd":"ping"}"#);
+    assert!(idle.recv().contains("pong"));
+
+    let t0 = Instant::now();
+    c.send(r#"{"cmd":"shutdown"}"#);
+    assert!(c.recv().contains("shutting_down"));
+    drop(c);
+    // the idle peer sees EOF, not a hang
+    let mut line = String::new();
+    let n = idle.reader.read_line(&mut line).unwrap();
+    assert_eq!(n, 0, "idle connection not closed at shutdown: {line:?}");
+    join_within(h, Duration::from_secs(2));
+    assert!(
+        t0.elapsed() < Duration::from_secs(2),
+        "shutdown drain took {:?} — the poll tick is back",
+        t0.elapsed()
+    );
+}
+
+/// A line longer than `max_line_bytes` gets an explicit error response
+/// and bounded buffering — and the connection survives to serve the next
+/// well-formed line.
+#[test]
+fn oversized_line_is_rejected_and_connection_survives() {
+    let svc = service_with(0, 4, |cfg| cfg.max_line_bytes = 512);
+    let server = Server::bind(svc.clone()).unwrap();
+    let addr = server.addr;
+    let h = std::thread::spawn(move || server.run());
+
+    let mut c = Client::connect(addr);
+    c.send(&"x".repeat(2048));
+    let err = c.recv();
+    assert!(err.contains("byte limit"), "bad oversize rejection: {err}");
+    assert_eq!(svc.metrics.lines_oversized.load(Ordering::Relaxed), 1);
+
+    // same connection, next line: full service
+    c.send(r#"{"cmd":"ping"}"#);
+    assert!(c.recv().contains("pong"));
+    c.send(&protocol::request_json(1, "stub", &[0.5; 4]));
+    assert!(protocol::Response::parse(&c.recv()).unwrap().result.is_ok());
+
+    c.send(r#"{"cmd":"shutdown"}"#);
+    assert!(c.recv().contains("shutting_down"));
+    drop(c);
+    join_within(h, Duration::from_secs(10));
+}
+
+/// A client that half-closes (FIN on its write side) while a request is
+/// still in the backend must receive the in-flight response before the
+/// server closes the connection — read-side EOF is not abandonment.
+#[test]
+fn half_closed_socket_still_receives_in_flight_response() {
+    let svc = service_with(300, 4, |_| {});
+    let server = Server::bind(svc).unwrap();
+    let addr = server.addr;
+    let h = std::thread::spawn(move || server.run());
+
+    let c = Client::connect(addr);
+    let mut writer = c.writer;
+    let mut reader = c.reader;
+    writeln!(writer, "{}", protocol::request_json(42, "stub", &[0.5; 4])).unwrap();
+    // FIN while the 300ms backend still holds the request
+    writer.shutdown(Shutdown::Write).unwrap();
+
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let resp = protocol::Response::parse(line.trim()).unwrap();
+    assert_eq!(resp.id, 42);
+    assert!(resp.result.is_ok(), "in-flight response lost on half-close");
+    // after the drained response the server closes its side too
+    let mut rest = String::new();
+    assert_eq!(reader.read_line(&mut rest).unwrap(), 0);
+
+    // the half-closed conn is gone, so a fresh client shuts the server
+    let mut admin = Client::connect(addr);
+    admin.send(r#"{"cmd":"shutdown"}"#);
+    assert!(admin.recv().contains("shutting_down"));
+    drop(admin);
+    join_within(h, Duration::from_secs(10));
+}
+
+/// Admin commands and inference requests interleaved on one pipelined
+/// connection: the codec must hand each decoded line to the right lane
+/// and every reply must come back on the same socket.
+#[test]
+fn admin_and_inference_interleave_on_one_connection() {
+    let svc = service_with(20, 4, |cfg| cfg.pipeline_depth = 8);
+    let server = Server::bind(svc).unwrap();
+    let addr = server.addr;
+    let h = std::thread::spawn(move || server.run());
+
+    let mut c = Client::connect(addr);
+    c.send(r#"{"cmd":"hello","pipeline":true}"#);
+    assert!(c.recv().contains("\"hello\":true"));
+
+    // one write burst: infer, admin, infer, admin
+    c.send(&protocol::request_json(1, "stub", &[0.1; 4]));
+    c.send(r#"{"cmd":"ping"}"#);
+    c.send(&protocol::request_json(2, "stub", &[0.2; 4]));
+    c.send(r#"{"cmd":"metrics"}"#);
+
+    let (mut pongs, mut metrics, mut infer_ids) = (0, 0, Vec::new());
+    for _ in 0..4 {
+        let line = c.recv();
+        if line.contains("\"pong\"") {
+            pongs += 1;
+        } else if line.contains("latency_p50_us") {
+            metrics += 1;
+        } else {
+            let resp = protocol::Response::parse(&line).unwrap();
+            assert!(resp.result.is_ok(), "inference {} failed", resp.id);
+            infer_ids.push(resp.id);
+        }
+    }
+    assert_eq!(pongs, 1, "ping ack lost in the interleave");
+    assert_eq!(metrics, 1, "metrics ack lost in the interleave");
+    infer_ids.sort_unstable();
+    assert_eq!(infer_ids, vec![1, 2]);
+
+    c.send(r#"{"cmd":"shutdown"}"#);
+    assert!(c.recv().contains("shutting_down"));
+    drop(c);
+    join_within(h, Duration::from_secs(10));
+}
+
+/// Per-tenant admission control: with `tenant_quota: 1` and a slow
+/// backend, a burst on one model lane gets exactly its quota admitted and
+/// the rest shed with explicit `load shed` errors — counted, not queued.
+#[test]
+fn tenant_quota_sheds_excess_load_over_tcp() {
+    let svc = service_with(250, 4, |cfg| {
+        cfg.pipeline_depth = 8;
+        cfg.tenant_quota = 1;
+        cfg.batcher.max_batch = 1;
+    });
+    let server = Server::bind(svc.clone()).unwrap();
+    let addr = server.addr;
+    let h = std::thread::spawn(move || server.run());
+
+    let mut c = Client::connect(addr);
+    c.send(r#"{"cmd":"hello","pipeline":true}"#);
+    assert!(c.recv().contains("\"hello\":true"));
+    for i in 0..6u64 {
+        c.send(&protocol::request_json(i, "stub", &[0.5; 4]));
+    }
+    let (mut oks, mut sheds) = (0u64, 0u64);
+    for _ in 0..6 {
+        let resp = protocol::Response::parse(&c.recv()).unwrap();
+        match resp.result {
+            Ok(_) => oks += 1,
+            Err(e) => {
+                assert!(e.contains("load shed"), "unexpected error: {e}");
+                assert!(e.contains("tenant quota"), "unexpected error: {e}");
+                sheds += 1;
+            }
+        }
+    }
+    assert!(oks >= 1, "quota must still admit work");
+    assert!(sheds >= 1, "burst past the quota must be shed");
+    assert_eq!(oks + sheds, 6);
+    assert_eq!(svc.metrics.tenant_rejected.load(Ordering::Relaxed), sheds);
+
+    c.send(r#"{"cmd":"shutdown"}"#);
+    assert!(c.recv().contains("shutting_down"));
+    drop(c);
+    join_within(h, Duration::from_secs(10));
+}
+
+/// OS threads in this process (Linux); None elsewhere.
+fn process_threads() -> Option<usize> {
+    if cfg!(target_os = "linux") {
+        std::fs::read_dir("/proc/self/task").ok().map(|d| d.count())
+    } else {
+        None
+    }
+}
+
+/// Fifty concurrent connections ride the fixed IO-thread set: thread
+/// count must stay flat as connections are added (the old design spawned
+/// two threads per connection — +98 here). The bound is generous because
+/// sibling tests share the process, but it is far below per-conn growth.
+#[test]
+fn many_idle_connections_share_the_fixed_io_threads() {
+    let svc = service_with(0, 4, |cfg| {
+        cfg.max_connections = 64;
+        cfg.pool_threads = 2;
+    });
+    let server = Server::bind(svc).unwrap();
+    let addr = server.addr;
+    let h = std::thread::spawn(move || server.run());
+
+    // warm one connection so pollers/lanes are all up before the baseline
+    let mut first = Client::connect(addr);
+    first.send(r#"{"cmd":"ping"}"#);
+    assert!(first.recv().contains("pong"));
+    let before = process_threads();
+
+    let mut conns: Vec<Client> = (0..49).map(|_| Client::connect(addr)).collect();
+    for c in conns.iter_mut() {
+        c.send(r#"{"cmd":"ping"}"#);
+        assert!(c.recv().contains("pong"), "connection starved while idle peers exist");
+    }
+    if let (Some(b), Some(a)) = (before, process_threads()) {
+        assert!(
+            a.saturating_sub(b) < 24,
+            "49 extra connections grew the process from {b} to {a} threads"
+        );
+    }
+
+    drop(conns);
+    first.send(r#"{"cmd":"shutdown"}"#);
+    assert!(first.recv().contains("shutting_down"));
+    drop(first);
+    join_within(h, Duration::from_secs(10));
+}
